@@ -1,0 +1,64 @@
+//! Batched-inference serving study on forward-only graphs (§2: "one
+//! complete execution of the graph typically results in the inference of a
+//! group of instances").
+//!
+//! ```bash
+//! cargo run --release --example inference_serve
+//! ```
+//!
+//! Streams a queue of inference batches through each engine and reports
+//! per-batch latency (p50/p99) and throughput (instances/s). Inference
+//! graphs are forward-only — about 40 % of the training node count with
+//! *less* intrinsic parallelism (no dgrad/wgrad fan-out), so the optimal
+//! fleet is smaller than for training: exactly the kind of question the
+//! profiler answers per-deployment.
+
+use graphi::engine::{Engine, GraphiEngine, SequentialEngine, SimEnv};
+use graphi::graph::GraphStats;
+use graphi::models::{self, config::batch_size, ModelKind, ModelSize};
+use graphi::util::stats::Summary;
+use graphi::util::table::Table;
+
+fn main() {
+    let requests = 40; // batches in the arrival queue
+    println!("serving {requests} inference batches per model (medium size)\n");
+    let mut table = Table::new(&[
+        "model", "nodes", "engine", "batch p50", "batch p99", "instances/s",
+    ]);
+    for kind in [ModelKind::Lstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+        let graph = models::build_inference(kind, ModelSize::Medium);
+        let stats = GraphStats::compute(&graph);
+        let batch = batch_size(kind) as f64;
+        let engines: Vec<(String, Box<dyn Engine>)> = vec![
+            ("sequential".into(), Box::new(SequentialEngine::new(64))),
+            ("graphi 2x32".into(), Box::new(GraphiEngine::new(2, 32))),
+            ("graphi 4x16".into(), Box::new(GraphiEngine::new(4, 16))),
+            ("graphi 8x8".into(), Box::new(GraphiEngine::new(8, 8))),
+        ];
+        for (label, engine) in engines {
+            let mut latencies = Vec::with_capacity(requests);
+            let mut total_us = 0.0;
+            for r in 0..requests {
+                let env = SimEnv::knl(0x5E4E ^ (r as u64) << 8 ^ kind as u64);
+                let result = engine.run(&graph, &env);
+                latencies.push(result.makespan_us);
+                total_us += result.makespan_us;
+            }
+            let s = Summary::from_samples(&latencies);
+            table.row(&[
+                kind.name().to_string(),
+                stats.nodes.to_string(),
+                label,
+                graphi::util::fmt_us(s.p50),
+                graphi::util::fmt_us(s.p99),
+                format!("{:.0}", batch * requests as f64 / (total_us * 1e-6)),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "\ninference graphs are narrower than training graphs (no dgrad/wgrad\n\
+         fan-out), so the best fleet is smaller — rerun `graphi profile` per\n\
+         deployment, as §4.2 prescribes."
+    );
+}

@@ -1,0 +1,61 @@
+//! Quickstart: build a model graph, run it under three engines, compare.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 60-second tour of the public API: model compilers
+//! ([`graphi::models`]), engines ([`graphi::engine`]), the profiler, and
+//! execution traces.
+
+use graphi::engine::{
+    Engine, GraphiEngine, NaiveEngine, Profiler, SequentialEngine, SimEnv, Trace,
+};
+use graphi::graph::GraphStats;
+use graphi::models::{self, ModelKind, ModelSize};
+
+fn main() {
+    // 1. Compile a model into a computation graph (Table 1 sizes).
+    let graph = models::build(ModelKind::Lstm, ModelSize::Medium);
+    let stats = GraphStats::compute(&graph);
+    println!("medium LSTM training graph:\n{}", stats.render());
+
+    // 2. The simulated KNL environment (68-core Xeon Phi 7250).
+    let env = SimEnv::knl(42);
+
+    // 3. Let the profiler pick the executor configuration (§4.2).
+    let profiler = Profiler { iterations: 2, ..Default::default() };
+    let report = profiler.profile(&graph, &env);
+    println!("{}", Profiler::render(&report));
+    let (execs, threads) = report.best;
+
+    // 4. Compare engines at that configuration.
+    let sequential = SequentialEngine::new(64).run(&graph, &env);
+    let naive = NaiveEngine::new(execs, threads).run(&graph, &env);
+    let graphi = GraphiEngine::new(execs, threads).run(&graph, &env);
+    println!("sequential (S64):  {}", graphi::util::fmt_us(sequential.makespan_us));
+    println!(
+        "naive {}x{}:        {}  ({:.2}x vs sequential)",
+        execs,
+        threads,
+        graphi::util::fmt_us(naive.makespan_us),
+        sequential.makespan_us / naive.makespan_us
+    );
+    println!(
+        "graphi {}x{}:       {}  ({:.2}x vs sequential, {:.1}% faster than naive)",
+        execs,
+        threads,
+        graphi::util::fmt_us(graphi.makespan_us),
+        sequential.makespan_us / graphi.makespan_us,
+        100.0 * (1.0 - graphi.makespan_us / naive.makespan_us),
+    );
+
+    // 5. Inspect the execution as a timeline.
+    let trace = Trace { records: graphi.records.clone() };
+    println!("\nexecutor timelines (first 90 cols):");
+    print!("{}", trace.render_ascii(&graph, 90));
+    println!(
+        "depth/start-time correlation: {:.3} (≈1 ⇒ wavefront execution, §7.4)",
+        trace.depth_time_correlation(&graph)
+    );
+}

@@ -1,0 +1,86 @@
+//! Trace explorer: §7.4's observation that critical-path-first scheduling
+//! automatically recovers cuDNN's hand-tuned diagonal wavefront on LSTM.
+//!
+//! ```bash
+//! cargo run --release --example trace_explorer
+//! ```
+//!
+//! Runs the medium LSTM under (a) Graphi's CP-first scheduler and (b) the
+//! anti-critical adversary, then compares when each LSTM cell's fused GEMM
+//! starts: under CP-first, cell (t, ℓ) start times advance with the
+//! anti-diagonal t + ℓ — the cuDNN pattern — while the adversarial order
+//! scrambles it. Chrome traces for both land in reports/.
+
+use graphi::engine::{Engine, GraphiEngine, Policy, SimEnv, Trace};
+use graphi::models::lstm::{build as build_lstm, LstmConfig};
+use graphi::models::ModelSize;
+
+/// Pearson correlation of (t + ℓ) against the cell GEMM start time.
+fn wavefront_correlation(
+    graph: &graphi::graph::Graph,
+    records: &[graphi::engine::OpRecord],
+) -> f64 {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for r in records {
+        let name = &graph.node(r.node).name;
+        // forward cell GEMMs are named "t{t}.l{l}.gemm"
+        if let Some(rest) = name.strip_prefix('t') {
+            if let Some((t_part, tail)) = rest.split_once(".l") {
+                if let Some((l_part, op)) = tail.split_once('.') {
+                    if op == "gemm" {
+                        if let (Ok(t), Ok(l)) = (t_part.parse::<f64>(), l_part.parse::<f64>()) {
+                            xs.push(t + l);
+                            ys.push(r.start_us);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(!xs.is_empty(), "no cell GEMMs found in trace");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut cov, mut vx, mut vy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(&ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+fn main() -> anyhow::Result<()> {
+    let graph = build_lstm(&LstmConfig::for_size(ModelSize::Medium, false));
+    let env = SimEnv::knl(11);
+    std::fs::create_dir_all("reports")?;
+
+    println!("medium LSTM, 8x8 fleet — comparing scheduling policies\n");
+    let mut rows = Vec::new();
+    for policy in [Policy::CriticalPathFirst, Policy::Fifo, Policy::Random, Policy::AntiCritical] {
+        let engine = GraphiEngine::new(8, 8).with_policy(policy);
+        let result = engine.run(&graph, &env);
+        let trace = Trace { records: result.records.clone() };
+        let wf = wavefront_correlation(&graph, &result.records);
+        let path = format!("reports/trace_{}.json", policy.name());
+        std::fs::write(&path, trace.to_chrome_json(&graph))?;
+        rows.push((policy.name(), result.makespan_us, wf, path));
+    }
+    let mut t = graphi::util::table::Table::new(&["policy", "makespan", "wavefront corr", "trace"]);
+    for (name, us, wf, path) in &rows {
+        t.row(&[
+            name.to_string(),
+            graphi::util::fmt_us(*us),
+            format!("{wf:.3}"),
+            path.clone(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nCP-first's wavefront correlation ({:.3}) ≈ the hand-tuned cuDNN diagonal (§7.4);\n\
+         open the traces in ui.perfetto.dev to see the executor timelines.",
+        rows[0].2
+    );
+    Ok(())
+}

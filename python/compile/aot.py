@@ -1,0 +1,135 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest.
+
+Runs ONCE at build time (`make artifacts`). Produces:
+
+    artifacts/train_step.hlo.txt    (loss[1], new_params[P]) ← (params, tokens)
+    artifacts/forward_loss.hlo.txt  (loss[1],)               ← (params, tokens)
+    artifacts/lstm_cell.hlo.txt     (h, c)                   ← (gates, c_prev)
+    artifacts/manifest.json         shapes + hyper-parameters for Rust
+
+HLO *text* is the interchange format (NOT ``lowered.compiler_ir("hlo")`` or
+serialized protos): jax ≥ 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids. See
+/opt/xla-example/README.md and gen_hlo.py.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, forward_loss_jit, param_count, train_step_jit
+from .kernels.lstm_cell import lstm_cell
+from .kernels.phased_gate import phased_gate
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_modules(cfg: ModelConfig):
+    """Lower all modules; returns {name: (hlo_text, inputs, outputs, meta)}."""
+    p = param_count(cfg)
+    params_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.float32)
+
+    meta = {
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+        "init_scale": cfg.init_scale,
+        "param_count": p,
+    }
+
+    modules = {}
+    lowered = train_step_jit.lower(cfg, params_spec, tokens_spec)
+    modules["train_step"] = (
+        to_hlo_text(lowered),
+        [[p], [cfg.batch, cfg.seq + 1]],
+        [[1], [p]],
+        meta,
+    )
+    lowered = forward_loss_jit.lower(cfg, params_spec, tokens_spec)
+    modules["forward_loss"] = (
+        to_hlo_text(lowered),
+        [[p], [cfg.batch, cfg.seq + 1]],
+        [[1]],
+        meta,
+    )
+    # the Layer-1 kernel standalone, for kernel-level integration tests
+    gates_spec = jax.ShapeDtypeStruct((cfg.batch, 4 * cfg.hidden), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.hidden), jnp.float32)
+    lowered = jax.jit(lambda g, c: lstm_cell(g, c, block_h=min(128, cfg.hidden))).lower(
+        gates_spec, c_spec
+    )
+    modules["lstm_cell"] = (
+        to_hlo_text(lowered),
+        [[cfg.batch, 4 * cfg.hidden], [cfg.batch, cfg.hidden]],
+        [[cfg.batch, cfg.hidden], [cfg.batch, cfg.hidden]],
+        {"hidden": cfg.hidden, "batch": cfg.batch},
+    )
+    # the PhasedLSTM time gate, standalone
+    bh_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.hidden), jnp.float32)
+    h_spec = jax.ShapeDtypeStruct((cfg.hidden,), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(
+        lambda cc, hc, cp, hp, tau, shift, t: phased_gate(
+            cc, hc, cp, hp, tau, shift, t, block_h=min(128, cfg.hidden)
+        )
+    ).lower(bh_spec, bh_spec, bh_spec, bh_spec, h_spec, h_spec, t_spec)
+    bh = [cfg.batch, cfg.hidden]
+    modules["phased_gate"] = (
+        to_hlo_text(lowered),
+        [bh, bh, bh, bh, [cfg.hidden], [cfg.hidden], []],
+        [bh, bh],
+        {"hidden": cfg.hidden, "batch": cfg.batch},
+    )
+    return modules
+
+
+def write_artifacts(out_dir: str, cfg: ModelConfig) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    modules = lower_modules(cfg)
+    manifest = {"modules": []}
+    for name, (hlo, inputs, outputs, meta) in modules.items():
+        file_name = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, file_name), "w") as f:
+            f.write(hlo)
+        manifest["modules"].append(
+            {"name": name, "file": file_name, "inputs": inputs, "outputs": outputs, "meta": meta}
+        )
+        print(f"wrote {file_name} ({len(hlo)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['modules'])} modules)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.5)
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        hidden=args.hidden, layers=args.layers, seq=args.seq, batch=args.batch, lr=args.lr
+    )
+    print(f"lowering byte-LM: {param_count(cfg)} params, cfg={cfg}")
+    write_artifacts(args.out, cfg)
+
+
+if __name__ == "__main__":
+    main()

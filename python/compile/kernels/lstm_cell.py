@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernels: fused LSTM cell update, forward and backward.
+
+The paper's workloads are element-wise-dense LSTMs on a manycore CPU; the
+analogous TPU hot-spot is the cell's fused gate math (DESIGN.md
+§Hardware-Adaptation). One forward invocation reads the `[B, 4H]` gate
+pre-activations and `[B, H]` previous cell state from HBM once, computes
+all five transcendental gate ops fused in VMEM, and writes only `(h, c)` —
+the write-once/no-readback structure that mirrors the paper's stream-store
+optimization (§6). The backward pass is a second fused kernel (Pallas
+interpret mode has no reverse-mode AD, and a fused VJP is what a production
+kernel ships anyway), wired in via ``jax.custom_vjp``.
+
+Tiling: the grid walks `H` in `block_h` columns (each block owns the four
+gate slices for its columns), so VMEM residency per forward step is
+`B·block_h·9·4` bytes — comfortably under the ~16 MB VMEM budget at the
+defaults. `B` rides along whole because the evaluation batch (≤64) is
+small; a production kernel on huge batches would tile `B` the same way.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO. Real-TPU perf is
+estimated from the VMEM/MXU structure in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FORGET_BIAS
+
+DEFAULT_BLOCK_H = 128
+
+
+def _split_gates(gates_ref, block_h):
+    i = gates_ref[:, 0 * block_h : 1 * block_h]
+    f = gates_ref[:, 1 * block_h : 2 * block_h]
+    g = gates_ref[:, 2 * block_h : 3 * block_h]
+    o = gates_ref[:, 3 * block_h : 4 * block_h]
+    return i, f, g, o
+
+
+def _fwd_kernel(gates_ref, c_prev_ref, h_ref, c_ref):
+    """One grid step: full batch × `block_h` hidden columns."""
+    block_h = c_ref.shape[-1]
+    i, f, g, o = _split_gates(gates_ref, block_h)
+    c_prev = c_prev_ref[...]
+    c_new = jax.nn.sigmoid(f + FORGET_BIAS) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_ref[...] = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    c_ref[...] = c_new
+
+
+def _bwd_kernel(gates_ref, c_prev_ref, dh_ref, dc_in_ref, dgates_ref, dc_prev_ref):
+    """Fused VJP: recompute activations in VMEM, emit dgates and dc_prev."""
+    block_h = c_prev_ref.shape[-1]
+    i, f, g, o = _split_gates(gates_ref, block_h)
+    c_prev = c_prev_ref[...]
+    si = jax.nn.sigmoid(i)
+    sf = jax.nn.sigmoid(f + FORGET_BIAS)
+    sg = jnp.tanh(g)
+    so = jax.nn.sigmoid(o)
+    c_new = sf * c_prev + si * sg
+    tc = jnp.tanh(c_new)
+    dh = dh_ref[...]
+    dc = dc_in_ref[...] + dh * so * (1.0 - tc * tc)
+    d_i = dc * sg * si * (1.0 - si)
+    d_f = dc * c_prev * sf * (1.0 - sf)
+    d_g = dc * si * (1.0 - sg * sg)
+    d_o = dh * tc * so * (1.0 - so)
+    dgates_ref[:, 0 * block_h : 1 * block_h] = d_i
+    dgates_ref[:, 1 * block_h : 2 * block_h] = d_f
+    dgates_ref[:, 2 * block_h : 3 * block_h] = d_g
+    dgates_ref[:, 3 * block_h : 4 * block_h] = d_o
+    dc_prev_ref[...] = dc * sf
+
+
+def _tile_gates(gates: jnp.ndarray, hidden: int, block_h: int) -> jnp.ndarray:
+    """[B, 4H] → tile-major layout where the four gate slices for each
+    `block_h` column tile are adjacent (one rectangular block per grid
+    step)."""
+    batch = gates.shape[0]
+    g4 = gates.reshape(batch, 4, hidden // block_h, block_h)
+    return jnp.swapaxes(g4, 1, 2).reshape(batch, 4 * hidden)
+
+
+def _untile_gates(tiled: jnp.ndarray, hidden: int, block_h: int) -> jnp.ndarray:
+    """Inverse of :func:`_tile_gates`."""
+    batch = tiled.shape[0]
+    g4 = tiled.reshape(batch, hidden // block_h, 4, block_h)
+    return jnp.swapaxes(g4, 1, 2).reshape(batch, 4 * hidden)
+
+
+def _specs(batch, block_h, n_gates):
+    def index(j):
+        return (0, j)
+
+    return pl.BlockSpec((batch, n_gates * block_h), index)
+
+
+def _cell_fwd_pallas(gates, c_prev, block_h):
+    batch, hidden = c_prev.shape
+    grid = (hidden // block_h,)
+    tiled = _tile_gates(gates, hidden, block_h)
+    h, c = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[_specs(batch, block_h, 4), _specs(batch, block_h, 1)],
+        out_specs=[_specs(batch, block_h, 1), _specs(batch, block_h, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), c_prev.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c_prev.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tiled, c_prev)
+    return h, c
+
+
+def _cell_bwd_pallas(gates, c_prev, dh, dc_in, block_h):
+    batch, hidden = c_prev.shape
+    grid = (hidden // block_h,)
+    tiled = _tile_gates(gates, hidden, block_h)
+    dgates_tiled, dc_prev = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            _specs(batch, block_h, 4),
+            _specs(batch, block_h, 1),
+            _specs(batch, block_h, 1),
+            _specs(batch, block_h, 1),
+        ],
+        out_specs=[_specs(batch, block_h, 4), _specs(batch, block_h, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, 4 * hidden), c_prev.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c_prev.dtype),
+        ],
+        interpret=True,
+    )(tiled, c_prev, dh, dc_in)
+    return _untile_gates(dgates_tiled, hidden, block_h), dc_prev
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _lstm_cell(gates, c_prev, block_h):
+    return _cell_fwd_pallas(gates, c_prev, block_h)
+
+
+def _lstm_cell_fwd(gates, c_prev, block_h):
+    out = _cell_fwd_pallas(gates, c_prev, block_h)
+    return out, (gates, c_prev)
+
+
+def _lstm_cell_bwd(block_h, residuals, cotangents):
+    gates, c_prev = residuals
+    dh, dc_in = cotangents
+    dgates, dc_prev = _cell_bwd_pallas(gates, c_prev, dh, dc_in, block_h)
+    return dgates, dc_prev
+
+
+_lstm_cell.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)
+
+
+def lstm_cell(gates: jnp.ndarray, c_prev: jnp.ndarray, block_h: int = DEFAULT_BLOCK_H):
+    """Fused LSTM cell update via Pallas (differentiable).
+
+    Args:
+      gates: ``[B, 4H]`` pre-activations ``[i | f | g | o]``.
+      c_prev: ``[B, H]`` previous cell state.
+      block_h: hidden-dimension tile width (clamped to H; must divide H).
+
+    Returns:
+      ``(h_new, c_new)``, each ``[B, H]``, same dtype as the inputs.
+    """
+    batch, hidden = c_prev.shape
+    assert gates.shape == (batch, 4 * hidden), (gates.shape, c_prev.shape)
+    block_h = min(block_h, hidden)
+    assert hidden % block_h == 0, f"hidden {hidden} not divisible by block_h {block_h}"
+    return _lstm_cell(gates, c_prev, block_h)
+
+
+def vmem_bytes(batch: int, block_h: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one forward grid step (DESIGN.md §Perf):
+    gates block (4·block_h) + c_prev + h + c + ~3 temporaries."""
+    per_col = 4 + 1 + 1 + 1 + 3
+    return batch * block_h * per_col * dtype_bytes

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: the PhasedLSTM time gate (Neil et al., 2016).
+
+PhasedLSTM (the paper's second evaluation network) gates each unit's state
+update by a rhythmic openness signal
+
+    phi  = ((t - s) mod tau) / tau                 (phase, per unit)
+    k    = 2*phi/r_on              if phi <  r_on/2
+         = 2 - 2*phi/r_on          if phi <  r_on
+         = alpha * phi             otherwise (leak)
+
+    c    = k * c_cand + (1 - k) * c_prev
+    h    = k * h_cand + (1 - k) * h_prev
+
+One kernel invocation fuses the phase computation, the piecewise gate and
+both blends, tiled along the hidden dimension like ``lstm_cell.py``. The
+per-unit parameters ``tau``/``shift`` ride along as `[H]` vectors
+broadcast over the batch.
+
+Kept forward-only (the e2e example trains the plain LSTM); the oracle in
+``ref.py`` and the hypothesis sweep in ``test_phased.py`` pin the
+numerics, and ``aot.py`` exports it as the ``phased_gate`` artifact so the
+Rust side can run it standalone.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_H = 128
+DEFAULT_LEAK = 0.001
+
+
+def _gate_kernel(c_cand_ref, h_cand_ref, c_prev_ref, h_prev_ref, tau_ref, shift_ref,
+                 time_ref, out_c_ref, out_h_ref, *, r_on: float, leak: float):
+    tau = tau_ref[...]  # [1, block_h]
+    shift = shift_ref[...]
+    t = time_ref[0, 0]
+    phi = jnp.mod(t - shift, tau) / tau
+    k = jnp.where(
+        phi < r_on / 2.0,
+        2.0 * phi / r_on,
+        jnp.where(phi < r_on, 2.0 - 2.0 * phi / r_on, leak * phi),
+    )  # [1, block_h], broadcasts over batch
+    out_c_ref[...] = k * c_cand_ref[...] + (1.0 - k) * c_prev_ref[...]
+    out_h_ref[...] = k * h_cand_ref[...] + (1.0 - k) * h_prev_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("r_on", "leak", "block_h"))
+def phased_gate(
+    c_cand: jnp.ndarray,
+    h_cand: jnp.ndarray,
+    c_prev: jnp.ndarray,
+    h_prev: jnp.ndarray,
+    tau: jnp.ndarray,
+    shift: jnp.ndarray,
+    time: jnp.ndarray,
+    r_on: float = 0.05,
+    leak: float = DEFAULT_LEAK,
+    block_h: int = DEFAULT_BLOCK_H,
+):
+    """Apply the PhasedLSTM time gate.
+
+    Args:
+      c_cand, h_cand, c_prev, h_prev: ``[B, H]`` states.
+      tau, shift: ``[H]`` per-unit period and phase shift (tau > 0).
+      time: scalar array — the current timestamp.
+      r_on: open-phase ratio.
+      leak: closed-phase leak rate alpha.
+      block_h: hidden tile width.
+
+    Returns:
+      ``(c_new, h_new)``, each ``[B, H]``.
+    """
+    batch, hidden = c_prev.shape
+    for x in (c_cand, h_cand, h_prev):
+        assert x.shape == (batch, hidden)
+    assert tau.shape == (hidden,) and shift.shape == (hidden,)
+    block_h = min(block_h, hidden)
+    assert hidden % block_h == 0
+    grid = (hidden // block_h,)
+
+    def bh_index(j):
+        return (0, j)
+
+    spec_bh = pl.BlockSpec((batch, block_h), bh_index)
+    spec_param = pl.BlockSpec((1, block_h), bh_index)
+    spec_time = pl.BlockSpec((1, 1), lambda j: (0, 0))
+
+    c, h = pl.pallas_call(
+        functools.partial(_gate_kernel, r_on=r_on, leak=leak),
+        grid=grid,
+        in_specs=[spec_bh, spec_bh, spec_bh, spec_bh, spec_param, spec_param, spec_time],
+        out_specs=[spec_bh, spec_bh],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), c_prev.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c_prev.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(c_cand, h_cand, c_prev, h_prev, tau.reshape(1, -1), shift.reshape(1, -1),
+      time.reshape(1, 1))
+    return c, h
+
+
+def phased_gate_ref(c_cand, h_cand, c_prev, h_prev, tau, shift, time,
+                    r_on: float = 0.05, leak: float = DEFAULT_LEAK):
+    """Pure-jnp oracle for :func:`phased_gate`."""
+    phi = jnp.mod(time - shift, tau) / tau  # [H]
+    k = jnp.where(
+        phi < r_on / 2.0,
+        2.0 * phi / r_on,
+        jnp.where(phi < r_on, 2.0 - 2.0 * phi / r_on, leak * phi),
+    )
+    c = k * c_cand + (1.0 - k) * c_prev
+    h = k * h_cand + (1.0 - k) * h_prev
+    return c, h

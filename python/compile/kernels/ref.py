@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Pallas LSTM cell kernel.
+
+The kernel computes one LSTM cell update from pre-activations:
+
+    i, f, g, o = split(gates, 4, axis=-1)      # gates: [B, 4H]
+    c_new = sigmoid(f + forget_bias) * c_prev + sigmoid(i) * tanh(g)
+    h_new = sigmoid(o) * tanh(c_new)
+
+This file is the correctness reference: ``test_kernel.py`` asserts the
+Pallas kernel (interpret mode) matches it across a shape/dtype sweep, and
+``model.py``'s scan uses the kernel while tests cross-check full-model
+numerics against a ref-only model.
+"""
+
+import jax.nn
+import jax.numpy as jnp
+
+FORGET_BIAS = 1.0
+
+
+def lstm_cell_ref(gates: jnp.ndarray, c_prev: jnp.ndarray):
+    """Reference LSTM cell update.
+
+    Args:
+      gates: ``[B, 4H]`` pre-activations, laid out as ``[i | f | g | o]``.
+      c_prev: ``[B, H]`` previous cell state.
+
+    Returns:
+      ``(h_new, c_new)``, each ``[B, H]``.
+    """
+    hidden = c_prev.shape[-1]
+    assert gates.shape[-1] == 4 * hidden, (gates.shape, c_prev.shape)
+    i = gates[..., 0 * hidden : 1 * hidden]
+    f = gates[..., 1 * hidden : 2 * hidden]
+    g = gates[..., 2 * hidden : 3 * hidden]
+    o = gates[..., 3 * hidden : 4 * hidden]
+    c_new = jax.nn.sigmoid(f + FORGET_BIAS) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new

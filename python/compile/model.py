@@ -1,0 +1,138 @@
+"""Layer-2 JAX model: a byte-level LSTM language model.
+
+Defines the forward pass (embedding → stacked LSTM layers whose cell math
+is the Layer-1 Pallas kernel → output projection → softmax cross-entropy),
+its SGD training step, and flat-parameter packing so the Rust runtime can
+hold state as a single ``f32[P]`` buffer.
+
+Build-time only: ``aot.py`` lowers ``train_step`` / ``forward_loss`` to HLO
+text once; the Rust coordinator executes the artifacts via PJRT with no
+Python on the request path.
+"""
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lstm_cell import lstm_cell
+from .kernels.ref import lstm_cell_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the byte-LM used by the end-to-end example."""
+
+    vocab: int = 256
+    hidden: int = 256
+    layers: int = 2
+    seq: int = 32
+    batch: int = 8
+    lr: float = 0.5
+    init_scale: float = 0.08
+    # use the Pallas kernel (True) or the pure-jnp reference (False); the
+    # test suite cross-checks both paths produce identical numerics
+    use_pallas: bool = True
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Ordered parameter dictionary: name → shape."""
+    shapes = {"embed": (cfg.vocab, cfg.hidden)}
+    for l in range(cfg.layers):
+        # fused [x, h] → gates weight, per the standard LSTM formulation
+        shapes[f"l{l}.w"] = (2 * cfg.hidden, 4 * cfg.hidden)
+        shapes[f"l{l}.b"] = (4 * cfg.hidden,)
+    shapes["head.w"] = (cfg.hidden, cfg.vocab)
+    shapes["head.b"] = (cfg.vocab,)
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s in param_shapes(cfg).values())
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat ``f32[P]`` vector into named parameter tensors."""
+    params = {}
+    offset = 0
+    for name, shape in param_shapes(cfg).items():
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = flat[offset : offset + size].reshape(shape)
+        offset += size
+    assert offset == flat.shape[0], (offset, flat.shape)
+    return params
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Flat uniform(-scale, scale) initialization (mirrored in Rust)."""
+    n = param_count(cfg)
+    return jax.random.uniform(key, (n,), jnp.float32, -cfg.init_scale, cfg.init_scale)
+
+
+def _cell(cfg: ModelConfig, gates: jnp.ndarray, c_prev: jnp.ndarray):
+    if cfg.use_pallas:
+        return lstm_cell(gates, c_prev, block_h=min(128, cfg.hidden))
+    return lstm_cell_ref(gates, c_prev)
+
+
+def forward_loss(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy of next-byte prediction.
+
+    Args:
+      flat_params: ``f32[P]``.
+      tokens: ``f32[batch, seq+1]`` byte codes (f32 for a uniform artifact
+        ABI; cast to int inside).
+
+    Returns:
+      scalar loss.
+    """
+    p = unflatten(cfg, flat_params)
+    toks = tokens.astype(jnp.int32)
+    inputs = toks[:, :-1]  # [B, T]
+    targets = toks[:, 1:]  # [B, T]
+    x = p["embed"][inputs]  # [B, T, H]
+
+    def step(carry, x_t):
+        hs, cs = carry  # each [layers, B, H]
+        new_hs, new_cs = [], []
+        inp = x_t
+        for l in range(cfg.layers):
+            xh = jnp.concatenate([inp, hs[l]], axis=-1)  # [B, 2H]
+            gates = xh @ p[f"l{l}.w"] + p[f"l{l}.b"]
+            h_new, c_new = _cell(cfg, gates, cs[l])
+            new_hs.append(h_new)
+            new_cs.append(c_new)
+            inp = h_new
+        return (jnp.stack(new_hs), jnp.stack(new_cs)), inp
+
+    h0 = jnp.zeros((cfg.layers, cfg.batch, cfg.hidden), jnp.float32)
+    c0 = jnp.zeros_like(h0)
+    xs = jnp.swapaxes(x, 0, 1)  # [T, B, H]
+    _, outs = jax.lax.scan(step, (h0, c0), xs)
+    outs = jnp.swapaxes(outs, 0, 1)  # [B, T, H]
+
+    logits = outs @ p["head.w"] + p["head.b"]  # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray):
+    """One SGD step; returns ``(loss[1], new_params[P])``."""
+    loss, grads = jax.value_and_grad(lambda fp: forward_loss(cfg, fp, tokens))(flat_params)
+    new_params = flat_params - cfg.lr * grads
+    return loss.reshape(1), new_params
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step_jit(cfg: ModelConfig, flat_params, tokens):
+    return train_step(cfg, flat_params, tokens)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def forward_loss_jit(cfg: ModelConfig, flat_params, tokens):
+    return (forward_loss(cfg, flat_params, tokens).reshape(1),)

@@ -1,0 +1,126 @@
+"""Layer-1 kernel correctness: Pallas LSTM cell vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes; every case asserts
+forward and backward numerics against ``ref.py``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.lstm_cell import lstm_cell, vmem_bytes
+from compile.kernels.ref import lstm_cell_ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _random_case(batch, hidden, seed, dtype=jnp.float32):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    gates = jax.random.normal(k0, (batch, 4 * hidden), dtype) * 2.0
+    c_prev = jax.random.normal(k1, (batch, hidden), dtype)
+    return gates, c_prev
+
+
+@hypothesis.given(
+    batch=st.integers(min_value=1, max_value=16),
+    hidden_pow=st.integers(min_value=3, max_value=9),  # 8..512
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_forward_matches_ref(batch, hidden_pow, seed):
+    hidden = 1 << hidden_pow
+    gates, c_prev = _random_case(batch, hidden, seed)
+    h_k, c_k = lstm_cell(gates, c_prev)
+    h_r, c_r = lstm_cell_ref(gates, c_prev)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    batch=st.integers(min_value=1, max_value=8),
+    hidden_pow=st.integers(min_value=3, max_value=8),
+    block_pow=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_size_invariance(batch, hidden_pow, block_pow, seed):
+    """The tile width is a performance knob — results must not change."""
+    hidden = 1 << hidden_pow
+    block_h = min(1 << block_pow, hidden)
+    gates, c_prev = _random_case(batch, hidden, seed)
+    h_a, c_a = lstm_cell(gates, c_prev, block_h=block_h)
+    h_b, c_b = lstm_cell(gates, c_prev, block_h=hidden)
+    np.testing.assert_allclose(h_a, h_b, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(c_a, c_b, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(
+    batch=st.integers(min_value=1, max_value=8),
+    hidden_pow=st.integers(min_value=3, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_backward_matches_ref(batch, hidden_pow, seed):
+    """The fused VJP kernel must agree with autodiff through the oracle."""
+    hidden = 1 << hidden_pow
+    gates, c_prev = _random_case(batch, hidden, seed)
+
+    def loss_kernel(g, c):
+        h, cn = lstm_cell(g, c)
+        return jnp.sum(jnp.sin(h) + 0.5 * cn)
+
+    def loss_ref(g, c):
+        h, cn = lstm_cell_ref(g, c)
+        return jnp.sum(jnp.sin(h) + 0.5 * cn)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1))(gates, c_prev)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(gates, c_prev)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gk[1], gr[1], rtol=1e-4, atol=1e-5)
+
+
+def test_bfloat16_supported():
+    gates, c_prev = _random_case(4, 64, 0, dtype=jnp.bfloat16)
+    h_k, c_k = lstm_cell(gates, c_prev)
+    h_r, c_r = lstm_cell_ref(gates, c_prev)
+    assert h_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        h_k.astype(np.float32), h_r.astype(np.float32), rtol=2e-2, atol=2e-2
+    )
+    np.testing.assert_allclose(
+        c_k.astype(np.float32), c_r.astype(np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_extreme_inputs_stay_finite():
+    """Saturated gates must not produce NaN/Inf (sigmoid/tanh plateaus)."""
+    gates = jnp.full((2, 4 * 32), 50.0, jnp.float32)
+    c_prev = jnp.full((2, 32), -30.0, jnp.float32)
+    h, c = lstm_cell(gates, c_prev)
+    assert np.isfinite(np.asarray(h)).all()
+    assert np.isfinite(np.asarray(c)).all()
+    # f≈1, i≈1, g≈1 → c ≈ c_prev + 1
+    np.testing.assert_allclose(c, c_prev + 1.0, rtol=1e-5)
+
+
+def test_zero_gates_identity_ish():
+    """At zero pre-activations: c = σ(1)·c_prev + 0.5·tanh(0) = σ(1)·c_prev."""
+    gates = jnp.zeros((3, 4 * 16), jnp.float32)
+    c_prev = jnp.ones((3, 16), jnp.float32)
+    _, c = lstm_cell(gates, c_prev)
+    sig1 = 1.0 / (1.0 + np.exp(-1.0))
+    np.testing.assert_allclose(c, np.full((3, 16), sig1), rtol=1e-6)
+
+
+def test_bad_block_size_rejected():
+    gates, c_prev = _random_case(2, 24, 0)
+    with pytest.raises(AssertionError):
+        lstm_cell(gates, c_prev, block_h=16)  # 24 % 16 != 0
+
+
+def test_vmem_estimate_within_budget():
+    """DESIGN.md §Perf: default tile must fit VMEM with large margin."""
+    assert vmem_bytes(batch=64, block_h=128) < 16 * 1024 * 1024

@@ -1,0 +1,85 @@
+"""PhasedLSTM time-gate kernel vs its oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.phased_gate import phased_gate, phased_gate_ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=20, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _case(batch, hidden, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    mk = lambda k: jax.random.normal(k, (batch, hidden), jnp.float32)
+    c_cand, h_cand, c_prev, h_prev = mk(keys[0]), mk(keys[1]), mk(keys[2]), mk(keys[3])
+    tau = jax.random.uniform(keys[4], (hidden,), jnp.float32, 1.0, 100.0)
+    shift = jax.random.uniform(keys[5], (hidden,), jnp.float32, 0.0, 10.0)
+    return c_cand, h_cand, c_prev, h_prev, tau, shift
+
+
+@hypothesis.given(
+    batch=st.integers(min_value=1, max_value=8),
+    hidden_pow=st.integers(min_value=3, max_value=8),
+    t=st.floats(min_value=0.0, max_value=1000.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref(batch, hidden_pow, t, seed):
+    hidden = 1 << hidden_pow
+    args = _case(batch, hidden, seed)
+    time = jnp.asarray(t, jnp.float32)
+    ck, hk = phased_gate(*args, time)
+    cr, hr = phased_gate_ref(*args, time)
+    np.testing.assert_allclose(ck, cr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-5)
+
+
+def test_closed_gate_preserves_state():
+    """Deep in the closed phase (phi ≈ 0.5, leak tiny) the state barely
+    moves: c ≈ c_prev."""
+    batch, hidden = 4, 32
+    c_cand = jnp.full((batch, hidden), 10.0)
+    h_cand = jnp.full((batch, hidden), -10.0)
+    c_prev = jnp.ones((batch, hidden))
+    h_prev = jnp.zeros((batch, hidden))
+    tau = jnp.full((hidden,), 2.0)
+    shift = jnp.zeros((hidden,))
+    time = jnp.asarray(1.0, jnp.float32)  # phi = 0.5, far past r_on=0.05
+    c, h = phased_gate(c_cand, h_cand, c_prev, h_prev, tau, shift, time)
+    np.testing.assert_allclose(c, c_prev + 0.0005 * (10.0 - 1.0), rtol=1e-3)
+    assert float(jnp.abs(h).max()) < 0.01
+
+
+def test_open_gate_passes_candidate():
+    """At phi = r_on/2 the gate is fully open: state = candidate."""
+    batch, hidden = 2, 16
+    c_cand = jnp.full((batch, hidden), 3.0)
+    h_cand = jnp.full((batch, hidden), -2.0)
+    c_prev = jnp.zeros((batch, hidden))
+    h_prev = jnp.zeros((batch, hidden))
+    r_on = 0.05
+    tau = jnp.full((hidden,), 100.0)
+    shift = jnp.zeros((hidden,))
+    time = jnp.asarray(100.0 * r_on / 2.0, jnp.float32)  # phi = r_on/2
+    c, h = phased_gate(c_cand, h_cand, c_prev, h_prev, tau, shift, time, r_on=r_on)
+    np.testing.assert_allclose(c, c_cand, rtol=1e-5)
+    np.testing.assert_allclose(h, h_cand, rtol=1e-5)
+
+
+def test_gate_is_periodic():
+    args = _case(3, 64, 7)
+    tau = args[4]
+    a = phased_gate(*args, jnp.asarray(5.0, jnp.float32))
+    b = phased_gate(*args[:4], tau, args[5], jnp.asarray(5.0, jnp.float32))
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-6)
+    # shifting time by exactly tau (per-unit) reproduces the same gate —
+    # check with a uniform tau
+    uniform_tau = jnp.full_like(tau, 10.0)
+    x = phased_gate(*args[:4], uniform_tau, args[5], jnp.asarray(3.0, jnp.float32))
+    y = phased_gate(*args[:4], uniform_tau, args[5], jnp.asarray(13.0, jnp.float32))
+    np.testing.assert_allclose(x[0], y[0], rtol=1e-4, atol=1e-5)

@@ -1,0 +1,16 @@
+//! `cargo bench --bench ablations` — regenerates the paper's ablations.
+//! Thin wrapper over [`graphi::coordinator::figures`]; CSV lands in
+//! reports/. Set GRAPHI_BENCH_FAST=1 (or pass --fast via the CLI form,
+//! `graphi bench ablations --fast`) for a small-size grid.
+
+use graphi::coordinator::figures;
+use graphi::util::bench::{BenchConfig, BenchRunner};
+
+fn main() {
+    let mut runner = BenchRunner::with_config(
+        "ablations",
+        BenchConfig { csv_path: Some("reports/ablations.csv".into()), ..BenchConfig::from_env() },
+    );
+    println!("{}", figures::ablations(&mut runner));
+    runner.finish();
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig3_pinning` — regenerates the paper's fig3.
+//! Thin wrapper over [`graphi::coordinator::figures`]; CSV lands in
+//! reports/. Set GRAPHI_BENCH_FAST=1 (or pass --fast via the CLI form,
+//! `graphi bench fig3 --fast`) for a small-size grid.
+
+use graphi::coordinator::figures;
+use graphi::util::bench::{BenchConfig, BenchRunner};
+
+fn main() {
+    let mut runner = BenchRunner::with_config(
+        "fig3",
+        BenchConfig { csv_path: Some("reports/fig3.csv".into()), ..BenchConfig::from_env() },
+    );
+    println!("{}", figures::fig3(&mut runner));
+    runner.finish();
+}

@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig6_executors` — regenerates the paper's fig6.
+//! Thin wrapper over [`graphi::coordinator::figures`]; CSV lands in
+//! reports/. Set GRAPHI_BENCH_FAST=1 (or pass --fast via the CLI form,
+//! `graphi bench fig6 --fast`) for a small-size grid.
+
+use graphi::coordinator::figures;
+use graphi::util::bench::{BenchConfig, BenchRunner};
+use graphi::models::ModelSize;
+
+fn main() {
+    let fast = std::env::var("GRAPHI_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: Vec<ModelSize> = if fast {
+        vec![ModelSize::Small]
+    } else {
+        vec![ModelSize::Small, ModelSize::Medium, ModelSize::Large]
+    };
+    let mut runner = BenchRunner::with_config(
+        "fig6",
+        BenchConfig { csv_path: Some("reports/fig6.csv".into()), ..BenchConfig::from_env() },
+    );
+    println!("{}", figures::fig6(&mut runner, &sizes));
+    runner.finish();
+}

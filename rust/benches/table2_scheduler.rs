@@ -1,0 +1,19 @@
+//! `cargo bench --bench table2_scheduler` — regenerates the paper's table2.
+//! Thin wrapper over [`graphi::coordinator::figures`]; CSV lands in
+//! reports/. Set GRAPHI_BENCH_FAST=1 (or pass --fast via the CLI form,
+//! `graphi bench table2 --fast`) for a small-size grid.
+
+use graphi::coordinator::figures;
+use graphi::util::bench::{BenchConfig, BenchRunner};
+use graphi::models::ModelSize;
+
+fn main() {
+    let fast = std::env::var("GRAPHI_BENCH_FAST").as_deref() == Ok("1");
+    let size = if fast { ModelSize::Small } else { ModelSize::Medium };
+    let mut runner = BenchRunner::with_config(
+        "table2",
+        BenchConfig { csv_path: Some("reports/table2.csv".into()), ..BenchConfig::from_env() },
+    );
+    println!("{}", figures::table2(&mut runner, size));
+    runner.finish();
+}

@@ -1,0 +1,356 @@
+//! The `graphi` command-line interface.
+//!
+//! ```text
+//! graphi run      [--config cfg.toml | --model lstm --size medium ...]
+//! graphi profile  --model lstm --size medium
+//! graphi stats    --model pathnet --size large [--dot out.dot]
+//! graphi trace    --model lstm --size small --executors 8 --threads 8
+//! graphi bench    <fig2|fig3|fig5|fig6|table2|ablations|all> [--fast]
+//! graphi train    [--steps 200] [--artifacts DIR]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{EngineChoice, ExperimentConfig};
+use crate::coordinator::driver::Driver;
+use crate::coordinator::figures;
+use crate::engine::policies::Policy;
+use crate::engine::{Engine, GraphiEngine, Profiler, SimEnv, Trace};
+use crate::graph::GraphStats;
+use crate::models::{self, ModelKind, ModelSize};
+use crate::util::bench::{BenchConfig, BenchRunner};
+use crate::util::cli::{CliError, Matches, Spec};
+
+/// Entry point; returns the process exit code.
+pub fn main(args: Vec<String>) -> i32 {
+    match dispatch(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            // cooperative --help exits cleanly
+            if let Some(CliError::Help(h)) = e.downcast_ref::<CliError>() {
+                println!("{h}");
+                return 0;
+            }
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        println!("{}", toplevel_help());
+        return Ok(());
+    };
+    let rest = args[1..].to_vec();
+    match cmd {
+        "run" => cmd_run(&rest),
+        "profile" => cmd_profile(&rest),
+        "stats" => cmd_stats(&rest),
+        "trace" => cmd_trace(&rest),
+        "bench" => cmd_bench(&rest),
+        "memplan" => cmd_memplan(&rest),
+        "train" => cmd_train(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", toplevel_help());
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{}", toplevel_help()),
+    }
+}
+
+fn toplevel_help() -> String {
+    "graphi — parallel execution engine for deep-learning computation graphs on manycore CPUs\n\
+     (reproduction of Tang et al., 2018; see DESIGN.md)\n\n\
+     COMMANDS:\n\
+     \x20 run       run one experiment (config file or flags)\n\
+     \x20 profile   §4.2 configuration search for a model\n\
+     \x20 stats     graph census + parallelism profile\n\
+     \x20 trace     run once and export a Chrome trace + ASCII timeline\n\
+     \x20 bench     regenerate a paper table/figure (fig2|fig3|fig5|fig6|table2|ablations|all)\n\
+     \x20 train     end-to-end LSTM-LM training through PJRT artifacts\n\n\
+     Run `graphi <command> --help` for options."
+        .to_string()
+}
+
+fn model_opts(spec: Spec) -> Spec {
+    spec.opt("model", Some("lstm"), "model: lstm|phasedlstm|pathnet|googlenet|mlp")
+        .opt("size", Some("medium"), "size: small|medium|large")
+        .opt("seed", Some("42"), "rng seed")
+}
+
+fn parse_model(m: &Matches) -> Result<(ModelKind, ModelSize)> {
+    let kind = ModelKind::parse(m.get("model").unwrap())
+        .with_context(|| format!("bad --model {}", m.get("model").unwrap()))?;
+    let size = ModelSize::parse(m.get("size").unwrap())
+        .with_context(|| format!("bad --size {}", m.get("size").unwrap()))?;
+    Ok((kind, size))
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new("run", "run one experiment"))
+        .opt("config", None, "TOML config file (flags override)")
+        .opt("engine", Some("graphi"), "engine: graphi|sequential|naive|tensorflow")
+        .opt("executors", None, "executor count (omit to auto-profile)")
+        .opt("threads", None, "threads per executor")
+        .opt("policy", Some("cp-first"), "cp-first|fifo|lifo|random|anti-critical")
+        .opt("iters", Some("5"), "iterations to average")
+        .opt("trace", None, "write Chrome trace JSON here")
+        .opt("json", None, "write result JSON here");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let mut cfg = match m.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    let (kind, size) = parse_model(&m)?;
+    cfg.model = kind;
+    cfg.size = size;
+    cfg.engine = EngineChoice::parse(m.get("engine").unwrap())
+        .with_context(|| format!("bad --engine {}", m.get("engine").unwrap()))?;
+    cfg.executors = m.get_usize("executors").map_err(anyhow::Error::new)?;
+    cfg.threads_per = m.get_usize("threads").map_err(anyhow::Error::new)?;
+    cfg.policy = Policy::parse(m.get("policy").unwrap())
+        .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
+    cfg.iterations = m.get_usize("iters").map_err(anyhow::Error::new)?.unwrap_or(5);
+    cfg.seed = m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42);
+    cfg.trace_path = m.get("trace").map(String::from);
+    let result = Driver::run(&cfg);
+    print!("{}", result.render());
+    if let Some(path) = m.get("json") {
+        std::fs::write(path, result.to_json().to_string_pretty())?;
+        println!("json written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new("profile", "§4.2 configuration search"))
+        .opt("iters", Some("3"), "iterations per candidate");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let (kind, size) = parse_model(&m)?;
+    let graph = models::build(kind, size);
+    let stats = GraphStats::compute(&graph);
+    let mut extra = vec![(3, 21)];
+    if stats.max_width >= 6 {
+        extra.push((6, 10));
+    }
+    let profiler = Profiler {
+        iterations: m.get_usize("iters").map_err(anyhow::Error::new)?.unwrap_or(3),
+        worker_cores: 64,
+        extra_configs: extra,
+    };
+    let env = SimEnv::knl(m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42));
+    let report = profiler.profile(&graph, &env);
+    println!("profiling {}/{} ({} nodes)", kind.name(), size.name(), graph.len());
+    print!("{}", Profiler::render(&report));
+    println!("best: {}x{}", report.best.0, report.best.1);
+    println!("static suggestion (graph width): {} executors", stats.suggested_executors());
+    Ok(())
+}
+
+fn cmd_stats(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new("stats", "graph census")).opt("dot", None, "write DOT file here");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let (kind, size) = parse_model(&m)?;
+    let graph = models::build(kind, size);
+    println!("{}/{}", kind.name(), size.name());
+    print!("{}", GraphStats::compute(&graph).render());
+    if let Some(path) = m.get("dot") {
+        std::fs::write(path, crate::graph::dot::to_dot(&graph))?;
+        println!("dot written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new("trace", "run once, export trace"))
+        .opt("executors", Some("8"), "executor count")
+        .opt("threads", Some("8"), "threads per executor")
+        .opt("out", Some("reports/trace.json"), "Chrome trace path")
+        .opt("width", Some("100"), "ASCII timeline width");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let (kind, size) = parse_model(&m)?;
+    let graph = models::build(kind, size);
+    let executors = m.get_usize("executors").map_err(anyhow::Error::new)?.unwrap();
+    let threads = m.get_usize("threads").map_err(anyhow::Error::new)?.unwrap();
+    let env = SimEnv::knl(m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42));
+    let result = GraphiEngine::new(executors, threads).run(&graph, &env);
+    let trace = Trace { records: result.records.clone() };
+    let width = m.get_usize("width").map_err(anyhow::Error::new)?.unwrap();
+    print!("{}", trace.render_ascii(&graph, width));
+    println!(
+        "depth/start-time correlation: {:.3} (≈1 ⇒ §7.4's diagonal wavefront)",
+        trace.depth_time_correlation(&graph)
+    );
+    let out = m.get("out").unwrap();
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, trace.to_chrome_json(&graph))?;
+    println!("chrome trace written to {out} (open in ui.perfetto.dev)");
+    Ok(())
+}
+
+fn cmd_memplan(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new("memplan", "memory plan (§5.1 buffer sharing)"))
+        .flag("inference", "plan the forward-only graph");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let (kind, size) = parse_model(&m)?;
+    let graph = if m.flag("inference") {
+        models::build_inference(kind, size)
+    } else {
+        models::build(kind, size)
+    };
+    let plan = crate::graph::plan_memory(&graph, &graph.topo_order());
+    println!(
+        "{}/{}{}: {} buffers",
+        kind.name(),
+        size.name(),
+        if m.flag("inference") { " (inference)" } else { "" },
+        plan.allocations.len()
+    );
+    println!(
+        "no-sharing total : {}",
+        crate::util::fmt_si(plan.total_bytes as f64)
+    );
+    println!(
+        "shared arena     : {}  (sharing ratio {:.2}x)",
+        crate::util::fmt_si(plan.arena_bytes as f64),
+        plan.sharing_ratio()
+    );
+    println!(
+        "fits 16 GB MCDRAM: {}",
+        if plan.fits(16 << 30) { "yes" } else { "NO" }
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let spec = Spec::new("bench", "regenerate a paper table/figure")
+        .positional("figure", "fig2|fig3|fig5|fig6|table2|ablations|skylake|numa|all")
+        .flag("fast", "small-size grid only (CI speed)")
+        .opt("csv", None, "CSV output directory (default reports/)");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let which = m.positional(0).unwrap().to_string();
+    let fast = m.flag("fast");
+    let csv_dir = m.get_or("csv", "reports");
+    let sizes: Vec<ModelSize> = if fast {
+        vec![ModelSize::Small]
+    } else {
+        vec![ModelSize::Small, ModelSize::Medium, ModelSize::Large]
+    };
+    let run_one = |name: &str| -> Result<()> {
+        let mut runner = BenchRunner::with_config(
+            name,
+            BenchConfig { csv_path: Some(format!("{csv_dir}/{name}.csv")), ..BenchConfig::default() },
+        );
+        let text = match name {
+            "fig2" => figures::fig2(&mut runner),
+            "fig3" => figures::fig3(&mut runner),
+            "fig5" => figures::fig5(&mut runner, &sizes),
+            "fig6" => figures::fig6(&mut runner, &sizes),
+            "table2" => figures::table2(&mut runner, if fast { ModelSize::Small } else { ModelSize::Medium }),
+            "ablations" => figures::ablations(&mut runner),
+            "skylake" => figures::skylake(&mut runner),
+            "numa" => figures::numa(&mut runner),
+            other => bail!("unknown figure `{other}`"),
+        };
+        println!("{text}");
+        runner.finish();
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig2", "fig3", "fig5", "fig6", "table2", "ablations", "skylake", "numa"] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(&which)
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let spec = Spec::new("train", "end-to-end LSTM-LM training via PJRT artifacts")
+        .opt("steps", Some("200"), "training steps")
+        .opt("artifacts", None, "artifact directory (default: $GRAPHI_ARTIFACTS or ./artifacts)")
+        .opt("seed", Some("42"), "init + corpus seed")
+        .opt("log-every", Some("20"), "steps between loss logs")
+        .opt("curve", None, "write the loss curve to this file");
+    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let dir = m
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts::default_dir);
+    let set = crate::runtime::ArtifactSet::load(&dir)?;
+    let runtime = crate::runtime::PjrtRuntime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    let seed = m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap();
+    let mut trainer = crate::runtime::LstmTrainer::new(&runtime, &set, seed)?;
+    println!("params: {}", trainer.param_count());
+    let steps = m.get_usize("steps").map_err(anyhow::Error::new)?.unwrap();
+    let log_every = m.get_usize("log-every").map_err(anyhow::Error::new)?.unwrap();
+    let report = trainer.train(steps, seed ^ 0xC0DE, log_every)?;
+    println!(
+        "\ntrained {} steps in {:.1}s ({:.2} steps/s)\ninitial loss {:.4} → final loss {:.4}",
+        report.steps,
+        report.wall_s,
+        report.steps_per_s,
+        report.initial_loss(),
+        report.final_loss()
+    );
+    print!("{}", report.render_curve(20));
+    if let Some(path) = m.get("curve") {
+        let mut text = String::from("step,loss\n");
+        for (i, l) in report.losses.iter().enumerate() {
+            text.push_str(&format!("{i},{l}\n"));
+        }
+        std::fs::write(path, text)?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_prints_help() {
+        assert_eq!(main(vec![]), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(main(args(&["frobnicate"])), 1);
+    }
+
+    #[test]
+    fn run_mlp_quick() {
+        assert_eq!(
+            main(args(&[
+                "run", "--model", "mlp", "--size", "small", "--executors", "4", "--threads", "8",
+                "--iters", "1"
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn stats_command() {
+        assert_eq!(main(args(&["stats", "--model", "pathnet", "--size", "small"])), 0);
+    }
+
+    #[test]
+    fn help_for_subcommand() {
+        assert_eq!(main(args(&["run", "--help"])), 0);
+    }
+
+    #[test]
+    fn bad_model_rejected() {
+        assert_eq!(main(args(&["stats", "--model", "resnet"])), 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! Typed experiment configuration.
+//!
+//! Loadable from the TOML subset in [`crate::util::toml`] (see
+//! `configs/*.toml` for examples) or built programmatically / from CLI
+//! flags. Every field has a sensible default so minimal configs stay
+//! minimal.
+
+use crate::engine::policies::Policy;
+use crate::models::{ModelKind, ModelSize};
+use crate::sim::topology::PlacementKind;
+use crate::util::toml;
+
+/// Which engine to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    Graphi,
+    Sequential,
+    Naive,
+    TensorFlowLike,
+}
+
+impl EngineChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineChoice::Graphi => "graphi",
+            EngineChoice::Sequential => "sequential",
+            EngineChoice::Naive => "naive",
+            EngineChoice::TensorFlowLike => "tensorflow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineChoice> {
+        match s.to_ascii_lowercase().as_str() {
+            "graphi" => Some(EngineChoice::Graphi),
+            "sequential" | "seq" => Some(EngineChoice::Sequential),
+            "naive" => Some(EngineChoice::Naive),
+            "tensorflow" | "tf" | "tensorflow-like" => Some(EngineChoice::TensorFlowLike),
+            _ => None,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub title: String,
+    pub model: ModelKind,
+    pub size: ModelSize,
+    pub engine: EngineChoice,
+    /// Executors × threads; `None` lets the profiler pick (§4.2).
+    pub executors: Option<usize>,
+    pub threads_per: Option<usize>,
+    pub policy: Policy,
+    pub placement: PlacementKind,
+    /// Batch-training iterations to simulate.
+    pub iterations: usize,
+    pub seed: u64,
+    /// Profiler iterations when auto-configuring.
+    pub profile_iterations: usize,
+    /// Emit a Chrome trace of the last iteration to this path.
+    pub trace_path: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            title: String::from("experiment"),
+            model: ModelKind::Lstm,
+            size: ModelSize::Medium,
+            engine: EngineChoice::Graphi,
+            executors: None,
+            threads_per: None,
+            policy: Policy::CriticalPathFirst,
+            placement: PlacementKind::PinnedDisjoint,
+            iterations: 5,
+            seed: 42,
+            profile_iterations: 3,
+            trace_path: None,
+        }
+    }
+}
+
+/// Config errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error: {0}")]
+    Toml(#[from] toml::ParseError),
+    #[error("io error reading config: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad value for `{key}`: {value}")]
+    BadValue { key: &'static str, value: String },
+}
+
+fn bad(key: &'static str, value: impl std::fmt::Display) -> ConfigError {
+    ConfigError::BadValue { key, value: value.to_string() }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text. Recognized keys:
+    ///
+    /// ```toml
+    /// title = "..."
+    /// [model]
+    /// name = "lstm"           # lstm|phasedlstm|pathnet|googlenet|mlp
+    /// size = "medium"         # small|medium|large
+    /// [engine]
+    /// kind = "graphi"         # graphi|sequential|naive|tensorflow
+    /// executors = 8           # omit for profiler auto-pick
+    /// threads_per_executor = 8
+    /// policy = "cp-first"
+    /// placement = "pinned"    # pinned|shared-tiles|os
+    /// [run]
+    /// iterations = 5
+    /// seed = 42
+    /// profile_iterations = 3
+    /// trace = "out/trace.json"
+    /// ```
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, ConfigError> {
+        let doc = toml::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(t) = doc.get_str("", "title") {
+            cfg.title = t.to_string();
+        }
+        if let Some(name) = doc.get_str("model", "name") {
+            cfg.model = ModelKind::parse(name).ok_or_else(|| bad("model.name", name))?;
+        }
+        if let Some(size) = doc.get_str("model", "size") {
+            cfg.size = ModelSize::parse(size).ok_or_else(|| bad("model.size", size))?;
+        }
+        if let Some(kind) = doc.get_str("engine", "kind") {
+            cfg.engine = EngineChoice::parse(kind).ok_or_else(|| bad("engine.kind", kind))?;
+        }
+        if let Some(e) = doc.get_int("engine", "executors") {
+            cfg.executors = Some(usize::try_from(e).map_err(|_| bad("engine.executors", e))?);
+        }
+        if let Some(t) = doc.get_int("engine", "threads_per_executor") {
+            cfg.threads_per = Some(usize::try_from(t).map_err(|_| bad("engine.threads_per_executor", t))?);
+        }
+        if let Some(p) = doc.get_str("engine", "policy") {
+            cfg.policy = Policy::parse(p).ok_or_else(|| bad("engine.policy", p))?;
+        }
+        if let Some(p) = doc.get_str("engine", "placement") {
+            cfg.placement = match p {
+                "pinned" => PlacementKind::PinnedDisjoint,
+                "shared-tiles" => PlacementKind::PinnedSharedTiles,
+                "os" | "unpinned" => PlacementKind::OsManaged,
+                other => return Err(bad("engine.placement", other)),
+            };
+        }
+        if let Some(i) = doc.get_int("run", "iterations") {
+            cfg.iterations = usize::try_from(i).map_err(|_| bad("run.iterations", i))?;
+        }
+        if let Some(s) = doc.get_int("run", "seed") {
+            cfg.seed = s as u64;
+        }
+        if let Some(i) = doc.get_int("run", "profile_iterations") {
+            cfg.profile_iterations = usize::try_from(i).map_err(|_| bad("run.profile_iterations", i))?;
+        }
+        if let Some(t) = doc.get_str("run", "trace") {
+            cfg.trace_path = Some(t.to_string());
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_toml_uses_defaults() {
+        let cfg = ExperimentConfig::from_toml("title = \"t\"").unwrap();
+        assert_eq!(cfg.model, ModelKind::Lstm);
+        assert_eq!(cfg.engine, EngineChoice::Graphi);
+        assert_eq!(cfg.iterations, 5);
+    }
+
+    #[test]
+    fn full_toml_parses() {
+        let text = r#"
+title = "pathnet sweep"
+[model]
+name = "pathnet"
+size = "large"
+[engine]
+kind = "naive"
+executors = 6
+threads_per_executor = 10
+policy = "fifo"
+placement = "os"
+[run]
+iterations = 7
+seed = 9
+trace = "out/t.json"
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model, ModelKind::PathNet);
+        assert_eq!(cfg.size, ModelSize::Large);
+        assert_eq!(cfg.engine, EngineChoice::Naive);
+        assert_eq!(cfg.executors, Some(6));
+        assert_eq!(cfg.threads_per, Some(10));
+        assert_eq!(cfg.policy, Policy::Fifo);
+        assert_eq!(cfg.placement, PlacementKind::OsManaged);
+        assert_eq!(cfg.iterations, 7);
+        assert_eq!(cfg.trace_path.as_deref(), Some("out/t.json"));
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(ExperimentConfig::from_toml("[model]\nname = \"resnet\"").is_err());
+        assert!(ExperimentConfig::from_toml("[engine]\nkind = \"cuda\"").is_err());
+        assert!(ExperimentConfig::from_toml("[engine]\nplacement = \"moon\"").is_err());
+    }
+
+    #[test]
+    fn engine_choice_roundtrip() {
+        for e in [
+            EngineChoice::Graphi,
+            EngineChoice::Sequential,
+            EngineChoice::Naive,
+            EngineChoice::TensorFlowLike,
+        ] {
+            assert_eq!(EngineChoice::parse(e.name()), Some(e));
+        }
+    }
+}

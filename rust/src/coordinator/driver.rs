@@ -1,0 +1,249 @@
+//! The experiment driver: config → model → (profile) → engine → results.
+
+use crate::engine::{
+    Engine, GraphiEngine, NaiveEngine, Profiler, RunResult, SequentialEngine, SimEnv,
+    TensorFlowLikeEngine, Trace,
+};
+use crate::graph::{Graph, GraphStats};
+use crate::models;
+use crate::util::stats::Welford;
+
+use super::config::{EngineChoice, ExperimentConfig};
+
+/// Aggregated outcome of one experiment.
+#[derive(Debug)]
+pub struct ExperimentResult {
+    pub config: ExperimentConfig,
+    pub engine_name: String,
+    /// Chosen (executors, threads) — profiled or explicit.
+    pub fleet: (usize, usize),
+    pub mean_makespan_us: f64,
+    pub std_us: f64,
+    pub iterations: usize,
+    pub graph_stats: GraphStats,
+    /// Last iteration's full result (trace source).
+    pub last: RunResult,
+}
+
+/// Runs experiments.
+pub struct Driver;
+
+impl Driver {
+    /// Execute the experiment described by `cfg`.
+    pub fn run(cfg: &ExperimentConfig) -> ExperimentResult {
+        let graph = models::build(cfg.model, cfg.size);
+        Self::run_on(cfg, &graph)
+    }
+
+    /// Execute on an already-built graph (lets callers reuse graphs).
+    pub fn run_on(cfg: &ExperimentConfig, graph: &Graph) -> ExperimentResult {
+        let env = SimEnv::knl(cfg.seed);
+        let graph_stats = GraphStats::compute(graph);
+        let fleet = Self::resolve_fleet(cfg, graph, &env, &graph_stats);
+        let engine = Self::build_engine(cfg, fleet, &graph_stats);
+
+        let mut acc = Welford::new();
+        let mut last = None;
+        for iter in 0..cfg.iterations.max(1) {
+            let env_i = SimEnv { cost: env.cost.clone(), seed: cfg.seed ^ ((iter as u64) << 32) };
+            let result = engine.run(graph, &env_i);
+            acc.push(result.makespan_us);
+            last = Some(result);
+        }
+        let last = last.expect("at least one iteration");
+        if let Some(path) = &cfg.trace_path {
+            let trace = Trace { records: last.records.clone() };
+            if let Some(parent) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            if let Err(e) = std::fs::write(path, trace.to_chrome_json(graph)) {
+                crate::log_warn!("failed to write trace {path}: {e}");
+            }
+        }
+        ExperimentResult {
+            config: cfg.clone(),
+            engine_name: engine.name(),
+            fleet,
+            mean_makespan_us: acc.mean(),
+            std_us: acc.std(),
+            iterations: cfg.iterations.max(1),
+            graph_stats,
+            last,
+        }
+    }
+
+    /// Pick the fleet shape: explicit config wins; otherwise run the
+    /// profiler's symmetric-config search (§4.2) with the model-specific
+    /// extra configurations §7.3 mentions.
+    fn resolve_fleet(
+        cfg: &ExperimentConfig,
+        graph: &Graph,
+        env: &SimEnv,
+        stats: &GraphStats,
+    ) -> (usize, usize) {
+        if let (Some(e), Some(t)) = (cfg.executors, cfg.threads_per) {
+            return (e, t);
+        }
+        if cfg.engine == EngineChoice::Sequential {
+            return (1, 64);
+        }
+        let mut extra = vec![];
+        // §7.3: PathNet gets 6×10 (6 modules), GoogleNet 3×21 (2-3 branches)
+        if stats.max_width >= 6 {
+            extra.push((6, 10));
+        }
+        extra.push((3, 21));
+        let profiler = Profiler {
+            iterations: cfg.profile_iterations.max(1),
+            worker_cores: 64,
+            extra_configs: extra,
+        };
+        let report = profiler.profile(graph, env);
+        report.best
+    }
+
+    fn build_engine(
+        cfg: &ExperimentConfig,
+        fleet: (usize, usize),
+        stats: &GraphStats,
+    ) -> Box<dyn Engine> {
+        let (executors, threads) = fleet;
+        match cfg.engine {
+            EngineChoice::Graphi => Box::new(GraphiEngine {
+                policy: cfg.policy,
+                placement: cfg.placement,
+                ..GraphiEngine::new(executors, threads)
+            }),
+            EngineChoice::Sequential => Box::new(SequentialEngine::new(threads.max(executors))),
+            EngineChoice::Naive => Box::new(NaiveEngine {
+                executors,
+                threads_per: threads,
+                placement: cfg.placement,
+            }),
+            EngineChoice::TensorFlowLike => {
+                Box::new(TensorFlowLikeEngine::tuned_for(stats.max_width, 68))
+            }
+        }
+    }
+}
+
+impl ExperimentResult {
+    /// One-screen human-readable summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.config.title));
+        out.push_str(&format!(
+            "model: {}/{}  engine: {}  fleet: {}x{}\n",
+            self.config.model.name(),
+            self.config.size.name(),
+            self.engine_name,
+            self.fleet.0,
+            self.fleet.1
+        ));
+        out.push_str(&self.graph_stats.render());
+        out.push_str(&format!(
+            "batch time: {} ± {} over {} iterations\n",
+            crate::util::fmt_us(self.mean_makespan_us),
+            crate::util::fmt_us(self.std_us),
+            self.iterations
+        ));
+        out.push_str(&format!(
+            "executor utilization: {:.1}%  dispatches: {}  lw ops: {}\n",
+            100.0 * self.last.metrics.utilization(self.last.makespan_us),
+            self.last.metrics.dispatches,
+            self.last.metrics.lightweight_ops,
+        ));
+        out
+    }
+
+    /// Structured JSON (for tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut doc = crate::util::json::Json::obj();
+        doc.set("title", self.config.title.as_str())
+            .set("model", self.config.model.name())
+            .set("size", self.config.size.name())
+            .set("engine", self.engine_name.as_str())
+            .set("executors", self.fleet.0)
+            .set("threads_per", self.fleet.1)
+            .set("mean_makespan_us", self.mean_makespan_us)
+            .set("std_us", self.std_us)
+            .set("iterations", self.iterations)
+            .set("nodes", self.graph_stats.nodes)
+            .set("edges", self.graph_stats.edges)
+            .set("utilization", self.last.metrics.utilization(self.last.makespan_us));
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ModelKind, ModelSize};
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            model: ModelKind::Mlp,
+            size: ModelSize::Small,
+            executors: Some(4),
+            threads_per: Some(8),
+            iterations: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn explicit_fleet_skips_profiler() {
+        let r = Driver::run(&quick_cfg());
+        assert_eq!(r.fleet, (4, 8));
+        assert!(r.mean_makespan_us > 0.0);
+        assert_eq!(r.iterations, 2);
+    }
+
+    #[test]
+    fn auto_fleet_profiles() {
+        let cfg = ExperimentConfig {
+            executors: None,
+            threads_per: None,
+            profile_iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.fleet.0 >= 1 && r.fleet.1 >= 1);
+    }
+
+    #[test]
+    fn render_and_json() {
+        let r = Driver::run(&quick_cfg());
+        let text = r.render();
+        assert!(text.contains("mlp"));
+        let json = r.to_json().to_string_compact();
+        assert!(json.contains("\"engine\""));
+    }
+
+    #[test]
+    fn trace_written() {
+        let path = std::env::temp_dir().join(format!("graphi-trace-{}.json", std::process::id()));
+        let cfg = ExperimentConfig {
+            trace_path: Some(path.display().to_string()),
+            ..quick_cfg()
+        };
+        let _ = Driver::run(&cfg);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("traceEvents"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn all_engine_choices_run() {
+        for engine in [
+            EngineChoice::Graphi,
+            EngineChoice::Sequential,
+            EngineChoice::Naive,
+            EngineChoice::TensorFlowLike,
+        ] {
+            let cfg = ExperimentConfig { engine, iterations: 1, ..quick_cfg() };
+            let r = Driver::run(&cfg);
+            assert!(r.mean_makespan_us > 0.0, "{engine:?}");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Process-wide metrics registry.
+//!
+//! Engines and the runtime increment named counters/gauges; reports and
+//! long-running drivers snapshot them. Thread-safe, lock-free on the hot
+//! path (atomic counters), suitable for use inside executor threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge storing an f64 (bit-cast through u64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Registry of named metrics.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
+}
+
+impl Registry {
+    /// The process-global registry.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::default)
+    }
+
+    /// Get or create a counter. The returned reference is `'static`
+    /// (metrics live for the process lifetime), so hot paths can cache it.
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut map = self.counters.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            return c;
+        }
+        let leaked: &'static Counter = Box::leak(Box::default());
+        map.insert(name.to_string(), leaked);
+        leaked
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut map = self.gauges.lock().unwrap();
+        if let Some(g) = map.get(name) {
+            return g;
+        }
+        let leaked: &'static Gauge = Box::leak(Box::default());
+        map.insert(name.to_string(), leaked);
+        leaked
+    }
+
+    /// Snapshot all metrics.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), c.get() as f64);
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), g.get());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let r = Registry::default();
+        let c = r.counter("ops");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name → same counter
+        assert_eq!(r.counter("ops").get(), 5);
+    }
+
+    #[test]
+    fn gauge_stores_floats() {
+        let r = Registry::default();
+        r.gauge("util").set(0.75);
+        assert_eq!(r.gauge("util").get(), 0.75);
+    }
+
+    #[test]
+    fn snapshot_merges() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.gauge("b").set(2.5);
+        let snap = r.snapshot();
+        assert_eq!(snap["a"], 1.0);
+        assert_eq!(snap["b"], 2.5);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let r = Registry::default();
+        let c = r.counter("par");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,20 @@
+//! Experiment coordination: configs, drivers, metrics and reports.
+//!
+//! This is the "launcher" layer a downstream user touches: describe an
+//! experiment in a TOML config (or CLI flags), run it through
+//! [`driver::Driver`], get structured results (text table / CSV / JSON)
+//! plus optional Chrome traces.
+//!
+//! * [`config`]  — typed experiment configuration + TOML loading
+//! * [`driver`]  — builds the model, instantiates engines, runs iterations
+//! * [`metrics`] — a process-wide metrics registry (counters/gauges)
+//! * [`report`]  — rendering results to the paper's table/figure formats
+
+pub mod config;
+pub mod driver;
+pub mod figures;
+pub mod metrics;
+pub mod report;
+
+pub use config::{EngineChoice, ExperimentConfig};
+pub use driver::{Driver, ExperimentResult};

@@ -1,0 +1,152 @@
+//! Report writers: collect [`ExperimentResult`]s and render the paper's
+//! table/figure formats (text, markdown, CSV) plus a JSON dump.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::driver::ExperimentResult;
+
+/// A collection of results rendered together.
+#[derive(Default)]
+pub struct Report {
+    results: Vec<ExperimentResult>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn push(&mut self, r: ExperimentResult) {
+        self.results.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    pub fn results(&self) -> &[ExperimentResult] {
+        &self.results
+    }
+
+    /// Text table of all results; if a baseline title is given, adds a
+    /// relative-time column against it (the paper's normalized plots).
+    pub fn render(&self, baseline: Option<&str>) -> String {
+        let base = baseline.and_then(|b| {
+            self.results
+                .iter()
+                .find(|r| r.engine_name.contains(b) || r.config.title == b)
+                .map(|r| r.mean_makespan_us)
+        });
+        let mut header = vec!["experiment", "model", "fleet", "batch time", "std"];
+        if base.is_some() {
+            header.push("relative");
+        }
+        let mut t = Table::new(&header);
+        for r in &self.results {
+            let mut row = vec![
+                r.config.title.clone(),
+                format!("{}/{}", r.config.model.name(), r.config.size.name()),
+                format!("{}x{}", r.fleet.0, r.fleet.1),
+                crate::util::fmt_us(r.mean_makespan_us),
+                crate::util::fmt_us(r.std_us),
+            ];
+            if let Some(b) = base {
+                row.push(format!("{:.2}", r.mean_makespan_us / b));
+            }
+            t.row(&row);
+        }
+        t.render()
+    }
+
+    /// CSV rows for downstream plotting.
+    pub fn csv(&self) -> String {
+        let mut out = String::from(
+            "title,model,size,engine,executors,threads,mean_makespan_us,std_us,iterations,utilization\n",
+        );
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.3},{:.3},{},{:.4}\n",
+                r.config.title,
+                r.config.model.name(),
+                r.config.size.name(),
+                r.engine_name,
+                r.fleet.0,
+                r.fleet.1,
+                r.mean_makespan_us,
+                r.std_us,
+                r.iterations,
+                r.last.metrics.utilization(r.last.makespan_us),
+            ));
+        }
+        out
+    }
+
+    /// JSON array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect())
+    }
+
+    /// Write CSV + JSON next to each other under `dir/<stem>.{csv,json}`.
+    pub fn write_files(&self, dir: &str, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{stem}.csv"), self.csv())?;
+        std::fs::write(format!("{dir}/{stem}.json"), self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ExperimentConfig;
+    use crate::coordinator::driver::Driver;
+    use crate::models::{ModelKind, ModelSize};
+
+    fn result(title: &str) -> ExperimentResult {
+        let cfg = ExperimentConfig {
+            title: title.into(),
+            model: ModelKind::Mlp,
+            size: ModelSize::Small,
+            executors: Some(2),
+            threads_per: Some(8),
+            iterations: 1,
+            ..Default::default()
+        };
+        Driver::run(&cfg)
+    }
+
+    #[test]
+    fn render_with_baseline() {
+        let mut rep = Report::new();
+        rep.push(result("base"));
+        rep.push(result("other"));
+        let text = rep.render(Some("base"));
+        assert!(text.contains("relative"));
+        assert!(text.contains("1.00"));
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let mut rep = Report::new();
+        rep.push(result("x"));
+        let csv = rep.csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("mlp"));
+    }
+
+    #[test]
+    fn files_written() {
+        let dir = std::env::temp_dir().join(format!("graphi-report-{}", std::process::id()));
+        let mut rep = Report::new();
+        rep.push(result("w"));
+        rep.write_files(dir.to_str().unwrap(), "test").unwrap();
+        assert!(dir.join("test.csv").is_file());
+        assert!(dir.join("test.json").is_file());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

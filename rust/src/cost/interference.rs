@@ -1,0 +1,193 @@
+//! Interference pricing (§3 of the paper).
+//!
+//! The base cost model assumes pinned threads on exclusive cores. Real
+//! engines deviate in exactly the ways the paper catalogues — unpinned
+//! threads colliding on cores, oversubscribed thread pools, a contended
+//! global ready-queue, executors sharing an L2 tile. [`Interference`]
+//! prices those deviations so the simulator can apply them per engine.
+
+use crate::util::rng::Rng;
+
+use super::calibration::Calibration;
+
+/// Interference pricing over a [`Calibration`].
+#[derive(Debug, Clone)]
+pub struct Interference {
+    pub cal: Calibration,
+}
+
+impl Interference {
+    pub fn new(cal: Calibration) -> Interference {
+        Interference { cal }
+    }
+
+    /// Expected fraction of threads that share a physical core with some
+    /// other runnable thread when the OS places `threads` uniformly at
+    /// random over `cores` (birthday-style bound).
+    pub fn collision_fraction(threads: usize, cores: usize) -> f64 {
+        if threads <= 1 || cores == 0 {
+            return 0.0;
+        }
+        let c = cores as f64;
+        1.0 - ((c - 1.0) / c).powi(threads as i32 - 1)
+    }
+
+    /// Multiplicative slowdown for an op executed by *unpinned* (OS-managed)
+    /// threads while `total_threads` runnable threads compete for `cores`.
+    ///
+    /// Deterministic part: collision + oversubscription weights, calibrated
+    /// so that high-occupancy unpinned runs lose up to ~45 % vs pinned
+    /// (Fig 3). `rng` adds migration stalls and placement luck.
+    pub fn unpinned_factor(&self, total_threads: usize, cores: usize, rng: &mut Rng) -> f64 {
+        let collision = Self::collision_fraction(total_threads, cores);
+        let oversub = (total_threads as f64 / cores as f64 - 1.0).max(0.0);
+        let mut factor =
+            1.0 + self.cal.unpinned_collision_weight * collision + self.cal.oversub_weight * oversub;
+        // Placement luck: some runs land well, some badly.
+        factor *= rng.jitter(0.06);
+        factor.max(1.0)
+    }
+
+    /// Extra latency (µs) an unpinned op may pay for a thread migration.
+    pub fn migration_stall_us(&self, rng: &mut Rng) -> f64 {
+        if rng.chance(self.cal.migration_prob) {
+            rng.exponential(self.cal.migration_mean_us)
+        } else {
+            0.0
+        }
+    }
+
+    /// Cost (µs) of one dequeue from a shared ready-queue with `pollers`
+    /// concurrent idle executors spinning on it. This is the software
+    /// contention the Graphi scheduler eliminates (§4.3, Table 2).
+    pub fn shared_queue_dequeue_us(&self, pollers: usize) -> f64 {
+        self.cal.queue_base_us + self.cal.queue_cas_us * pollers.saturating_sub(1) as f64
+    }
+
+    /// Wake-up latency for a parked baseline pool thread (§4.4: Graphi's
+    /// spinning executors avoid this entirely).
+    pub fn wake_latency_us(&self) -> f64 {
+        self.cal.baseline_wake_us
+    }
+
+    /// Cost (µs) of the Graphi scheduler making one dispatch decision
+    /// (max-heap pop, bitmap scan, SPSC ring push — uncontended by design).
+    pub fn graphi_dispatch_us(&self) -> f64 {
+        self.cal.graphi_dispatch_us
+    }
+
+    /// Multiplier when two executors' threads share an L2 tile (§4.4: Graphi
+    /// places executors on disjoint tiles to avoid exactly this).
+    pub fn l2_overlap_factor(&self, shares_tile: bool) -> f64 {
+        if shares_tile {
+            self.cal.l2_overlap_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// One-time cost (µs) of resizing an OpenMP thread team (§6: 10–30 ms;
+    /// kills the dynamic-executor-count optimization).
+    pub fn team_resize_us(&self) -> f64 {
+        self.cal.team_resize_ms * 1e3
+    }
+
+    /// Duration noise factor (profiling variance; log-normal).
+    pub fn noise(&self, rng: &mut Rng) -> f64 {
+        if self.cal.noise_sigma == 0.0 {
+            1.0
+        } else {
+            rng.jitter(self.cal.noise_sigma)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn interference() -> Interference {
+        Interference::new(Calibration::deterministic())
+    }
+
+    #[test]
+    fn collision_fraction_limits() {
+        assert_eq!(Interference::collision_fraction(1, 68), 0.0);
+        let f64t = Interference::collision_fraction(64, 68);
+        assert!((0.5..0.8).contains(&f64t), "64 threads on 68 cores: {f64t}");
+        let f4 = Interference::collision_fraction(4, 68);
+        assert!(f4 < 0.06, "sparse occupancy nearly collision-free: {f4}");
+    }
+
+    #[test]
+    fn fig3_unpinned_penalty_up_to_45_percent() {
+        let i = interference();
+        let mut rng = Rng::new(1);
+        // full occupancy, no oversubscription: the Fig 3 regime
+        let mut worst: f64 = 0.0;
+        let mut sum = 0.0;
+        let n = 1000;
+        for _ in 0..n {
+            let f = i.unpinned_factor(64, 68, &mut rng);
+            worst = worst.max(f);
+            sum += f;
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (1.25..1.55).contains(&mean),
+            "mean unpinned penalty {mean}, paper: up to 45 %"
+        );
+        assert!(worst < 1.8, "worst case bounded: {worst}");
+    }
+
+    #[test]
+    fn oversubscription_makes_it_worse() {
+        let i = interference();
+        let mut a = Rng::new(2);
+        let mut b = Rng::new(2);
+        let normal = i.unpinned_factor(64, 68, &mut a);
+        let oversub = i.unpinned_factor(136, 68, &mut b);
+        assert!(oversub > normal + 0.5, "2× oversubscription: {oversub} vs {normal}");
+    }
+
+    #[test]
+    fn queue_contention_scales_with_pollers() {
+        let i = interference();
+        let one = i.shared_queue_dequeue_us(1);
+        let many = i.shared_queue_dequeue_us(32);
+        assert!(one < 0.5);
+        assert!(many > 10.0, "32 pollers should cost >10µs: {many}");
+        assert!(i.graphi_dispatch_us() < one + i.cal.queue_cas_us * 4.0,
+            "graphi dispatch must be cheaper than even lightly contended queue");
+    }
+
+    #[test]
+    fn team_resize_in_paper_range() {
+        let us = interference().team_resize_us();
+        assert!((10_000.0..=30_000.0).contains(&us));
+    }
+
+    #[test]
+    fn pinned_has_no_l2_penalty() {
+        let i = interference();
+        assert_eq!(i.l2_overlap_factor(false), 1.0);
+        assert!(i.l2_overlap_factor(true) > 1.0);
+    }
+
+    #[test]
+    fn deterministic_noise_is_identity() {
+        let i = interference();
+        let mut rng = Rng::new(3);
+        assert_eq!(i.noise(&mut rng), 1.0);
+    }
+
+    #[test]
+    fn migration_stalls_occasional() {
+        let i = interference();
+        let mut rng = Rng::new(4);
+        let stalls: Vec<f64> = (0..1000).map(|_| i.migration_stall_us(&mut rng)).collect();
+        let nonzero = stalls.iter().filter(|&&s| s > 0.0).count();
+        // prob 0.25 → about a quarter
+        assert!((150..350).contains(&nonzero), "nonzero stalls {nonzero}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Machine description (§2 of the paper, Fig 1).
+
+/// Hardware parameters of the simulated manycore CPU.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Physical cores (one hardware thread used per core, as in the paper).
+    pub cores: usize,
+    /// Cores per tile sharing an L2 slice (KNL: 2).
+    pub cores_per_tile: usize,
+    /// Clock frequency, Hz.
+    pub freq_hz: f64,
+    /// Peak single-precision flops per core per cycle
+    /// (KNL: 2 VPUs × 16 SP lanes × 2 FMA = 64).
+    pub flops_per_core_cycle: f64,
+    /// Shared L2 per tile, bytes (KNL: 1 MiB).
+    pub l2_per_tile: u64,
+    /// L1 data cache per core, bytes.
+    pub l1_per_core: u64,
+    /// MCDRAM bandwidth, bytes/s (KNL: >400 GB/s; we use 420).
+    pub mcdram_bw: f64,
+    /// Single-core sustainable stream bandwidth, bytes/s. On KNL a core
+    /// cannot saturate MCDRAM alone (~12 GB/s measured in the literature).
+    pub core_bw: f64,
+    /// DDR4 bandwidth, bytes/s (for footprints beyond 16 GB MCDRAM;
+    /// unused by the paper's workloads, which fit MCDRAM).
+    pub ddr_bw: f64,
+    /// MCDRAM capacity, bytes.
+    pub mcdram_capacity: u64,
+    /// Sub-NUMA cluster domains. Quadrant mode behaves as one symmetric
+    /// domain (the paper's configuration); SNC-4 exposes 4 domains with
+    /// lower local latency but a cross-domain penalty (§2, §9 future work).
+    pub numa_domains: usize,
+}
+
+impl Machine {
+    /// The paper's testbed: Intel Xeon Phi processor 7250 ("Knights
+    /// Landing"), quadrant cluster mode, one thread per core.
+    pub fn knl7250() -> Machine {
+        Machine {
+            name: "Intel Xeon Phi 7250 (KNL, quadrant)",
+            cores: 68,
+            cores_per_tile: 2,
+            freq_hz: 1.4e9,
+            flops_per_core_cycle: 64.0,
+            l2_per_tile: 1 << 20,
+            l1_per_core: 32 << 10,
+            mcdram_bw: 420e9,
+            core_bw: 12e9,
+            ddr_bw: 90e9,
+            mcdram_capacity: 16 << 30,
+            numa_domains: 1,
+        }
+    }
+
+    /// KNL in SNC-4 sub-NUMA clustering mode (§9's "challenging memory
+    /// hierarchies" future work): 4 domains of 17 cores, each with a local
+    /// MCDRAM slice. Local accesses are slightly faster than quadrant
+    /// mode; cross-domain accesses pay a penalty.
+    pub fn knl7250_snc4() -> Machine {
+        Machine { name: "Intel Xeon Phi 7250 (KNL, SNC-4)", numa_domains: 4, ..Machine::knl7250() }
+    }
+
+    /// A Skylake-like Xeon Platinum 8180 (the paper's §9 notes Graphi also
+    /// wins there) — used by the generalization ablation.
+    pub fn skylake8180() -> Machine {
+        Machine {
+            name: "Intel Xeon Platinum 8180 (Skylake-SP)",
+            cores: 28,
+            cores_per_tile: 1, // private L2 per core on SKX
+            freq_hz: 2.5e9,
+            flops_per_core_cycle: 64.0, // 2×AVX-512 FMA
+            l2_per_tile: 1 << 20,
+            l1_per_core: 32 << 10,
+            mcdram_bw: 120e9, // 6-channel DDR4
+            core_bw: 15e9,
+            ddr_bw: 120e9,
+            mcdram_capacity: 64 << 30,
+            numa_domains: 1,
+        }
+    }
+
+    /// Peak single-precision flops of one core, flops/s.
+    pub fn peak_core_flops(&self) -> f64 {
+        self.freq_hz * self.flops_per_core_cycle
+    }
+
+    /// Peak single-precision flops of the whole chip, flops/s.
+    pub fn peak_chip_flops(&self) -> f64 {
+        self.peak_core_flops() * self.cores as f64
+    }
+
+    /// Number of tiles.
+    pub fn tiles(&self) -> usize {
+        self.cores / self.cores_per_tile
+    }
+
+    /// Aggregate stream bandwidth achievable by `k` cores: linear in `k`
+    /// until the MCDRAM limit.
+    pub fn bw_for_cores(&self, k: usize) -> f64 {
+        (self.core_bw * k as f64).min(self.mcdram_bw)
+    }
+
+    /// NUMA domain of a physical core (cores are striped contiguously).
+    pub fn domain_of_core(&self, core: usize) -> usize {
+        if self.numa_domains <= 1 {
+            0
+        } else {
+            core / self.cores.div_ceil(self.numa_domains)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knl_peak_is_about_6tf() {
+        let m = Machine::knl7250();
+        let peak = m.peak_chip_flops();
+        // 68 × 1.4 GHz × 64 = 6.09 TF
+        assert!((peak - 6.0928e12).abs() < 1e9, "peak {peak}");
+        assert_eq!(m.tiles(), 34);
+    }
+
+    #[test]
+    fn bandwidth_caps_at_mcdram() {
+        let m = Machine::knl7250();
+        assert_eq!(m.bw_for_cores(1), 12e9);
+        assert_eq!(m.bw_for_cores(68), 420e9); // 816 GB/s demand capped
+    }
+
+    #[test]
+    fn snc4_domains() {
+        let m = Machine::knl7250_snc4();
+        assert_eq!(m.numa_domains, 4);
+        assert_eq!(m.domain_of_core(0), 0);
+        assert_eq!(m.domain_of_core(16), 0);
+        assert_eq!(m.domain_of_core(17), 1);
+        assert_eq!(m.domain_of_core(67), 3);
+        // quadrant mode is a single domain
+        assert_eq!(Machine::knl7250().domain_of_core(67), 0);
+    }
+
+    #[test]
+    fn skylake_has_private_l2() {
+        let m = Machine::skylake8180();
+        assert_eq!(m.tiles(), 28);
+        assert_eq!(m.cores_per_tile, 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! Analytic operation cost model for the Intel Xeon Phi 7250.
+//!
+//! The paper's evaluation machine is unavailable, so every experiment runs
+//! against this model + the discrete-event simulator in [`crate::sim`]
+//! (see DESIGN.md §2 for the substitution argument). The model prices one
+//! operation executed by a team of `k` threads:
+//!
+//! ```text
+//! T(op, k) = dispatch + fork(k) + roofline(op) / speedup(op, k)
+//! ```
+//!
+//! * `roofline(op)` — single-thread time = max(compute, memory) with
+//!   class-specific efficiency (MKL GEMM, LIBXSMM conv, stream element-wise)
+//! * `speedup(op, k)` — the Universal Scalability Law
+//!   `S(k) = k / (1 + α(k−1) + β·k(k−1))`, whose contention (α) and
+//!   coherence (β) coefficients are chosen per op class and size so the
+//!   saturation points match the paper's Fig 2 (GEMM ≈ 8 threads,
+//!   element-wise ≈ 16 on the reference sizes)
+//! * `fork(k)` — OpenMP team fork/barrier cost, logarithmic in `k`
+//!
+//! Interference (unpinned threads, oversubscription, shared ready-queue
+//! polling, L2 overlap) is priced by [`interference`] and applied by the
+//! simulator, not baked into the base duration.
+
+pub mod calibration;
+pub mod interference;
+pub mod machine;
+pub mod model;
+
+pub use calibration::Calibration;
+pub use interference::Interference;
+pub use machine::Machine;
+pub use model::CostModel;

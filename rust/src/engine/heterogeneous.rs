@@ -1,0 +1,303 @@
+//! Heterogeneous executor-class engine — §6's first rejected optimization,
+//! implemented for real.
+//!
+//! > "We classified the operations into multiple classes (e.g. 3)
+//! > according to how well they scale, and made the scheduler preferably
+//! > assign an operation to an executor of corresponding thread team size.
+//! > This technique indeed reduced the total CPU time of all the threads.
+//! > However, the makespan of the whole graph execution did not improve
+//! > … different executor sizes could cause work straggling when some big
+//! > operations are scheduled to run on the executors with a small team."
+//!
+//! The fleet is a list of `(executors, threads)` classes. Each op's
+//! preferred class is the largest team it can still use at ≥50 % parallel
+//! efficiency; the scheduler dispatches to an idle executor of that class, and
+//! (work-conservingly) falls back to any idle executor otherwise — which
+//! is exactly where the paper's straggling comes from: a GEMM that lands
+//! on a 2-thread executor holds the critical path hostage.
+//!
+//! The bench compares total CPU time (improves) against makespan (does
+//! not) — both paper claims.
+
+use crate::graph::{levels, Graph, NodeId};
+use crate::sim::{BandwidthArbiter, EventQueue};
+
+use super::policies::Policy;
+use super::ready::{DepTracker, ReadySet};
+use super::trace::{OpRecord, LIGHTWEIGHT_EXECUTOR};
+use super::{Engine, EngineMetrics, RunResult, SimEnv};
+
+/// A fleet of executor classes with different team sizes.
+#[derive(Debug, Clone)]
+pub struct HeterogeneousEngine {
+    /// `(executors, threads_per)` per class.
+    pub classes: Vec<(usize, usize)>,
+    /// Work-conserving fallback: if the preferred class is busy, take any
+    /// idle executor (the paper's behaviour). With `false`, ops wait for
+    /// their class — even worse straggling.
+    pub work_conserving: bool,
+}
+
+impl HeterogeneousEngine {
+    /// The paper's "e.g. 3 classes" shape over 64 worker cores:
+    /// 2×16 (big GEMMs) + 4×4 (medium) + 16×1 (small element-wise).
+    pub fn paper_default() -> HeterogeneousEngine {
+        HeterogeneousEngine {
+            classes: vec![(2, 16), (4, 4), (16, 1)],
+            work_conserving: true,
+        }
+    }
+
+    fn total_executors(&self) -> usize {
+        self.classes.iter().map(|&(e, _)| e).sum()
+    }
+
+    /// Executor index → team size.
+    fn teams(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.total_executors());
+        for &(e, t) in &self.classes {
+            out.extend(std::iter::repeat_n(t, e));
+        }
+        out
+    }
+}
+
+enum Ev {
+    Done { node: NodeId, exec: usize, bw_token: u64 },
+    DoneLw { node: NodeId },
+}
+
+impl Engine for HeterogeneousEngine {
+    fn name(&self) -> String {
+        let classes: Vec<String> =
+            self.classes.iter().map(|&(e, t)| format!("{e}x{t}")).collect();
+        format!("heterogeneous-{}", classes.join("+"))
+    }
+
+    fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult {
+        let cost = &env.cost;
+        let interference = env.interference();
+        let mut rng = env.rng();
+        let teams = self.teams();
+        let n_exec = teams.len();
+
+        // preferred class per node — §6: "according to how well they
+        // scale": the largest class team the op still uses with ≥50 %
+        // parallel efficiency; poorly-scaling ops get small teams.
+        let mut class_teams: Vec<usize> = self.classes.iter().map(|&(_, t)| t).collect();
+        class_teams.sort_unstable();
+        let preferred_team: Vec<usize> = graph
+            .nodes()
+            .iter()
+            .map(|n| {
+                class_teams
+                    .iter()
+                    .rev()
+                    .find(|&&t| cost.speedup(&n.kind, t) / t as f64 >= 0.5)
+                    .copied()
+                    .unwrap_or(class_teams[0])
+            })
+            .collect();
+        // per-node duration per team size (cached per distinct team)
+        let mut distinct: Vec<usize> = teams.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let dur_by_team: std::collections::BTreeMap<usize, Vec<f64>> = distinct
+            .iter()
+            .map(|&t| {
+                (t, graph.nodes().iter().map(|n| cost.duration_us(&n.kind, t)).collect())
+            })
+            .collect();
+        // levels from the preferred-class durations
+        let pref_durations: Vec<f64> = (0..graph.len())
+            .map(|v| dur_by_team[&preferred_team[v]][v])
+            .collect();
+        let level_values = levels(graph, &pref_durations);
+
+        let mut deps = DepTracker::new(graph);
+        let mut ready = ReadySet::new(Policy::CriticalPathFirst, level_values, env.seed);
+        let mut idle: Vec<bool> = vec![true; n_exec];
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut bw = BandwidthArbiter::new(cost.machine.mcdram_bw);
+        let mut records = Vec::with_capacity(graph.len());
+        let mut metrics = EngineMetrics {
+            executor_busy_us: vec![0.0; n_exec],
+            ..Default::default()
+        };
+        let mut sched_free = 0.0f64;
+        let mut lw_free = 0.0f64;
+        // ops that chose to wait for their class (non-work-conserving)
+        let mut parked: Vec<NodeId> = Vec::new();
+
+        macro_rules! dispatch {
+            ($now:expr) => {
+                // re-offer parked ops first
+                let mut offer: Vec<NodeId> = std::mem::take(&mut parked);
+                while let Some(node) = if !offer.is_empty() { offer.pop() } else { ready.pop() } {
+                    let kind = &graph.node(node).kind;
+                    if kind.is_tiny() {
+                        let start = lw_free.max($now);
+                        let dur = cost.cal.tiny_op_us * interference.noise(&mut rng);
+                        lw_free = start + dur;
+                        metrics.lightweight_ops += 1;
+                        records.push(OpRecord {
+                            node,
+                            executor: LIGHTWEIGHT_EXECUTOR,
+                            start_us: start,
+                            end_us: start + dur,
+                        });
+                        q.schedule(start + dur, Ev::DoneLw { node });
+                        continue;
+                    }
+                    // preferred-class idle executor, else any idle
+                    let want = preferred_team[node as usize];
+                    let slot = (0..n_exec)
+                        .find(|&e| idle[e] && teams[e] == want)
+                        .or_else(|| {
+                            if self.work_conserving {
+                                // nearest-team idle executor — "preferably
+                                // assign", not "strictly assign"
+                                (0..n_exec).filter(|&e| idle[e]).min_by_key(|&e| {
+                                    (teams[e] as i64 - want as i64).unsigned_abs()
+                                })
+                            } else {
+                                None
+                            }
+                        });
+                    let Some(e) = slot else {
+                        if self.work_conserving {
+                            // no executor at all: push back and stop
+                            ready.push(node);
+                        } else {
+                            parked.push(node);
+                            continue; // maybe another ready op fits a free class
+                        }
+                        break;
+                    };
+                    idle[e] = false;
+                    sched_free = sched_free.max($now) + interference.graphi_dispatch_us();
+                    metrics.dispatches += 1;
+                    let start = sched_free;
+                    let base = dur_by_team[&teams[e]][node as usize];
+                    let mut dur = base * interference.noise(&mut rng);
+                    let (stretch, token) = bw.admit(kind.bytes() / (base * 1e-6).max(1e-12));
+                    dur *= stretch;
+                    metrics.executor_busy_us[e] += dur;
+                    records.push(OpRecord { node, executor: e as u32, start_us: start, end_us: start + dur });
+                    q.schedule(start + dur, Ev::Done { node, exec: e, bw_token: token });
+                }
+                parked.extend(offer);
+            };
+        }
+
+        for s in deps.sources() {
+            ready.push(s);
+        }
+        dispatch!(0.0);
+        let mut makespan = 0.0f64;
+        while let Some((t, ev)) = q.pop() {
+            makespan = makespan.max(t);
+            match ev {
+                Ev::Done { node, exec, bw_token } => {
+                    idle[exec] = true;
+                    bw.release(bw_token);
+                    deps.complete(graph, node, |n| ready.push(n));
+                }
+                Ev::DoneLw { node } => {
+                    deps.complete(graph, node, |n| ready.push(n));
+                }
+            }
+            dispatch!(t);
+        }
+        assert!(deps.is_done(), "heterogeneous engine drained with unexecuted ops");
+        let result = RunResult { makespan_us: makespan, records, metrics };
+        debug_assert!(result.validate(graph).is_ok(), "{:?}", result.validate(graph));
+        result
+    }
+}
+
+/// Total thread-seconds consumed (CPU time): Σ duration × team size.
+/// §6's claim is that heterogeneous classes reduce this while *not*
+/// improving makespan.
+pub fn cpu_time_us(result: &RunResult, teams: &[usize]) -> f64 {
+    result
+        .records
+        .iter()
+        .map(|r| {
+            if r.executor == u32::MAX {
+                r.duration_us() // light-weight executor: 1 thread
+            } else {
+                r.duration_us() * teams[r.executor as usize] as f64
+            }
+        })
+        .sum()
+}
+
+impl HeterogeneousEngine {
+    /// Public access to the executor→team mapping (for `cpu_time_us`).
+    pub fn team_map(&self) -> Vec<usize> {
+        self.teams()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::GraphiEngine;
+    use crate::models::{self, ModelKind, ModelSize};
+
+    #[test]
+    fn produces_valid_schedule() {
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let engine = HeterogeneousEngine::paper_default();
+        let r = engine.run(&g, &env);
+        r.validate(&g).unwrap();
+        assert_eq!(r.records.len(), g.len());
+    }
+
+    #[test]
+    fn paper_finding_cpu_time_down_makespan_not_better() {
+        // §6: heterogeneous classes reduce total CPU time but do not
+        // improve the makespan vs symmetric executors on LSTM.
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let hetero = HeterogeneousEngine::paper_default();
+        let hr = hetero.run(&g, &env);
+        // symmetric fleet with comparable core count (2·16+4·4+16·1 = 64)
+        let symmetric = GraphiEngine::new(8, 8);
+        let sr = symmetric.run(&g, &env);
+        let hetero_cpu = cpu_time_us(&hr, &hetero.team_map());
+        let sym_cpu = cpu_time_us(&sr, &vec![8; 8]);
+        assert!(
+            hetero_cpu < sym_cpu,
+            "hetero CPU time {hetero_cpu:.0} should beat symmetric {sym_cpu:.0}"
+        );
+        assert!(
+            hr.makespan_us > sr.makespan_us * 0.95,
+            "makespan must NOT meaningfully improve: hetero {} vs symmetric {}",
+            hr.makespan_us,
+            sr.makespan_us
+        );
+    }
+
+    #[test]
+    fn non_work_conserving_is_worse() {
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let wc = HeterogeneousEngine::paper_default().run(&g, &env).makespan_us;
+        let strict = HeterogeneousEngine { work_conserving: false, ..HeterogeneousEngine::paper_default() }
+            .run(&g, &env)
+            .makespan_us;
+        assert!(strict >= wc, "strict classes {strict} vs work-conserving {wc}");
+    }
+
+    #[test]
+    fn team_map_shape() {
+        let e = HeterogeneousEngine::paper_default();
+        let teams = e.team_map();
+        assert_eq!(teams.len(), 22);
+        assert_eq!(teams[0], 16);
+        assert_eq!(teams[21], 1);
+    }
+}

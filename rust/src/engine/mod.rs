@@ -1,0 +1,150 @@
+//! The Graphi execution engine and its baselines (§4–§5 of the paper).
+//!
+//! Components:
+//!
+//! * [`ring`]      — the lock-free SPSC ring buffer backing per-executor
+//!   operation buffers (§5.2, MuQSS-inspired)
+//! * [`ready`]     — dependency tracking + the ready-operation set under a
+//!   pluggable ordering [`policies::Policy`]
+//! * [`scheduler`] — the centralized scheduler's decision core: idle-executor
+//!   bitmap (bit-scan), level max-heap, per-executor push
+//! * [`profiler`]  — §4.2: symmetric-config search + per-op duration
+//!   estimation over the first iterations
+//! * engines (all implement [`Engine`]):
+//!   - [`graphi`]          — the paper's system (centralized CP-first)
+//!   - [`sequential`]      — one executor, topological order
+//!   - [`naive`]           — TF/MXNet-style shared global ready queue
+//!   - [`tensorflow_like`] — adds unpinned threads, oversubscribed pools,
+//!     Eigen-chunked element-wise ops, MKL conv (the Fig 5 baseline)
+//! * [`trace`]     — per-op execution records, Chrome trace export,
+//!   wavefront analysis (§7.4's cuDNN-diagonal observation)
+//!
+//! Engines execute on the discrete-event substrate in [`crate::sim`];
+//! the threaded (real-parallelism, PJRT-backed) engine lives in
+//! [`crate::runtime::threaded`].
+
+pub mod dynamic;
+pub mod graphi;
+pub mod heterogeneous;
+pub mod naive;
+pub mod policies;
+pub mod profiler;
+pub mod ready;
+pub mod ring;
+pub mod scheduler;
+pub mod sequential;
+pub mod tensorflow_like;
+pub mod trace;
+
+pub use dynamic::DynamicFleetEngine;
+pub use graphi::GraphiEngine;
+pub use heterogeneous::HeterogeneousEngine;
+pub use naive::NaiveEngine;
+pub use policies::Policy;
+pub use profiler::{ProfileReport, Profiler};
+pub use sequential::SequentialEngine;
+pub use tensorflow_like::TensorFlowLikeEngine;
+pub use trace::{OpRecord, Trace};
+
+use crate::cost::{Calibration, CostModel, Interference};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Shared environment for a simulated run.
+#[derive(Debug, Clone)]
+pub struct SimEnv {
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl SimEnv {
+    pub fn knl(seed: u64) -> SimEnv {
+        SimEnv { cost: CostModel::knl(), seed }
+    }
+
+    /// Noise-free environment for deterministic tests.
+    pub fn knl_deterministic() -> SimEnv {
+        SimEnv { cost: CostModel::knl_deterministic(), seed: 0 }
+    }
+
+    pub fn interference(&self) -> Interference {
+        Interference::new(self.cost.cal.clone())
+    }
+
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed)
+    }
+
+    pub fn calibration(&self) -> &Calibration {
+        &self.cost.cal
+    }
+}
+
+/// Aggregate engine metrics for one graph execution.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    /// Number of scheduler dispatch decisions.
+    pub dispatches: u64,
+    /// Total time ops spent waiting ready-but-unscheduled, µs.
+    pub queue_wait_us: f64,
+    /// Total scheduler busy time, µs.
+    pub scheduler_busy_us: f64,
+    /// Total time spent in queue-contention overhead, µs.
+    pub contention_us: f64,
+    /// Per-executor busy time, µs.
+    pub executor_busy_us: Vec<f64>,
+    /// Ops routed to the light-weight executor.
+    pub lightweight_ops: u64,
+}
+
+impl EngineMetrics {
+    /// Mean executor utilization over the makespan.
+    pub fn utilization(&self, makespan_us: f64) -> f64 {
+        if self.executor_busy_us.is_empty() || makespan_us <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.executor_busy_us.iter().sum();
+        busy / (makespan_us * self.executor_busy_us.len() as f64)
+    }
+}
+
+/// Result of one graph execution.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub makespan_us: f64,
+    pub records: Vec<OpRecord>,
+    pub metrics: EngineMetrics,
+}
+
+impl RunResult {
+    /// Self-check: records must respect graph dependencies and not overlap
+    /// per executor. Engines call this in debug builds; tests call it
+    /// directly.
+    pub fn validate(&self, graph: &Graph) -> Result<(), String> {
+        trace::validate_records(graph, &self.records, self.makespan_us)
+    }
+}
+
+/// A computation-graph execution engine.
+pub trait Engine {
+    /// Descriptive name for reports.
+    fn name(&self) -> String;
+
+    /// Execute the graph once, returning the simulated result.
+    fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_utilization() {
+        let m = EngineMetrics {
+            executor_busy_us: vec![50.0, 100.0],
+            ..Default::default()
+        };
+        assert!((m.utilization(100.0) - 0.75).abs() < 1e-12);
+        assert_eq!(EngineMetrics::default().utilization(10.0), 0.0);
+    }
+}

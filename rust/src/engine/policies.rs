@@ -1,0 +1,68 @@
+//! Ready-operation ordering policies.
+//!
+//! §4.3: "the centralized scheduler … gives us flexibility to use different
+//! advanced scheduler polices. Current scheduling strategy is critical-path
+//! first, but the architecture allows us to easily implement other
+//! strategies." The ablation bench compares these.
+
+/// How the scheduler orders ready operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's strategy: highest level value (longest remaining
+    /// critical path) first.
+    CriticalPathFirst,
+    /// FIFO by readiness time — what the naive shared-queue engines do.
+    Fifo,
+    /// LIFO (depth-first-ish) — included to show ordering matters.
+    Lifo,
+    /// Uniformly random among ready ops.
+    Random,
+    /// Smallest level first (adversarial; worst case for the chain bound).
+    AntiCritical,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::CriticalPathFirst => "cp-first",
+            Policy::Fifo => "fifo",
+            Policy::Lifo => "lifo",
+            Policy::Random => "random",
+            Policy::AntiCritical => "anti-critical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "cp-first" | "cp_first" | "critical-path" | "cpf" => Some(Policy::CriticalPathFirst),
+            "fifo" => Some(Policy::Fifo),
+            "lifo" => Some(Policy::Lifo),
+            "random" => Some(Policy::Random),
+            "anti-critical" | "anti" => Some(Policy::AntiCritical),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::CriticalPathFirst,
+            Policy::Fifo,
+            Policy::Lifo,
+            Policy::Random,
+            Policy::AntiCritical,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("bogus"), None);
+    }
+}

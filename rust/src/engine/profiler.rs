@@ -1,0 +1,165 @@
+//! The Graphi profiler (§4.2).
+//!
+//! Two jobs:
+//!
+//! 1. **Configuration search** — enumerate the symmetric
+//!    `(executors × threads)` combinations (plus model-specific extras like
+//!    PathNet's 6×10), run a few iterations of each, keep the one with
+//!    minimal makespan.
+//! 2. **Duration estimation** — record per-op start/end over the first few
+//!    iterations and average, feeding the critical-path level values used
+//!    by the scheduler. Profiling noise is part of the simulation, so
+//!    averaging genuinely reduces variance here, like in the real system.
+
+use crate::graph::Graph;
+use crate::sim::topology::symmetric_configs;
+use crate::util::stats::Welford;
+
+use super::graphi::GraphiEngine;
+use super::{Engine, RunResult, SimEnv};
+
+/// Profiler configuration.
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    /// Iterations per candidate configuration.
+    pub iterations: usize,
+    /// Worker cores to split among executors (machine cores − 2 reserved).
+    pub worker_cores: usize,
+    /// Extra model-specific configurations to try (e.g. `(6,10)`).
+    pub extra_configs: Vec<(usize, usize)>,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Profiler { iterations: 3, worker_cores: 64, extra_configs: Vec::new() }
+    }
+}
+
+/// One candidate's measurements.
+#[derive(Debug, Clone)]
+pub struct ConfigMeasurement {
+    pub executors: usize,
+    pub threads_per: usize,
+    pub mean_makespan_us: f64,
+    pub std_us: f64,
+}
+
+/// Search result.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub measurements: Vec<ConfigMeasurement>,
+    pub best: (usize, usize),
+    /// Averaged per-op durations at the best configuration, µs — the
+    /// estimates the scheduler's level values are computed from.
+    pub durations_us: Vec<f64>,
+}
+
+impl Profiler {
+    /// Enumerate candidates: powers of two (§4.2's example) plus extras.
+    pub fn candidates(&self) -> Vec<(usize, usize)> {
+        let mut configs = symmetric_configs(self.worker_cores);
+        for &extra in &self.extra_configs {
+            if !configs.contains(&extra) {
+                configs.push(extra);
+            }
+        }
+        configs
+    }
+
+    /// Run the search.
+    pub fn profile(&self, graph: &Graph, env: &SimEnv) -> ProfileReport {
+        let mut measurements = Vec::new();
+        for (executors, threads_per) in self.candidates() {
+            let mut acc = Welford::new();
+            for iter in 0..self.iterations {
+                let env_i = SimEnv { cost: env.cost.clone(), seed: env.seed ^ (iter as u64) << 8 };
+                let result = GraphiEngine::new(executors, threads_per).run(graph, &env_i);
+                acc.push(result.makespan_us);
+            }
+            measurements.push(ConfigMeasurement {
+                executors,
+                threads_per,
+                mean_makespan_us: acc.mean(),
+                std_us: acc.std(),
+            });
+        }
+        let best = measurements
+            .iter()
+            .min_by(|a, b| a.mean_makespan_us.total_cmp(&b.mean_makespan_us))
+            .expect("at least one candidate");
+        let best_pair = (best.executors, best.threads_per);
+        let durations_us = self.estimate_durations(graph, env, best_pair.1);
+        ProfileReport { measurements, best: best_pair, durations_us }
+    }
+
+    /// Average measured per-op durations over `iterations` runs at the
+    /// chosen team size (§5.2: "averaged over multiple iterations to
+    /// reduce variance").
+    pub fn estimate_durations(&self, graph: &Graph, env: &SimEnv, threads_per: usize) -> Vec<f64> {
+        let executors = (self.worker_cores / threads_per).max(1);
+        let mut acc: Vec<Welford> = vec![Welford::new(); graph.len()];
+        for iter in 0..self.iterations {
+            let env_i = SimEnv { cost: env.cost.clone(), seed: env.seed ^ 0xABCD ^ (iter as u64) << 16 };
+            let result: RunResult = GraphiEngine::new(executors, threads_per).run(graph, &env_i);
+            for r in &result.records {
+                acc[r.node as usize].push(r.duration_us());
+            }
+        }
+        acc.into_iter().map(|w| w.mean()).collect()
+    }
+
+    /// Render the search as a table.
+    pub fn render(report: &ProfileReport) -> String {
+        let mut t = crate::util::table::Table::new(&["config", "mean makespan", "std"]);
+        for m in &report.measurements {
+            let marker = if (m.executors, m.threads_per) == report.best { " *" } else { "" };
+            t.row(&[
+                format!("{}x{}{}", m.executors, m.threads_per, marker),
+                crate::util::fmt_us(m.mean_makespan_us),
+                crate::util::fmt_us(m.std_us),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, ModelKind, ModelSize};
+
+    #[test]
+    fn candidates_include_extras() {
+        let p = Profiler { extra_configs: vec![(6, 10)], ..Default::default() };
+        let c = p.candidates();
+        assert!(c.contains(&(1, 64)));
+        assert!(c.contains(&(6, 10)));
+    }
+
+    #[test]
+    fn profile_picks_parallel_config_for_lstm() {
+        // §7.3: LSTM's best configuration is parallel (8–16 executors),
+        // never the single-executor one.
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let p = Profiler { iterations: 1, ..Default::default() };
+        let report = p.profile(&g, &SimEnv::knl(1));
+        assert!(report.best.0 > 1, "best config {:?} must be parallel", report.best);
+        assert_eq!(report.durations_us.len(), g.len());
+    }
+
+    #[test]
+    fn durations_are_positive() {
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let p = Profiler { iterations: 2, ..Default::default() };
+        let d = p.estimate_durations(&g, &SimEnv::knl(2), 8);
+        assert!(d.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn render_marks_best() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let p = Profiler { iterations: 1, ..Default::default() };
+        let report = p.profile(&g, &SimEnv::knl(3));
+        assert!(Profiler::render(&report).contains('*'));
+    }
+}

@@ -1,0 +1,265 @@
+//! Dependency tracking and the ready-operation set.
+//!
+//! `DepTracker` owns the per-node remaining-dependency counts (the
+//! "triggering" in Algorithm 2); `ReadySet` owns the ordering of ready ops
+//! under a [`Policy`] (the max binary heap of §5.2 for critical-path-first).
+//! Both are shared by every engine — simulated and threaded — so the data
+//! structures being benchmarked are the ones actually scheduling.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::graph::{Graph, NodeId};
+use crate::util::rng::Rng;
+
+use super::policies::Policy;
+
+/// Remaining-dependency counters.
+#[derive(Debug, Clone)]
+pub struct DepTracker {
+    indegree: Vec<u32>,
+    remaining: usize,
+}
+
+impl DepTracker {
+    pub fn new(graph: &Graph) -> DepTracker {
+        let indegree: Vec<u32> = (0..graph.len() as NodeId)
+            .map(|v| graph.in_degree(v) as u32)
+            .collect();
+        DepTracker { indegree, remaining: graph.len() }
+    }
+
+    /// Nodes with no dependencies (call once at start).
+    pub fn sources(&self) -> Vec<NodeId> {
+        self.indegree
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i as NodeId)
+            .collect()
+    }
+
+    /// Mark `node` executed; invoke `on_ready` for each newly-triggered op.
+    pub fn complete(&mut self, graph: &Graph, node: NodeId, mut on_ready: impl FnMut(NodeId)) {
+        debug_assert!(self.remaining > 0);
+        self.remaining -= 1;
+        for &s in graph.succs(node) {
+            let d = &mut self.indegree[s as usize];
+            debug_assert!(*d > 0, "double trigger of node {s}");
+            *d -= 1;
+            if *d == 0 {
+                on_ready(s);
+            }
+        }
+    }
+
+    /// Ops not yet executed.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[derive(Debug)]
+struct HeapEntry {
+    priority: f64,
+    seq: u64,
+    node: NodeId,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap on priority; FIFO (smaller seq first) on ties
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The set of ready-to-run operations, ordered by policy.
+#[derive(Debug)]
+pub struct ReadySet {
+    policy: Policy,
+    levels: Vec<f64>,
+    heap: BinaryHeap<HeapEntry>,
+    queue: VecDeque<NodeId>,
+    stack: Vec<NodeId>,
+    rng: Rng,
+    seq: u64,
+    len: usize,
+}
+
+impl ReadySet {
+    /// `levels` supplies priorities for the level-based policies; pass the
+    /// output of [`crate::graph::levels`] (or unit estimates).
+    pub fn new(policy: Policy, levels: Vec<f64>, seed: u64) -> ReadySet {
+        ReadySet {
+            policy,
+            levels,
+            heap: BinaryHeap::new(),
+            queue: VecDeque::new(),
+            stack: Vec::new(),
+            rng: Rng::new(seed),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, node: NodeId) {
+        self.len += 1;
+        match self.policy {
+            Policy::CriticalPathFirst => {
+                let priority = self.levels[node as usize];
+                self.heap.push(HeapEntry { priority, seq: self.seq, node });
+            }
+            Policy::AntiCritical => {
+                let priority = -self.levels[node as usize];
+                self.heap.push(HeapEntry { priority, seq: self.seq, node });
+            }
+            Policy::Fifo => self.queue.push_back(node),
+            Policy::Lifo => self.stack.push(node),
+            Policy::Random => self.stack.push(node),
+        }
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<NodeId> {
+        let out = match self.policy {
+            Policy::CriticalPathFirst | Policy::AntiCritical => self.heap.pop().map(|e| e.node),
+            Policy::Fifo => self.queue.pop_front(),
+            Policy::Lifo => self.stack.pop(),
+            Policy::Random => {
+                if self.stack.is_empty() {
+                    None
+                } else {
+                    let i = self.rng.range(0, self.stack.len());
+                    Some(self.stack.swap_remove(i))
+                }
+            }
+        };
+        if out.is_some() {
+            self.len -= 1;
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn dep_tracker_triggers_in_order() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        let c = b.add("c", OpKind::Scalar);
+        let d = b.add_after("d", OpKind::Scalar, &[a, c]);
+        let g = b.build().unwrap();
+        let mut t = DepTracker::new(&g);
+        assert_eq!(t.sources(), vec![a, c]);
+        let mut fired = Vec::new();
+        t.complete(&g, a, |n| fired.push(n));
+        assert!(fired.is_empty(), "d still blocked on c");
+        t.complete(&g, c, |n| fired.push(n));
+        assert_eq!(fired, vec![d]);
+        t.complete(&g, d, |_| {});
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn cp_first_pops_highest_level() {
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![5.0, 50.0, 10.0], 0);
+        r.push(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.pop(), Some(1));
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn cp_first_ties_are_fifo() {
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![5.0, 5.0, 5.0], 0);
+        r.push(2);
+        r.push(0);
+        r.push(1);
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), Some(1));
+    }
+
+    #[test]
+    fn anti_critical_is_reverse() {
+        let mut r = ReadySet::new(Policy::AntiCritical, vec![5.0, 50.0, 10.0], 0);
+        r.push(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(1));
+    }
+
+    #[test]
+    fn fifo_and_lifo() {
+        let mut f = ReadySet::new(Policy::Fifo, vec![0.0; 3], 0);
+        f.push(0);
+        f.push(1);
+        assert_eq!(f.pop(), Some(0));
+        let mut l = ReadySet::new(Policy::Lifo, vec![0.0; 3], 0);
+        l.push(0);
+        l.push(1);
+        assert_eq!(l.pop(), Some(1));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut r = ReadySet::new(Policy::Random, vec![0.0; 10], seed);
+            for i in 0..10 {
+                r.push(i);
+            }
+            let mut out = Vec::new();
+            while let Some(n) = r.pop() {
+                out.push(n);
+            }
+            out
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn len_tracking() {
+        let mut r = ReadySet::new(Policy::Fifo, vec![0.0; 4], 0);
+        assert!(r.is_empty());
+        r.push(0);
+        r.push(1);
+        assert_eq!(r.len(), 2);
+        r.pop();
+        assert_eq!(r.len(), 1);
+    }
+}

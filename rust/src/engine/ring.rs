@@ -1,0 +1,199 @@
+//! Lock-free single-producer/single-consumer ring buffer.
+//!
+//! §5.2: "The operation buffer is implemented with a lock free ring buffer
+//! for high efficiency. This implementation is inspired by the per-thread
+//! run queue of MuQSS." In Graphi the scheduler is the only producer and
+//! one executor the only consumer, so an SPSC ring with acquire/release
+//! atomics suffices — no CAS loops, no sharing between executors.
+//!
+//! This is *real* concurrent code (used by the threaded engine in
+//! [`crate::runtime::threaded`]); the simulated engines use it too, via
+//! the same API, so the data structure under test is the one that runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
+
+/// Fixed-capacity SPSC ring buffer.
+///
+/// Capacity is rounded up to a power of two. One slot is sacrificed to
+/// distinguish full from empty.
+pub struct SpscRing<T> {
+    buf: Box<[UnsafeCell<Option<T>>]>,
+    mask: usize,
+    /// Next slot to write (owned by the producer).
+    head: AtomicUsize,
+    /// Next slot to read (owned by the consumer).
+    tail: AtomicUsize,
+}
+
+// SAFETY: head/tail partitioning guarantees producer and consumer never
+// touch the same slot concurrently; Option<T> slots are only accessed by
+// the side that owns them at that index.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// Create a ring holding at least `capacity` items.
+    pub fn new(capacity: usize) -> SpscRing<T> {
+        let cap = (capacity + 1).next_power_of_two();
+        let buf: Vec<UnsafeCell<Option<T>>> = (0..cap).map(|_| UnsafeCell::new(None)).collect();
+        SpscRing {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Producer side: push an item; returns `Err(item)` if full.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let next = (head + 1) & self.mask;
+        if next == self.tail.load(Ordering::Acquire) {
+            return Err(item); // full
+        }
+        // SAFETY: slot `head` is owned by the producer until head is
+        // published below.
+        unsafe {
+            *self.buf[head].get() = Some(item);
+        }
+        self.head.store(next, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: pop the oldest item, if any.
+    pub fn pop(&self) -> Option<T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        if tail == self.head.load(Ordering::Acquire) {
+            return None; // empty
+        }
+        // SAFETY: slot `tail` is owned by the consumer until tail is
+        // published below.
+        let item = unsafe { (*self.buf[tail].get()).take() };
+        self.tail.store((tail + 1) & self.mask, Ordering::Release);
+        item
+    }
+
+    /// Number of buffered items (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        (head.wrapping_sub(tail)) & self.mask
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Usable capacity.
+    pub fn capacity(&self) -> usize {
+        self.mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let r = SpscRing::new(4);
+        r.push(1).unwrap();
+        r.push(2).unwrap();
+        r.push(3).unwrap();
+        assert_eq!(r.pop(), Some(1));
+        assert_eq!(r.pop(), Some(2));
+        r.push(4).unwrap();
+        assert_eq!(r.pop(), Some(3));
+        assert_eq!(r.pop(), Some(4));
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let r = SpscRing::new(1); // rounds to 2 slots, 1 usable
+        assert_eq!(r.capacity(), 1);
+        r.push("a").unwrap();
+        assert_eq!(r.push("b"), Err("b"));
+        assert_eq!(r.pop(), Some("a"));
+        r.push("b").unwrap();
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let r = SpscRing::new(3);
+        for i in 0..100 {
+            r.push(i).unwrap();
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn len_tracks_occupancy() {
+        let r = SpscRing::new(8);
+        assert_eq!(r.len(), 0);
+        for i in 0..5 {
+            r.push(i).unwrap();
+        }
+        assert_eq!(r.len(), 5);
+        r.pop();
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn cross_thread_spsc_stress() {
+        // one producer thread, one consumer thread, every item accounted
+        // for exactly once and in order
+        let r = Arc::new(SpscRing::<u64>::new(64));
+        let n = 100_000u64;
+        let producer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    let mut item = i;
+                    loop {
+                        match r.push(item) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                item = back;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                }
+            })
+        };
+        let consumer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let mut expected = 0u64;
+                while expected < n {
+                    if let Some(v) = r.pop() {
+                        assert_eq!(v, expected, "out-of-order item");
+                        expected += 1;
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+        producer.join().unwrap();
+        consumer.join().unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn drops_not_leaked() {
+        // items left in the ring are dropped with it
+        use std::rc::Rc;
+        let flag = Rc::new(());
+        let r = SpscRing::new(4);
+        r.push(Rc::clone(&flag)).unwrap();
+        r.push(Rc::clone(&flag)).unwrap();
+        assert_eq!(Rc::strong_count(&flag), 3);
+        drop(r);
+        assert_eq!(Rc::strong_count(&flag), 1);
+    }
+}

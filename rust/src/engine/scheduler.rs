@@ -1,0 +1,129 @@
+//! The centralized scheduler's decision core (§4.3, §5.2).
+//!
+//! Two pieces the paper calls out explicitly:
+//!
+//! * the **idle-executor bitmap** — "the executor states are represented
+//!   as a bit map … We use bit-scan intrinsics to find the number of
+//!   trailing zeros, which corresponds to the first executor now available"
+//!   (`u128::trailing_zeros` compiles to `tzcnt`);
+//! * the **dispatch loop** — pop the max-level ready op, find the first
+//!   idle executor, push into that executor's private buffer.
+//!
+//! The loop itself lives in each engine (simulated vs threaded), built on
+//! these primitives plus [`super::ready`].
+
+/// Executor idle/busy states as a bitmap (1 = idle).
+#[derive(Debug, Clone)]
+pub struct IdleBitmap {
+    bits: u128,
+    n: usize,
+}
+
+impl IdleBitmap {
+    /// All `n` executors idle. Supports up to 128 executors (the paper's
+    /// largest fleet is 64).
+    pub fn new(n: usize) -> IdleBitmap {
+        assert!(n <= 128, "at most 128 executors supported, got {n}");
+        let bits = if n == 128 { u128::MAX } else { (1u128 << n) - 1 };
+        IdleBitmap { bits, n }
+    }
+
+    /// First idle executor (lowest index), via bit-scan.
+    #[inline]
+    pub fn first_idle(&self) -> Option<usize> {
+        if self.bits == 0 {
+            None
+        } else {
+            Some(self.bits.trailing_zeros() as usize)
+        }
+    }
+
+    #[inline]
+    pub fn set_busy(&mut self, e: usize) {
+        debug_assert!(e < self.n);
+        debug_assert!(self.is_idle(e), "executor {e} already busy");
+        self.bits &= !(1u128 << e);
+    }
+
+    #[inline]
+    pub fn set_idle(&mut self, e: usize) {
+        debug_assert!(e < self.n);
+        debug_assert!(!self.is_idle(e), "executor {e} already idle");
+        self.bits |= 1u128 << e;
+    }
+
+    #[inline]
+    pub fn is_idle(&self, e: usize) -> bool {
+        self.bits & (1u128 << e) != 0
+    }
+
+    #[inline]
+    pub fn any_idle(&self) -> bool {
+        self.bits != 0
+    }
+
+    pub fn count_idle(&self) -> usize {
+        self.bits.count_ones() as usize
+    }
+
+    pub fn executors(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_all_idle() {
+        let b = IdleBitmap::new(8);
+        assert_eq!(b.count_idle(), 8);
+        assert_eq!(b.first_idle(), Some(0));
+    }
+
+    #[test]
+    fn busy_idle_roundtrip() {
+        let mut b = IdleBitmap::new(4);
+        b.set_busy(0);
+        b.set_busy(1);
+        assert_eq!(b.first_idle(), Some(2));
+        assert!(!b.is_idle(0));
+        b.set_idle(0);
+        assert_eq!(b.first_idle(), Some(0));
+        assert_eq!(b.count_idle(), 3);
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut b = IdleBitmap::new(2);
+        b.set_busy(0);
+        b.set_busy(1);
+        assert_eq!(b.first_idle(), None);
+        assert!(!b.any_idle());
+    }
+
+    #[test]
+    fn supports_64_executors() {
+        // the paper's largest fleet: 64 executors × 1 thread
+        let mut b = IdleBitmap::new(64);
+        for e in 0..63 {
+            b.set_busy(e);
+        }
+        assert_eq!(b.first_idle(), Some(63));
+    }
+
+    #[test]
+    fn supports_128() {
+        let mut b = IdleBitmap::new(128);
+        assert_eq!(b.count_idle(), 128);
+        b.set_busy(127);
+        assert_eq!(b.count_idle(), 127);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 128")]
+    fn too_many_rejected() {
+        IdleBitmap::new(129);
+    }
+}

@@ -1,0 +1,83 @@
+//! Sequential baseline: one executor runs the graph in topological order
+//! with the full worker-core team (§2's "conventional way").
+//!
+//! This is the `S64` column of Fig 6 — the engine most frameworks default
+//! to, optimal only when ops are large enough to use the whole chip.
+
+use crate::graph::Graph;
+
+use super::trace::OpRecord;
+use super::{Engine, EngineMetrics, RunResult, SimEnv};
+
+/// Sequential interpreter with a configurable team size.
+#[derive(Debug, Clone)]
+pub struct SequentialEngine {
+    /// Threads the single executor uses (the paper's S64 uses all 64
+    /// worker cores).
+    pub threads: usize,
+}
+
+impl SequentialEngine {
+    pub fn new(threads: usize) -> SequentialEngine {
+        SequentialEngine { threads }
+    }
+}
+
+impl Engine for SequentialEngine {
+    fn name(&self) -> String {
+        format!("sequential-{}t", self.threads)
+    }
+
+    fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult {
+        let interference = env.interference();
+        let mut rng = env.rng();
+        let mut now = 0.0f64;
+        let mut records = Vec::with_capacity(graph.len());
+        let mut busy = 0.0f64;
+        for &node in &graph.topo_order() {
+            let kind = &graph.node(node).kind;
+            let dur = env.cost.duration_us(kind, self.threads) * interference.noise(&mut rng);
+            records.push(OpRecord { node, executor: 0, start_us: now, end_us: now + dur });
+            now += dur;
+            busy += dur;
+        }
+        let result = RunResult {
+            makespan_us: now,
+            records,
+            metrics: EngineMetrics {
+                dispatches: graph.len() as u64,
+                executor_busy_us: vec![busy],
+                ..Default::default()
+            },
+        };
+        debug_assert!(result.validate(graph).is_ok());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build as mlp, MlpConfig};
+
+    #[test]
+    fn sequential_is_valid_and_fully_utilized() {
+        let g = mlp(&MlpConfig::default());
+        let r = SequentialEngine::new(64).run(&g, &SimEnv::knl_deterministic());
+        r.validate(&g).unwrap();
+        assert!((r.metrics.utilization(r.makespan_us) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_equals_sum_of_durations() {
+        let g = mlp(&MlpConfig::default());
+        let env = SimEnv::knl_deterministic();
+        let r = SequentialEngine::new(64).run(&g, &env);
+        let expected: f64 = g
+            .nodes()
+            .iter()
+            .map(|n| env.cost.duration_us(&n.kind, 64))
+            .sum();
+        assert!((r.makespan_us - expected).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,207 @@
+//! TensorFlow-1.2-style baseline for the Fig 5 comparison.
+//!
+//! Models the mechanisms §3.1/§7.2 blame for TensorFlow's gap on the
+//! manycore CPU:
+//!
+//! * **no thread placement control** — OS-managed threads, collisions and
+//!   migration stalls;
+//! * **oversubscription** — Eigen's own thread pool coexists with the MKL
+//!   OpenMP pool, so software threads ≈ inter-op executors × team + a
+//!   whole extra core-count worth of Eigen workers;
+//! * **Eigen element-wise chunking** — element-wise ops are split into
+//!   small chunks managed in a centralized job queue, adding per-chunk
+//!   overhead and queue contention (worst for medium sizes, §7.2);
+//! * **MKL convolutions** — slower than Graphi's LIBXSMM for the small
+//!   convs in PathNet (`duration_us_mkl`);
+//! * **naive shared ready queue** — same FIFO + contention as
+//!   [`super::naive`].
+
+use crate::cost::Interference;
+use crate::graph::op::OpKind;
+use crate::graph::{Graph, NodeId};
+use crate::sim::{BandwidthArbiter, EventQueue};
+use crate::util::rng::Rng;
+
+use super::policies::Policy;
+use super::ready::{DepTracker, ReadySet};
+use super::scheduler::IdleBitmap;
+use super::trace::OpRecord;
+use super::{Engine, EngineMetrics, RunResult, SimEnv};
+
+/// TensorFlow-like engine configuration.
+#[derive(Debug, Clone)]
+pub struct TensorFlowLikeEngine {
+    /// inter_op_parallelism_threads — concurrent op executors.
+    pub inter_op: usize,
+    /// intra_op team size per op.
+    pub intra_op: usize,
+}
+
+impl TensorFlowLikeEngine {
+    pub fn new(inter_op: usize, intra_op: usize) -> TensorFlowLikeEngine {
+        TensorFlowLikeEngine { inter_op, intra_op }
+    }
+
+    /// The best-effort tuned configuration the paper grants TensorFlow
+    /// ("results of the best parallelization settings for both"): a small
+    /// inter-op pool with MKL-sized teams.
+    pub fn tuned_for(graph_width: usize, cores: usize) -> TensorFlowLikeEngine {
+        let inter = graph_width.clamp(2, 8);
+        TensorFlowLikeEngine { inter_op: inter, intra_op: (cores / inter).max(1) }
+    }
+}
+
+enum Ev {
+    Done { node: NodeId, exec: u32, bw_token: u64 },
+}
+
+impl Engine for TensorFlowLikeEngine {
+    fn name(&self) -> String {
+        format!("tensorflow-like-{}x{}", self.inter_op, self.intra_op)
+    }
+
+    fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult {
+        let cost = &env.cost;
+        let interference = Interference::new(cost.cal.clone());
+        let mut rng: Rng = env.rng();
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut deps = DepTracker::new(graph);
+        let mut ready = ReadySet::new(Policy::Fifo, vec![0.0; graph.len()], env.seed);
+        let mut idle = IdleBitmap::new(self.inter_op);
+        let mut bw = BandwidthArbiter::new(cost.machine.mcdram_bw);
+        let mut records = Vec::with_capacity(graph.len());
+        let mut metrics = EngineMetrics {
+            executor_busy_us: vec![0.0; self.inter_op],
+            ..Default::default()
+        };
+        let mut ready_at = vec![0.0f64; graph.len()];
+
+        // oversubscription: MKL/OpenMP teams + the Eigen pool. The Eigen
+        // workers are only runnable while element-wise chunks are in
+        // flight, so they count at half weight.
+        let total_threads = self.inter_op * self.intra_op + cost.machine.cores / 2;
+        let cal = cost.cal.clone();
+        // serialized shared ready queue, as in `naive.rs`
+        let mut queue_free_us = 0.0f64;
+
+        macro_rules! dispatch {
+            ($now:expr) => {
+                while !ready.is_empty() && idle.any_idle() {
+                    let e = idle.first_idle().unwrap();
+                    let pollers = idle.count_idle();
+                    let dq = interference.shared_queue_dequeue_us(pollers)
+                        + interference.wake_latency_us();
+                    let dq_start = queue_free_us.max($now);
+                    queue_free_us = dq_start + dq;
+                    metrics.contention_us += queue_free_us - $now - cal.queue_base_us;
+                    metrics.dispatches += 1;
+                    idle.set_busy(e);
+                    let node = ready.pop().unwrap();
+                    let kind = &graph.node(node).kind;
+                    let start = queue_free_us;
+                    // MKL conv path (no LIBXSMM in stock TF 1.2)
+                    let mut dur = cost.duration_us_mkl(kind, self.intra_op)
+                        * interference.noise(&mut rng);
+                    // Eigen chunked element-wise execution through the
+                    // centralized job queue: chunks execute in waves of
+                    // `workers`; every wave pays one queue round-trip. For
+                    // small ops (few chunks) this is a fixed latency tax —
+                    // the §7.2 effect that hits LSTM hardest; for huge ops
+                    // it amortizes to a few percent.
+                    if let OpKind::Elementwise { n, .. } = kind {
+                        let chunks = n.div_ceil(cal.eigen_chunk_elems);
+                        let workers = self.intra_op.max(1) as u64;
+                        let waves = chunks.div_ceil(workers) as f64;
+                        let chunk_overhead = waves
+                            * (cal.eigen_chunk_overhead_us
+                                + interference.shared_queue_dequeue_us(self.intra_op.min(8)));
+                        metrics.contention_us += chunk_overhead;
+                        dur += chunk_overhead;
+                    }
+                    // OS placement: collisions + migrations
+                    dur *= interference.unpinned_factor(total_threads, cost.machine.cores, &mut rng);
+                    dur += interference.migration_stall_us(&mut rng);
+                    let (stretch, token) = bw.admit(cost.bw_demand(kind, self.intra_op));
+                    dur *= stretch;
+                    metrics.queue_wait_us += start - ready_at[node as usize];
+                    metrics.executor_busy_us[e] += dur;
+                    records.push(OpRecord { node, executor: e as u32, start_us: start, end_us: start + dur });
+                    q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token });
+                }
+            };
+        }
+
+        for s in deps.sources() {
+            ready.push(s);
+        }
+        dispatch!(0.0);
+        let mut makespan = 0.0f64;
+        while let Some((t, ev)) = q.pop() {
+            makespan = makespan.max(t);
+            match ev {
+                Ev::Done { node, exec, bw_token } => {
+                    idle.set_idle(exec as usize);
+                    bw.release(bw_token);
+                    deps.complete(graph, node, |n| {
+                        ready_at[n as usize] = t;
+                        ready.push(n);
+                    });
+                }
+            }
+            dispatch!(t);
+        }
+        assert!(deps.is_done());
+        let result = RunResult { makespan_us: makespan, records, metrics };
+        debug_assert!(result.validate(graph).is_ok());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::GraphiEngine;
+    use crate::models::{self, ModelKind, ModelSize};
+
+    #[test]
+    fn schedule_valid() {
+        let g = models::build(ModelKind::GoogleNet, ModelSize::Small);
+        let r = TensorFlowLikeEngine::new(4, 16).run(&g, &SimEnv::knl(3));
+        r.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn fig5_graphi_beats_tensorflow_on_lstm() {
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let env = SimEnv::knl(11);
+        let tf = TensorFlowLikeEngine::tuned_for(12, 64).run(&g, &env).makespan_us;
+        let graphi = GraphiEngine::new(16, 4).run(&g, &env).makespan_us;
+        let speedup = tf / graphi;
+        assert!(
+            speedup > 1.5,
+            "Graphi speedup over TF {speedup:.2}; paper reports 2.1–9.5×"
+        );
+    }
+
+    #[test]
+    fn elementwise_chunking_hurts_lstm_more_than_googlenet() {
+        // §7.2: Eigen's chunked job queue hurts nets dense in small
+        // element-wise ops (LSTM) most. Compare the queue-contention share
+        // of total executor time (the conv-primitive gap is a separate
+        // effect, tested via duration_us_mkl).
+        let env = SimEnv::knl(5);
+        let lstm = models::build(ModelKind::Lstm, ModelSize::Small);
+        let goog = models::build(ModelKind::GoogleNet, ModelSize::Small);
+        let contention_share = |g: &crate::graph::Graph| {
+            let tf = TensorFlowLikeEngine::new(4, 16).run(g, &env);
+            let busy: f64 = tf.metrics.executor_busy_us.iter().sum();
+            tf.metrics.contention_us / busy
+        };
+        let lstm_share = contention_share(&lstm);
+        let goog_share = contention_share(&goog);
+        assert!(
+            lstm_share > goog_share,
+            "LSTM contention share {lstm_share:.4} should exceed GoogleNet's {goog_share:.4}"
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! Execution traces.
+//!
+//! §5.2: "we use the profiling results to visualize the execution process,
+//! i.e. placing the operations to their running executors' timelines. This
+//! has been immensely helpful in analysis and debugging." Traces also back
+//! the §7.4 observation that critical-path-first scheduling recovers the
+//! cuDNN-style diagonal wavefront on LSTM automatically.
+
+use crate::graph::{Graph, NodeId};
+use crate::util::json::Json;
+
+/// Executor id used for ops run on the light-weight executor (§5.2).
+pub const LIGHTWEIGHT_EXECUTOR: u32 = u32::MAX;
+
+/// One executed operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpRecord {
+    pub node: NodeId,
+    pub executor: u32,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+impl OpRecord {
+    pub fn duration_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// A full execution trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub records: Vec<OpRecord>,
+}
+
+impl Trace {
+    /// Export in Chrome `about:tracing` / Perfetto JSON format.
+    pub fn to_chrome_json(&self, graph: &Graph) -> String {
+        let mut events = Vec::with_capacity(self.records.len());
+        for r in &self.records {
+            let node = graph.node(r.node);
+            let mut e = Json::obj();
+            e.set("name", node.name.as_str())
+                .set("cat", node.kind.mnemonic())
+                .set("ph", "X")
+                .set("ts", r.start_us)
+                .set("dur", r.duration_us())
+                .set("pid", 1u64)
+                .set(
+                    "tid",
+                    if r.executor == LIGHTWEIGHT_EXECUTOR { 9999u64 } else { r.executor as u64 },
+                );
+            events.push(e);
+        }
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(events));
+        doc.set("displayTimeUnit", "ms");
+        doc.to_string_pretty()
+    }
+
+    /// Pearson correlation between a node's graph depth and its start
+    /// time. A near-1 value on a recurrent net's forward cells indicates
+    /// the diagonal-wavefront execution pattern §7.4 describes.
+    pub fn depth_time_correlation(&self, graph: &Graph) -> f64 {
+        let depths = crate::graph::stats::node_depths(graph);
+        let xs: Vec<f64> = self.records.iter().map(|r| depths[r.node as usize] as f64).collect();
+        let ys: Vec<f64> = self.records.iter().map(|r| r.start_us).collect();
+        pearson(&xs, &ys)
+    }
+
+    /// Render executor timelines as ASCII art (for terminal inspection).
+    pub fn render_ascii(&self, graph: &Graph, width: usize) -> String {
+        if self.records.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let makespan = self.records.iter().map(|r| r.end_us).fold(0.0, f64::max);
+        let mut executors: Vec<u32> = self.records.iter().map(|r| r.executor).collect();
+        executors.sort_unstable();
+        executors.dedup();
+        let mut out = String::new();
+        for &e in &executors {
+            let mut line = vec![b'.'; width];
+            for r in self.records.iter().filter(|r| r.executor == e) {
+                let a = ((r.start_us / makespan) * width as f64) as usize;
+                let b = (((r.end_us / makespan) * width as f64) as usize).min(width);
+                let c = graph.node(r.node).kind.mnemonic().as_bytes()[0];
+                for cell in line.iter_mut().take(b.max(a + 1).min(width)).skip(a.min(width - 1)) {
+                    *cell = c;
+                }
+            }
+            let label = if e == LIGHTWEIGHT_EXECUTOR { "lw".to_string() } else { format!("e{e:02}") };
+            out.push_str(&format!("{label} |{}|\n", String::from_utf8_lossy(&line)));
+        }
+        out.push_str(&format!("makespan: {}\n", crate::util::fmt_us(makespan)));
+        out
+    }
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}
+
+/// Validate a record set against the graph: every op exactly once,
+/// dependencies respected, per-executor serialization, makespan agrees.
+pub fn validate_records(graph: &Graph, records: &[OpRecord], makespan_us: f64) -> Result<(), String> {
+    if records.len() != graph.len() {
+        return Err(format!("{} records for {} nodes", records.len(), graph.len()));
+    }
+    let mut end_of = vec![f64::NAN; graph.len()];
+    let mut start_of = vec![f64::NAN; graph.len()];
+    for r in records {
+        if (r.node as usize) >= graph.len() {
+            return Err(format!("record for unknown node {}", r.node));
+        }
+        if !end_of[r.node as usize].is_nan() {
+            return Err(format!("node {} executed twice", r.node));
+        }
+        if r.end_us < r.start_us {
+            return Err(format!("node {} ends before it starts", r.node));
+        }
+        end_of[r.node as usize] = r.end_us;
+        start_of[r.node as usize] = r.start_us;
+    }
+    const EPS: f64 = 1e-6;
+    for v in 0..graph.len() as NodeId {
+        for &p in graph.preds(v) {
+            if end_of[p as usize] > start_of[v as usize] + EPS {
+                return Err(format!(
+                    "dependency violated: {} (ends {:.3}) must finish before {} (starts {:.3})",
+                    graph.node(p).name,
+                    end_of[p as usize],
+                    graph.node(v).name,
+                    start_of[v as usize],
+                ));
+            }
+        }
+    }
+    // per-executor non-overlap
+    let mut by_exec: std::collections::BTreeMap<u32, Vec<&OpRecord>> = Default::default();
+    for r in records {
+        by_exec.entry(r.executor).or_default().push(r);
+    }
+    for (e, mut rs) in by_exec {
+        rs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        for w in rs.windows(2) {
+            if w[0].end_us > w[1].start_us + EPS {
+                return Err(format!(
+                    "executor {e} overlap: node {} [{:.3},{:.3}] vs node {} [{:.3},{:.3}]",
+                    w[0].node, w[0].start_us, w[0].end_us, w[1].node, w[1].start_us, w[1].end_us
+                ));
+            }
+        }
+    }
+    let max_end = records.iter().map(|r| r.end_us).fold(0.0, f64::max);
+    if (max_end - makespan_us).abs() > 1e-3 {
+        return Err(format!("makespan {makespan_us} != last end {max_end}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+    use crate::graph::GraphBuilder;
+
+    fn chain() -> Graph {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        let c = b.add("c", OpKind::Scalar);
+        b.depend(a, c);
+        b.build().unwrap()
+    }
+
+    fn good_records() -> Vec<OpRecord> {
+        vec![
+            OpRecord { node: 0, executor: 0, start_us: 0.0, end_us: 1.0 },
+            OpRecord { node: 1, executor: 1, start_us: 1.0, end_us: 3.0 },
+        ]
+    }
+
+    #[test]
+    fn valid_records_pass() {
+        validate_records(&chain(), &good_records(), 3.0).unwrap();
+    }
+
+    #[test]
+    fn dependency_violation_caught() {
+        let mut rs = good_records();
+        rs[1].start_us = 0.5;
+        rs[1].end_us = 3.0;
+        assert!(validate_records(&chain(), &rs, 3.0).is_err());
+    }
+
+    #[test]
+    fn executor_overlap_caught() {
+        let g = {
+            let mut b = GraphBuilder::new();
+            b.add("a", OpKind::Scalar);
+            b.add("b", OpKind::Scalar);
+            b.build().unwrap()
+        };
+        let rs = vec![
+            OpRecord { node: 0, executor: 0, start_us: 0.0, end_us: 2.0 },
+            OpRecord { node: 1, executor: 0, start_us: 1.0, end_us: 3.0 },
+        ];
+        assert!(validate_records(&g, &rs, 3.0).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn missing_and_duplicate_records_caught() {
+        assert!(validate_records(&chain(), &good_records()[..1], 1.0).is_err());
+        let rs = vec![
+            OpRecord { node: 0, executor: 0, start_us: 0.0, end_us: 1.0 },
+            OpRecord { node: 0, executor: 1, start_us: 1.0, end_us: 2.0 },
+        ];
+        assert!(validate_records(&chain(), &rs, 2.0).is_err());
+    }
+
+    #[test]
+    fn wrong_makespan_caught() {
+        assert!(validate_records(&chain(), &good_records(), 99.0).is_err());
+    }
+
+    #[test]
+    fn chrome_json_parses() {
+        let g = chain();
+        let t = Trace { records: good_records() };
+        let text = t.to_chrome_json(&g);
+        let doc = crate::util::json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+    }
+
+    #[test]
+    fn correlation_of_ordered_chain_is_one() {
+        let g = chain();
+        let t = Trace { records: good_records() };
+        let c = t.depth_time_correlation(&g);
+        assert!((c - 1.0).abs() < 1e-9, "correlation {c}");
+    }
+
+    #[test]
+    fn ascii_render_mentions_executors() {
+        let g = chain();
+        let t = Trace { records: good_records() };
+        let art = t.render_ascii(&g, 40);
+        assert!(art.contains("e00"));
+        assert!(art.contains("e01"));
+        assert!(art.contains("makespan"));
+    }
+}

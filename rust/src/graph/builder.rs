@@ -1,0 +1,80 @@
+//! Mutable graph construction.
+//!
+//! The model compilers in [`crate::models`] use this API. A builder is
+//! append-only: `add` returns a [`NodeId`], `depend(src, dst)` records that
+//! `dst` consumes `src`'s output. `build()` validates (no self-edges, no
+//! cycles) and freezes into the CSR [`Graph`].
+
+use super::dag::{Graph, GraphError, Node, NodeId};
+use super::op::OpKind;
+
+/// Append-only builder for [`Graph`].
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    nodes: Vec<Node>,
+    edges: Vec<(NodeId, NodeId)>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    /// Add an operation; returns its id.
+    pub fn add(&mut self, name: impl Into<String>, kind: OpKind) -> NodeId {
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(Node { id, name: name.into(), kind });
+        id
+    }
+
+    /// Add an operation that depends on all of `deps`.
+    pub fn add_after(&mut self, name: impl Into<String>, kind: OpKind, deps: &[NodeId]) -> NodeId {
+        let id = self.add(name, kind);
+        for &d in deps {
+            self.depend(d, id);
+        }
+        id
+    }
+
+    /// Record that `dst` depends on `src`.
+    pub fn depend(&mut self, src: NodeId, dst: NodeId) {
+        self.edges.push((src, dst));
+    }
+
+    /// Current number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Validate and freeze.
+    pub fn build(self) -> Result<Graph, GraphError> {
+        Graph::freeze(self.nodes, self.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_after_wires_all_deps() {
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        let y = b.add("y", OpKind::Scalar);
+        let z = b.add_after("z", OpKind::Scalar, &[x, y]);
+        let g = b.build().unwrap();
+        assert_eq!(g.preds(z), &[x, y]);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut b = GraphBuilder::new();
+        assert_eq!(b.add("a", OpKind::Scalar), 0);
+        assert_eq!(b.add("b", OpKind::Scalar), 1);
+        assert_eq!(b.len(), 2);
+    }
+}

@@ -1,0 +1,344 @@
+//! The frozen computation graph.
+//!
+//! Built once by [`crate::graph::GraphBuilder`], then immutable. Adjacency
+//! is stored in CSR form (offset + flat neighbor arrays) in both
+//! directions, so the scheduler's hot loop — "which ops did completing `p`
+//! trigger?" — is a contiguous slice walk with no allocation.
+
+use super::op::OpKind;
+
+/// Node index into [`Graph::nodes`].
+pub type NodeId = u32;
+
+/// One operation in the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+}
+
+/// Graph construction / validation errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GraphError {
+    #[error("edge references unknown node {0}")]
+    UnknownNode(NodeId),
+    #[error("self-dependency on node {0}")]
+    SelfEdge(NodeId),
+    #[error("graph contains a cycle through node {0} ({1})")]
+    Cycle(NodeId, String),
+    #[error("graph is empty")]
+    Empty,
+}
+
+/// An immutable DAG of operations.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    // CSR successors
+    succ_offsets: Vec<u32>,
+    succ_list: Vec<NodeId>,
+    // CSR predecessors
+    pred_offsets: Vec<u32>,
+    pred_list: Vec<NodeId>,
+}
+
+impl Graph {
+    /// Validate and freeze. `edges` are `(src, dst)` dependency pairs
+    /// (dst depends on src); duplicates are coalesced.
+    pub(super) fn freeze(nodes: Vec<Node>, mut edges: Vec<(NodeId, NodeId)>) -> Result<Graph, GraphError> {
+        if nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let n = nodes.len() as u32;
+        for &(a, b) in &edges {
+            if a >= n {
+                return Err(GraphError::UnknownNode(a));
+            }
+            if b >= n {
+                return Err(GraphError::UnknownNode(b));
+            }
+            if a == b {
+                return Err(GraphError::SelfEdge(a));
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+
+        let mut succ_offsets = vec![0u32; n as usize + 1];
+        for &(a, _) in &edges {
+            succ_offsets[a as usize + 1] += 1;
+        }
+        for i in 0..n as usize {
+            succ_offsets[i + 1] += succ_offsets[i];
+        }
+        let mut succ_list = vec![0 as NodeId; edges.len()];
+        {
+            let mut cursor = succ_offsets.clone();
+            for &(a, b) in &edges {
+                succ_list[cursor[a as usize] as usize] = b;
+                cursor[a as usize] += 1;
+            }
+        }
+
+        let mut pred_offsets = vec![0u32; n as usize + 1];
+        for &(_, b) in &edges {
+            pred_offsets[b as usize + 1] += 1;
+        }
+        for i in 0..n as usize {
+            pred_offsets[i + 1] += pred_offsets[i];
+        }
+        let mut pred_list = vec![0 as NodeId; edges.len()];
+        {
+            let mut cursor = pred_offsets.clone();
+            for &(a, b) in &edges {
+                pred_list[cursor[b as usize] as usize] = a;
+                cursor[b as usize] += 1;
+            }
+        }
+
+        let g = Graph { nodes, succ_offsets, succ_list, pred_offsets, pred_list };
+        // cycle check via Kahn: if topo order is shorter than n, a cycle exists
+        let order = g.topo_order_internal();
+        if order.len() != g.len() {
+            let in_cycle = g.find_cycle_node(&order);
+            let name = g.nodes[in_cycle as usize].name.clone();
+            return Err(GraphError::Cycle(in_cycle, name));
+        }
+        Ok(g)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.succ_list.len()
+    }
+
+    /// Operations depending on `id` (out-edges).
+    pub fn succs(&self, id: NodeId) -> &[NodeId] {
+        let (a, b) = (
+            self.succ_offsets[id as usize] as usize,
+            self.succ_offsets[id as usize + 1] as usize,
+        );
+        &self.succ_list[a..b]
+    }
+
+    /// Operations `id` depends on (in-edges).
+    pub fn preds(&self, id: NodeId) -> &[NodeId] {
+        let (a, b) = (
+            self.pred_offsets[id as usize] as usize,
+            self.pred_offsets[id as usize + 1] as usize,
+        );
+        &self.pred_list[a..b]
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.preds(id).len()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succs(id).len()
+    }
+
+    /// Nodes with no dependencies.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.len() as NodeId).filter(|&v| self.in_degree(v) == 0).collect()
+    }
+
+    /// Nodes nothing depends on.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len() as NodeId).filter(|&v| self.out_degree(v) == 0).collect()
+    }
+
+    /// A topological order (Kahn's algorithm, deterministic: FIFO by id).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let order = self.topo_order_internal();
+        debug_assert_eq!(order.len(), self.len(), "graph validated acyclic at freeze");
+        order
+    }
+
+    fn topo_order_internal(&self) -> Vec<NodeId> {
+        let n = self.len();
+        let mut indegree: Vec<u32> = (0..n as NodeId).map(|v| self.in_degree(v) as u32).collect();
+        let mut queue: std::collections::VecDeque<NodeId> = (0..n as NodeId)
+            .filter(|&v| indegree[v as usize] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &s in self.succs(v) {
+                indegree[s as usize] -= 1;
+                if indegree[s as usize] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        order
+    }
+
+    fn find_cycle_node(&self, topo: &[NodeId]) -> NodeId {
+        let mut seen = vec![false; self.len()];
+        for &v in topo {
+            seen[v as usize] = true;
+        }
+        (0..self.len() as NodeId)
+            .find(|&v| !seen[v as usize])
+            .expect("cycle node must exist when topo order is incomplete")
+    }
+
+    /// Verify an execution order respects all dependencies. Used by tests
+    /// and by the engines' self-checks.
+    pub fn validate_order(&self, order: &[NodeId]) -> Result<(), String> {
+        if order.len() != self.len() {
+            return Err(format!("order has {} nodes, graph has {}", order.len(), self.len()));
+        }
+        let mut position = vec![usize::MAX; self.len()];
+        for (i, &v) in order.iter().enumerate() {
+            if (v as usize) >= self.len() {
+                return Err(format!("unknown node {v} in order"));
+            }
+            if position[v as usize] != usize::MAX {
+                return Err(format!("node {v} appears twice"));
+            }
+            position[v as usize] = i;
+        }
+        for v in 0..self.len() as NodeId {
+            for &p in self.preds(v) {
+                if position[p as usize] >= position[v as usize] {
+                    return Err(format!(
+                        "dependency violated: {} must precede {}",
+                        self.nodes[p as usize].name, self.nodes[v as usize].name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total flops over all nodes.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.kind.flops()).sum()
+    }
+
+    /// Total bytes over all nodes.
+    pub fn total_bytes(&self) -> f64 {
+        self.nodes.iter().map(|n| n.kind.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::graph::op::OpKind;
+
+    fn diamond() -> Graph {
+        // a -> b, a -> c, b -> d, c -> d
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        let x = b.add("b", OpKind::Scalar);
+        let y = b.add("c", OpKind::Scalar);
+        let d = b.add("d", OpKind::Scalar);
+        b.depend(a, x);
+        b.depend(a, y);
+        b.depend(x, d);
+        b.depend(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn csr_adjacency() {
+        let g = diamond();
+        assert_eq!(g.succs(0), &[1, 2]);
+        assert_eq!(g.preds(3), &[1, 2]);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.out_degree(3), 0);
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let g = diamond();
+        let order = g.topo_order();
+        g.validate_order(&order).unwrap();
+        assert_eq!(order[0], 0);
+        assert_eq!(order[3], 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        let y = b.add("y", OpKind::Scalar);
+        b.depend(x, y);
+        b.depend(y, x);
+        match b.build() {
+            Err(GraphError::Cycle(_, _)) => {}
+            other => panic!("expected cycle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn self_edge_rejected() {
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        b.depend(x, x);
+        assert_eq!(b.build().unwrap_err(), GraphError::SelfEdge(0));
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert_eq!(GraphBuilder::new().build().unwrap_err(), GraphError::Empty);
+    }
+
+    #[test]
+    fn duplicate_edges_coalesced() {
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        let y = b.add("y", OpKind::Scalar);
+        b.depend(x, y);
+        b.depend(x, y);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.in_degree(y), 1);
+    }
+
+    #[test]
+    fn validate_order_catches_violation() {
+        let g = diamond();
+        assert!(g.validate_order(&[3, 1, 2, 0]).is_err());
+        assert!(g.validate_order(&[0, 1, 2]).is_err()); // wrong length
+        assert!(g.validate_order(&[0, 1, 1, 2]).is_err()); // dup
+    }
+
+    #[test]
+    fn disconnected_components_ok() {
+        let mut b = GraphBuilder::new();
+        b.add("i1", OpKind::Scalar);
+        b.add("i2", OpKind::Scalar);
+        let g = b.build().unwrap();
+        assert_eq!(g.sources().len(), 2);
+        assert_eq!(g.topo_order().len(), 2);
+    }
+}

@@ -1,0 +1,58 @@
+//! Graphviz DOT export, for eyeballing compiled model graphs.
+
+use super::dag::Graph;
+
+/// Render the graph in DOT format. Node color encodes the scalability
+/// class; labels carry the mnemonic and flop volume.
+pub fn to_dot(graph: &Graph) -> String {
+    let mut out = String::from("digraph G {\n  rankdir=TB;\n  node [shape=box, style=filled, fontsize=10];\n");
+    for node in graph.nodes() {
+        let color = match node.kind.class() {
+            crate::graph::op::OpClass::Gemm => "lightblue",
+            crate::graph::op::OpClass::Conv => "lightgreen",
+            crate::graph::op::OpClass::Elementwise => "lightyellow",
+            crate::graph::op::OpClass::Memory => "lightgray",
+            crate::graph::op::OpClass::Tiny => "white",
+        };
+        out.push_str(&format!(
+            "  n{} [label=\"{}\\n{} {}F\", fillcolor={}];\n",
+            node.id,
+            escape(&node.name),
+            node.kind.mnemonic(),
+            crate::util::fmt_si(node.kind.flops()),
+            color
+        ));
+    }
+    for v in 0..graph.len() as u32 {
+        for &s in graph.succs(v) {
+            out.push_str(&format!("  n{v} -> n{s};\n"));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn escape(s: &str) -> String {
+    s.replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("mat \"A\"", OpKind::MatMul { m: 2, k: 2, n: 2 });
+        let c = b.add("act", OpKind::Scalar);
+        b.depend(a, c);
+        let dot = to_dot(&b.build().unwrap());
+        assert!(dot.starts_with("digraph G {"));
+        assert!(dot.contains("n0 -> n1;"));
+        assert!(dot.contains("mat \\\"A\\\""));
+        assert!(dot.contains("lightblue"));
+        assert!(dot.ends_with("}\n"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Critical-path "level" values (§4.3 of the paper).
+//!
+//! > "…we can derive a level value for each operation, which is defined as
+//! > the longest accumulated time from this operation to the end (sink
+//! > point) of the computation graph."
+//!
+//! The scheduler sorts ready operations by decreasing level so the critical
+//! path never starves. Levels are computed once per profiling update in
+//! reverse topological order, O(V + E).
+
+use super::dag::{Graph, NodeId};
+
+/// Compute level values given per-node estimated durations (µs).
+///
+/// `level(v) = dur(v) + max(level(s) for s in succs(v))`, 0-max for sinks.
+pub fn levels(graph: &Graph, durations: &[f64]) -> Vec<f64> {
+    assert_eq!(durations.len(), graph.len(), "one duration per node");
+    let order = graph.topo_order();
+    let mut level = vec![0.0f64; graph.len()];
+    for &v in order.iter().rev() {
+        let mut best = 0.0f64;
+        for &s in graph.succs(v) {
+            best = best.max(level[s as usize]);
+        }
+        level[v as usize] = durations[v as usize] + best;
+    }
+    level
+}
+
+/// The critical path itself: a source-to-sink node sequence achieving the
+/// maximum accumulated duration. Useful for traces and for the §7.4
+/// wavefront analysis.
+pub fn critical_path(graph: &Graph, durations: &[f64]) -> Vec<NodeId> {
+    let level = levels(graph, durations);
+    let mut current = (0..graph.len() as NodeId)
+        .filter(|&v| graph.in_degree(v) == 0)
+        .max_by(|&a, &b| level[a as usize].total_cmp(&level[b as usize]))
+        .expect("non-empty graph has a source");
+    let mut path = vec![current];
+    loop {
+        let next = graph
+            .succs(current)
+            .iter()
+            .copied()
+            .max_by(|&a, &b| level[a as usize].total_cmp(&level[b as usize]));
+        match next {
+            Some(n) => {
+                path.push(n);
+                current = n;
+            }
+            None => return path,
+        }
+    }
+}
+
+/// Lower bound on makespan with unlimited executors: the critical-path
+/// length. Used to sanity-check every engine's output.
+pub fn critical_path_length(graph: &Graph, durations: &[f64]) -> f64 {
+    levels(graph, durations)
+        .into_iter()
+        .fold(0.0f64, f64::max)
+}
+
+/// Lower bound on makespan with `k` executors of fixed speed:
+/// `max(cp_length, total_work / k)` — the classic area/chain bound.
+pub fn makespan_lower_bound(graph: &Graph, durations: &[f64], k: usize) -> f64 {
+    let total: f64 = durations.iter().sum();
+    critical_path_length(graph, durations).max(total / k as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+    use crate::graph::GraphBuilder;
+
+    /// chain a(3) -> b(2) -> c(1), plus independent d(4)
+    fn sample() -> (Graph, Vec<f64>) {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        let x = b.add("b", OpKind::Scalar);
+        let y = b.add("c", OpKind::Scalar);
+        b.add("d", OpKind::Scalar);
+        b.depend(a, x);
+        b.depend(x, y);
+        (b.build().unwrap(), vec![3.0, 2.0, 1.0, 4.0])
+    }
+
+    #[test]
+    fn chain_levels() {
+        let (g, dur) = sample();
+        let l = levels(&g, &dur);
+        assert_eq!(l, vec![6.0, 3.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn critical_path_follows_chain() {
+        let (g, dur) = sample();
+        assert_eq!(critical_path(&g, &dur), vec![0, 1, 2]);
+        assert_eq!(critical_path_length(&g, &dur), 6.0);
+    }
+
+    #[test]
+    fn lower_bound_switches_regime() {
+        let (g, dur) = sample();
+        // total work 10; with k=1 area bound dominates (10 > 6)
+        assert_eq!(makespan_lower_bound(&g, &dur, 1), 10.0);
+        // with k=4 the chain dominates
+        assert_eq!(makespan_lower_bound(&g, &dur, 4), 6.0);
+    }
+
+    #[test]
+    fn diamond_takes_longer_branch() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        let fast = b.add("fast", OpKind::Scalar);
+        let slow = b.add("slow", OpKind::Scalar);
+        let d = b.add("d", OpKind::Scalar);
+        b.depend(a, fast);
+        b.depend(a, slow);
+        b.depend(fast, d);
+        b.depend(slow, d);
+        let g = b.build().unwrap();
+        let dur = vec![1.0, 1.0, 10.0, 1.0];
+        let l = levels(&g, &dur);
+        assert_eq!(l[0], 1.0 + 10.0 + 1.0);
+        assert_eq!(critical_path(&g, &dur), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn levels_of_single_node() {
+        let mut b = GraphBuilder::new();
+        b.add("only", OpKind::Scalar);
+        let g = b.build().unwrap();
+        assert_eq!(levels(&g, &[7.5]), vec![7.5]);
+        assert_eq!(critical_path(&g, &[7.5]), vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one duration per node")]
+    fn wrong_duration_len_panics() {
+        let (g, _) = sample();
+        levels(&g, &[1.0]);
+    }
+}

@@ -1,0 +1,309 @@
+//! Memory planning (the CGT substrate, §5.1 of the paper).
+//!
+//! > "Each variable will be assigned a memory location, and optimizations
+//! > during compilation allow multiple variables to share the same
+//! > location as long as their lifespans do not overlap."
+//!
+//! Given a graph and an execution order, the planner computes each node
+//! output's live range (defined at the producer, dead after its last
+//! consumer), then assigns byte offsets with a greedy first-fit over a
+//! free-list — the classic linear-scan register-allocation shape. The
+//! result reports peak footprint, which is what bounds batch size on the
+//! 16 GB MCDRAM (§7.1: batch "to maximally utilize the 16GB MCDRAM").
+
+use super::dag::{Graph, NodeId};
+
+/// One output buffer's plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub node: NodeId,
+    pub offset: u64,
+    pub size: u64,
+    /// Position in the order where the buffer becomes live.
+    pub start: usize,
+    /// Position after which the buffer is dead (last consumer).
+    pub end: usize,
+}
+
+/// A complete memory plan.
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    pub allocations: Vec<Allocation>,
+    /// Arena size = peak concurrent footprint with sharing.
+    pub arena_bytes: u64,
+    /// Sum of all buffer sizes (the no-sharing baseline).
+    pub total_bytes: u64,
+}
+
+impl MemoryPlan {
+    /// How much sharing saved vs naive per-output allocation.
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.arena_bytes == 0 {
+            1.0
+        } else {
+            self.total_bytes as f64 / self.arena_bytes as f64
+        }
+    }
+
+    /// Does the plan fit a memory budget (e.g. 16 GB MCDRAM)?
+    pub fn fits(&self, budget_bytes: u64) -> bool {
+        self.arena_bytes <= budget_bytes
+    }
+
+    /// Verify the invariant: no two live-range-overlapping allocations
+    /// overlap in address space. Used by tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, a) in self.allocations.iter().enumerate() {
+            for b in &self.allocations[i + 1..] {
+                let time_overlap = a.start <= b.end && b.start <= a.end;
+                let addr_overlap = a.offset < b.offset + b.size && b.offset < a.offset + a.size;
+                if time_overlap && addr_overlap && a.size > 0 && b.size > 0 {
+                    return Err(format!(
+                        "buffers for nodes {} and {} overlap in time and space",
+                        a.node, b.node
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Simple first-fit free-list allocator over a growable arena.
+struct Arena {
+    /// Sorted, disjoint free intervals `(offset, size)` inside `high`.
+    free: Vec<(u64, u64)>,
+    high: u64,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena { free: Vec::new(), high: 0 }
+    }
+
+    fn alloc(&mut self, size: u64) -> u64 {
+        if size == 0 {
+            return 0;
+        }
+        // first fit in the free list
+        for i in 0..self.free.len() {
+            let (off, cap) = self.free[i];
+            if cap >= size {
+                if cap == size {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + size, cap - size);
+                }
+                return off;
+            }
+        }
+        // grow
+        let off = self.high;
+        self.high += size;
+        off
+    }
+
+    fn release(&mut self, offset: u64, size: u64) {
+        if size == 0 {
+            return;
+        }
+        // insert sorted + coalesce neighbours
+        let pos = self.free.partition_point(|&(o, _)| o < offset);
+        self.free.insert(pos, (offset, size));
+        // coalesce right
+        if pos + 1 < self.free.len() {
+            let (o, s) = self.free[pos];
+            let (no, ns) = self.free[pos + 1];
+            if o + s == no {
+                self.free[pos] = (o, s + ns);
+                self.free.remove(pos + 1);
+            }
+        }
+        // coalesce left
+        if pos > 0 {
+            let (po, ps) = self.free[pos - 1];
+            let (o, s) = self.free[pos];
+            if po + ps == o {
+                self.free[pos - 1] = (po, ps + s);
+                self.free.remove(pos);
+            }
+        }
+    }
+}
+
+/// Plan memory for `graph` executed in `order` (must be a valid schedule;
+/// typically `graph.topo_order()` or an engine's record order). Output
+/// buffers are `output_elems × 4` bytes (f32).
+pub fn plan(graph: &Graph, order: &[NodeId]) -> MemoryPlan {
+    assert_eq!(order.len(), graph.len(), "order must cover the graph");
+    debug_assert!(graph.validate_order(order).is_ok());
+    let mut position = vec![0usize; graph.len()];
+    for (i, &v) in order.iter().enumerate() {
+        position[v as usize] = i;
+    }
+    // last use of each node's output
+    let mut last_use = vec![0usize; graph.len()];
+    for v in 0..graph.len() as NodeId {
+        let mut end = position[v as usize];
+        for &s in graph.succs(v) {
+            end = end.max(position[s as usize]);
+        }
+        last_use[v as usize] = end;
+    }
+    // sweep in execution order: release buffers whose last use has passed,
+    // then allocate the new output
+    let mut arena = Arena::new();
+    let mut allocations: Vec<Allocation> = Vec::with_capacity(graph.len());
+    // buffers to release keyed by position: release[i] = node ids whose
+    // last use is at position i
+    let mut release_at: Vec<Vec<NodeId>> = vec![Vec::new(); order.len()];
+    for v in 0..graph.len() as NodeId {
+        release_at[last_use[v as usize]].push(v);
+    }
+    let mut offsets = vec![0u64; graph.len()];
+    let mut total_bytes = 0u64;
+    for (i, &v) in order.iter().enumerate() {
+        let size = graph.node(v).kind.output_elems() * 4;
+        total_bytes += size;
+        let offset = arena.alloc(size);
+        offsets[v as usize] = offset;
+        allocations.push(Allocation {
+            node: v,
+            offset,
+            size,
+            start: i,
+            end: last_use[v as usize],
+        });
+        // release everything whose last consumer just ran (including
+        // self-release for nodes with no consumers)
+        for &dead in &release_at[i] {
+            let a = &allocations[position[dead as usize].min(allocations.len() - 1)];
+            debug_assert_eq!(a.node, dead);
+            arena.release(offsets[dead as usize], graph.node(dead).kind.output_elems() * 4);
+        }
+    }
+    let plan = MemoryPlan { allocations, arena_bytes: arena.high, total_bytes };
+    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{EwKind, OpKind};
+    use crate::graph::GraphBuilder;
+
+    fn ew(n: u64) -> OpKind {
+        OpKind::Elementwise { n, arity: 1, kind: EwKind::Arith }
+    }
+
+    #[test]
+    fn chain_reuses_one_slot_pair() {
+        // a -> b -> c -> d, all same size: at any moment only producer +
+        // consumer are live ⇒ arena of 2 buffers
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("n0", ew(1000));
+        for i in 1..6 {
+            prev = b.add_after(format!("n{i}"), ew(1000), &[prev]);
+        }
+        let g = b.build().unwrap();
+        let order = g.topo_order();
+        let plan = plan(&g, &order);
+        plan.validate().unwrap();
+        assert_eq!(plan.total_bytes, 6 * 4000);
+        assert_eq!(plan.arena_bytes, 2 * 4000, "chain should reuse two slots");
+        assert!(plan.sharing_ratio() > 2.9);
+    }
+
+    #[test]
+    fn diamond_keeps_both_branches_live() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", ew(1000));
+        let l = b.add_after("l", ew(1000), &[a]);
+        let r = b.add_after("r", ew(1000), &[a]);
+        b.add_after("join", ew(1000), &[l, r]);
+        let g = b.build().unwrap();
+        let plan = plan(&g, &g.topo_order());
+        plan.validate().unwrap();
+        // at the join: l, r and join's output live simultaneously
+        assert!(plan.arena_bytes >= 3 * 4000);
+        assert!(plan.arena_bytes <= 4 * 4000);
+    }
+
+    #[test]
+    fn zero_size_outputs_ok() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", OpKind::Scalar);
+        b.add_after("b", OpKind::Scalar, &[a]);
+        let g = b.build().unwrap();
+        let plan = plan(&g, &g.topo_order());
+        plan.validate().unwrap();
+        assert!(plan.arena_bytes <= 8);
+    }
+
+    #[test]
+    fn plan_respects_alternate_valid_orders() {
+        // two independent chains interleaved arbitrarily still validate
+        let mut b = GraphBuilder::new();
+        let a0 = b.add("a0", ew(500));
+        let a1 = b.add_after("a1", ew(500), &[a0]);
+        let c0 = b.add("c0", ew(500));
+        let c1 = b.add_after("c1", ew(500), &[c0]);
+        let g = b.build().unwrap();
+        let order = vec![a0, c0, a1, c1];
+        let plan = plan(&g, &order);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn arena_free_list_coalesces() {
+        let mut a = Arena::new();
+        let x = a.alloc(100);
+        let y = a.alloc(100);
+        let z = a.alloc(100);
+        assert_eq!((x, y, z), (0, 100, 200));
+        a.release(y, 100);
+        a.release(x, 100);
+        // coalesced [0,200): a 150-byte alloc must fit at 0
+        assert_eq!(a.alloc(150), 0);
+    }
+
+    #[test]
+    fn models_fit_mcdram() {
+        // §7.1: batch sizes chosen to fit the 16 GB MCDRAM
+        use crate::models::{self, ModelKind, ModelSize};
+        for kind in [ModelKind::Lstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+            let g = models::build(kind, ModelSize::Large);
+            let p = plan(&g, &g.topo_order());
+            assert!(
+                p.fits(16 << 30),
+                "{:?} large needs {} bytes",
+                kind,
+                p.arena_bytes
+            );
+            assert!(p.sharing_ratio() > 1.5, "{kind:?}: sharing ratio {}", p.sharing_ratio());
+        }
+    }
+
+    #[test]
+    fn property_no_live_overlaps_on_random_dags() {
+        use crate::util::testkit::{check, DagGen};
+        let gen = DagGen { max_nodes: 50, edge_prob: 0.2, wmax: 100.0 };
+        check("memory plan validity", &gen, 60, |case| {
+            let mut b = GraphBuilder::new();
+            for i in 0..case.n {
+                b.add(format!("n{i}"), ew(100 + (case.weights[i] * 10.0) as u64));
+            }
+            for &(s, d) in &case.edges {
+                b.depend(s, d);
+            }
+            let g = b.build().map_err(|e| e.to_string())?;
+            let p = plan(&g, &g.topo_order());
+            p.validate()?;
+            if p.arena_bytes > p.total_bytes {
+                return Err("arena larger than no-sharing total".into());
+            }
+            Ok(())
+        });
+    }
+}

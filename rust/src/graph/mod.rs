@@ -1,0 +1,28 @@
+//! Computation-graph IR.
+//!
+//! A deep-learning model compiles to a directed acyclic graph whose nodes
+//! are typed operations ([`OpKind`]) and whose edges are data dependencies
+//! (§2 of the paper). Everything downstream — the cost model, the
+//! simulator, the engines — consumes this IR.
+//!
+//! * [`op`]      — operation kinds with flop/byte accounting
+//! * [`dag`]     — the frozen CSR graph + topological utilities
+//! * [`builder`] — mutable graph construction API
+//! * [`levels`]  — critical-path "level" values (§4.3)
+//! * [`stats`]   — parallelism profile and op census
+//! * [`dot`]     — Graphviz export for debugging
+
+pub mod builder;
+pub mod dag;
+pub mod dot;
+pub mod levels;
+pub mod memory;
+pub mod op;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use dag::{Graph, GraphError, NodeId};
+pub use levels::{critical_path, levels};
+pub use memory::{plan as plan_memory, MemoryPlan};
+pub use op::{EwKind, OpKind};
+pub use stats::GraphStats;

@@ -1,0 +1,316 @@
+//! Operation kinds.
+//!
+//! Each node of a computation graph carries an [`OpKind`] describing the
+//! mathematical operation and its shape. The kind determines the flop and
+//! byte volumes the cost model prices, the intra-op scalability class
+//! (GEMM vs element-wise vs convolution — Fig 2 of the paper), and whether
+//! the op is small enough to run inline on the light-weight executor
+//! (§5.2).
+
+/// Element-wise operation flavor; affects per-element cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    /// Plain arithmetic (add/sub/mul) — 1 flop per element per input.
+    Arith,
+    /// Sigmoid/tanh-style transcendental — several flops per element.
+    Transcendental,
+    /// ReLU / comparison / select — cheap, branch-free.
+    Relu,
+    /// The fused LSTM gate update (3 sigmoids, 2 tanhs, 4 muls, adds).
+    FusedGates,
+    /// Memory copy / transpose-free reshape — bandwidth only.
+    Copy,
+}
+
+impl EwKind {
+    /// Approximate flops per output element (used by the cost model).
+    pub fn flops_per_element(self) -> f64 {
+        match self {
+            EwKind::Arith => 1.0,
+            EwKind::Transcendental => 10.0,
+            EwKind::Relu => 1.0,
+            EwKind::FusedGates => 30.0,
+            EwKind::Copy => 0.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EwKind::Arith => "arith",
+            EwKind::Transcendental => "transcendental",
+            EwKind::Relu => "relu",
+            EwKind::FusedGates => "fused_gates",
+            EwKind::Copy => "copy",
+        }
+    }
+}
+
+/// A typed operation with shape information.
+///
+/// All tensors are f32 (4 bytes/element), matching the paper's workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Dense matrix multiply `C[m,n] = A[m,k] · B[k,n]` (MKL GEMM class).
+    MatMul { m: u64, k: u64, n: u64 },
+    /// 2-D convolution, NCHW, square kernel (LIBXSMM class).
+    Conv2d {
+        batch: u64,
+        h: u64,
+        w: u64,
+        cin: u64,
+        cout: u64,
+        kernel: u64,
+        stride: u64,
+    },
+    /// 2-D max/avg pooling.
+    Pool2d { batch: u64, h: u64, w: u64, c: u64, window: u64, stride: u64 },
+    /// Element-wise map over `n` output elements with `arity` inputs.
+    Elementwise { n: u64, arity: u64, kind: EwKind },
+    /// Reduction (sum/max) over `n` elements.
+    Reduce { n: u64 },
+    /// Softmax + cross-entropy over `batch × classes`.
+    Softmax { batch: u64, classes: u64 },
+    /// Concatenate tensors totalling `n` elements (bandwidth only).
+    Concat { n: u64 },
+    /// Parameter update `w -= lr·g` over `n` elements.
+    SgdUpdate { n: u64 },
+    /// Tiny bookkeeping op (scalar arithmetic, shape math, control).
+    /// Runs inline on the light-weight executor.
+    Scalar,
+}
+
+/// Scalability class of an op — which saturation curve from Fig 2 applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Gemm,
+    Conv,
+    Elementwise,
+    Memory,
+    Tiny,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Gemm => "gemm",
+            OpClass::Conv => "conv",
+            OpClass::Elementwise => "elementwise",
+            OpClass::Memory => "memory",
+            OpClass::Tiny => "tiny",
+        }
+    }
+}
+
+const F32: u64 = 4;
+
+impl OpKind {
+    /// Floating-point operations performed.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            OpKind::MatMul { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            OpKind::Conv2d { batch, h, w, cin, cout, kernel, stride } => {
+                let (oh, ow) = conv_out(h, w, kernel, stride);
+                2.0 * batch as f64
+                    * oh as f64
+                    * ow as f64
+                    * cout as f64
+                    * cin as f64
+                    * (kernel * kernel) as f64
+            }
+            OpKind::Pool2d { batch, h, w, c, window, stride } => {
+                let (oh, ow) = conv_out(h, w, window, stride);
+                batch as f64 * oh as f64 * ow as f64 * c as f64 * (window * window) as f64
+            }
+            OpKind::Elementwise { n, arity, kind } => {
+                n as f64 * (kind.flops_per_element() + (arity.saturating_sub(1)) as f64)
+            }
+            OpKind::Reduce { n } => n as f64,
+            OpKind::Softmax { batch, classes } => 5.0 * batch as f64 * classes as f64,
+            OpKind::Concat { .. } => 0.0,
+            OpKind::SgdUpdate { n } => 2.0 * n as f64,
+            OpKind::Scalar => 1.0,
+        }
+    }
+
+    /// Bytes moved to/from memory (reads + writes, f32).
+    pub fn bytes(&self) -> f64 {
+        let elems: f64 = match *self {
+            OpKind::MatMul { m, k, n } => (m * k + k * n + m * n) as f64,
+            OpKind::Conv2d { batch, h, w, cin, cout, kernel, stride } => {
+                let (oh, ow) = conv_out(h, w, kernel, stride);
+                (batch * h * w * cin              // input
+                    + cout * cin * kernel * kernel // weights
+                    + batch * oh * ow * cout) as f64 // output
+            }
+            OpKind::Pool2d { batch, h, w, c, window, stride } => {
+                let (oh, ow) = conv_out(h, w, window, stride);
+                (batch * h * w * c + batch * oh * ow * c) as f64
+            }
+            OpKind::Elementwise { n, arity, .. } => (n * (arity + 1)) as f64,
+            OpKind::Reduce { n } => n as f64 + 1.0,
+            OpKind::Softmax { batch, classes } => 2.0 * (batch * classes) as f64,
+            OpKind::Concat { n } => 2.0 * n as f64,
+            OpKind::SgdUpdate { n } => 3.0 * n as f64,
+            OpKind::Scalar => 2.0,
+        };
+        elems * F32 as f64
+    }
+
+    /// Number of output elements (for buffer sizing / stream stores).
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            OpKind::MatMul { m, n, .. } => m * n,
+            OpKind::Conv2d { batch, h, w, cout, kernel, stride, .. } => {
+                let (oh, ow) = conv_out(h, w, kernel, stride);
+                batch * oh * ow * cout
+            }
+            OpKind::Pool2d { batch, h, w, c, window, stride } => {
+                let (oh, ow) = conv_out(h, w, window, stride);
+                batch * oh * ow * c
+            }
+            OpKind::Elementwise { n, .. } => n,
+            OpKind::Reduce { .. } => 1,
+            OpKind::Softmax { batch, classes } => batch * classes,
+            OpKind::Concat { n } => n,
+            OpKind::SgdUpdate { n } => n,
+            OpKind::Scalar => 1,
+        }
+    }
+
+    /// Scalability class — selects the Fig 2 saturation curve.
+    pub fn class(&self) -> OpClass {
+        match self {
+            OpKind::MatMul { .. } => OpClass::Gemm,
+            OpKind::Conv2d { .. } => OpClass::Conv,
+            OpKind::Pool2d { .. }
+            | OpKind::Elementwise { .. }
+            | OpKind::Reduce { .. }
+            | OpKind::Softmax { .. }
+            | OpKind::SgdUpdate { .. } => OpClass::Elementwise,
+            OpKind::Concat { .. } => OpClass::Memory,
+            OpKind::Scalar => OpClass::Tiny,
+        }
+    }
+
+    /// Ops below this flop count are "small" and run inline on the
+    /// light-weight executor instead of being scheduled (§5.2).
+    pub fn is_tiny(&self) -> bool {
+        matches!(self, OpKind::Scalar) || self.flops() < 2_000.0
+    }
+
+    /// Arithmetic intensity, flops per byte.
+    pub fn intensity(&self) -> f64 {
+        let b = self.bytes();
+        if b == 0.0 {
+            0.0
+        } else {
+            self.flops() / b
+        }
+    }
+
+    /// Short mnemonic used in traces and DOT output.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::MatMul { .. } => "gemm",
+            OpKind::Conv2d { .. } => "conv",
+            OpKind::Pool2d { .. } => "pool",
+            OpKind::Elementwise { .. } => "ew",
+            OpKind::Reduce { .. } => "reduce",
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::Concat { .. } => "concat",
+            OpKind::SgdUpdate { .. } => "sgd",
+            OpKind::Scalar => "scalar",
+        }
+    }
+}
+
+fn conv_out(h: u64, w: u64, _kernel: u64, stride: u64) -> (u64, u64) {
+    // "same"-ish padding: ceil(h/stride); keeps shape math simple and is
+    // what the paper's workloads (3×3 stride-1, pool 2×2 stride-2) need.
+    (h.div_ceil(stride), w.div_ceil(stride))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops_bytes() {
+        // The paper's microbenchmark GEMM: [64,512] x [512,512]
+        let op = OpKind::MatMul { m: 64, k: 512, n: 512 };
+        assert_eq!(op.flops(), 2.0 * 64.0 * 512.0 * 512.0);
+        let elems = 64 * 512 + 512 * 512 + 64 * 512;
+        assert_eq!(op.bytes(), (elems * 4) as f64);
+        assert_eq!(op.class(), OpClass::Gemm);
+        assert!(!op.is_tiny());
+    }
+
+    #[test]
+    fn elementwise_microbenchmark_shape() {
+        // The paper's 32768-pair element-wise multiply
+        let op = OpKind::Elementwise { n: 32_768, arity: 2, kind: EwKind::Arith };
+        assert_eq!(op.flops(), 32_768.0 * 2.0);
+        assert_eq!(op.bytes(), (32_768 * 3 * 4) as f64);
+        assert_eq!(op.class(), OpClass::Elementwise);
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let op = OpKind::Conv2d { batch: 64, h: 32, w: 32, cin: 16, cout: 16, kernel: 3, stride: 1 };
+        // out 32x32
+        assert_eq!(op.output_elems(), 64 * 32 * 32 * 16);
+        assert_eq!(op.flops(), 2.0 * 64.0 * 32.0 * 32.0 * 16.0 * 16.0 * 9.0);
+        assert_eq!(op.class(), OpClass::Conv);
+    }
+
+    #[test]
+    fn pool_halves_spatial() {
+        let op = OpKind::Pool2d { batch: 1, h: 32, w: 32, c: 8, window: 2, stride: 2 };
+        assert_eq!(op.output_elems(), 16 * 16 * 8);
+    }
+
+    #[test]
+    fn scalar_is_tiny() {
+        assert!(OpKind::Scalar.is_tiny());
+        assert!(OpKind::Elementwise { n: 10, arity: 1, kind: EwKind::Arith }.is_tiny());
+        assert!(!OpKind::Elementwise { n: 100_000, arity: 1, kind: EwKind::Arith }.is_tiny());
+    }
+
+    #[test]
+    fn intensity_of_gemm_exceeds_elementwise() {
+        let gemm = OpKind::MatMul { m: 512, k: 512, n: 512 };
+        let ew = OpKind::Elementwise { n: 512 * 512, arity: 2, kind: EwKind::Arith };
+        assert!(gemm.intensity() > 10.0 * ew.intensity());
+    }
+
+    #[test]
+    fn fused_gates_cost_dominates_arith() {
+        let a = EwKind::FusedGates.flops_per_element();
+        let b = EwKind::Arith.flops_per_element();
+        assert!(a > b);
+    }
+
+    #[test]
+    fn concat_is_memory_class() {
+        let op = OpKind::Concat { n: 1000 };
+        assert_eq!(op.class(), OpClass::Memory);
+        assert_eq!(op.flops(), 0.0);
+        assert!(op.bytes() > 0.0);
+    }
+
+    #[test]
+    fn mnemonics_unique_enough() {
+        let ops = [
+            OpKind::MatMul { m: 1, k: 1, n: 1 }.mnemonic(),
+            OpKind::Scalar.mnemonic(),
+            OpKind::Concat { n: 1 }.mnemonic(),
+        ];
+        assert_eq!(ops, ["gemm", "scalar", "concat"]);
+    }
+
+    #[test]
+    fn strided_conv_output() {
+        let op = OpKind::Conv2d { batch: 1, h: 33, w: 33, cin: 1, cout: 1, kernel: 3, stride: 2 };
+        assert_eq!(op.output_elems(), 17 * 17);
+    }
+}

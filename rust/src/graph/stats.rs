@@ -1,0 +1,203 @@
+//! Graph census + parallelism profile.
+//!
+//! Answers the question the profiler (and §7.3's analysis) needs: *how much
+//! intrinsic parallelism does this graph have?* The "width profile" is the
+//! number of ops at each depth; the maximum/average width bounds the useful
+//! executor count.
+
+use std::collections::BTreeMap;
+
+use super::dag::{Graph, NodeId};
+use super::op::OpClass;
+
+/// Aggregate information about a graph.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub total_flops: f64,
+    pub total_bytes: f64,
+    /// Longest path length in *hops* (unit durations).
+    pub depth: usize,
+    /// Number of ops per depth layer.
+    pub width_profile: Vec<usize>,
+    pub max_width: usize,
+    pub avg_width: f64,
+    /// Count of ops by scalability class.
+    pub class_census: BTreeMap<&'static str, usize>,
+    pub tiny_ops: usize,
+}
+
+impl GraphStats {
+    pub fn compute(graph: &Graph) -> GraphStats {
+        // depth of each node = 1 + max(depth of preds)
+        let order = graph.topo_order();
+        let mut depth = vec![0usize; graph.len()];
+        for &v in &order {
+            let d = graph
+                .preds(v)
+                .iter()
+                .map(|&p| depth[p as usize] + 1)
+                .max()
+                .unwrap_or(0);
+            depth[v as usize] = d;
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(0);
+        let mut width_profile = vec![0usize; max_depth + 1];
+        for v in 0..graph.len() {
+            width_profile[depth[v]] += 1;
+        }
+        let max_width = width_profile.iter().copied().max().unwrap_or(0);
+        let avg_width = graph.len() as f64 / width_profile.len() as f64;
+
+        let mut class_census: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut tiny_ops = 0usize;
+        for node in graph.nodes() {
+            *class_census.entry(node.kind.class().name()).or_insert(0) += 1;
+            if node.kind.is_tiny() {
+                tiny_ops += 1;
+            }
+        }
+
+        GraphStats {
+            nodes: graph.len(),
+            edges: graph.num_edges(),
+            total_flops: graph.total_flops(),
+            total_bytes: graph.total_bytes(),
+            depth: max_depth + 1,
+            width_profile,
+            max_width,
+            avg_width,
+            class_census,
+            tiny_ops,
+        }
+    }
+
+    /// A rough static estimate of the useful executor count: the average
+    /// width of the non-trivial layers. §7.3 notes the optimal executor
+    /// count "is related to the structure of the model" and can be inferred
+    /// statically.
+    pub fn suggested_executors(&self) -> usize {
+        // median width is robust to the thin head/tail of training graphs
+        let mut widths: Vec<usize> = self.width_profile.iter().copied().filter(|&w| w > 0).collect();
+        widths.sort_unstable();
+        let median = widths[widths.len() / 2];
+        median.clamp(1, 64)
+    }
+
+    /// Render a one-screen summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "nodes={} edges={} depth={} max_width={} avg_width={:.1}\n",
+            self.nodes, self.edges, self.depth, self.max_width, self.avg_width
+        ));
+        out.push_str(&format!(
+            "flops={} bytes={} tiny_ops={}\n",
+            crate::util::fmt_si(self.total_flops),
+            crate::util::fmt_si(self.total_bytes),
+            self.tiny_ops
+        ));
+        out.push_str("classes:");
+        for (class, count) in &self.class_census {
+            out.push_str(&format!(" {class}={count}"));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+/// Per-node depth (layer index), exposed for trace visualizations.
+pub fn node_depths(graph: &Graph) -> Vec<usize> {
+    let order = graph.topo_order();
+    let mut depth = vec![0usize; graph.len()];
+    for &v in &order {
+        depth[v as usize] = graph
+            .preds(v)
+            .iter()
+            .map(|&p| depth[p as usize] + 1)
+            .max()
+            .unwrap_or(0);
+    }
+    depth
+}
+
+/// Number of ops whose class is `class` that can run concurrently at some
+/// depth (used in tests asserting PathNet has 6 parallel conv modules).
+pub fn max_parallel_of_class(graph: &Graph, class: OpClass) -> usize {
+    let depths = node_depths(graph);
+    let mut by_depth: BTreeMap<usize, usize> = BTreeMap::new();
+    for v in 0..graph.len() as NodeId {
+        if graph.node(v).kind.class() == class {
+            *by_depth.entry(depths[v as usize]).or_insert(0) += 1;
+        }
+    }
+    by_depth.values().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+    use crate::graph::GraphBuilder;
+
+    fn wide_graph() -> Graph {
+        // src -> {p1..p4} -> sink
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mids: Vec<_> = (0..4)
+            .map(|i| b.add_after(format!("p{i}"), OpKind::MatMul { m: 64, k: 64, n: 64 }, &[src]))
+            .collect();
+        b.add_after("sink", OpKind::Scalar, &mids);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn width_profile() {
+        let s = GraphStats::compute(&wide_graph());
+        assert_eq!(s.depth, 3);
+        assert_eq!(s.width_profile, vec![1, 4, 1]);
+        assert_eq!(s.max_width, 4);
+        assert_eq!(s.nodes, 6);
+        assert_eq!(s.edges, 8);
+    }
+
+    #[test]
+    fn census_counts_classes() {
+        let s = GraphStats::compute(&wide_graph());
+        assert_eq!(s.class_census["gemm"], 4);
+        assert_eq!(s.class_census["tiny"], 2);
+    }
+
+    #[test]
+    fn suggested_executors_reasonable() {
+        let s = GraphStats::compute(&wide_graph());
+        let k = s.suggested_executors();
+        assert!((1..=4).contains(&k), "suggested {k}");
+    }
+
+    #[test]
+    fn depths_monotone_along_edges() {
+        let g = wide_graph();
+        let d = node_depths(&g);
+        for v in 0..g.len() as NodeId {
+            for &s in g.succs(v) {
+                assert!(d[s as usize] > d[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn max_parallel_gemm() {
+        let g = wide_graph();
+        assert_eq!(max_parallel_of_class(&g, OpClass::Gemm), 4);
+        assert_eq!(max_parallel_of_class(&g, OpClass::Conv), 0);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let text = GraphStats::compute(&wide_graph()).render();
+        assert!(text.contains("nodes=6"));
+        assert!(text.contains("gemm=4"));
+    }
+}

@@ -1,0 +1,33 @@
+//! # Graphi
+//!
+//! A generic, high-performance execution engine for deep-learning
+//! computation graphs on manycore CPUs — a full reproduction of
+//! *"Scheduling Computation Graphs of Deep Learning Models on Manycore
+//! CPUs"* (Tang, Wang, Willke, Li; 2018).
+//!
+//! The crate is organized in layers:
+//!
+//! * [`graph`]  — computation-graph IR (DAG of typed operations)
+//! * [`models`] — graph compilers for the paper's four evaluation networks
+//! * [`cost`]   — analytic operation cost model for the Intel Xeon Phi 7250
+//! * [`sim`]    — discrete-event simulator of the KNL manycore topology
+//! * [`engine`] — the paper's contribution: profiler, centralized
+//!   critical-path-first scheduler, executor fleet, and the baseline
+//!   engines it is evaluated against
+//! * [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
+//!   artifacts (the real-compute path; Python never runs at request time)
+//! * [`coordinator`] — experiment configs, drivers, metrics and reports
+//! * [`util`]   — infrastructure substrates (CLI, JSON, bench harness, …)
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for reproduced results.
+
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod engine;
+pub mod graph;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,7 @@
+//! `graphi` binary entry point. All logic lives in the library; see
+//! [`graphi::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(graphi::cli::main(args));
+}

@@ -1,0 +1,309 @@
+//! Shared model-compiler machinery: the autodiff tape.
+//!
+//! Training graphs are forward + backward + update ops. Rather than each
+//! model hand-writing its backward pass (error-prone at GoogLeNet scale),
+//! compilers record forward ops on a [`Tape`]; [`Tape::backward`] then
+//! appends, for every recorded op `X` that influences the loss:
+//!
+//! * an **input-grad** op `dX` computing the gradient w.r.t. `X`'s inputs —
+//!   depends on `X` (forward activations) and on the input-grads of all of
+//!   `X`'s consumers (the incoming output-gradient);
+//! * if `X` carries parameters, a **weight-grad** op running *in parallel*
+//!   with `dX` (they share inputs but not outputs — exactly how dA/dW
+//!   decompose for GEMM/conv), feeding an **SGD update** op.
+//!
+//! The resulting DAG has the doubled-parallelism backward structure the
+//! paper notes in §6 ("typically the number of parallel operations doubles
+//! during the backward pass").
+
+use crate::graph::op::{EwKind, OpKind};
+use crate::graph::{GraphBuilder, NodeId};
+
+/// One recorded forward op.
+#[derive(Debug, Clone)]
+struct Record {
+    id: NodeId,
+    kind: OpKind,
+    preds: Vec<NodeId>,
+    /// Parameter tensor elements, if this op consumes trainable weights.
+    param_elems: Option<u64>,
+}
+
+/// Records forward ops and generates the backward pass.
+#[derive(Debug, Default)]
+pub struct Tape {
+    pub builder: GraphBuilder,
+    records: Vec<Record>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    /// Add a forward op depending on `deps`.
+    pub fn op(&mut self, name: impl Into<String>, kind: OpKind, deps: &[NodeId]) -> NodeId {
+        let id = self.builder.add_after(name, kind.clone(), deps);
+        self.records.push(Record { id, kind, preds: deps.to_vec(), param_elems: None });
+        id
+    }
+
+    /// Add a forward op that consumes a parameter tensor of `param_elems`
+    /// elements (weight grad + SGD update will be generated).
+    pub fn param_op(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        deps: &[NodeId],
+        param_elems: u64,
+    ) -> NodeId {
+        let id = self.builder.add_after(name, kind.clone(), deps);
+        self.records.push(Record { id, kind, preds: deps.to_vec(), param_elems: Some(param_elems) });
+        id
+    }
+
+    /// Add an op that is *not* differentiated (data loading, metrics).
+    pub fn untracked(&mut self, name: impl Into<String>, kind: OpKind, deps: &[NodeId]) -> NodeId {
+        self.builder.add_after(name, kind, deps)
+    }
+
+    /// Number of recorded forward ops.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Generate the backward pass seeded at `loss`, returning the builder
+    /// for any final additions. Also appends one SGD update per param op.
+    pub fn backward(mut self, loss: NodeId) -> GraphBuilder {
+        let n = self.records.len();
+        // index of record by node id
+        let mut rec_of: std::collections::HashMap<NodeId, usize> = std::collections::HashMap::new();
+        for (i, r) in self.records.iter().enumerate() {
+            rec_of.insert(r.id, i);
+        }
+        // consumers within the tape
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, r) in self.records.iter().enumerate() {
+            for &p in &r.preds {
+                if let Some(&pi) = rec_of.get(&p) {
+                    consumers[pi].push(i);
+                }
+            }
+        }
+        // which records influence the loss (reverse reachability)
+        let loss_rec = *rec_of.get(&loss).expect("loss must be a recorded op");
+        let mut influences = vec![false; n];
+        influences[loss_rec] = true;
+        // records are appended in topological order by construction, so a
+        // single reverse sweep settles reachability
+        for i in (0..n).rev() {
+            if consumers[i].iter().any(|&c| influences[c]) {
+                influences[i] = true;
+            }
+        }
+
+        // seed: dLoss
+        let seed = self.builder.add_after("loss.grad_seed", OpKind::Scalar, &[loss]);
+
+        // generate grads in reverse topological (reverse insertion) order
+        let mut dgrad: Vec<Option<NodeId>> = vec![None; n];
+        for i in (0..n).rev() {
+            if !influences[i] {
+                continue;
+            }
+            let record = self.records[i].clone();
+            // incoming output-gradient: consumers' input-grad nodes
+            let mut incoming: Vec<NodeId> = consumers[i]
+                .iter()
+                .filter_map(|&c| dgrad[c])
+                .collect();
+            if i == loss_rec {
+                incoming.push(seed);
+            }
+            if incoming.is_empty() {
+                continue; // no gradient flows here
+            }
+            let name = &self.builder_name(record.id);
+            // input-grad op — skip for pure sources (their grads feed nothing)
+            let needs_dgrad = !record.preds.is_empty();
+            if needs_dgrad {
+                let kind = dgrad_kind(&record.kind);
+                let mut deps = vec![record.id];
+                deps.extend_from_slice(&incoming);
+                let g = self.builder.add_after(format!("{name}.dgrad"), kind, &deps);
+                dgrad[i] = Some(g);
+            }
+            // weight-grad + update, in parallel with the input-grad
+            if let Some(elems) = record.param_elems {
+                let kind = wgrad_kind(&record.kind);
+                let mut deps = vec![record.id];
+                deps.extend_from_slice(&incoming);
+                let wg = self.builder.add_after(format!("{name}.wgrad"), kind, &deps);
+                self.builder
+                    .add_after(format!("{name}.sgd"), OpKind::SgdUpdate { n: elems }, &[wg]);
+            }
+        }
+        self.builder
+    }
+
+    /// Reconstruct a node's name for grad naming. GraphBuilder does not
+    /// expose names, so we track via records' order — names are only for
+    /// humans, so a positional fallback is fine.
+    fn builder_name(&self, id: NodeId) -> String {
+        format!("n{id}")
+    }
+}
+
+/// Gradient-w.r.t.-inputs op for a forward op.
+fn dgrad_kind(kind: &OpKind) -> OpKind {
+    match *kind {
+        // dA = dC · Bᵀ : [m,n]×[n,k]
+        OpKind::MatMul { m, k, n } => OpKind::MatMul { m, k: n, n: k },
+        // transposed conv, same cost shape
+        OpKind::Conv2d { batch, h, w, cin, cout, kernel, stride } => {
+            OpKind::Conv2d { batch, h, w, cin: cout, cout: cin, kernel, stride }
+        }
+        OpKind::Pool2d { batch, h, w, c, .. } => {
+            OpKind::Elementwise { n: batch * h * w * c, arity: 2, kind: EwKind::Relu }
+        }
+        OpKind::Elementwise { n, arity, kind } => OpKind::Elementwise {
+            n,
+            arity: arity + 1,
+            kind: match kind {
+                EwKind::Transcendental => EwKind::Transcendental,
+                EwKind::FusedGates => EwKind::FusedGates,
+                _ => EwKind::Arith,
+            },
+        },
+        OpKind::Reduce { n } => OpKind::Elementwise { n, arity: 1, kind: EwKind::Arith },
+        OpKind::Softmax { batch, classes } => {
+            OpKind::Elementwise { n: batch * classes, arity: 2, kind: EwKind::Arith }
+        }
+        OpKind::Concat { n } => OpKind::Concat { n },
+        OpKind::SgdUpdate { .. } => unreachable!("SGD updates are not differentiated"),
+        OpKind::Scalar => OpKind::Scalar,
+    }
+}
+
+/// Gradient-w.r.t.-weights op for a parameterized forward op.
+fn wgrad_kind(kind: &OpKind) -> OpKind {
+    match *kind {
+        // dB = Aᵀ · dC : [k,m]×[m,n]
+        OpKind::MatMul { m, k, n } => OpKind::MatMul { m: k, k: m, n },
+        OpKind::Conv2d { batch, h, w, cin, cout, kernel, stride } => {
+            OpKind::Conv2d { batch, h, w, cin, cout, kernel, stride }
+        }
+        // bias-style params on elementwise ops: reduction over the batch
+        OpKind::Elementwise { n, .. } => OpKind::Reduce { n },
+        ref other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::GraphStats;
+
+    /// y = relu(x·W); loss = softmax(y·V)
+    fn two_layer_tape() -> (Tape, NodeId) {
+        let mut t = Tape::new();
+        let x = t.op("x", OpKind::Scalar, &[]);
+        let h = t.param_op("fc1", OpKind::MatMul { m: 8, k: 16, n: 32 }, &[x], 16 * 32);
+        let r = t.op("relu", OpKind::Elementwise { n: 8 * 32, arity: 1, kind: EwKind::Relu }, &[h]);
+        let o = t.param_op("fc2", OpKind::MatMul { m: 8, k: 32, n: 10 }, &[r], 32 * 10);
+        let loss = t.op("loss", OpKind::Softmax { batch: 8, classes: 10 }, &[o]);
+        (t, loss)
+    }
+
+    #[test]
+    fn backward_generates_valid_dag() {
+        let (t, loss) = two_layer_tape();
+        let fwd_ops = t.len();
+        let g = t.backward(loss).build().unwrap();
+        assert!(g.len() > fwd_ops, "backward must add ops");
+        g.validate_order(&g.topo_order()).unwrap();
+    }
+
+    #[test]
+    fn param_ops_get_wgrad_and_sgd() {
+        let (t, loss) = two_layer_tape();
+        let g = t.backward(loss).build().unwrap();
+        let sgd_count = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::SgdUpdate { .. }))
+            .count();
+        assert_eq!(sgd_count, 2, "one SGD update per parameterized op");
+    }
+
+    #[test]
+    fn wgrad_gemm_shapes_transpose() {
+        let fwd = OpKind::MatMul { m: 8, k: 32, n: 10 };
+        assert_eq!(wgrad_kind(&fwd), OpKind::MatMul { m: 32, k: 8, n: 10 });
+        assert_eq!(dgrad_kind(&fwd), OpKind::MatMul { m: 8, k: 10, n: 32 });
+    }
+
+    #[test]
+    fn backward_flops_about_double_forward() {
+        // classic rule: backward ≈ 2× forward flops for gemm-dominated nets
+        let (t, loss) = two_layer_tape();
+        let fwd_flops: f64 = [
+            OpKind::MatMul { m: 8, k: 16, n: 32 }.flops(),
+            OpKind::MatMul { m: 8, k: 32, n: 10 }.flops(),
+        ]
+        .iter()
+        .sum();
+        let g = t.backward(loss).build().unwrap();
+        let gemm_flops: f64 = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::MatMul { .. }))
+            .map(|n| n.kind.flops())
+            .sum();
+        let ratio = gemm_flops / fwd_flops;
+        assert!((2.4..=3.1).contains(&ratio), "fwd+bwd/fwd gemm ratio {ratio} (expect ~3)");
+    }
+
+    #[test]
+    fn backward_widens_the_graph() {
+        // §6: parallelism roughly doubles in the backward pass (dgrad and
+        // wgrad run in parallel).
+        let (t, loss) = two_layer_tape();
+        let g = t.backward(loss).build().unwrap();
+        let stats = GraphStats::compute(&g);
+        assert!(stats.max_width >= 2, "dgrad/wgrad should be parallel");
+    }
+
+    #[test]
+    fn untracked_ops_get_no_grad() {
+        let mut t = Tape::new();
+        let x = t.op("x", OpKind::Scalar, &[]);
+        let y = t.param_op("fc", OpKind::MatMul { m: 2, k: 2, n: 2 }, &[x], 4);
+        t.untracked("metrics", OpKind::Scalar, &[y]);
+        let loss = y;
+        let g = t.backward(loss).build().unwrap();
+        // metrics node exists but nothing depends on it
+        let metrics = g.nodes().iter().find(|n| n.name == "metrics").unwrap();
+        assert_eq!(g.out_degree(metrics.id), 0);
+    }
+
+    #[test]
+    fn dead_branches_are_not_differentiated() {
+        let mut t = Tape::new();
+        let x = t.op("x", OpKind::Scalar, &[]);
+        let live = t.param_op("live", OpKind::MatMul { m: 2, k: 2, n: 2 }, &[x], 4);
+        // recorded but does not reach the loss
+        t.param_op("dead", OpKind::MatMul { m: 2, k: 2, n: 2 }, &[x], 4);
+        let g = t.backward(live).build().unwrap();
+        let sgd_count = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::SgdUpdate { .. }))
+            .count();
+        assert_eq!(sgd_count, 1, "dead branch must not produce updates");
+    }
+}

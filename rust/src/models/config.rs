@@ -1,0 +1,131 @@
+//! The evaluation workload grid (Table 1 of the paper).
+
+/// Which network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Lstm,
+    PhasedLstm,
+    PathNet,
+    GoogleNet,
+    /// Not in the paper; small net for tests/examples.
+    Mlp,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Lstm => "lstm",
+            ModelKind::PhasedLstm => "phasedlstm",
+            ModelKind::PathNet => "pathnet",
+            ModelKind::GoogleNet => "googlenet",
+            ModelKind::Mlp => "mlp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lstm" => Some(ModelKind::Lstm),
+            "phasedlstm" | "phased_lstm" | "phased-lstm" => Some(ModelKind::PhasedLstm),
+            "pathnet" => Some(ModelKind::PathNet),
+            "googlenet" => Some(ModelKind::GoogleNet),
+            "mlp" => Some(ModelKind::Mlp),
+            _ => None,
+        }
+    }
+}
+
+/// Small / Medium / Large per Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelSize {
+    Small,
+    Medium,
+    Large,
+}
+
+impl ModelSize {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelSize::Small => "small",
+            ModelSize::Medium => "medium",
+            ModelSize::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelSize> {
+        match s.to_ascii_lowercase().as_str() {
+            "small" | "s" => Some(ModelSize::Small),
+            "medium" | "m" => Some(ModelSize::Medium),
+            "large" | "l" => Some(ModelSize::Large),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [ModelSize; 3] {
+        [ModelSize::Small, ModelSize::Medium, ModelSize::Large]
+    }
+}
+
+/// Table 1a: LSTM/PhasedLSTM — (sequence length, neurons).
+pub fn lstm_params(size: ModelSize) -> (usize, usize) {
+    match size {
+        ModelSize::Small => (20, 128),
+        ModelSize::Medium => (30, 512),
+        ModelSize::Large => (40, 1024),
+    }
+}
+
+/// Table 1b: PathNet — (image size, neurons i.e. conv channels).
+pub fn pathnet_params(size: ModelSize) -> (usize, usize) {
+    match size {
+        ModelSize::Small => (32, 16),
+        ModelSize::Medium => (48, 32),
+        ModelSize::Large => (64, 48),
+    }
+}
+
+/// Table 1c: GoogleNet — (image size, width multiplier).
+pub fn googlenet_params(size: ModelSize) -> (usize, usize) {
+    match size {
+        ModelSize::Small => (128, 1),
+        ModelSize::Medium => (192, 2),
+        ModelSize::Large => (256, 4),
+    }
+}
+
+/// Batch sizes (§7.1: 64 for LSTM/PhasedLSTM/PathNet, 32 for GoogleNet to
+/// fit MCDRAM).
+pub fn batch_size(kind: ModelKind) -> usize {
+    match kind {
+        ModelKind::GoogleNet => 32,
+        _ => 64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        assert_eq!(lstm_params(ModelSize::Medium), (30, 512));
+        assert_eq!(pathnet_params(ModelSize::Large), (64, 48));
+        assert_eq!(googlenet_params(ModelSize::Small), (128, 1));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in [ModelKind::Lstm, ModelKind::PhasedLstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
+        for size in ModelSize::all() {
+            assert_eq!(ModelSize::parse(size.name()), Some(size));
+        }
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn batch_sizes_match_paper() {
+        assert_eq!(batch_size(ModelKind::Lstm), 64);
+        assert_eq!(batch_size(ModelKind::GoogleNet), 32);
+    }
+}

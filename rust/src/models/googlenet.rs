@@ -1,0 +1,235 @@
+//! GoogLeNet (Inception v1) training graphs.
+//!
+//! §7.1: "we refer to the implementation provided in TensorFlow … but vary
+//! the image size and multiply the number of output filters in each
+//! convolution by a constant factor (width)". Table 1c: image
+//! 128/192/256, width 1/2/4, batch 32.
+//!
+//! Each inception module has four parallel branches (1×1; 1×1→3×3;
+//! 1×1→5×5; pool→1×1) concatenated — the "2-3 parallel conv/pool
+//! operations" the paper credits for GoogleNet's (modest) parallel
+//! speedup, and why Fig 6 shows it peaking at 2-3 executors.
+
+use crate::graph::op::{EwKind, OpKind};
+use crate::graph::{Graph, NodeId};
+use crate::models::common::Tape;
+use crate::models::config::{batch_size, googlenet_params, ModelKind, ModelSize};
+
+/// Inception module channel plan `(c1, c2r, c2, c3r, c3, c4)`.
+type Inception = (u64, u64, u64, u64, u64, u64);
+
+/// The canonical GoogLeNet channel table (Szegedy et al., Table 1).
+const INCEPTIONS: &[(&str, Inception, bool)] = &[
+    // name, channels, downsample-before
+    ("3a", (64, 96, 128, 16, 32, 32), false),
+    ("3b", (128, 128, 192, 32, 96, 64), false),
+    ("4a", (192, 96, 208, 16, 48, 64), true),
+    ("4b", (160, 112, 224, 24, 64, 64), false),
+    ("4c", (128, 128, 256, 24, 64, 64), false),
+    ("4d", (112, 144, 288, 32, 64, 64), false),
+    ("4e", (256, 160, 320, 32, 128, 128), false),
+    ("5a", (256, 160, 320, 32, 128, 128), true),
+    ("5b", (384, 192, 384, 48, 128, 128), false),
+];
+
+/// GoogLeNet hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct GoogleNetConfig {
+    pub image: usize,
+    pub width: usize,
+    pub batch: usize,
+    pub classes: usize,
+    /// Training (fwd+bwd+SGD) or inference (fwd only, §2).
+    pub training: bool,
+}
+
+impl GoogleNetConfig {
+    pub fn for_size(size: ModelSize) -> GoogleNetConfig {
+        let (image, width) = googlenet_params(size);
+        GoogleNetConfig {
+            image,
+            width,
+            batch: batch_size(ModelKind::GoogleNet),
+            classes: 1000,
+            training: true,
+        }
+    }
+}
+
+struct Ctx<'a> {
+    tape: &'a mut Tape,
+    batch: u64,
+    width: u64,
+}
+
+impl<'a> Ctx<'a> {
+    /// conv + ReLU; returns the ReLU node and output channels.
+    fn conv_relu(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        hw: u64,
+        cin: u64,
+        cout: u64,
+        kernel: u64,
+        stride: u64,
+    ) -> (NodeId, u64) {
+        let conv = self.tape.param_op(
+            format!("{name}.conv"),
+            OpKind::Conv2d { batch: self.batch, h: hw, w: hw, cin, cout, kernel, stride },
+            &[input],
+            cin * cout * kernel * kernel,
+        );
+        let ohw = hw.div_ceil(stride);
+        let relu = self.tape.op(
+            format!("{name}.relu"),
+            OpKind::Elementwise { n: self.batch * ohw * ohw * cout, arity: 1, kind: EwKind::Relu },
+            &[conv],
+        );
+        (relu, cout)
+    }
+
+    /// One inception module; returns (output node, output channels).
+    fn inception(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        hw: u64,
+        cin: u64,
+        plan: Inception,
+    ) -> (NodeId, u64) {
+        let w = self.width;
+        let (c1, c2r, c2, c3r, c3, c4) = (
+            plan.0 * w,
+            plan.1 * w,
+            plan.2 * w,
+            plan.3 * w,
+            plan.4 * w,
+            plan.5 * w,
+        );
+        // four parallel branches
+        let (b1, _) = self.conv_relu(&format!("{name}.b1_1x1"), input, hw, cin, c1, 1, 1);
+        let (b2a, _) = self.conv_relu(&format!("{name}.b2_1x1"), input, hw, cin, c2r, 1, 1);
+        let (b2, _) = self.conv_relu(&format!("{name}.b2_3x3"), b2a, hw, c2r, c2, 3, 1);
+        let (b3a, _) = self.conv_relu(&format!("{name}.b3_1x1"), input, hw, cin, c3r, 1, 1);
+        let (b3, _) = self.conv_relu(&format!("{name}.b3_5x5"), b3a, hw, c3r, c3, 5, 1);
+        let pool = self.tape.op(
+            format!("{name}.b4_pool"),
+            OpKind::Pool2d { batch: self.batch, h: hw, w: hw, c: cin, window: 3, stride: 1 },
+            &[input],
+        );
+        let (b4, _) = self.conv_relu(&format!("{name}.b4_1x1"), pool, hw, cin, c4, 1, 1);
+        let cout = c1 + c2 + c3 + c4;
+        let concat = self.tape.op(
+            format!("{name}.concat"),
+            OpKind::Concat { n: self.batch * hw * hw * cout },
+            &[b1, b2, b3, b4],
+        );
+        (concat, cout)
+    }
+}
+
+/// Build the training graph.
+pub fn build(cfg: &GoogleNetConfig) -> Graph {
+    let mut tape = Tape::new();
+    let b = cfg.batch as u64;
+    let w = cfg.width as u64;
+    let input = tape.op("input", OpKind::Scalar, &[]);
+
+    let mut ctx = Ctx { tape: &mut tape, batch: b, width: w };
+    let mut hw = cfg.image as u64;
+
+    // stem: 7×7/2 conv → pool/2 → 3×3 conv → pool/2
+    let (stem1, c) = ctx.conv_relu("stem.conv7", input, hw, 3, 64 * w, 7, 2);
+    hw = hw.div_ceil(2);
+    let pool1 = ctx.tape.op(
+        "stem.pool1",
+        OpKind::Pool2d { batch: b, h: hw, w: hw, c, window: 3, stride: 2 },
+        &[stem1],
+    );
+    hw = hw.div_ceil(2);
+    let (stem2, c) = ctx.conv_relu("stem.conv3", pool1, hw, c, 192 * w, 3, 1);
+    let pool2 = ctx.tape.op(
+        "stem.pool2",
+        OpKind::Pool2d { batch: b, h: hw, w: hw, c, window: 3, stride: 2 },
+        &[stem2],
+    );
+    hw = hw.div_ceil(2);
+
+    let mut node = pool2;
+    let mut cin = c;
+    for &(name, plan, downsample) in INCEPTIONS {
+        if downsample {
+            node = ctx.tape.op(
+                format!("{name}.downsample"),
+                OpKind::Pool2d { batch: b, h: hw, w: hw, c: cin, window: 3, stride: 2 },
+                &[node],
+            );
+            hw = hw.div_ceil(2);
+        }
+        let (out, cout) = ctx.inception(name, node, hw, cin, plan);
+        node = out;
+        cin = cout;
+    }
+
+    // global average pool → FC → softmax
+    let gap = tape.op(
+        "head.avgpool",
+        OpKind::Pool2d { batch: b, h: hw, w: hw, c: cin, window: hw, stride: hw },
+        &[node],
+    );
+    let fc = tape.param_op(
+        "head.fc",
+        OpKind::MatMul { m: b, k: cin, n: cfg.classes as u64 },
+        &[gap],
+        cin * cfg.classes as u64,
+    );
+    let loss = tape.op(
+        "head.softmax",
+        OpKind::Softmax { batch: b, classes: cfg.classes as u64 },
+        &[fc],
+    );
+    let builder = if cfg.training { tape.backward(loss) } else { tape.builder };
+    builder.build().expect("GoogLeNet graph must be a valid DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpClass;
+    use crate::graph::stats::max_parallel_of_class;
+
+    #[test]
+    fn inception_exposes_3_to_4_parallel_convs() {
+        let g = build(&GoogleNetConfig::for_size(ModelSize::Small));
+        let p = max_parallel_of_class(&g, OpClass::Conv);
+        assert!((3..=8).contains(&p), "parallel convs {p}");
+    }
+
+    #[test]
+    fn graph_scale() {
+        let g = build(&GoogleNetConfig::for_size(ModelSize::Small));
+        // 9 inceptions × ~14 ops + stem + head, ×~2.5 for backward
+        assert!((300..1200).contains(&g.len()), "{} nodes", g.len());
+        g.validate_order(&g.topo_order()).unwrap();
+    }
+
+    #[test]
+    fn width_multiplies_flops_quadratically() {
+        let w1 = build(&GoogleNetConfig { image: 128, width: 1, batch: 32, classes: 1000, training: true });
+        let w2 = build(&GoogleNetConfig { image: 128, width: 2, batch: 32, classes: 1000, training: true });
+        let ratio = w2.total_flops() / w1.total_flops();
+        assert!((3.0..5.0).contains(&ratio), "width-2 flop ratio {ratio} (expect ≈4)");
+    }
+
+    #[test]
+    fn googlenet_has_bigger_ops_than_lstm() {
+        // §7.4: GoogleNet ops are larger → less queue contention
+        use crate::models::lstm::{build as lstm_build, LstmConfig};
+        let g = build(&GoogleNetConfig::for_size(ModelSize::Medium));
+        let l = lstm_build(&LstmConfig::for_size(ModelSize::Medium, false));
+        let g_mean = g.total_flops() / g.len() as f64;
+        let l_mean = l.total_flops() / l.len() as f64;
+        assert!(g_mean > 3.0 * l_mean, "mean op size googlenet {g_mean:.2e} vs lstm {l_mean:.2e}");
+    }
+}

@@ -1,0 +1,280 @@
+//! LSTM / PhasedLSTM language-model training graphs.
+//!
+//! Follows the Zaremba et al. TensorFlow benchmark the paper bases its
+//! LSTM on ([65] in the paper): a 4-layer stacked LSTM LM with per-timestep
+//! embedding lookup and softmax head. Table 1a sets (sequence, neurons) to
+//! (20,128)/(30,512)/(40,1024); batch is 64.
+//!
+//! PhasedLSTM ([42]) adds a per-cell *time gate* — a handful of extra
+//! element-wise ops modulating the cell/hidden updates. The paper uses it
+//! to show Graphi's network-agnosticism: the same engine speeds up both.
+//!
+//! Cell structure (per layer ℓ, timestep t) follows the standard fused
+//! formulation (TF `BasicLSTMCell` / Zaremba): one GEMM over the
+//! concatenated `[x, h]` input, then several element-wise ops — the paper's
+//! "2-3 parallel operators in each cell". The single fused GEMM makes cell
+//! `(t, ℓ)` depend on `(t−1, ℓ)` and `(t, ℓ−1)`: the diagonal wavefront of
+//! width ≈ L that §7.3 counts ("total parallelizable operations ≈ 8-12")
+//! and that cuDNN's hand-tuned LSTM exploits (§7.4).
+//!
+//! ```text
+//! pre = [x, h[t-1]]·W + b              (one GEMM + element-wise add)
+//! i, f, o, g = σ/tanh slices of pre    (four parallel activations)
+//! c[t] = f⊙c[t-1] + i⊙g                (element-wise)
+//! h[t] = o⊙tanh(c[t])                  (element-wise)
+//! ```
+//!
+//! The softmax head follows the benchmark implementation too: hidden
+//! states are concatenated over time and projected by a single large
+//! `[B·T, H]×[H, V]` GEMM.
+
+use crate::graph::op::{EwKind, OpKind};
+use crate::graph::{Graph, NodeId};
+use crate::models::common::Tape;
+use crate::models::config::{batch_size, lstm_params, ModelKind, ModelSize};
+
+/// LSTM LM hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct LstmConfig {
+    pub layers: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub phased: bool,
+    /// Training (fwd+bwd+SGD) or inference (fwd only, §2).
+    pub training: bool,
+}
+
+impl LstmConfig {
+    /// Table 1a sizes; `phased` selects PhasedLSTM.
+    pub fn for_size(size: ModelSize, phased: bool) -> LstmConfig {
+        let (seq, hidden) = lstm_params(size);
+        LstmConfig {
+            layers: 4, // §7.3: "the four-layer LSTM/PhasedLSTM model"
+            seq,
+            hidden,
+            batch: batch_size(if phased { ModelKind::PhasedLstm } else { ModelKind::Lstm }),
+            vocab: 10_000,
+            phased,
+            training: true,
+        }
+    }
+}
+
+/// Build the training graph (forward + backward + SGD updates).
+pub fn build(cfg: &LstmConfig) -> Graph {
+    let mut tape = Tape::new();
+    let b = cfg.batch as u64;
+    let h = cfg.hidden as u64;
+    let v = cfg.vocab as u64;
+
+    // initial states, one per layer
+    let mut prev_h: Vec<Option<NodeId>> = vec![None; cfg.layers];
+    let mut prev_c: Vec<Option<NodeId>> = vec![None; cfg.layers];
+    let mut step_hiddens: Vec<NodeId> = Vec::with_capacity(cfg.seq);
+
+    for t in 0..cfg.seq {
+        // embedding lookup: memory-bound gather from the [V,H] table
+        let embed = tape.param_op(
+            format!("t{t}.embed"),
+            OpKind::Concat { n: b * h },
+            &[],
+            v * h,
+        );
+        // per-timestep "time" input for the PhasedLSTM gate
+        let time_input = if cfg.phased {
+            Some(tape.op(format!("t{t}.time"), OpKind::Scalar, &[]))
+        } else {
+            None
+        };
+
+        let mut layer_input = embed;
+        for l in 0..cfg.layers {
+            let p = format!("t{t}.l{l}");
+            // one fused GEMM over the concatenated [x, h[t-1]] input — the
+            // recurrence edge that creates the diagonal wavefront
+            let mut gemm_deps = vec![layer_input];
+            if let Some(ph) = prev_h[l] {
+                gemm_deps.push(ph);
+            }
+            let gemm = tape.param_op(
+                format!("{p}.gemm"),
+                OpKind::MatMul { m: b, k: 2 * h, n: 4 * h },
+                &gemm_deps,
+                2 * h * 4 * h,
+            );
+            // bias add
+            let pre = tape.op(
+                format!("{p}.preact"),
+                OpKind::Elementwise { n: b * 4 * h, arity: 1, kind: EwKind::Arith },
+                &[gemm],
+            );
+            // four parallel gate activations
+            let gate_i = tape.op(
+                format!("{p}.gate_i"),
+                OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Transcendental },
+                &[pre],
+            );
+            let gate_f = tape.op(
+                format!("{p}.gate_f"),
+                OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Transcendental },
+                &[pre],
+            );
+            let gate_o = tape.op(
+                format!("{p}.gate_o"),
+                OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Transcendental },
+                &[pre],
+            );
+            let gate_g = tape.op(
+                format!("{p}.gate_g"),
+                OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Transcendental },
+                &[pre],
+            );
+            // cell update: c = f⊙c_prev + i⊙g
+            let mut c_deps = vec![gate_i, gate_f, gate_g];
+            if let Some(pc) = prev_c[l] {
+                c_deps.push(pc);
+            }
+            let mut c_new = tape.op(
+                format!("{p}.cell"),
+                OpKind::Elementwise { n: b * h, arity: 4, kind: EwKind::Arith },
+                &c_deps,
+            );
+            // hidden: h = o⊙tanh(c)
+            let mut h_new = tape.op(
+                format!("{p}.hidden"),
+                OpKind::Elementwise { n: b * h, arity: 2, kind: EwKind::Transcendental },
+                &[gate_o, c_new],
+            );
+            // PhasedLSTM time gate: k_t modulates both c and h
+            if let Some(time) = time_input {
+                let k_gate = tape.op(
+                    format!("{p}.time_gate"),
+                    OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Transcendental },
+                    &[time],
+                );
+                let mut cp_deps = vec![c_new, k_gate];
+                if let Some(pc) = prev_c[l] {
+                    cp_deps.push(pc);
+                }
+                c_new = tape.op(
+                    format!("{p}.cell_phased"),
+                    OpKind::Elementwise { n: b * h, arity: 3, kind: EwKind::Arith },
+                    &cp_deps,
+                );
+                let mut hp_deps = vec![h_new, k_gate];
+                if let Some(ph) = prev_h[l] {
+                    hp_deps.push(ph);
+                }
+                h_new = tape.op(
+                    format!("{p}.hidden_phased"),
+                    OpKind::Elementwise { n: b * h, arity: 3, kind: EwKind::Arith },
+                    &hp_deps,
+                );
+            }
+            prev_c[l] = Some(c_new);
+            prev_h[l] = Some(h_new);
+            layer_input = h_new;
+        }
+        step_hiddens.push(layer_input);
+    }
+
+    // softmax head over the whole sequence, as in the TF benchmark: gather
+    // the per-step outputs, one large projection GEMM, one softmax
+    let gathered = tape.op(
+        "head.concat",
+        OpKind::Concat { n: b * cfg.seq as u64 * h },
+        &step_hiddens,
+    );
+    let logits = tape.param_op(
+        "head.proj",
+        OpKind::MatMul { m: b * cfg.seq as u64, k: h, n: v },
+        &[gathered],
+        h * v,
+    );
+    let loss = tape.op(
+        "head.softmax",
+        OpKind::Softmax { batch: b * cfg.seq as u64, classes: v },
+        &[logits],
+    );
+    let builder = if cfg.training { tape.backward(loss) } else { tape.builder };
+    builder.build().expect("LSTM graph must be a valid DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::GraphStats;
+    use crate::models::config::ModelSize;
+
+    #[test]
+    fn medium_graph_scale() {
+        let g = build(&LstmConfig::for_size(ModelSize::Medium, false));
+        // 30 steps × 4 layers × ~9 fwd ops + backward ≈ few thousand
+        assert!(
+            (2000..6000).contains(&g.len()),
+            "medium LSTM has {} nodes",
+            g.len()
+        );
+        g.validate_order(&g.topo_order()).unwrap();
+    }
+
+    #[test]
+    fn phased_adds_time_gate_ops() {
+        let plain = build(&LstmConfig::for_size(ModelSize::Small, false));
+        let phased = build(&LstmConfig::for_size(ModelSize::Small, true));
+        assert!(phased.len() > plain.len() + 100, "time gates must add ops");
+    }
+
+    #[test]
+    fn sizes_are_ordered_by_work() {
+        let small = build(&LstmConfig::for_size(ModelSize::Small, false));
+        let medium = build(&LstmConfig::for_size(ModelSize::Medium, false));
+        let large = build(&LstmConfig::for_size(ModelSize::Large, false));
+        assert!(small.total_flops() < medium.total_flops());
+        assert!(medium.total_flops() < large.total_flops());
+    }
+
+    #[test]
+    fn graph_has_lstm_parallelism() {
+        // §7.3: "one cell from each layer can run in parallel, and there
+        // are 2-3 parallel operators in each cell, so the total number of
+        // parallelizable operations is around 8-12"
+        let g = build(&LstmConfig::for_size(ModelSize::Medium, false));
+        let stats = GraphStats::compute(&g);
+        assert!(stats.max_width >= 8, "max width {} too narrow", stats.max_width);
+    }
+
+    #[test]
+    fn has_sgd_updates_for_all_params() {
+        let cfg = LstmConfig::for_size(ModelSize::Small, false);
+        let g = build(&cfg);
+        let sgd = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::SgdUpdate { .. }))
+            .count();
+        // per timestep: embed + 4 fused cell gemms; plus one head proj
+        assert_eq!(sgd, cfg.seq * (1 + 4) + 1, "sgd updates {sgd}");
+    }
+
+    #[test]
+    fn recurrent_chain_limits_depth() {
+        // cell[t] must depend (transitively) on cell[t-1]
+        let g = build(&LstmConfig::for_size(ModelSize::Small, false));
+        let c0 = g.nodes().iter().find(|n| n.name == "t0.l0.cell").unwrap().id;
+        let c1 = g.nodes().iter().find(|n| n.name == "t1.l0.cell").unwrap().id;
+        // BFS from c0 must reach c1
+        let mut seen = vec![false; g.len()];
+        let mut stack = vec![c0];
+        while let Some(v) = stack.pop() {
+            if seen[v as usize] {
+                continue;
+            }
+            seen[v as usize] = true;
+            stack.extend_from_slice(g.succs(v));
+        }
+        assert!(seen[c1 as usize], "recurrence edge missing");
+    }
+}

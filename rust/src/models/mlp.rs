@@ -1,0 +1,81 @@
+//! A small MLP — not part of the paper's evaluation; used by unit tests,
+//! the quickstart example, and anywhere a cheap-but-nontrivial training
+//! graph is needed.
+
+use crate::graph::op::{EwKind, OpKind};
+use crate::graph::Graph;
+use crate::models::common::Tape;
+
+/// MLP hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct MlpConfig {
+    pub batch: usize,
+    pub input: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig { batch: 64, input: 784, hidden: vec![512, 256], classes: 10 }
+    }
+}
+
+/// Build the training graph.
+pub fn build(cfg: &MlpConfig) -> Graph {
+    let mut tape = Tape::new();
+    let b = cfg.batch as u64;
+    let input = tape.op("input", OpKind::Scalar, &[]);
+    let mut x = input;
+    let mut dim = cfg.input as u64;
+    for (i, &h) in cfg.hidden.iter().enumerate() {
+        let h = h as u64;
+        let fc = tape.param_op(
+            format!("fc{i}"),
+            OpKind::MatMul { m: b, k: dim, n: h },
+            &[x],
+            dim * h,
+        );
+        x = tape.op(
+            format!("relu{i}"),
+            OpKind::Elementwise { n: b * h, arity: 1, kind: EwKind::Relu },
+            &[fc],
+        );
+        dim = h;
+    }
+    let logits = tape.param_op(
+        "head",
+        OpKind::MatMul { m: b, k: dim, n: cfg.classes as u64 },
+        &[x],
+        dim * cfg.classes as u64,
+    );
+    let loss = tape.op(
+        "softmax",
+        OpKind::Softmax { batch: b, classes: cfg.classes as u64 },
+        &[logits],
+    );
+    tape.backward(loss).build().expect("MLP graph must be a valid DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builds() {
+        let g = build(&MlpConfig::default());
+        assert!(g.len() > 10);
+        g.validate_order(&g.topo_order()).unwrap();
+    }
+
+    #[test]
+    fn sgd_per_layer() {
+        let g = build(&MlpConfig::default());
+        let sgd = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::SgdUpdate { .. }))
+            .count();
+        assert_eq!(sgd, 3); // fc0, fc1, head
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact discovery.
+//!
+//! `make artifacts` produces `artifacts/*.hlo.txt` plus a
+//! `manifest.json` describing each module's entry shapes, so the Rust side
+//! can size its buffers without re-deriving anything from Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One module's manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    pub file: String,
+    /// Input tensor shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes (the module returns a tuple).
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form metadata (hyper-parameters the module was lowered with).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// A directory of compiled artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub modules: Vec<Manifest>,
+}
+
+/// Artifact errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifact directory {0} not found — run `make artifacts` first")]
+    MissingDir(String),
+    #[error("manifest.json missing in {0} — run `make artifacts`")]
+    MissingManifest(String),
+    #[error("malformed manifest: {0}")]
+    BadManifest(String),
+    #[error("unknown module `{0}` (have: {1})")]
+    UnknownModule(String, String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Default artifact directory: `$GRAPHI_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("GRAPHI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl ArtifactSet {
+    /// Load the manifest from a directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactSet, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(ArtifactError::MissingDir(dir.display().to_string()));
+        }
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.is_file() {
+            return Err(ArtifactError::MissingManifest(dir.display().to_string()));
+        }
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let doc = json::parse(&text).map_err(|e| ArtifactError::BadManifest(e.to_string()))?;
+        let modules = parse_manifest(&doc)?;
+        Ok(ArtifactSet { dir, modules })
+    }
+
+    /// Find a module by name.
+    pub fn module(&self, name: &str) -> Result<&Manifest, ArtifactError> {
+        self.modules.iter().find(|m| m.name == name).ok_or_else(|| {
+            ArtifactError::UnknownModule(
+                name.to_string(),
+                self.modules.iter().map(|m| m.name.clone()).collect::<Vec<_>>().join(", "),
+            )
+        })
+    }
+
+    /// Absolute path of a module's HLO text.
+    pub fn path_of(&self, m: &Manifest) -> PathBuf {
+        self.dir.join(&m.file)
+    }
+}
+
+fn parse_manifest(doc: &Json) -> Result<Vec<Manifest>, ArtifactError> {
+    let bad = |msg: &str| ArtifactError::BadManifest(msg.to_string());
+    let modules = doc
+        .get("modules")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| bad("missing `modules` array"))?;
+    let mut out = Vec::new();
+    for m in modules {
+        let name = m
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| bad("module missing `name`"))?
+            .to_string();
+        let file = m
+            .get("file")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| bad("module missing `file`"))?
+            .to_string();
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>, ArtifactError> {
+            let arr = m
+                .get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| bad(&format!("module missing `{key}`")))?;
+            arr.iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| bad("shape must be an array"))?
+                        .iter()
+                        .map(|d| {
+                            d.as_f64()
+                                .map(|x| x as usize)
+                                .ok_or_else(|| bad("dimension must be a number"))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut meta = BTreeMap::new();
+        if let Some(Json::Obj(entries)) = m.get("meta") {
+            for (k, v) in entries {
+                if let Some(x) = v.as_f64() {
+                    meta.insert(k.clone(), x);
+                }
+            }
+        }
+        out.push(Manifest { name, file, inputs: shapes("inputs")?, outputs: shapes("outputs")?, meta });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "modules": [
+        {
+          "name": "train_step",
+          "file": "train_step.hlo.txt",
+          "inputs": [[256, 1024], [8, 16]],
+          "outputs": [[1], [256, 1024]],
+          "meta": {"hidden": 256, "vocab": 256}
+        }
+      ]
+    }"#;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("graphi-artifact-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = tmpdir("ok");
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let set = ArtifactSet::load(&dir).unwrap();
+        let m = set.module("train_step").unwrap();
+        assert_eq!(m.inputs[0], vec![256, 1024]);
+        assert_eq!(m.meta["vocab"], 256.0);
+        assert!(set.path_of(m).ends_with("train_step.hlo.txt"));
+        assert!(matches!(
+            set.module("nope").unwrap_err(),
+            ArtifactError::UnknownModule(_, _)
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_reported() {
+        let err = ArtifactSet::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_reported() {
+        let dir = tmpdir("bad");
+        std::fs::write(dir.join("manifest.json"), "{\"modules\": [{}]}").unwrap();
+        assert!(matches!(
+            ArtifactSet::load(&dir).unwrap_err(),
+            ArtifactError::BadManifest(_)
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

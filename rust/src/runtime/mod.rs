@@ -1,0 +1,25 @@
+//! The real-compute path: PJRT execution of AOT-compiled JAX/Pallas
+//! artifacts, plus the real-threads Graphi engine.
+//!
+//! `make artifacts` runs Python **once** (build time): `python/compile/`
+//! lowers the JAX LSTM-LM (whose cell math is a Pallas kernel) to HLO
+//! *text* — the interchange format xla_extension 0.5.1 accepts (see
+//! /opt/xla-example/README.md). At run time this module loads, compiles,
+//! and executes those artifacts through the PJRT CPU client; Python is
+//! never on the request path.
+//!
+//! * [`artifacts`] — artifact discovery + JSON manifest parsing
+//! * [`pjrt`]      — client/executable wrappers over the `xla` crate
+//! * [`threaded`]  — the Graphi scheduler driving *real* host threads
+//!   (scheduler thread + executor fleet + SPSC rings), used by the
+//!   end-to-end training example and as proof the engine is not sim-only
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod threaded;
+pub mod train;
+
+pub use artifacts::{ArtifactSet, Manifest};
+pub use pjrt::{LoadedModule, PjrtRuntime};
+pub use threaded::ThreadedGraphi;
+pub use train::{LstmTrainer, SyntheticCorpus, TrainReport};

@@ -1,0 +1,243 @@
+//! The Graphi engine on *real* host threads.
+//!
+//! Same architecture as §4/§5 — a centralized scheduler thread (here: the
+//! calling thread), a fleet of executor threads, per-executor SPSC
+//! operation buffers, per-executor triggered queues flowing completions
+//! back — but with actual parallel execution of an arbitrary work function
+//! (the end-to-end example plugs PJRT executions in; tests use synthetic
+//! spin-work).
+//!
+//! On this repo's 1-core CI machine the fleet cannot show parallel
+//! *speedup*; what it demonstrates is that the scheduler core (bitmap +
+//! heap + rings) is real concurrent code producing valid schedules, and it
+//! is the engine the paper's system would ship on real silicon.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use crate::engine::policies::Policy;
+use crate::engine::ready::{DepTracker, ReadySet};
+use crate::engine::ring::SpscRing;
+use crate::engine::scheduler::IdleBitmap;
+use crate::engine::trace::OpRecord;
+use crate::graph::{Graph, NodeId};
+
+/// Real-threads Graphi configuration.
+#[derive(Debug, Clone)]
+pub struct ThreadedGraphi {
+    /// Executor threads to spawn.
+    pub executors: usize,
+    /// Ready-op ordering.
+    pub policy: Policy,
+    /// Per-executor operation buffer depth (§5.2 uses 1).
+    pub buffer_depth: usize,
+}
+
+impl ThreadedGraphi {
+    pub fn new(executors: usize) -> ThreadedGraphi {
+        ThreadedGraphi { executors, policy: Policy::CriticalPathFirst, buffer_depth: 1 }
+    }
+}
+
+/// Result of a threaded run.
+#[derive(Debug)]
+pub struct ThreadedRunResult {
+    /// Wall-clock makespan, µs.
+    pub wall_us: f64,
+    /// Per-op records (wall-clock µs since run start).
+    pub records: Vec<OpRecord>,
+    /// Scheduler dispatch count.
+    pub dispatches: u64,
+}
+
+impl ThreadedGraphi {
+    /// Execute `graph`, calling `work(node)` for each op on some executor
+    /// thread, dependencies respected. `levels` orders ready ops (pass
+    /// profiled level values, or unit levels).
+    pub fn run<F>(&self, graph: &Graph, levels: &[f64], work: F) -> ThreadedRunResult
+    where
+        F: Fn(NodeId) + Send + Sync,
+    {
+        assert_eq!(levels.len(), graph.len());
+        assert!(self.executors >= 1);
+        let n_exec = self.executors;
+        let op_rings: Vec<SpscRing<NodeId>> =
+            (0..n_exec).map(|_| SpscRing::new(self.buffer_depth)).collect();
+        let done_rings: Vec<SpscRing<NodeId>> =
+            (0..n_exec).map(|_| SpscRing::new(graph.len() + 1)).collect();
+        let shutdown = AtomicBool::new(false);
+        let t0 = Instant::now();
+
+        let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
+        let mut dispatches = 0u64;
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_exec);
+            for e in 0..n_exec {
+                let op_ring = &op_rings[e];
+                let done_ring = &done_rings[e];
+                let shutdown = &shutdown;
+                let work = &work;
+                handles.push(scope.spawn(move || {
+                    // Algorithm 2: poll own buffer, execute, report back.
+                    let mut records = Vec::new();
+                    loop {
+                        if let Some(node) = op_ring.pop() {
+                            let start = t0.elapsed().as_secs_f64() * 1e6;
+                            work(node);
+                            let end = t0.elapsed().as_secs_f64() * 1e6;
+                            records.push(OpRecord {
+                                node,
+                                executor: e as u32,
+                                start_us: start,
+                                end_us: end,
+                            });
+                            // the executor's own triggered queue (§4.4)
+                            done_ring.push(node).expect("done ring sized for whole graph");
+                        } else if shutdown.load(Ordering::Acquire) {
+                            return records;
+                        } else {
+                            std::hint::spin_loop();
+                            std::thread::yield_now();
+                        }
+                    }
+                }));
+            }
+
+            // ---- scheduler (Algorithm 1) on the calling thread ----
+            // Executor availability is tracked as a bitmap (§5.2); a bit is
+            // set when the executor's depth-bounded operation buffer has
+            // room. With depth 1 this is the paper's "buffer at most one
+            // operation" behaviour: the scheduler can stage the next op
+            // while the current one runs, and no deeper (avoiding the load
+            // imbalance §5.2 observed with larger buffers).
+            let mut deps = DepTracker::new(graph);
+            let mut ready = ReadySet::new(self.policy, levels.to_vec(), 0);
+            let mut available = IdleBitmap::new(n_exec);
+            let mut inflight = vec![0usize; n_exec];
+            for s in deps.sources() {
+                ready.push(s);
+            }
+            while !deps.is_done() {
+                // poll triggered queues from each executor
+                for (e, ring) in done_rings.iter().enumerate() {
+                    while let Some(node) = ring.pop() {
+                        inflight[e] -= 1;
+                        if inflight[e] == self.buffer_depth - 1 && !available.is_idle(e) {
+                            available.set_idle(e);
+                        }
+                        deps.complete(graph, node, |n| ready.push(n));
+                    }
+                }
+                // dispatch: max-level op → first available executor (bit-scan)
+                let mut progressed = false;
+                while !ready.is_empty() && available.any_idle() {
+                    let e = available.first_idle().unwrap();
+                    let node = ready.pop().unwrap();
+                    op_rings[e].push(node).expect("availability bit ⇒ ring space");
+                    dispatches += 1;
+                    progressed = true;
+                    inflight[e] += 1;
+                    if inflight[e] >= self.buffer_depth {
+                        available.set_busy(e);
+                    }
+                }
+                // On the paper's machine the scheduler owns a reserved core
+                // and busy-polls (§5.2). On an oversubscribed host (e.g. a
+                // 1-core CI box) pure spinning starves the executor threads
+                // of their timeslice — yield whenever no dispatch happened
+                // so completions can actually arrive (§Perf L3 iteration 1:
+                // 2.9 s → ~ms-scale for a ~1.5k-op graph).
+                if !progressed {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            shutdown.store(true, Ordering::Release);
+            for h in handles {
+                all_records.push(h.join().expect("executor thread panicked"));
+            }
+        });
+
+        let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
+        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+        ThreadedRunResult { wall_us, records, dispatches }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build as mlp, MlpConfig};
+    use crate::models::{self, ModelKind, ModelSize};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_every_op_exactly_once() {
+        let g = mlp(&MlpConfig::default());
+        let counter = AtomicU64::new(0);
+        let engine = ThreadedGraphi::new(3);
+        let result = engine.run(&g, &vec![1.0; g.len()], |_n| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
+        assert_eq!(result.records.len(), g.len());
+        assert_eq!(result.dispatches, g.len() as u64);
+    }
+
+    #[test]
+    fn respects_dependencies_under_real_concurrency() {
+        // Record completion order with an atomic clock and verify
+        // topological consistency — on real threads, with 4 executors.
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let clock = AtomicU64::new(0);
+        let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
+        let engine = ThreadedGraphi::new(4);
+        engine.run(&g, &vec![1.0; g.len()], |n| {
+            // simulate a little work to widen race windows
+            for _ in 0..100 {
+                std::hint::spin_loop();
+            }
+            let t = clock.fetch_add(1, Ordering::SeqCst);
+            stamp[n as usize].store(t, Ordering::SeqCst);
+        });
+        for v in 0..g.len() as NodeId {
+            for &p in g.preds(v) {
+                let tp = stamp[p as usize].load(Ordering::SeqCst);
+                let tv = stamp[v as usize].load(Ordering::SeqCst);
+                assert!(tp < tv, "dep violated: {p} (t={tp}) vs {v} (t={tv})");
+            }
+        }
+    }
+
+    #[test]
+    fn single_executor_works() {
+        let g = mlp(&MlpConfig::default());
+        let engine = ThreadedGraphi::new(1);
+        let result = engine.run(&g, &vec![1.0; g.len()], |_| {});
+        assert_eq!(result.records.len(), g.len());
+    }
+
+    #[test]
+    fn cp_first_orders_by_level_on_single_executor() {
+        // with 1 executor and depth-1 buffering, dispatch order follows
+        // level priority among simultaneously-ready ops
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let _a = b.add("a", OpKind::Scalar);
+        let _bb = b.add("b", OpKind::Scalar);
+        let _c = b.add("c", OpKind::Scalar);
+        let g = b.build().unwrap();
+        // levels make node 2 hottest, then 0, then 1
+        let levels = vec![5.0, 1.0, 9.0];
+        let order = std::sync::Mutex::new(Vec::new());
+        ThreadedGraphi::new(1).run(&g, &levels, |n| {
+            order.lock().unwrap().push(n);
+        });
+        let order = order.into_inner().unwrap();
+        assert_eq!(order, vec![2, 0, 1]);
+    }
+}

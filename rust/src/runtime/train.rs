@@ -1,0 +1,226 @@
+//! End-to-end training driver over the AOT-compiled `train_step` artifact.
+//!
+//! The Layer-2 JAX model (`python/compile/model.py`) lowers its full
+//! training step — forward (Pallas LSTM cell), backward, SGD — into one
+//! HLO module with signature:
+//!
+//! ```text
+//! train_step(params: f32[P], tokens: f32[B, T+1]) -> (loss: f32[1], new_params: f32[P])
+//! ```
+//!
+//! This driver owns the parameter vector, streams synthetic byte-level
+//! corpus batches, calls the module once per step (pure Rust + PJRT; no
+//! Python), and records the loss curve. Used by `graphi train` and
+//! `examples/lstm_train.rs`; EXPERIMENTS.md logs a reference run.
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::artifacts::ArtifactSet;
+use super::pjrt::{LoadedModule, PjrtRuntime};
+
+/// Synthetic byte-level corpus: a deterministic mixture of repeated
+/// "words" with noise, so a language model has real structure to learn
+/// (loss drops well below the uniform-entropy baseline).
+pub struct SyntheticCorpus {
+    text: Vec<u8>,
+    cursor: usize,
+}
+
+impl SyntheticCorpus {
+    pub fn new(seed: u64, len: usize) -> SyntheticCorpus {
+        let mut rng = Rng::new(seed);
+        let words: Vec<&[u8]> = vec![
+            b"the ", b"quick ", b"brown ", b"fox ", b"jumps ", b"over ", b"lazy ", b"dog. ",
+            b"graphi ", b"schedules ", b"graphs ", b"on ", b"manycore ", b"cpus. ",
+        ];
+        let mut text = Vec::with_capacity(len);
+        while text.len() < len {
+            text.extend_from_slice(words[rng.range(0, words.len())]);
+            // occasional noise byte keeps the task from being trivial
+            if rng.chance(0.02) {
+                text.push(rng.below(256) as u8);
+            }
+        }
+        text.truncate(len);
+        SyntheticCorpus { text, cursor: 0 }
+    }
+
+    /// Next `[batch, seq+1]` token window (as f32 codes for the module).
+    pub fn next_batch(&mut self, batch: usize, seq: usize) -> Vec<f32> {
+        let window = seq + 1;
+        let mut out = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            if self.cursor + window >= self.text.len() {
+                self.cursor = 0;
+            }
+            out.extend(self.text[self.cursor..self.cursor + window].iter().map(|&b| b as f32));
+            self.cursor += window;
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.text.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.text.is_empty()
+    }
+}
+
+/// One training run's outcome.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+    pub params: usize,
+}
+
+impl TrainReport {
+    pub fn initial_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    /// Mean of the last 10 % of steps.
+    pub fn final_loss(&self) -> f32 {
+        let tail = (self.losses.len() / 10).max(1);
+        let s: f32 = self.losses[self.losses.len() - tail..].iter().sum();
+        s / tail as f32
+    }
+
+    pub fn render_curve(&self, buckets: usize) -> String {
+        let mut out = String::from("step    loss\n");
+        let stride = (self.losses.len() / buckets.max(1)).max(1);
+        for (i, loss) in self.losses.iter().enumerate().step_by(stride) {
+            out.push_str(&format!("{i:6}  {loss:.4}\n"));
+        }
+        out.push_str(&format!(
+            "{:6}  {:.4}  (final)\n",
+            self.losses.len() - 1,
+            self.losses.last().unwrap()
+        ));
+        out
+    }
+}
+
+/// The trainer.
+pub struct LstmTrainer {
+    module: LoadedModule,
+    params: Vec<f32>,
+    batch: usize,
+    seq: usize,
+}
+
+impl LstmTrainer {
+    /// Load `train_step` from the artifact set and initialize parameters
+    /// deterministically (scaled uniform, matching model.py's scheme).
+    pub fn new(runtime: &PjrtRuntime, artifacts: &ArtifactSet, seed: u64) -> Result<LstmTrainer> {
+        let module = runtime.load(artifacts, "train_step")?;
+        let p = module.manifest.inputs[0][0];
+        let batch = *module
+            .manifest
+            .meta
+            .get("batch")
+            .context("manifest missing meta.batch")? as usize;
+        let seq = *module
+            .manifest
+            .meta
+            .get("seq")
+            .context("manifest missing meta.seq")? as usize;
+        let scale = *module.manifest.meta.get("init_scale").unwrap_or(&0.1) as f32;
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = (0..p)
+            .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale)
+            .collect();
+        Ok(LstmTrainer { module, params, batch, seq })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Run one SGD step; returns the loss.
+    pub fn step(&mut self, tokens: Vec<f32>) -> Result<f32> {
+        let outputs = self
+            .module
+            .run_f32(&[std::mem::take(&mut self.params), tokens])
+            .context("train_step execution")?;
+        anyhow::ensure!(outputs.len() == 2, "train_step must return (loss, params)");
+        let loss = outputs[0][0];
+        self.params = outputs[1].clone();
+        anyhow::ensure!(loss.is_finite(), "loss diverged to {loss}");
+        Ok(loss)
+    }
+
+    /// Train for `steps` steps on a synthetic corpus.
+    pub fn train(&mut self, steps: usize, corpus_seed: u64, log_every: usize) -> Result<TrainReport> {
+        let mut corpus = SyntheticCorpus::new(corpus_seed, 1 << 20);
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let batch = corpus.next_batch(self.batch, self.seq);
+            let loss = self.step(batch)?;
+            losses.push(loss);
+            if log_every > 0 && step % log_every == 0 {
+                crate::log_info!("step {step:5}  loss {loss:.4}");
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            steps,
+            losses,
+            wall_s,
+            steps_per_s: steps as f64 / wall_s,
+            params: self.params.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic_and_structured() {
+        let a = SyntheticCorpus::new(1, 10_000);
+        let b = SyntheticCorpus::new(1, 10_000);
+        assert_eq!(a.text, b.text);
+        // structure: 'e' (from "the") far more common than random bytes
+        let e_count = a.text.iter().filter(|&&c| c == b'e').count();
+        assert!(e_count > a.len() / 50, "e count {e_count}");
+    }
+
+    #[test]
+    fn batches_have_window_shape() {
+        let mut c = SyntheticCorpus::new(2, 10_000);
+        let batch = c.next_batch(8, 16);
+        assert_eq!(batch.len(), 8 * 17);
+        assert!(batch.iter().all(|&t| (0.0..256.0).contains(&t)));
+    }
+
+    #[test]
+    fn batches_advance() {
+        let mut c = SyntheticCorpus::new(3, 10_000);
+        let a = c.next_batch(4, 8);
+        let b = c.next_batch(4, 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn report_statistics() {
+        let r = TrainReport {
+            steps: 100,
+            losses: (0..100).map(|i| 5.0 - 0.04 * i as f32).collect(),
+            wall_s: 10.0,
+            steps_per_s: 10.0,
+            params: 1000,
+        };
+        assert_eq!(r.initial_loss(), 5.0);
+        assert!(r.final_loss() < 1.5);
+        assert!(r.render_curve(10).contains("final"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Shared-MCDRAM bandwidth arbitration.
+//!
+//! Concurrently running operations share the chip's memory bandwidth.
+//! When the sum of their demands exceeds the MCDRAM limit, memory-bound
+//! ops stretch proportionally. The arbiter uses a simple open-loop
+//! approximation that keeps the simulation single-pass: an op's stretch
+//! factor is fixed at dispatch time from the demand of the ops running at
+//! that moment. This slightly underestimates contention for ops dispatched
+//! early into a burst, which is acceptable for the paper's workloads (the
+//! element-wise fraction of total time is modest).
+
+/// Tracks aggregate bandwidth demand of in-flight operations.
+#[derive(Debug)]
+pub struct BandwidthArbiter {
+    /// MCDRAM bandwidth budget, bytes/s.
+    budget: f64,
+    /// Demands of currently running ops, bytes/s, keyed by token.
+    running: Vec<(u64, f64)>,
+    next_token: u64,
+}
+
+impl BandwidthArbiter {
+    pub fn new(budget_bytes_per_s: f64) -> BandwidthArbiter {
+        BandwidthArbiter { budget: budget_bytes_per_s, running: Vec::new(), next_token: 0 }
+    }
+
+    /// Aggregate demand of in-flight ops, bytes/s.
+    pub fn current_demand(&self) -> f64 {
+        self.running.iter().map(|(_, d)| d).sum()
+    }
+
+    /// Register an op that will demand `demand` bytes/s; returns the
+    /// stretch factor to apply to its duration and a token to release on
+    /// completion.
+    pub fn admit(&mut self, demand: f64) -> (f64, u64) {
+        let token = self.next_token;
+        self.next_token += 1;
+        let total = self.current_demand() + demand;
+        self.running.push((token, demand));
+        let stretch = if total > self.budget { total / self.budget } else { 1.0 };
+        (stretch, token)
+    }
+
+    /// Release a completed op's demand.
+    pub fn release(&mut self, token: u64) {
+        if let Some(pos) = self.running.iter().position(|(t, _)| *t == token) {
+            self.running.swap_remove(pos);
+        } else {
+            debug_assert!(false, "double release of bandwidth token {token}");
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_budget_no_stretch() {
+        let mut a = BandwidthArbiter::new(400e9);
+        let (s1, t1) = a.admit(100e9);
+        let (s2, _t2) = a.admit(200e9);
+        assert_eq!(s1, 1.0);
+        assert_eq!(s2, 1.0);
+        a.release(t1);
+        assert_eq!(a.current_demand(), 200e9);
+    }
+
+    #[test]
+    fn over_budget_stretches_proportionally() {
+        let mut a = BandwidthArbiter::new(400e9);
+        let (_, _) = a.admit(300e9);
+        let (s, _) = a.admit(300e9);
+        assert!((s - 1.5).abs() < 1e-12, "600/400 = 1.5, got {s}");
+    }
+
+    #[test]
+    fn release_restores_headroom() {
+        let mut a = BandwidthArbiter::new(100e9);
+        let (_, t) = a.admit(100e9);
+        a.release(t);
+        let (s, _) = a.admit(50e9);
+        assert_eq!(s, 1.0);
+        assert_eq!(a.in_flight(), 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event simulation substrate for the KNL manycore CPU.
+//!
+//! The paper's testbed (68-core Xeon Phi 7250) is unavailable, so the
+//! engines in [`crate::engine`] execute against virtual time provided by
+//! this module (DESIGN.md §2 and §5 explain the substitution and fidelity
+//! model):
+//!
+//! * [`event`]     — the event queue (virtual clock, stable ordering)
+//! * [`topology`]  — cores, tiles, and executor→core placement
+//! * [`bandwidth`] — shared-MCDRAM bandwidth arbitration
+//!
+//! The *algorithms* under study (critical-path scheduling, ring buffers,
+//! bitmap scans) are real Rust code; only durations are simulated.
+
+pub mod bandwidth;
+pub mod event;
+pub mod topology;
+
+pub use bandwidth::BandwidthArbiter;
+pub use event::{EventQueue, SimTime};
+pub use topology::{Placement, PlacementKind};

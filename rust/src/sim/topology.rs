@@ -1,0 +1,302 @@
+//! Executor→core placement on the tiled manycore topology.
+//!
+//! KNL organizes cores in pairs ("tiles") sharing 1 MB of L2 (§2, Fig 1).
+//! Graphi pins each executor's thread team to exclusive tiles so that
+//! executors share neither cores nor L2 (§4.4). The OS-managed baseline
+//! scatters threads, producing the collisions priced by
+//! [`crate::cost::Interference`].
+
+use crate::cost::machine::Machine;
+
+/// How threads are bound to cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Graphi: pinned, executor-disjoint, tile-aligned.
+    PinnedDisjoint,
+    /// Pinned but deliberately overlapping tiles (ablation of §4.4).
+    PinnedSharedTiles,
+    /// OS-managed: no binding; collisions priced stochastically.
+    OsManaged,
+}
+
+/// The concrete placement of a fleet of symmetric executors.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub kind: PlacementKind,
+    /// `cores[e]` = physical core ids owned by executor `e` (empty for
+    /// OS-managed placement).
+    pub cores: Vec<Vec<usize>>,
+    /// Core reserved for the centralized scheduler thread (§5.2).
+    pub scheduler_core: Option<usize>,
+    /// Core reserved for the light-weight executor (§5.2).
+    pub lightweight_core: Option<usize>,
+    /// Cores per tile of the machine this was computed for.
+    cores_per_tile: usize,
+}
+
+/// Placement construction errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlacementError {
+    #[error("{requested} worker cores requested but only {available} available \
+             (machine has {total}, {reserved} reserved for scheduler + light-weight executor)")]
+    NotEnoughCores {
+        requested: usize,
+        available: usize,
+        total: usize,
+        reserved: usize,
+    },
+    #[error("executor team size must be > 0")]
+    ZeroTeam,
+    #[error("executor count must be > 0")]
+    ZeroExecutors,
+}
+
+impl Placement {
+    /// Graphi's placement (§4.4 + §5.2): reserve one core for the
+    /// scheduler and one for the light-weight executor, then hand each of
+    /// the `executors` teams `threads_per` exclusive cores, tile-aligned
+    /// (even team sizes never split a tile between executors).
+    pub fn pinned_disjoint(
+        machine: &Machine,
+        executors: usize,
+        threads_per: usize,
+    ) -> Result<Placement, PlacementError> {
+        Self::pinned(machine, executors, threads_per, true)
+    }
+
+    /// Ablation placement: pinned but packed without tile alignment, so
+    /// adjacent executors share L2 tiles.
+    pub fn pinned_shared_tiles(
+        machine: &Machine,
+        executors: usize,
+        threads_per: usize,
+    ) -> Result<Placement, PlacementError> {
+        Self::pinned(machine, executors, threads_per, false)
+    }
+
+    fn pinned(
+        machine: &Machine,
+        executors: usize,
+        threads_per: usize,
+        tile_aligned: bool,
+    ) -> Result<Placement, PlacementError> {
+        if executors == 0 {
+            return Err(PlacementError::ZeroExecutors);
+        }
+        if threads_per == 0 {
+            return Err(PlacementError::ZeroTeam);
+        }
+        let reserved = 2; // scheduler + light-weight executor (§5.2, §7.3)
+        let available = machine.cores.saturating_sub(reserved);
+        let requested = executors * threads_per;
+        if requested > available {
+            return Err(PlacementError::NotEnoughCores {
+                requested,
+                available,
+                total: machine.cores,
+                reserved,
+            });
+        }
+        let cpt = machine.cores_per_tile;
+        // Reserve the two highest cores (the last tile) for scheduler + LW.
+        let scheduler_core = machine.cores - 1;
+        let lightweight_core = machine.cores - 2;
+        let mut next_core = 0usize;
+        let mut cores = Vec::with_capacity(executors);
+        for _ in 0..executors {
+            if tile_aligned {
+                // round the executor's start up to a tile boundary so teams
+                // of even size never straddle another executor's tile
+                if threads_per >= cpt && next_core % cpt != 0 {
+                    next_core += cpt - (next_core % cpt);
+                }
+            }
+            let team: Vec<usize> = (next_core..next_core + threads_per).collect();
+            next_core += threads_per;
+            cores.push(team);
+        }
+        let kind = if tile_aligned {
+            PlacementKind::PinnedDisjoint
+        } else {
+            PlacementKind::PinnedSharedTiles
+        };
+        Ok(Placement {
+            kind,
+            cores,
+            scheduler_core: Some(scheduler_core),
+            lightweight_core: Some(lightweight_core),
+            cores_per_tile: cpt,
+        })
+    }
+
+    /// OS-managed placement: `executors` logical executors, no binding.
+    pub fn os_managed(executors: usize) -> Placement {
+        Placement {
+            kind: PlacementKind::OsManaged,
+            cores: vec![Vec::new(); executors],
+            scheduler_core: None,
+            lightweight_core: None,
+            cores_per_tile: 2,
+        }
+    }
+
+    pub fn executors(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Tile ids used by executor `e`.
+    pub fn tiles_of(&self, e: usize) -> Vec<usize> {
+        let mut tiles: Vec<usize> = self.cores[e].iter().map(|c| c / self.cores_per_tile).collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+        tiles
+    }
+
+    /// Do executors `a` and `b` share an L2 tile?
+    pub fn executors_share_tile(&self, a: usize, b: usize) -> bool {
+        if self.kind == PlacementKind::OsManaged {
+            return true; // unknown placement — assume the worst
+        }
+        let ta = self.tiles_of(a);
+        let tb = self.tiles_of(b);
+        ta.iter().any(|t| tb.contains(t))
+    }
+
+    /// Does *any* executor pair share a tile? Graphi's §4.4 invariant is
+    /// that this is false.
+    pub fn any_tile_sharing(&self) -> bool {
+        for a in 0..self.executors() {
+            for b in (a + 1)..self.executors() {
+                if self.executors_share_tile(a, b) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Total worker threads across executors.
+    pub fn total_threads(&self, threads_per: usize) -> usize {
+        self.executors() * threads_per
+    }
+
+    /// Does executor `e`'s team span more than one NUMA domain of
+    /// `machine`? (SNC modes only; quadrant is one domain.)
+    pub fn executor_spans_domains(&self, machine: &Machine, e: usize) -> bool {
+        if machine.numa_domains <= 1 || self.cores[e].is_empty() {
+            return false;
+        }
+        let first = machine.domain_of_core(self.cores[e][0]);
+        self.cores[e].iter().any(|&c| machine.domain_of_core(c) != first)
+    }
+}
+
+/// The symmetric configurations the profiler enumerates (§4.2): for a
+/// 64-core worker pool, `1×64, 2×32, …, 64×1`, plus any model-specific
+/// extras the caller appends (6×10 for PathNet, 3×21 for GoogleNet).
+pub fn symmetric_configs(worker_cores: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut k = 1usize;
+    while k <= worker_cores {
+        out.push((k, worker_cores / k));
+        k *= 2;
+    }
+    out.retain(|&(_, t)| t > 0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knl() -> Machine {
+        Machine::knl7250()
+    }
+
+    #[test]
+    fn graphi_placement_is_tile_disjoint() {
+        // the paper's 8×8 configuration
+        let p = Placement::pinned_disjoint(&knl(), 8, 8).unwrap();
+        assert_eq!(p.executors(), 8);
+        assert!(!p.any_tile_sharing(), "§4.4: executors must not share L2 tiles");
+        // every executor owns exactly 4 tiles (8 threads / 2 cores-per-tile)
+        for e in 0..8 {
+            assert_eq!(p.tiles_of(e).len(), 4);
+        }
+    }
+
+    #[test]
+    fn reserved_cores_for_scheduler_and_lightweight() {
+        let p = Placement::pinned_disjoint(&knl(), 32, 2).unwrap();
+        let sched = p.scheduler_core.unwrap();
+        let lw = p.lightweight_core.unwrap();
+        assert_ne!(sched, lw);
+        for e in 0..p.executors() {
+            assert!(!p.cores[e].contains(&sched));
+            assert!(!p.cores[e].contains(&lw));
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        // 66 worker cores available on the 68-core part
+        assert!(Placement::pinned_disjoint(&knl(), 33, 2).is_ok());
+        let err = Placement::pinned_disjoint(&knl(), 64, 2).unwrap_err();
+        assert!(matches!(err, PlacementError::NotEnoughCores { .. }));
+    }
+
+    #[test]
+    fn odd_team_sizes_can_share_tiles_when_forced() {
+        // pinned-shared placement with odd team size straddles tiles
+        let p = Placement::pinned_shared_tiles(&knl(), 4, 3).unwrap();
+        assert!(p.any_tile_sharing());
+    }
+
+    #[test]
+    fn single_thread_executors_share_no_tiles_when_aligned() {
+        // 1-thread executors at tile-aligned packing still share tiles
+        // pairwise (two cores per tile) — the paper's §5.2 chooses *even*
+        // team sizes precisely to avoid this.
+        let p = Placement::pinned_disjoint(&knl(), 16, 1).unwrap();
+        assert!(p.any_tile_sharing(), "odd teams inevitably share tiles");
+        let p2 = Placement::pinned_disjoint(&knl(), 16, 2).unwrap();
+        assert!(!p2.any_tile_sharing(), "even teams are tile-exclusive");
+    }
+
+    #[test]
+    fn os_managed_assumes_sharing() {
+        let p = Placement::os_managed(8);
+        assert!(p.executors_share_tile(0, 7));
+    }
+
+    #[test]
+    fn symmetric_config_enumeration() {
+        let configs = symmetric_configs(64);
+        assert!(configs.contains(&(1, 64)));
+        assert!(configs.contains(&(8, 8)));
+        assert!(configs.contains(&(64, 1)));
+        assert_eq!(configs.len(), 7); // 1,2,4,8,16,32,64
+        for &(k, t) in &configs {
+            assert_eq!(k * t, 64);
+        }
+    }
+
+    #[test]
+    fn snc4_domain_spanning() {
+        let snc = Machine::knl7250_snc4();
+        // 17-core domains: an 8×8 packing puts executor 2 (cores 16..24)
+        // across the domain-0/1 boundary
+        let p = Placement::pinned_disjoint(&snc, 8, 8).unwrap();
+        assert!(!p.executor_spans_domains(&snc, 0));
+        assert!(p.executor_spans_domains(&snc, 2));
+        // quadrant mode never spans
+        let quad = Machine::knl7250();
+        assert!(!p.executor_spans_domains(&quad, 2));
+    }
+
+    #[test]
+    fn zero_args_rejected() {
+        assert_eq!(Placement::pinned_disjoint(&knl(), 0, 4).unwrap_err(), PlacementError::ZeroExecutors);
+        assert_eq!(Placement::pinned_disjoint(&knl(), 4, 0).unwrap_err(), PlacementError::ZeroTeam);
+    }
+}

@@ -1,0 +1,272 @@
+//! Measurement harness (the image has no `criterion`).
+//!
+//! `cargo bench` targets are `harness = false` binaries that build a
+//! [`BenchRunner`], register closures, and get warmup, repeated sampling,
+//! outlier-robust summaries, and both human-readable and CSV output. The
+//! same runner backs `graphi bench <figure>` in the CLI so every paper
+//! table/figure can be regenerated either way.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Configuration for one run of the harness.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (discarded).
+    pub warmup: usize,
+    /// Measured samples.
+    pub samples: usize,
+    /// Lower bound on total measurement time per benchmark; the runner
+    /// keeps sampling past `samples` until this much time has elapsed.
+    pub min_time_s: f64,
+    /// Emit a CSV file next to the text report (if `Some(path)`).
+    pub csv_path: Option<String>,
+    /// Quiet mode: suppress per-sample progress.
+    pub quiet: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, samples: 10, min_time_s: 0.2, csv_path: None, quiet: true }
+    }
+}
+
+impl BenchConfig {
+    /// Honors `GRAPHI_BENCH_FAST=1` for CI-speed runs.
+    pub fn from_env() -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        if std::env::var("GRAPHI_BENCH_FAST").as_deref() == Ok("1") {
+            cfg.warmup = 1;
+            cfg.samples = 3;
+            cfg.min_time_s = 0.0;
+        }
+        cfg
+    }
+}
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Extra key=value labels (model, size, executors …) for CSV output.
+    pub labels: Vec<(String, String)>,
+    /// Sample summary in microseconds.
+    pub summary: Summary,
+    /// Optional derived metric, e.g. GFLOPS, with a unit label.
+    pub metric: Option<(f64, &'static str)>,
+}
+
+/// The harness.
+pub struct BenchRunner {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+    group: String,
+}
+
+impl BenchRunner {
+    pub fn new(group: &str) -> BenchRunner {
+        BenchRunner { config: BenchConfig::from_env(), results: Vec::new(), group: group.to_string() }
+    }
+
+    pub fn with_config(group: &str, config: BenchConfig) -> BenchRunner {
+        BenchRunner { config, results: Vec::new(), group: group.to_string() }
+    }
+
+    /// Measure `f`, which returns a value that must not be optimized away.
+    pub fn bench<T>(&mut self, name: &str, labels: &[(&str, String)], mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.config.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples_us = Vec::with_capacity(self.config.samples);
+        let started = Instant::now();
+        while samples_us.len() < self.config.samples
+            || started.elapsed().as_secs_f64() < self.config.min_time_s
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            if samples_us.len() >= self.config.samples * 100 {
+                break; // safety valve for very fast bodies
+            }
+        }
+        let summary = Summary::from_samples(&samples_us);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            summary,
+            metric: None,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed result (e.g. a simulated makespan,
+    /// where wall time is meaningless and the metric *is* the model output).
+    pub fn record(&mut self, name: &str, labels: &[(&str, String)], value_us: f64) {
+        self.record_with_metric(name, labels, value_us, None);
+    }
+
+    /// `record` with a derived metric such as GFLOPS.
+    pub fn record_with_metric(
+        &mut self,
+        name: &str,
+        labels: &[(&str, String)],
+        value_us: f64,
+        metric: Option<(f64, &'static str)>,
+    ) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            summary: Summary::from_samples(&[value_us]),
+            metric,
+        });
+    }
+
+    /// Attach a metric to the most recent result.
+    pub fn set_metric(&mut self, value: f64, unit: &'static str) {
+        if let Some(last) = self.results.last_mut() {
+            last.metric = Some((value, unit));
+        }
+    }
+
+    /// Render the text report.
+    pub fn report(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== bench group: {} ==", self.group);
+        let name_w = self
+            .results
+            .iter()
+            .map(|r| r.name.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        let _ = writeln!(
+            out,
+            "{:name_w$}  {:>12} {:>12} {:>12} {:>10}",
+            "name", "mean", "p50", "max", "metric"
+        );
+        for r in &self.results {
+            let metric = match r.metric {
+                Some((v, unit)) => format!("{v:.2} {unit}"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "{:name_w$}  {:>12} {:>12} {:>12} {:>10}",
+                r.name,
+                crate::util::fmt_us(r.summary.mean),
+                crate::util::fmt_us(r.summary.p50),
+                crate::util::fmt_us(r.summary.max),
+                metric,
+            );
+        }
+        out
+    }
+
+    /// Render CSV (one row per result, labels flattened as columns).
+    pub fn csv(&self) -> String {
+        use std::fmt::Write;
+        // union of label keys, stable order of first appearance
+        let mut keys: Vec<String> = Vec::new();
+        for r in &self.results {
+            for (k, _) in &r.labels {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        let mut out = String::from("group,name");
+        for k in &keys {
+            let _ = write!(out, ",{k}");
+        }
+        out.push_str(",mean_us,std_us,p50_us,p99_us,n,metric,metric_unit\n");
+        for r in &self.results {
+            let _ = write!(out, "{},{}", self.group, r.name);
+            for k in &keys {
+                let v = r
+                    .labels
+                    .iter()
+                    .find(|(lk, _)| lk == k)
+                    .map(|(_, lv)| lv.as_str())
+                    .unwrap_or("");
+                let _ = write!(out, ",{v}");
+            }
+            let (mv, mu) = r.metric.map(|(v, u)| (format!("{v}"), u)).unwrap_or_default();
+            let _ = writeln!(
+                out,
+                ",{:.3},{:.3},{:.3},{:.3},{},{},{}",
+                r.summary.mean, r.summary.std, r.summary.p50, r.summary.p99, r.summary.n, mv, mu
+            );
+        }
+        out
+    }
+
+    /// Print the report and write CSV if configured. Call at the end of a
+    /// bench main().
+    pub fn finish(&self) {
+        print!("{}", self.report());
+        if let Some(path) = &self.config.csv_path {
+            if let Some(parent) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            match std::fs::write(path, self.csv()) {
+                Ok(()) => println!("csv written to {path}"),
+                Err(e) => eprintln!("failed to write {path}: {e}"),
+            }
+        }
+    }
+}
+
+/// Convenience: label vector builder.
+#[macro_export]
+macro_rules! labels {
+    ($($k:expr => $v:expr),* $(,)?) => {
+        vec![$(($k, format!("{}", $v))),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut r = BenchRunner::with_config(
+            "t",
+            BenchConfig { warmup: 1, samples: 3, min_time_s: 0.0, csv_path: None, quiet: true },
+        );
+        r.bench("spin", &[], || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.results.len(), 1);
+        assert!(r.results[0].summary.mean > 0.0);
+    }
+
+    #[test]
+    fn record_and_csv() {
+        let mut r = BenchRunner::with_config("g", BenchConfig::default());
+        r.record("a", &[("model", "lstm".into()), ("k", "8".into())], 123.0);
+        r.record_with_metric("b", &[("model", "pathnet".into())], 456.0, Some((1.5, "GFLOPS")));
+        let csv = r.csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "group,name,model,k,mean_us,std_us,p50_us,p99_us,n,metric,metric_unit"
+        );
+        assert!(csv.contains("g,a,lstm,8,123.000"));
+        assert!(csv.contains("GFLOPS"));
+        let report = r.report();
+        assert!(report.contains("bench group: g"));
+    }
+
+    #[test]
+    fn labels_macro() {
+        let l: Vec<(&str, String)> = labels! {"model" => "lstm", "k" => 8};
+        assert_eq!(l[1], ("k", "8".to_string()));
+    }
+}

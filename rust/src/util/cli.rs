@@ -1,0 +1,308 @@
+//! Declarative command-line parsing (the image has no `clap`).
+//!
+//! A [`Spec`] describes flags and positionals for one subcommand; `parse`
+//! matches `argv` against it, producing a [`Matches`] bag with typed
+//! accessors, auto-generated `--help`, and did-you-mean suggestions on
+//! unknown flags.
+
+use std::collections::BTreeMap;
+
+/// Description of one option (`--name value` or boolean `--name`).
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Specification for a subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Spec {
+        Spec { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Add a value-taking option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Spec {
+        self.opts.push(Opt { name, help, default, boolean: false });
+        self
+    }
+
+    /// Add a boolean flag (present/absent).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.opts.push(Opt { name, help, default: None, boolean: true });
+        self
+    }
+
+    /// Add a required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render a help screen.
+    pub fn help(&self) -> String {
+        let mut out = format!("graphi {} — {}\n\nUSAGE:\n  graphi {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        out.push('\n');
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, help) in &self.positionals {
+                out.push_str(&format!("  <{p}>  {help}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            let width = self.opts.iter().map(|o| o.name.len()).max().unwrap_or(0);
+            for o in &self.opts {
+                let default = match o.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None => String::new(),
+                };
+                let value = if o.boolean { "      " } else { " <VAL>" };
+                out.push_str(&format!(
+                    "  --{:width$}{value}  {}{default}\n",
+                    o.name, o.help,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Parse `args` (not including the program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help(self.help()));
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                // --name=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = self.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    CliError::UnknownFlag {
+                        flag: name.to_string(),
+                        suggestion: self.suggest(name),
+                        help: self.help(),
+                    }
+                })?;
+                if opt.boolean {
+                    if inline.is_some() {
+                        return Err(CliError::Other(format!("flag --{name} takes no value")));
+                    }
+                    flags.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::Other(format!("--{name} requires a value")))?,
+                    };
+                    values.insert(name.to_string(), value);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        if positionals.len() < self.positionals.len() {
+            let missing = self.positionals[positionals.len()].0;
+            return Err(CliError::Other(format!(
+                "missing required argument <{missing}>\n\n{}",
+                self.help()
+            )));
+        }
+        Ok(Matches { values, flags, positionals })
+    }
+
+    fn suggest(&self, unknown: &str) -> Option<String> {
+        self.opts
+            .iter()
+            .map(|o| (edit_distance(unknown, o.name), o.name))
+            .filter(|(d, _)| *d <= 2)
+            .min_by_key(|(d, _)| *d)
+            .map(|(_, n)| n.to_string())
+    }
+}
+
+/// Parse outcome.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.parse_as(name)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(text) => text.parse::<T>().map(Some).map_err(|_| {
+                CliError::Other(format!("--{name}: cannot parse `{text}`"))
+            }),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// CLI errors; `Help` is the cooperative `--help` exit.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("{0}")]
+    Help(String),
+    #[error("unknown flag --{flag}{}\n\n{help}", suggestion.as_ref().map(|s| format!(" (did you mean --{s}?)")).unwrap_or_default())]
+    UnknownFlag { flag: String, suggestion: Option<String>, help: String },
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Levenshtein distance (small strings; O(nm) fine).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = if ca == cb { 0 } else { 1 };
+            cur[j + 1] = (prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("run", "run one experiment")
+            .opt("model", Some("lstm"), "model name")
+            .opt("executors", None, "number of executors")
+            .flag("verbose", "chatty output")
+            .positional("config", "config file")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = spec().parse(&args(&["cfg.toml"])).unwrap();
+        assert_eq!(m.get("model").unwrap(), "lstm");
+        assert_eq!(m.positional(0).unwrap(), "cfg.toml");
+        let m = spec()
+            .parse(&args(&["--model", "pathnet", "cfg.toml"]))
+            .unwrap();
+        assert_eq!(m.get("model").unwrap(), "pathnet");
+    }
+
+    #[test]
+    fn equals_form() {
+        let m = spec().parse(&args(&["--executors=16", "c"])).unwrap();
+        assert_eq!(m.get_usize("executors").unwrap(), Some(16));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let m = spec().parse(&args(&["--verbose", "c"])).unwrap();
+        assert!(m.flag("verbose"));
+        assert!(!m.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_suggests() {
+        let err = spec().parse(&args(&["--modell", "x", "c"])).unwrap_err();
+        match err {
+            CliError::UnknownFlag { suggestion, .. } => {
+                assert_eq!(suggestion.as_deref(), Some("model"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        assert!(matches!(spec().parse(&[]), Err(CliError::Other(_))));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&args(&["--executors"])).is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(
+            spec().parse(&args(&["--help"])),
+            Err(CliError::Help(_))
+        ));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let m = spec().parse(&args(&["--executors", "many", "c"])).unwrap();
+        assert!(m.get_usize("executors").is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Infrastructure substrates.
+//!
+//! The offline build image ships neither `clap`, `criterion`, `serde`,
+//! `rand` nor `proptest`, so the small slices of each that Graphi needs are
+//! implemented here from scratch:
+//!
+//! * [`rng`]      — deterministic xorshift/splitmix PRNG + distributions
+//! * [`stats`]    — running statistics, percentiles, confidence intervals
+//! * [`json`]     — minimal JSON value model, writer and parser
+//! * [`toml`]     — parser for the TOML subset used by `configs/*.toml`
+//! * [`cli`]      — declarative command-line parser (clap replacement)
+//! * [`bench`]    — measurement harness (criterion replacement)
+//! * [`testkit`]  — property-based testing helpers (proptest replacement)
+//! * [`logging`]  — leveled stderr logger
+//! * [`table`]    — aligned text-table rendering for reports
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;
+pub mod toml;
+
+/// Format a duration given in microseconds with a human-friendly unit.
+pub fn fmt_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Format a raw operation count (flops, bytes) with SI prefixes.
+pub fn fmt_si(x: f64) -> String {
+    const UNITS: &[(f64, &str)] = &[(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")];
+    for &(scale, suffix) in UNITS {
+        if x >= scale {
+            return format!("{:.2}{}", x / scale, suffix);
+        }
+    }
+    format!("{x:.0}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_us_scales() {
+        assert_eq!(fmt_us(12.34), "12.3µs");
+        assert_eq!(fmt_us(12_340.0), "12.34ms");
+        assert_eq!(fmt_us(12_340_000.0), "12.340s");
+    }
+
+    #[test]
+    fn fmt_si_scales() {
+        assert_eq!(fmt_si(999.0), "999");
+        assert_eq!(fmt_si(1_500.0), "1.50K");
+        assert_eq!(fmt_si(2.5e9), "2.50G");
+        assert_eq!(fmt_si(3.2e12), "3.20T");
+    }
+}

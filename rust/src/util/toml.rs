@@ -1,0 +1,265 @@
+//! Parser for the TOML subset used by `configs/*.toml`.
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / flat-array values, `#` comments, blank lines. This is
+//! deliberately not a general TOML implementation — just enough for Graphi
+//! experiment configs, with precise error messages.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`. Keys before any section
+/// header land in the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {message}")]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or(ParseError {
+            line: line_no,
+            message: format!("expected `key = value`, got `{line}`"),
+        })?;
+        let key = line[..eq].trim();
+        let value_text = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, message: "empty key".into() });
+        }
+        let value = parse_value(value_text).map_err(|message| ParseError { line: line_no, message })?;
+        doc.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{text}`"))
+}
+
+/// Split a flat array body on commas that are outside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "lstm medium"
+
+[model]
+name = "lstm"
+size = "medium"
+layers = 4
+batch = 64
+
+[engine]
+kind = "graphi"
+executors = 8
+threads_per_executor = 8
+pin = true
+noise = 0.05
+configs = [2, 4, 8, 16, 32]
+tags = ["a", "b"]
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let doc = parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("", "title").unwrap(), "lstm medium");
+        assert_eq!(doc.get_str("model", "name").unwrap(), "lstm");
+        assert_eq!(doc.get_int("model", "layers").unwrap(), 4);
+        assert_eq!(doc.get_bool("engine", "pin").unwrap(), true);
+        assert_eq!(doc.get_float("engine", "noise").unwrap(), 0.05);
+        let configs = doc.get("engine", "configs").unwrap().as_array().unwrap();
+        assert_eq!(configs.len(), 5);
+        assert_eq!(configs[2].as_int().unwrap(), 8);
+        let tags = doc.get("engine", "tags").unwrap().as_array().unwrap();
+        assert_eq!(tags[1].as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get_float("", "x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let doc = parse(r##"x = "a # b" # trailing"##).unwrap();
+        assert_eq!(doc.get_str("", "x").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = what").is_err());
+        assert!(parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("x = []").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_array().unwrap().len(), 0);
+    }
+}

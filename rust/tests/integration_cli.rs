@@ -1,0 +1,108 @@
+//! CLI integration: exercise the `graphi` subcommands end to end through
+//! `cli::main` (same code path as the binary).
+
+fn run(args: &[&str]) -> i32 {
+    graphi::cli::main(args.iter().map(|s| s.to_string()).collect())
+}
+
+#[test]
+fn run_with_explicit_fleet() {
+    assert_eq!(
+        run(&[
+            "run", "--model", "pathnet", "--size", "small", "--engine", "graphi",
+            "--executors", "6", "--threads", "10", "--iters", "1",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn run_each_engine() {
+    for engine in ["sequential", "naive", "tensorflow"] {
+        assert_eq!(
+            run(&[
+                "run", "--model", "mlp", "--size", "small", "--engine", engine,
+                "--executors", "4", "--threads", "8", "--iters", "1",
+            ]),
+            0,
+            "engine {engine}"
+        );
+    }
+}
+
+#[test]
+fn run_from_config_file() {
+    let path = std::env::temp_dir().join(format!("graphi-cli-cfg-{}.toml", std::process::id()));
+    std::fs::write(
+        &path,
+        r#"
+title = "cli integration"
+[model]
+name = "mlp"
+size = "small"
+[engine]
+kind = "graphi"
+executors = 4
+threads_per_executor = 8
+[run]
+iterations = 1
+"#,
+    )
+    .unwrap();
+    assert_eq!(run(&["run", "--config", path.to_str().unwrap()]), 0);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn trace_writes_chrome_json() {
+    let out = std::env::temp_dir().join(format!("graphi-cli-trace-{}.json", std::process::id()));
+    assert_eq!(
+        run(&[
+            "trace", "--model", "mlp", "--size", "small", "--executors", "2", "--threads", "8",
+            "--out", out.to_str().unwrap(),
+        ]),
+        0
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.contains("traceEvents"));
+    std::fs::remove_file(&out).unwrap();
+}
+
+#[test]
+fn stats_writes_dot() {
+    let out = std::env::temp_dir().join(format!("graphi-cli-dot-{}.dot", std::process::id()));
+    assert_eq!(
+        run(&["stats", "--model", "mlp", "--size", "small", "--dot", out.to_str().unwrap()]),
+        0
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.starts_with("digraph"));
+    std::fs::remove_file(&out).unwrap();
+}
+
+#[test]
+fn profile_mlp() {
+    assert_eq!(run(&["profile", "--model", "mlp", "--size", "small", "--iters", "1"]), 0);
+}
+
+#[test]
+fn json_result_export() {
+    let out = std::env::temp_dir().join(format!("graphi-cli-json-{}.json", std::process::id()));
+    assert_eq!(
+        run(&[
+            "run", "--model", "mlp", "--size", "small", "--executors", "2", "--threads", "4",
+            "--iters", "1", "--json", out.to_str().unwrap(),
+        ]),
+        0
+    );
+    let doc = graphi::util::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(doc.get("model").unwrap().as_str().unwrap(), "mlp");
+    std::fs::remove_file(&out).unwrap();
+}
+
+#[test]
+fn errors_are_nonzero() {
+    assert_eq!(run(&["run", "--model", "vgg"]), 1);
+    assert_eq!(run(&["bench", "not-a-figure"]), 1);
+    assert_eq!(run(&["train", "--artifacts", "/definitely/missing"]), 1);
+}

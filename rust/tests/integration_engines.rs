@@ -1,0 +1,256 @@
+//! Cross-module integration: models × engines × the paper's headline
+//! claims, asserted as loose shapes (EXPERIMENTS.md records exact values).
+
+use graphi::coordinator::config::{EngineChoice, ExperimentConfig};
+use graphi::coordinator::driver::Driver;
+use graphi::engine::{
+    Engine, GraphiEngine, NaiveEngine, SequentialEngine, SimEnv, TensorFlowLikeEngine, Trace,
+};
+use graphi::models::{self, ModelKind, ModelSize};
+
+#[test]
+fn all_models_schedule_validly_under_all_engines() {
+    let env = SimEnv::knl(5);
+    for kind in [ModelKind::Lstm, ModelKind::PhasedLstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+        let g = models::build(kind, ModelSize::Small);
+        for engine in [
+            Box::new(GraphiEngine::new(8, 8)) as Box<dyn Engine>,
+            Box::new(NaiveEngine::new(8, 8)),
+            Box::new(SequentialEngine::new(64)),
+            Box::new(TensorFlowLikeEngine::new(4, 16)),
+        ] {
+            let r = engine.run(&g, &env);
+            r.validate(&g)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", kind.name(), engine.name()));
+        }
+    }
+}
+
+#[test]
+fn headline_parallel_beats_sequential_on_every_model() {
+    // §7.3 / Fig 6: parallel execution consistently outperforms sequential.
+    let env = SimEnv::knl(6);
+    for kind in [ModelKind::Lstm, ModelKind::PhasedLstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+        let g = models::build(kind, ModelSize::Small);
+        let seq = SequentialEngine::new(64).run(&g, &env).makespan_us;
+        // give each model a reasonable fleet (GoogleNet is narrow)
+        let fleet: &[(usize, usize)] = &[(2, 32), (4, 16), (8, 8)];
+        let best = fleet
+            .iter()
+            .map(|&(e, t)| GraphiEngine::new(e, t).run(&g, &env).makespan_us)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best < seq,
+            "{}: best parallel {best} ≥ sequential {seq}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn headline_speedup_band_vs_tensorflow() {
+    // Fig 5 band: 2.1–9.5×. Assert a loose envelope on the small grid.
+    let env = SimEnv::knl(7);
+    for kind in [ModelKind::Lstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+        let g = models::build(kind, ModelSize::Small);
+        let tf = [(2usize, 32usize), (4, 16), (8, 8)]
+            .iter()
+            .map(|&(i, t)| TensorFlowLikeEngine::new(i, t).run(&g, &env).makespan_us)
+            .fold(f64::INFINITY, f64::min);
+        let graphi = [(2usize, 32usize), (4, 16), (6, 10), (8, 8)]
+            .iter()
+            .map(|&(e, t)| GraphiEngine::new(e, t).run(&g, &env).makespan_us)
+            .fold(f64::INFINITY, f64::min);
+        let speedup = tf / graphi;
+        assert!(
+            (1.5..=15.0).contains(&speedup),
+            "{}: speedup {speedup:.2} outside loose band",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn fig6_optimum_tracks_graph_width() {
+    let env = SimEnv::knl(8);
+    // GoogleNet (2-4 parallel branches) must peak at few executors
+    let goog = models::build(ModelKind::GoogleNet, ModelSize::Small);
+    let configs = [(2usize, 32usize), (4, 16), (8, 8), (16, 4), (32, 2)];
+    let times: Vec<f64> = configs
+        .iter()
+        .map(|&(e, t)| GraphiEngine::new(e, t).run(&goog, &env).makespan_us)
+        .collect();
+    let best_idx = times
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0;
+    assert!(best_idx <= 1, "GoogleNet optimum at {:?}", configs[best_idx]);
+    // performance must degrade monotonically past the optimum
+    assert!(times[4] > times[best_idx], "no decay past the optimum");
+}
+
+#[test]
+fn table2_gap_largest_for_small_op_models() {
+    // §7.4: LSTM-family gains exceed GoogleNet's because their ops are
+    // smaller (heavier queue contention).
+    let env = SimEnv::knl(9);
+    let rel = |kind: ModelKind| {
+        let g = models::build(kind, ModelSize::Small);
+        let n = NaiveEngine::new(16, 4).run(&g, &env).makespan_us;
+        let gr = GraphiEngine::new(16, 4).run(&g, &env).makespan_us;
+        gr / n
+    };
+    let lstm = rel(ModelKind::Lstm);
+    let goog = rel(ModelKind::GoogleNet);
+    assert!(
+        lstm < goog,
+        "LSTM relative {lstm:.3} should beat GoogleNet's {goog:.3}"
+    );
+}
+
+#[test]
+fn wavefront_recovered_on_lstm() {
+    // §7.4: CP-first recovers the cuDNN diagonal pattern.
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let env = SimEnv::knl(10);
+    let r = GraphiEngine::new(8, 8).run(&g, &env);
+    let trace = Trace { records: r.records.clone() };
+    let corr = trace.depth_time_correlation(&g);
+    assert!(corr > 0.8, "depth/time correlation {corr:.3} too weak for a wavefront");
+}
+
+#[test]
+fn driver_roundtrip_all_models() {
+    for kind in [ModelKind::Lstm, ModelKind::PathNet] {
+        let cfg = ExperimentConfig {
+            model: kind,
+            size: ModelSize::Small,
+            engine: EngineChoice::Graphi,
+            executors: Some(4),
+            threads_per: Some(8),
+            iterations: 2,
+            ..Default::default()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.mean_makespan_us > 0.0);
+        assert!(r.std_us >= 0.0);
+        assert_eq!(r.iterations, 2);
+    }
+}
+
+#[test]
+fn profiler_never_picks_single_executor_for_wide_models() {
+    use graphi::engine::Profiler;
+    let g = models::build(ModelKind::PathNet, ModelSize::Small);
+    let p = Profiler { iterations: 1, worker_cores: 64, extra_configs: vec![(6, 10)] };
+    let report = p.profile(&g, &SimEnv::knl(11));
+    assert!(report.best.0 >= 2, "PathNet best fleet {:?}", report.best);
+}
+
+#[test]
+fn skylake_machine_also_works() {
+    // §9: Graphi generalizes to Xeon Platinum 8180 (28 cores).
+    use graphi::cost::{Calibration, CostModel, Machine};
+    let env = SimEnv {
+        cost: CostModel { machine: Machine::skylake8180(), cal: Calibration::deterministic() },
+        seed: 0,
+    };
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let seq = SequentialEngine::new(26).run(&g, &env).makespan_us;
+    let par = GraphiEngine::new(4, 6).run(&g, &env).makespan_us;
+    assert!(par < seq, "parallel {par} must beat sequential {seq} on SKX too");
+}
+
+#[test]
+fn inference_graphs_are_forward_only() {
+    use graphi::engine::dynamic::is_backward_op;
+    for kind in [ModelKind::Lstm, ModelKind::PathNet, ModelKind::GoogleNet] {
+        let train = models::build(kind, ModelSize::Small);
+        let infer = models::build_inference(kind, ModelSize::Small);
+        assert!(
+            infer.len() * 2 < train.len() * 1 + train.len(),
+            "{}: inference {} vs training {}",
+            kind.name(),
+            infer.len(),
+            train.len()
+        );
+        assert!(infer.len() < train.len() / 2 + 10);
+        assert!(
+            !infer.nodes().iter().any(|n| is_backward_op(&n.name)),
+            "{}: inference graph contains backward ops",
+            kind.name()
+        );
+        // still a valid executable graph
+        let r = GraphiEngine::new(4, 16).run(&infer, &SimEnv::knl(3));
+        r.validate(&infer).unwrap();
+    }
+}
+
+#[test]
+fn dynamic_fleet_loses_to_static_on_every_model() {
+    use graphi::engine::DynamicFleetEngine;
+    let env = SimEnv::knl_deterministic();
+    for kind in [ModelKind::Lstm, ModelKind::PathNet] {
+        let g = models::build(kind, ModelSize::Small);
+        let stat = GraphiEngine::new(8, 8).run(&g, &env).makespan_us;
+        let dynamic = DynamicFleetEngine::new((8, 8), (16, 4)).run(&g, &env).makespan_us;
+        assert!(dynamic > stat, "{}: dynamic {dynamic} vs static {stat}", kind.name());
+    }
+}
+
+#[test]
+fn locality_mode_valid_and_competitive() {
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let base = GraphiEngine::new(8, 8).run(&g, &env);
+    let local = GraphiEngine { locality: true, ..GraphiEngine::new(8, 8) }.run(&g, &env);
+    local.validate(&g).unwrap();
+    // §6: "modest margin" either way — must not blow up
+    let rel = local.makespan_us / base.makespan_us;
+    assert!((0.85..=1.10).contains(&rel), "locality rel {rel}");
+}
+
+#[test]
+fn straggler_degrades_gracefully() {
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let base = GraphiEngine::new(8, 8).run(&g, &env).makespan_us;
+    let slow = GraphiEngine { straggler: Some((0, 3.0)), ..GraphiEngine::new(8, 8) }
+        .run(&g, &env);
+    slow.validate(&g).unwrap();
+    let rel = slow.makespan_us / base;
+    // one of eight executors at 3×: bounded well below a global 3× slowdown
+    assert!(rel > 1.0 && rel < 3.0, "straggler rel {rel}");
+}
+
+#[test]
+fn memory_plan_of_engine_schedule_is_valid() {
+    use graphi::graph::plan_memory;
+    let g = models::build(ModelKind::PathNet, ModelSize::Small);
+    let r = GraphiEngine::new(4, 16).run(&g, &SimEnv::knl_deterministic());
+    // execution order by start time is a valid topological order
+    let mut order: Vec<_> = r.records.clone();
+    order.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+    let order: Vec<_> = order.into_iter().map(|rec| rec.node).collect();
+    let plan = plan_memory(&g, &order);
+    plan.validate().unwrap();
+    assert!(plan.fits(16 << 30));
+}
+
+#[test]
+fn snc4_mode_runs_and_stays_close_to_quadrant() {
+    // §9 future work: SNC-4 under contiguous packing is ≈neutral — local
+    // boosts and span penalties nearly cancel.
+    use graphi::cost::{Calibration, CostModel, Machine};
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let run = |machine: Machine| {
+        let env = SimEnv { cost: CostModel { machine, cal: Calibration::deterministic() }, seed: 0 };
+        GraphiEngine::new(4, 16).run(&g, &env).makespan_us
+    };
+    let quadrant = run(Machine::knl7250());
+    let snc = run(Machine::knl7250_snc4());
+    let rel = snc / quadrant;
+    assert!((0.9..=1.15).contains(&rel), "snc4/quadrant = {rel}");
+}

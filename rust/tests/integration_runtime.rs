@@ -1,0 +1,149 @@
+//! Runtime integration over real AOT artifacts (requires `make artifacts`).
+//!
+//! These tests exercise the full three-layer path: Pallas kernel → JAX
+//! train step → HLO text → PJRT CPU client → Rust driver. They skip with a
+//! notice when artifacts are absent so plain `cargo test` works before the
+//! Python build step; `make test` always builds artifacts first.
+
+use graphi::runtime::{ArtifactSet, LstmTrainer, PjrtRuntime, SyntheticCorpus};
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = graphi::runtime::artifacts::default_dir();
+    match ArtifactSet::load(&dir) {
+        Ok(set) => Some(set),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_has_all_modules() {
+    let Some(set) = artifacts() else { return };
+    for name in ["train_step", "forward_loss", "lstm_cell"] {
+        let m = set.module(name).unwrap();
+        assert!(set.path_of(m).is_file(), "{name} HLO file missing");
+        assert!(!m.inputs.is_empty());
+    }
+}
+
+#[test]
+fn lstm_cell_artifact_matches_closed_form() {
+    // zero gates, c_prev = 1 ⇒ c_new = σ(forget_bias)·1 and
+    // h_new = σ(0)·tanh(c_new) = 0.5·tanh(c_new): check the kernel artifact
+    // computes the math the Pallas source promises, from Rust.
+    let Some(set) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load(&set, "lstm_cell").unwrap();
+    let batch = module.manifest.inputs[1][0];
+    let hidden = module.manifest.inputs[1][1];
+    let gates = vec![0.0f32; batch * 4 * hidden];
+    let c_prev = vec![1.0f32; batch * hidden];
+    let out = module.run_f32(&[gates, c_prev]).unwrap();
+    let (h, c) = (&out[0], &out[1]);
+    let sig1 = 1.0 / (1.0 + (-1.0f32).exp()); // forget bias = 1.0
+    let expect_c = sig1;
+    let expect_h = 0.5 * expect_c.tanh();
+    for (&cv, &hv) in c.iter().zip(h.iter()) {
+        assert!((cv - expect_c).abs() < 1e-5, "c {cv} vs {expect_c}");
+        assert!((hv - expect_h).abs() < 1e-5, "h {hv} vs {expect_h}");
+    }
+}
+
+#[test]
+fn forward_loss_starts_near_uniform_entropy() {
+    let Some(set) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let trainer = LstmTrainer::new(&rt, &set, 7).unwrap();
+    let module = rt.load(&set, "forward_loss").unwrap();
+    let batch = module.manifest.inputs[1][0];
+    let window = module.manifest.inputs[1][1];
+    let mut corpus = SyntheticCorpus::new(1, 100_000);
+    let tokens = corpus.next_batch(batch, window - 1);
+    // use the trainer's init params via a fresh trainer (same seed ⇒ same init)
+    let params = {
+        // re-derive deterministically: LstmTrainer::new(seed=7) twice gives
+        // identical params; we read them via a 0-step "train"
+        drop(trainer);
+        let t2 = LstmTrainer::new(&rt, &set, 7).unwrap();
+        // park: run forward through train-free module using t2's params —
+        // LstmTrainer does not expose params, so replicate its init here
+        let p = set.module("train_step").unwrap().inputs[0][0];
+        let scale = *set.module("train_step").unwrap().meta.get("init_scale").unwrap_or(&0.1) as f32;
+        let mut rng = graphi::util::rng::Rng::new(7);
+        let _ = t2;
+        (0..p).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale).collect::<Vec<f32>>()
+    };
+    let out = module.run_f32(&[params, tokens]).unwrap();
+    let loss = out[0][0];
+    let uniform = (set.module("train_step").unwrap().meta["vocab"] as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.0,
+        "initial loss {loss} should be near ln(vocab) = {uniform}"
+    );
+}
+
+#[test]
+fn training_reduces_loss_through_pjrt() {
+    let Some(set) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut trainer = LstmTrainer::new(&rt, &set, 42).unwrap();
+    let report = trainer.train(30, 0xBEEF, 0).unwrap();
+    assert_eq!(report.losses.len(), 30);
+    assert!(
+        report.final_loss() < report.initial_loss(),
+        "loss did not fall: {} → {}",
+        report.initial_loss(),
+        report.final_loss()
+    );
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some(set) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let run = |seed| {
+        let mut t = LstmTrainer::new(&rt, &set, seed).unwrap();
+        let mut corpus = SyntheticCorpus::new(9, 100_000);
+        let batch = corpus.next_batch(
+            set.module("train_step").unwrap().meta["batch"] as usize,
+            set.module("train_step").unwrap().meta["seq"] as usize,
+        );
+        t.step(batch).unwrap()
+    };
+    assert_eq!(run(5), run(5));
+    assert_ne!(run(5), run(6));
+}
+
+#[test]
+fn phased_gate_artifact_blends_states() {
+    // fully-closed gate (leak only): c ≈ c_prev; fully-open needs exact
+    // phase, so test the closed case which is robust.
+    let Some(set) = artifacts() else { return };
+    let Ok(m) = set.module("phased_gate") else {
+        eprintln!("skipping: artifacts predate the phased_gate module");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load(&set, "phased_gate").unwrap();
+    let batch = m.inputs[0][0];
+    let hidden = m.inputs[0][1];
+    let c_cand = vec![5.0f32; batch * hidden];
+    let h_cand = vec![-5.0f32; batch * hidden];
+    let c_prev = vec![1.0f32; batch * hidden];
+    let h_prev = vec![0.0f32; batch * hidden];
+    let tau = vec![2.0f32; hidden];
+    let shift = vec![0.0f32; hidden];
+    let time = vec![1.0f32]; // phi = 0.5 ⇒ closed (leak 0.001·0.5)
+    let out = module
+        .run_f32(&[c_cand, h_cand, c_prev, h_prev, tau, shift, time])
+        .unwrap();
+    let (c, h) = (&out[0], &out[1]);
+    let k = 0.001f32 * 0.5;
+    for (&cv, &hv) in c.iter().zip(h.iter()) {
+        assert!((cv - (k * 5.0 + (1.0 - k) * 1.0)).abs() < 1e-5, "c {cv}");
+        assert!((hv - (k * -5.0)).abs() < 1e-5, "h {hv}");
+    }
+}
