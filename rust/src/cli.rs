@@ -9,7 +9,8 @@
 //! graphi train    [--steps 200] [--artifacts DIR]
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 
 use crate::coordinator::config::{EngineChoice, ExperimentConfig};
 use crate::coordinator::driver::Driver;
@@ -97,7 +98,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("iters", Some("5"), "iterations to average")
         .opt("trace", None, "write Chrome trace JSON here")
         .opt("json", None, "write result JSON here");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let mut cfg = match m.get("config") {
         Some(path) => ExperimentConfig::from_file(path)?,
         None => ExperimentConfig::default(),
@@ -107,12 +108,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
     cfg.size = size;
     cfg.engine = EngineChoice::parse(m.get("engine").unwrap())
         .with_context(|| format!("bad --engine {}", m.get("engine").unwrap()))?;
-    cfg.executors = m.get_usize("executors").map_err(anyhow::Error::new)?;
-    cfg.threads_per = m.get_usize("threads").map_err(anyhow::Error::new)?;
+    cfg.executors = m.get_usize("executors").map_err(Error::new)?;
+    cfg.threads_per = m.get_usize("threads").map_err(Error::new)?;
     cfg.policy = Policy::parse(m.get("policy").unwrap())
         .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
-    cfg.iterations = m.get_usize("iters").map_err(anyhow::Error::new)?.unwrap_or(5);
-    cfg.seed = m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42);
+    cfg.iterations = m.get_usize("iters").map_err(Error::new)?.unwrap_or(5);
+    cfg.seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
     cfg.trace_path = m.get("trace").map(String::from);
     let result = Driver::run(&cfg);
     print!("{}", result.render());
@@ -126,7 +127,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_profile(args: &[String]) -> Result<()> {
     let spec = model_opts(Spec::new("profile", "§4.2 configuration search"))
         .opt("iters", Some("3"), "iterations per candidate");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
     let stats = GraphStats::compute(&graph);
@@ -135,11 +136,11 @@ fn cmd_profile(args: &[String]) -> Result<()> {
         extra.push((6, 10));
     }
     let profiler = Profiler {
-        iterations: m.get_usize("iters").map_err(anyhow::Error::new)?.unwrap_or(3),
+        iterations: m.get_usize("iters").map_err(Error::new)?.unwrap_or(3),
         worker_cores: 64,
         extra_configs: extra,
     };
-    let env = SimEnv::knl(m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42));
+    let env = SimEnv::knl(m.get_u64("seed").map_err(Error::new)?.unwrap_or(42));
     let report = profiler.profile(&graph, &env);
     println!("profiling {}/{} ({} nodes)", kind.name(), size.name(), graph.len());
     print!("{}", Profiler::render(&report));
@@ -150,7 +151,7 @@ fn cmd_profile(args: &[String]) -> Result<()> {
 
 fn cmd_stats(args: &[String]) -> Result<()> {
     let spec = model_opts(Spec::new("stats", "graph census")).opt("dot", None, "write DOT file here");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
     println!("{}/{}", kind.name(), size.name());
@@ -168,15 +169,15 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         .opt("threads", Some("8"), "threads per executor")
         .opt("out", Some("reports/trace.json"), "Chrome trace path")
         .opt("width", Some("100"), "ASCII timeline width");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
-    let executors = m.get_usize("executors").map_err(anyhow::Error::new)?.unwrap();
-    let threads = m.get_usize("threads").map_err(anyhow::Error::new)?.unwrap();
-    let env = SimEnv::knl(m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap_or(42));
+    let executors = m.get_usize("executors").map_err(Error::new)?.unwrap();
+    let threads = m.get_usize("threads").map_err(Error::new)?.unwrap();
+    let env = SimEnv::knl(m.get_u64("seed").map_err(Error::new)?.unwrap_or(42));
     let result = GraphiEngine::new(executors, threads).run(&graph, &env);
     let trace = Trace { records: result.records.clone() };
-    let width = m.get_usize("width").map_err(anyhow::Error::new)?.unwrap();
+    let width = m.get_usize("width").map_err(Error::new)?.unwrap();
     print!("{}", trace.render_ascii(&graph, width));
     println!(
         "depth/start-time correlation: {:.3} (≈1 ⇒ §7.4's diagonal wavefront)",
@@ -194,7 +195,7 @@ fn cmd_trace(args: &[String]) -> Result<()> {
 fn cmd_memplan(args: &[String]) -> Result<()> {
     let spec = model_opts(Spec::new("memplan", "memory plan (§5.1 buffer sharing)"))
         .flag("inference", "plan the forward-only graph");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let (kind, size) = parse_model(&m)?;
     let graph = if m.flag("inference") {
         models::build_inference(kind, size)
@@ -230,7 +231,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .positional("figure", "fig2|fig3|fig5|fig6|table2|ablations|skylake|numa|all")
         .flag("fast", "small-size grid only (CI speed)")
         .opt("csv", None, "CSV output directory (default reports/)");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let which = m.positional(0).unwrap().to_string();
     let fast = m.flag("fast");
     let csv_dir = m.get_or("csv", "reports");
@@ -276,7 +277,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("seed", Some("42"), "init + corpus seed")
         .opt("log-every", Some("20"), "steps between loss logs")
         .opt("curve", None, "write the loss curve to this file");
-    let m = spec.parse(args).map_err(anyhow::Error::new)?;
+    let m = spec.parse(args).map_err(Error::new)?;
     let dir = m
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -284,11 +285,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let set = crate::runtime::ArtifactSet::load(&dir)?;
     let runtime = crate::runtime::PjrtRuntime::cpu()?;
     println!("platform: {}", runtime.platform());
-    let seed = m.get_u64("seed").map_err(anyhow::Error::new)?.unwrap();
+    let seed = m.get_u64("seed").map_err(Error::new)?.unwrap();
     let mut trainer = crate::runtime::LstmTrainer::new(&runtime, &set, seed)?;
     println!("params: {}", trainer.param_count());
-    let steps = m.get_usize("steps").map_err(anyhow::Error::new)?.unwrap();
-    let log_every = m.get_usize("log-every").map_err(anyhow::Error::new)?.unwrap();
+    let steps = m.get_usize("steps").map_err(Error::new)?.unwrap();
+    let log_every = m.get_usize("log-every").map_err(Error::new)?.unwrap();
     let report = trainer.train(steps, seed ^ 0xC0DE, log_every)?;
     println!(
         "\ntrained {} steps in {:.1}s ({:.2} steps/s)\ninitial loss {:.4} → final loss {:.4}",

@@ -81,14 +81,35 @@ impl Default for ExperimentConfig {
 }
 
 /// Config errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error: {0}")]
-    Toml(#[from] toml::ParseError),
-    #[error("io error reading config: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad value for `{key}`: {value}")]
+    Toml(toml::ParseError),
+    Io(std::io::Error),
     BadValue { key: &'static str, value: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Toml(e) => write!(f, "config parse error: {e}"),
+            ConfigError::Io(e) => write!(f, "io error reading config: {e}"),
+            ConfigError::BadValue { key, value } => write!(f, "bad value for `{key}`: {value}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<toml::ParseError> for ConfigError {
+    fn from(e: toml::ParseError) -> ConfigError {
+        ConfigError::Toml(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
 }
 
 fn bad(key: &'static str, value: impl std::fmt::Display) -> ConfigError {

@@ -279,9 +279,11 @@ impl<'a> Sim<'a> {
             };
             self.idle.set_busy(e);
             // scheduler decision cost: heap pop + bitmap scan + ring push,
-            // serialized on the scheduler thread
-            self.sched_free_us = self.sched_free_us.max(now) + self.interference.graphi_dispatch_us();
-            self.metrics.scheduler_busy_us += self.interference.graphi_dispatch_us();
+            // serialized on the scheduler thread; evaluated once so the
+            // busy-time metric and the timeline can never disagree
+            let dispatch_cost_us = self.interference.graphi_dispatch_us();
+            self.sched_free_us = self.sched_free_us.max(now) + dispatch_cost_us;
+            self.metrics.scheduler_busy_us += dispatch_cost_us;
             self.metrics.dispatches += 1;
             // hand off through the executor's real SPSC ring
             self.rings[e]

@@ -4,6 +4,9 @@
 //!
 //! * [`ring`]      — the lock-free SPSC ring buffer backing per-executor
 //!   operation buffers (§5.2, MuQSS-inspired)
+//! * [`mpsc`]      — the bounded MPSC completion queue that funnels
+//!   executor→scheduler completions through one structure instead of a
+//!   per-executor scan (threaded engine)
 //! * [`ready`]     — dependency tracking + the ready-operation set under a
 //!   pluggable ordering [`policies::Policy`]
 //! * [`scheduler`] — the centralized scheduler's decision core: idle-executor
@@ -26,6 +29,7 @@
 pub mod dynamic;
 pub mod graphi;
 pub mod heterogeneous;
+pub mod mpsc;
 pub mod naive;
 pub mod policies;
 pub mod profiler;

@@ -49,8 +49,9 @@ impl Engine for NaiveEngine {
         let mut q: EventQueue<Ev> = EventQueue::new();
         let mut deps = DepTracker::new(graph);
         // FIFO: "whenever an executor is available, it randomly picks a
-        // ready operation" — arbitrary topological order
-        let mut ready = ReadySet::new(Policy::Fifo, vec![0.0; graph.len()], env.seed);
+        // ready operation" — arbitrary topological order (FIFO never
+        // consults levels, so none are allocated)
+        let mut ready = ReadySet::new(Policy::Fifo, Vec::<f64>::new(), env.seed);
         let mut idle = IdleBitmap::new(self.executors);
         let mut bw = BandwidthArbiter::new(cost.machine.mcdram_bw);
         let mut records = Vec::with_capacity(graph.len());

@@ -2,11 +2,61 @@
 //!
 //! `DepTracker` owns the per-node remaining-dependency counts (the
 //! "triggering" in Algorithm 2); `ReadySet` owns the ordering of ready ops
-//! under a [`Policy`] (the max binary heap of §5.2 for critical-path-first).
+//! under a [`Policy`] (the max heap of §5.2 for critical-path-first).
 //! Both are shared by every engine — simulated and threaded — so the data
 //! structures being benchmarked are the ones actually scheduling.
+//!
+//! # The packed-key d-ary heap
+//!
+//! The level-priority policies (`CriticalPathFirst`, `AntiCritical`) used
+//! to run on a `BinaryHeap` of 24-byte `{f64 priority, u64 seq, u32 node}`
+//! entries, paying an `f64::total_cmp` plus a `u64` compare per sift step.
+//! The hot path now packs each entry into a **single `u64`**:
+//!
+//! ```text
+//!   63                    32 31                     0
+//!   +-----------------------+-----------------------+
+//!   |  quantized priority   |   !seq (inverted)     |
+//!   +-----------------------+-----------------------+
+//! ```
+//!
+//! * The **priority** field is the top 32 bits of the standard
+//!   order-preserving map from `f64` to `u64` (flip all bits of negative
+//!   values, set the sign bit of non-negative ones — the same total order
+//!   as `f64::total_cmp`). Larger level ⇒ larger field.
+//! * The **sequence** field stores the bitwise NOT of the push sequence
+//!   number, so that when two priorities quantize equal, the *larger*
+//!   packed key belongs to the *earlier* push — a plain `u64` max-compare
+//!   yields FIFO tie-breaking with zero extra branches.
+//!
+//! The heap itself is a flat 4-ary max-heap over a contiguous `Vec<u64>`:
+//! shallower than a binary heap (log₄ vs log₂ levels), with all four
+//! children on one cache line, and every comparison a single integer
+//! compare.
+//!
+//! ## Quantization tie-break guarantee
+//!
+//! Quantization keeps the top 32 bits of the 64-bit total-order map, so:
+//!
+//! * any two levels that are **exactly equal** as `f64` quantize equal and
+//!   therefore break ties FIFO — identical to the previous
+//!   `total_cmp`-then-seq behaviour;
+//! * any two levels whose total-order maps differ in the top 32 bits (in
+//!   practice: relative difference ≳ 2⁻²⁰, i.e. anything but
+//!   almost-identical critical-path lengths) keep their **exact** relative
+//!   order;
+//! * levels that differ only below the top 32 bits fall into the same
+//!   bucket and dispatch FIFO between themselves. This is a deliberate
+//!   trade: ops whose critical paths agree to within one part in a million
+//!   are schedule-equivalent, and FIFO among them preserves determinism.
+//!
+//! The sequence counter resets whenever the set drains empty (tie-break
+//! order is only observable among co-resident entries), so 32 bits of
+//! sequence bound the *occupancy between drains*, not the lifetime push
+//! count.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::graph::{Graph, NodeId};
 use crate::util::rng::Rng;
@@ -62,54 +112,54 @@ impl DepTracker {
     }
 }
 
-#[derive(Debug)]
-struct HeapEntry {
-    priority: f64,
-    seq: u64,
-    node: NodeId,
+/// Order-preserving map from `f64` to `u64` (the `total_cmp` order), then
+/// truncated to the top 32 bits. See the module docs for the tie-break
+/// guarantee this truncation makes.
+#[inline]
+fn quantize(priority: f64) -> u32 {
+    let bits = priority.to_bits();
+    let mapped = if bits >> 63 == 1 { !bits } else { bits | 0x8000_0000_0000_0000 };
+    (mapped >> 32) as u32
 }
 
-impl PartialEq for HeapEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.priority == other.priority && self.seq == other.seq
-    }
+#[inline]
+fn pack(priority: f64, seq: u32) -> u64 {
+    ((quantize(priority) as u64) << 32) | ((!seq) as u64)
 }
-impl Eq for HeapEntry {}
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // max-heap on priority; FIFO (smaller seq first) on ties
-        self.priority
-            .total_cmp(&other.priority)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
+
+/// Arity of the flat heap. 4 keeps all children of a node within one
+/// 64-byte cache line of `Vec<u64>` storage.
+const D: usize = 4;
 
 /// The set of ready-to-run operations, ordered by policy.
 #[derive(Debug)]
 pub struct ReadySet {
     policy: Policy,
-    levels: Vec<f64>,
-    heap: BinaryHeap<HeapEntry>,
+    levels: Arc<[f64]>,
+    /// Flat 4-ary max-heap of packed keys (level policies only).
+    heap: Vec<u64>,
+    /// Push-sequence → node lookup for the packed heap; indexed by the
+    /// sequence number recovered from a popped key. Cleared when the set
+    /// drains empty.
+    nodes: Vec<NodeId>,
     queue: VecDeque<NodeId>,
     stack: Vec<NodeId>,
     rng: Rng,
-    seq: u64,
+    seq: u32,
     len: usize,
 }
 
 impl ReadySet {
     /// `levels` supplies priorities for the level-based policies; pass the
-    /// output of [`crate::graph::levels`] (or unit estimates).
-    pub fn new(policy: Policy, levels: Vec<f64>, seed: u64) -> ReadySet {
+    /// output of [`crate::graph::levels`] (or unit estimates). Accepts
+    /// `Vec<f64>`, `&[f64]`, or a shared `Arc<[f64]>` — the slice is moved
+    /// or reference-counted, never re-cloned per run by the callee.
+    pub fn new(policy: Policy, levels: impl Into<Arc<[f64]>>, seed: u64) -> ReadySet {
         ReadySet {
             policy,
-            levels,
-            heap: BinaryHeap::new(),
+            levels: levels.into(),
+            heap: Vec::new(),
+            nodes: Vec::new(),
             queue: VecDeque::new(),
             stack: Vec::new(),
             rng: Rng::new(seed),
@@ -118,27 +168,89 @@ impl ReadySet {
         }
     }
 
+    #[inline]
+    fn heap_insert(&mut self, priority: f64, node: NodeId) {
+        if self.heap.is_empty() {
+            // tie-break order is only observable among co-resident
+            // entries, so the sequence (and the seq→node table) restart
+            // whenever the set drains
+            self.seq = 0;
+            self.nodes.clear();
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.nodes.push(node);
+        let key = pack(priority, seq);
+        // sift up
+        let mut i = self.heap.len();
+        self.heap.push(key);
+        while i > 0 {
+            let parent = (i - 1) / D;
+            if self.heap[parent] >= key {
+                break;
+            }
+            self.heap[i] = self.heap[parent];
+            i = parent;
+        }
+        self.heap[i] = key;
+    }
+
+    #[inline]
+    fn heap_remove_max(&mut self) -> Option<NodeId> {
+        let top = *self.heap.first()?;
+        let last = self.heap.pop().unwrap();
+        let n = self.heap.len();
+        if n > 0 {
+            // sift `last` down from the root
+            let mut i = 0;
+            loop {
+                let first_child = D * i + 1;
+                if first_child >= n {
+                    break;
+                }
+                let end = (first_child + D).min(n);
+                let mut best = first_child;
+                let mut best_key = self.heap[first_child];
+                let mut c = first_child + 1;
+                while c < end {
+                    if self.heap[c] > best_key {
+                        best = c;
+                        best_key = self.heap[c];
+                    }
+                    c += 1;
+                }
+                if last >= best_key {
+                    break;
+                }
+                self.heap[i] = best_key;
+                i = best;
+            }
+            self.heap[i] = last;
+        }
+        let seq = !(top as u32);
+        Some(self.nodes[seq as usize])
+    }
+
     pub fn push(&mut self, node: NodeId) {
         self.len += 1;
         match self.policy {
             Policy::CriticalPathFirst => {
                 let priority = self.levels[node as usize];
-                self.heap.push(HeapEntry { priority, seq: self.seq, node });
+                self.heap_insert(priority, node);
             }
             Policy::AntiCritical => {
                 let priority = -self.levels[node as usize];
-                self.heap.push(HeapEntry { priority, seq: self.seq, node });
+                self.heap_insert(priority, node);
             }
             Policy::Fifo => self.queue.push_back(node),
             Policy::Lifo => self.stack.push(node),
             Policy::Random => self.stack.push(node),
         }
-        self.seq += 1;
     }
 
     pub fn pop(&mut self) -> Option<NodeId> {
         let out = match self.policy {
-            Policy::CriticalPathFirst | Policy::AntiCritical => self.heap.pop().map(|e| e.node),
+            Policy::CriticalPathFirst | Policy::AntiCritical => self.heap_remove_max(),
             Policy::Fifo => self.queue.pop_front(),
             Policy::Lifo => self.stack.pop(),
             Policy::Random => {
@@ -190,6 +302,29 @@ mod tests {
     }
 
     #[test]
+    fn quantize_preserves_order() {
+        let samples = [
+            -1e9, -5000.0, -1.0, -1e-3, 0.0, 1e-3, 0.5, 1.0, 5.0, 10.0, 50.0, 4096.0, 1e6, 1e12,
+        ];
+        for w in samples.windows(2) {
+            assert!(
+                quantize(w[0]) < quantize(w[1]),
+                "quantize({}) !< quantize({})",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn packed_key_ties_prefer_earlier_seq() {
+        let a = pack(7.0, 0);
+        let b = pack(7.0, 1);
+        assert!(a > b, "earlier seq must win the max-compare on equal priority");
+        assert!(pack(8.0, 9) > pack(7.0, 0), "priority dominates seq");
+    }
+
+    #[test]
     fn cp_first_pops_highest_level() {
         let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![5.0, 50.0, 10.0], 0);
         r.push(0);
@@ -210,6 +345,65 @@ mod tests {
         assert_eq!(r.pop(), Some(2));
         assert_eq!(r.pop(), Some(0));
         assert_eq!(r.pop(), Some(1));
+    }
+
+    #[test]
+    fn quantization_bucket_collapses_to_fifo() {
+        // two levels that differ only below the top 32 bits of the
+        // total-order map land in one bucket and must dispatch FIFO —
+        // the documented trade of the packed key
+        let a = 1e6f64;
+        let b = f64::from_bits(a.to_bits() + 1); // next representable, b > a
+        assert!(b > a);
+        assert_eq!(quantize(a), quantize(b), "test premise: same bucket");
+        // node 0 has the *higher* level (b) but is pushed second
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![b, a], 0);
+        r.push(1);
+        r.push(0);
+        assert_eq!(r.pop(), Some(1), "within a bucket, push order wins");
+        assert_eq!(r.pop(), Some(0));
+        // and a clearly distinct level still dominates the bucket
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![b, a, 2e6], 0);
+        r.push(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), Some(1));
+    }
+
+    #[test]
+    fn cp_first_ties_fifo_across_drain_cycles() {
+        // the seq counter resets when the set drains; FIFO must still hold
+        // within each cycle
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, vec![1.0; 6], 0);
+        r.push(3);
+        r.push(4);
+        assert_eq!(r.pop(), Some(3));
+        assert_eq!(r.pop(), Some(4));
+        r.push(5);
+        r.push(0);
+        r.push(1);
+        assert_eq!(r.pop(), Some(5));
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), Some(1));
+    }
+
+    #[test]
+    fn heap_handles_interleaved_push_pop() {
+        let levels: Vec<f64> = (0..32).map(|i| (i % 7) as f64).collect();
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, levels.clone(), 0);
+        r.push(0);
+        r.push(8);
+        r.push(13);
+        assert_eq!(r.pop(), Some(13)); // level 6 highest
+        r.push(20); // level 6
+        r.push(6); // level 6, later
+        assert_eq!(r.pop(), Some(20));
+        assert_eq!(r.pop(), Some(6));
+        assert_eq!(r.pop(), Some(8)); // level 1
+        assert_eq!(r.pop(), Some(0)); // level 0
+        assert_eq!(r.pop(), None);
     }
 
     #[test]
@@ -261,5 +455,17 @@ mod tests {
         assert_eq!(r.len(), 2);
         r.pop();
         assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn accepts_borrowed_levels() {
+        let levels = [3.0f64, 1.0, 2.0];
+        let mut r = ReadySet::new(Policy::CriticalPathFirst, &levels[..], 0);
+        r.push(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.pop(), Some(0));
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(1));
     }
 }

@@ -66,7 +66,8 @@ impl Engine for TensorFlowLikeEngine {
         let mut rng: Rng = env.rng();
         let mut q: EventQueue<Ev> = EventQueue::new();
         let mut deps = DepTracker::new(graph);
-        let mut ready = ReadySet::new(Policy::Fifo, vec![0.0; graph.len()], env.seed);
+        // FIFO never consults levels, so none are allocated
+        let mut ready = ReadySet::new(Policy::Fifo, Vec::<f64>::new(), env.seed);
         let mut idle = IdleBitmap::new(self.inter_op);
         let mut bw = BandwidthArbiter::new(cost.machine.mcdram_bw);
         let mut records = Vec::with_capacity(graph.len());

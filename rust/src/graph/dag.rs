@@ -19,17 +19,28 @@ pub struct Node {
 }
 
 /// Graph construction / validation errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum GraphError {
-    #[error("edge references unknown node {0}")]
     UnknownNode(NodeId),
-    #[error("self-dependency on node {0}")]
     SelfEdge(NodeId),
-    #[error("graph contains a cycle through node {0} ({1})")]
     Cycle(NodeId, String),
-    #[error("graph is empty")]
     Empty,
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::UnknownNode(n) => write!(f, "edge references unknown node {n}"),
+            GraphError::SelfEdge(n) => write!(f, "self-dependency on node {n}"),
+            GraphError::Cycle(n, name) => {
+                write!(f, "graph contains a cycle through node {n} ({name})")
+            }
+            GraphError::Empty => write!(f, "graph is empty"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// An immutable DAG of operations.
 #[derive(Debug, Clone)]

@@ -30,18 +30,39 @@ pub struct ArtifactSet {
 }
 
 /// Artifact errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("artifact directory {0} not found — run `make artifacts` first")]
     MissingDir(String),
-    #[error("manifest.json missing in {0} — run `make artifacts`")]
     MissingManifest(String),
-    #[error("malformed manifest: {0}")]
     BadManifest(String),
-    #[error("unknown module `{0}` (have: {1})")]
     UnknownModule(String, String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::MissingDir(d) => {
+                write!(f, "artifact directory {d} not found — run `make artifacts` first")
+            }
+            ArtifactError::MissingManifest(d) => {
+                write!(f, "manifest.json missing in {d} — run `make artifacts`")
+            }
+            ArtifactError::BadManifest(m) => write!(f, "malformed manifest: {m}"),
+            ArtifactError::UnknownModule(name, have) => {
+                write!(f, "unknown module `{name}` (have: {have})")
+            }
+            ArtifactError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> ArtifactError {
+        ArtifactError::Io(e)
+    }
 }
 
 /// Default artifact directory: `$GRAPHI_ARTIFACTS` or `./artifacts`.

@@ -4,25 +4,40 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `compile` → `execute`. The artifacts are lowered with
 //! `return_tuple=True`, so every output is a 1-level tuple.
+//!
+//! The real backend needs the `xla` crate, which the offline build image
+//! does not ship; it is therefore gated behind the **`pjrt` cargo
+//! feature** (enable it only with a vendored `xla`). Without the feature
+//! this module compiles a stub with the identical API whose constructors
+//! return a descriptive error, so the rest of the crate — including the
+//! threaded scheduler the training driver feeds — builds and tests
+//! dependency-free.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::Result;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
 
 use super::artifacts::{ArtifactSet, Manifest};
 
 /// A PJRT CPU runtime.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _private: (),
 }
 
 /// A compiled module ready to execute.
 pub struct LoadedModule {
     pub name: String,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create the CPU client.
     pub fn cpu() -> Result<PjrtRuntime> {
@@ -54,11 +69,12 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModule {
     /// Execute with f32 input tensors (shapes per the manifest); returns
     /// the flattened f32 outputs in tuple order.
     pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(
+        crate::ensure!(
             inputs.len() == self.manifest.inputs.len(),
             "module {} takes {} inputs, got {}",
             self.name,
@@ -68,7 +84,7 @@ impl LoadedModule {
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs.iter().zip(&self.manifest.inputs) {
             let expect: usize = shape.iter().product();
-            anyhow::ensure!(
+            crate::ensure!(
                 data.len() == expect,
                 "input shape {:?} needs {} elements, got {}",
                 shape,
@@ -97,7 +113,42 @@ impl LoadedModule {
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "graphi was built without the `pjrt` feature \
+    (the vendored `xla` crate is required for real PJRT execution)";
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Stub: always fails — rebuild with `--features pjrt`.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        crate::bail!("{NO_PJRT}")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Stub: always fails — rebuild with `--features pjrt`.
+    pub fn load(&self, set: &ArtifactSet, name: &str) -> Result<LoadedModule> {
+        let _ = set.module(name)?; // still validate the manifest lookup
+        crate::bail!("{NO_PJRT}")
+    }
+
+    /// Stub: always fails — rebuild with `--features pjrt`.
+    pub fn load_path(&self, _path: &Path, _manifest: Manifest) -> Result<LoadedModule> {
+        crate::bail!("{NO_PJRT}")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedModule {
+    /// Stub: always fails — rebuild with `--features pjrt`.
+    pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        crate::bail!("{NO_PJRT}")
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     //! Execution against real artifacts is covered by `rust/tests/`
     //! integration tests (they require `make artifacts`). Here we test the
@@ -151,5 +202,16 @@ mod tests {
         // correct
         let out = module.run_f32(&[vec![1.0, 2.0, 3.0, 4.0]]).unwrap();
         assert_eq!(out[0], vec![2.0, 4.0, 6.0, 8.0]);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtRuntime::cpu().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "error should name the feature");
     }
 }

@@ -2,10 +2,18 @@
 //!
 //! Same architecture as §4/§5 — a centralized scheduler thread (here: the
 //! calling thread), a fleet of executor threads, per-executor SPSC
-//! operation buffers, per-executor triggered queues flowing completions
-//! back — but with actual parallel execution of an arbitrary work function
-//! (the end-to-end example plugs PJRT executions in; tests use synthetic
+//! operation buffers, and a **single bounded MPSC completion queue**
+//! flowing completions back (executors produce, the scheduler consumes) —
+//! with actual parallel execution of an arbitrary work function (the
+//! end-to-end example plugs PJRT executions in; tests use synthetic
 //! spin-work).
+//!
+//! The completion queue replaces the seed design's per-executor "done
+//! rings": those forced the scheduler to scan every executor's ring on
+//! every loop iteration (O(executors) shared-cache-line loads even when
+//! idle). With one [`MpscQueue`], an idle poll is a single acquire load,
+//! completions drain in arrival order in batches, and dispatch fills each
+//! executor's operation buffer through the SPSC ring's batched push.
 //!
 //! On this repo's 1-core CI machine the fleet cannot show parallel
 //! *speedup*; what it demonstrates is that the scheduler core (bitmap +
@@ -15,6 +23,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
+use crate::engine::mpsc::MpscQueue;
 use crate::engine::policies::Policy;
 use crate::engine::ready::{DepTracker, ReadySet};
 use crate::engine::ring::SpscRing;
@@ -63,8 +72,9 @@ impl ThreadedGraphi {
         let n_exec = self.executors;
         let op_rings: Vec<SpscRing<NodeId>> =
             (0..n_exec).map(|_| SpscRing::new(self.buffer_depth)).collect();
-        let done_rings: Vec<SpscRing<NodeId>> =
-            (0..n_exec).map(|_| SpscRing::new(graph.len() + 1)).collect();
+        // one completion queue shared by all executors; sized for the whole
+        // graph so a push can never fail (each node completes exactly once)
+        let done_q: MpscQueue<(u32, NodeId)> = MpscQueue::new(graph.len() + 1);
         let shutdown = AtomicBool::new(false);
         let t0 = Instant::now();
 
@@ -75,7 +85,7 @@ impl ThreadedGraphi {
             let mut handles = Vec::with_capacity(n_exec);
             for e in 0..n_exec {
                 let op_ring = &op_rings[e];
-                let done_ring = &done_rings[e];
+                let done_q = &done_q;
                 let shutdown = &shutdown;
                 let work = &work;
                 handles.push(scope.spawn(move || {
@@ -92,8 +102,10 @@ impl ThreadedGraphi {
                                 start_us: start,
                                 end_us: end,
                             });
-                            // the executor's own triggered queue (§4.4)
-                            done_ring.push(node).expect("done ring sized for whole graph");
+                            // report completion to the shared queue (§4.4)
+                            done_q
+                                .push((e as u32, node))
+                                .expect("completion queue sized for whole graph");
                         } else if shutdown.load(Ordering::Acquire) {
                             return records;
                         } else {
@@ -112,32 +124,38 @@ impl ThreadedGraphi {
             // while the current one runs, and no deeper (avoiding the load
             // imbalance §5.2 observed with larger buffers).
             let mut deps = DepTracker::new(graph);
-            let mut ready = ReadySet::new(self.policy, levels.to_vec(), 0);
+            let mut ready = ReadySet::new(self.policy, levels, 0);
             let mut available = IdleBitmap::new(n_exec);
             let mut inflight = vec![0usize; n_exec];
+            let mut completions: Vec<(u32, NodeId)> = Vec::with_capacity(n_exec * 2 + 8);
             for s in deps.sources() {
                 ready.push(s);
             }
             while !deps.is_done() {
-                // poll triggered queues from each executor
-                for (e, ring) in done_rings.iter().enumerate() {
-                    while let Some(node) = ring.pop() {
-                        inflight[e] -= 1;
-                        if inflight[e] == self.buffer_depth - 1 && !available.is_idle(e) {
-                            available.set_idle(e);
-                        }
-                        deps.complete(graph, node, |n| ready.push(n));
+                // drain the shared completion queue in one batch — a single
+                // acquire load when idle, no per-executor scan
+                completions.clear();
+                done_q.pop_batch(&mut completions, usize::MAX);
+                for &(e, node) in completions.iter() {
+                    let e = e as usize;
+                    inflight[e] -= 1;
+                    if inflight[e] == self.buffer_depth - 1 && !available.is_idle(e) {
+                        available.set_idle(e);
                     }
+                    deps.complete(graph, node, |n| ready.push(n));
                 }
-                // dispatch: max-level op → first available executor (bit-scan)
+                // dispatch: max-level ops → first available executor
+                // (bit-scan), filling its buffer through one batched push
                 let mut progressed = false;
                 while !ready.is_empty() && available.any_idle() {
                     let e = available.first_idle().unwrap();
-                    let node = ready.pop().unwrap();
-                    op_rings[e].push(node).expect("availability bit ⇒ ring space");
-                    dispatches += 1;
+                    let room = self.buffer_depth - inflight[e];
+                    let mut feed = std::iter::from_fn(|| ready.pop()).take(room);
+                    let pushed = op_rings[e].push_batch(&mut feed);
+                    debug_assert!(pushed > 0, "availability bit ⇒ ring space");
+                    dispatches += pushed as u64;
                     progressed = true;
-                    inflight[e] += 1;
+                    inflight[e] += pushed;
                     if inflight[e] >= self.buffer_depth {
                         available.set_busy(e);
                     }

@@ -13,8 +13,7 @@
 //! Python), and records the loss curve. Used by `graphi train` and
 //! `examples/lstm_train.rs`; EXPERIMENTS.md logs a reference run.
 
-use anyhow::{Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
 use super::artifacts::ArtifactSet;
@@ -149,10 +148,10 @@ impl LstmTrainer {
             .module
             .run_f32(&[std::mem::take(&mut self.params), tokens])
             .context("train_step execution")?;
-        anyhow::ensure!(outputs.len() == 2, "train_step must return (loss, params)");
+        crate::ensure!(outputs.len() == 2, "train_step must return (loss, params)");
         let loss = outputs[0][0];
         self.params = outputs[1].clone();
-        anyhow::ensure!(loss.is_finite(), "loss diverged to {loss}");
+        crate::ensure!(loss.is_finite(), "loss diverged to {loss}");
         Ok(loss)
     }
 

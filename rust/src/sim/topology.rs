@@ -35,21 +35,33 @@ pub struct Placement {
 }
 
 /// Placement construction errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PlacementError {
-    #[error("{requested} worker cores requested but only {available} available \
-             (machine has {total}, {reserved} reserved for scheduler + light-weight executor)")]
     NotEnoughCores {
         requested: usize,
         available: usize,
         total: usize,
         reserved: usize,
     },
-    #[error("executor team size must be > 0")]
     ZeroTeam,
-    #[error("executor count must be > 0")]
     ZeroExecutors,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::NotEnoughCores { requested, available, total, reserved } => write!(
+                f,
+                "{requested} worker cores requested but only {available} available \
+                 (machine has {total}, {reserved} reserved for scheduler + light-weight executor)"
+            ),
+            PlacementError::ZeroTeam => write!(f, "executor team size must be > 0"),
+            PlacementError::ZeroExecutors => write!(f, "executor count must be > 0"),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 impl Placement {
     /// Graphi's placement (§4.4 + §5.2): reserve one core for the

@@ -197,15 +197,30 @@ impl Matches {
 }
 
 /// CLI errors; `Help` is the cooperative `--help` exit.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("{0}")]
     Help(String),
-    #[error("unknown flag --{flag}{}\n\n{help}", suggestion.as_ref().map(|s| format!(" (did you mean --{s}?)")).unwrap_or_default())]
     UnknownFlag { flag: String, suggestion: Option<String>, help: String },
-    #[error("{0}")]
     Other(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::UnknownFlag { flag, suggestion, help } => {
+                let hint = suggestion
+                    .as_ref()
+                    .map(|s| format!(" (did you mean --{s}?)"))
+                    .unwrap_or_default();
+                write!(f, "unknown flag --{flag}{hint}\n\n{help}")
+            }
+            CliError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Levenshtein distance (small strings; O(nm) fine).
 pub fn edit_distance(a: &str, b: &str) -> usize {

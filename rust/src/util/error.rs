@@ -1,0 +1,168 @@
+//! Minimal `anyhow`-style dynamic error type (the offline build image
+//! ships no `anyhow`, so the slice of it Graphi uses is implemented
+//! here: a boxed dynamic error, `.context()` / `.with_context()` on
+//! `Result` and `Option`, `bail!` / `ensure!` macros, and `downcast_ref`
+//! for cooperative errors like `CliError::Help`).
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` itself — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! concrete error type) coherent.
+
+use std::fmt;
+
+/// A boxed dynamic error with a display-oriented API.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// Plain-string error payload (what `bail!`/`context` produce).
+struct Message(String);
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Message {}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(err: E) -> Error {
+        Error(Box::new(err))
+    }
+
+    /// Build an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(Box::new(Message(msg.into())))
+    }
+
+    /// Downcast to a concrete error type, if that is what this wraps.
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.0.downcast_ref::<E>()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    /// Replace the error with `context: original`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`] but lazy.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/graphi")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let err = r.context("doing a thing").unwrap_err();
+        assert!(format!("{err}").starts_with("doing a thing: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+    }
+
+    #[test]
+    fn downcast_misses_other_types() {
+        let err = Error::msg("plain");
+        assert!(err.downcast_ref::<std::io::Error>().is_none());
+    }
+}

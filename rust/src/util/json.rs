@@ -226,12 +226,19 @@ impl From<BTreeMap<String, f64>> for Json {
 // ---------------------------------------------------------------------------
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -4,6 +4,7 @@
 //! `rand` nor `proptest`, so the small slices of each that Graphi needs are
 //! implemented here from scratch:
 //!
+//! * [`error`]    — `anyhow`-style boxed dynamic error + context traits
 //! * [`rng`]      — deterministic xorshift/splitmix PRNG + distributions
 //! * [`stats`]    — running statistics, percentiles, confidence intervals
 //! * [`json`]     — minimal JSON value model, writer and parser
@@ -16,6 +17,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;

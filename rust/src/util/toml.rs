@@ -81,12 +81,19 @@ impl Document {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {message}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a document.
 pub fn parse(text: &str) -> Result<Document, ParseError> {

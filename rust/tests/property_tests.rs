@@ -5,10 +5,13 @@
 //! bound, and never lose to the sequential upper bound by more than
 //! overhead.
 
+use graphi::engine::ready::ReadySet;
+use graphi::engine::ring::SpscRing;
 use graphi::engine::{Engine, GraphiEngine, NaiveEngine, Policy, SequentialEngine, SimEnv};
 use graphi::graph::levels::{critical_path_length, levels, makespan_lower_bound};
 use graphi::graph::op::{EwKind, OpKind};
 use graphi::graph::{Graph, GraphBuilder};
+use graphi::util::rng::Rng;
 use graphi::util::testkit::{check, DagCase, DagGen, Gen, UsizeRange};
 
 /// Materialize a testkit DAG description as a computation graph whose op
@@ -177,6 +180,203 @@ fn prop_deterministic_replay() {
         }
         Ok(())
     });
+}
+
+/// Reference pop for the deterministic policies: scan the live set and
+/// remove the entry the policy semantics promise (max/min priority with
+/// FIFO tie-break on push order, plain FIFO, plain LIFO).
+fn model_pop(policy: Policy, model: &mut Vec<(f64, u64, u32)>) -> u32 {
+    let idx = match policy {
+        Policy::CriticalPathFirst => {
+            let mut best = 0;
+            for i in 1..model.len() {
+                let (p, s, _) = model[i];
+                let (bp, bs, _) = model[best];
+                if p > bp || (p == bp && s < bs) {
+                    best = i;
+                }
+            }
+            best
+        }
+        Policy::AntiCritical => {
+            let mut best = 0;
+            for i in 1..model.len() {
+                let (p, s, _) = model[i];
+                let (bp, bs, _) = model[best];
+                if p < bp || (p == bp && s < bs) {
+                    best = i;
+                }
+            }
+            best
+        }
+        Policy::Fifo => 0,
+        Policy::Lifo => model.len() - 1,
+        Policy::Random => unreachable!("random handled by the mirrored-rng test"),
+    };
+    model.remove(idx).2
+}
+
+#[test]
+fn prop_ready_set_matches_reference_order() {
+    // random interleaved push/pop streams: the packed d-ary heap (and the
+    // queue/stack policies) must pop in exactly the order a brute-force
+    // scan of (priority, push-seq) produces. Priorities come from a coarse
+    // grid, so exact ties are frequent (exercising the FIFO tie-break)
+    // while distinct values survive the packed key's 32-bit quantization.
+    for seed in 0..25u64 {
+        let mut gen_rng = Rng::new(seed.wrapping_mul(0x9E37) + 1);
+        let n: usize = 150;
+        let levels: Vec<f64> = (0..n).map(|_| gen_rng.below(40) as f64 * 16.0).collect();
+        for &policy in
+            &[Policy::CriticalPathFirst, Policy::AntiCritical, Policy::Fifo, Policy::Lifo]
+        {
+            let mut rs = ReadySet::new(policy, levels.clone(), seed);
+            let mut model: Vec<(f64, u64, u32)> = Vec::new();
+            let mut op_rng = Rng::new(seed ^ 0xABCD);
+            let mut seq = 0u64;
+            let mut next_node = 0u32;
+            let mut popped = Vec::new();
+            let mut expected = Vec::new();
+            for _ in 0..3 * n {
+                let can_push = (next_node as usize) < n;
+                if can_push && (model.is_empty() || op_rng.chance(0.55)) {
+                    rs.push(next_node);
+                    model.push((levels[next_node as usize], seq, next_node));
+                    seq += 1;
+                    next_node += 1;
+                } else if !model.is_empty() {
+                    popped.push(rs.pop().expect("set non-empty per model"));
+                    expected.push(model_pop(policy, &mut model));
+                } else {
+                    break;
+                }
+            }
+            while let Some(v) = rs.pop() {
+                popped.push(v);
+                expected.push(model_pop(policy, &mut model));
+            }
+            assert!(model.is_empty(), "{}: model drained with set", policy.name());
+            assert!(rs.is_empty(), "{}: set drained with model", policy.name());
+            assert_eq!(popped, expected, "policy {} seed {seed}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn prop_ready_set_random_policy_mirrors_seeded_rng() {
+    // the Random policy must consume exactly one `range(0, len)` draw per
+    // pop from a generator seeded with the ReadySet seed — the contract
+    // `deterministic per seed` rests on
+    for seed in 0..10u64 {
+        let n = 64u32;
+        let mut rs = ReadySet::new(Policy::Random, vec![0.0; n as usize], seed);
+        let mut mirror: Vec<u32> = Vec::new();
+        let mut mirror_rng = Rng::new(seed);
+        for i in 0..n {
+            rs.push(i);
+            mirror.push(i);
+        }
+        let mut out = Vec::new();
+        let mut expect = Vec::new();
+        while let Some(v) = rs.pop() {
+            out.push(v);
+            let i = mirror_rng.range(0, mirror.len());
+            expect.push(mirror.swap_remove(i));
+        }
+        assert_eq!(out.len(), n as usize);
+        assert_eq!(out, expect, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_spsc_ring_batch_two_thread_stress() {
+    // producer pushes variable-size batches, consumer drains in batches;
+    // every item must arrive exactly once, in order, across real threads
+    let ring = SpscRing::<u64>::new(64);
+    let n = 50_000u64;
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut chunk_rng = Rng::new(7);
+            let mut next = 0u64;
+            while next < n {
+                let hi = (next + 1 + chunk_rng.below(31)).min(n);
+                let mut batch = next..hi;
+                let pushed = ring.push_batch(&mut batch) as u64;
+                next += pushed;
+                if pushed == 0 {
+                    std::hint::spin_loop();
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut out: Vec<u64> = Vec::with_capacity(32);
+        let mut expected = 0u64;
+        while expected < n {
+            out.clear();
+            if ring.pop_batch(&mut out, 32) == 0 {
+                std::hint::spin_loop();
+                std::thread::yield_now();
+                continue;
+            }
+            for &v in &out {
+                assert_eq!(v, expected, "out-of-order item from batch pop");
+                expected += 1;
+            }
+        }
+    });
+    assert!(ring.is_empty());
+}
+
+#[test]
+fn prop_spsc_ring_mixed_single_and_batch_two_thread() {
+    // alternate single-item and batched operations on both sides; order
+    // and exactly-once delivery must survive the mix
+    let ring = SpscRing::<u64>::new(16);
+    let n = 20_000u64;
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut next = 0u64;
+            while next < n {
+                let advanced = if next % 3 == 0 {
+                    let hi = (next + 5).min(n);
+                    let mut batch = next..hi;
+                    ring.push_batch(&mut batch) as u64
+                } else {
+                    match ring.push(next) {
+                        Ok(()) => 1,
+                        Err(_) => 0,
+                    }
+                };
+                next += advanced;
+                if advanced == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut out: Vec<u64> = Vec::new();
+        let mut expected = 0u64;
+        while expected < n {
+            let got = if expected % 2 == 0 {
+                out.clear();
+                let popped = ring.pop_batch(&mut out, 7);
+                for &v in &out {
+                    assert_eq!(v, expected);
+                    expected += 1;
+                }
+                popped > 0
+            } else if let Some(v) = ring.pop() {
+                assert_eq!(v, expected);
+                expected += 1;
+                true
+            } else {
+                false
+            };
+            if !got {
+                std::thread::yield_now();
+            }
+        }
+    });
+    assert!(ring.is_empty());
 }
 
 #[test]
