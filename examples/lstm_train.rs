@@ -16,8 +16,9 @@
 //! `STEPS` overrides the step count (default 300).
 
 use graphi::runtime::{ArtifactSet, LstmTrainer, PjrtRuntime};
+use graphi::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
     let dir = graphi::runtime::artifacts::default_dir();
     println!("loading artifacts from {} …", dir.display());
@@ -31,6 +32,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut trainer = LstmTrainer::new(&runtime, &set, 42)?;
     println!("parameters: {}", trainer.param_count());
+    let (execs, threads) = trainer.parallelism();
+    println!("parallel setting: {execs}x{threads} (tuning artifact when present, else S64 default)");
     println!("training byte-LM for {steps} steps on the synthetic corpus …\n");
 
     let report = trainer.train(steps, 0xC0DE, steps / 20)?;
@@ -46,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         report.initial_loss(),
         report.final_loss()
     );
-    anyhow::ensure!(
+    graphi::ensure!(
         report.final_loss() < report.initial_loss() - 0.5,
         "training failed to reduce loss meaningfully"
     );

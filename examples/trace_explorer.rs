@@ -51,7 +51,7 @@ fn wavefront_correlation(
     cov / (vx.sqrt() * vy.sqrt())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> graphi::util::error::Result<()> {
     let graph = build_lstm(&LstmConfig::for_size(ModelSize::Medium, false));
     let env = SimEnv::knl(11);
     std::fs::create_dir_all("reports")?;

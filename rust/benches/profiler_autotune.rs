@@ -1,0 +1,96 @@
+//! `cargo bench --bench profiler_autotune` — search cost of the
+//! successive-halving autotuner versus the flat exhaustive profiler sweep
+//! (§4.2), per model:
+//!
+//! * wall-clock time of each search (the whole search is the unit of work;
+//!   the simulated graph executions inside it are the cost being halved);
+//! * total profiling iterations spent (the metric column — the quantity
+//!   the paper's operator actually pays on real silicon);
+//! * the *found-makespan ratio*: the winner of each search re-measured in
+//!   a deterministic environment, search/exhaustive, ≤ 1.05 expected.
+//!
+//! Results merge into `BENCH_scheduler.json` at the repo root (override
+//! with `GRAPHI_BENCH_JSON`) with `autotune_iteration_saving_<model>` and
+//! `autotune_makespan_ratio_<model>` headline entries per run.
+
+use graphi::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv};
+use graphi::models::{self, ModelKind, ModelSize};
+use graphi::util::bench::{merge_into_bench_json, BenchConfig, BenchRunner};
+
+/// The §7.3 model-specific extras both searches seed in.
+const EXTRAS: [(usize, usize); 2] = [(3, 21), (6, 10)];
+
+fn main() {
+    let mut runner = BenchRunner::with_config(
+        "profiler_autotune",
+        BenchConfig {
+            csv_path: Some("reports/profiler_autotune.csv".into()),
+            ..BenchConfig::from_env()
+        },
+    );
+
+    let mut headlines: Vec<(&'static str, f64)> = Vec::new();
+    for (kind, label, saving_key, ratio_key) in [
+        (
+            ModelKind::Lstm,
+            "lstm",
+            "autotune_iteration_saving_lstm",
+            "autotune_makespan_ratio_lstm",
+        ),
+        (
+            ModelKind::PathNet,
+            "pathnet",
+            "autotune_iteration_saving_pathnet",
+            "autotune_makespan_ratio_pathnet",
+        ),
+    ] {
+        let graph = models::build(kind, ModelSize::Small);
+        let env = SimEnv::knl(42);
+        let tuner = Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() };
+        let profiler =
+            Profiler { iterations: 3, worker_cores: 64, extra_configs: EXTRAS.to_vec() };
+
+        runner.bench(
+            &format!("autotune_search_{label}"),
+            &[("nodes", graph.len().to_string())],
+            || tuner.search(&graph, &env).best,
+        );
+        let sh_report = tuner.search(&graph, &env);
+        runner.set_metric(sh_report.total_profile_iterations as f64, "iters");
+
+        runner.bench(
+            &format!("exhaustive_sweep_{label}"),
+            &[("nodes", graph.len().to_string())],
+            || profiler.profile(&graph, &env).best,
+        );
+        let exhaustive = profiler.profile(&graph, &env);
+        let exhaustive_iters = profiler.candidates().len() * profiler.iterations;
+        runner.set_metric(exhaustive_iters as f64, "iters");
+
+        // winners re-measured noise-free: the quality the saved iterations cost
+        let det = SimEnv::knl_deterministic();
+        let found =
+            GraphiEngine::new(sh_report.best.0, sh_report.best.1).run(&graph, &det).makespan_us;
+        let sweep = GraphiEngine::new(exhaustive.best.0, exhaustive.best.1)
+            .run(&graph, &det)
+            .makespan_us;
+        runner.record(
+            &format!("autotune_best_makespan_{label}"),
+            &[("config", format!("{}x{}", sh_report.best.0, sh_report.best.1))],
+            found,
+        );
+        runner.record(
+            &format!("exhaustive_best_makespan_{label}"),
+            &[("config", format!("{}x{}", exhaustive.best.0, exhaustive.best.1))],
+            sweep,
+        );
+        headlines.push((
+            saving_key,
+            1.0 - sh_report.total_profile_iterations as f64 / exhaustive_iters as f64,
+        ));
+        headlines.push((ratio_key, found / sweep));
+    }
+
+    runner.finish();
+    merge_into_bench_json(&runner, &headlines);
+}

@@ -29,8 +29,7 @@ use graphi::engine::scheduler::IdleBitmap;
 use graphi::engine::Policy;
 use graphi::models::{self, ModelKind, ModelSize};
 use graphi::runtime::ThreadedGraphi;
-use graphi::util::bench::{BenchConfig, BenchRunner};
-use graphi::util::json::Json;
+use graphi::util::bench::{merge_into_bench_json, BenchConfig, BenchRunner};
 use graphi::util::rng::Rng;
 
 /// The seed repo's ready-heap entry (24 bytes, f64 comparisons), kept here
@@ -269,73 +268,15 @@ fn main() {
 
     println!("{}", runner.report());
     runner.finish();
-    write_bench_json(&runner);
-}
-
-/// Merge this run's results into the repo-root `BENCH_scheduler.json`
-/// (override the path with `GRAPHI_BENCH_JSON`), appending one entry to
-/// the file's `runs` array so successive runs accumulate a trajectory.
-fn write_bench_json(runner: &BenchRunner) {
-    let path = std::env::var("GRAPHI_BENCH_JSON")
-        .unwrap_or_else(|_| "../BENCH_scheduler.json".to_string());
-
-    let mut run = Json::obj();
-    run.set(
-        "unix_time_s",
-        std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_secs() as f64)
-            .unwrap_or(0.0),
-    );
-    run.set("fast_mode", std::env::var("GRAPHI_BENCH_FAST").as_deref() == Ok("1"));
-    let mut results = Vec::new();
-    for r in &runner.results {
-        let mut obj = Json::obj();
-        obj.set("name", r.name.as_str());
-        obj.set("mean_us", r.summary.mean);
-        obj.set("p50_us", r.summary.p50);
-        obj.set("samples", r.summary.n as f64);
-        if let Some((v, unit)) = r.metric {
-            obj.set("metric", v);
-            obj.set("metric_unit", unit);
-        }
-        results.push(obj);
-    }
-    run.set("results", Json::Arr(results));
-
     // speedup headline: packed heap vs the inlined legacy BinaryHeap
     let mean_of = |name: &str| {
         runner.results.iter().find(|r| r.name == name).map(|r| r.summary.mean)
     };
+    let mut headlines = Vec::new();
     if let (Some(new), Some(old)) = (mean_of("heap_push_pop_4096"), mean_of("heap_push_pop_4096_legacy")) {
         if new > 0.0 {
-            run.set("heap_push_pop_4096_speedup_vs_legacy", old / new);
+            headlines.push(("heap_push_pop_4096_speedup_vs_legacy", old / new));
         }
     }
-
-    let mut doc = match std::fs::read_to_string(&path).ok().and_then(|t| graphi::util::json::parse(&t).ok()) {
-        Some(existing @ Json::Obj(_)) => existing,
-        _ => {
-            let mut d = Json::obj();
-            d.set("group", "scheduler_hotpath");
-            d.set(
-                "note",
-                "perf trajectory of the scheduler hot path; regenerate with \
-                 `cargo bench --bench scheduler_hotpath` (GRAPHI_BENCH_FAST=1 for a smoke run)",
-            );
-            d.set("runs", Json::Arr(Vec::new()));
-            d
-        }
-    };
-    let mut runs = match doc.get("runs") {
-        Some(Json::Arr(rs)) => rs.clone(),
-        _ => Vec::new(),
-    };
-    runs.push(run);
-    doc.set("runs", Json::Arr(runs));
-
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("bench json merged into {path}"),
-        Err(e) => eprintln!("failed to write {path}: {e}"),
-    }
+    merge_into_bench_json(&runner, &headlines);
 }

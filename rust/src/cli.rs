@@ -3,6 +3,7 @@
 //! ```text
 //! graphi run      [--config cfg.toml | --model lstm --size medium ...]
 //! graphi profile  --model lstm --size medium
+//! graphi autotune --model lstm --size medium [--force] [--compare]
 //! graphi stats    --model pathnet --size large [--dot out.dot]
 //! graphi trace    --model lstm --size small --executors 8 --threads 8
 //! graphi bench    <fig2|fig3|fig5|fig6|table2|ablations|all> [--fast]
@@ -16,9 +17,10 @@ use crate::coordinator::config::{EngineChoice, ExperimentConfig};
 use crate::coordinator::driver::Driver;
 use crate::coordinator::figures;
 use crate::engine::policies::Policy;
-use crate::engine::{Engine, GraphiEngine, Profiler, SimEnv, Trace};
+use crate::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv, Trace};
 use crate::graph::GraphStats;
 use crate::models::{self, ModelKind, ModelSize};
+use crate::runtime::artifacts::{tuning_path, TuningArtifact};
 use crate::util::bench::{BenchConfig, BenchRunner};
 use crate::util::cli::{CliError, Matches, Spec};
 
@@ -47,6 +49,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
     match cmd {
         "run" => cmd_run(&rest),
         "profile" => cmd_profile(&rest),
+        "autotune" => cmd_autotune(&rest),
         "stats" => cmd_stats(&rest),
         "trace" => cmd_trace(&rest),
         "bench" => cmd_bench(&rest),
@@ -66,6 +69,7 @@ fn toplevel_help() -> String {
      COMMANDS:\n\
      \x20 run       run one experiment (config file or flags)\n\
      \x20 profile   §4.2 configuration search for a model\n\
+     \x20 autotune  successive-halving parallel-setting search, persisted as a tuning artifact\n\
      \x20 stats     graph census + parallelism profile\n\
      \x20 trace     run once and export a Chrome trace + ASCII timeline\n\
      \x20 bench     regenerate a paper table/figure (fig2|fig3|fig5|fig6|table2|ablations|all)\n\
@@ -96,25 +100,89 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("threads", None, "threads per executor")
         .opt("policy", Some("cp-first"), "cp-first|fifo|lifo|random|anti-critical")
         .opt("iters", Some("5"), "iterations to average")
+        .opt("tuning", None, "artifact dir with a persisted autotune result to reuse")
         .opt("trace", None, "write Chrome trace JSON here")
         .opt("json", None, "write result JSON here");
     let m = spec.parse(args).map_err(Error::new)?;
+    let has_config = m.get("config").is_some();
     let mut cfg = match m.get("config") {
         Some(path) => ExperimentConfig::from_file(path)?,
         None => ExperimentConfig::default(),
     };
+    // config-file values survive unless the flag was given explicitly
+    // ("flags override" — *defaulted* flags must not clobber the file)
+    let flag_wins = |name: &str| !has_config || m.is_explicit(name);
     let (kind, size) = parse_model(&m)?;
-    cfg.model = kind;
-    cfg.size = size;
-    cfg.engine = EngineChoice::parse(m.get("engine").unwrap())
-        .with_context(|| format!("bad --engine {}", m.get("engine").unwrap()))?;
-    cfg.executors = m.get_usize("executors").map_err(Error::new)?;
-    cfg.threads_per = m.get_usize("threads").map_err(Error::new)?;
-    cfg.policy = Policy::parse(m.get("policy").unwrap())
-        .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
-    cfg.iterations = m.get_usize("iters").map_err(Error::new)?.unwrap_or(5);
-    cfg.seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
-    cfg.trace_path = m.get("trace").map(String::from);
+    if flag_wins("model") {
+        cfg.model = kind;
+    }
+    if flag_wins("size") {
+        cfg.size = size;
+    }
+    if flag_wins("engine") {
+        cfg.engine = EngineChoice::parse(m.get("engine").unwrap())
+            .with_context(|| format!("bad --engine {}", m.get("engine").unwrap()))?;
+    }
+    if let Some(e) = m.get_usize("executors").map_err(Error::new)? {
+        cfg.executors = Some(e);
+    }
+    if let Some(t) = m.get_usize("threads").map_err(Error::new)? {
+        cfg.threads_per = Some(t);
+    }
+    if flag_wins("policy") {
+        cfg.policy = Policy::parse(m.get("policy").unwrap())
+            .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
+    }
+    if flag_wins("iters") {
+        cfg.iterations = m.get_usize("iters").map_err(Error::new)?.unwrap_or(5);
+    }
+    if flag_wins("seed") {
+        cfg.seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
+    }
+    if let Some(trace) = m.get("trace") {
+        cfg.trace_path = Some(trace.to_string());
+    }
+    // --tuning DIR: reuse a persisted autotune result. The artifact's
+    // profiled duration table always feeds the scheduler's levels; its
+    // fleet shape applies only when no explicit fleet was requested.
+    if let Some(dir) = m.get("tuning") {
+        let path = tuning_path(dir, &format!("{}-{}", cfg.model.name(), cfg.size.name()));
+        let nodes = models::build(cfg.model, cfg.size).len();
+        match TuningArtifact::load(&path) {
+            Ok(t) if t.matches_graph(nodes) => {
+                if cfg.executors.is_none() && cfg.threads_per.is_none() {
+                    println!(
+                        "tuning artifact {}: fleet {}x{} + profiled levels ({} profiling iterations, reused)",
+                        path.display(),
+                        t.best.0,
+                        t.best.1,
+                        t.total_profile_iterations
+                    );
+                    cfg.executors = Some(t.best.0);
+                    cfg.threads_per = Some(t.best.1);
+                } else {
+                    println!(
+                        "tuning artifact {}: fleet fixed by flags/config; using its profiled levels only",
+                        path.display()
+                    );
+                }
+                cfg.profiled_durations = Some(t.durations_us);
+            }
+            Ok(t) => {
+                crate::log_warn!(
+                    "tuning artifact {} covers {} ops but {}/{} has {}; profiling fresh",
+                    path.display(),
+                    t.graph_nodes,
+                    cfg.model.name(),
+                    cfg.size.name(),
+                    nodes
+                );
+            }
+            Err(e) => {
+                crate::log_warn!("no usable tuning artifact ({e}); profiling fresh");
+            }
+        }
+    }
     let result = Driver::run(&cfg);
     print!("{}", result.render());
     if let Some(path) = m.get("json") {
@@ -131,14 +199,10 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
     let stats = GraphStats::compute(&graph);
-    let mut extra = vec![(3, 21)];
-    if stats.max_width >= 6 {
-        extra.push((6, 10));
-    }
     let profiler = Profiler {
         iterations: m.get_usize("iters").map_err(Error::new)?.unwrap_or(3),
         worker_cores: 64,
-        extra_configs: extra,
+        extra_configs: crate::sim::topology::model_extras(stats.max_width),
     };
     let env = SimEnv::knl(m.get_u64("seed").map_err(Error::new)?.unwrap_or(42));
     let report = profiler.profile(&graph, &env);
@@ -146,6 +210,85 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     print!("{}", Profiler::render(&report));
     println!("best: {}x{}", report.best.0, report.best.1);
     println!("static suggestion (graph width): {} executors", stats.suggested_executors());
+    Ok(())
+}
+
+fn cmd_autotune(args: &[String]) -> Result<()> {
+    let spec = model_opts(Spec::new(
+        "autotune",
+        "successive-halving parallel-setting search, persisted as a tuning artifact",
+    ))
+    .opt("dir", None, "artifact directory (default: $GRAPHI_ARTIFACTS or ./artifacts)")
+    .opt("max-iters", Some("8"), "per-candidate iteration cap for late rounds")
+    .flag("force", "re-run the search even if a tuning artifact exists")
+    .flag("compare", "also run the exhaustive sweep and report the savings");
+    let m = spec.parse(args).map_err(Error::new)?;
+    let (kind, size) = parse_model(&m)?;
+    let graph = models::build(kind, size);
+    let stats = GraphStats::compute(&graph);
+    let seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
+    let env = SimEnv::knl(seed);
+    let tuner = Autotuner {
+        worker_cores: 64,
+        // same §7.3 model-specific extras as `profile` and the driver
+        extra_configs: crate::sim::topology::model_extras(stats.max_width),
+        max_iterations: m.get_usize("max-iters").map_err(Error::new)?.unwrap_or(8),
+        ..Default::default()
+    };
+    let dir = m
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts::default_dir);
+    let tag = format!("{}-{}", kind.name(), size.name());
+    let path = tuning_path(&dir, &tag);
+    if !m.flag("force") {
+        if let Ok(t) = TuningArtifact::load(&path) {
+            if t.matches_graph(graph.len()) {
+                println!("loaded tuning artifact {} — skipping search", path.display());
+                println!(
+                    "best parallel setting: {}x{}  (mean makespan {}, found in {} profiling iterations)",
+                    t.best.0,
+                    t.best.1,
+                    crate::util::fmt_us(t.best_makespan_us),
+                    t.total_profile_iterations
+                );
+                return Ok(());
+            }
+            crate::log_warn!(
+                "tuning artifact {} does not match this graph; re-searching",
+                path.display()
+            );
+        }
+    }
+    println!("autotuning {}/{} ({} nodes)", kind.name(), size.name(), graph.len());
+    let report = tuner.search(&graph, &env);
+    print!("{}", Autotuner::render(&report));
+    let artifact = TuningArtifact::from_report(&tag, graph.len(), seed, &tuner, &report);
+    artifact.save(&path)?;
+    println!("tuning artifact written to {}", path.display());
+    if m.flag("compare") {
+        let profiler = Profiler {
+            iterations: report.final_round_iterations,
+            worker_cores: tuner.worker_cores,
+            extra_configs: tuner.extra_configs.clone(),
+        };
+        let exhaustive = profiler.profile(&graph, &env);
+        let exhaustive_iters = profiler.candidates().len() * profiler.iterations;
+        let det = SimEnv::knl_deterministic();
+        let found = GraphiEngine::new(report.best.0, report.best.1).run(&graph, &det).makespan_us;
+        let sweep = GraphiEngine::new(exhaustive.best.0, exhaustive.best.1)
+            .run(&graph, &det)
+            .makespan_us;
+        println!(
+            "exhaustive sweep: best {}x{} in {} iterations; search spent {} ({:.0}% fewer)",
+            exhaustive.best.0,
+            exhaustive.best.1,
+            exhaustive_iters,
+            report.total_profile_iterations,
+            100.0 * (1.0 - report.total_profile_iterations as f64 / exhaustive_iters as f64),
+        );
+        println!("found-makespan ratio (search/exhaustive): {:.3}", found / sweep);
+    }
     Ok(())
 }
 
@@ -288,6 +431,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let seed = m.get_u64("seed").map_err(Error::new)?.unwrap();
     let mut trainer = crate::runtime::LstmTrainer::new(&runtime, &set, seed)?;
     println!("params: {}", trainer.param_count());
+    let (pe, pt) = trainer.parallelism();
+    println!(
+        "parallel setting: {pe}x{pt}{}",
+        if trainer.parallelism_from_tuning() {
+            " (from tuning artifact)"
+        } else {
+            " (default — run `graphi autotune` to tune)"
+        }
+    );
     let steps = m.get_usize("steps").map_err(Error::new)?.unwrap();
     let log_every = m.get_usize("log-every").map_err(Error::new)?.unwrap();
     let report = trainer.train(steps, seed ^ 0xC0DE, log_every)?;
@@ -348,6 +500,27 @@ mod tests {
     #[test]
     fn help_for_subcommand() {
         assert_eq!(main(args(&["run", "--help"])), 0);
+    }
+
+    #[test]
+    fn autotune_writes_then_reuses_artifact() {
+        let dir = std::env::temp_dir().join(format!("graphi-cli-autotune-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.display().to_string();
+        let base = ["autotune", "--model", "mlp", "--size", "small", "--dir", &dir_s];
+        assert_eq!(main(args(&base)), 0);
+        let path = crate::runtime::artifacts::tuning_path(&dir, "mlp-small");
+        assert!(path.is_file(), "artifact not written to {}", path.display());
+        // second invocation loads the artifact (and must not fail)
+        assert_eq!(main(args(&base)), 0);
+        // run can consume it
+        assert_eq!(
+            main(args(&[
+                "run", "--model", "mlp", "--size", "small", "--iters", "1", "--tuning", &dir_s,
+            ])),
+            0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -57,6 +57,11 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Profiler iterations when auto-configuring.
     pub profile_iterations: usize,
+    /// Profiled per-op durations (µs) to derive the Graphi engine's level
+    /// values from — loaded from a tuning artifact by `graphi run
+    /// --tuning`. Ignored (with a warning) when it does not cover the
+    /// graph.
+    pub profiled_durations: Option<Vec<f64>>,
     /// Emit a Chrome trace of the last iteration to this path.
     pub trace_path: Option<String>,
 }
@@ -75,6 +80,7 @@ impl Default for ExperimentConfig {
             iterations: 5,
             seed: 42,
             profile_iterations: 3,
+            profiled_durations: None,
             trace_path: None,
         }
     }

@@ -87,16 +87,11 @@ impl Driver {
         if cfg.engine == EngineChoice::Sequential {
             return (1, 64);
         }
-        let mut extra = vec![];
         // §7.3: PathNet gets 6×10 (6 modules), GoogleNet 3×21 (2-3 branches)
-        if stats.max_width >= 6 {
-            extra.push((6, 10));
-        }
-        extra.push((3, 21));
         let profiler = Profiler {
             iterations: cfg.profile_iterations.max(1),
             worker_cores: 64,
-            extra_configs: extra,
+            extra_configs: crate::sim::topology::model_extras(stats.max_width),
         };
         let report = profiler.profile(graph, env);
         report.best
@@ -109,11 +104,25 @@ impl Driver {
     ) -> Box<dyn Engine> {
         let (executors, threads) = fleet;
         match cfg.engine {
-            EngineChoice::Graphi => Box::new(GraphiEngine {
-                policy: cfg.policy,
-                placement: cfg.placement,
-                ..GraphiEngine::new(executors, threads)
-            }),
+            EngineChoice::Graphi => {
+                let mut engine = GraphiEngine {
+                    policy: cfg.policy,
+                    placement: cfg.placement,
+                    ..GraphiEngine::new(executors, threads)
+                };
+                if let Some(durations) = &cfg.profiled_durations {
+                    if durations.len() == stats.nodes {
+                        engine.duration_overrides = Some(durations.clone().into());
+                    } else {
+                        crate::log_warn!(
+                            "tuning duration table covers {} ops but the graph has {}; ignoring",
+                            durations.len(),
+                            stats.nodes
+                        );
+                    }
+                }
+                Box::new(engine)
+            }
             EngineChoice::Sequential => Box::new(SequentialEngine::new(threads.max(executors))),
             EngineChoice::Naive => Box::new(NaiveEngine {
                 executors,
@@ -209,6 +218,26 @@ mod tests {
         };
         let r = Driver::run(&cfg);
         assert!(r.fleet.0 >= 1 && r.fleet.1 >= 1);
+    }
+
+    #[test]
+    fn profiled_durations_flow_into_the_engine() {
+        let nodes = crate::models::build(ModelKind::Mlp, ModelSize::Small).len();
+        let cfg = ExperimentConfig {
+            profiled_durations: Some(vec![2.0; nodes]),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.mean_makespan_us > 0.0);
+        // a mismatching table is ignored, not fatal
+        let cfg = ExperimentConfig {
+            profiled_durations: Some(vec![2.0; 3]),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.mean_makespan_us > 0.0);
     }
 
     #[test]

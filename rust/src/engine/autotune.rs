@@ -1,0 +1,292 @@
+//! Adaptive parallel-setting autotuner (§4.2, grown up).
+//!
+//! The flat [`super::Profiler`] sweep runs every `(executors × threads)`
+//! candidate for the same fixed iteration count — cheap configurations and
+//! hopeless ones get identical budgets. This module replaces it with
+//! **successive halving** over the same candidate space
+//! ([`crate::sim::topology::candidate_configs`]):
+//!
+//! 1. run every candidate for one iteration;
+//! 2. keep the best half (by cumulative mean makespan), double the
+//!    per-candidate iteration budget;
+//! 3. repeat until one candidate survives.
+//!
+//! Measurements accumulate across rounds (a survivor's round-2 mean folds
+//! in its round-1 sample), so later rounds *refine* earlier ones instead of
+//! discarding them. The search spends `Σ nᵣ·iᵣ` iterations, strictly fewer
+//! than the `n · i_final` an exhaustive sweep needs at the same final
+//! fidelity — on the default 9-candidate space it is 25 iterations versus
+//! 36 (or 27 for the legacy 3-iteration flat sweep).
+//!
+//! After the winner is found, per-op durations are re-estimated at the
+//! winning team size (the §4.2 duration-estimation job) so the caller can
+//! feed them back into [`GraphiEngine`]'s critical-path levels via
+//! `duration_overrides`, and persist everything as a versioned tuning
+//! artifact ([`crate::runtime::artifacts::TuningArtifact`]) that later
+//! runs load instead of re-searching.
+
+use crate::graph::Graph;
+use crate::sim::topology::candidate_configs;
+use crate::util::stats::Welford;
+
+use super::profiler::{ConfigMeasurement, Profiler};
+use super::{Engine, GraphiEngine, SimEnv};
+
+/// Successive-halving search configuration.
+#[derive(Debug, Clone)]
+pub struct Autotuner {
+    /// Worker cores to split among executors (machine cores − 2 reserved).
+    pub worker_cores: usize,
+    /// Extra model-specific configurations to seed into round 0.
+    pub extra_configs: Vec<(usize, usize)>,
+    /// Per-candidate iterations in round 0 (doubles every round).
+    pub initial_iterations: usize,
+    /// Cap on the per-candidate iterations of any single round.
+    pub max_iterations: usize,
+    /// Iterations of the post-search duration-estimation pass at the
+    /// winning team size (the same pass the flat profiler runs).
+    pub duration_iterations: usize,
+}
+
+impl Default for Autotuner {
+    fn default() -> Self {
+        Autotuner {
+            worker_cores: 64,
+            extra_configs: Vec::new(),
+            initial_iterations: 1,
+            max_iterations: 8,
+            duration_iterations: 3,
+        }
+    }
+}
+
+/// One halving round's outcome.
+#[derive(Debug, Clone)]
+pub struct AutotuneRound {
+    /// Per-candidate iterations *added* in this round.
+    pub iterations: usize,
+    /// Cumulative measurements of every candidate alive this round,
+    /// best (lowest mean makespan) first.
+    pub measurements: Vec<ConfigMeasurement>,
+    /// Configs that survived into the next round.
+    pub survivors: Vec<(usize, usize)>,
+}
+
+/// The search result.
+#[derive(Debug, Clone)]
+pub struct AutotuneReport {
+    /// Winning `(executors, threads_per)` configuration.
+    pub best: (usize, usize),
+    /// Cumulative mean makespan of the winner across all its iterations.
+    pub best_makespan_us: f64,
+    /// Per-op duration estimates at the winning team size, µs — feed these
+    /// into [`GraphiEngine::with_profiled_durations`] (or persist them).
+    pub durations_us: Vec<f64>,
+    /// Round-by-round search trace.
+    pub rounds: Vec<AutotuneRound>,
+    /// Total profiling iterations the config search spent (excludes the
+    /// duration-estimation pass, which the flat sweep pays identically).
+    pub total_profile_iterations: usize,
+    /// Per-candidate iterations of the last executed round.
+    pub final_round_iterations: usize,
+    /// Size of the initial candidate space.
+    pub num_candidates: usize,
+}
+
+impl AutotuneReport {
+    /// Iterations an exhaustive sweep would have spent to measure every
+    /// candidate at the final round's fidelity.
+    pub fn exhaustive_equivalent_iterations(&self) -> usize {
+        self.num_candidates * self.final_round_iterations
+    }
+}
+
+impl Autotuner {
+    /// The candidate space: symmetric splits plus validated extras.
+    pub fn candidates(&self) -> Vec<(usize, usize)> {
+        candidate_configs(self.worker_cores, &self.extra_configs)
+    }
+
+    /// Run the successive-halving search.
+    pub fn search(&self, graph: &Graph, env: &SimEnv) -> AutotuneReport {
+        let candidates = self.candidates();
+        assert!(!candidates.is_empty(), "no parallel-setting candidates to search");
+        let n = candidates.len();
+        let mut acc: Vec<Welford> = vec![Welford::new(); n];
+        let mut iters_done: Vec<u64> = vec![0; n];
+        let mut alive: Vec<usize> = (0..n).collect();
+        let mut per_round = self.initial_iterations.max(1);
+        let mut rounds: Vec<AutotuneRound> = Vec::new();
+        let mut total = 0usize;
+        loop {
+            for &ci in &alive {
+                let (executors, threads_per) = candidates[ci];
+                for _ in 0..per_round {
+                    // same per-iteration seed schedule as the flat
+                    // profiler (iteration k ⇒ seed ^ (k << 8)), continued
+                    // across rounds so a survivor's later samples are
+                    // fresh draws, not replays
+                    let env_i = SimEnv {
+                        cost: env.cost.clone(),
+                        seed: env.seed ^ (iters_done[ci] << 8),
+                    };
+                    let result = GraphiEngine::new(executors, threads_per).run(graph, &env_i);
+                    acc[ci].push(result.makespan_us);
+                    iters_done[ci] += 1;
+                    total += 1;
+                }
+            }
+            alive.sort_by(|&a, &b| acc[a].mean().total_cmp(&acc[b].mean()));
+            let measurements: Vec<ConfigMeasurement> = alive
+                .iter()
+                .map(|&ci| ConfigMeasurement {
+                    executors: candidates[ci].0,
+                    threads_per: candidates[ci].1,
+                    mean_makespan_us: acc[ci].mean(),
+                    std_us: acc[ci].std(),
+                })
+                .collect();
+            let keep = (alive.len() / 2).max(1);
+            let survivors: Vec<(usize, usize)> =
+                alive.iter().take(keep).map(|&ci| candidates[ci]).collect();
+            let finished = alive.len() == 1;
+            rounds.push(AutotuneRound { iterations: per_round, measurements, survivors });
+            if finished {
+                break;
+            }
+            alive.truncate(keep);
+            if alive.len() == 1 {
+                break;
+            }
+            per_round = (per_round * 2).min(self.max_iterations.max(1));
+        }
+        let best_ci = alive[0];
+        let best = candidates[best_ci];
+        let final_round_iterations = rounds.last().map(|r| r.iterations).unwrap_or(1);
+        // §4.2's second job, at the surviving winner's team size.
+        let durations_us = Profiler {
+            iterations: self.duration_iterations.max(1),
+            worker_cores: self.worker_cores,
+            extra_configs: Vec::new(),
+        }
+        .estimate_durations(graph, env, best.1);
+        AutotuneReport {
+            best,
+            best_makespan_us: acc[best_ci].mean(),
+            durations_us,
+            rounds,
+            total_profile_iterations: total,
+            final_round_iterations,
+            num_candidates: n,
+        }
+    }
+
+    /// Render the search trace as a table.
+    pub fn render(report: &AutotuneReport) -> String {
+        let mut t = crate::util::table::Table::new(&[
+            "round", "iters", "alive", "best config", "best makespan", "std",
+        ]);
+        for (i, round) in report.rounds.iter().enumerate() {
+            let best = &round.measurements[0];
+            t.row(&[
+                i.to_string(),
+                round.iterations.to_string(),
+                round.measurements.len().to_string(),
+                format!("{}x{}", best.executors, best.threads_per),
+                crate::util::fmt_us(best.mean_makespan_us),
+                crate::util::fmt_us(best.std_us),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "winner {}x{} after {} profiling iterations \
+             (exhaustive sweep at the same fidelity: {})\n",
+            report.best.0,
+            report.best.1,
+            report.total_profile_iterations,
+            report.exhaustive_equivalent_iterations(),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, ModelKind, ModelSize};
+
+    const EXTRAS: [(usize, usize); 2] = [(3, 21), (6, 10)];
+
+    fn tuner() -> Autotuner {
+        Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() }
+    }
+
+    #[test]
+    fn halving_schedule_shrinks_candidates_and_doubles_iterations() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let report = tuner().search(&g, &SimEnv::knl_deterministic());
+        assert_eq!(report.num_candidates, 9);
+        // 9 → 4 → 2 → 1 at 1, 2, 4 iterations per round
+        let alive: Vec<usize> = report.rounds.iter().map(|r| r.measurements.len()).collect();
+        assert_eq!(alive, vec![9, 4, 2]);
+        let iters: Vec<usize> = report.rounds.iter().map(|r| r.iterations).collect();
+        assert_eq!(iters, vec![1, 2, 4]);
+        assert_eq!(report.total_profile_iterations, 9 + 4 * 2 + 2 * 4);
+        assert_eq!(report.final_round_iterations, 4);
+        // strictly fewer than exhaustive at final fidelity (9 × 4 = 36)
+        assert!(report.total_profile_iterations < report.exhaustive_equivalent_iterations());
+    }
+
+    #[test]
+    fn deterministic_env_recovers_the_exhaustive_winner() {
+        // noise-free: round-0 means are exact, so halving can never drop
+        // the true optimum — the winner must equal the flat sweep's
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let report = tuner().search(&g, &env);
+        let exhaustive = Profiler {
+            iterations: 1,
+            worker_cores: 64,
+            extra_configs: EXTRAS.to_vec(),
+        }
+        .profile(&g, &env);
+        assert_eq!(report.best, exhaustive.best);
+        assert_eq!(report.durations_us.len(), g.len());
+        assert!(report.durations_us.iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn survivors_are_prefixes_of_measurements() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let report = tuner().search(&g, &SimEnv::knl(3));
+        for round in &report.rounds {
+            for (i, &cfg) in round.survivors.iter().enumerate() {
+                let m = &round.measurements[i];
+                assert_eq!((m.executors, m.threads_per), cfg);
+            }
+            // measurements sorted best-first
+            for w in round.measurements.windows(2) {
+                assert!(w[0].mean_makespan_us <= w[1].mean_makespan_us);
+            }
+        }
+    }
+
+    #[test]
+    fn single_candidate_space_short_circuits() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let t = Autotuner { worker_cores: 1, ..Default::default() };
+        let report = t.search(&g, &SimEnv::knl_deterministic());
+        assert_eq!(report.best, (1, 1));
+        assert_eq!(report.total_profile_iterations, 1);
+        assert_eq!(report.rounds.len(), 1);
+    }
+
+    #[test]
+    fn render_names_the_winner() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let report = tuner().search(&g, &SimEnv::knl_deterministic());
+        let text = Autotuner::render(&report);
+        assert!(text.contains("winner"));
+        assert!(text.contains(&format!("{}x{}", report.best.0, report.best.1)));
+    }
+}

@@ -36,6 +36,10 @@ pub struct GraphiEngine {
     /// false, unit durations are used (structure-only levels) — an
     /// ablation showing the profiler's contribution.
     pub profiled_levels: bool,
+    /// Externally measured per-op durations (µs) for the level
+    /// computation — what the profiler/autotuner feeds back (§4.2). Takes
+    /// precedence over `profiled_levels`; must cover every node.
+    pub duration_overrides: Option<std::sync::Arc<[f64]>>,
     /// Write element-wise outputs with non-temporal stream stores (§6).
     pub stream_stores: bool,
     /// §6 cache-affinity attempt: remember the producing executor as the
@@ -58,6 +62,7 @@ impl GraphiEngine {
             policy: Policy::CriticalPathFirst,
             placement: PlacementKind::PinnedDisjoint,
             profiled_levels: true,
+            duration_overrides: None,
             stream_stores: true,
             locality: false,
             straggler: None,
@@ -66,6 +71,16 @@ impl GraphiEngine {
 
     pub fn with_policy(mut self, policy: Policy) -> GraphiEngine {
         self.policy = policy;
+        self
+    }
+
+    /// Schedule with levels derived from profiled per-op durations (the
+    /// autotuner's duration table) instead of the analytic cost model.
+    pub fn with_profiled_durations(
+        mut self,
+        durations: impl Into<std::sync::Arc<[f64]>>,
+    ) -> GraphiEngine {
+        self.duration_overrides = Some(durations.into());
         self
     }
 }
@@ -151,7 +166,14 @@ impl<'a> Sim<'a> {
                 dur
             })
             .collect();
-        let level_values = if cfg.profiled_levels {
+        let level_values = if let Some(overrides) = &cfg.duration_overrides {
+            assert_eq!(
+                overrides.len(),
+                graph.len(),
+                "duration overrides must cover every node"
+            );
+            levels(graph, overrides)
+        } else if cfg.profiled_levels {
             levels(graph, &base_dur_us)
         } else {
             levels(graph, &vec![1.0; graph.len()])
@@ -472,6 +494,49 @@ mod tests {
             unpinned > pinned * 1.15,
             "unpinned {unpinned} vs pinned {pinned} — Fig 3 expects a clear gap"
         );
+    }
+
+    #[test]
+    fn duration_overrides_steer_dispatch_order() {
+        // three independent GEMMs, one executor: dispatch order must follow
+        // the override levels, not the cost model's
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        for name in ["a", "b", "c"] {
+            b.add(name, OpKind::MatMul { m: 32, k: 64, n: 64 });
+        }
+        let g = b.build().unwrap();
+        let run_order = |overrides: Vec<f64>| {
+            let r = GraphiEngine::new(1, 8)
+                .with_profiled_durations(overrides)
+                .run(&g, &SimEnv::knl_deterministic());
+            let mut recs = r.records.clone();
+            recs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+            recs.into_iter().map(|rec| rec.node).collect::<Vec<_>>()
+        };
+        assert_eq!(run_order(vec![5.0, 1.0, 9.0]), vec![2, 0, 1]);
+        assert_eq!(run_order(vec![9.0, 5.0, 1.0]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duration_overrides_schedule_stays_valid() {
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        // adversarial: constant durations (structure-only levels)
+        let r = GraphiEngine::new(8, 8)
+            .with_profiled_durations(vec![1.0; g.len()])
+            .run(&g, &env());
+        r.validate(&g).unwrap();
+        assert_eq!(r.records.len(), g.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "duration overrides must cover every node")]
+    fn duration_overrides_length_checked() {
+        let g = mlp(&MlpConfig::default());
+        let _ = GraphiEngine::new(2, 8)
+            .with_profiled_durations(vec![1.0])
+            .run(&g, &env());
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!   bitmap (bit-scan), level max-heap, per-executor push
 //! * [`profiler`]  — §4.2: symmetric-config search + per-op duration
 //!   estimation over the first iterations
+//! * [`autotune`]  — successive-halving search over the same candidate
+//!   space, feeding duration estimates back into the scheduler's levels
+//!   and persisting the result as a tuning artifact
 //! * engines (all implement [`Engine`]):
 //!   - [`graphi`]          — the paper's system (centralized CP-first)
 //!   - [`sequential`]      — one executor, topological order
@@ -26,6 +29,7 @@
 //! the threaded (real-parallelism, PJRT-backed) engine lives in
 //! [`crate::runtime::threaded`].
 
+pub mod autotune;
 pub mod dynamic;
 pub mod graphi;
 pub mod heterogeneous;
@@ -40,6 +44,7 @@ pub mod sequential;
 pub mod tensorflow_like;
 pub mod trace;
 
+pub use autotune::{AutotuneReport, AutotuneRound, Autotuner};
 pub use dynamic::DynamicFleetEngine;
 pub use graphi::GraphiEngine;
 pub use heterogeneous::HeterogeneousEngine;

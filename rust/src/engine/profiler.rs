@@ -12,7 +12,7 @@
 //!    averaging genuinely reduces variance here, like in the real system.
 
 use crate::graph::Graph;
-use crate::sim::topology::symmetric_configs;
+use crate::sim::topology::candidate_configs;
 use crate::util::stats::Welford;
 
 use super::graphi::GraphiEngine;
@@ -55,15 +55,11 @@ pub struct ProfileReport {
 }
 
 impl Profiler {
-    /// Enumerate candidates: powers of two (§4.2's example) plus extras.
+    /// Enumerate candidates: powers of two (§4.2's example) plus extras,
+    /// via the shared [`candidate_configs`] enumeration the autotuner also
+    /// searches.
     pub fn candidates(&self) -> Vec<(usize, usize)> {
-        let mut configs = symmetric_configs(self.worker_cores);
-        for &extra in &self.extra_configs {
-            if !configs.contains(&extra) {
-                configs.push(extra);
-            }
-        }
-        configs
+        candidate_configs(self.worker_cores, &self.extra_configs)
     }
 
     /// Run the search.

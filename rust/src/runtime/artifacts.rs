@@ -1,12 +1,22 @@
-//! Artifact discovery.
+//! Artifact discovery and tuning-artifact persistence.
 //!
 //! `make artifacts` produces `artifacts/*.hlo.txt` plus a
 //! `manifest.json` describing each module's entry shapes, so the Rust side
 //! can size its buffers without re-deriving anything from Python.
+//!
+//! The same directory also holds **tuning artifacts**
+//! (`tuning/<tag>.tuning.json`): the autotuner's winning parallel setting,
+//! its per-op duration table, and the full search trace, versioned so a
+//! later run can load the result instead of re-searching
+//! ([`autotune_or_load`]). A corrupt, missing, stale, or
+//! version-mismatched artifact degrades to a fresh search — never a panic.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::engine::autotune::{AutotuneReport, Autotuner};
+use crate::engine::SimEnv;
+use crate::graph::Graph;
 use crate::util::json::{self, Json};
 
 /// One module's manifest entry.
@@ -36,6 +46,8 @@ pub enum ArtifactError {
     MissingManifest(String),
     BadManifest(String),
     UnknownModule(String, String),
+    BadTuning(String),
+    TuningVersion { found: u64, expected: u64 },
     Io(std::io::Error),
 }
 
@@ -51,6 +63,10 @@ impl std::fmt::Display for ArtifactError {
             ArtifactError::BadManifest(m) => write!(f, "malformed manifest: {m}"),
             ArtifactError::UnknownModule(name, have) => {
                 write!(f, "unknown module `{name}` (have: {have})")
+            }
+            ArtifactError::BadTuning(m) => write!(f, "malformed tuning artifact: {m}"),
+            ArtifactError::TuningVersion { found, expected } => {
+                write!(f, "tuning artifact format v{found}, this build reads v{expected}")
             }
             ArtifactError::Io(e) => write!(f, "io error: {e}"),
         }
@@ -156,6 +172,286 @@ fn parse_manifest(doc: &Json) -> Result<Vec<Manifest>, ArtifactError> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Tuning artifacts
+// ---------------------------------------------------------------------------
+
+/// Format version of persisted tuning artifacts. Bump on any schema change;
+/// readers reject other versions (and the caller re-searches).
+pub const TUNING_FORMAT_VERSION: u64 = 1;
+
+/// One halving round of the persisted search trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningRound {
+    /// Per-candidate iterations added in this round.
+    pub iterations: usize,
+    /// `(executors, threads_per, cumulative mean makespan µs)` for every
+    /// candidate alive in this round, best first.
+    pub measurements: Vec<(usize, usize, f64)>,
+}
+
+/// A persisted autotuning result: the winning parallel setting, the per-op
+/// duration table behind the scheduler's level values, and the search
+/// trace that produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningArtifact {
+    pub version: u64,
+    /// What was tuned, e.g. `lstm-small` or `train_step`.
+    pub tag: String,
+    pub worker_cores: usize,
+    /// Seed of the environment the search ran in.
+    pub seed: u64,
+    /// Node count of the tuned graph — a mismatching graph invalidates
+    /// the artifact (durations are indexed by node id).
+    pub graph_nodes: usize,
+    /// Winning `(executors, threads_per)`.
+    pub best: (usize, usize),
+    pub best_makespan_us: f64,
+    /// Profiling iterations the search spent.
+    pub total_profile_iterations: usize,
+    /// Per-op duration estimates at the winning team size, µs.
+    pub durations_us: Vec<f64>,
+    pub search_trace: Vec<TuningRound>,
+}
+
+/// Canonical on-disk location of a tuning artifact inside an artifact
+/// directory: `<dir>/tuning/<tag>.tuning.json`.
+pub fn tuning_path(dir: impl AsRef<Path>, tag: &str) -> PathBuf {
+    dir.as_ref().join("tuning").join(format!("{tag}.tuning.json"))
+}
+
+impl TuningArtifact {
+    /// Package an autotune report for persistence.
+    pub fn from_report(
+        tag: &str,
+        graph_nodes: usize,
+        seed: u64,
+        tuner: &Autotuner,
+        report: &AutotuneReport,
+    ) -> TuningArtifact {
+        TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: tag.to_string(),
+            worker_cores: tuner.worker_cores,
+            seed,
+            graph_nodes,
+            best: report.best,
+            best_makespan_us: report.best_makespan_us,
+            total_profile_iterations: report.total_profile_iterations,
+            durations_us: report.durations_us.clone(),
+            search_trace: report
+                .rounds
+                .iter()
+                .map(|r| TuningRound {
+                    iterations: r.iterations,
+                    measurements: r
+                        .measurements
+                        .iter()
+                        .map(|m| (m.executors, m.threads_per, m.mean_makespan_us))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Is this artifact applicable to a graph with `nodes` operations?
+    pub fn matches_graph(&self, nodes: usize) -> bool {
+        self.graph_nodes == nodes && self.durations_us.len() == nodes
+    }
+
+    /// Critical-path level values from the persisted duration table.
+    pub fn levels(&self, graph: &Graph) -> Vec<f64> {
+        assert!(
+            self.matches_graph(graph.len()),
+            "tuning artifact for {} nodes applied to a {}-node graph",
+            self.graph_nodes,
+            graph.len()
+        );
+        crate::graph::levels(graph, &self.durations_us)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("kind", "graphi-tuning")
+            .set("version", self.version)
+            .set("tag", self.tag.as_str())
+            .set("worker_cores", self.worker_cores)
+            .set("seed", self.seed)
+            .set("graph_nodes", self.graph_nodes)
+            .set("best_executors", self.best.0)
+            .set("best_threads_per", self.best.1)
+            .set("best_makespan_us", self.best_makespan_us)
+            .set("total_profile_iterations", self.total_profile_iterations)
+            .set(
+                "durations_us",
+                Json::Arr(self.durations_us.iter().map(|&d| Json::Num(d)).collect()),
+            );
+        let trace: Vec<Json> = self
+            .search_trace
+            .iter()
+            .map(|round| {
+                let mut r = Json::obj();
+                r.set("iterations", round.iterations);
+                let ms: Vec<Json> = round
+                    .measurements
+                    .iter()
+                    .map(|&(e, t, mean)| {
+                        let mut m = Json::obj();
+                        m.set("executors", e)
+                            .set("threads_per", t)
+                            .set("mean_makespan_us", mean);
+                        m
+                    })
+                    .collect();
+                r.set("measurements", Json::Arr(ms));
+                r
+            })
+            .collect();
+        doc.set("search_trace", Json::Arr(trace));
+        doc
+    }
+
+    pub fn from_json(doc: &Json) -> Result<TuningArtifact, ArtifactError> {
+        let bad = |msg: &str| ArtifactError::BadTuning(msg.to_string());
+        let num = |key: &str| -> Result<f64, ArtifactError> {
+            doc.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| bad(&format!("missing numeric `{key}`")))
+        };
+        let version = num("version")? as u64;
+        if version != TUNING_FORMAT_VERSION {
+            return Err(ArtifactError::TuningVersion {
+                found: version,
+                expected: TUNING_FORMAT_VERSION,
+            });
+        }
+        let tag = doc
+            .get("tag")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("missing `tag`"))?
+            .to_string();
+        let durations_us: Vec<f64> = doc
+            .get("durations_us")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing `durations_us`"))?
+            .iter()
+            .map(|d| d.as_f64().ok_or_else(|| bad("non-numeric duration")))
+            .collect::<Result<_, _>>()?;
+        let mut search_trace = Vec::new();
+        if let Some(rounds) = doc.get("search_trace").and_then(|v| v.as_arr()) {
+            for round in rounds {
+                let iterations = round
+                    .get("iterations")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| bad("round missing `iterations`"))?
+                    as usize;
+                let mut measurements = Vec::new();
+                for m in round
+                    .get("measurements")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| bad("round missing `measurements`"))?
+                {
+                    let field = |key: &str| -> Result<f64, ArtifactError> {
+                        m.get(key)
+                            .and_then(|v| v.as_f64())
+                            .ok_or_else(|| bad(&format!("measurement missing `{key}`")))
+                    };
+                    measurements.push((
+                        field("executors")? as usize,
+                        field("threads_per")? as usize,
+                        field("mean_makespan_us")?,
+                    ));
+                }
+                search_trace.push(TuningRound { iterations, measurements });
+            }
+        }
+        let artifact = TuningArtifact {
+            version,
+            tag,
+            worker_cores: num("worker_cores")? as usize,
+            seed: num("seed")? as u64,
+            graph_nodes: num("graph_nodes")? as usize,
+            best: (num("best_executors")? as usize, num("best_threads_per")? as usize),
+            best_makespan_us: num("best_makespan_us")?,
+            total_profile_iterations: num("total_profile_iterations")? as usize,
+            durations_us,
+            search_trace,
+        };
+        if artifact.best.0 == 0 || artifact.best.1 == 0 {
+            return Err(bad("degenerate best configuration"));
+        }
+        if artifact.durations_us.len() != artifact.graph_nodes {
+            return Err(bad("duration table does not cover the graph"));
+        }
+        Ok(artifact)
+    }
+
+    /// Persist to `path`, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), ArtifactError> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load from `path`. Missing files surface as `Io`, garbage as
+    /// `BadTuning`, schema drift as `TuningVersion` — callers treat all
+    /// three as "search fresh".
+    pub fn load(path: impl AsRef<Path>) -> Result<TuningArtifact, ArtifactError> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let doc = json::parse(&text).map_err(|e| ArtifactError::BadTuning(e.to_string()))?;
+        Self::from_json(&doc)
+    }
+}
+
+/// Where a loaded-or-searched tuning result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneOutcome {
+    /// A valid persisted artifact matched the graph; no search ran.
+    LoadedFromDisk,
+    /// The search ran (no artifact, or it was corrupt/stale/foreign) and
+    /// the result was persisted.
+    FreshSearch,
+}
+
+/// Load a tuning artifact from `path` if it is valid for `graph`,
+/// otherwise run `tuner`'s successive-halving search and persist the
+/// result. Never panics on a bad artifact — that is the degrade path.
+pub fn autotune_or_load(
+    path: impl AsRef<Path>,
+    tag: &str,
+    tuner: &Autotuner,
+    graph: &Graph,
+    env: &SimEnv,
+) -> (TuningArtifact, TuneOutcome) {
+    let path = path.as_ref();
+    match TuningArtifact::load(path) {
+        Ok(artifact) if artifact.matches_graph(graph.len()) => {
+            return (artifact, TuneOutcome::LoadedFromDisk);
+        }
+        Ok(artifact) => {
+            crate::log_warn!(
+                "tuning artifact {} covers {} nodes but the graph has {}; re-searching",
+                path.display(),
+                artifact.graph_nodes,
+                graph.len()
+            );
+        }
+        Err(ArtifactError::Io(_)) => {} // absent: the common first-run case
+        Err(e) => {
+            crate::log_warn!("ignoring tuning artifact {}: {e}", path.display());
+        }
+    }
+    let report = tuner.search(graph, env);
+    let artifact = TuningArtifact::from_report(tag, graph.len(), env.seed, tuner, &report);
+    if let Err(e) = artifact.save(path) {
+        crate::log_warn!("failed to persist tuning artifact {}: {e}", path.display());
+    }
+    (artifact, TuneOutcome::FreshSearch)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +506,101 @@ mod tests {
             ArtifactError::BadManifest(_)
         ));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn sample_tuning() -> TuningArtifact {
+        TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: "lstm-small".to_string(),
+            worker_cores: 64,
+            seed: 42,
+            graph_nodes: 4,
+            best: (8, 8),
+            best_makespan_us: 1234.5,
+            total_profile_iterations: 25,
+            durations_us: vec![1.5, 2.25, 0.125, 7.0],
+            search_trace: vec![
+                TuningRound {
+                    iterations: 1,
+                    measurements: vec![(8, 8, 1250.0), (4, 16, 1400.0)],
+                },
+                TuningRound { iterations: 2, measurements: vec![(8, 8, 1234.5)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn tuning_artifact_json_roundtrip_is_exact() {
+        let a = sample_tuning();
+        let back = TuningArtifact::from_json(&json::parse(&a.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn tuning_artifact_save_load_roundtrip() {
+        let dir = tmpdir("tuning-ok");
+        let path = tuning_path(&dir, "lstm-small");
+        let a = sample_tuning();
+        a.save(&path).unwrap();
+        let back = TuningArtifact::load(&path).unwrap();
+        assert_eq!(back, a);
+        assert!(back.matches_graph(4));
+        assert!(!back.matches_graph(5));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tuning_artifact_missing_is_io_error() {
+        assert!(matches!(
+            TuningArtifact::load("/definitely/not/here.tuning.json").unwrap_err(),
+            ArtifactError::Io(_)
+        ));
+    }
+
+    #[test]
+    fn tuning_artifact_corrupt_is_bad_tuning() {
+        let dir = tmpdir("tuning-corrupt");
+        let path = dir.join("x.tuning.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(matches!(
+            TuningArtifact::load(&path).unwrap_err(),
+            ArtifactError::BadTuning(_)
+        ));
+        std::fs::write(&path, "{\"version\": 1}").unwrap();
+        assert!(matches!(
+            TuningArtifact::load(&path).unwrap_err(),
+            ArtifactError::BadTuning(_)
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tuning_artifact_future_version_rejected() {
+        let dir = tmpdir("tuning-version");
+        let path = dir.join("x.tuning.json");
+        let mut doc = sample_tuning().to_json();
+        doc.set("version", TUNING_FORMAT_VERSION + 1);
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        assert!(matches!(
+            TuningArtifact::load(&path).unwrap_err(),
+            ArtifactError::TuningVersion { .. }
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tuning_levels_follow_duration_table() {
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        let y = b.add("y", OpKind::Scalar);
+        b.depend(x, y);
+        b.add("z", OpKind::Scalar);
+        b.add("w", OpKind::Scalar);
+        let g = b.build().unwrap();
+        let a = TuningArtifact { durations_us: vec![3.0, 2.0, 1.0, 4.0], ..sample_tuning() };
+        assert_eq!(a.levels(&g), vec![5.0, 2.0, 1.0, 4.0]);
     }
 }

@@ -8,7 +8,8 @@
 //! and executes those artifacts through the PJRT CPU client; Python is
 //! never on the request path.
 //!
-//! * [`artifacts`] — artifact discovery + JSON manifest parsing
+//! * [`artifacts`] — artifact discovery + JSON manifest parsing, plus the
+//!   persisted tuning artifacts the autotuner writes and later runs load
 //! * [`pjrt`]      — client/executable wrappers over the `xla` crate
 //! * [`threaded`]  — the Graphi scheduler driving *real* host threads
 //!   (scheduler thread + executor fleet + SPSC rings), used by the
@@ -19,7 +20,9 @@ pub mod pjrt;
 pub mod threaded;
 pub mod train;
 
-pub use artifacts::{ArtifactSet, Manifest};
+pub use artifacts::{
+    autotune_or_load, tuning_path, ArtifactSet, Manifest, TuneOutcome, TuningArtifact,
+};
 pub use pjrt::{LoadedModule, PjrtRuntime};
 pub use threaded::ThreadedGraphi;
-pub use train::{LstmTrainer, SyntheticCorpus, TrainReport};
+pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

@@ -46,6 +46,12 @@ impl ThreadedGraphi {
     pub fn new(executors: usize) -> ThreadedGraphi {
         ThreadedGraphi { executors, policy: Policy::CriticalPathFirst, buffer_depth: 1 }
     }
+
+    /// Fleet shape from a persisted tuning artifact (the autotuner's
+    /// winning executor count).
+    pub fn from_tuning(tuning: &crate::runtime::artifacts::TuningArtifact) -> ThreadedGraphi {
+        ThreadedGraphi::new(tuning.best.0.max(1))
+    }
 }
 
 /// Result of a threaded run.
@@ -183,6 +189,28 @@ impl ThreadedGraphi {
         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
         ThreadedRunResult { wall_us, records, dispatches }
     }
+
+    /// Execute `graph` with critical-path levels derived from a tuning
+    /// artifact's profiled per-op duration table (§4.2 fed back into the
+    /// real-threads engine), instead of caller-supplied levels.
+    pub fn run_tuned<F>(
+        &self,
+        graph: &Graph,
+        tuning: &crate::runtime::artifacts::TuningArtifact,
+        work: F,
+    ) -> ThreadedRunResult
+    where
+        F: Fn(NodeId) + Send + Sync,
+    {
+        assert!(
+            tuning.matches_graph(graph.len()),
+            "tuning artifact for {} nodes applied to a {}-node graph",
+            tuning.graph_nodes,
+            graph.len()
+        );
+        let levels = crate::graph::levels(graph, &tuning.durations_us);
+        self.run(graph, &levels, work)
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +256,32 @@ mod tests {
                 assert!(tp < tv, "dep violated: {p} (t={tp}) vs {v} (t={tv})");
             }
         }
+    }
+
+    #[test]
+    fn run_tuned_uses_artifact_fleet_and_durations() {
+        use crate::runtime::artifacts::{TuningArtifact, TUNING_FORMAT_VERSION};
+        let g = mlp(&MlpConfig::default());
+        let tuning = TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: "mlp-test".to_string(),
+            worker_cores: 64,
+            seed: 0,
+            graph_nodes: g.len(),
+            best: (3, 21),
+            best_makespan_us: 1.0,
+            total_profile_iterations: 1,
+            durations_us: vec![2.0; g.len()],
+            search_trace: Vec::new(),
+        };
+        let engine = ThreadedGraphi::from_tuning(&tuning);
+        assert_eq!(engine.executors, 3);
+        let counter = AtomicU64::new(0);
+        let result = engine.run_tuned(&g, &tuning, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
+        assert_eq!(result.records.len(), g.len());
     }
 
     #[test]

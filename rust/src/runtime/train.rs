@@ -13,11 +13,41 @@
 //! Python), and records the loss curve. Used by `graphi train` and
 //! `examples/lstm_train.rs`; EXPERIMENTS.md logs a reference run.
 
+use std::path::Path;
+
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
-use super::artifacts::ArtifactSet;
+use super::artifacts::{tuning_path, ArtifactSet, TuningArtifact};
 use super::pjrt::{LoadedModule, PjrtRuntime};
+
+/// Tuning-artifact tag the training pipeline looks for in the artifact
+/// directory (`<dir>/tuning/train_step.tuning.json`).
+pub const TRAIN_TUNING_TAG: &str = "train_step";
+
+/// The fallback parallel setting when no tuning artifact exists: one
+/// executor over the full worker pool (the paper's S64 configuration).
+pub const DEFAULT_TRAIN_PARALLELISM: (usize, usize) = (1, 64);
+
+/// Load the training pipeline's persisted parallel setting, if the
+/// autotuner has produced one for this artifact directory. Corrupt or
+/// missing artifacts mean "no setting" — callers fall back to
+/// [`DEFAULT_TRAIN_PARALLELISM`], they never fail.
+pub fn load_parallel_setting(dir: impl AsRef<Path>) -> Option<(usize, usize)> {
+    let path = tuning_path(dir, TRAIN_TUNING_TAG);
+    match TuningArtifact::load(&path) {
+        Ok(t) => {
+            crate::log_info!(
+                "parallel setting {}x{} from tuning artifact {}",
+                t.best.0,
+                t.best.1,
+                path.display()
+            );
+            Some(t.best)
+        }
+        Err(_) => None,
+    }
+}
 
 /// Synthetic byte-level corpus: a deterministic mixture of repeated
 /// "words" with noise, so a language model has real structure to learn
@@ -112,6 +142,12 @@ pub struct LstmTrainer {
     params: Vec<f32>,
     batch: usize,
     seq: usize,
+    /// `(executors, threads_per)` the execution fleet should use — from
+    /// the artifact directory's tuning artifact when present, otherwise
+    /// [`DEFAULT_TRAIN_PARALLELISM`].
+    parallelism: (usize, usize),
+    /// Did `parallelism` come from a tuning artifact (vs the default)?
+    tuned: bool,
 }
 
 impl LstmTrainer {
@@ -135,11 +171,25 @@ impl LstmTrainer {
         let params: Vec<f32> = (0..p)
             .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale)
             .collect();
-        Ok(LstmTrainer { module, params, batch, seq })
+        let loaded = load_parallel_setting(&artifacts.dir);
+        let tuned = loaded.is_some();
+        let parallelism = loaded.unwrap_or(DEFAULT_TRAIN_PARALLELISM);
+        Ok(LstmTrainer { module, params, batch, seq, parallelism, tuned })
     }
 
     pub fn param_count(&self) -> usize {
         self.params.len()
+    }
+
+    /// The `(executors, threads_per)` fleet this trainer would run on.
+    pub fn parallelism(&self) -> (usize, usize) {
+        self.parallelism
+    }
+
+    /// Whether [`Self::parallelism`] came from a persisted tuning artifact
+    /// rather than [`DEFAULT_TRAIN_PARALLELISM`].
+    pub fn parallelism_from_tuning(&self) -> bool {
+        self.tuned
     }
 
     /// Run one SGD step; returns the loss.
@@ -207,6 +257,34 @@ mod tests {
         let a = c.next_batch(4, 8);
         let b = c.next_batch(4, 8);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn parallel_setting_loads_from_tuning_artifact() {
+        use crate::runtime::artifacts::{TuningArtifact, TUNING_FORMAT_VERSION};
+        let dir = std::env::temp_dir()
+            .join(format!("graphi-train-tuning-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // absent → None (fresh checkout / pre-autotune)
+        assert_eq!(load_parallel_setting(&dir), None);
+        let artifact = TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: TRAIN_TUNING_TAG.to_string(),
+            worker_cores: 64,
+            seed: 1,
+            graph_nodes: 2,
+            best: (8, 8),
+            best_makespan_us: 10.0,
+            total_profile_iterations: 5,
+            durations_us: vec![1.0, 2.0],
+            search_trace: Vec::new(),
+        };
+        artifact.save(tuning_path(&dir, TRAIN_TUNING_TAG)).unwrap();
+        assert_eq!(load_parallel_setting(&dir), Some((8, 8)));
+        // corrupt → None, not a panic
+        std::fs::write(tuning_path(&dir, TRAIN_TUNING_TAG), "garbage").unwrap();
+        assert_eq!(load_parallel_setting(&dir), None);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -217,6 +217,38 @@ pub fn symmetric_configs(worker_cores: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// The full candidate space the profiler/autotuner searches: the symmetric
+/// power-of-two splits plus caller-supplied model-specific extras (§7.3's
+/// 6×10 for PathNet, 3×21 for GoogleNet), deduplicated, with degenerate or
+/// over-budget extras (`e × t > worker_cores`, or a zero dimension)
+/// dropped — those could never be placed on the worker pool anyway.
+pub fn candidate_configs(worker_cores: usize, extras: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let mut out = symmetric_configs(worker_cores);
+    for &(e, t) in extras {
+        if e == 0 || t == 0 || e * t > worker_cores {
+            continue;
+        }
+        if !out.contains(&(e, t)) {
+            out.push((e, t));
+        }
+    }
+    out
+}
+
+/// The model-specific extra configurations §7.3 grants the search on top
+/// of the symmetric splits, derived from the graph's parallelism profile:
+/// 3×21 always (GoogleNet's 2–3 inception branches), 6×10 when the graph
+/// is at least 6 wide (PathNet's 6 parallel modules). Shared by `graphi
+/// profile`, `graphi autotune`, and the driver's auto-fleet path so all
+/// three search the same candidate space.
+pub fn model_extras(max_width: usize) -> Vec<(usize, usize)> {
+    let mut extras = vec![(3, 21)];
+    if max_width >= 6 {
+        extras.push((6, 10));
+    }
+    extras
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +323,35 @@ mod tests {
         for &(k, t) in &configs {
             assert_eq!(k * t, 64);
         }
+    }
+
+    #[test]
+    fn candidate_config_enumeration() {
+        // extras are appended, deduplicated, and budget-checked
+        let configs = candidate_configs(64, &[(6, 10), (3, 21), (8, 8), (0, 4), (4, 0), (64, 2)]);
+        assert!(configs.contains(&(6, 10)));
+        assert!(configs.contains(&(3, 21)));
+        // (8,8) already symmetric — not duplicated
+        assert_eq!(configs.iter().filter(|&&c| c == (8, 8)).count(), 1);
+        // zero dims and over-budget (64×2 = 128 > 64) extras dropped
+        assert!(!configs.iter().any(|&(e, t)| e == 0 || t == 0));
+        assert!(!configs.contains(&(64, 2)));
+        assert_eq!(configs.len(), 9); // 7 symmetric + 2 valid extras
+        for &(e, t) in &configs {
+            assert!(e * t <= 64);
+        }
+    }
+
+    #[test]
+    fn candidate_configs_without_extras_is_symmetric() {
+        assert_eq!(candidate_configs(64, &[]), symmetric_configs(64));
+    }
+
+    #[test]
+    fn model_extras_track_graph_width() {
+        assert_eq!(model_extras(2), vec![(3, 21)]);
+        assert_eq!(model_extras(6), vec![(3, 21), (6, 10)]);
+        assert_eq!(model_extras(40), vec![(3, 21), (6, 10)]);
     }
 
     #[test]

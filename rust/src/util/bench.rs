@@ -216,6 +216,85 @@ impl BenchRunner {
             }
         }
     }
+
+    /// The bench-group name this runner was constructed with.
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+}
+
+/// Merge a finished runner's results into the repo-root perf-trajectory
+/// file (`../BENCH_scheduler.json` relative to the `rust/` package root;
+/// override with `GRAPHI_BENCH_JSON`). Appends one entry —
+/// `{bench, unix_time_s, fast_mode, results, <headlines…>}` — to the
+/// file's `runs` array so successive runs from every bench target
+/// accumulate a single trajectory. `headlines` are run-level scalar
+/// summaries (e.g. a speedup-vs-legacy ratio) callers derive from their
+/// own results.
+pub fn merge_into_bench_json(runner: &BenchRunner, headlines: &[(&str, f64)]) {
+    let path = std::env::var("GRAPHI_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_scheduler.json".to_string());
+    merge_into_bench_json_at(runner, headlines, &path);
+}
+
+/// [`merge_into_bench_json`] with an explicit target path (no environment
+/// access — also what tests use, to avoid `set_var` races).
+pub fn merge_into_bench_json_at(runner: &BenchRunner, headlines: &[(&str, f64)], path: &str) {
+    use crate::util::json::{self, Json};
+    let mut run = Json::obj();
+    run.set("bench", runner.group());
+    run.set(
+        "unix_time_s",
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0),
+    );
+    run.set("fast_mode", std::env::var("GRAPHI_BENCH_FAST").as_deref() == Ok("1"));
+    let mut results = Vec::new();
+    for r in &runner.results {
+        let mut obj = Json::obj();
+        obj.set("name", r.name.as_str());
+        obj.set("mean_us", r.summary.mean);
+        obj.set("p50_us", r.summary.p50);
+        obj.set("samples", r.summary.n as f64);
+        if let Some((v, unit)) = r.metric {
+            obj.set("metric", v);
+            obj.set("metric_unit", unit);
+        }
+        results.push(obj);
+    }
+    run.set("results", Json::Arr(results));
+    for &(key, value) in headlines {
+        run.set(key, value);
+    }
+
+    let mut doc = match std::fs::read_to_string(path).ok().and_then(|t| json::parse(&t).ok()) {
+        Some(existing @ Json::Obj(_)) => existing,
+        _ => {
+            let mut d = Json::obj();
+            d.set("group", runner.group());
+            d.set(
+                "note",
+                "perf trajectory of the scheduler + profiler hot paths; regenerate with \
+                 `cargo bench --bench scheduler_hotpath` / `--bench profiler_autotune` \
+                 (GRAPHI_BENCH_FAST=1 for a smoke run)",
+            );
+            d.set("runs", Json::Arr(Vec::new()));
+            d
+        }
+    };
+    let mut runs = match doc.get("runs") {
+        Some(Json::Arr(rs)) => rs.clone(),
+        _ => Vec::new(),
+    };
+    runs.push(run);
+    doc.set("runs", Json::Arr(runs));
+
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("bench json merged into {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }
 
 /// Convenience: label vector builder.
@@ -268,5 +347,26 @@ mod tests {
     fn labels_macro() {
         let l: Vec<(&str, String)> = labels! {"model" => "lstm", "k" => 8};
         assert_eq!(l[1], ("k", "8".to_string()));
+    }
+
+    #[test]
+    fn bench_json_merge_appends_tagged_runs() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-bench-merge-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let path_s = path.display().to_string();
+        let mut r = BenchRunner::with_config("merge_test", BenchConfig::default());
+        r.record("alpha", &[], 10.0);
+        r.set_metric(4.0, "ops/µs");
+        merge_into_bench_json_at(&r, &[("headline_ratio", 2.5)], &path_s);
+        merge_into_bench_json_at(&r, &[], &path_s);
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("bench").unwrap().as_str().unwrap(), "merge_test");
+        assert_eq!(runs[0].get("headline_ratio").unwrap().as_f64().unwrap(), 2.5);
+        let results = runs[1].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "alpha");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -85,6 +85,7 @@ impl Spec {
     /// Parse `args` (not including the program/subcommand names).
     pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut explicit: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
         let mut flags: Vec<String> = Vec::new();
         let mut positionals: Vec<String> = Vec::new();
         for o in &self.opts {
@@ -123,6 +124,7 @@ impl Spec {
                             .cloned()
                             .ok_or_else(|| CliError::Other(format!("--{name} requires a value")))?,
                     };
+                    explicit.insert(name.to_string());
                     values.insert(name.to_string(), value);
                 }
             } else {
@@ -136,7 +138,7 @@ impl Spec {
                 self.help()
             )));
         }
-        Ok(Matches { values, flags, positionals })
+        Ok(Matches { values, explicit, flags, positionals })
     }
 
     fn suggest(&self, unknown: &str) -> Option<String> {
@@ -153,6 +155,7 @@ impl Spec {
 #[derive(Debug)]
 pub struct Matches {
     values: BTreeMap<String, String>,
+    explicit: std::collections::BTreeSet<String>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -160,6 +163,13 @@ pub struct Matches {
 impl Matches {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Was this option given on the command line (as opposed to filled in
+    /// from its spec default)? Lets callers give precedence to a config
+    /// file over *defaulted* flags while still letting explicit flags win.
+    pub fn is_explicit(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
@@ -270,6 +280,16 @@ mod tests {
     fn equals_form() {
         let m = spec().parse(&args(&["--executors=16", "c"])).unwrap();
         assert_eq!(m.get_usize("executors").unwrap(), Some(16));
+    }
+
+    #[test]
+    fn explicit_flags_distinguished_from_defaults() {
+        let m = spec().parse(&args(&["cfg.toml"])).unwrap();
+        assert!(!m.is_explicit("model"), "defaulted value is not explicit");
+        let m = spec().parse(&args(&["--model", "pathnet", "cfg.toml"])).unwrap();
+        assert!(m.is_explicit("model"));
+        let m = spec().parse(&args(&["--model=pathnet", "cfg.toml"])).unwrap();
+        assert!(m.is_explicit("model"), "--name=value form is explicit too");
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Cross-engine differential suite: every engine — sequential, naive,
+//! tensorflow-like, graphi, dynamic, heterogeneous — must agree on the
+//! *semantics* of executing a random DAG even though their scheduling
+//! differs:
+//!
+//! 1. every operation executes **exactly once**, in a dependency-respecting
+//!    order with no per-executor overlap;
+//! 2. a parallel engine's makespan never exceeds "the sequential one": the
+//!    serialization of its own schedule (Σ of its measured op durations
+//!    plus its own accounted scheduling overheads) — parallelism may only
+//!    overlap work, never invent time;
+//! 3. for engines whose per-op cost basis matches the sequential engine at
+//!    the same team size (graphi, naive, dynamic), the makespan is also
+//!    bounded by the *sequential engine's* makespan plus overhead.
+//!    (tensorflow-like prices MKL kernels + Eigen chunking + unpinned
+//!    threads, and heterogeneous mixes team sizes, so a same-team
+//!    sequential baseline does not exist for them — invariant 2 is their
+//!    differential bound.)
+//!
+//! Failures shrink to a minimal DAG and report the replay seed via
+//! `testkit::check` (set `GRAPHI_TEST_SEED` to reproduce).
+
+use graphi::engine::{
+    DynamicFleetEngine, Engine, GraphiEngine, HeterogeneousEngine, NaiveEngine, RunResult,
+    SequentialEngine, SimEnv, TensorFlowLikeEngine,
+};
+use graphi::graph::op::{EwKind, OpKind};
+use graphi::graph::{Graph, GraphBuilder};
+use graphi::util::testkit::{check, DagCase, DagGen};
+
+/// Materialize a testkit DAG as a computation graph mixing GEMM,
+/// element-wise and tiny ops (weights scale the element-wise sizes).
+fn graph_of(case: &DagCase) -> Graph {
+    let mut b = GraphBuilder::new();
+    for i in 0..case.n {
+        let kind = match i % 3 {
+            0 => OpKind::MatMul { m: 32, k: 64 + (case.weights[i] as u64 % 256), n: 64 },
+            1 => OpKind::Elementwise {
+                n: 10_000 + (case.weights[i] * 1_000.0) as u64,
+                arity: 2,
+                kind: EwKind::Arith,
+            },
+            _ => OpKind::Scalar,
+        };
+        b.add(format!("n{i}"), kind);
+    }
+    for &(src, dst) in &case.edges {
+        b.depend(src, dst);
+    }
+    b.build().expect("testkit DAGs are acyclic by construction")
+}
+
+/// All six engines at comparable scale. Sequential runs one 8-thread
+/// executor; the matched-team parallel engines split the same team size
+/// across 4 executors.
+fn engines() -> Vec<Box<dyn Engine>> {
+    vec![
+        Box::new(SequentialEngine::new(8)),
+        Box::new(GraphiEngine::new(4, 8)),
+        Box::new(NaiveEngine::new(4, 8)),
+        Box::new(TensorFlowLikeEngine::new(4, 8)),
+        Box::new(DynamicFleetEngine::new((4, 8), (8, 4))),
+        Box::new(HeterogeneousEngine::paper_default()),
+    ]
+}
+
+/// Every node appears exactly once in the records.
+fn exactly_once(graph: &Graph, result: &RunResult) -> Result<(), String> {
+    if result.records.len() != graph.len() {
+        return Err(format!(
+            "{} records for {} ops",
+            result.records.len(),
+            graph.len()
+        ));
+    }
+    let mut seen = vec![0u32; graph.len()];
+    for r in &result.records {
+        let idx = r.node as usize;
+        if idx >= graph.len() {
+            return Err(format!("record for unknown node {}", r.node));
+        }
+        seen[idx] += 1;
+    }
+    if let Some((node, &count)) = seen.iter().enumerate().find(|(_, &c)| c != 1) {
+        return Err(format!("node {node} executed {count} times"));
+    }
+    Ok(())
+}
+
+/// Upper bound on a run's makespan: serializing its own schedule. Sum of
+/// measured op durations plus every overhead the engine accounts —
+/// scheduler decisions, queue contention (incl. Eigen chunk waves and the
+/// dynamic engine's team-resize pause), and a per-dispatch allowance for
+/// the base queue/dispatch costs that are folded into timestamps rather
+/// than metrics.
+fn serialization_bound(env: &SimEnv, result: &RunResult) -> f64 {
+    let serial: f64 = result.records.iter().map(|r| r.end_us - r.start_us).sum();
+    let cal = env.calibration();
+    let per_dispatch = cal.queue_base_us + cal.graphi_dispatch_us;
+    serial
+        + result.metrics.scheduler_busy_us
+        + result.metrics.contention_us
+        + result.metrics.dispatches as f64 * per_dispatch
+        + 100.0
+}
+
+#[test]
+fn prop_every_engine_executes_each_op_exactly_once_in_dep_order() {
+    let gen = DagGen::default();
+    let env = SimEnv::knl_deterministic();
+    check("exactly-once + dependency order", &gen, 40, |case| {
+        let g = graph_of(case);
+        for engine in engines() {
+            let r = engine.run(&g, &env);
+            exactly_once(&g, &r).map_err(|e| format!("{}: {e}", engine.name()))?;
+            // validate_records: dependency order + per-executor non-overlap
+            r.validate(&g).map_err(|e| format!("{}: {e}", engine.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_makespan_never_exceeds_own_serialization() {
+    let gen = DagGen::default();
+    let env = SimEnv::knl_deterministic();
+    check("makespan ≤ serialized schedule", &gen, 40, |case| {
+        let g = graph_of(case);
+        for engine in engines() {
+            let r = engine.run(&g, &env);
+            let bound = serialization_bound(&env, &r);
+            if r.makespan_us > bound {
+                return Err(format!(
+                    "{}: makespan {} exceeds serialization bound {bound}",
+                    engine.name(),
+                    r.makespan_us
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matched_team_parallel_never_exceeds_sequential() {
+    // graphi/naive/dynamic at 8-thread teams price each op exactly like
+    // the 8-thread sequential engine, so overlapping can only help; the
+    // allowance covers their accounted overheads (dynamic's team resize
+    // lands in contention_us) plus scheduling costs.
+    let gen = DagGen::default();
+    let env = SimEnv::knl_deterministic();
+    check("parallel ≤ matched sequential", &gen, 40, |case| {
+        let g = graph_of(case);
+        let seq = SequentialEngine::new(8).run(&g, &env).makespan_us;
+        let parallel: Vec<Box<dyn Engine>> = vec![
+            Box::new(GraphiEngine::new(4, 8)),
+            Box::new(NaiveEngine::new(4, 8)),
+            Box::new(DynamicFleetEngine::new((4, 8), (8, 4))),
+        ];
+        for engine in parallel {
+            let r = engine.run(&g, &env);
+            let cap = seq * 1.10 + r.metrics.contention_us + r.metrics.scheduler_busy_us + 100.0;
+            if r.makespan_us > cap {
+                return Err(format!(
+                    "{}: makespan {} vs sequential {seq} (cap {cap})",
+                    engine.name(),
+                    r.makespan_us
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn differential_holds_on_the_paper_models_too() {
+    // the random-DAG invariants, spot-checked on two real model graphs
+    use graphi::models::{self, ModelKind, ModelSize};
+    let env = SimEnv::knl_deterministic();
+    for kind in [ModelKind::Lstm, ModelKind::PathNet] {
+        let g = models::build(kind, ModelSize::Small);
+        for engine in engines() {
+            let r = engine.run(&g, &env);
+            exactly_once(&g, &r)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", kind.name(), engine.name()));
+            r.validate(&g)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", kind.name(), engine.name()));
+            let bound = serialization_bound(&env, &r);
+            assert!(
+                r.makespan_us <= bound,
+                "{}/{}: makespan {} exceeds serialization bound {bound}",
+                kind.name(),
+                engine.name(),
+                r.makespan_us
+            );
+        }
+    }
+}

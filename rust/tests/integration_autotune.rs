@@ -1,0 +1,125 @@
+//! Autotuner acceptance: the successive-halving search must find a config
+//! whose simulated makespan is within 5 % of the exhaustive sweep's best
+//! while spending strictly fewer profiling iterations, and a second
+//! invocation must load the persisted tuning artifact without
+//! re-searching.
+
+use graphi::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv};
+use graphi::models::{self, ModelKind, ModelSize};
+use graphi::runtime::artifacts::{
+    autotune_or_load, tuning_path, ArtifactError, TuneOutcome, TuningArtifact,
+};
+
+/// The §7.3 extras both search strategies seed in (9 candidates total).
+const EXTRAS: [(usize, usize); 2] = [(3, 21), (6, 10)];
+
+fn tuner() -> Autotuner {
+    Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("graphi-autotune-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn search_within_5pct_of_exhaustive_with_strictly_fewer_iterations() {
+    let g = models::build(ModelKind::Lstm, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let report = tuner().search(&g, &env);
+
+    // the flat §4.2 sweep at its default fidelity (3 iterations/candidate)
+    let profiler = Profiler { iterations: 3, worker_cores: 64, extra_configs: EXTRAS.to_vec() };
+    let exhaustive = profiler.profile(&g, &env);
+    let exhaustive_iters = profiler.candidates().len() * profiler.iterations;
+
+    assert!(
+        report.total_profile_iterations < exhaustive_iters,
+        "search spent {} iterations, exhaustive sweep {exhaustive_iters}",
+        report.total_profile_iterations
+    );
+    // …and also fewer than an exhaustive sweep at the search's own final fidelity
+    assert!(report.total_profile_iterations < report.exhaustive_equivalent_iterations());
+
+    let found = GraphiEngine::new(report.best.0, report.best.1).run(&g, &env).makespan_us;
+    let sweep = GraphiEngine::new(exhaustive.best.0, exhaustive.best.1).run(&g, &env).makespan_us;
+    assert!(
+        found <= sweep * 1.05,
+        "search best {:?} ({found} µs) not within 5% of exhaustive best {:?} ({sweep} µs)",
+        report.best,
+        exhaustive.best
+    );
+}
+
+#[test]
+fn noisy_search_stays_close_to_the_true_optimum() {
+    // with simulated profiling noise (σ = 4 %) the halving may keep a
+    // different config than the true argmin, but its noise-free makespan
+    // must stay competitive with the noise-free optimum over the whole
+    // candidate space
+    let g = models::build(ModelKind::PathNet, ModelSize::Small);
+    let report = tuner().search(&g, &SimEnv::knl(42));
+    let det = SimEnv::knl_deterministic();
+    let found = GraphiEngine::new(report.best.0, report.best.1).run(&g, &det).makespan_us;
+    let optimum = tuner()
+        .candidates()
+        .into_iter()
+        .map(|(e, t)| GraphiEngine::new(e, t).run(&g, &det).makespan_us)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        found <= optimum * 1.15,
+        "noisy search best {:?} ({found} µs) far off the true optimum ({optimum} µs)",
+        report.best
+    );
+}
+
+#[test]
+fn second_invocation_loads_the_artifact_without_searching() {
+    let g = models::build(ModelKind::Mlp, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let dir = tmpdir("roundtrip");
+    let path = tuning_path(&dir, "mlp-small");
+
+    let (first, outcome1) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome1, TuneOutcome::FreshSearch);
+    assert!(path.is_file(), "artifact not persisted at {}", path.display());
+
+    let (second, outcome2) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome2, TuneOutcome::LoadedFromDisk, "second run must not re-search");
+    // identical winning config and duration table (JSON round-trip is exact)
+    assert_eq!(second.best, first.best);
+    assert_eq!(second.durations_us, first.durations_us);
+    assert_eq!(second, first);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_stale_or_missing_artifacts_degrade_to_fresh_search() {
+    let g = models::build(ModelKind::Mlp, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let dir = tmpdir("degrade");
+    let path = tuning_path(&dir, "mlp-small");
+
+    // missing: plain load errors (no panic), autotune_or_load searches
+    assert!(matches!(TuningArtifact::load(&path).unwrap_err(), ArtifactError::Io(_)));
+
+    // corrupt: garbage bytes on disk
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(&path, "]]not json[[").unwrap();
+    let (artifact, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch);
+    assert!(artifact.matches_graph(g.len()));
+    // …and the corrupt file was replaced by a valid one
+    assert_eq!(TuningArtifact::load(&path).unwrap(), artifact);
+
+    // stale: artifact for a different graph shape
+    let other = TuningArtifact { graph_nodes: 1, durations_us: vec![1.0], ..artifact.clone() };
+    other.save(&path).unwrap();
+    let (_, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch, "stale artifact must trigger a re-search");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -7,6 +7,7 @@
 
 use graphi::engine::ready::ReadySet;
 use graphi::engine::ring::SpscRing;
+use graphi::engine::scheduler::IdleBitmap;
 use graphi::engine::{Engine, GraphiEngine, NaiveEngine, Policy, SequentialEngine, SimEnv};
 use graphi::graph::levels::{critical_path_length, levels, makespan_lower_bound};
 use graphi::graph::op::{EwKind, OpKind};
@@ -377,6 +378,110 @@ fn prop_spsc_ring_mixed_single_and_batch_two_thread() {
         }
     });
     assert!(ring.is_empty());
+}
+
+/// Drive an [`IdleBitmap`] and a naive `Vec<bool>` reference through the
+/// same random busy/idle walk, comparing every query after every step.
+fn idle_bitmap_walk(n: usize, seed: u64, steps: usize) -> Result<(), String> {
+    let mut bits = IdleBitmap::new(n);
+    let mut reference = vec![true; n];
+    let mut rng = Rng::new(seed);
+    for step in 0..steps {
+        let ref_first = reference.iter().position(|&b| b);
+        if bits.first_idle() != ref_first {
+            return Err(format!(
+                "n={n} step {step}: first_idle {:?} vs reference {ref_first:?}",
+                bits.first_idle()
+            ));
+        }
+        let ref_count = reference.iter().filter(|&&b| b).count();
+        if bits.count_idle() != ref_count {
+            return Err(format!(
+                "n={n} step {step}: count_idle {} vs reference {ref_count}",
+                bits.count_idle()
+            ));
+        }
+        if bits.any_idle() != (ref_count > 0) {
+            return Err(format!("n={n} step {step}: any_idle disagrees"));
+        }
+        if bits.executors() != n {
+            return Err(format!("n={n}: executors() reported {}", bits.executors()));
+        }
+        // flip a random executor (set_busy/set_idle contract: only valid
+        // transitions, as the engines use it)
+        let e = rng.range(0, n);
+        if reference[e] {
+            bits.set_busy(e);
+            reference[e] = false;
+        } else {
+            bits.set_idle(e);
+            reference[e] = true;
+        }
+        if bits.is_idle(e) != reference[e] {
+            return Err(format!("n={n} step {step}: is_idle({e}) disagrees after flip"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_idle_bitmap_matches_bool_vec_reference() {
+    check("idle bitmap vs Vec<bool>", &UsizeRange(1, 128), 80, |&n| {
+        idle_bitmap_walk(n, n as u64 ^ 0xB17B17, 300)
+    });
+}
+
+#[test]
+fn idle_bitmap_reference_walk_at_the_128_boundary() {
+    // the u128 backing store's edge sizes, checked exhaustively: 127 (top
+    // bit unused), 128 (the `1 << n` overflow case), and 64 (the u64 line)
+    for n in [63, 64, 65, 127, 128] {
+        idle_bitmap_walk(n, 0xF00D + n as u64, 2_000).unwrap();
+    }
+}
+
+/// Reference longest-path computation for `levels`: memoized recursion
+/// over successors, structurally independent of the reverse-topological
+/// sweep in `graph::levels`.
+fn ref_longest_path(graph: &Graph, durations: &[f64]) -> Vec<f64> {
+    fn go(v: u32, graph: &Graph, durations: &[f64], memo: &mut [Option<f64>]) -> f64 {
+        if let Some(x) = memo[v as usize] {
+            return x;
+        }
+        let mut best = 0.0f64;
+        for &s in graph.succs(v) {
+            best = best.max(go(s, graph, durations, memo));
+        }
+        let value = durations[v as usize] + best;
+        memo[v as usize] = Some(value);
+        value
+    }
+    let mut memo = vec![None; graph.len()];
+    (0..graph.len() as u32)
+        .map(|v| go(v, graph, durations, &mut memo))
+        .collect()
+}
+
+#[test]
+fn prop_levels_match_reference_longest_path() {
+    let gen = DagGen::default();
+    check("levels vs reference longest path", &gen, 80, |case| {
+        let g = graph_of(case);
+        let computed = levels(&g, &case.weights);
+        let reference = ref_longest_path(&g, &case.weights);
+        for v in 0..g.len() {
+            let (a, b) = (computed[v], reference[v]);
+            if (a - b).abs() > 1e-9 * b.abs().max(1.0) {
+                return Err(format!("level({v}) = {a} but reference longest path = {b}"));
+            }
+        }
+        let cp = critical_path_length(&g, &case.weights);
+        let max_ref = reference.iter().cloned().fold(0.0f64, f64::max);
+        if (cp - max_ref).abs() > 1e-9 * max_ref.max(1.0) {
+            return Err(format!("critical_path_length {cp} vs reference max {max_ref}"));
+        }
+        Ok(())
+    });
 }
 
 #[test]
