@@ -13,7 +13,7 @@
 //! with `GRAPHI_BENCH_JSON`) with `autotune_iteration_saving_<model>` and
 //! `autotune_makespan_ratio_<model>` headline entries per run.
 
-use graphi::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv};
+use graphi::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv};
 use graphi::models::{self, ModelKind, ModelSize};
 use graphi::util::bench::{merge_into_bench_json, BenchConfig, BenchRunner};
 
@@ -46,7 +46,16 @@ fn main() {
     ] {
         let graph = models::build(kind, ModelSize::Small);
         let env = SimEnv::knl(42);
-        let tuner = Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() };
+        // centralized-only axis: the flat profiler it is compared against
+        // only sweeps centralized configs, and restricting keeps the
+        // iteration-saving trajectory comparable with the PR-2 entries in
+        // BENCH_scheduler.json (the dispatch-mode comparison lives in
+        // `cargo bench --bench scheduler_hotpath`)
+        let tuner = Autotuner {
+            extra_configs: EXTRAS.to_vec(),
+            dispatch_modes: vec![DispatchMode::Centralized],
+            ..Default::default()
+        };
         let profiler =
             Profiler { iterations: 3, worker_cores: 64, extra_configs: EXTRAS.to_vec() };
 

@@ -8,9 +8,14 @@
 //! * idle-bitmap scan (the §5.2 bit-scan)
 //! * SPSC ring hand-off: same-thread, two-real-thread ping-pong, and
 //!   two-thread batched streaming
+//! * work-stealing deque ops: owner push/pop churn and a 2-thread
+//!   owner-vs-thief drain (the decentralized dispatch hot structures)
 //! * end-to-end dispatch decisions/second through the threaded engine at
-//!   2 / 4 / 8 executors (engines constructed **outside** the timed
-//!   closure, so the benchmark measures the scheduler, not the allocator)
+//!   2 / 4 / 8 executors, **centralized vs decentralized** on the same
+//!   small-op-heavy trace — the PR-3 headline pair
+//!   (`dispatch_decentral_speedup_{2,4,8}exec`); engines constructed
+//!   **outside** the timed closure, so the benchmark measures the
+//!   scheduler, not the allocator
 //!
 //! These are the §Perf numbers for Layer 3: the scheduler must sustain
 //! orders of magnitude more decisions/second than the op arrival rate
@@ -26,7 +31,8 @@ use std::sync::Arc;
 use graphi::engine::ready::ReadySet;
 use graphi::engine::ring::SpscRing;
 use graphi::engine::scheduler::IdleBitmap;
-use graphi::engine::Policy;
+use graphi::engine::worksteal::{Steal, WorkStealDeque};
+use graphi::engine::{DispatchMode, Policy};
 use graphi::models::{self, ModelKind, ModelSize};
 use graphi::runtime::ThreadedGraphi;
 use graphi::util::bench::{merge_into_bench_json, BenchConfig, BenchRunner};
@@ -244,38 +250,135 @@ fn main() {
     let mean_us = runner.results.last().unwrap().summary.mean;
     runner.set_metric(n_stream as f64 / mean_us, "items/µs");
 
+    // -- work-stealing deque: owner churn + 2-thread owner-vs-thief --------
+    let deque: WorkStealDeque = WorkStealDeque::new(4096);
+    runner.bench("worksteal_push_pop_4096", &[], || {
+        for i in 0..4096u64 {
+            deque.push(i).unwrap();
+        }
+        let mut acc = 0u64;
+        while let Some(v) = deque.pop() {
+            acc = acc.wrapping_add(v);
+        }
+        acc
+    });
+    let per_op = runner.results.last().unwrap().summary.mean / (2.0 * 4096.0);
+    runner.set_metric(1.0 / per_op, "ops/µs");
+
+    // owner produces and LIFO-drains while one thief strips the top end;
+    // a done flag (set only after the owner's final drain) bounds the
+    // thief's exit so the bench cannot hang on starved schedules
+    let n_steal = 100_000u64;
+    let steal_deque: WorkStealDeque = WorkStealDeque::new(1024);
+    let steal_done = std::sync::atomic::AtomicBool::new(false);
+    runner.bench("worksteal_2thread_drain", &[("items", n_steal.to_string())], || {
+        use std::sync::atomic::Ordering;
+        steal_done.store(false, Ordering::Relaxed);
+        std::thread::scope(|s| {
+            let thief = s.spawn(|| {
+                let mut acc = 0u64;
+                let mut spins = 0u32;
+                loop {
+                    match steal_deque.steal() {
+                        Steal::Success(v) => acc = acc.wrapping_add(v),
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if steal_done.load(Ordering::Acquire) && steal_deque.is_empty() {
+                                return acc;
+                            }
+                            backoff(&mut spins);
+                        }
+                    }
+                }
+            });
+            let mut acc = 0u64;
+            for i in 1..=n_steal {
+                let mut key = i;
+                while let Err(back) = steal_deque.push(key) {
+                    key = back;
+                    // full: help drain from the owner end
+                    if let Some(v) = steal_deque.pop() {
+                        acc = acc.wrapping_add(v);
+                    }
+                }
+            }
+            while let Some(v) = steal_deque.pop() {
+                acc = acc.wrapping_add(v);
+            }
+            steal_done.store(true, Ordering::Release);
+            acc.wrapping_add(thief.join().unwrap())
+        })
+    });
+    let mean_us = runner.results.last().unwrap().summary.mean;
+    runner.set_metric(n_steal as f64 / mean_us, "items/µs");
+
     // -- threaded engine dispatch rate at 2 / 4 / 8 executors ---------------
+    // centralized vs decentralized on the same small-op-heavy trace (LSTM
+    // small, no-op work bodies ⇒ dispatch throughput is the bottleneck).
+    // The centralized names keep their PR-1 spelling so the JSON
+    // trajectory stays comparable across PRs.
     let graph = models::build(ModelKind::Lstm, ModelSize::Small);
-    let levels: Vec<f64> = vec![1.0; graph.len()];
+    let levels: Arc<[f64]> = vec![1.0f64; graph.len()].into();
     for &execs in &[2usize, 4, 8] {
-        // engine construction stays outside the timed closure (run() still
-        // makes one O(nodes) levels→Arc copy per run — negligible against
-        // the dispatch traffic being measured)
-        let engine = ThreadedGraphi::new(execs);
-        let name = if execs == 2 {
-            "threaded_dispatch_lstm_small".to_string()
-        } else {
-            format!("threaded_dispatch_lstm_small_{execs}exec")
-        };
-        runner.bench(
-            &name,
-            &[("nodes", graph.len().to_string()), ("executors", execs.to_string())],
-            || engine.run(&graph, &levels, |_| {}).dispatches,
-        );
-        let mean_us = runner.results.last().unwrap().summary.mean;
-        runner.set_metric(graph.len() as f64 / mean_us, "dispatch/µs");
+        for mode in DispatchMode::ALL {
+            // engine constructed outside the timed closure; levels shared
+            // via Arc, so runs pay no O(nodes) copy (PR-3 satellite)
+            let engine = ThreadedGraphi::new(execs).with_dispatch(mode);
+            let name = match (execs, mode) {
+                (2, DispatchMode::Centralized) => "threaded_dispatch_lstm_small".to_string(),
+                (_, DispatchMode::Centralized) => {
+                    format!("threaded_dispatch_lstm_small_{execs}exec")
+                }
+                (_, DispatchMode::Decentralized) => {
+                    format!("threaded_dispatch_decentral_lstm_small_{execs}exec")
+                }
+            };
+            runner.bench(
+                &name,
+                &[
+                    ("nodes", graph.len().to_string()),
+                    ("executors", execs.to_string()),
+                    ("dispatch", mode.name().to_string()),
+                ],
+                || engine.run(&graph, Arc::clone(&levels), |_| {}).dispatches,
+            );
+            let mean_us = runner.results.last().unwrap().summary.mean;
+            runner.set_metric(graph.len() as f64 / mean_us, "dispatch/µs");
+        }
     }
 
     println!("{}", runner.report());
     runner.finish();
-    // speedup headline: packed heap vs the inlined legacy BinaryHeap
     let mean_of = |name: &str| {
         runner.results.iter().find(|r| r.name == name).map(|r| r.summary.mean)
     };
     let mut headlines = Vec::new();
+    // speedup headline: packed heap vs the inlined legacy BinaryHeap
     if let (Some(new), Some(old)) = (mean_of("heap_push_pop_4096"), mean_of("heap_push_pop_4096_legacy")) {
         if new > 0.0 {
             headlines.push(("heap_push_pop_4096_speedup_vs_legacy", old / new));
+        }
+    }
+    // PR-3 headline pair: decentralized vs centralized dispatch throughput
+    let central_name = |execs: usize| {
+        if execs == 2 {
+            "threaded_dispatch_lstm_small".to_string()
+        } else {
+            format!("threaded_dispatch_lstm_small_{execs}exec")
+        }
+    };
+    let speedup_keys = [
+        (2usize, "dispatch_decentral_speedup_2exec"),
+        (4, "dispatch_decentral_speedup_4exec"),
+        (8, "dispatch_decentral_speedup_8exec"),
+    ];
+    for (execs, key) in speedup_keys {
+        let central = mean_of(&central_name(execs));
+        let decentral = mean_of(&format!("threaded_dispatch_decentral_lstm_small_{execs}exec"));
+        if let (Some(c), Some(d)) = (central, decentral) {
+            if d > 0.0 {
+                headlines.push((key, c / d));
+            }
         }
     }
     merge_into_bench_json(&runner, &headlines);

@@ -17,10 +17,10 @@ use crate::coordinator::config::{EngineChoice, ExperimentConfig};
 use crate::coordinator::driver::Driver;
 use crate::coordinator::figures;
 use crate::engine::policies::Policy;
-use crate::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv, Trace};
+use crate::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv, Trace};
 use crate::graph::GraphStats;
 use crate::models::{self, ModelKind, ModelSize};
-use crate::runtime::artifacts::{tuning_path, TuningArtifact};
+use crate::runtime::artifacts::{tuning_path, tuning_path_for, MachineKey, TuningArtifact};
 use crate::util::bench::{BenchConfig, BenchRunner};
 use crate::util::cli::{CliError, Matches, Spec};
 
@@ -99,6 +99,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("executors", None, "executor count (omit to auto-profile)")
         .opt("threads", None, "threads per executor")
         .opt("policy", Some("cp-first"), "cp-first|fifo|lifo|random|anti-critical")
+        .opt(
+            "dispatch",
+            None,
+            "centralized|decentralized (default: tuning artifact or config, else centralized)",
+        )
         .opt("iters", Some("5"), "iterations to average")
         .opt("tuning", None, "artifact dir with a persisted autotune result to reuse")
         .opt("trace", None, "write Chrome trace JSON here")
@@ -133,6 +138,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
         cfg.policy = Policy::parse(m.get("policy").unwrap())
             .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
     }
+    // no default value: an absent flag leaves cfg.dispatch as the config
+    // file set it (or None = unpinned, letting --tuning adopt a mode)
+    if let Some(d) = m.get("dispatch") {
+        cfg.dispatch =
+            Some(DispatchMode::parse(d).with_context(|| format!("bad --dispatch {d}"))?);
+    }
     if flag_wins("iters") {
         cfg.iterations = m.get_usize("iters").map_err(Error::new)?.unwrap_or(5);
     }
@@ -144,18 +155,27 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     // --tuning DIR: reuse a persisted autotune result. The artifact's
     // profiled duration table always feeds the scheduler's levels; its
-    // fleet shape applies only when no explicit fleet was requested.
+    // fleet shape (and dispatch mode) applies only when not explicitly
+    // requested. Artifacts tuned on different hardware are skipped — one
+    // tuning directory can serve a heterogeneous fleet.
     if let Some(dir) = m.get("tuning") {
-        let path = tuning_path(dir, &format!("{}-{}", cfg.model.name(), cfg.size.name()));
+        let tag = format!("{}-{}", cfg.model.name(), cfg.size.name());
+        let machine = crate::cost::machine::Machine::knl7250();
+        let key = MachineKey::of(&machine);
+        // machine-keyed filename first; fall back to the machine-agnostic
+        // legacy location (its in-file key is still checked below)
+        let keyed = tuning_path_for(dir, &tag, &key);
+        let path = if keyed.is_file() { keyed } else { tuning_path(dir, &tag) };
         let nodes = models::build(cfg.model, cfg.size).len();
         match TuningArtifact::load(&path) {
-            Ok(t) if t.matches_graph(nodes) => {
+            Ok(t) if t.matches_graph(nodes) && t.matches_machine(&machine) => {
                 if cfg.executors.is_none() && cfg.threads_per.is_none() {
                     println!(
-                        "tuning artifact {}: fleet {}x{} + profiled levels ({} profiling iterations, reused)",
+                        "tuning artifact {}: fleet {}x{} ({} dispatch) + profiled levels ({} profiling iterations, reused)",
                         path.display(),
                         t.best.0,
                         t.best.1,
+                        t.best_dispatch.name(),
                         t.total_profile_iterations
                     );
                     cfg.executors = Some(t.best.0);
@@ -166,7 +186,21 @@ fn cmd_run(args: &[String]) -> Result<()> {
                         path.display()
                     );
                 }
+                // adopt the artifact's winning dispatch mode unless a flag
+                // or a config-file key pinned one (same rule as the fleet
+                // shape above; an absent config key pins nothing)
+                if cfg.dispatch.is_none() {
+                    cfg.dispatch = Some(t.best_dispatch);
+                }
                 cfg.profiled_durations = Some(t.durations_us);
+            }
+            Ok(t) if !t.matches_machine(&machine) => {
+                crate::log_warn!(
+                    "tuning artifact {} was tuned on {} but this machine is {}; profiling fresh",
+                    path.display(),
+                    t.machine,
+                    key
+                );
             }
             Ok(t) => {
                 crate::log_warn!(
@@ -220,6 +254,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     ))
     .opt("dir", None, "artifact directory (default: $GRAPHI_ARTIFACTS or ./artifacts)")
     .opt("max-iters", Some("8"), "per-candidate iteration cap for late rounds")
+    .opt("dispatch", Some("both"), "dispatch axis to search: both|centralized|decentralized")
     .flag("force", "re-run the search even if a tuning artifact exists")
     .flag("compare", "also run the exhaustive sweep and report the savings");
     let m = spec.parse(args).map_err(Error::new)?;
@@ -228,10 +263,16 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     let stats = GraphStats::compute(&graph);
     let seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
     let env = SimEnv::knl(seed);
+    let dispatch_modes = match m.get("dispatch").unwrap() {
+        "both" => DispatchMode::ALL.to_vec(),
+        other => vec![DispatchMode::parse(other)
+            .with_context(|| format!("bad --dispatch {other} (both|centralized|decentralized)"))?],
+    };
     let tuner = Autotuner {
         worker_cores: 64,
         // same §7.3 model-specific extras as `profile` and the driver
         extra_configs: crate::sim::topology::model_extras(stats.max_width),
+        dispatch_modes,
         max_iterations: m.get_usize("max-iters").map_err(Error::new)?.unwrap_or(8),
         ..Default::default()
     };
@@ -240,22 +281,25 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(crate::runtime::artifacts::default_dir);
     let tag = format!("{}-{}", kind.name(), size.name());
-    let path = tuning_path(&dir, &tag);
+    // machine-keyed filename: artifacts from differently-shaped machines
+    // coexist in one tuning directory instead of clobbering each other
+    let path = tuning_path_for(&dir, &tag, &MachineKey::of(&env.cost.machine));
     if !m.flag("force") {
         if let Ok(t) = TuningArtifact::load(&path) {
-            if t.matches_graph(graph.len()) {
+            if t.matches_graph(graph.len()) && t.matches_machine(&env.cost.machine) {
                 println!("loaded tuning artifact {} — skipping search", path.display());
                 println!(
-                    "best parallel setting: {}x{}  (mean makespan {}, found in {} profiling iterations)",
+                    "best parallel setting: {}x{} ({} dispatch)  (mean makespan {}, found in {} profiling iterations)",
                     t.best.0,
                     t.best.1,
+                    t.best_dispatch.name(),
                     crate::util::fmt_us(t.best_makespan_us),
                     t.total_profile_iterations
                 );
                 return Ok(());
             }
             crate::log_warn!(
-                "tuning artifact {} does not match this graph; re-searching",
+                "tuning artifact {} does not match this graph/machine; re-searching",
                 path.display()
             );
         }
@@ -263,7 +307,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     println!("autotuning {}/{} ({} nodes)", kind.name(), size.name(), graph.len());
     let report = tuner.search(&graph, &env);
     print!("{}", Autotuner::render(&report));
-    let artifact = TuningArtifact::from_report(&tag, graph.len(), seed, &tuner, &report);
+    let artifact = TuningArtifact::from_report(&tag, graph.len(), &env, &tuner, &report);
     artifact.save(&path)?;
     println!("tuning artifact written to {}", path.display());
     if m.flag("compare") {
@@ -275,7 +319,10 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
         let exhaustive = profiler.profile(&graph, &env);
         let exhaustive_iters = profiler.candidates().len() * profiler.iterations;
         let det = SimEnv::knl_deterministic();
-        let found = GraphiEngine::new(report.best.0, report.best.1).run(&graph, &det).makespan_us;
+        let found = GraphiEngine::new(report.best.0, report.best.1)
+            .with_dispatch(report.best_dispatch)
+            .run(&graph, &det)
+            .makespan_us;
         let sweep = GraphiEngine::new(exhaustive.best.0, exhaustive.best.1)
             .run(&graph, &det)
             .makespan_us;
@@ -509,7 +556,9 @@ mod tests {
         let dir_s = dir.display().to_string();
         let base = ["autotune", "--model", "mlp", "--size", "small", "--dir", &dir_s];
         assert_eq!(main(args(&base)), 0);
-        let path = crate::runtime::artifacts::tuning_path(&dir, "mlp-small");
+        // written under the machine-keyed filename (KNL quadrant = 68c1d)
+        let key = crate::runtime::artifacts::MachineKey { cores: 68, numa_domains: 1 };
+        let path = crate::runtime::artifacts::tuning_path_for(&dir, "mlp-small", &key);
         assert!(path.is_file(), "artifact not written to {}", path.display());
         // second invocation loads the artifact (and must not fail)
         assert_eq!(main(args(&base)), 0);
@@ -526,5 +575,36 @@ mod tests {
     #[test]
     fn bad_model_rejected() {
         assert_eq!(main(args(&["stats", "--model", "resnet"])), 1);
+    }
+
+    #[test]
+    fn run_accepts_dispatch_flag() {
+        assert_eq!(
+            main(args(&[
+                "run", "--model", "mlp", "--size", "small", "--executors", "4", "--threads", "8",
+                "--iters", "1", "--dispatch", "decentralized"
+            ])),
+            0
+        );
+        assert_eq!(
+            main(args(&["run", "--model", "mlp", "--size", "small", "--dispatch", "sideways"])),
+            1
+        );
+    }
+
+    #[test]
+    fn autotune_accepts_dispatch_axis_restriction() {
+        let dir = std::env::temp_dir()
+            .join(format!("graphi-cli-autotune-axis-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.display().to_string();
+        assert_eq!(
+            main(args(&[
+                "autotune", "--model", "mlp", "--size", "small", "--dir", &dir_s, "--dispatch",
+                "centralized"
+            ])),
+            0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -6,6 +6,7 @@
 //! minimal.
 
 use crate::engine::policies::Policy;
+use crate::engine::DispatchMode;
 use crate::models::{ModelKind, ModelSize};
 use crate::sim::topology::PlacementKind;
 use crate::util::toml;
@@ -52,6 +53,12 @@ pub struct ExperimentConfig {
     pub threads_per: Option<usize>,
     pub policy: Policy,
     pub placement: PlacementKind,
+    /// Completion-resolution architecture of the Graphi engine
+    /// (centralized scheduler vs executor-side resolution + stealing).
+    /// `None` means "not pinned": the driver falls back to the paper's
+    /// centralized design, and `graphi run --tuning` may adopt the
+    /// artifact's winning mode. A flag or config-file value pins it.
+    pub dispatch: Option<DispatchMode>,
     /// Batch-training iterations to simulate.
     pub iterations: usize,
     pub seed: u64,
@@ -77,6 +84,7 @@ impl Default for ExperimentConfig {
             threads_per: None,
             policy: Policy::CriticalPathFirst,
             placement: PlacementKind::PinnedDisjoint,
+            dispatch: None,
             iterations: 5,
             seed: 42,
             profile_iterations: 3,
@@ -142,6 +150,7 @@ impl ExperimentConfig {
     /// threads_per_executor = 8
     /// policy = "cp-first"
     /// placement = "pinned"    # pinned|shared-tiles|os
+    /// dispatch = "centralized" # centralized|decentralized
     /// [run]
     /// iterations = 5
     /// seed = 42
@@ -179,6 +188,9 @@ impl ExperimentConfig {
                 "os" | "unpinned" => PlacementKind::OsManaged,
                 other => return Err(bad("engine.placement", other)),
             };
+        }
+        if let Some(d) = doc.get_str("engine", "dispatch") {
+            cfg.dispatch = Some(DispatchMode::parse(d).ok_or_else(|| bad("engine.dispatch", d))?);
         }
         if let Some(i) = doc.get_int("run", "iterations") {
             cfg.iterations = usize::try_from(i).map_err(|_| bad("run.iterations", i))?;
@@ -243,6 +255,16 @@ trace = "out/t.json"
         assert!(ExperimentConfig::from_toml("[model]\nname = \"resnet\"").is_err());
         assert!(ExperimentConfig::from_toml("[engine]\nkind = \"cuda\"").is_err());
         assert!(ExperimentConfig::from_toml("[engine]\nplacement = \"moon\"").is_err());
+        assert!(ExperimentConfig::from_toml("[engine]\ndispatch = \"psychic\"").is_err());
+    }
+
+    #[test]
+    fn dispatch_mode_parses_and_defaults_unpinned() {
+        let cfg = ExperimentConfig::from_toml("title = \"t\"").unwrap();
+        assert_eq!(cfg.dispatch, None, "absent key must not pin a mode");
+        let cfg =
+            ExperimentConfig::from_toml("[engine]\ndispatch = \"decentralized\"").unwrap();
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized));
     }
 
     #[test]

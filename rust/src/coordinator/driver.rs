@@ -1,8 +1,8 @@
 //! The experiment driver: config → model → (profile) → engine → results.
 
 use crate::engine::{
-    Engine, GraphiEngine, NaiveEngine, Profiler, RunResult, SequentialEngine, SimEnv,
-    TensorFlowLikeEngine, Trace,
+    DispatchMode, Engine, GraphiEngine, NaiveEngine, Profiler, RunResult, SequentialEngine,
+    SimEnv, TensorFlowLikeEngine, Trace,
 };
 use crate::graph::{Graph, GraphStats};
 use crate::models;
@@ -108,6 +108,7 @@ impl Driver {
                 let mut engine = GraphiEngine {
                     policy: cfg.policy,
                     placement: cfg.placement,
+                    dispatch: cfg.dispatch.unwrap_or(DispatchMode::Centralized),
                     ..GraphiEngine::new(executors, threads)
                 };
                 if let Some(durations) = &cfg.profiled_durations {
@@ -260,6 +261,18 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("traceEvents"));
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn decentralized_dispatch_flows_into_the_engine() {
+        let cfg = ExperimentConfig {
+            dispatch: Some(DispatchMode::Decentralized),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.engine_name.ends_with("-decentral"), "{}", r.engine_name);
+        assert!(r.mean_makespan_us > 0.0);
     }
 
     #[test]

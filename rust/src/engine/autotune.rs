@@ -15,8 +15,14 @@
 //! in its round-1 sample), so later rounds *refine* earlier ones instead of
 //! discarding them. The search spends `Σ nᵣ·iᵣ` iterations, strictly fewer
 //! than the `n · i_final` an exhaustive sweep needs at the same final
-//! fidelity — on the default 9-candidate space it is 25 iterations versus
-//! 36 (or 27 for the legacy 3-iteration flat sweep).
+//! fidelity — on the 9-shape space restricted to one dispatch mode it is
+//! 25 iterations versus 36 (or 27 for the legacy 3-iteration flat sweep).
+//!
+//! Since PR 3 the candidate space is two-dimensional: every fleet shape is
+//! measured under both [`DispatchMode`]s (§4/§5 centralized vs
+//! executor-side resolution + work stealing), so the search also decides
+//! the dispatch architecture per workload — 18 candidates, 68 iterations
+//! versus 144 exhaustive at the same final fidelity.
 //!
 //! After the winner is found, per-op durations are re-estimated at the
 //! winning team size (the §4.2 duration-estimation job) so the caller can
@@ -30,7 +36,7 @@ use crate::sim::topology::candidate_configs;
 use crate::util::stats::Welford;
 
 use super::profiler::{ConfigMeasurement, Profiler};
-use super::{Engine, GraphiEngine, SimEnv};
+use super::{DispatchMode, Engine, GraphiEngine, SimEnv};
 
 /// Successive-halving search configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +45,11 @@ pub struct Autotuner {
     pub worker_cores: usize,
     /// Extra model-specific configurations to seed into round 0.
     pub extra_configs: Vec<(usize, usize)>,
+    /// Dispatch architectures to search as a candidate axis (PR 3): every
+    /// `(executors, threads)` config is measured under each mode, so the
+    /// search decides centralized-vs-decentralized per workload instead of
+    /// hardcoding it. Restrict to one mode to reproduce the PR-2 search.
+    pub dispatch_modes: Vec<DispatchMode>,
     /// Per-candidate iterations in round 0 (doubles every round).
     pub initial_iterations: usize,
     /// Cap on the per-candidate iterations of any single round.
@@ -53,6 +64,7 @@ impl Default for Autotuner {
         Autotuner {
             worker_cores: 64,
             extra_configs: Vec::new(),
+            dispatch_modes: DispatchMode::ALL.to_vec(),
             initial_iterations: 1,
             max_iterations: 8,
             duration_iterations: 3,
@@ -68,8 +80,8 @@ pub struct AutotuneRound {
     /// Cumulative measurements of every candidate alive this round,
     /// best (lowest mean makespan) first.
     pub measurements: Vec<ConfigMeasurement>,
-    /// Configs that survived into the next round.
-    pub survivors: Vec<(usize, usize)>,
+    /// Candidates that survived into the next round.
+    pub survivors: Vec<((usize, usize), DispatchMode)>,
 }
 
 /// The search result.
@@ -77,6 +89,8 @@ pub struct AutotuneRound {
 pub struct AutotuneReport {
     /// Winning `(executors, threads_per)` configuration.
     pub best: (usize, usize),
+    /// Winning dispatch architecture.
+    pub best_dispatch: DispatchMode,
     /// Cumulative mean makespan of the winner across all its iterations.
     pub best_makespan_us: f64,
     /// Per-op duration estimates at the winning team size, µs — feed these
@@ -102,14 +116,27 @@ impl AutotuneReport {
 }
 
 impl Autotuner {
-    /// The candidate space: symmetric splits plus validated extras.
+    /// The fleet-shape candidates: symmetric splits plus validated extras.
     pub fn candidates(&self) -> Vec<(usize, usize)> {
         candidate_configs(self.worker_cores, &self.extra_configs)
     }
 
+    /// The full search space: fleet shapes × dispatch modes.
+    pub fn candidate_space(&self) -> Vec<((usize, usize), DispatchMode)> {
+        let modes = if self.dispatch_modes.is_empty() {
+            vec![DispatchMode::Centralized]
+        } else {
+            self.dispatch_modes.clone()
+        };
+        self.candidates()
+            .into_iter()
+            .flat_map(|cfg| modes.iter().map(move |&m| (cfg, m)))
+            .collect()
+    }
+
     /// Run the successive-halving search.
     pub fn search(&self, graph: &Graph, env: &SimEnv) -> AutotuneReport {
-        let candidates = self.candidates();
+        let candidates = self.candidate_space();
         assert!(!candidates.is_empty(), "no parallel-setting candidates to search");
         let n = candidates.len();
         let mut acc: Vec<Welford> = vec![Welford::new(); n];
@@ -120,7 +147,7 @@ impl Autotuner {
         let mut total = 0usize;
         loop {
             for &ci in &alive {
-                let (executors, threads_per) = candidates[ci];
+                let ((executors, threads_per), dispatch) = candidates[ci];
                 for _ in 0..per_round {
                     // same per-iteration seed schedule as the flat
                     // profiler (iteration k ⇒ seed ^ (k << 8)), continued
@@ -130,7 +157,9 @@ impl Autotuner {
                         cost: env.cost.clone(),
                         seed: env.seed ^ (iters_done[ci] << 8),
                     };
-                    let result = GraphiEngine::new(executors, threads_per).run(graph, &env_i);
+                    let result = GraphiEngine::new(executors, threads_per)
+                        .with_dispatch(dispatch)
+                        .run(graph, &env_i);
                     acc[ci].push(result.makespan_us);
                     iters_done[ci] += 1;
                     total += 1;
@@ -140,14 +169,15 @@ impl Autotuner {
             let measurements: Vec<ConfigMeasurement> = alive
                 .iter()
                 .map(|&ci| ConfigMeasurement {
-                    executors: candidates[ci].0,
-                    threads_per: candidates[ci].1,
+                    executors: candidates[ci].0 .0,
+                    threads_per: candidates[ci].0 .1,
+                    dispatch: candidates[ci].1,
                     mean_makespan_us: acc[ci].mean(),
                     std_us: acc[ci].std(),
                 })
                 .collect();
             let keep = (alive.len() / 2).max(1);
-            let survivors: Vec<(usize, usize)> =
+            let survivors: Vec<((usize, usize), DispatchMode)> =
                 alive.iter().take(keep).map(|&ci| candidates[ci]).collect();
             let finished = alive.len() == 1;
             rounds.push(AutotuneRound { iterations: per_round, measurements, survivors });
@@ -161,7 +191,7 @@ impl Autotuner {
             per_round = (per_round * 2).min(self.max_iterations.max(1));
         }
         let best_ci = alive[0];
-        let best = candidates[best_ci];
+        let (best, best_dispatch) = candidates[best_ci];
         let final_round_iterations = rounds.last().map(|r| r.iterations).unwrap_or(1);
         // §4.2's second job, at the surviving winner's team size.
         let durations_us = Profiler {
@@ -172,6 +202,7 @@ impl Autotuner {
         .estimate_durations(graph, env, best.1);
         AutotuneReport {
             best,
+            best_dispatch,
             best_makespan_us: acc[best_ci].mean(),
             durations_us,
             rounds,
@@ -183,6 +214,10 @@ impl Autotuner {
 
     /// Render the search trace as a table.
     pub fn render(report: &AutotuneReport) -> String {
+        let mode_tag = |m: DispatchMode| match m {
+            DispatchMode::Centralized => "",
+            DispatchMode::Decentralized => "/d",
+        };
         let mut t = crate::util::table::Table::new(&[
             "round", "iters", "alive", "best config", "best makespan", "std",
         ]);
@@ -192,17 +227,18 @@ impl Autotuner {
                 i.to_string(),
                 round.iterations.to_string(),
                 round.measurements.len().to_string(),
-                format!("{}x{}", best.executors, best.threads_per),
+                format!("{}x{}{}", best.executors, best.threads_per, mode_tag(best.dispatch)),
                 crate::util::fmt_us(best.mean_makespan_us),
                 crate::util::fmt_us(best.std_us),
             ]);
         }
         let mut out = t.render();
         out.push_str(&format!(
-            "winner {}x{} after {} profiling iterations \
+            "winner {}x{} ({} dispatch) after {} profiling iterations \
              (exhaustive sweep at the same fidelity: {})\n",
             report.best.0,
             report.best.1,
+            report.best_dispatch.name(),
             report.total_profile_iterations,
             report.exhaustive_equivalent_iterations(),
         ));
@@ -221,29 +257,50 @@ mod tests {
         Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() }
     }
 
+    /// PR-2 behaviour: the search restricted to the centralized axis.
+    fn centralized_tuner() -> Autotuner {
+        Autotuner {
+            dispatch_modes: vec![DispatchMode::Centralized],
+            ..tuner()
+        }
+    }
+
     #[test]
     fn halving_schedule_shrinks_candidates_and_doubles_iterations() {
         let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        // 9 fleet shapes × 2 dispatch modes = 18 candidates
         let report = tuner().search(&g, &SimEnv::knl_deterministic());
+        assert_eq!(report.num_candidates, 18);
+        // 18 → 9 → 4 → 2 → 1 at 1, 2, 4, 8 iterations per round
+        let alive: Vec<usize> = report.rounds.iter().map(|r| r.measurements.len()).collect();
+        assert_eq!(alive, vec![18, 9, 4, 2]);
+        let iters: Vec<usize> = report.rounds.iter().map(|r| r.iterations).collect();
+        assert_eq!(iters, vec![1, 2, 4, 8]);
+        assert_eq!(report.total_profile_iterations, 18 + 9 * 2 + 4 * 4 + 2 * 8);
+        assert_eq!(report.final_round_iterations, 8);
+        // strictly fewer than exhaustive at final fidelity (18 × 8 = 144)
+        assert!(report.total_profile_iterations < report.exhaustive_equivalent_iterations());
+    }
+
+    #[test]
+    fn centralized_only_axis_reproduces_the_pr2_schedule() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let report = centralized_tuner().search(&g, &SimEnv::knl_deterministic());
         assert_eq!(report.num_candidates, 9);
-        // 9 → 4 → 2 → 1 at 1, 2, 4 iterations per round
         let alive: Vec<usize> = report.rounds.iter().map(|r| r.measurements.len()).collect();
         assert_eq!(alive, vec![9, 4, 2]);
-        let iters: Vec<usize> = report.rounds.iter().map(|r| r.iterations).collect();
-        assert_eq!(iters, vec![1, 2, 4]);
         assert_eq!(report.total_profile_iterations, 9 + 4 * 2 + 2 * 4);
-        assert_eq!(report.final_round_iterations, 4);
-        // strictly fewer than exhaustive at final fidelity (9 × 4 = 36)
-        assert!(report.total_profile_iterations < report.exhaustive_equivalent_iterations());
+        assert_eq!(report.best_dispatch, DispatchMode::Centralized);
     }
 
     #[test]
     fn deterministic_env_recovers_the_exhaustive_winner() {
         // noise-free: round-0 means are exact, so halving can never drop
-        // the true optimum — the winner must equal the flat sweep's
+        // the true optimum — restricted to the centralized axis, the
+        // winner must equal the flat sweep's
         let g = models::build(ModelKind::Lstm, ModelSize::Small);
         let env = SimEnv::knl_deterministic();
-        let report = tuner().search(&g, &env);
+        let report = centralized_tuner().search(&g, &env);
         let exhaustive = Profiler {
             iterations: 1,
             worker_cores: 64,
@@ -256,13 +313,38 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_axis_is_searched_and_never_loses_to_either_mode_alone() {
+        // noise-free: the two-axis winner's measured makespan is the min
+        // over the whole space, so it can be no worse than the best of
+        // either single-mode search
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let both = tuner().search(&g, &env);
+        assert_eq!(both.num_candidates, 18);
+        // round 0 measured both modes
+        assert!(both.rounds[0].measurements.iter().any(|m| m.dispatch == DispatchMode::Centralized));
+        assert!(both.rounds[0]
+            .measurements
+            .iter()
+            .any(|m| m.dispatch == DispatchMode::Decentralized));
+        let central = centralized_tuner().search(&g, &env);
+        assert!(
+            both.best_makespan_us <= central.best_makespan_us + 1e-9,
+            "two-axis winner ({}) must be ≤ centralized-only winner ({})",
+            both.best_makespan_us,
+            central.best_makespan_us
+        );
+    }
+
+    #[test]
     fn survivors_are_prefixes_of_measurements() {
         let g = models::build(ModelKind::Mlp, ModelSize::Small);
         let report = tuner().search(&g, &SimEnv::knl(3));
         for round in &report.rounds {
-            for (i, &cfg) in round.survivors.iter().enumerate() {
+            for (i, &(cfg, mode)) in round.survivors.iter().enumerate() {
                 let m = &round.measurements[i];
                 assert_eq!((m.executors, m.threads_per), cfg);
+                assert_eq!(m.dispatch, mode);
             }
             // measurements sorted best-first
             for w in round.measurements.windows(2) {
@@ -274,7 +356,11 @@ mod tests {
     #[test]
     fn single_candidate_space_short_circuits() {
         let g = models::build(ModelKind::Mlp, ModelSize::Small);
-        let t = Autotuner { worker_cores: 1, ..Default::default() };
+        let t = Autotuner {
+            worker_cores: 1,
+            dispatch_modes: vec![DispatchMode::Centralized],
+            ..Default::default()
+        };
         let report = t.search(&g, &SimEnv::knl_deterministic());
         assert_eq!(report.best, (1, 1));
         assert_eq!(report.total_profile_iterations, 1);
@@ -288,5 +374,6 @@ mod tests {
         let text = Autotuner::render(&report);
         assert!(text.contains("winner"));
         assert!(text.contains(&format!("{}x{}", report.best.0, report.best.1)));
+        assert!(text.contains(report.best_dispatch.name()));
     }
 }

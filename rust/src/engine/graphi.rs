@@ -7,6 +7,8 @@
 //! from [`crate::sim`]: the only simulated quantity is how long each op
 //! body takes on its thread team, priced by [`crate::cost::CostModel`].
 
+use std::sync::Arc;
+
 use crate::cost::Interference;
 use crate::graph::op::{EwKind, OpKind};
 use crate::graph::{levels, Graph, NodeId};
@@ -15,11 +17,12 @@ use crate::sim::{BandwidthArbiter, EventQueue, Placement};
 use crate::util::rng::Rng;
 
 use super::policies::Policy;
-use super::ready::{DepTracker, ReadySet};
+use super::ready::{entry_node, pack_entry, DepTracker, ReadySet};
 use super::ring::SpscRing;
 use super::scheduler::IdleBitmap;
 use super::trace::{OpRecord, LIGHTWEIGHT_EXECUTOR};
-use super::{Engine, EngineMetrics, RunResult, SimEnv};
+use super::worksteal::{self, WorkStealDeque};
+use super::{DispatchMode, Engine, EngineMetrics, RunResult, SimEnv};
 
 /// Configuration of the Graphi engine.
 #[derive(Debug, Clone)]
@@ -51,6 +54,12 @@ pub struct GraphiEngine {
     /// Fault injection: `(executor, slowdown)` — that executor runs every
     /// op `slowdown`× slower (straggler/thermal-throttle study).
     pub straggler: Option<(usize, f64)>,
+    /// Completion-resolution architecture. `Centralized` is the paper's
+    /// §4/§5 design (and the default); `Decentralized` mirrors the
+    /// executor-side resolution + CP-aware work stealing of
+    /// [`crate::runtime::threaded`] in virtual time, so the autotuner can
+    /// search over dispatch mode as a candidate axis.
+    pub dispatch: DispatchMode,
 }
 
 impl GraphiEngine {
@@ -66,11 +75,17 @@ impl GraphiEngine {
             stream_stores: true,
             locality: false,
             straggler: None,
+            dispatch: DispatchMode::Centralized,
         }
     }
 
     pub fn with_policy(mut self, policy: Policy) -> GraphiEngine {
         self.policy = policy;
+        self
+    }
+
+    pub fn with_dispatch(mut self, dispatch: DispatchMode) -> GraphiEngine {
+        self.dispatch = dispatch;
         self
     }
 
@@ -101,6 +116,9 @@ struct Sim<'a> {
     q: EventQueue<Ev>,
     deps: DepTracker,
     ready: ReadySet,
+    /// The level values behind `ready`'s ordering — shared out so the
+    /// decentralized path can pack deque keys from the same priorities.
+    levels: Arc<[f64]>,
     idle: IdleBitmap,
     rings: Vec<SpscRing<NodeId>>,
     bw: BandwidthArbiter,
@@ -166,7 +184,7 @@ impl<'a> Sim<'a> {
                 dur
             })
             .collect();
-        let level_values = if let Some(overrides) = &cfg.duration_overrides {
+        let level_values: Arc<[f64]> = if let Some(overrides) = &cfg.duration_overrides {
             assert_eq!(
                 overrides.len(),
                 graph.len(),
@@ -177,7 +195,8 @@ impl<'a> Sim<'a> {
             levels(graph, &base_dur_us)
         } else {
             levels(graph, &vec![1.0; graph.len()])
-        };
+        }
+        .into();
         let numa_factor: Vec<f64> = (0..cfg.executors)
             .map(|e| {
                 if cost.machine.numa_domains <= 1 {
@@ -202,7 +221,8 @@ impl<'a> Sim<'a> {
             rng: env.rng(),
             q: EventQueue::new(),
             deps: DepTracker::new(graph),
-            ready: ReadySet::new(cfg.policy, level_values, env.seed ^ 0x5EED),
+            ready: ReadySet::new(cfg.policy, Arc::clone(&level_values), env.seed ^ 0x5EED),
+            levels: level_values,
             idle: IdleBitmap::new(cfg.executors),
             rings: (0..cfg.executors).map(|_| SpscRing::new(1)).collect(),
             bw: BandwidthArbiter::new(cost.machine.mcdram_bw),
@@ -367,12 +387,130 @@ impl<'a> Sim<'a> {
         assert!(self.deps.is_done(), "simulation drained with unexecuted ops");
         RunResult { makespan_us: makespan, records: self.records, metrics: self.metrics }
     }
+
+    /// Decentralized mode in virtual time — the same architecture as
+    /// [`crate::runtime::threaded`]'s decentralized path, over the *real*
+    /// [`WorkStealDeque`]s (exercised single-threaded here). There is no
+    /// central scheduler and no light-weight lane: the executor finishing
+    /// an op pays the successor-resolution cost itself (`queue_base_us`
+    /// per triggered successor — one `fetch_sub` + deque push), a local
+    /// pop costs `queue_base_us`, and a steal adds the CAS premium
+    /// `queue_cas_us`. All of it lands in `scheduler_busy_us`: it is
+    /// scheduling work, merely spread across executors instead of
+    /// serialized on one reserved core.
+    fn run_decentralized(mut self) -> RunResult {
+        let n_exec = self.cfg.executors;
+        let pop_us = self.env.cost.cal.queue_base_us;
+        let steal_us = self.env.cost.cal.queue_base_us + self.env.cost.cal.queue_cas_us;
+        let deques: Vec<WorkStealDeque> =
+            (0..n_exec).map(|_| WorkStealDeque::new(self.graph.len())).collect();
+        let mut exec_idle = vec![true; n_exec];
+        let shared_levels = Arc::clone(&self.levels);
+        let mut sources = self.deps.sources();
+        sources.sort_unstable_by_key(|&s| pack_entry(shared_levels[s as usize], s));
+        for (i, &s) in sources.iter().enumerate() {
+            self.ready_at[s as usize] = 0.0;
+            deques[i % n_exec]
+                .push(pack_entry(shared_levels[s as usize], s))
+                .expect("deque sized for the whole graph");
+        }
+        self.acquire_sweep(&deques, &mut exec_idle, 0, 0.0, pop_us, steal_us);
+        let mut makespan = 0.0f64;
+        // one reusable resolution buffer for the whole run, like the
+        // threaded executors' per-thread `batch`
+        let mut batch: Vec<u64> = Vec::new();
+        while let Some((t, ev)) = self.q.pop() {
+            makespan = makespan.max(t);
+            let Ev::Done { node, exec, bw_token } = ev else {
+                unreachable!("decentralized mode schedules only worker completions")
+            };
+            self.bw.release(bw_token);
+            let e = exec as usize;
+            // the tentpole, in virtual time: the completing executor
+            // resolves successors itself and pushes them onto its own
+            // deque, ascending so the LIFO end is the batch's hottest op
+            batch.clear();
+            {
+                let graph = self.graph;
+                let ready_at = &mut self.ready_at;
+                let levels = &shared_levels;
+                self.deps.complete(graph, node, |s| {
+                    ready_at[s as usize] = t;
+                    batch.push(pack_entry(levels[s as usize], s));
+                });
+            }
+            let resolve_us = pop_us * batch.len() as f64;
+            self.metrics.scheduler_busy_us += resolve_us;
+            batch.sort_unstable();
+            for &k in &batch {
+                deques[e].push(k).expect("deque sized for the whole graph");
+            }
+            exec_idle[e] = true;
+            // the completing executor gets first dibs (cache-warm LIFO
+            // pop), then every idle executor steals what is exposed
+            self.acquire_sweep(&deques, &mut exec_idle, e, t + resolve_us, pop_us, steal_us);
+        }
+        assert!(self.deps.is_done(), "simulation drained with unexecuted ops");
+        RunResult { makespan_us: makespan, records: self.records, metrics: self.metrics }
+    }
+
+    /// Let every idle executor acquire work (own-deque pop, else the
+    /// highest-priority steal) until no idle executor finds any, starting
+    /// the scan at `first`.
+    fn acquire_sweep(
+        &mut self,
+        deques: &[WorkStealDeque],
+        exec_idle: &mut [bool],
+        first: usize,
+        now: f64,
+        pop_us: f64,
+        steal_us: f64,
+    ) {
+        let n = deques.len();
+        loop {
+            let mut progressed = false;
+            for i in 0..n {
+                let e = (first + i) % n;
+                if !exec_idle[e] {
+                    continue;
+                }
+                if let Some((key, stolen)) = worksteal::acquire(deques, e) {
+                    let overhead = if stolen { steal_us } else { pop_us };
+                    self.launch_decentral(e, entry_node(key), now, overhead);
+                    exec_idle[e] = false;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return;
+            }
+        }
+    }
+
+    /// Start `node` on executor `e` at `now + overhead_us` (decentralized
+    /// mode; no LW lane — every op runs on a worker executor).
+    fn launch_decentral(&mut self, e: usize, node: NodeId, now: f64, overhead_us: f64) {
+        let start = now + overhead_us;
+        self.metrics.scheduler_busy_us += overhead_us;
+        self.metrics.dispatches += 1;
+        let mut dur = self.op_duration(node, e, false);
+        let demand = {
+            let base = self.base_dur_us[node as usize];
+            if base > 0.0 { self.graph.node(node).kind.bytes() / (base * 1e-6) } else { 0.0 }
+        };
+        let (stretch, token) = self.bw.admit(demand);
+        dur *= stretch;
+        self.metrics.queue_wait_us += start - self.ready_at[node as usize];
+        self.metrics.executor_busy_us[e] += dur;
+        self.records.push(OpRecord { node, executor: e as u32, start_us: start, end_us: start + dur });
+        self.q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token });
+    }
 }
 
 impl Engine for GraphiEngine {
     fn name(&self) -> String {
         format!(
-            "graphi-{}x{}-{}{}",
+            "graphi-{}x{}-{}{}{}",
             self.executors,
             self.threads_per,
             self.policy.name(),
@@ -380,12 +518,20 @@ impl Engine for GraphiEngine {
                 PlacementKind::PinnedDisjoint => "",
                 PlacementKind::PinnedSharedTiles => "-sharedL2",
                 PlacementKind::OsManaged => "-unpinned",
+            },
+            match self.dispatch {
+                DispatchMode::Centralized => "",
+                DispatchMode::Decentralized => "-decentral",
             }
         )
     }
 
     fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult {
-        let result = Sim::new(graph, env, self).run();
+        let sim = Sim::new(graph, env, self);
+        let result = match self.dispatch {
+            DispatchMode::Centralized => sim.run(),
+            DispatchMode::Decentralized => sim.run_decentralized(),
+        };
         debug_assert!(
             result.validate(graph).is_ok(),
             "graphi produced invalid schedule: {:?}",
@@ -545,5 +691,73 @@ mod tests {
         let r = GraphiEngine::new(8, 8).run(&g, &env());
         let u = r.metrics.utilization(r.makespan_us);
         assert!((0.05..=1.0).contains(&u), "utilization {u}");
+    }
+
+    #[test]
+    fn decentralized_schedule_is_valid_and_complete() {
+        for kind in [ModelKind::Lstm, ModelKind::PathNet, ModelKind::Mlp] {
+            let g = models::build(kind, ModelSize::Small);
+            let r = GraphiEngine::new(4, 8)
+                .with_dispatch(DispatchMode::Decentralized)
+                .run(&g, &env());
+            r.validate(&g).unwrap();
+            assert_eq!(r.records.len(), g.len());
+            assert_eq!(r.metrics.dispatches, g.len() as u64);
+            assert_eq!(r.metrics.lightweight_ops, 0, "no LW lane in decentralized mode");
+            assert!(r.metrics.scheduler_busy_us > 0.0, "resolution work must be accounted");
+        }
+    }
+
+    #[test]
+    fn decentralized_deterministic_given_seed() {
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let e = SimEnv::knl(42);
+        let engine = GraphiEngine::new(4, 8).with_dispatch(DispatchMode::Decentralized);
+        assert_eq!(engine.run(&g, &e).makespan_us, engine.run(&g, &e).makespan_us);
+    }
+
+    #[test]
+    fn decentralized_beats_centralized_on_small_op_heavy_graph() {
+        // the point of the tentpole: when per-op work is small, the
+        // serialized scheduler round-trip dominates the centralized
+        // makespan, while decentralized resolution spreads that cost
+        // across executors. Structure-only levels + a wide graph of tiny
+        // element-wise ops make dispatch throughput the bottleneck.
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev: Vec<crate::graph::NodeId> = Vec::new();
+        for layer in 0..40 {
+            let mut this = Vec::new();
+            for i in 0..16 {
+                let n = b.add(
+                    format!("l{layer}n{i}"),
+                    OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith },
+                );
+                if let Some(&p) = prev.get(i % prev.len().max(1)) {
+                    b.depend(p, n);
+                }
+                this.push(n);
+            }
+            prev = this;
+        }
+        let g = b.build().unwrap();
+        let e = SimEnv::knl_deterministic();
+        let central = GraphiEngine::new(8, 8).run(&g, &e).makespan_us;
+        let decentral = GraphiEngine::new(8, 8)
+            .with_dispatch(DispatchMode::Decentralized)
+            .run(&g, &e)
+            .makespan_us;
+        assert!(
+            decentral < central,
+            "decentralized ({decentral}) should beat centralized ({central}) on small ops"
+        );
+    }
+
+    #[test]
+    fn dispatch_mode_shows_in_engine_name() {
+        let c = GraphiEngine::new(4, 8);
+        let d = GraphiEngine::new(4, 8).with_dispatch(DispatchMode::Decentralized);
+        assert!(!c.name().contains("decentral"));
+        assert!(d.name().ends_with("-decentral"), "{}", d.name());
     }
 }

@@ -43,6 +43,7 @@ pub mod scheduler;
 pub mod sequential;
 pub mod tensorflow_like;
 pub mod trace;
+pub mod worksteal;
 
 pub use autotune::{AutotuneReport, AutotuneRound, Autotuner};
 pub use dynamic::DynamicFleetEngine;
@@ -54,10 +55,44 @@ pub use profiler::{ProfileReport, Profiler};
 pub use sequential::SequentialEngine;
 pub use tensorflow_like::TensorFlowLikeEngine;
 pub use trace::{OpRecord, Trace};
+pub use worksteal::{Steal, WorkStealDeque};
 
 use crate::cost::{Calibration, CostModel, Interference};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
+
+/// How completions turn into new dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// §4/§5 (PR-1) architecture: every completion round-trips through the
+    /// central scheduler — completion queue → `DepTracker` → ready-heap →
+    /// per-executor buffer.
+    Centralized,
+    /// Executor-side successor resolution over the CSR layout
+    /// ([`crate::graph::AtomicDepTracker`]) plus CP-aware work stealing
+    /// ([`worksteal`]); the coordinator only handles startup, quiescence
+    /// and trace collection.
+    Decentralized,
+}
+
+impl DispatchMode {
+    pub const ALL: [DispatchMode; 2] = [DispatchMode::Centralized, DispatchMode::Decentralized];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchMode::Centralized => "centralized",
+            DispatchMode::Decentralized => "decentralized",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DispatchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "centralized" | "central" => Some(DispatchMode::Centralized),
+            "decentralized" | "decentral" => Some(DispatchMode::Decentralized),
+            _ => None,
+        }
+    }
+}
 
 /// Shared environment for a simulated run.
 #[derive(Debug, Clone)]
@@ -146,6 +181,16 @@ pub trait Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dispatch_mode_roundtrip_and_aliases() {
+        for m in DispatchMode::ALL {
+            assert_eq!(DispatchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(DispatchMode::parse("central"), Some(DispatchMode::Centralized));
+        assert_eq!(DispatchMode::parse("DECENTRAL"), Some(DispatchMode::Decentralized));
+        assert_eq!(DispatchMode::parse("psychic"), None);
+    }
 
     #[test]
     fn metrics_utilization() {

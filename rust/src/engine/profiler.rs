@@ -16,7 +16,7 @@ use crate::sim::topology::candidate_configs;
 use crate::util::stats::Welford;
 
 use super::graphi::GraphiEngine;
-use super::{Engine, RunResult, SimEnv};
+use super::{DispatchMode, Engine, RunResult, SimEnv};
 
 /// Profiler configuration.
 #[derive(Debug, Clone)]
@@ -40,6 +40,9 @@ impl Default for Profiler {
 pub struct ConfigMeasurement {
     pub executors: usize,
     pub threads_per: usize,
+    /// Dispatch architecture measured. The flat profiler only sweeps the
+    /// paper's centralized design; the autotuner searches both.
+    pub dispatch: DispatchMode,
     pub mean_makespan_us: f64,
     pub std_us: f64,
 }
@@ -75,6 +78,7 @@ impl Profiler {
             measurements.push(ConfigMeasurement {
                 executors,
                 threads_per,
+                dispatch: DispatchMode::Centralized,
                 mean_makespan_us: acc.mean(),
                 std_us: acc.std(),
             });

@@ -127,6 +127,24 @@ fn pack(priority: f64, seq: u32) -> u64 {
     ((quantize(priority) as u64) << 32) | ((!seq) as u64)
 }
 
+/// Pack a `(priority, node)` pair into one `u64` for the work-stealing
+/// deques ([`crate::engine::worksteal`]): quantized priority in the high
+/// half (same order-preserving map as the ready-heap keys), the node id in
+/// the low half. A plain integer max-compare orders entries by priority;
+/// priorities that quantize equal tie-break by node id — arbitrary but
+/// deterministic, which is all the decentralized path needs (cross-thread
+/// FIFO seniority is not observable anyway).
+#[inline]
+pub fn pack_entry(priority: f64, node: NodeId) -> u64 {
+    ((quantize(priority) as u64) << 32) | node as u64
+}
+
+/// The node id carried by a [`pack_entry`] key.
+#[inline]
+pub fn entry_node(key: u64) -> NodeId {
+    key as u32
+}
+
 /// Arity of the flat heap. 4 keeps all children of a node within one
 /// 64-byte cache line of `Vec<u64>` storage.
 const D: usize = 4;
@@ -314,6 +332,14 @@ mod tests {
                 w[1]
             );
         }
+    }
+
+    #[test]
+    fn pack_entry_orders_by_priority_then_node() {
+        assert!(pack_entry(9.0, 0) > pack_entry(5.0, 1000), "priority dominates");
+        assert!(pack_entry(7.0, 2) > pack_entry(7.0, 1), "equal priority: node id breaks ties");
+        assert_eq!(entry_node(pack_entry(123.0, 77)), 77);
+        assert_eq!(entry_node(pack_entry(-4.5, u32::MAX)), u32::MAX);
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Per-executor work-stealing deques for decentralized dispatch.
+//!
+//! The centralized architecture (§4/§5, PR 1) routes *every* completion
+//! through a coordinator round-trip: executor → MPSC completion queue →
+//! `DepTracker` → ready-heap → SPSC ring → executor. That serializes
+//! dispatch on one thread, which caps throughput exactly where the paper
+//! says small ops live or die (and Liu et al., arXiv:1810.08955, measured
+//! the same wall at high op rates). In decentralized mode each executor
+//! owns one of these deques; the executor that finishes op `n` resolves
+//! `n`'s successors itself ([`crate::graph::AtomicDepTracker`]) and pushes
+//! the newly-ready ops here — the common case never touches the
+//! coordinator.
+//!
+//! # Which end is which, and why
+//!
+//! The deque is Chase–Lev-shaped: the **owner** pushes and pops at the
+//! *bottom* with plain loads plus one release store, and **thieves** take
+//! from the *top* with a CAS. Entries are the packed `u64`s of
+//! [`super::ready::pack_entry`] — quantized critical-path level in the
+//! high half, node id in the low half — so a single integer compare orders
+//! any two entries by CP priority.
+//!
+//! * **Local pops take the LIFO (bottom) end for cache affinity.** The
+//!   entries at the bottom are the successors this executor itself just
+//!   triggered; their inputs are the op it just produced, still warm in
+//!   its L1/L2. Each triggered batch is pushed in ascending key order, so
+//!   the bottom entry is also the *highest-level* member of the newest
+//!   batch — within a batch, LIFO popping is exactly CP-first.
+//!
+//! * **Steals take the high-priority end among *exposed* entries,
+//!   approximating §4.3 CP-first at batch granularity.** Level values
+//!   decrease monotonically along every dependency chain
+//!   (`level(pred) = dur(pred) + max level(succ)` > `level(succ)` for
+//!   positive durations), so every entry of an elder batch dominates every
+//!   entry of its *descendant* batches further down the deque. Within one
+//!   ascending-pushed batch the steal end exposes the batch's lower-level
+//!   members first — the owner is draining that same batch's hot end from
+//!   the other side, so thief and owner work toward each other. An idle
+//!   executor compares the exposed top keys of *all* victims
+//!   ([`steal_highest`]) and CASes the maximum away: the stolen op is the
+//!   highest-priority entry any deque *exposes*, which keeps steals on
+//!   elder (higher-level) generations instead of the freshest fringe.
+//!   Exact global CP-first stealing would require a shared priority
+//!   structure — precisely the serialized coordinator this module exists
+//!   to remove; the differential suite checks semantics, and the bench
+//!   checks the throughput this approximation buys.
+//!
+//! The deque is bounded (engines size it to the whole graph, so a push can
+//! never fail in practice: each op is enqueued exactly once). Slots are
+//! `AtomicU64`, which makes the classic Chase–Lev slot race benign safe
+//! Rust: a thief that loses the CAS merely read a stale value it never
+//! uses — no `unsafe` anywhere in this module.
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicU64, Ordering};
+
+/// An atomic cursor on its own cache line (owner and thieves would
+/// otherwise false-share).
+#[repr(align(64))]
+struct PaddedAtomicIsize(AtomicIsize);
+
+/// Outcome of a steal attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal {
+    /// Nothing visible to steal.
+    Empty,
+    /// Lost a race with the owner or another thief; the deque may still
+    /// hold work — rescan.
+    Retry,
+    /// Took this entry.
+    Success(u64),
+}
+
+/// Bounded Chase–Lev-style work-stealing deque of packed `u64` entries.
+///
+/// # Safety contract
+///
+/// At most one thread (the owner) may call [`push`](Self::push) /
+/// [`pop`](Self::pop); any number of threads may call
+/// [`steal`](Self::steal) / [`peek_top`](Self::peek_top) concurrently.
+/// The engines uphold this by construction: executor `e` is the sole
+/// owner of deque `e`.
+pub struct WorkStealDeque {
+    buf: Box<[AtomicU64]>,
+    mask: usize,
+    /// Owner end: next slot to write. Owner-written, thief-read.
+    bottom: PaddedAtomicIsize,
+    /// Steal end: oldest live slot. CASed by thieves and the owner's
+    /// last-entry race.
+    top: PaddedAtomicIsize,
+}
+
+impl WorkStealDeque {
+    /// A deque holding at least `capacity` entries (rounded up to a power
+    /// of two, minimum 2).
+    pub fn new(capacity: usize) -> WorkStealDeque {
+        let cap = capacity.max(2).next_power_of_two();
+        let buf: Vec<AtomicU64> = (0..cap).map(|_| AtomicU64::new(0)).collect();
+        WorkStealDeque {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            bottom: PaddedAtomicIsize(AtomicIsize::new(0)),
+            top: PaddedAtomicIsize(AtomicIsize::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Owner: push an entry at the bottom; `Err(key)` if full.
+    pub fn push(&self, key: u64) -> Result<(), u64> {
+        let b = self.bottom.0.load(Ordering::Relaxed);
+        let t = self.top.0.load(Ordering::Acquire);
+        if b.wrapping_sub(t) >= self.buf.len() as isize {
+            return Err(key);
+        }
+        self.buf[(b as usize) & self.mask].store(key, Ordering::Relaxed);
+        // publish: thieves acquire-load `bottom`, which orders the slot
+        // store above before their slot read
+        self.bottom.0.store(b.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner: pop the most recently pushed entry (LIFO end), if any.
+    pub fn pop(&self) -> Option<u64> {
+        let b = self.bottom.0.load(Ordering::Relaxed).wrapping_sub(1);
+        self.bottom.0.store(b, Ordering::Relaxed);
+        // the SeqCst fence orders our `bottom` store against thieves' `top`
+        // CAS: either we see their increment or they see our reservation
+        fence(Ordering::SeqCst);
+        let t = self.top.0.load(Ordering::Relaxed);
+        if t <= b {
+            let key = self.buf[(b as usize) & self.mask].load(Ordering::Relaxed);
+            if t == b {
+                // last entry: race thieves for it
+                let won = self
+                    .top
+                    .0
+                    .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.0.store(b.wrapping_add(1), Ordering::Relaxed);
+                return won.then_some(key);
+            }
+            Some(key)
+        } else {
+            // already empty — undo the reservation
+            self.bottom.0.store(b.wrapping_add(1), Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief: take the oldest (top / high-priority) entry.
+    pub fn steal(&self) -> Steal {
+        let t = self.top.0.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.0.load(Ordering::Acquire);
+        if t < b {
+            let key = self.buf[(t as usize) & self.mask].load(Ordering::Relaxed);
+            if self
+                .top
+                .0
+                .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+                .is_err()
+            {
+                return Steal::Retry;
+            }
+            Steal::Success(key)
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Thief: the key currently exposed at the steal end, if any. A racy
+    /// hint — used only to rank victims; the subsequent [`steal`] CAS is
+    /// what actually claims an entry.
+    pub fn peek_top(&self) -> Option<u64> {
+        let t = self.top.0.load(Ordering::Acquire);
+        let b = self.bottom.0.load(Ordering::Acquire);
+        if t < b {
+            Some(self.buf[(t as usize) & self.mask].load(Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+
+    /// Entries currently buffered (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.0.load(Ordering::Acquire);
+        let t = self.top.0.load(Ordering::Acquire);
+        b.wrapping_sub(t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// CP-aware acquisition for executor `me`: pop the own deque's LIFO end,
+/// and when it is empty steal the **highest-priority exposed entry** across
+/// all victims ([`steal_highest`]). Returns the key and whether it was
+/// stolen; `None` when every deque looks empty.
+pub fn acquire(deques: &[WorkStealDeque], me: usize) -> Option<(u64, bool)> {
+    if let Some(key) = deques[me].pop() {
+        return Some((key, false));
+    }
+    steal_highest(deques, me).map(|key| (key, true))
+}
+
+/// The steal half of [`acquire`]: rank victims by their exposed top key
+/// (max [`WorkStealDeque::peek_top`]) and CAS the best away. A lost CAS
+/// (another thief got there first) rescans rather than giving up; the
+/// scan terminates because each rescan only happens after some other
+/// thread made progress. `None` when every victim looks empty.
+pub fn steal_highest(deques: &[WorkStealDeque], me: usize) -> Option<u64> {
+    loop {
+        let mut best: Option<(usize, u64)> = None;
+        for (v, d) in deques.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            if let Some(k) = d.peek_top() {
+                if best.map_or(true, |(_, bk)| k > bk) {
+                    best = Some((v, k));
+                }
+            }
+        }
+        let (victim, _) = best?;
+        match deques[victim].steal() {
+            Steal::Success(key) => return Some(key),
+            Steal::Retry | Steal::Empty => continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_pops_lifo() {
+        let d = WorkStealDeque::new(8);
+        d.push(1).unwrap();
+        d.push(2).unwrap();
+        d.push(3).unwrap();
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        d.push(4).unwrap();
+        assert_eq!(d.pop(), Some(4));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn thief_steals_fifo_end() {
+        let d = WorkStealDeque::new(8);
+        d.push(1).unwrap();
+        d.push(2).unwrap();
+        d.push(3).unwrap();
+        assert_eq!(d.peek_top(), Some(1));
+        assert_eq!(d.steal(), Steal::Success(1));
+        assert_eq!(d.steal(), Steal::Success(2));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.steal(), Steal::Empty);
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let d = WorkStealDeque::new(2);
+        assert_eq!(d.capacity(), 2);
+        d.push(1).unwrap();
+        d.push(2).unwrap();
+        assert_eq!(d.push(3), Err(3));
+        assert_eq!(d.steal(), Steal::Success(1));
+        d.push(3).unwrap();
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let d = WorkStealDeque::new(2);
+        for i in 0..1000u64 {
+            d.push(i).unwrap();
+            if i % 2 == 0 {
+                assert_eq!(d.pop(), Some(i));
+            } else {
+                assert_eq!(d.steal(), Steal::Success(i));
+            }
+        }
+        assert!(d.is_empty());
+        assert_eq!(d.len(), 0);
+    }
+
+    #[test]
+    fn acquire_prefers_local_then_highest_victim() {
+        let deques: Vec<WorkStealDeque> = (0..3).map(|_| WorkStealDeque::new(8)).collect();
+        deques[1].push(50).unwrap();
+        deques[2].push(99).unwrap();
+        deques[2].push(7).unwrap(); // bottom of deque 2; top stays 99
+        // own work first
+        deques[0].push(5).unwrap();
+        assert_eq!(acquire(&deques, 0), Some((5, false)));
+        // then the highest exposed top key across victims (99 on deque 2)
+        assert_eq!(acquire(&deques, 0), Some((99, true)));
+        assert_eq!(acquire(&deques, 0), Some((50, true)));
+        assert_eq!(acquire(&deques, 0), Some((7, true)));
+        assert_eq!(acquire(&deques, 0), None);
+        assert_eq!(steal_highest(&deques, 0), None);
+    }
+
+    #[test]
+    fn two_thieves_and_owner_account_every_entry_once() {
+        use std::sync::atomic::{AtomicBool, AtomicU64 as AU64};
+        let n = 100_000u64;
+        let d = WorkStealDeque::new(1024);
+        let produced_all = AtomicBool::new(false);
+        let sum = AU64::new(0);
+        let count = AU64::new(0);
+        std::thread::scope(|s| {
+            // two thieves drain the top
+            for _ in 0..2 {
+                s.spawn(|| loop {
+                    match d.steal() {
+                        Steal::Success(v) => {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if produced_all.load(Ordering::Acquire) && d.is_empty() {
+                                return;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            // the owner pushes 1..=n, popping occasionally
+            for i in 1..=n {
+                let mut key = i;
+                loop {
+                    match d.push(key) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            key = back;
+                            // full: help drain from the owner end
+                            if let Some(v) = d.pop() {
+                                sum.fetch_add(v, Ordering::Relaxed);
+                                count.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                if i % 7 == 0 {
+                    if let Some(v) = d.pop() {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        count.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            // drain the remainder from the owner end, then signal
+            while let Some(v) = d.pop() {
+                sum.fetch_add(v, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+            }
+            produced_all.store(true, Ordering::Release);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), n, "every entry taken exactly once");
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+    }
+}

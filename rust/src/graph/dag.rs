@@ -5,6 +5,8 @@
 //! directions, so the scheduler's hot loop — "which ops did completing `p`
 //! trigger?" — is a contiguous slice walk with no allocation.
 
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
 use super::op::OpKind;
 
 /// Node index into [`Graph::nodes`].
@@ -251,6 +253,70 @@ impl Graph {
     }
 }
 
+/// Shared atomic remaining-dependency counters over the graph's CSR
+/// successor layout — the decentralized-dispatch core.
+///
+/// Where [`crate::engine::ready::DepTracker`] is owned by a single
+/// scheduler thread, this tracker is shared by every executor: the thread
+/// that finishes op `n` walks `graph.succs(n)` (one contiguous CSR slice)
+/// and `fetch_sub`s each successor's counter, taking ownership of any
+/// successor it decrements to zero. Exactly one thread observes each
+/// counter hit zero, so each op is enqueued exactly once with no
+/// coordinator round-trip.
+///
+/// Quiescence is detected the same way: the thread whose completion
+/// decrements the remaining-op count to zero is the one that ends the run.
+#[derive(Debug)]
+pub struct AtomicDepTracker {
+    remaining_deps: Box<[AtomicU32]>,
+    remaining_ops: AtomicUsize,
+}
+
+impl AtomicDepTracker {
+    pub fn new(graph: &Graph) -> AtomicDepTracker {
+        let remaining_deps: Box<[AtomicU32]> = (0..graph.len() as NodeId)
+            .map(|v| AtomicU32::new(graph.in_degree(v) as u32))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        AtomicDepTracker { remaining_deps, remaining_ops: AtomicUsize::new(graph.len()) }
+    }
+
+    /// Mark `node` executed; invoke `on_ready` for each successor this
+    /// call decremented to zero (the caller now owns those ops). Returns
+    /// `true` iff `node` was the final unexecuted op of the graph — the
+    /// caller that sees `true` is responsible for signalling shutdown.
+    ///
+    /// `AcqRel` on both counters makes every predecessor's work
+    /// happen-before the `on_ready` (and the `true` return) that its final
+    /// decrement enables.
+    pub fn complete(
+        &self,
+        graph: &Graph,
+        node: NodeId,
+        mut on_ready: impl FnMut(NodeId),
+    ) -> bool {
+        for &s in graph.succs(node) {
+            let prev = self.remaining_deps[s as usize].fetch_sub(1, Ordering::AcqRel);
+            debug_assert!(prev > 0, "double trigger of node {s}");
+            if prev == 1 {
+                on_ready(s);
+            }
+        }
+        let prev_ops = self.remaining_ops.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev_ops > 0, "more completions than ops");
+        prev_ops == 1
+    }
+
+    /// Ops not yet completed (racy under concurrency; exact once quiesced).
+    pub fn remaining(&self) -> usize {
+        self.remaining_ops.load(Ordering::Acquire)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +407,57 @@ mod tests {
         assert!(g.validate_order(&[3, 1, 2, 0]).is_err());
         assert!(g.validate_order(&[0, 1, 2]).is_err()); // wrong length
         assert!(g.validate_order(&[0, 1, 1, 2]).is_err()); // dup
+    }
+
+    #[test]
+    fn atomic_dep_tracker_triggers_once_and_detects_quiescence() {
+        let g = diamond();
+        let t = AtomicDepTracker::new(&g);
+        assert_eq!(t.remaining(), 4);
+        let mut fired = Vec::new();
+        assert!(!t.complete(&g, 0, |n| fired.push(n)));
+        assert_eq!(fired, vec![1, 2], "sources' successors trigger immediately");
+        fired.clear();
+        assert!(!t.complete(&g, 1, |n| fired.push(n)));
+        assert!(fired.is_empty(), "d still blocked on c");
+        assert!(!t.complete(&g, 2, |n| fired.push(n)));
+        assert_eq!(fired, vec![3]);
+        assert!(t.complete(&g, 3, |_| {}), "final op must report quiescence");
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn atomic_dep_tracker_exactly_once_under_threads() {
+        // wide fan-in: 32 predecessors of one sink, completed from 4
+        // threads — the sink must trigger exactly once, and exactly one
+        // completion must observe quiescence
+        let mut b = GraphBuilder::new();
+        let preds: Vec<NodeId> = (0..32).map(|i| b.add(format!("p{i}"), OpKind::Scalar)).collect();
+        let sink = b.add_after("sink", OpKind::Scalar, &preds);
+        let g = b.build().unwrap();
+        let t = AtomicDepTracker::new(&g);
+        let triggered = std::sync::atomic::AtomicU32::new(0);
+        let finals = std::sync::atomic::AtomicU32::new(0);
+        std::thread::scope(|scope| {
+            for chunk in preds.chunks(8) {
+                let (t, g, triggered, finals) = (&t, &g, &triggered, &finals);
+                scope.spawn(move || {
+                    for &p in chunk {
+                        let mut hit = None;
+                        if t.complete(g, p, |n| hit = Some(n)) {
+                            finals.fetch_add(1, Ordering::SeqCst);
+                        }
+                        if let Some(n) = hit {
+                            assert_eq!(n, sink);
+                            triggered.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(triggered.load(Ordering::SeqCst), 1, "sink triggered exactly once");
+        assert_eq!(finals.load(Ordering::SeqCst), 0, "sink itself not yet completed");
+        assert!(t.complete(&g, sink, |_| panic!("sink has no successors")));
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod op;
 pub mod stats;
 
 pub use builder::GraphBuilder;
-pub use dag::{Graph, GraphError, NodeId};
+pub use dag::{AtomicDepTracker, Graph, GraphError, NodeId};
 pub use levels::{critical_path, levels};
 pub use memory::{plan as plan_memory, MemoryPlan};
 pub use op::{EwKind, OpKind};

@@ -14,8 +14,9 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::cost::machine::Machine;
 use crate::engine::autotune::{AutotuneReport, Autotuner};
-use crate::engine::SimEnv;
+use crate::engine::{DispatchMode, SimEnv};
 use crate::graph::Graph;
 use crate::util::json::{self, Json};
 
@@ -178,16 +179,43 @@ fn parse_manifest(doc: &Json) -> Result<Vec<Manifest>, ArtifactError> {
 
 /// Format version of persisted tuning artifacts. Bump on any schema change;
 /// readers reject other versions (and the caller re-searches).
-pub const TUNING_FORMAT_VERSION: u64 = 1;
+///
+/// v2 (PR 3): added the per-machine key (`machine_cores`,
+/// `machine_numa_domains`) and the dispatch-mode axis (`best_dispatch`,
+/// per-measurement `dispatch`). v1 artifacts degrade to a fresh search.
+pub const TUNING_FORMAT_VERSION: u64 = 2;
+
+/// The hardware identity a tuning result is valid for: physical core count
+/// and sub-NUMA clustering mode (quadrant = 1 domain, SNC-4 = 4). One
+/// tuning directory can serve a heterogeneous fleet — each machine loads
+/// only artifacts whose key matches its own, and degrades to a fresh
+/// search otherwise, exactly like a stale or foreign-version file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineKey {
+    pub cores: usize,
+    pub numa_domains: usize,
+}
+
+impl MachineKey {
+    pub fn of(machine: &Machine) -> MachineKey {
+        MachineKey { cores: machine.cores, numa_domains: machine.numa_domains }
+    }
+}
+
+impl std::fmt::Display for MachineKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}c/{}d", self.cores, self.numa_domains)
+    }
+}
 
 /// One halving round of the persisted search trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TuningRound {
     /// Per-candidate iterations added in this round.
     pub iterations: usize,
-    /// `(executors, threads_per, cumulative mean makespan µs)` for every
-    /// candidate alive in this round, best first.
-    pub measurements: Vec<(usize, usize, f64)>,
+    /// `(executors, threads_per, dispatch, cumulative mean makespan µs)`
+    /// for every candidate alive in this round, best first.
+    pub measurements: Vec<(usize, usize, DispatchMode, f64)>,
 }
 
 /// A persisted autotuning result: the winning parallel setting, the per-op
@@ -201,11 +229,16 @@ pub struct TuningArtifact {
     pub worker_cores: usize,
     /// Seed of the environment the search ran in.
     pub seed: u64,
+    /// The machine the search ran on; a different machine key invalidates
+    /// the artifact (its winner was tuned for other hardware).
+    pub machine: MachineKey,
     /// Node count of the tuned graph — a mismatching graph invalidates
     /// the artifact (durations are indexed by node id).
     pub graph_nodes: usize,
     /// Winning `(executors, threads_per)`.
     pub best: (usize, usize),
+    /// Winning dispatch architecture.
+    pub best_dispatch: DispatchMode,
     pub best_makespan_us: f64,
     /// Profiling iterations the search spent.
     pub total_profile_iterations: usize,
@@ -214,18 +247,35 @@ pub struct TuningArtifact {
     pub search_trace: Vec<TuningRound>,
 }
 
-/// Canonical on-disk location of a tuning artifact inside an artifact
-/// directory: `<dir>/tuning/<tag>.tuning.json`.
+/// Machine-agnostic on-disk location of a tuning artifact inside an
+/// artifact directory: `<dir>/tuning/<tag>.tuning.json`. Kept for
+/// single-machine setups and as the fallback read location; prefer
+/// [`tuning_path_for`], which keys the filename by machine so a shared
+/// tuning directory converges instead of different machines clobbering
+/// each other's results.
 pub fn tuning_path(dir: impl AsRef<Path>, tag: &str) -> PathBuf {
     dir.as_ref().join("tuning").join(format!("{tag}.tuning.json"))
 }
 
+/// Machine-keyed artifact location:
+/// `<dir>/tuning/<tag>.<cores>c<domains>d.tuning.json`. Machines with
+/// different keys read and write different files, so one tuning directory
+/// can genuinely serve a heterogeneous fleet (the in-file `machine` field
+/// stays as defense against hand-copied artifacts).
+pub fn tuning_path_for(dir: impl AsRef<Path>, tag: &str, machine: &MachineKey) -> PathBuf {
+    dir.as_ref().join("tuning").join(format!(
+        "{tag}.{}c{}d.tuning.json",
+        machine.cores, machine.numa_domains
+    ))
+}
+
 impl TuningArtifact {
-    /// Package an autotune report for persistence.
+    /// Package an autotune report for persistence. The environment supplies
+    /// the seed and the machine key the result is stamped with.
     pub fn from_report(
         tag: &str,
         graph_nodes: usize,
-        seed: u64,
+        env: &SimEnv,
         tuner: &Autotuner,
         report: &AutotuneReport,
     ) -> TuningArtifact {
@@ -233,9 +283,11 @@ impl TuningArtifact {
             version: TUNING_FORMAT_VERSION,
             tag: tag.to_string(),
             worker_cores: tuner.worker_cores,
-            seed,
+            seed: env.seed,
+            machine: MachineKey::of(&env.cost.machine),
             graph_nodes,
             best: report.best,
+            best_dispatch: report.best_dispatch,
             best_makespan_us: report.best_makespan_us,
             total_profile_iterations: report.total_profile_iterations,
             durations_us: report.durations_us.clone(),
@@ -247,7 +299,7 @@ impl TuningArtifact {
                     measurements: r
                         .measurements
                         .iter()
-                        .map(|m| (m.executors, m.threads_per, m.mean_makespan_us))
+                        .map(|m| (m.executors, m.threads_per, m.dispatch, m.mean_makespan_us))
                         .collect(),
                 })
                 .collect(),
@@ -257,6 +309,11 @@ impl TuningArtifact {
     /// Is this artifact applicable to a graph with `nodes` operations?
     pub fn matches_graph(&self, nodes: usize) -> bool {
         self.graph_nodes == nodes && self.durations_us.len() == nodes
+    }
+
+    /// Was this artifact tuned on hardware matching `machine`?
+    pub fn matches_machine(&self, machine: &Machine) -> bool {
+        self.machine == MachineKey::of(machine)
     }
 
     /// Critical-path level values from the persisted duration table.
@@ -277,9 +334,12 @@ impl TuningArtifact {
             .set("tag", self.tag.as_str())
             .set("worker_cores", self.worker_cores)
             .set("seed", self.seed)
+            .set("machine_cores", self.machine.cores)
+            .set("machine_numa_domains", self.machine.numa_domains)
             .set("graph_nodes", self.graph_nodes)
             .set("best_executors", self.best.0)
             .set("best_threads_per", self.best.1)
+            .set("best_dispatch", self.best_dispatch.name())
             .set("best_makespan_us", self.best_makespan_us)
             .set("total_profile_iterations", self.total_profile_iterations)
             .set(
@@ -295,10 +355,11 @@ impl TuningArtifact {
                 let ms: Vec<Json> = round
                     .measurements
                     .iter()
-                    .map(|&(e, t, mean)| {
+                    .map(|&(e, t, dispatch, mean)| {
                         let mut m = Json::obj();
                         m.set("executors", e)
                             .set("threads_per", t)
+                            .set("dispatch", dispatch.name())
                             .set("mean_makespan_us", mean);
                         m
                     })
@@ -337,6 +398,11 @@ impl TuningArtifact {
             .iter()
             .map(|d| d.as_f64().ok_or_else(|| bad("non-numeric duration")))
             .collect::<Result<_, _>>()?;
+        let dispatch_of = |v: Option<&Json>| -> Result<DispatchMode, ArtifactError> {
+            v.and_then(|d| d.as_str())
+                .and_then(DispatchMode::parse)
+                .ok_or_else(|| bad("missing or unknown `dispatch` mode"))
+        };
         let mut search_trace = Vec::new();
         if let Some(rounds) = doc.get("search_trace").and_then(|v| v.as_arr()) {
             for round in rounds {
@@ -359,6 +425,7 @@ impl TuningArtifact {
                     measurements.push((
                         field("executors")? as usize,
                         field("threads_per")? as usize,
+                        dispatch_of(m.get("dispatch"))?,
                         field("mean_makespan_us")?,
                     ));
                 }
@@ -370,8 +437,13 @@ impl TuningArtifact {
             tag,
             worker_cores: num("worker_cores")? as usize,
             seed: num("seed")? as u64,
+            machine: MachineKey {
+                cores: num("machine_cores")? as usize,
+                numa_domains: num("machine_numa_domains")? as usize,
+            },
             graph_nodes: num("graph_nodes")? as usize,
             best: (num("best_executors")? as usize, num("best_threads_per")? as usize),
+            best_dispatch: dispatch_of(doc.get("best_dispatch"))?,
             best_makespan_us: num("best_makespan_us")?,
             total_profile_iterations: num("total_profile_iterations")? as usize,
             durations_us,
@@ -416,9 +488,12 @@ pub enum TuneOutcome {
     FreshSearch,
 }
 
-/// Load a tuning artifact from `path` if it is valid for `graph`,
-/// otherwise run `tuner`'s successive-halving search and persist the
-/// result. Never panics on a bad artifact — that is the degrade path.
+/// Load a tuning artifact from `path` if it is valid for `graph` *and*
+/// was tuned on hardware matching `env`'s machine key, otherwise run
+/// `tuner`'s successive-halving search and persist the result. Never
+/// panics on a bad artifact — that is the degrade path, and a mismatched
+/// machine key degrades exactly like a stale or foreign-version file (one
+/// tuning directory can serve a heterogeneous fleet).
 pub fn autotune_or_load(
     path: impl AsRef<Path>,
     tag: &str,
@@ -428,8 +503,19 @@ pub fn autotune_or_load(
 ) -> (TuningArtifact, TuneOutcome) {
     let path = path.as_ref();
     match TuningArtifact::load(path) {
-        Ok(artifact) if artifact.matches_graph(graph.len()) => {
+        Ok(artifact)
+            if artifact.matches_graph(graph.len())
+                && artifact.matches_machine(&env.cost.machine) =>
+        {
             return (artifact, TuneOutcome::LoadedFromDisk);
+        }
+        Ok(artifact) if !artifact.matches_machine(&env.cost.machine) => {
+            crate::log_warn!(
+                "tuning artifact {} was tuned on {} but this machine is {}; re-searching",
+                path.display(),
+                artifact.machine,
+                MachineKey::of(&env.cost.machine)
+            );
         }
         Ok(artifact) => {
             crate::log_warn!(
@@ -445,7 +531,7 @@ pub fn autotune_or_load(
         }
     }
     let report = tuner.search(graph, env);
-    let artifact = TuningArtifact::from_report(tag, graph.len(), env.seed, tuner, &report);
+    let artifact = TuningArtifact::from_report(tag, graph.len(), env, tuner, &report);
     if let Err(e) = artifact.save(path) {
         crate::log_warn!("failed to persist tuning artifact {}: {e}", path.display());
     }
@@ -514,17 +600,25 @@ mod tests {
             tag: "lstm-small".to_string(),
             worker_cores: 64,
             seed: 42,
+            machine: MachineKey { cores: 68, numa_domains: 1 },
             graph_nodes: 4,
             best: (8, 8),
+            best_dispatch: DispatchMode::Decentralized,
             best_makespan_us: 1234.5,
             total_profile_iterations: 25,
             durations_us: vec![1.5, 2.25, 0.125, 7.0],
             search_trace: vec![
                 TuningRound {
                     iterations: 1,
-                    measurements: vec![(8, 8, 1250.0), (4, 16, 1400.0)],
+                    measurements: vec![
+                        (8, 8, DispatchMode::Decentralized, 1250.0),
+                        (4, 16, DispatchMode::Centralized, 1400.0),
+                    ],
                 },
-                TuningRound { iterations: 2, measurements: vec![(8, 8, 1234.5)] },
+                TuningRound {
+                    iterations: 2,
+                    measurements: vec![(8, 8, DispatchMode::Decentralized, 1234.5)],
+                },
             ],
         }
     }
@@ -573,6 +667,40 @@ mod tests {
             ArtifactError::BadTuning(_)
         ));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn machine_keyed_paths_do_not_collide() {
+        let a = MachineKey { cores: 68, numa_domains: 1 };
+        let b = MachineKey { cores: 28, numa_domains: 4 };
+        let pa = tuning_path_for("d", "t", &a);
+        assert_ne!(pa, tuning_path_for("d", "t", &b));
+        assert!(pa.to_string_lossy().ends_with("t.68c1d.tuning.json"), "{}", pa.display());
+        // distinct from the machine-agnostic legacy location
+        assert_ne!(pa, tuning_path("d", "t"));
+    }
+
+    #[test]
+    fn machine_key_gates_artifact_reuse() {
+        let a = sample_tuning();
+        let quadrant = Machine::knl7250();
+        assert_eq!(a.machine, MachineKey::of(&quadrant));
+        assert!(a.matches_machine(&quadrant));
+        // same part in SNC-4 (different NUMA layout) must not reuse it
+        assert!(!a.matches_machine(&Machine::knl7250_snc4()));
+        // neither must a differently-sized part
+        assert!(!a.matches_machine(&Machine::skylake8180()));
+        assert_eq!(format!("{}", a.machine), "68c/1d");
+    }
+
+    #[test]
+    fn v1_artifact_without_machine_key_rejected() {
+        // a v1-shaped document (no machine key, no dispatch fields) must
+        // fail to parse — the version gate fires first
+        let mut doc = sample_tuning().to_json();
+        doc.set("version", 1u64);
+        let err = TuningArtifact::from_json(&doc).unwrap_err();
+        assert!(matches!(err, ArtifactError::TuningVersion { found: 1, .. }));
     }
 
     #[test]

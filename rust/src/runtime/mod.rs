@@ -21,7 +21,8 @@ pub mod threaded;
 pub mod train;
 
 pub use artifacts::{
-    autotune_or_load, tuning_path, ArtifactSet, Manifest, TuneOutcome, TuningArtifact,
+    autotune_or_load, tuning_path, tuning_path_for, ArtifactSet, MachineKey, Manifest,
+    TuneOutcome, TuningArtifact,
 };
 pub use pjrt::{LoadedModule, PjrtRuntime};
 pub use threaded::ThreadedGraphi;

@@ -1,56 +1,80 @@
-//! The Graphi engine on *real* host threads.
+//! The Graphi engine on *real* host threads, in two dispatch architectures.
 //!
-//! Same architecture as §4/§5 — a centralized scheduler thread (here: the
-//! calling thread), a fleet of executor threads, per-executor SPSC
-//! operation buffers, and a **single bounded MPSC completion queue**
-//! flowing completions back (executors produce, the scheduler consumes) —
-//! with actual parallel execution of an arbitrary work function (the
-//! end-to-end example plugs PJRT executions in; tests use synthetic
-//! spin-work).
+//! **Centralized** (§4/§5, PR 1): a scheduler thread (here: the calling
+//! thread), a fleet of executor threads, per-executor SPSC operation
+//! buffers, and a single bounded MPSC completion queue flowing completions
+//! back. Every completion round-trips executor → queue → `DepTracker` →
+//! ready-heap → SPSC ring → executor, serializing dispatch on one thread.
 //!
-//! The completion queue replaces the seed design's per-executor "done
-//! rings": those forced the scheduler to scan every executor's ring on
-//! every loop iteration (O(executors) shared-cache-line loads even when
-//! idle). With one [`MpscQueue`], an idle poll is a single acquire load,
-//! completions drain in arrival order in batches, and dispatch fills each
-//! executor's operation buffer through the SPSC ring's batched push.
+//! **Decentralized** (PR 3, the default): the common case never touches a
+//! coordinator. Executors share the graph's CSR successor layout through an
+//! [`AtomicDepTracker`]; the executor finishing op `n` `fetch_sub`s each
+//! successor's remaining-deps counter and pushes newly-ready ops onto its
+//! own [`WorkStealDeque`] (packed CP-level keys). Local pops take the LIFO
+//! end for cache affinity; idle executors steal the highest-priority
+//! exposed entry across victims, preserving §4.3 CP-first semantics (see
+//! [`crate::engine::worksteal`] for the full argument). The calling thread
+//! degrades to a parker/watchdog: it seeds the source ops, waits for the
+//! quiescence signal (raised by whichever executor completes the final
+//! op), and collects the trace. Keeping both modes behind
+//! [`DispatchMode`] keeps them differentially testable
+//! (`tests/differential_engines.rs`).
 //!
 //! On this repo's 1-core CI machine the fleet cannot show parallel
-//! *speedup*; what it demonstrates is that the scheduler core (bitmap +
-//! heap + rings) is real concurrent code producing valid schedules, and it
-//! is the engine the paper's system would ship on real silicon.
+//! *speedup*; what it demonstrates is that both dispatch paths are real
+//! concurrent code producing valid schedules, and the decentralized path
+//! is the engine the paper's system would want once op rates outrun a
+//! single scheduler core.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::mpsc::MpscQueue;
 use crate::engine::policies::Policy;
-use crate::engine::ready::{DepTracker, ReadySet};
+use crate::engine::ready::{entry_node, pack_entry, DepTracker, ReadySet};
 use crate::engine::ring::SpscRing;
 use crate::engine::scheduler::IdleBitmap;
 use crate::engine::trace::OpRecord;
-use crate::graph::{Graph, NodeId};
+use crate::engine::worksteal::{self, WorkStealDeque};
+use crate::engine::DispatchMode;
+use crate::graph::{AtomicDepTracker, Graph, NodeId};
 
 /// Real-threads Graphi configuration.
 #[derive(Debug, Clone)]
 pub struct ThreadedGraphi {
     /// Executor threads to spawn.
     pub executors: usize,
-    /// Ready-op ordering.
+    /// Ready-op ordering (centralized mode; decentralized dispatch is
+    /// CP-first by construction).
     pub policy: Policy,
-    /// Per-executor operation buffer depth (§5.2 uses 1).
+    /// Per-executor operation buffer depth (§5.2 uses 1; centralized mode).
     pub buffer_depth: usize,
+    /// Completion-resolution architecture.
+    pub dispatch: DispatchMode,
 }
 
 impl ThreadedGraphi {
     pub fn new(executors: usize) -> ThreadedGraphi {
-        ThreadedGraphi { executors, policy: Policy::CriticalPathFirst, buffer_depth: 1 }
+        ThreadedGraphi {
+            executors,
+            policy: Policy::CriticalPathFirst,
+            buffer_depth: 1,
+            dispatch: DispatchMode::Decentralized,
+        }
     }
 
-    /// Fleet shape from a persisted tuning artifact (the autotuner's
-    /// winning executor count).
+    pub fn with_dispatch(mut self, dispatch: DispatchMode) -> ThreadedGraphi {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// Fleet shape (and dispatch mode) from a persisted tuning artifact.
     pub fn from_tuning(tuning: &crate::runtime::artifacts::TuningArtifact) -> ThreadedGraphi {
-        ThreadedGraphi::new(tuning.best.0.max(1))
+        ThreadedGraphi {
+            dispatch: tuning.best_dispatch,
+            ..ThreadedGraphi::new(tuning.best.0.max(1))
+        }
     }
 }
 
@@ -61,20 +85,36 @@ pub struct ThreadedRunResult {
     pub wall_us: f64,
     /// Per-op records (wall-clock µs since run start).
     pub records: Vec<OpRecord>,
-    /// Scheduler dispatch count.
+    /// Dispatch decisions (centralized: scheduler pushes; decentralized:
+    /// local pops + steals).
     pub dispatches: u64,
+    /// Decentralized mode: ops acquired by stealing (0 when centralized).
+    pub steals: u64,
 }
 
 impl ThreadedGraphi {
     /// Execute `graph`, calling `work(node)` for each op on some executor
     /// thread, dependencies respected. `levels` orders ready ops (pass
-    /// profiled level values, or unit levels).
-    pub fn run<F>(&self, graph: &Graph, levels: &[f64], work: F) -> ThreadedRunResult
+    /// profiled level values, or unit levels); `Vec` callers move, `Arc`
+    /// callers share — no per-run O(nodes) copy either way.
+    pub fn run<F>(&self, graph: &Graph, levels: impl Into<Arc<[f64]>>, work: F) -> ThreadedRunResult
     where
         F: Fn(NodeId) + Send + Sync,
     {
+        let levels: Arc<[f64]> = levels.into();
         assert_eq!(levels.len(), graph.len());
         assert!(self.executors >= 1);
+        match self.dispatch {
+            DispatchMode::Centralized => self.run_centralized(graph, &levels, &work),
+            DispatchMode::Decentralized => self.run_decentralized(graph, &levels, &work),
+        }
+    }
+
+    /// The PR-1 architecture: central scheduler on the calling thread.
+    fn run_centralized<F>(&self, graph: &Graph, levels: &Arc<[f64]>, work: &F) -> ThreadedRunResult
+    where
+        F: Fn(NodeId) + Send + Sync,
+    {
         let n_exec = self.executors;
         let op_rings: Vec<SpscRing<NodeId>> =
             (0..n_exec).map(|_| SpscRing::new(self.buffer_depth)).collect();
@@ -130,7 +170,7 @@ impl ThreadedGraphi {
             // while the current one runs, and no deeper (avoiding the load
             // imbalance §5.2 observed with larger buffers).
             let mut deps = DepTracker::new(graph);
-            let mut ready = ReadySet::new(self.policy, levels, 0);
+            let mut ready = ReadySet::new(self.policy, Arc::clone(levels), 0);
             let mut available = IdleBitmap::new(n_exec);
             let mut inflight = vec![0usize; n_exec];
             let mut completions: Vec<(u32, NodeId)> = Vec::with_capacity(n_exec * 2 + 8);
@@ -187,7 +227,131 @@ impl ThreadedGraphi {
         let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        ThreadedRunResult { wall_us, records, dispatches }
+        ThreadedRunResult { wall_us, records, dispatches, steals: 0 }
+    }
+
+    /// PR-3 architecture: executor-side successor resolution + CP-aware
+    /// work stealing. No scheduler loop exists; the calling thread only
+    /// seeds the sources, parks until the quiescence flag (raised by the
+    /// executor that completes the final op), and merges the trace.
+    fn run_decentralized<F>(&self, graph: &Graph, levels: &[f64], work: &F) -> ThreadedRunResult
+    where
+        F: Fn(NodeId) + Send + Sync,
+    {
+        // decentralized dispatch is CP-first by construction and buffers
+        // through the deques, so `policy`/`buffer_depth` have no effect
+        // here — surface a misconfiguration instead of ignoring it
+        debug_assert!(
+            matches!(self.policy, Policy::CriticalPathFirst),
+            "policy {:?} is ignored by DispatchMode::Decentralized (CP-first by construction); \
+             use DispatchMode::Centralized for alternative policies",
+            self.policy
+        );
+        let n_exec = self.executors;
+        let deps = AtomicDepTracker::new(graph);
+        // each deque could in the worst case hold every op; sizing them so
+        // guarantees pushes never fail (each op is enqueued exactly once)
+        let deques: Vec<WorkStealDeque> =
+            (0..n_exec).map(|_| WorkStealDeque::new(graph.len())).collect();
+        let done = AtomicBool::new(false);
+
+        // Startup (coordinator duty #1): seed sources round-robin, in
+        // ascending key order so every deque's LIFO end starts at its
+        // highest-priority seed.
+        let mut sources = graph.sources();
+        sources.sort_unstable_by_key(|&s| pack_entry(levels[s as usize], s));
+        for (i, &s) in sources.iter().enumerate() {
+            deques[i % n_exec]
+                .push(pack_entry(levels[s as usize], s))
+                .expect("deque sized for the whole graph");
+        }
+        let t0 = Instant::now();
+
+        let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
+        let mut dispatches = 0u64;
+        let mut steals = 0u64;
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_exec);
+            for e in 0..n_exec {
+                let deques = &deques[..];
+                let deps = &deps;
+                let done = &done;
+                let work = &work;
+                handles.push(scope.spawn(move || {
+                    let mut records = Vec::new();
+                    let mut my_dispatches = 0u64;
+                    let mut my_steals = 0u64;
+                    let mut batch: Vec<u64> = Vec::new();
+                    let mut spins = 0u32;
+                    loop {
+                        match worksteal::acquire(deques, e) {
+                            Some((key, stolen)) => {
+                                spins = 0;
+                                my_dispatches += 1;
+                                if stolen {
+                                    my_steals += 1;
+                                }
+                                let node = entry_node(key);
+                                let start = t0.elapsed().as_secs_f64() * 1e6;
+                                work(node);
+                                let end = t0.elapsed().as_secs_f64() * 1e6;
+                                records.push(OpRecord {
+                                    node,
+                                    executor: e as u32,
+                                    start_us: start,
+                                    end_us: end,
+                                });
+                                // The tentpole: resolve successors right
+                                // here — fetch_sub over the CSR slice, push
+                                // the newly-ready ops onto the own deque
+                                // (ascending, so the LIFO end is the
+                                // batch's highest-level op).
+                                batch.clear();
+                                let last = deps.complete(graph, node, |s| {
+                                    batch.push(pack_entry(levels[s as usize], s));
+                                });
+                                batch.sort_unstable();
+                                for &k in &batch {
+                                    deques[e].push(k).expect("deque sized for the whole graph");
+                                }
+                                if last {
+                                    // quiescence: this completion was the
+                                    // graph's final op
+                                    done.store(true, Ordering::Release);
+                                }
+                            }
+                            None => {
+                                if done.load(Ordering::Acquire) {
+                                    return (records, my_dispatches, my_steals);
+                                }
+                                spins += 1;
+                                if spins < 64 {
+                                    std::hint::spin_loop();
+                                } else {
+                                    spins = 0;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                }));
+            }
+            // Parker/watchdog: joining *is* the quiescence wait — each
+            // executor returns only after the done flag is raised.
+            for h in handles {
+                let (records, d, s) = h.join().expect("executor thread panicked");
+                all_records.push(records);
+                dispatches += d;
+                steals += s;
+            }
+        });
+        debug_assert!(deps.is_done(), "threads exited with unexecuted ops");
+
+        let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
+        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+        ThreadedRunResult { wall_us, records, dispatches, steals }
     }
 
     /// Execute `graph` with critical-path levels derived from a tuning
@@ -209,7 +373,7 @@ impl ThreadedGraphi {
             graph.len()
         );
         let levels = crate::graph::levels(graph, &tuning.durations_us);
-        self.run(graph, &levels, work)
+        self.run(graph, levels, work)
     }
 }
 
@@ -221,54 +385,74 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn executes_every_op_exactly_once() {
+    fn executes_every_op_exactly_once_in_both_modes() {
         let g = mlp(&MlpConfig::default());
-        let counter = AtomicU64::new(0);
-        let engine = ThreadedGraphi::new(3);
-        let result = engine.run(&g, &vec![1.0; g.len()], |_n| {
-            counter.fetch_add(1, Ordering::Relaxed);
-        });
-        assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
-        assert_eq!(result.records.len(), g.len());
-        assert_eq!(result.dispatches, g.len() as u64);
+        for mode in DispatchMode::ALL {
+            let counter = AtomicU64::new(0);
+            let engine = ThreadedGraphi::new(3).with_dispatch(mode);
+            let result = engine.run(&g, vec![1.0; g.len()], |_n| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64, "{}", mode.name());
+            assert_eq!(result.records.len(), g.len(), "{}", mode.name());
+            assert_eq!(result.dispatches, g.len() as u64, "{}", mode.name());
+        }
     }
 
     #[test]
     fn respects_dependencies_under_real_concurrency() {
         // Record completion order with an atomic clock and verify
-        // topological consistency — on real threads, with 4 executors.
+        // topological consistency — on real threads, with 4 executors,
+        // in both dispatch modes.
         let g = models::build(ModelKind::PathNet, ModelSize::Small);
-        let clock = AtomicU64::new(0);
-        let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
-        let engine = ThreadedGraphi::new(4);
-        engine.run(&g, &vec![1.0; g.len()], |n| {
-            // simulate a little work to widen race windows
-            for _ in 0..100 {
-                std::hint::spin_loop();
-            }
-            let t = clock.fetch_add(1, Ordering::SeqCst);
-            stamp[n as usize].store(t, Ordering::SeqCst);
-        });
-        for v in 0..g.len() as NodeId {
-            for &p in g.preds(v) {
-                let tp = stamp[p as usize].load(Ordering::SeqCst);
-                let tv = stamp[v as usize].load(Ordering::SeqCst);
-                assert!(tp < tv, "dep violated: {p} (t={tp}) vs {v} (t={tv})");
+        for mode in DispatchMode::ALL {
+            let clock = AtomicU64::new(0);
+            let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
+            let engine = ThreadedGraphi::new(4).with_dispatch(mode);
+            engine.run(&g, vec![1.0; g.len()], |n| {
+                // simulate a little work to widen race windows
+                for _ in 0..100 {
+                    std::hint::spin_loop();
+                }
+                let t = clock.fetch_add(1, Ordering::SeqCst);
+                stamp[n as usize].store(t, Ordering::SeqCst);
+            });
+            for v in 0..g.len() as NodeId {
+                for &p in g.preds(v) {
+                    let tp = stamp[p as usize].load(Ordering::SeqCst);
+                    let tv = stamp[v as usize].load(Ordering::SeqCst);
+                    assert!(tp < tv, "{}: dep violated: {p} (t={tp}) vs {v} (t={tv})", mode.name());
+                }
             }
         }
     }
 
     #[test]
+    fn decentralized_accounts_steals() {
+        // a wide graph on several executors: steal counts must be
+        // consistent (≤ dispatches) and every op still runs exactly once
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let counter = AtomicU64::new(0);
+        let result = ThreadedGraphi::new(4).run(&g, vec![1.0; g.len()], |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
+        assert!(result.steals <= result.dispatches);
+    }
+
+    #[test]
     fn run_tuned_uses_artifact_fleet_and_durations() {
-        use crate::runtime::artifacts::{TuningArtifact, TUNING_FORMAT_VERSION};
+        use crate::runtime::artifacts::{MachineKey, TuningArtifact, TUNING_FORMAT_VERSION};
         let g = mlp(&MlpConfig::default());
         let tuning = TuningArtifact {
             version: TUNING_FORMAT_VERSION,
             tag: "mlp-test".to_string(),
             worker_cores: 64,
             seed: 0,
+            machine: MachineKey { cores: 68, numa_domains: 1 },
             graph_nodes: g.len(),
             best: (3, 21),
+            best_dispatch: DispatchMode::Decentralized,
             best_makespan_us: 1.0,
             total_profile_iterations: 1,
             durations_us: vec![2.0; g.len()],
@@ -276,6 +460,7 @@ mod tests {
         };
         let engine = ThreadedGraphi::from_tuning(&tuning);
         assert_eq!(engine.executors, 3);
+        assert_eq!(engine.dispatch, DispatchMode::Decentralized);
         let counter = AtomicU64::new(0);
         let result = engine.run_tuned(&g, &tuning, |_| {
             counter.fetch_add(1, Ordering::Relaxed);
@@ -285,17 +470,35 @@ mod tests {
     }
 
     #[test]
-    fn single_executor_works() {
+    fn single_executor_works_in_both_modes() {
         let g = mlp(&MlpConfig::default());
-        let engine = ThreadedGraphi::new(1);
-        let result = engine.run(&g, &vec![1.0; g.len()], |_| {});
-        assert_eq!(result.records.len(), g.len());
+        for mode in DispatchMode::ALL {
+            let engine = ThreadedGraphi::new(1).with_dispatch(mode);
+            let result = engine.run(&g, vec![1.0; g.len()], |_| {});
+            assert_eq!(result.records.len(), g.len(), "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn shared_levels_are_not_copied_per_run() {
+        // Arc-typed levels flow through without cloning the slice
+        let g = mlp(&MlpConfig::default());
+        let levels: Arc<[f64]> = vec![1.0; g.len()].into();
+        let engine = ThreadedGraphi::new(2);
+        for _ in 0..3 {
+            let r = engine.run(&g, Arc::clone(&levels), |_| {});
+            assert_eq!(r.records.len(), g.len());
+        }
+        // borrowed slices still accepted (one copy, at the caller's choice)
+        let r = engine.run(&g, &levels[..], |_| {});
+        assert_eq!(r.records.len(), g.len());
     }
 
     #[test]
     fn cp_first_orders_by_level_on_single_executor() {
-        // with 1 executor and depth-1 buffering, dispatch order follows
-        // level priority among simultaneously-ready ops
+        // with 1 executor, dispatch order among simultaneously-ready ops
+        // follows level priority — in centralized mode via the ready-heap,
+        // in decentralized mode via the ascending-key seed order
         use crate::graph::op::OpKind;
         use crate::graph::GraphBuilder;
         let mut b = GraphBuilder::new();
@@ -305,11 +508,13 @@ mod tests {
         let g = b.build().unwrap();
         // levels make node 2 hottest, then 0, then 1
         let levels = vec![5.0, 1.0, 9.0];
-        let order = std::sync::Mutex::new(Vec::new());
-        ThreadedGraphi::new(1).run(&g, &levels, |n| {
-            order.lock().unwrap().push(n);
-        });
-        let order = order.into_inner().unwrap();
-        assert_eq!(order, vec![2, 0, 1]);
+        for mode in DispatchMode::ALL {
+            let order = std::sync::Mutex::new(Vec::new());
+            ThreadedGraphi::new(1).with_dispatch(mode).run(&g, levels.clone(), |n| {
+                order.lock().unwrap().push(n);
+            });
+            let order = order.into_inner().unwrap();
+            assert_eq!(order, vec![2, 0, 1], "{}", mode.name());
+        }
     }
 }

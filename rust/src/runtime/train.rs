@@ -18,7 +18,7 @@ use std::path::Path;
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
-use super::artifacts::{tuning_path, ArtifactSet, TuningArtifact};
+use super::artifacts::{tuning_path, tuning_path_for, ArtifactSet, MachineKey, TuningArtifact};
 use super::pjrt::{LoadedModule, PjrtRuntime};
 
 /// Tuning-artifact tag the training pipeline looks for in the artifact
@@ -34,8 +34,23 @@ pub const DEFAULT_TRAIN_PARALLELISM: (usize, usize) = (1, 64);
 /// missing artifacts mean "no setting" — callers fall back to
 /// [`DEFAULT_TRAIN_PARALLELISM`], they never fail.
 pub fn load_parallel_setting(dir: impl AsRef<Path>) -> Option<(usize, usize)> {
-    let path = tuning_path(dir, TRAIN_TUNING_TAG);
+    // prefer the machine-keyed filename (the training pipeline models the
+    // paper's KNL quadrant part), fall back to the legacy location
+    let machine = crate::cost::machine::Machine::knl7250();
+    let keyed = tuning_path_for(&dir, TRAIN_TUNING_TAG, &MachineKey::of(&machine));
+    let path = if keyed.is_file() { keyed } else { tuning_path(&dir, TRAIN_TUNING_TAG) };
     match TuningArtifact::load(&path) {
+        // same guard as the CLI run path: an artifact hand-copied from a
+        // differently-shaped machine is "no setting", not a setting
+        Ok(t) if !t.matches_machine(&machine) => {
+            crate::log_warn!(
+                "tuning artifact {} was tuned on {} but this machine is {}; ignoring",
+                path.display(),
+                t.machine,
+                MachineKey::of(&machine)
+            );
+            None
+        }
         Ok(t) => {
             crate::log_info!(
                 "parallel setting {}x{} from tuning artifact {}",
@@ -261,7 +276,8 @@ mod tests {
 
     #[test]
     fn parallel_setting_loads_from_tuning_artifact() {
-        use crate::runtime::artifacts::{TuningArtifact, TUNING_FORMAT_VERSION};
+        use crate::engine::DispatchMode;
+        use crate::runtime::artifacts::{MachineKey, TuningArtifact, TUNING_FORMAT_VERSION};
         let dir = std::env::temp_dir()
             .join(format!("graphi-train-tuning-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -272,8 +288,10 @@ mod tests {
             tag: TRAIN_TUNING_TAG.to_string(),
             worker_cores: 64,
             seed: 1,
+            machine: MachineKey { cores: 68, numa_domains: 1 },
             graph_nodes: 2,
             best: (8, 8),
+            best_dispatch: DispatchMode::Centralized,
             best_makespan_us: 10.0,
             total_profile_iterations: 5,
             durations_us: vec![1.0, 2.0],
@@ -284,6 +302,14 @@ mod tests {
         // corrupt → None, not a panic
         std::fs::write(tuning_path(&dir, TRAIN_TUNING_TAG), "garbage").unwrap();
         assert_eq!(load_parallel_setting(&dir), None);
+        // a machine-keyed artifact wins over the (corrupt) legacy file
+        let keyed = tuning_path_for(
+            &dir,
+            TRAIN_TUNING_TAG,
+            &MachineKey { cores: 68, numa_domains: 1 },
+        );
+        TuningArtifact { best: (4, 16), ..artifact.clone() }.save(&keyed).unwrap();
+        assert_eq!(load_parallel_setting(&dir), Some((4, 16)));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

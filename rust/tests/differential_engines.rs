@@ -21,8 +21,8 @@
 //! `testkit::check` (set `GRAPHI_TEST_SEED` to reproduce).
 
 use graphi::engine::{
-    DynamicFleetEngine, Engine, GraphiEngine, HeterogeneousEngine, NaiveEngine, RunResult,
-    SequentialEngine, SimEnv, TensorFlowLikeEngine,
+    DispatchMode, DynamicFleetEngine, Engine, GraphiEngine, HeterogeneousEngine, NaiveEngine,
+    RunResult, SequentialEngine, SimEnv, TensorFlowLikeEngine,
 };
 use graphi::graph::op::{EwKind, OpKind};
 use graphi::graph::{Graph, GraphBuilder};
@@ -50,13 +50,15 @@ fn graph_of(case: &DagCase) -> Graph {
     b.build().expect("testkit DAGs are acyclic by construction")
 }
 
-/// All six engines at comparable scale. Sequential runs one 8-thread
+/// All engines at comparable scale. Sequential runs one 8-thread
 /// executor; the matched-team parallel engines split the same team size
-/// across 4 executors.
+/// across 4 executors. Graphi appears in both dispatch modes so the
+/// centralized and decentralized schedulers stay differentially testable.
 fn engines() -> Vec<Box<dyn Engine>> {
     vec![
         Box::new(SequentialEngine::new(8)),
         Box::new(GraphiEngine::new(4, 8)),
+        Box::new(GraphiEngine::new(4, 8).with_dispatch(DispatchMode::Decentralized)),
         Box::new(NaiveEngine::new(4, 8)),
         Box::new(TensorFlowLikeEngine::new(4, 8)),
         Box::new(DynamicFleetEngine::new((4, 8), (8, 4))),
@@ -142,11 +144,40 @@ fn prop_parallel_makespan_never_exceeds_own_serialization() {
 }
 
 #[test]
+fn prop_both_dispatch_modes_agree_on_random_dags() {
+    // the PR-3 acceptance invariant: centralized and decentralized Graphi
+    // run the same random DAGs and must agree on the *semantics* — every
+    // op exactly once, dependency order respected, and each mode's
+    // makespan within its own serialization bound (parallelism + stealing
+    // may only overlap work, never invent time)
+    let gen = DagGen::default();
+    let env = SimEnv::knl_deterministic();
+    check("centralized ≡ decentralized semantics", &gen, 40, |case| {
+        let g = graph_of(case);
+        for mode in DispatchMode::ALL {
+            let engine = GraphiEngine::new(4, 8).with_dispatch(mode);
+            let r = engine.run(&g, &env);
+            exactly_once(&g, &r).map_err(|e| format!("{}: {e}", engine.name()))?;
+            r.validate(&g).map_err(|e| format!("{}: {e}", engine.name()))?;
+            let bound = serialization_bound(&env, &r);
+            if r.makespan_us > bound {
+                return Err(format!(
+                    "{}: makespan {} exceeds own serialization bound {bound}",
+                    engine.name(),
+                    r.makespan_us
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_matched_team_parallel_never_exceeds_sequential() {
-    // graphi/naive/dynamic at 8-thread teams price each op exactly like
-    // the 8-thread sequential engine, so overlapping can only help; the
-    // allowance covers their accounted overheads (dynamic's team resize
-    // lands in contention_us) plus scheduling costs.
+    // graphi (both dispatch modes)/naive/dynamic at 8-thread teams price
+    // each op exactly like the 8-thread sequential engine, so overlapping
+    // can only help; the allowance covers their accounted overheads
+    // (dynamic's team resize lands in contention_us) plus scheduling costs.
     let gen = DagGen::default();
     let env = SimEnv::knl_deterministic();
     check("parallel ≤ matched sequential", &gen, 40, |case| {
@@ -154,6 +185,7 @@ fn prop_matched_team_parallel_never_exceeds_sequential() {
         let seq = SequentialEngine::new(8).run(&g, &env).makespan_us;
         let parallel: Vec<Box<dyn Engine>> = vec![
             Box::new(GraphiEngine::new(4, 8)),
+            Box::new(GraphiEngine::new(4, 8).with_dispatch(DispatchMode::Decentralized)),
             Box::new(NaiveEngine::new(4, 8)),
             Box::new(DynamicFleetEngine::new((4, 8), (8, 4))),
         ];

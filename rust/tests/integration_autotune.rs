@@ -4,17 +4,28 @@
 //! invocation must load the persisted tuning artifact without
 //! re-searching.
 
-use graphi::engine::{Autotuner, Engine, GraphiEngine, Profiler, SimEnv};
+use graphi::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv};
 use graphi::models::{self, ModelKind, ModelSize};
 use graphi::runtime::artifacts::{
-    autotune_or_load, tuning_path, ArtifactError, TuneOutcome, TuningArtifact,
+    autotune_or_load, tuning_path, ArtifactError, MachineKey, TuneOutcome, TuningArtifact,
 };
 
-/// The §7.3 extras both search strategies seed in (9 candidates total).
+/// The §7.3 extras both search strategies seed in (9 fleet shapes).
 const EXTRAS: [(usize, usize); 2] = [(3, 21), (6, 10)];
 
+/// The PR-3 default: 9 fleet shapes × 2 dispatch modes.
 fn tuner() -> Autotuner {
     Autotuner { extra_configs: EXTRAS.to_vec(), ..Default::default() }
+}
+
+/// The PR-2 search: same fleet shapes, centralized dispatch only — what
+/// the flat profiler sweep is an apples-to-apples baseline for.
+fn centralized_tuner() -> Autotuner {
+    Autotuner {
+        extra_configs: EXTRAS.to_vec(),
+        dispatch_modes: vec![DispatchMode::Centralized],
+        ..Default::default()
+    }
 }
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
@@ -26,9 +37,11 @@ fn tmpdir(tag: &str) -> std::path::PathBuf {
 
 #[test]
 fn search_within_5pct_of_exhaustive_with_strictly_fewer_iterations() {
+    // centralized axis only: the flat sweep baseline only measures
+    // centralized configs, so that is the fair iteration comparison
     let g = models::build(ModelKind::Lstm, ModelSize::Small);
     let env = SimEnv::knl_deterministic();
-    let report = tuner().search(&g, &env);
+    let report = centralized_tuner().search(&g, &env);
 
     // the flat §4.2 sweep at its default fidelity (3 iterations/candidate)
     let profiler = Profiler { iterations: 3, worker_cores: 64, extra_configs: EXTRAS.to_vec() };
@@ -43,12 +56,16 @@ fn search_within_5pct_of_exhaustive_with_strictly_fewer_iterations() {
     // …and also fewer than an exhaustive sweep at the search's own final fidelity
     assert!(report.total_profile_iterations < report.exhaustive_equivalent_iterations());
 
-    let found = GraphiEngine::new(report.best.0, report.best.1).run(&g, &env).makespan_us;
+    let found = GraphiEngine::new(report.best.0, report.best.1)
+        .with_dispatch(report.best_dispatch)
+        .run(&g, &env)
+        .makespan_us;
     let sweep = GraphiEngine::new(exhaustive.best.0, exhaustive.best.1).run(&g, &env).makespan_us;
     assert!(
         found <= sweep * 1.05,
-        "search best {:?} ({found} µs) not within 5% of exhaustive best {:?} ({sweep} µs)",
+        "search best {:?}/{} ({found} µs) not within 5% of exhaustive best {:?} ({sweep} µs)",
         report.best,
+        report.best_dispatch.name(),
         exhaustive.best
     );
 }
@@ -62,11 +79,14 @@ fn noisy_search_stays_close_to_the_true_optimum() {
     let g = models::build(ModelKind::PathNet, ModelSize::Small);
     let report = tuner().search(&g, &SimEnv::knl(42));
     let det = SimEnv::knl_deterministic();
-    let found = GraphiEngine::new(report.best.0, report.best.1).run(&g, &det).makespan_us;
+    let found = GraphiEngine::new(report.best.0, report.best.1)
+        .with_dispatch(report.best_dispatch)
+        .run(&g, &det)
+        .makespan_us;
     let optimum = tuner()
-        .candidates()
+        .candidate_space()
         .into_iter()
-        .map(|(e, t)| GraphiEngine::new(e, t).run(&g, &det).makespan_us)
+        .map(|((e, t), d)| GraphiEngine::new(e, t).with_dispatch(d).run(&g, &det).makespan_us)
         .fold(f64::INFINITY, f64::min);
     assert!(
         found <= optimum * 1.15,
@@ -121,5 +141,58 @@ fn corrupt_stale_or_missing_artifacts_degrade_to_fresh_search() {
     let (_, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
     assert_eq!(outcome, TuneOutcome::FreshSearch, "stale artifact must trigger a re-search");
 
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn foreign_machine_key_degrades_to_fresh_search() {
+    // one tuning dir, two "machines": an artifact tuned under a different
+    // (cores, SNC) key must not be reused — it degrades to a fresh search
+    // that re-stamps the file with the local key
+    let g = models::build(ModelKind::Mlp, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let dir = tmpdir("machine-key");
+    let path = tuning_path(&dir, "mlp-small");
+
+    let (first, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch);
+    assert_eq!(first.machine, MachineKey::of(&env.cost.machine));
+
+    // forge an artifact from a foreign machine (same graph, other hardware)
+    let foreign = TuningArtifact {
+        machine: MachineKey { cores: 28, numa_domains: 4 },
+        ..first.clone()
+    };
+    foreign.save(&path).unwrap();
+    let (second, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch, "foreign machine key must re-search");
+    assert_eq!(second.machine, MachineKey::of(&env.cost.machine));
+    // the re-search overwrote the foreign artifact, so a third call loads
+    let (_, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::LoadedFromDisk);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn dispatch_mode_is_part_of_the_persisted_winner() {
+    let g = models::build(ModelKind::Mlp, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let dir = tmpdir("dispatch-axis");
+    let path = tuning_path(&dir, "mlp-small");
+    let (artifact, _) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert!(DispatchMode::ALL.contains(&artifact.best_dispatch));
+    // the search trace records which mode each surviving candidate ran under
+    let modes: std::collections::BTreeSet<&str> = artifact
+        .search_trace
+        .iter()
+        .flat_map(|r| r.measurements.iter().map(|&(_, _, d, _)| d.name()))
+        .collect();
+    assert!(
+        modes.contains("centralized") && modes.contains("decentralized"),
+        "both axes must appear in the trace: {modes:?}"
+    );
+    let reloaded = TuningArtifact::load(&path).unwrap();
+    assert_eq!(reloaded, artifact);
     std::fs::remove_dir_all(&dir).unwrap();
 }

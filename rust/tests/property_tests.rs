@@ -504,3 +504,99 @@ fn prop_testkit_shrinker_sane() {
         Ok(())
     });
 }
+
+/// Reference model for the work-stealing deque: a `VecDeque` where the
+/// owner pushes/pops at the back (LIFO) and thieves take from the front
+/// (the high-priority/FIFO end). Single-threaded, so the deque must agree
+/// with the model exactly, operation by operation.
+#[test]
+fn prop_worksteal_deque_matches_vecdeque_reference() {
+    use graphi::engine::worksteal::{Steal, WorkStealDeque};
+    use graphi::util::testkit::VecOf;
+    use std::collections::VecDeque;
+
+    // command stream: 0..=5 → push (values from a counter), 6..=8 → owner
+    // pop, 9..=11 → steal, biased toward pushes so the deque fills up and
+    // wraps
+    let gen = VecOf { inner: UsizeRange(0, 11), min_len: 1, max_len: 400 };
+    check("worksteal deque vs VecDeque reference", &gen, 60, |cmds| {
+        let capacity = 16usize;
+        let deque = WorkStealDeque::new(capacity);
+        let mut reference: VecDeque<u64> = VecDeque::new();
+        let mut next_value = 1u64;
+        for (step, &cmd) in cmds.iter().enumerate() {
+            match cmd {
+                0..=5 => {
+                    let v = next_value;
+                    next_value += 1;
+                    let pushed = deque.push(v).is_ok();
+                    let ref_pushed = reference.len() < deque.capacity();
+                    if pushed != ref_pushed {
+                        return Err(format!(
+                            "step {step}: push({v}) accepted={pushed}, reference={ref_pushed}"
+                        ));
+                    }
+                    if ref_pushed {
+                        reference.push_back(v);
+                    }
+                }
+                6..=8 => {
+                    let got = deque.pop();
+                    let want = reference.pop_back();
+                    if got != want {
+                        return Err(format!("step {step}: pop = {got:?}, reference = {want:?}"));
+                    }
+                }
+                _ => {
+                    let got = match deque.steal() {
+                        Steal::Success(v) => Some(v),
+                        Steal::Empty => None,
+                        Steal::Retry => {
+                            return Err(format!(
+                                "step {step}: Retry without concurrency"
+                            ))
+                        }
+                    };
+                    let want = reference.pop_front();
+                    if got != want {
+                        return Err(format!("step {step}: steal = {got:?}, reference = {want:?}"));
+                    }
+                }
+            }
+            if deque.len() != reference.len() {
+                return Err(format!(
+                    "step {step}: len {} vs reference {}",
+                    deque.len(),
+                    reference.len()
+                ));
+            }
+            let top = deque.peek_top();
+            let want_top = reference.front().copied();
+            if top != want_top {
+                return Err(format!(
+                    "step {step}: peek_top {top:?} vs reference front {want_top:?}"
+                ));
+            }
+        }
+        // drain from both ends alternately; every survivor must match
+        let mut from_top = true;
+        while let Some(want) = if from_top { reference.pop_front() } else { reference.pop_back() } {
+            let got = if from_top {
+                match deque.steal() {
+                    Steal::Success(v) => Some(v),
+                    _ => None,
+                }
+            } else {
+                deque.pop()
+            };
+            if got != Some(want) {
+                return Err(format!("drain: got {got:?}, want {want}"));
+            }
+            from_top = !from_top;
+        }
+        if !deque.is_empty() {
+            return Err("deque not empty after reference drained".into());
+        }
+        Ok(())
+    });
+}
