@@ -347,12 +347,95 @@ fn main() {
         }
     }
 
+    // -- NUMA steal locality + idle backoff (PR 4) --------------------------
+    // Not wall-clock benches: these are behaviour counters the tentpole
+    // promises — the same-domain steal fraction the simulator's victim
+    // ranking achieves on a 2-domain fleet (small-op-heavy 640-node
+    // graph), and how often idle executors actually reach the park stage
+    // instead of burning their cores. Recorded as run headlines
+    // (numa_steal_local_fraction_* / backoff_idle_*), superseding the
+    // ANALYTIC entry in BENCH_scheduler.json once a toolchain runs this.
+    let numa_fraction = {
+        use graphi::engine::{Engine, GraphiEngine, SimEnv};
+        use graphi::graph::op::{EwKind, OpKind};
+        use graphi::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev: Vec<u32> = Vec::new();
+        for layer in 0..40 {
+            let mut this = Vec::new();
+            for i in 0..16 {
+                let n = b.add(
+                    format!("l{layer}n{i}"),
+                    OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith },
+                );
+                if let Some(&p) = prev.get(i % prev.len().max(1)) {
+                    b.depend(p, n);
+                }
+                this.push(n);
+            }
+            prev = this;
+        }
+        let wide = b.build().unwrap();
+        let mut env = SimEnv::knl_deterministic();
+        env.cost.machine = graphi::cost::machine::Machine {
+            numa_domains: 2,
+            ..graphi::cost::machine::Machine::knl7250()
+        };
+        let r = GraphiEngine::new(8, 8)
+            .with_dispatch(DispatchMode::Decentralized)
+            .run(&wide, &env);
+        if r.metrics.steals > 0 {
+            (r.metrics.steals - r.metrics.steals_cross_domain) as f64 / r.metrics.steals as f64
+        } else {
+            1.0
+        }
+    };
+
+    // idle-heavy shape: a 64-op chain keeps one executor busy (~100 µs of
+    // spin work per op) while the rest idle long enough to walk
+    // spin → yield → park; parks counted per fleet size
+    let mut backoff_parks = Vec::new();
+    {
+        use graphi::graph::op::OpKind;
+        use graphi::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("c0", OpKind::Scalar);
+        for i in 1..64 {
+            let n = b.add(format!("c{i}"), OpKind::Scalar);
+            b.depend(prev, n);
+            prev = n;
+        }
+        let chain = b.build().unwrap();
+        let chain_levels: Arc<[f64]> = vec![1.0f64; chain.len()].into();
+        for &execs in &[2usize, 4, 8] {
+            let engine = ThreadedGraphi::new(execs);
+            let r = engine.run(&chain, Arc::clone(&chain_levels), |_| {
+                let t0 = std::time::Instant::now();
+                while t0.elapsed() < std::time::Duration::from_micros(100) {
+                    std::hint::spin_loop();
+                }
+            });
+            backoff_parks.push((execs, r.parks as f64));
+        }
+    }
+
     println!("{}", runner.report());
     runner.finish();
     let mean_of = |name: &str| {
         runner.results.iter().find(|r| r.name == name).map(|r| r.summary.mean)
     };
     let mut headlines = Vec::new();
+    headlines.push(("numa_steal_local_fraction_640node_2dom", numa_fraction));
+    let park_keys = [
+        (2usize, "backoff_idle_parks_chain64_2exec"),
+        (4, "backoff_idle_parks_chain64_4exec"),
+        (8, "backoff_idle_parks_chain64_8exec"),
+    ];
+    for (execs, parks) in &backoff_parks {
+        if let Some(&(_, key)) = park_keys.iter().find(|(e, _)| e == execs) {
+            headlines.push((key, *parks));
+        }
+    }
     // speedup headline: packed heap vs the inlined legacy BinaryHeap
     if let (Some(new), Some(old)) = (mean_of("heap_push_pop_4096"), mean_of("heap_push_pop_4096_legacy")) {
         if new > 0.0 {

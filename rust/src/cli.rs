@@ -138,12 +138,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
         cfg.policy = Policy::parse(m.get("policy").unwrap())
             .with_context(|| format!("bad --policy {}", m.get("policy").unwrap()))?;
     }
-    // no default value: an absent flag leaves cfg.dispatch as the config
-    // file set it (or None = unpinned, letting --tuning adopt a mode)
-    if let Some(d) = m.get("dispatch") {
-        cfg.dispatch =
-            Some(DispatchMode::parse(d).with_context(|| format!("bad --dispatch {d}"))?);
-    }
+    // no default value: --dispatch participates in the pinned three-way
+    // precedence (flag > tuning artifact > config file > engine default,
+    // `DispatchMode::resolve`) instead of being applied here directly
+    let dispatch_flag = match m.get("dispatch") {
+        Some(d) => Some(DispatchMode::parse(d).with_context(|| format!("bad --dispatch {d}"))?),
+        None => None,
+    };
     if flag_wins("iters") {
         cfg.iterations = m.get_usize("iters").map_err(Error::new)?.unwrap_or(5);
     }
@@ -153,69 +154,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(trace) = m.get("trace") {
         cfg.trace_path = Some(trace.to_string());
     }
-    // --tuning DIR: reuse a persisted autotune result. The artifact's
-    // profiled duration table always feeds the scheduler's levels; its
-    // fleet shape (and dispatch mode) applies only when not explicitly
-    // requested. Artifacts tuned on different hardware are skipped — one
-    // tuning directory can serve a heterogeneous fleet.
-    if let Some(dir) = m.get("tuning") {
-        let tag = format!("{}-{}", cfg.model.name(), cfg.size.name());
-        let machine = crate::cost::machine::Machine::knl7250();
-        let key = MachineKey::of(&machine);
-        // machine-keyed filename first; fall back to the machine-agnostic
-        // legacy location (its in-file key is still checked below)
-        let keyed = tuning_path_for(dir, &tag, &key);
-        let path = if keyed.is_file() { keyed } else { tuning_path(dir, &tag) };
-        let nodes = models::build(cfg.model, cfg.size).len();
-        match TuningArtifact::load(&path) {
-            Ok(t) if t.matches_graph(nodes) && t.matches_machine(&machine) => {
-                if cfg.executors.is_none() && cfg.threads_per.is_none() {
-                    println!(
-                        "tuning artifact {}: fleet {}x{} ({} dispatch) + profiled levels ({} profiling iterations, reused)",
-                        path.display(),
-                        t.best.0,
-                        t.best.1,
-                        t.best_dispatch.name(),
-                        t.total_profile_iterations
-                    );
-                    cfg.executors = Some(t.best.0);
-                    cfg.threads_per = Some(t.best.1);
-                } else {
-                    println!(
-                        "tuning artifact {}: fleet fixed by flags/config; using its profiled levels only",
-                        path.display()
-                    );
-                }
-                // adopt the artifact's winning dispatch mode unless a flag
-                // or a config-file key pinned one (same rule as the fleet
-                // shape above; an absent config key pins nothing)
-                if cfg.dispatch.is_none() {
-                    cfg.dispatch = Some(t.best_dispatch);
-                }
-                cfg.profiled_durations = Some(t.durations_us);
-            }
-            Ok(t) if !t.matches_machine(&machine) => {
-                crate::log_warn!(
-                    "tuning artifact {} was tuned on {} but this machine is {}; profiling fresh",
-                    path.display(),
-                    t.machine,
-                    key
-                );
-            }
-            Ok(t) => {
-                crate::log_warn!(
-                    "tuning artifact {} covers {} ops but {}/{} has {}; profiling fresh",
-                    path.display(),
-                    t.graph_nodes,
-                    cfg.model.name(),
-                    cfg.size.name(),
-                    nodes
-                );
-            }
-            Err(e) => {
-                crate::log_warn!("no usable tuning artifact ({e}); profiling fresh");
-            }
-        }
+    // --tuning DIR: reuse a persisted autotune result; otherwise just
+    // settle the flag-vs-config dispatch precedence
+    match m.get("tuning") {
+        Some(dir) => apply_tuning(&mut cfg, dir, dispatch_flag),
+        None => cfg.dispatch = DispatchMode::resolve(dispatch_flag, None, cfg.dispatch),
     }
     let result = Driver::run(&cfg);
     print!("{}", result.render());
@@ -224,6 +167,97 @@ fn cmd_run(args: &[String]) -> Result<()> {
         println!("json written to {path}");
     }
     Ok(())
+}
+
+/// Apply a tuning-artifact directory to a run configuration: the
+/// artifact's profiled duration table always feeds the scheduler's levels;
+/// its fleet shape applies only when no flag/config pinned one; its
+/// dispatch mode enters the **pinned precedence** `--dispatch flag >
+/// artifact winner > config-file value > engine default`
+/// ([`DispatchMode::resolve`] — before PR 4 a config-file value silently
+/// beat the artifact); its phase plan is adopted unless an explicit flag
+/// pins a uniform mode. Artifacts tuned on different hardware or graphs
+/// are skipped with a warning — one tuning directory can serve a
+/// heterogeneous fleet. Public so the precedence is integration-testable.
+pub fn apply_tuning(cfg: &mut ExperimentConfig, dir: &str, dispatch_flag: Option<DispatchMode>) {
+    let tag = format!("{}-{}", cfg.model.name(), cfg.size.name());
+    let machine = crate::cost::machine::Machine::knl7250();
+    let key = MachineKey::of(&machine);
+    // machine-keyed filename first; fall back to the machine-agnostic
+    // legacy location (its in-file key is still checked below)
+    let keyed = tuning_path_for(dir, &tag, &key);
+    let path = if keyed.is_file() { keyed } else { tuning_path(dir, &tag) };
+    let nodes = models::build(cfg.model, cfg.size).len();
+    let config_dispatch = cfg.dispatch;
+    let mut artifact_dispatch = None;
+    match TuningArtifact::load(&path) {
+        Ok(t) if t.matches_graph(nodes) && t.matches_machine(&machine) => {
+            let fleet_adopted = cfg.executors.is_none() && cfg.threads_per.is_none();
+            if fleet_adopted {
+                println!(
+                    "tuning artifact {}: fleet {}x{} ({} dispatch) + profiled levels ({} profiling iterations, reused)",
+                    path.display(),
+                    t.best.0,
+                    t.best.1,
+                    t.best_dispatch.name(),
+                    t.total_profile_iterations
+                );
+                cfg.executors = Some(t.best.0);
+                cfg.threads_per = Some(t.best.1);
+            } else {
+                println!(
+                    "tuning artifact {}: fleet fixed by flags/config; using its profiled levels only",
+                    path.display()
+                );
+            }
+            artifact_dispatch = Some(t.best_dispatch);
+            // the phase plan was searched at the artifact's fleet shape
+            // (its width threshold is the winning executor count), so it
+            // only applies when that fleet is actually adopted — and an
+            // explicit --dispatch flag pins a uniform mode either way
+            match (&t.phase_plan, dispatch_flag.is_none() && fleet_adopted) {
+                (Some(plan), true) => {
+                    println!("tuning artifact phase plan adopted: {}", plan.render());
+                    cfg.phase_plan = Some(plan.clone());
+                }
+                (Some(_), false) => {
+                    println!(
+                        "ignoring the artifact's phase plan ({}): it was tuned for the \
+                         artifact's fleet and an unpinned dispatch mode",
+                        if dispatch_flag.is_some() {
+                            "explicit --dispatch pins a uniform mode"
+                        } else {
+                            "fleet fixed by flags/config"
+                        }
+                    );
+                }
+                (None, _) => {}
+            }
+            cfg.profiled_durations = Some(t.durations_us);
+        }
+        Ok(t) if !t.matches_machine(&machine) => {
+            crate::log_warn!(
+                "tuning artifact {} was tuned on {} but this machine is {}; profiling fresh",
+                path.display(),
+                t.machine,
+                key
+            );
+        }
+        Ok(t) => {
+            crate::log_warn!(
+                "tuning artifact {} covers {} ops but {}/{} has {}; profiling fresh",
+                path.display(),
+                t.graph_nodes,
+                cfg.model.name(),
+                cfg.size.name(),
+                nodes
+            );
+        }
+        Err(e) => {
+            crate::log_warn!("no usable tuning artifact ({e}); profiling fresh");
+        }
+    }
+    cfg.dispatch = DispatchMode::resolve(dispatch_flag, artifact_dispatch, config_dispatch);
 }
 
 fn cmd_profile(args: &[String]) -> Result<()> {
@@ -296,6 +330,9 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
                     crate::util::fmt_us(t.best_makespan_us),
                     t.total_profile_iterations
                 );
+                if let Some(plan) = &t.phase_plan {
+                    println!("per-phase plan: {}", plan.render());
+                }
                 return Ok(());
             }
             crate::log_warn!(
@@ -590,6 +627,95 @@ mod tests {
             main(args(&["run", "--model", "mlp", "--size", "small", "--dispatch", "sideways"])),
             1
         );
+    }
+
+    #[test]
+    fn tuning_dispatch_precedence_flag_beats_artifact_beats_config() {
+        use crate::engine::PhasePlan;
+        use crate::runtime::artifacts::{tuning_path_for, MachineKey, TuningArtifact, TUNING_FORMAT_VERSION};
+        let dir = std::env::temp_dir()
+            .join(format!("graphi-cli-precedence-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.display().to_string();
+        // forge a valid mlp-small artifact whose winner is decentralized
+        // and which carries a (single-phase) plan
+        let nodes = models::build(ModelKind::Mlp, ModelSize::Small).len();
+        let machine = crate::cost::machine::Machine::knl7250();
+        let plan = PhasePlan::uniform(1, DispatchMode::Decentralized, 1);
+        let artifact = TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: "mlp-small".to_string(),
+            worker_cores: 64,
+            seed: 0,
+            machine: MachineKey::of(&machine),
+            graph_nodes: nodes,
+            best: (4, 8),
+            best_dispatch: DispatchMode::Decentralized,
+            phase_plan: Some(plan.clone()),
+            best_makespan_us: 1.0,
+            total_profile_iterations: 1,
+            durations_us: vec![1.0; nodes],
+            search_trace: Vec::new(),
+        };
+        artifact
+            .save(tuning_path_for(&dir, "mlp-small", &MachineKey::of(&machine)))
+            .unwrap();
+        let base = || ExperimentConfig {
+            model: ModelKind::Mlp,
+            size: ModelSize::Small,
+            ..ExperimentConfig::default()
+        };
+
+        // artifact beats a config-file value (the PR-4 precedence fix:
+        // previously `engine.dispatch` in the TOML silently won)
+        let mut cfg = base();
+        cfg.dispatch = Some(DispatchMode::Centralized); // "from the config file"
+        apply_tuning(&mut cfg, &dir_s, None);
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized));
+        assert_eq!(cfg.phase_plan, Some(plan.clone()));
+        assert_eq!(cfg.executors, Some(4));
+
+        // an explicit flag beats the artifact and pins a uniform mode
+        // (phase plan dropped)
+        let mut cfg = base();
+        cfg.dispatch = Some(DispatchMode::Decentralized);
+        apply_tuning(&mut cfg, &dir_s, Some(DispatchMode::Centralized));
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Centralized));
+        assert_eq!(cfg.phase_plan, None);
+
+        // a pinned fleet keeps the artifact's levels and dispatch winner,
+        // but NOT its phase plan (the plan was searched at the artifact's
+        // own fleet shape)
+        let mut cfg = base();
+        cfg.executors = Some(2);
+        cfg.threads_per = Some(4);
+        apply_tuning(&mut cfg, &dir_s, None);
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized));
+        assert_eq!(cfg.phase_plan, None, "plan tuned for another fleet must not apply");
+        assert_eq!(cfg.executors, Some(2));
+        assert!(cfg.profiled_durations.is_some());
+
+        // no usable artifact: flag > config, config survives an absent flag
+        let empty = std::env::temp_dir()
+            .join(format!("graphi-cli-precedence-empty-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&empty);
+        std::fs::create_dir_all(&empty).unwrap();
+        let empty_s = empty.display().to_string();
+        let mut cfg = base();
+        cfg.dispatch = Some(DispatchMode::Decentralized);
+        apply_tuning(&mut cfg, &empty_s, None);
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized), "config survives");
+        let mut cfg = base();
+        cfg.dispatch = Some(DispatchMode::Decentralized);
+        apply_tuning(&mut cfg, &empty_s, Some(DispatchMode::Centralized));
+        assert_eq!(cfg.dispatch, Some(DispatchMode::Centralized), "flag wins");
+        // nothing anywhere ⇒ stays unpinned (engine default later)
+        let mut cfg = base();
+        apply_tuning(&mut cfg, &empty_s, None);
+        assert_eq!(cfg.dispatch, None);
+
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&empty).unwrap();
     }
 
     #[test]

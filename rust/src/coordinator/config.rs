@@ -6,7 +6,7 @@
 //! minimal.
 
 use crate::engine::policies::Policy;
-use crate::engine::DispatchMode;
+use crate::engine::{DispatchMode, PhasePlan};
 use crate::models::{ModelKind, ModelSize};
 use crate::sim::topology::PlacementKind;
 use crate::util::toml;
@@ -59,6 +59,11 @@ pub struct ExperimentConfig {
     /// centralized design, and `graphi run --tuning` may adopt the
     /// artifact's winning mode. A flag or config-file value pins it.
     pub dispatch: Option<DispatchMode>,
+    /// Per-phase dispatch plan, adopted from a tuning artifact by
+    /// `graphi run --tuning` (an explicit `--dispatch` flag pins a uniform
+    /// mode and drops it). Ignored with a warning when it does not line up
+    /// with the graph's phase structure.
+    pub phase_plan: Option<PhasePlan>,
     /// Batch-training iterations to simulate.
     pub iterations: usize,
     pub seed: u64,
@@ -85,6 +90,7 @@ impl Default for ExperimentConfig {
             policy: Policy::CriticalPathFirst,
             placement: PlacementKind::PinnedDisjoint,
             dispatch: None,
+            phase_plan: None,
             iterations: 5,
             seed: 42,
             profile_iterations: 3,

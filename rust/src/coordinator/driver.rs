@@ -40,7 +40,7 @@ impl Driver {
         let env = SimEnv::knl(cfg.seed);
         let graph_stats = GraphStats::compute(graph);
         let fleet = Self::resolve_fleet(cfg, graph, &env, &graph_stats);
-        let engine = Self::build_engine(cfg, fleet, &graph_stats);
+        let engine = Self::build_engine(cfg, fleet, graph, &graph_stats);
 
         let mut acc = Welford::new();
         let mut last = None;
@@ -100,6 +100,7 @@ impl Driver {
     fn build_engine(
         cfg: &ExperimentConfig,
         fleet: (usize, usize),
+        graph: &Graph,
         stats: &GraphStats,
     ) -> Box<dyn Engine> {
         let (executors, threads) = fleet;
@@ -119,6 +120,18 @@ impl Driver {
                             "tuning duration table covers {} ops but the graph has {}; ignoring",
                             durations.len(),
                             stats.nodes
+                        );
+                    }
+                }
+                if let Some(plan) = &cfg.phase_plan {
+                    if plan.matches(graph) {
+                        engine.phase_plan = Some(plan.clone());
+                    } else {
+                        crate::log_warn!(
+                            "phase plan ({} modes at threshold {}) does not line up with \
+                             this graph's phase structure; running uniformly",
+                            plan.modes.len(),
+                            plan.threshold
                         );
                     }
                 }
@@ -272,6 +285,33 @@ mod tests {
         };
         let r = Driver::run(&cfg);
         assert!(r.engine_name.ends_with("-decentral"), "{}", r.engine_name);
+        assert!(r.mean_makespan_us > 0.0);
+    }
+
+    #[test]
+    fn phase_plan_flows_into_the_engine() {
+        use crate::engine::PhasePlan;
+        let g = crate::models::build(ModelKind::Mlp, ModelSize::Small);
+        let phases = crate::graph::width_phases(&g, 1);
+        let cfg = ExperimentConfig {
+            phase_plan: Some(PhasePlan::uniform(1, DispatchMode::Decentralized, phases.len())),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(r.engine_name.ends_with("-phased"), "{}", r.engine_name);
+        assert!(r.mean_makespan_us > 0.0);
+        // a plan that does not line up is dropped with a warning, not fatal
+        let cfg = ExperimentConfig {
+            phase_plan: Some(PhasePlan {
+                threshold: 1,
+                modes: vec![DispatchMode::Centralized; 99],
+            }),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(!r.engine_name.ends_with("-phased"));
         assert!(r.mean_makespan_us > 0.0);
     }
 

@@ -105,6 +105,12 @@ pub struct Calibration {
     /// SNC-4: memory-latency improvement for domain-contained executors vs
     /// quadrant mode (the reason SNC exists; Intel reports single-digit %).
     pub numa_local_boost: f64,
+    /// Extra cost of a *cross-domain* steal in decentralized dispatch, µs:
+    /// the CAS and the first lines of the stolen op's inputs cross the
+    /// mesh to another cluster's CHA/MCDRAM slice. Priced on top of
+    /// `queue_base_us + queue_cas_us` so the autotuner sees why same-domain
+    /// victims are preferred (SNC modes only; quadrant pays nothing).
+    pub steal_cross_domain_us: f64,
     /// §6 cache-affinity: fraction of an element-wise op saved when it
     /// runs on the executor whose L2 still holds its input ("modest
     /// margin"; GEMMs see none).
@@ -161,6 +167,7 @@ impl Default for Calibration {
             stream_store_saving: 0.25,
             numa_span_penalty: 1.22,
             numa_local_boost: 0.95,
+            steal_cross_domain_us: 1.1,
             locality_ew_saving: 0.08,
             noise_sigma: 0.04,
         }

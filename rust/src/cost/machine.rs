@@ -110,6 +110,22 @@ impl Machine {
             core / self.cores.div_ceil(self.numa_domains)
         }
     }
+
+    /// Executor→NUMA-domain map for an `executors × threads_per` fleet
+    /// whose teams are packed contiguously over the worker cores (the
+    /// placement [`crate::sim::topology::Placement::pinned_disjoint`]
+    /// produces, modulo tile rounding). Each executor is assigned the
+    /// domain of its team's *first* core — the home of its deque and the
+    /// hot end of its working set — which is what the decentralized
+    /// runtime's victim ranking cares about
+    /// ([`crate::engine::worksteal::DomainMap`]). Quadrant mode (one
+    /// domain) maps every executor to domain 0.
+    pub fn executor_domain_map(&self, executors: usize, threads_per: usize) -> Vec<u32> {
+        let last = self.cores.saturating_sub(1);
+        (0..executors)
+            .map(|e| self.domain_of_core((e * threads_per.max(1)).min(last)) as u32)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +158,29 @@ mod tests {
         assert_eq!(m.domain_of_core(67), 3);
         // quadrant mode is a single domain
         assert_eq!(Machine::knl7250().domain_of_core(67), 0);
+    }
+
+    #[test]
+    fn executor_domain_map_tracks_fleet_shape() {
+        // SNC-4 on the 68-core part: 17-core domains. An 8×8 fleet packs
+        // executor e at cores [8e, 8e+8): executors 0–1 in domain 0,
+        // 2 straddles (home core 16 → domain 0), 3–4 in domain 1, …
+        let snc = Machine::knl7250_snc4();
+        let map = snc.executor_domain_map(8, 8);
+        assert_eq!(map.len(), 8);
+        assert_eq!(map[0], 0);
+        assert_eq!(map[1], 0);
+        assert_eq!(map[2], 0, "home core 16 is still domain 0");
+        assert_eq!(map[3], 1);
+        assert_eq!(map[7], 3);
+        // quadrant mode: everything is one domain
+        assert!(Machine::knl7250().executor_domain_map(8, 8).iter().all(|&d| d == 0));
+        // a 2-domain part (34-core domains): home cores 0/16/32/48
+        let two = Machine { numa_domains: 2, ..Machine::knl7250() };
+        assert_eq!(two.executor_domain_map(4, 16), vec![0, 0, 0, 1]);
+        // degenerate inputs stay in bounds
+        assert_eq!(two.executor_domain_map(3, 0), vec![0, 0, 0]);
+        assert_eq!(two.executor_domain_map(2, 1000), vec![0, 1]);
     }
 
     #[test]

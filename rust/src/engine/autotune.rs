@@ -31,12 +31,12 @@
 //! artifact ([`crate::runtime::artifacts::TuningArtifact`]) that later
 //! runs load instead of re-searching.
 
-use crate::graph::Graph;
+use crate::graph::{width_phases, Graph};
 use crate::sim::topology::candidate_configs;
 use crate::util::stats::Welford;
 
 use super::profiler::{ConfigMeasurement, Profiler};
-use super::{DispatchMode, Engine, GraphiEngine, SimEnv};
+use super::{DispatchMode, Engine, GraphiEngine, PhasePlan, SimEnv};
 
 /// Successive-halving search configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +50,15 @@ pub struct Autotuner {
     /// search decides centralized-vs-decentralized per workload instead of
     /// hardcoding it. Restrict to one mode to reproduce the PR-2 search.
     pub dispatch_modes: Vec<DispatchMode>,
+    /// Search the **per-phase** dispatch axis after the uniform winner is
+    /// found (PR 4): split the graph into width phases at the winning
+    /// executor count and greedily flip each phase's mode, adopting the
+    /// plan only when its measured makespan beats the uniform winner's
+    /// (Liu et al., arXiv:1810.08955: the right concurrency setting
+    /// varies within one graph's phases). Only runs when both dispatch
+    /// modes are in the candidate space — a single-axis search was
+    /// explicitly restricted by the caller.
+    pub phase_search: bool,
     /// Per-candidate iterations in round 0 (doubles every round).
     pub initial_iterations: usize,
     /// Cap on the per-candidate iterations of any single round.
@@ -65,6 +74,7 @@ impl Default for Autotuner {
             worker_cores: 64,
             extra_configs: Vec::new(),
             dispatch_modes: DispatchMode::ALL.to_vec(),
+            phase_search: true,
             initial_iterations: 1,
             max_iterations: 8,
             duration_iterations: 3,
@@ -99,12 +109,22 @@ pub struct AutotuneReport {
     /// Round-by-round search trace.
     pub rounds: Vec<AutotuneRound>,
     /// Total profiling iterations the config search spent (excludes the
-    /// duration-estimation pass, which the flat sweep pays identically).
+    /// duration-estimation pass, which the flat sweep pays identically,
+    /// and the per-phase refinement, accounted in
+    /// `phase_refine_iterations`).
     pub total_profile_iterations: usize,
     /// Per-candidate iterations of the last executed round.
     pub final_round_iterations: usize,
     /// Size of the initial candidate space.
     pub num_candidates: usize,
+    /// Per-phase dispatch plan, `Some` only when the greedy flip search
+    /// found a plan whose measured makespan beats the uniform winner's
+    /// (and it actually mixes modes).
+    pub phase_plan: Option<PhasePlan>,
+    /// Makespan of the adopted phase plan (paired with `phase_plan`).
+    pub phase_makespan_us: Option<f64>,
+    /// Simulator runs the per-phase refinement spent (0 when skipped).
+    pub phase_refine_iterations: usize,
 }
 
 impl AutotuneReport {
@@ -200,15 +220,82 @@ impl Autotuner {
             extra_configs: Vec::new(),
         }
         .estimate_durations(graph, env, best.1);
+        let best_makespan_us = acc[best_ci].mean();
+        let (phase_plan, phase_makespan_us, phase_refine_iterations) =
+            if self.phase_search && self.dispatch_modes.len() >= 2 {
+                self.refine_phases(graph, env, best, best_dispatch, best_makespan_us)
+            } else {
+                (None, None, 0)
+            };
         AutotuneReport {
             best,
             best_dispatch,
-            best_makespan_us: acc[best_ci].mean(),
+            best_makespan_us,
             durations_us,
             rounds,
             total_profile_iterations: total,
             final_round_iterations,
             num_candidates: n,
+            phase_plan,
+            phase_makespan_us,
+            phase_refine_iterations,
+        }
+    }
+
+    /// The per-phase axis: split `graph` into width phases at the winning
+    /// executor count, start from the uniform winner's plan, and greedily
+    /// flip one phase's mode at a time (one sweep; every evaluation runs
+    /// phased at the same eval seed, so the flips *and* the adoption gate
+    /// are paired comparisons). The plan is adopted only when it actually
+    /// mixes modes, strictly beats the **phased uniform baseline**
+    /// (same harness, same seed — the apples-to-apples gate), and also
+    /// beats the uniform winner's halving-search mean (a cross-check so a
+    /// plan that merely out-runs the barrier-paying baseline, while losing
+    /// to the plain uniform run, is never persisted). Otherwise the
+    /// uniform winner stands and no plan is persisted.
+    fn refine_phases(
+        &self,
+        graph: &Graph,
+        env: &SimEnv,
+        fleet: (usize, usize),
+        uniform_mode: DispatchMode,
+        uniform_makespan_us: f64,
+    ) -> (Option<PhasePlan>, Option<f64>, usize) {
+        // a depth is "wide" when it offers at least one ready op per
+        // executor — below that the centralized scheduler keeps up and its
+        // LW lane wins; above it dispatch throughput matters
+        let threshold = fleet.0.max(2);
+        let phases = width_phases(graph, threshold);
+        if phases.len() < 2 {
+            return (None, None, 0);
+        }
+        let eval_env = SimEnv { cost: env.cost.clone(), seed: env.seed ^ 0x9A5E };
+        let mut iterations = 0usize;
+        let mut run = |modes: &[DispatchMode]| -> f64 {
+            iterations += 1;
+            GraphiEngine::new(fleet.0, fleet.1)
+                .with_phase_plan(PhasePlan { threshold, modes: modes.to_vec() })
+                .run(graph, &eval_env)
+                .makespan_us
+        };
+        let mut modes = vec![uniform_mode; phases.len()];
+        let baseline_span = run(&modes);
+        let mut best_span = baseline_span;
+        for i in 0..modes.len() {
+            let original = modes[i];
+            modes[i] = original.other();
+            let span = run(&modes);
+            if span < best_span {
+                best_span = span;
+            } else {
+                modes[i] = original;
+            }
+        }
+        let mixes = modes.iter().any(|&m| m != uniform_mode);
+        if mixes && best_span < baseline_span && best_span < uniform_makespan_us {
+            (Some(PhasePlan { threshold, modes }), Some(best_span), iterations)
+        } else {
+            (None, None, iterations)
         }
     }
 
@@ -242,6 +329,21 @@ impl Autotuner {
             report.total_profile_iterations,
             report.exhaustive_equivalent_iterations(),
         ));
+        match (&report.phase_plan, report.phase_makespan_us) {
+            (Some(plan), Some(span)) => out.push_str(&format!(
+                "per-phase plan {} beats the uniform winner: {} vs {} \
+                 ({} refinement runs)\n",
+                plan.render(),
+                crate::util::fmt_us(span),
+                crate::util::fmt_us(report.best_makespan_us),
+                report.phase_refine_iterations,
+            )),
+            _ if report.phase_refine_iterations > 0 => out.push_str(&format!(
+                "per-phase search kept the uniform winner ({} refinement runs)\n",
+                report.phase_refine_iterations
+            )),
+            _ => {}
+        }
         out
     }
 }
@@ -365,6 +467,96 @@ mod tests {
         assert_eq!(report.best, (1, 1));
         assert_eq!(report.total_profile_iterations, 1);
         assert_eq!(report.rounds.len(), 1);
+    }
+
+    #[test]
+    fn centralized_only_axis_skips_the_phase_search() {
+        // restricting the dispatch axis is an explicit caller choice; the
+        // per-phase refinement must not sneak the other mode back in
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let report = centralized_tuner().search(&g, &SimEnv::knl_deterministic());
+        assert_eq!(report.phase_refine_iterations, 0);
+        assert_eq!(report.phase_plan, None);
+    }
+
+    #[test]
+    fn phase_axis_is_searched_on_multi_phase_graphs() {
+        // a graph with a clear narrow|wide|narrow structure: a chain head,
+        // a wide band of small ops, a chain tail — the shape where the
+        // phases differ enough that the flip search has something to find
+        use crate::graph::op::{EwKind, OpKind};
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("h0", OpKind::Elementwise { n: 50_000, arity: 1, kind: EwKind::Arith });
+        for i in 1..6 {
+            let n = b.add(format!("h{i}"), OpKind::Elementwise { n: 50_000, arity: 1, kind: EwKind::Arith });
+            b.depend(prev, n);
+            prev = n;
+        }
+        let mut band_prev = vec![prev];
+        for layer in 0..12 {
+            let mut this = Vec::new();
+            for i in 0..24 {
+                let n = b.add(
+                    format!("w{layer}_{i}"),
+                    OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith },
+                );
+                b.depend(band_prev[i % band_prev.len()], n);
+                this.push(n);
+            }
+            band_prev = this;
+        }
+        let tail = b.add_after(
+            "tail",
+            OpKind::Elementwise { n: 50_000, arity: 1, kind: EwKind::Arith },
+            &band_prev,
+        );
+        let mut last = tail;
+        for i in 0..5 {
+            let n = b.add(format!("t{i}"), OpKind::Elementwise { n: 50_000, arity: 1, kind: EwKind::Arith });
+            b.depend(last, n);
+            last = n;
+        }
+        let g = b.build().unwrap();
+        let env = SimEnv::knl_deterministic();
+        let report = tuner().search(&g, &env);
+        // the winner has ≥2 executors, so the phase threshold splits the
+        // chain ends from the wide band and the refinement actually ran
+        let phases = crate::graph::width_phases(&g, report.best.0.max(2));
+        if phases.len() >= 2 {
+            assert!(
+                report.phase_refine_iterations >= phases.len() + 1,
+                "one baseline + one flip per phase, got {}",
+                report.phase_refine_iterations
+            );
+        }
+        // accounting contract: refinement never inflates the halving count
+        assert_eq!(report.total_profile_iterations, 18 + 9 * 2 + 4 * 4 + 2 * 8);
+        // if a plan was adopted it must line up with the graph, mix modes,
+        // and measure strictly better than the uniform winner
+        if let Some(plan) = &report.phase_plan {
+            assert!(plan.matches(&g));
+            assert!(plan.modes.iter().any(|&m| m != report.best_dispatch));
+            assert!(report.phase_makespan_us.unwrap() < report.best_makespan_us);
+        }
+    }
+
+    #[test]
+    fn adopted_phase_plans_replay_to_their_reported_makespan() {
+        // whatever the search decided, replaying the plan through the
+        // engine at the same eval seed must reproduce the recorded number
+        // (the artifact consumer relies on this determinism)
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let env = SimEnv::knl_deterministic();
+        let report = tuner().search(&g, &env);
+        if let (Some(plan), Some(span)) = (&report.phase_plan, report.phase_makespan_us) {
+            let eval_env = SimEnv { cost: env.cost.clone(), seed: env.seed ^ 0x9A5E };
+            let replay = GraphiEngine::new(report.best.0, report.best.1)
+                .with_phase_plan(plan.clone())
+                .run(&g, &eval_env)
+                .makespan_us;
+            assert_eq!(replay, span);
+        }
     }
 
     #[test]

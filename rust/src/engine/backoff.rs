@@ -1,0 +1,351 @@
+//! Adaptive idle backoff for executor threads: spin → yield → park.
+//!
+//! PR 3's decentralized executors idled with spin+yield forever. On a
+//! fully-loaded manycore part that is exactly the §3 failure mode the
+//! paper's disjoint-core mapping exists to avoid: an idle executor's spin
+//! loop burns the core (and the shared tile resources) that a *busy*
+//! executor's op team needs. Liu et al. (arXiv:1810.08955) measure the
+//! same effect as over-threading at high op rates. This module replaces
+//! the idle loop with a three-stage state machine:
+//!
+//! 1. **Spin** for a short burst ([`Backoff::DEFAULT_SPIN_LIMIT`]
+//!    iterations) — the common case where a successor batch lands within
+//!    a few hundred cycles; parking here would add wake-up latency to the
+//!    critical path.
+//! 2. **Yield** for a few timeslices — covers the oversubscribed-host case
+//!    (1-core CI) where the producer needs our core to make progress.
+//! 3. **Park** on an [`EventCounter`] — the executor sleeps on a condvar
+//!    and stops burning the core entirely. Producers call
+//!    [`EventCounter::notify`] after every deque/ring push, which wakes
+//!    parked executors.
+//!
+//! # The lost-wakeup race, and why [`EventCounter`] closes it
+//!
+//! The classic bug: executor scans every deque, finds them empty, and
+//! parks — but a push landed *between* the scan and the park, and its
+//! wakeup fired while nobody was asleep. The executor then sleeps on work
+//! that already exists.
+//!
+//! The counter is a Vyukov-style **eventcount**, built so the busy path
+//! stays almost free:
+//!
+//! * the **producer** publishes work first, then calls `notify`, which is
+//!   a `SeqCst` fence plus one load of the waiter count — it pays the
+//!   epoch RMW and the condvar broadcast only when some consumer is
+//!   inside its prepare→park window;
+//! * the **consumer**, once its backoff reaches the park stage, calls
+//!   [`EventCounter::prepare`] (register as a waiter, fence, observe the
+//!   epoch), **re-scans for work**, and only then either
+//!   [`cancel`](EventCounter::cancel)s (work appeared, or shutting down)
+//!   or [`park`](EventCounter::park)s with the observed epoch; `park`
+//!   re-checks the epoch under the mutex and refuses to sleep if it
+//!   moved.
+//!
+//! Why no wakeup can be lost: a push either happens before the consumer's
+//! registered re-scan — the two `SeqCst` fences (producer: after the
+//! push, before the waiter-count load; consumer: after registration,
+//! before the re-scan) forbid the store-buffer interleaving, so the
+//! re-scan *sees the item* — or the producer's waiter-count load sees the
+//! registration, bumps the epoch and broadcasts under the mutex, so the
+//! consumer's pre-sleep epoch check (same mutex) catches it. A bounded
+//! `wait_timeout` backstops the analysis anyway: even a bug here degrades
+//! to a periodic poll, never a hang — which is what the stress harness's
+//! watchdog (`tests/stress_threaded.rs`) asserts.
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A Vyukov-style eventcount: epoch + waiter count + condvar — the
+/// wake-up channel between executors that produce work and executors
+/// that idle. See the module docs for the protocol and its proof sketch.
+#[derive(Debug, Default)]
+pub struct EventCounter {
+    epoch: AtomicU64,
+    /// Threads inside the prepare→park/cancel window.
+    waiters: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl EventCounter {
+    pub fn new() -> EventCounter {
+        EventCounter::default()
+    }
+
+    /// The current epoch (tests/stats; consumers get theirs from
+    /// [`prepare`](Self::prepare)).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Threads currently inside the prepare→park/cancel window (racy;
+    /// used by tests and stats).
+    pub fn waiters(&self) -> usize {
+        self.waiters.load(Ordering::SeqCst)
+    }
+
+    /// Producer side: publish that new work exists. On the busy path
+    /// (nobody preparing to park) this is a fence plus one relaxed-ish
+    /// load — no shared-line RMW, so completing executors don't hammer one
+    /// cache line (the contention this PR series exists to remove). Only
+    /// when a consumer is inside its prepare→park window does it pay the
+    /// epoch bump and the broadcast.
+    pub fn notify(&self) {
+        // orders the caller's work-publishing stores before the waiter
+        // check (producer half of the store-buffer litmus; the consumer
+        // half lives in `prepare`)
+        fence(Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            let _guard = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Consumer side, step 1: register as a waiter and observe the epoch.
+    /// The caller MUST re-scan for work after this and then call exactly
+    /// one of [`park`](Self::park) (nothing found) or
+    /// [`cancel`](Self::cancel) (found work / shutting down) — that
+    /// registered re-scan is what makes the lost-wakeup race impossible.
+    pub fn prepare(&self) -> u64 {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        // orders the registration before the caller's re-scan loads
+        // (consumer half of the litmus)
+        fence(Ordering::SeqCst);
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Consumer side: abandon a [`prepare`](Self::prepare)d park.
+    pub fn cancel(&self) {
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Consumer side, step 2: sleep until a notify or `timeout`, unless
+    /// the epoch already advanced past `observed` (a notify landed since
+    /// `prepare` — returns immediately without sleeping). Consumes the
+    /// registration. Returns `true` iff it actually slept.
+    pub fn park(&self, observed: u64, timeout: Duration) -> bool {
+        let slept = {
+            let guard = self.lock.lock().unwrap();
+            if self.epoch.load(Ordering::SeqCst) == observed {
+                // the mutex is released atomically by wait_timeout, so a
+                // broadcast cannot fall between this check and the sleep
+                let _unused = self.cv.wait_timeout(guard, timeout).unwrap();
+                true
+            } else {
+                false
+            }
+        };
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        slept
+    }
+}
+
+/// What an idle executor should do on its next empty-handed iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackoffStage {
+    /// `spin_loop()` — expecting work within cycles.
+    Spin,
+    /// `yield_now()` — give the producer our timeslice.
+    Yield,
+    /// Park on the [`EventCounter`] — stop burning the core.
+    Park,
+}
+
+/// Per-executor idle-backoff state machine: `spin_limit` spins, then
+/// `yield_limit` yields, then parks until reset. Acquiring work resets it
+/// to the spin stage.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    attempts: u32,
+    spin_limit: u32,
+    yield_limit: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff::new()
+    }
+}
+
+impl Backoff {
+    /// Spin iterations before the first yield. Short: one failed steal
+    /// sweep already costs a few hundred cycles, so ~64 sweeps bound the
+    /// spin phase to the microsecond scale where parking latency would
+    /// hurt the critical path.
+    pub const DEFAULT_SPIN_LIMIT: u32 = 64;
+    /// Yields before parking.
+    pub const DEFAULT_YIELD_LIMIT: u32 = 16;
+
+    pub fn new() -> Backoff {
+        Backoff::with_limits(Self::DEFAULT_SPIN_LIMIT, Self::DEFAULT_YIELD_LIMIT)
+    }
+
+    pub fn with_limits(spin_limit: u32, yield_limit: u32) -> Backoff {
+        Backoff { attempts: 0, spin_limit, yield_limit }
+    }
+
+    /// Work was acquired — return to the spin stage.
+    pub fn reset(&mut self) {
+        self.attempts = 0;
+    }
+
+    /// The stage the *next* idle iteration is in, without advancing.
+    pub fn stage(&self) -> BackoffStage {
+        if self.attempts < self.spin_limit {
+            BackoffStage::Spin
+        } else if self.attempts < self.spin_limit + self.yield_limit {
+            BackoffStage::Yield
+        } else {
+            BackoffStage::Park
+        }
+    }
+
+    /// Advance one idle iteration and return the stage it falls in. Park
+    /// is sticky: once reached, every further call returns `Park` until
+    /// [`reset`](Self::reset).
+    pub fn next(&mut self) -> BackoffStage {
+        let stage = self.stage();
+        if stage != BackoffStage::Park {
+            self.attempts += 1;
+        }
+        stage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::time::Instant;
+
+    #[test]
+    fn state_machine_walks_spin_yield_park_and_resets() {
+        let mut b = Backoff::with_limits(3, 2);
+        assert_eq!(b.stage(), BackoffStage::Spin);
+        for _ in 0..3 {
+            assert_eq!(b.next(), BackoffStage::Spin);
+        }
+        for _ in 0..2 {
+            assert_eq!(b.next(), BackoffStage::Yield);
+        }
+        // park is sticky
+        for _ in 0..10 {
+            assert_eq!(b.next(), BackoffStage::Park);
+        }
+        b.reset();
+        assert_eq!(b.next(), BackoffStage::Spin);
+        // defaults walk the documented limits
+        let mut d = Backoff::new();
+        let mut spins = 0;
+        while d.next() == BackoffStage::Spin {
+            spins += 1;
+        }
+        assert_eq!(spins, Backoff::DEFAULT_SPIN_LIMIT);
+        let mut yields = 1; // the call that left Spin was a Yield
+        while d.next() == BackoffStage::Yield {
+            yields += 1;
+        }
+        assert_eq!(yields, Backoff::DEFAULT_YIELD_LIMIT);
+        assert_eq!(d.stage(), BackoffStage::Park);
+    }
+
+    #[test]
+    fn park_refuses_to_sleep_when_a_notify_landed_after_prepare() {
+        // the lost-wakeup race, replayed deterministically: the "push"
+        // (notify) lands between prepare and park — park must return
+        // immediately instead of sleeping through the 10 s timeout
+        let ec = EventCounter::new();
+        let observed = ec.prepare(); // consumer registered, about to re-scan
+        ec.notify(); // producer: push + (waiters > 0 ⇒ epoch bump) land here
+        let t0 = Instant::now();
+        let slept = ec.park(observed, Duration::from_secs(10));
+        assert!(!slept, "park slept through a post-prepare notify");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "park blocked despite a stale epoch observation"
+        );
+        assert_eq!(ec.waiters(), 0, "registration must be consumed");
+    }
+
+    #[test]
+    fn notify_without_waiters_is_the_cheap_path() {
+        // nobody inside a prepare→park window ⇒ notify must not touch the
+        // epoch (no shared-line RMW on the busy path)
+        let ec = EventCounter::new();
+        for _ in 0..100 {
+            ec.notify();
+        }
+        assert_eq!(ec.epoch(), 0, "epoch bumps only when someone is waiting");
+        // …and with a registered waiter it does bump
+        let observed = ec.prepare();
+        ec.notify();
+        assert!(ec.epoch() > observed);
+        ec.cancel();
+        assert_eq!(ec.waiters(), 0);
+    }
+
+    #[test]
+    fn cancel_abandons_a_prepared_park() {
+        let ec = EventCounter::new();
+        let _observed = ec.prepare();
+        assert_eq!(ec.waiters(), 1);
+        ec.cancel(); // "the re-scan found work"
+        assert_eq!(ec.waiters(), 0);
+        ec.notify(); // cheap path again
+        assert_eq!(ec.epoch(), 0);
+    }
+
+    #[test]
+    fn notify_wakes_a_parked_thread() {
+        let ec = EventCounter::new();
+        let woke = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let observed = ec.prepare();
+                // generous timeout: the test passes because the notify
+                // arrives (or already voided the observation), not
+                // because the timeout expires
+                ec.park(observed, Duration::from_secs(30));
+                woke.store(true, Ordering::SeqCst);
+            });
+            // wait until the thread is registered, then notify
+            while ec.waiters() == 0 {
+                std::thread::yield_now();
+            }
+            ec.notify();
+        });
+        assert!(woke.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn park_timeout_is_a_backstop_not_a_hang() {
+        let ec = EventCounter::new();
+        let observed = ec.prepare();
+        let t0 = Instant::now();
+        let slept = ec.park(observed, Duration::from_millis(10));
+        assert!(slept, "nothing notified, so the park must actually sleep");
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(ec.waiters(), 0);
+    }
+
+    #[test]
+    fn concurrent_notifies_with_a_waiter_stay_monotone() {
+        let ec = EventCounter::new();
+        let _observed = ec.prepare(); // keep one waiter registered
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        ec.notify();
+                    }
+                });
+            }
+        });
+        assert_eq!(ec.epoch(), 4000);
+        ec.cancel();
+        assert_eq!(ec.waiters(), 0);
+    }
+}

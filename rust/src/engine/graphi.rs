@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::cost::Interference;
 use crate::graph::op::{EwKind, OpKind};
-use crate::graph::{levels, Graph, NodeId};
+use crate::graph::{levels, phase_members, width_phases, Graph, NodeId};
 use crate::sim::topology::PlacementKind;
 use crate::sim::{BandwidthArbiter, EventQueue, Placement};
 use crate::util::rng::Rng;
@@ -21,8 +21,8 @@ use super::ready::{entry_node, pack_entry, DepTracker, ReadySet};
 use super::ring::SpscRing;
 use super::scheduler::IdleBitmap;
 use super::trace::{OpRecord, LIGHTWEIGHT_EXECUTOR};
-use super::worksteal::{self, WorkStealDeque};
-use super::{DispatchMode, Engine, EngineMetrics, RunResult, SimEnv};
+use super::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
+use super::{DispatchMode, Engine, EngineMetrics, PhasePlan, RunResult, SimEnv};
 
 /// Configuration of the Graphi engine.
 #[derive(Debug, Clone)]
@@ -60,6 +60,11 @@ pub struct GraphiEngine {
     /// [`crate::runtime::threaded`] in virtual time, so the autotuner can
     /// search over dispatch mode as a candidate axis.
     pub dispatch: DispatchMode,
+    /// Per-phase dispatch assignment (overrides `dispatch`): the graph's
+    /// width phases run sequentially, each under its own mode, with a
+    /// barrier at every boundary. `None` = the uniform `dispatch` mode
+    /// for the whole graph.
+    pub phase_plan: Option<PhasePlan>,
 }
 
 impl GraphiEngine {
@@ -76,6 +81,7 @@ impl GraphiEngine {
             locality: false,
             straggler: None,
             dispatch: DispatchMode::Centralized,
+            phase_plan: None,
         }
     }
 
@@ -86,6 +92,11 @@ impl GraphiEngine {
 
     pub fn with_dispatch(mut self, dispatch: DispatchMode) -> GraphiEngine {
         self.dispatch = dispatch;
+        self
+    }
+
+    pub fn with_phase_plan(mut self, plan: PhasePlan) -> GraphiEngine {
+        self.phase_plan = Some(plan);
         self
     }
 
@@ -388,20 +399,45 @@ impl<'a> Sim<'a> {
         RunResult { makespan_us: makespan, records: self.records, metrics: self.metrics }
     }
 
+    /// Per-executor NUMA-domain map for topology-aware victim ranking:
+    /// each executor lives in the domain of its team's first core (its
+    /// deque's home). OS-managed placements have no known cores — the map
+    /// degrades to flat, i.e. domain-blind ranking.
+    fn domain_map(&self) -> DomainMap {
+        let machine = &self.env.cost.machine;
+        let domains: Vec<u32> = (0..self.cfg.executors)
+            .map(|e| {
+                self.placement
+                    .cores
+                    .get(e)
+                    .and_then(|team| team.first())
+                    .map(|&c0| machine.domain_of_core(c0) as u32)
+                    .unwrap_or(0)
+            })
+            .collect();
+        DomainMap::new(domains, 0)
+    }
+
     /// Decentralized mode in virtual time — the same architecture as
     /// [`crate::runtime::threaded`]'s decentralized path, over the *real*
     /// [`WorkStealDeque`]s (exercised single-threaded here). There is no
     /// central scheduler and no light-weight lane: the executor finishing
     /// an op pays the successor-resolution cost itself (`queue_base_us`
     /// per triggered successor — one `fetch_sub` + deque push), a local
-    /// pop costs `queue_base_us`, and a steal adds the CAS premium
-    /// `queue_cas_us`. All of it lands in `scheduler_busy_us`: it is
-    /// scheduling work, merely spread across executors instead of
-    /// serialized on one reserved core.
+    /// pop costs `queue_base_us`, a steal adds the CAS premium
+    /// `queue_cas_us`, and a *cross-domain* steal (SNC modes) additionally
+    /// pays `steal_cross_domain_us` for the mesh crossing — which is why
+    /// victim ranking prefers same-domain victims
+    /// ([`worksteal::steal_highest_numa`]) and why the autotuner's search
+    /// sees the preference pay off. All of it lands in
+    /// `scheduler_busy_us`: it is scheduling work, merely spread across
+    /// executors instead of serialized on one reserved core.
     fn run_decentralized(mut self) -> RunResult {
         let n_exec = self.cfg.executors;
         let pop_us = self.env.cost.cal.queue_base_us;
         let steal_us = self.env.cost.cal.queue_base_us + self.env.cost.cal.queue_cas_us;
+        let cross_us = steal_us + self.env.cost.cal.steal_cross_domain_us;
+        let domains = self.domain_map();
         let deques: Vec<WorkStealDeque> =
             (0..n_exec).map(|_| WorkStealDeque::new(self.graph.len())).collect();
         let mut exec_idle = vec![true; n_exec];
@@ -414,7 +450,7 @@ impl<'a> Sim<'a> {
                 .push(pack_entry(shared_levels[s as usize], s))
                 .expect("deque sized for the whole graph");
         }
-        self.acquire_sweep(&deques, &mut exec_idle, 0, 0.0, pop_us, steal_us);
+        self.acquire_sweep(&deques, &domains, &mut exec_idle, 0, 0.0, [pop_us, steal_us, cross_us]);
         let mut makespan = 0.0f64;
         // one reusable resolution buffer for the whole run, like the
         // threaded executors' per-thread `batch`
@@ -448,23 +484,32 @@ impl<'a> Sim<'a> {
             exec_idle[e] = true;
             // the completing executor gets first dibs (cache-warm LIFO
             // pop), then every idle executor steals what is exposed
-            self.acquire_sweep(&deques, &mut exec_idle, e, t + resolve_us, pop_us, steal_us);
+            self.acquire_sweep(
+                &deques,
+                &domains,
+                &mut exec_idle,
+                e,
+                t + resolve_us,
+                [pop_us, steal_us, cross_us],
+            );
         }
         assert!(self.deps.is_done(), "simulation drained with unexecuted ops");
         RunResult { makespan_us: makespan, records: self.records, metrics: self.metrics }
     }
 
     /// Let every idle executor acquire work (own-deque pop, else the
-    /// highest-priority steal) until no idle executor finds any, starting
-    /// the scan at `first`.
+    /// domain-preferring highest-priority steal) until no idle executor
+    /// finds any, starting the scan at `first`. `overheads` prices the
+    /// three acquisition kinds `[local pop, same-domain steal,
+    /// cross-domain steal]`.
     fn acquire_sweep(
         &mut self,
         deques: &[WorkStealDeque],
+        domains: &DomainMap,
         exec_idle: &mut [bool],
         first: usize,
         now: f64,
-        pop_us: f64,
-        steal_us: f64,
+        overheads: [f64; 3],
     ) {
         let n = deques.len();
         loop {
@@ -474,8 +519,18 @@ impl<'a> Sim<'a> {
                 if !exec_idle[e] {
                     continue;
                 }
-                if let Some((key, stolen)) = worksteal::acquire(deques, e) {
-                    let overhead = if stolen { steal_us } else { pop_us };
+                if let Some((key, kind)) = worksteal::acquire_numa(deques, e, domains) {
+                    let overhead = match kind {
+                        Acquire::LocalPop => overheads[0],
+                        Acquire::StealLocalDomain => overheads[1],
+                        Acquire::StealCrossDomain => overheads[2],
+                    };
+                    if kind.is_steal() {
+                        self.metrics.steals += 1;
+                        if kind == Acquire::StealCrossDomain {
+                            self.metrics.steals_cross_domain += 1;
+                        }
+                    }
                     self.launch_decentral(e, entry_node(key), now, overhead);
                     exec_idle[e] = false;
                     progressed = true;
@@ -507,6 +562,71 @@ impl<'a> Sim<'a> {
     }
 }
 
+impl GraphiEngine {
+    /// Execute a [`PhasePlan`]: each width phase runs as an induced
+    /// subgraph under its own dispatch mode, phases strictly in sequence
+    /// (safe — a node's predecessors are never in a later phase), records
+    /// and metrics merged onto one timeline. The per-phase makespans sum:
+    /// the barrier is the price the plan pays, and the autotuner only
+    /// adopts a plan whose measured total still beats the uniform winner.
+    fn run_phased(&self, graph: &Graph, env: &SimEnv, plan: &PhasePlan) -> RunResult {
+        let phases = width_phases(graph, plan.threshold);
+        assert_eq!(
+            plan.modes.len(),
+            phases.len(),
+            "phase plan ({} modes) does not line up with the graph ({} phases at threshold {})",
+            plan.modes.len(),
+            phases.len(),
+            plan.threshold
+        );
+        let members = phase_members(graph, &phases);
+        let mut offset = 0.0f64;
+        let mut records: Vec<OpRecord> = Vec::with_capacity(graph.len());
+        let mut metrics = EngineMetrics {
+            executor_busy_us: vec![0.0; self.executors],
+            mode_switches: plan.mode_switches(),
+            ..Default::default()
+        };
+        for (k, (mode, keep)) in plan.modes.iter().zip(&members).enumerate() {
+            let (sub, map) = graph.induced_subgraph(keep);
+            let sub_overrides: Option<std::sync::Arc<[f64]>> = self
+                .duration_overrides
+                .as_ref()
+                .map(|d| map.iter().map(|&v| d[v as usize]).collect::<Vec<f64>>().into());
+            let sub_engine = GraphiEngine {
+                dispatch: *mode,
+                phase_plan: None,
+                duration_overrides: sub_overrides,
+                ..self.clone()
+            };
+            // independent noise draws per phase, deterministic per seed
+            let env_k = SimEnv { cost: env.cost.clone(), seed: env.seed ^ ((k as u64 + 1) << 48) };
+            let r = sub_engine.run(&sub, &env_k);
+            for rec in r.records {
+                records.push(OpRecord {
+                    node: map[rec.node as usize],
+                    executor: rec.executor,
+                    start_us: rec.start_us + offset,
+                    end_us: rec.end_us + offset,
+                });
+            }
+            offset += r.makespan_us;
+            metrics.dispatches += r.metrics.dispatches;
+            metrics.queue_wait_us += r.metrics.queue_wait_us;
+            metrics.scheduler_busy_us += r.metrics.scheduler_busy_us;
+            metrics.contention_us += r.metrics.contention_us;
+            metrics.lightweight_ops += r.metrics.lightweight_ops;
+            metrics.steals += r.metrics.steals;
+            metrics.steals_cross_domain += r.metrics.steals_cross_domain;
+            for (acc, busy) in metrics.executor_busy_us.iter_mut().zip(&r.metrics.executor_busy_us)
+            {
+                *acc += busy;
+            }
+        }
+        RunResult { makespan_us: offset, records, metrics }
+    }
+}
+
 impl Engine for GraphiEngine {
     fn name(&self) -> String {
         format!(
@@ -519,18 +639,26 @@ impl Engine for GraphiEngine {
                 PlacementKind::PinnedSharedTiles => "-sharedL2",
                 PlacementKind::OsManaged => "-unpinned",
             },
-            match self.dispatch {
-                DispatchMode::Centralized => "",
-                DispatchMode::Decentralized => "-decentral",
+            if self.phase_plan.is_some() {
+                "-phased"
+            } else {
+                match self.dispatch {
+                    DispatchMode::Centralized => "",
+                    DispatchMode::Decentralized => "-decentral",
+                }
             }
         )
     }
 
     fn run(&self, graph: &Graph, env: &SimEnv) -> RunResult {
-        let sim = Sim::new(graph, env, self);
-        let result = match self.dispatch {
-            DispatchMode::Centralized => sim.run(),
-            DispatchMode::Decentralized => sim.run_decentralized(),
+        let result = if let Some(plan) = &self.phase_plan {
+            self.run_phased(graph, env, plan)
+        } else {
+            let sim = Sim::new(graph, env, self);
+            match self.dispatch {
+                DispatchMode::Centralized => sim.run(),
+                DispatchMode::Decentralized => sim.run_decentralized(),
+            }
         };
         debug_assert!(
             result.validate(graph).is_ok(),
@@ -716,13 +844,9 @@ mod tests {
         assert_eq!(engine.run(&g, &e).makespan_us, engine.run(&g, &e).makespan_us);
     }
 
-    #[test]
-    fn decentralized_beats_centralized_on_small_op_heavy_graph() {
-        // the point of the tentpole: when per-op work is small, the
-        // serialized scheduler round-trip dominates the centralized
-        // makespan, while decentralized resolution spreads that cost
-        // across executors. Structure-only levels + a wide graph of tiny
-        // element-wise ops make dispatch throughput the bottleneck.
+    /// 40 layers × 16 tiny element-wise ops (640 nodes): the small-op-heavy
+    /// shape where dispatch throughput (not op work) is the bottleneck.
+    fn wide_small_op_graph() -> crate::graph::Graph {
         use crate::graph::GraphBuilder;
         let mut b = GraphBuilder::new();
         let mut prev: Vec<crate::graph::NodeId> = Vec::new();
@@ -740,7 +864,17 @@ mod tests {
             }
             prev = this;
         }
-        let g = b.build().unwrap();
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn decentralized_beats_centralized_on_small_op_heavy_graph() {
+        // the point of the tentpole: when per-op work is small, the
+        // serialized scheduler round-trip dominates the centralized
+        // makespan, while decentralized resolution spreads that cost
+        // across executors. Structure-only levels + a wide graph of tiny
+        // element-wise ops make dispatch throughput the bottleneck.
+        let g = wide_small_op_graph();
         let e = SimEnv::knl_deterministic();
         let central = GraphiEngine::new(8, 8).run(&g, &e).makespan_us;
         let decentral = GraphiEngine::new(8, 8)
@@ -759,5 +893,121 @@ mod tests {
         let d = GraphiEngine::new(4, 8).with_dispatch(DispatchMode::Decentralized);
         assert!(!c.name().contains("decentral"));
         assert!(d.name().ends_with("-decentral"), "{}", d.name());
+        let p = GraphiEngine::new(4, 8)
+            .with_phase_plan(PhasePlan::uniform(2, DispatchMode::Centralized, 1));
+        assert!(p.name().ends_with("-phased"), "{}", p.name());
+    }
+
+    /// A 2-domain KNL variant (SNC-2-like): domains of 34 cores.
+    fn two_domain_env() -> SimEnv {
+        let mut env = SimEnv::knl_deterministic();
+        env.cost.machine = crate::cost::machine::Machine {
+            numa_domains: 2,
+            ..crate::cost::machine::Machine::knl7250()
+        };
+        env
+    }
+
+    #[test]
+    fn same_domain_steals_dominate_on_a_two_domain_fleet() {
+        // acceptance: on a 2-domain fleet running the small-op-heavy
+        // 640-node graph, NUMA-aware victim ranking keeps at least as many
+        // steals inside the domain as across it (level ties stay local;
+        // only a strictly deeper remote critical path crosses the mesh)
+        let g = wide_small_op_graph();
+        let r = GraphiEngine::new(8, 8)
+            .with_dispatch(DispatchMode::Decentralized)
+            .run(&g, &two_domain_env());
+        r.validate(&g).unwrap();
+        assert!(r.metrics.steals > 0, "a 16-wide graph on 8 executors must steal");
+        let local = r.metrics.steals - r.metrics.steals_cross_domain;
+        assert!(
+            local >= r.metrics.steals_cross_domain,
+            "same-domain steals ({local}) must be ≥ cross-domain ({})",
+            r.metrics.steals_cross_domain
+        );
+    }
+
+    #[test]
+    fn quadrant_mode_never_pays_cross_domain_steals() {
+        let g = wide_small_op_graph();
+        let r = GraphiEngine::new(8, 8)
+            .with_dispatch(DispatchMode::Decentralized)
+            .run(&g, &SimEnv::knl_deterministic());
+        assert!(r.metrics.steals > 0);
+        assert_eq!(r.metrics.steals_cross_domain, 0, "one domain ⇒ nothing crosses");
+    }
+
+    #[test]
+    fn cross_domain_surcharge_is_priced_into_the_makespan() {
+        // same fleet and graph; the 2-domain run pays the mesh surcharge
+        // on its (few) cross-domain steals plus the SNC span penalty, so
+        // it cannot be faster than pricing with the surcharge zeroed
+        let g = wide_small_op_graph();
+        let mut cheap = two_domain_env();
+        cheap.cost.cal.steal_cross_domain_us = 0.0;
+        let engine = GraphiEngine::new(8, 8).with_dispatch(DispatchMode::Decentralized);
+        let priced = engine.run(&g, &two_domain_env());
+        let free = engine.run(&g, &cheap);
+        assert!(
+            priced.makespan_us >= free.makespan_us,
+            "surcharge must not speed anything up: {} vs {}",
+            priced.makespan_us,
+            free.makespan_us
+        );
+    }
+
+    #[test]
+    fn phased_run_is_valid_and_switches_at_boundaries() {
+        use crate::graph::width_phases;
+        let g = wide_small_op_graph();
+        let e = SimEnv::knl_deterministic();
+        let phases = width_phases(&g, 2);
+        // 640-node layered graph: every depth is 16 wide ⇒ one wide phase
+        assert_eq!(phases.len(), 1);
+        // force structure with the LSTM model instead (chains + bands)
+        let lstm = models::build(ModelKind::Lstm, ModelSize::Small);
+        let lphases = width_phases(&lstm, 4);
+        let alternating: Vec<DispatchMode> = (0..lphases.len())
+            .map(|i| if i % 2 == 0 { DispatchMode::Centralized } else { DispatchMode::Decentralized })
+            .collect();
+        let plan = PhasePlan { threshold: 4, modes: alternating };
+        let expected_switches = plan.mode_switches();
+        let r = GraphiEngine::new(4, 8).with_phase_plan(plan).run(&lstm, &e);
+        r.validate(&lstm).unwrap();
+        assert_eq!(r.records.len(), lstm.len());
+        assert_eq!(r.metrics.dispatches + r.metrics.lightweight_ops, lstm.len() as u64);
+        assert_eq!(r.metrics.mode_switches, expected_switches);
+        if lphases.len() > 1 {
+            assert!(expected_switches > 0, "alternating plan over >1 phase must switch");
+        }
+    }
+
+    #[test]
+    fn single_phase_plan_matches_uniform_run_semantics() {
+        // a one-phase plan is the uniform engine with an extra label: same
+        // schedule validity, same op count, and (deterministic env) the
+        // same makespan as the equivalent uniform run with the same seed
+        // derivation is not guaranteed — only semantics are
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let e = SimEnv::knl_deterministic();
+        let phases = crate::graph::width_phases(&g, 1);
+        assert_eq!(phases.len(), 1, "threshold 1 makes every depth wide");
+        for mode in DispatchMode::ALL {
+            let r = GraphiEngine::new(4, 8)
+                .with_phase_plan(PhasePlan::uniform(1, mode, 1))
+                .run(&g, &e);
+            r.validate(&g).unwrap();
+            assert_eq!(r.records.len(), g.len());
+            assert_eq!(r.metrics.mode_switches, 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not line up")]
+    fn mismatched_phase_plan_panics() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let plan = PhasePlan { threshold: 2, modes: vec![DispatchMode::Centralized; 99] };
+        let _ = GraphiEngine::new(4, 8).with_phase_plan(plan).run(&g, &SimEnv::knl_deterministic());
     }
 }

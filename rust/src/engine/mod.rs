@@ -30,6 +30,7 @@
 //! [`crate::runtime::threaded`].
 
 pub mod autotune;
+pub mod backoff;
 pub mod dynamic;
 pub mod graphi;
 pub mod heterogeneous;
@@ -46,6 +47,7 @@ pub mod trace;
 pub mod worksteal;
 
 pub use autotune::{AutotuneReport, AutotuneRound, Autotuner};
+pub use backoff::{Backoff, BackoffStage, EventCounter};
 pub use dynamic::DynamicFleetEngine;
 pub use graphi::GraphiEngine;
 pub use heterogeneous::HeterogeneousEngine;
@@ -55,7 +57,7 @@ pub use profiler::{ProfileReport, Profiler};
 pub use sequential::SequentialEngine;
 pub use tensorflow_like::TensorFlowLikeEngine;
 pub use trace::{OpRecord, Trace};
-pub use worksteal::{Steal, WorkStealDeque};
+pub use worksteal::{Acquire, DomainMap, Steal, WorkStealDeque};
 
 use crate::cost::{Calibration, CostModel, Interference};
 use crate::graph::Graph;
@@ -91,6 +93,78 @@ impl DispatchMode {
             "decentralized" | "decentral" => Some(DispatchMode::Decentralized),
             _ => None,
         }
+    }
+
+    /// The other architecture (the per-phase search's flip move).
+    pub fn other(self) -> DispatchMode {
+        match self {
+            DispatchMode::Centralized => DispatchMode::Decentralized,
+            DispatchMode::Decentralized => DispatchMode::Centralized,
+        }
+    }
+
+    /// Three-way dispatch-mode precedence, pinned in one place so it
+    /// cannot drift as sources multiply: an **explicit `--dispatch` flag**
+    /// beats a **tuning artifact's winner**, which beats a **config-file
+    /// `engine.dispatch`**; `None` everywhere leaves the engine default
+    /// (centralized for the simulator driver). Phase plans follow the
+    /// same rule: an explicit flag pins a *uniform* mode and therefore
+    /// drops any artifact phase plan.
+    pub fn resolve(
+        flag: Option<DispatchMode>,
+        artifact: Option<DispatchMode>,
+        config: Option<DispatchMode>,
+    ) -> Option<DispatchMode> {
+        flag.or(artifact).or(config)
+    }
+}
+
+/// A per-phase dispatch assignment: the graph is split into **width
+/// phases** ([`crate::graph::levels::width_phases`] at `threshold`) and
+/// each phase runs under its own [`DispatchMode`], with a barrier at every
+/// phase boundary (safe because a node's predecessors always live in the
+/// same or an earlier phase). Liu et al. (arXiv:1810.08955) observed that
+/// the right concurrency setting varies *within* one graph's phases —
+/// narrow chains want the centralized scheduler's light-weight lane, wide
+/// fan-outs want executor-side resolution + stealing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhasePlan {
+    /// The width threshold the phases were derived with; apply-time phase
+    /// derivation must use the same value or the plan does not line up.
+    pub threshold: usize,
+    /// One mode per phase, in phase order.
+    pub modes: Vec<DispatchMode>,
+}
+
+impl PhasePlan {
+    /// A plan running every phase under one mode (the baseline the
+    /// autotuner's flip search starts from).
+    pub fn uniform(threshold: usize, mode: DispatchMode, phases: usize) -> PhasePlan {
+        PhasePlan { threshold, modes: vec![mode; phases] }
+    }
+
+    /// Does this plan line up with `graph`'s phase structure?
+    pub fn matches(&self, graph: &Graph) -> bool {
+        !self.modes.is_empty()
+            && crate::graph::levels::width_phases(graph, self.threshold).len() == self.modes.len()
+    }
+
+    /// Number of phase boundaries where the mode actually changes.
+    pub fn mode_switches(&self) -> u64 {
+        self.modes.windows(2).filter(|w| w[0] != w[1]).count() as u64
+    }
+
+    /// Compact human-readable form, e.g. `c|d|c` (threshold 4).
+    pub fn render(&self) -> String {
+        let tags: Vec<&str> = self
+            .modes
+            .iter()
+            .map(|m| match m {
+                DispatchMode::Centralized => "c",
+                DispatchMode::Decentralized => "d",
+            })
+            .collect();
+        format!("{} (width threshold {})", tags.join("|"), self.threshold)
     }
 }
 
@@ -139,6 +213,13 @@ pub struct EngineMetrics {
     pub executor_busy_us: Vec<f64>,
     /// Ops routed to the light-weight executor.
     pub lightweight_ops: u64,
+    /// Decentralized dispatch: ops acquired by stealing (0 otherwise).
+    pub steals: u64,
+    /// Of `steals`, how many crossed a NUMA-domain boundary (and paid the
+    /// `steal_cross_domain_us` surcharge).
+    pub steals_cross_domain: u64,
+    /// Phased runs: phase boundaries where the dispatch mode changed.
+    pub mode_switches: u64,
 }
 
 impl EngineMetrics {
@@ -186,10 +267,35 @@ mod tests {
     fn dispatch_mode_roundtrip_and_aliases() {
         for m in DispatchMode::ALL {
             assert_eq!(DispatchMode::parse(m.name()), Some(m));
+            assert_eq!(m.other().other(), m);
+            assert_ne!(m.other(), m);
         }
         assert_eq!(DispatchMode::parse("central"), Some(DispatchMode::Centralized));
         assert_eq!(DispatchMode::parse("DECENTRAL"), Some(DispatchMode::Decentralized));
         assert_eq!(DispatchMode::parse("psychic"), None);
+    }
+
+    #[test]
+    fn dispatch_precedence_is_flag_artifact_config_default() {
+        use DispatchMode::{Centralized as C, Decentralized as D};
+        // the satellite's pinned order: flag > artifact > config > default
+        assert_eq!(DispatchMode::resolve(Some(C), Some(D), Some(D)), Some(C));
+        assert_eq!(DispatchMode::resolve(None, Some(D), Some(C)), Some(D));
+        assert_eq!(DispatchMode::resolve(None, None, Some(D)), Some(D));
+        assert_eq!(DispatchMode::resolve(None, None, None), None, "None = engine default");
+        // every weaker source is ignored when a stronger one is present
+        assert_eq!(DispatchMode::resolve(Some(D), None, Some(C)), Some(D));
+        assert_eq!(DispatchMode::resolve(None, Some(C), None), Some(C));
+    }
+
+    #[test]
+    fn phase_plan_helpers() {
+        use DispatchMode::{Centralized as C, Decentralized as D};
+        let plan = PhasePlan { threshold: 4, modes: vec![C, D, D, C] };
+        assert_eq!(plan.mode_switches(), 2);
+        assert_eq!(PhasePlan::uniform(4, C, 3).mode_switches(), 0);
+        assert!(plan.render().starts_with("c|d|d|c"));
+        assert!(plan.render().contains("threshold 4"));
     }
 
     #[test]

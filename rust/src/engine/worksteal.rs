@@ -195,6 +195,108 @@ impl WorkStealDeque {
     }
 }
 
+/// The quantized critical-path level carried in a packed deque key's high
+/// half ([`super::ready::pack_entry`] layout). Victim ranking compares
+/// *levels*, not whole keys: two entries on the same CP level differ only
+/// by node id, and preferring a same-domain victim among level-ties is
+/// exactly the topology-awareness §2/§9 asks for.
+#[inline]
+pub fn entry_level(key: u64) -> u32 {
+    (key >> 32) as u32
+}
+
+/// Executor→NUMA-domain map plus the cross-domain steal policy, for
+/// topology-aware victim ranking (§2's SNC modes; quadrant machines use
+/// [`DomainMap::flat`], which makes every ranking decision identical to
+/// the PR-3 domain-blind one).
+///
+/// The rule ([`steal_highest_numa`]): steal from the same-domain victim
+/// exposing the highest key; go cross-domain only when the local domain is
+/// dry, or a cross-domain top's *level* exceeds the local best's level by
+/// more than `cross_margin` — i.e. the remote op is deeper on the critical
+/// path by enough that eating the mesh crossing (priced by
+/// `Calibration::steal_cross_domain_us` in the simulator) still wins.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DomainMap {
+    domains: Vec<u32>,
+    /// Margin a cross-domain top's quantized level must clear over the
+    /// local best before it is preferred, in **units of the packed key's
+    /// level field** — the top 32 bits of the order-preserving `f64`-bit
+    /// map ([`super::ready::pack_entry`]), *not* a linear µs scale. One
+    /// unit is ≈ a 2⁻²⁰ relative level difference (exponent bits dominate
+    /// the field), so nonzero margins only discriminate between
+    /// exact/near ties and everything else; they cannot express "X µs of
+    /// critical path". The margin that matters in practice is **0**: stay
+    /// local on level ties, cross on any strictly higher level — which is
+    /// what every production call site uses
+    /// ([`DomainMap::flat`]/[`DomainMap::of_fleet`] and the simulator).
+    /// Larger values make the local preference coarsely stickier and are
+    /// kept for experimentation (property-tested against the brute-force
+    /// rule either way).
+    pub cross_margin: u32,
+}
+
+impl DomainMap {
+    pub fn new(domains: Vec<u32>, cross_margin: u32) -> DomainMap {
+        DomainMap { domains, cross_margin }
+    }
+
+    /// Single-domain map: every victim ranks equally (quadrant mode, or
+    /// a host whose topology is unknown).
+    pub fn flat(executors: usize) -> DomainMap {
+        DomainMap { domains: vec![0; executors], cross_margin: 0 }
+    }
+
+    /// Derive the map from a machine's fleet shape
+    /// ([`crate::cost::machine::Machine::executor_domain_map`]).
+    pub fn of_fleet(
+        machine: &crate::cost::machine::Machine,
+        executors: usize,
+        threads_per: usize,
+    ) -> DomainMap {
+        DomainMap { domains: machine.executor_domain_map(executors, threads_per), cross_margin: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.domains.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.domains.is_empty()
+    }
+
+    pub fn domain_of(&self, executor: usize) -> u32 {
+        self.domains[executor]
+    }
+
+    pub fn same_domain(&self, a: usize, b: usize) -> bool {
+        self.domains[a] == self.domains[b]
+    }
+
+    /// More than one distinct domain present?
+    pub fn is_multi_domain(&self) -> bool {
+        self.domains.windows(2).any(|w| w[0] != w[1])
+    }
+}
+
+/// How an executor came by its next op — the accounting the runtime and
+/// the simulator's cost model both need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acquire {
+    /// Popped from the own deque's LIFO end.
+    LocalPop,
+    /// Stolen from a victim in the same NUMA domain.
+    StealLocalDomain,
+    /// Stolen across a domain boundary (pays the mesh-crossing surcharge).
+    StealCrossDomain,
+}
+
+impl Acquire {
+    pub fn is_steal(self) -> bool {
+        self != Acquire::LocalPop
+    }
+}
+
 /// CP-aware acquisition for executor `me`: pop the own deque's LIFO end,
 /// and when it is empty steal the **highest-priority exposed entry** across
 /// all victims ([`steal_highest`]). Returns the key and whether it was
@@ -204,6 +306,66 @@ pub fn acquire(deques: &[WorkStealDeque], me: usize) -> Option<(u64, bool)> {
         return Some((key, false));
     }
     steal_highest(deques, me).map(|key| (key, true))
+}
+
+/// Topology-aware [`acquire`]: same local-pop fast path, NUMA-ranked
+/// stealing ([`steal_highest_numa`]) when the own deque is dry.
+pub fn acquire_numa(
+    deques: &[WorkStealDeque],
+    me: usize,
+    map: &DomainMap,
+) -> Option<(u64, Acquire)> {
+    if let Some(key) = deques[me].pop() {
+        return Some((key, Acquire::LocalPop));
+    }
+    steal_highest_numa(deques, me, map)
+}
+
+/// The steal half of [`acquire_numa`]: rank victims by exposed top key
+/// *within* `me`'s NUMA domain first, and cross the domain boundary only
+/// when the local domain exposes nothing or a remote top's level beats the
+/// local best by more than `map.cross_margin` (see [`DomainMap`]). Within
+/// the chosen side the highest full key wins, first victim among exact
+/// ties — the same deterministic rule [`steal_highest`] uses, so a
+/// [`DomainMap::flat`] map reproduces it bit-for-bit. A lost CAS rescans;
+/// `None` when every victim looks empty.
+pub fn steal_highest_numa(
+    deques: &[WorkStealDeque],
+    me: usize,
+    map: &DomainMap,
+) -> Option<(u64, Acquire)> {
+    debug_assert_eq!(deques.len(), map.len(), "one domain per executor");
+    loop {
+        let mut best_local: Option<(usize, u64)> = None;
+        let mut best_remote: Option<(usize, u64)> = None;
+        for (v, d) in deques.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            if let Some(k) = d.peek_top() {
+                let best = if map.same_domain(me, v) { &mut best_local } else { &mut best_remote };
+                if best.map_or(true, |(_, bk)| k > bk) {
+                    *best = Some((v, k));
+                }
+            }
+        }
+        let (victim, kind) = match (best_local, best_remote) {
+            (None, None) => return None,
+            (Some((v, _)), None) => (v, Acquire::StealLocalDomain),
+            (None, Some((v, _))) => (v, Acquire::StealCrossDomain),
+            (Some((lv, lk)), Some((rv, rk))) => {
+                if entry_level(rk) > entry_level(lk).saturating_add(map.cross_margin) {
+                    (rv, Acquire::StealCrossDomain)
+                } else {
+                    (lv, Acquire::StealLocalDomain)
+                }
+            }
+        };
+        match deques[victim].steal() {
+            Steal::Success(key) => return Some((key, kind)),
+            Steal::Retry | Steal::Empty => continue,
+        }
+    }
 }
 
 /// The steal half of [`acquire`]: rank victims by their exposed top key
@@ -307,6 +469,115 @@ mod tests {
         assert_eq!(acquire(&deques, 0), Some((7, true)));
         assert_eq!(acquire(&deques, 0), None);
         assert_eq!(steal_highest(&deques, 0), None);
+    }
+
+    /// Keys with a controllable level half (`level << 32 | node`), the
+    /// same layout as [`crate::engine::ready::pack_entry`].
+    fn key(level: u32, node: u32) -> u64 {
+        ((level as u64) << 32) | node as u64
+    }
+
+    #[test]
+    fn entry_level_unpacks_the_high_half() {
+        assert_eq!(entry_level(key(7, 3)), 7);
+        assert_eq!(entry_level(key(u32::MAX, 0)), u32::MAX);
+        assert_eq!(entry_level(0), 0);
+    }
+
+    #[test]
+    fn flat_domain_map_reproduces_domain_blind_stealing() {
+        // same deque states, both rankings: the flat map must pick the
+        // exact same victim sequence as the PR-3 domain-blind rule
+        let mk = || {
+            let deques: Vec<WorkStealDeque> = (0..4).map(|_| WorkStealDeque::new(8)).collect();
+            deques[1].push(key(5, 1)).unwrap();
+            deques[2].push(key(9, 2)).unwrap();
+            deques[2].push(key(3, 22)).unwrap();
+            deques[3].push(key(9, 1)).unwrap(); // level-ties with deque 2's top
+            deques
+        };
+        let map = DomainMap::flat(4);
+        assert!(!map.is_multi_domain());
+        let (a, b) = (mk(), mk());
+        let mut blind = Vec::new();
+        while let Some(k) = steal_highest(&a, 0) {
+            blind.push(k);
+        }
+        let mut numa = Vec::new();
+        while let Some((k, kind)) = steal_highest_numa(&b, 0, &map) {
+            assert_eq!(kind, Acquire::StealLocalDomain, "flat map has no remote domain");
+            numa.push(k);
+        }
+        assert_eq!(blind, numa);
+    }
+
+    #[test]
+    fn same_domain_victim_preferred_on_level_ties() {
+        // me = 0 in domain 0 with victim 1; victims 2,3 in domain 1.
+        // Remote tops tie or trail the local level → stay local.
+        let deques: Vec<WorkStealDeque> = (0..4).map(|_| WorkStealDeque::new(8)).collect();
+        let map = DomainMap::new(vec![0, 0, 1, 1], 0);
+        deques[1].push(key(6, 1)).unwrap();
+        deques[2].push(key(6, 99)).unwrap(); // same level, higher full key
+        deques[3].push(key(5, 1)).unwrap();
+        assert_eq!(
+            steal_highest_numa(&deques, 0, &map),
+            Some((key(6, 1), Acquire::StealLocalDomain)),
+            "a level-tied remote top must not out-rank the local victim"
+        );
+    }
+
+    #[test]
+    fn cross_domain_steal_needs_a_level_win_beyond_the_margin() {
+        let deques: Vec<WorkStealDeque> = (0..3).map(|_| WorkStealDeque::new(8)).collect();
+        deques[1].push(key(4, 1)).unwrap(); // local (domain 0)
+        deques[2].push(key(6, 2)).unwrap(); // remote (domain 1), 2 levels up
+        // margin 0: remote's strictly higher level wins
+        let sharp = DomainMap::new(vec![0, 0, 1], 0);
+        assert_eq!(
+            steal_highest_numa(&deques, 0, &sharp).unwrap().1,
+            Acquire::StealCrossDomain
+        );
+        // margin 2: a 2-level lead is not *beyond* the margin → stay local
+        let deques: Vec<WorkStealDeque> = (0..3).map(|_| WorkStealDeque::new(8)).collect();
+        deques[1].push(key(4, 1)).unwrap();
+        deques[2].push(key(6, 2)).unwrap();
+        let sticky = DomainMap::new(vec![0, 0, 1], 2);
+        assert_eq!(
+            steal_highest_numa(&deques, 0, &sticky),
+            Some((key(4, 1), Acquire::StealLocalDomain))
+        );
+    }
+
+    #[test]
+    fn dry_local_domain_falls_through_to_remote() {
+        let deques: Vec<WorkStealDeque> = (0..3).map(|_| WorkStealDeque::new(8)).collect();
+        let map = DomainMap::new(vec![0, 0, 1], 0);
+        deques[2].push(key(1, 7)).unwrap(); // only remote work exists
+        assert_eq!(
+            acquire_numa(&deques, 0, &map),
+            Some((key(1, 7), Acquire::StealCrossDomain))
+        );
+        assert_eq!(acquire_numa(&deques, 0, &map), None);
+        // own deque still wins over everything
+        deques[0].push(key(0, 1)).unwrap();
+        deques[2].push(key(9, 9)).unwrap();
+        assert_eq!(
+            acquire_numa(&deques, 0, &map),
+            Some((key(0, 1), Acquire::LocalPop))
+        );
+    }
+
+    #[test]
+    fn domain_map_of_fleet_matches_machine_striping() {
+        let snc = crate::cost::machine::Machine::knl7250_snc4();
+        let map = DomainMap::of_fleet(&snc, 8, 8);
+        assert_eq!(map.len(), 8);
+        assert!(map.is_multi_domain());
+        assert!(map.same_domain(0, 1));
+        assert!(!map.same_domain(0, 7));
+        let quad = crate::cost::machine::Machine::knl7250();
+        assert!(!DomainMap::of_fleet(&quad, 8, 8).is_multi_domain());
     }
 
     #[test]

@@ -242,6 +242,33 @@ impl Graph {
         Ok(())
     }
 
+    /// The subgraph induced by `keep`: those nodes (re-numbered
+    /// `0..keep.len()` in `keep` order) plus every edge whose endpoints
+    /// are both kept. Returns the subgraph and the sub→orig id map (which
+    /// is `keep` itself). The phased dispatch runtime executes each width
+    /// phase as an induced subgraph — cross-phase edges are dropped
+    /// because their sources have already executed when the phase starts.
+    ///
+    /// `keep` must be non-empty and duplicate-free.
+    pub fn induced_subgraph(&self, keep: &[NodeId]) -> (Graph, Vec<NodeId>) {
+        let mut orig_to_sub = vec![NodeId::MAX; self.len()];
+        let mut builder = super::builder::GraphBuilder::new();
+        for &v in keep {
+            debug_assert_eq!(orig_to_sub[v as usize], NodeId::MAX, "duplicate node {v} in keep");
+            let n = self.node(v);
+            orig_to_sub[v as usize] = builder.add(n.name.clone(), n.kind.clone());
+        }
+        for &v in keep {
+            for &s in self.succs(v) {
+                if orig_to_sub[s as usize] != NodeId::MAX {
+                    builder.depend(orig_to_sub[v as usize], orig_to_sub[s as usize]);
+                }
+            }
+        }
+        let sub = builder.build().expect("induced subgraph of a DAG stays a non-empty DAG");
+        (sub, keep.to_vec())
+    }
+
     /// Total flops over all nodes.
     pub fn total_flops(&self) -> f64 {
         self.nodes.iter().map(|n| n.kind.flops()).sum()
@@ -458,6 +485,28 @@ mod tests {
         assert_eq!(triggered.load(Ordering::SeqCst), 1, "sink triggered exactly once");
         assert_eq!(finals.load(Ordering::SeqCst), 0, "sink itself not yet completed");
         assert!(t.complete(&g, sink, |_| panic!("sink has no successors")));
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_internal_edges_and_maps_ids() {
+        let g = diamond();
+        // keep the middle band {b, c} — no internal edges survive
+        let (band, map) = g.induced_subgraph(&[1, 2]);
+        assert_eq!(band.len(), 2);
+        assert_eq!(band.num_edges(), 0);
+        assert_eq!(map, vec![1, 2]);
+        assert_eq!(band.node(0).name, "b");
+        // keep {a, b, d}: a→b and b→d survive, the a→c→d path is dropped
+        let (sub, map) = g.induced_subgraph(&[0, 1, 3]);
+        assert_eq!(map, vec![0, 1, 3]);
+        assert_eq!(sub.num_edges(), 2);
+        assert_eq!(sub.succs(0), &[1]);
+        assert_eq!(sub.succs(1), &[2]);
+        assert_eq!(sub.node(2).name, "d");
+        // whole graph round-trips
+        let (whole, _) = g.induced_subgraph(&[0, 1, 2, 3]);
+        assert_eq!(whole.num_edges(), g.num_edges());
+        assert_eq!(whole.topo_order().len(), 4);
     }
 
     #[test]

@@ -53,6 +53,98 @@ pub fn critical_path(graph: &Graph, durations: &[f64]) -> Vec<NodeId> {
     }
 }
 
+/// Topological depth of each node: 0 for sources,
+/// `1 + max(depth(pred))` otherwise. Where [`levels`] measures the time
+/// *remaining to the sink* (§4.3), depth measures the hop distance *from
+/// the sources* — the axis the per-phase dispatch split works along,
+/// because a node's predecessors always sit at strictly smaller depths.
+pub fn depths(graph: &Graph) -> Vec<u32> {
+    let order = graph.topo_order();
+    let mut depth = vec![0u32; graph.len()];
+    for &v in &order {
+        for &p in graph.preds(v) {
+            depth[v as usize] = depth[v as usize].max(depth[p as usize] + 1);
+        }
+    }
+    depth
+}
+
+/// One width phase: a maximal run of consecutive depths that are all on
+/// the same side of the width threshold (see [`width_phases`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Phase {
+    /// First depth of the band (inclusive).
+    pub first_depth: u32,
+    /// Last depth of the band (inclusive).
+    pub last_depth: u32,
+    /// Total nodes across the band's depths.
+    pub nodes: usize,
+    /// Widest single depth in the band.
+    pub max_width: usize,
+    /// `max_width >= threshold`: a wide phase (decentralized dispatch's
+    /// home turf); narrow phases are chain-like (the centralized
+    /// scheduler's LW lane shines there).
+    pub wide: bool,
+}
+
+/// Split the graph into **width phases**: per-depth node counts are
+/// classified wide/narrow against `threshold` (ops-per-depth ≥ threshold)
+/// and consecutive same-class depths merge into one phase. Every node
+/// belongs to exactly one phase, and all of a node's predecessors are in
+/// the same or an earlier phase — which is what lets the runtime put a
+/// barrier at phase boundaries and switch dispatch architecture there
+/// ([`crate::engine::PhasePlan`]).
+pub fn width_phases(graph: &Graph, threshold: usize) -> Vec<Phase> {
+    let threshold = threshold.max(1);
+    let depth = depths(graph);
+    let max_depth = depth.iter().copied().max().unwrap_or(0) as usize;
+    let mut width = vec![0usize; max_depth + 1];
+    for &d in &depth {
+        width[d as usize] += 1;
+    }
+    let mut phases: Vec<Phase> = Vec::new();
+    for (d, &w) in width.iter().enumerate() {
+        let wide = w >= threshold;
+        match phases.last_mut() {
+            Some(p) if p.wide == wide => {
+                p.last_depth = d as u32;
+                p.nodes += w;
+                p.max_width = p.max_width.max(w);
+            }
+            _ => phases.push(Phase {
+                first_depth: d as u32,
+                last_depth: d as u32,
+                nodes: w,
+                max_width: w,
+                wide,
+            }),
+        }
+    }
+    phases
+}
+
+/// The nodes of each phase of [`width_phases`], in ascending id order —
+/// the per-phase work lists the phased engines execute. Assignment goes
+/// through a depth→phase lookup table (phases are contiguous depth
+/// bands), so the cost is O(V + E + depths), not O(V × phases).
+pub fn phase_members(graph: &Graph, phases: &[Phase]) -> Vec<Vec<NodeId>> {
+    let depth = depths(graph);
+    let max_depth = phases.last().map(|p| p.last_depth as usize).unwrap_or(0);
+    let mut phase_of_depth = vec![usize::MAX; max_depth + 1];
+    for (k, p) in phases.iter().enumerate() {
+        for d in p.first_depth..=p.last_depth {
+            phase_of_depth[d as usize] = k;
+        }
+    }
+    let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); phases.len()];
+    for v in 0..graph.len() as NodeId {
+        let k = phase_of_depth[depth[v as usize] as usize];
+        debug_assert_ne!(k, usize::MAX, "width_phases covers every depth");
+        members[k].push(v);
+    }
+    members
+}
+
 /// Lower bound on makespan with unlimited executors: the critical-path
 /// length. Used to sanity-check every engine's output.
 pub fn critical_path_length(graph: &Graph, durations: &[f64]) -> f64 {
@@ -141,5 +233,91 @@ mod tests {
     fn wrong_duration_len_panics() {
         let (g, _) = sample();
         levels(&g, &[1.0]);
+    }
+
+    /// 1 → {4 wide} → {4 wide} → 1: a narrow head, a wide middle band,
+    /// a narrow tail.
+    fn fan_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mut mid2 = Vec::new();
+        for i in 0..4 {
+            let m1 = b.add(format!("m1_{i}"), OpKind::Scalar);
+            b.depend(src, m1);
+            let m2 = b.add(format!("m2_{i}"), OpKind::Scalar);
+            b.depend(m1, m2);
+            mid2.push(m2);
+        }
+        let sink = b.add("sink", OpKind::Scalar);
+        for &m in &mid2 {
+            b.depend(m, sink);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn depths_count_hops_from_sources() {
+        let (g, _) = sample();
+        // chain a→b→c plus isolated d
+        assert_eq!(depths(&g), vec![0, 1, 2, 0]);
+        let fan = fan_graph();
+        let d = depths(&fan);
+        assert_eq!(d[0], 0, "source");
+        assert_eq!(*d.iter().max().unwrap(), 3, "sink is 3 hops deep");
+        // every edge goes strictly downward in depth
+        for v in 0..fan.len() as u32 {
+            for &p in fan.preds(v) {
+                assert!(d[p as usize] < d[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn width_phases_band_consecutive_same_class_depths() {
+        let fan = fan_graph();
+        // widths per depth: 1, 4, 4, 1 → at threshold 2: narrow|wide|narrow
+        let phases = width_phases(&fan, 2);
+        assert_eq!(phases.len(), 3);
+        assert!(!phases[0].wide && phases[1].wide && !phases[2].wide);
+        assert_eq!(phases[0].nodes, 1);
+        assert_eq!(phases[1].nodes, 8);
+        assert_eq!(phases[1].max_width, 4);
+        assert_eq!(phases[2].nodes, 1);
+        assert_eq!((phases[1].first_depth, phases[1].last_depth), (1, 2));
+        // every node lands in exactly one phase
+        assert_eq!(phases.iter().map(|p| p.nodes).sum::<usize>(), fan.len());
+        // threshold above the max width ⇒ one all-narrow phase
+        let one = width_phases(&fan, 50);
+        assert_eq!(one.len(), 1);
+        assert!(!one[0].wide);
+        assert_eq!(one[0].nodes, fan.len());
+        // threshold 1 ⇒ every depth is wide ⇒ one all-wide phase
+        let wide = width_phases(&fan, 1);
+        assert_eq!(wide.len(), 1);
+        assert!(wide[0].wide);
+    }
+
+    #[test]
+    fn phase_members_partition_nodes_and_respect_dependencies() {
+        let fan = fan_graph();
+        let phases = width_phases(&fan, 2);
+        let members = phase_members(&fan, &phases);
+        assert_eq!(members.len(), phases.len());
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, fan.len());
+        // phase index of each node
+        let mut phase_of = vec![usize::MAX; fan.len()];
+        for (k, m) in members.iter().enumerate() {
+            assert_eq!(m.len(), phases[k].nodes);
+            for &v in m {
+                phase_of[v as usize] = k;
+            }
+        }
+        // predecessors never live in a *later* phase
+        for v in 0..fan.len() as u32 {
+            for &p in fan.preds(v) {
+                assert!(phase_of[p as usize] <= phase_of[v as usize]);
+            }
+        }
     }
 }

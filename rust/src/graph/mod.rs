@@ -22,7 +22,7 @@ pub mod stats;
 
 pub use builder::GraphBuilder;
 pub use dag::{AtomicDepTracker, Graph, GraphError, NodeId};
-pub use levels::{critical_path, levels};
+pub use levels::{critical_path, depths, levels, phase_members, width_phases, Phase};
 pub use memory::{plan as plan_memory, MemoryPlan};
 pub use op::{EwKind, OpKind};
 pub use stats::GraphStats;

@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 
 use crate::cost::machine::Machine;
 use crate::engine::autotune::{AutotuneReport, Autotuner};
-use crate::engine::{DispatchMode, SimEnv};
+use crate::engine::{DispatchMode, PhasePlan, SimEnv};
 use crate::graph::Graph;
 use crate::util::json::{self, Json};
 
@@ -182,8 +182,10 @@ fn parse_manifest(doc: &Json) -> Result<Vec<Manifest>, ArtifactError> {
 ///
 /// v2 (PR 3): added the per-machine key (`machine_cores`,
 /// `machine_numa_domains`) and the dispatch-mode axis (`best_dispatch`,
-/// per-measurement `dispatch`). v1 artifacts degrade to a fresh search.
-pub const TUNING_FORMAT_VERSION: u64 = 2;
+/// per-measurement `dispatch`). v3 (PR 4): added the optional per-phase
+/// dispatch plan (`phase_threshold` + `phase_modes`). v1/v2 artifacts
+/// degrade to a fresh search.
+pub const TUNING_FORMAT_VERSION: u64 = 3;
 
 /// The hardware identity a tuning result is valid for: physical core count
 /// and sub-NUMA clustering mode (quadrant = 1 domain, SNC-4 = 4). One
@@ -239,6 +241,10 @@ pub struct TuningArtifact {
     pub best: (usize, usize),
     /// Winning dispatch architecture.
     pub best_dispatch: DispatchMode,
+    /// Per-phase dispatch plan, when the autotuner's flip search found one
+    /// that beats the uniform winner (v3). `None` = run uniformly under
+    /// `best_dispatch`.
+    pub phase_plan: Option<PhasePlan>,
     pub best_makespan_us: f64,
     /// Profiling iterations the search spent.
     pub total_profile_iterations: usize,
@@ -288,6 +294,7 @@ impl TuningArtifact {
             graph_nodes,
             best: report.best,
             best_dispatch: report.best_dispatch,
+            phase_plan: report.phase_plan.clone(),
             best_makespan_us: report.best_makespan_us,
             total_profile_iterations: report.total_profile_iterations,
             durations_us: report.durations_us.clone(),
@@ -346,6 +353,12 @@ impl TuningArtifact {
                 "durations_us",
                 Json::Arr(self.durations_us.iter().map(|&d| Json::Num(d)).collect()),
             );
+        if let Some(plan) = &self.phase_plan {
+            doc.set("phase_threshold", plan.threshold).set(
+                "phase_modes",
+                Json::Arr(plan.modes.iter().map(|m| Json::from(m.name())).collect()),
+            );
+        }
         let trace: Vec<Json> = self
             .search_trace
             .iter()
@@ -432,6 +445,30 @@ impl TuningArtifact {
                 search_trace.push(TuningRound { iterations, measurements });
             }
         }
+        let phase_plan = match (doc.get("phase_threshold"), doc.get("phase_modes")) {
+            (None, None) => None,
+            (Some(t), Some(ms)) => {
+                let threshold = t
+                    .as_f64()
+                    .ok_or_else(|| bad("non-numeric `phase_threshold`"))?
+                    as usize;
+                let modes: Vec<DispatchMode> = ms
+                    .as_arr()
+                    .ok_or_else(|| bad("`phase_modes` must be an array"))?
+                    .iter()
+                    .map(|m| {
+                        m.as_str()
+                            .and_then(DispatchMode::parse)
+                            .ok_or_else(|| bad("unknown mode in `phase_modes`"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                if modes.is_empty() || threshold == 0 {
+                    return Err(bad("degenerate phase plan"));
+                }
+                Some(PhasePlan { threshold, modes })
+            }
+            _ => return Err(bad("phase_threshold and phase_modes must appear together")),
+        };
         let artifact = TuningArtifact {
             version,
             tag,
@@ -444,6 +481,7 @@ impl TuningArtifact {
             graph_nodes: num("graph_nodes")? as usize,
             best: (num("best_executors")? as usize, num("best_threads_per")? as usize),
             best_dispatch: dispatch_of(doc.get("best_dispatch"))?,
+            phase_plan,
             best_makespan_us: num("best_makespan_us")?,
             total_profile_iterations: num("total_profile_iterations")? as usize,
             durations_us,
@@ -604,6 +642,10 @@ mod tests {
             graph_nodes: 4,
             best: (8, 8),
             best_dispatch: DispatchMode::Decentralized,
+            phase_plan: Some(PhasePlan {
+                threshold: 8,
+                modes: vec![DispatchMode::Centralized, DispatchMode::Decentralized],
+            }),
             best_makespan_us: 1234.5,
             total_profile_iterations: 25,
             durations_us: vec![1.5, 2.25, 0.125, 7.0],
@@ -661,7 +703,9 @@ mod tests {
             TuningArtifact::load(&path).unwrap_err(),
             ArtifactError::BadTuning(_)
         ));
-        std::fs::write(&path, "{\"version\": 1}").unwrap();
+        // current version but nothing else: passes the version gate, then
+        // fails on the missing payload
+        std::fs::write(&path, format!("{{\"version\": {TUNING_FORMAT_VERSION}}}")).unwrap();
         assert!(matches!(
             TuningArtifact::load(&path).unwrap_err(),
             ArtifactError::BadTuning(_)
@@ -701,6 +745,48 @@ mod tests {
         doc.set("version", 1u64);
         let err = TuningArtifact::from_json(&doc).unwrap_err();
         assert!(matches!(err, ArtifactError::TuningVersion { found: 1, .. }));
+    }
+
+    #[test]
+    fn v2_artifact_without_phase_fields_degrades() {
+        // a v2 document (pre-phase-plan schema) must be rejected by the
+        // version gate so callers re-search and re-stamp a v3 file — the
+        // same degrade path as v1 and corrupt artifacts
+        let mut doc = sample_tuning().to_json();
+        doc.set("version", 2u64);
+        let err = TuningArtifact::from_json(&doc).unwrap_err();
+        assert!(matches!(err, ArtifactError::TuningVersion { found: 2, expected: 3 }));
+    }
+
+    #[test]
+    fn artifact_without_phase_plan_roundtrips_with_absent_keys() {
+        // None serializes as *absent* keys (not null), and parses back
+        let a = TuningArtifact { phase_plan: None, ..sample_tuning() };
+        let text = a.to_json().to_string_pretty();
+        assert!(!text.contains("phase_threshold"));
+        assert!(!text.contains("phase_modes"));
+        let back = TuningArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn half_specified_phase_plan_is_corrupt() {
+        // phase_threshold without phase_modes (or vice versa) is a
+        // hand-edited file — reject it as BadTuning, never panic
+        let mut doc = TuningArtifact { phase_plan: None, ..sample_tuning() }.to_json();
+        doc.set("phase_threshold", 4u64);
+        let err = TuningArtifact::from_json(&doc).unwrap_err();
+        assert!(matches!(err, ArtifactError::BadTuning(_)));
+        // unknown mode names are corrupt too
+        let mut doc = sample_tuning().to_json();
+        doc.set(
+            "phase_modes",
+            crate::util::json::Json::Arr(vec![crate::util::json::Json::from("psychic")]),
+        );
+        assert!(matches!(
+            TuningArtifact::from_json(&doc).unwrap_err(),
+            ArtifactError::BadTuning(_)
+        ));
     }
 
     #[test]

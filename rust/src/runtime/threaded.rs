@@ -12,13 +12,26 @@
 //! successor's remaining-deps counter and pushes newly-ready ops onto its
 //! own [`WorkStealDeque`] (packed CP-level keys). Local pops take the LIFO
 //! end for cache affinity; idle executors steal the highest-priority
-//! exposed entry across victims, preserving §4.3 CP-first semantics (see
-//! [`crate::engine::worksteal`] for the full argument). The calling thread
-//! degrades to a parker/watchdog: it seeds the source ops, waits for the
-//! quiescence signal (raised by whichever executor completes the final
-//! op), and collects the trace. Keeping both modes behind
-//! [`DispatchMode`] keeps them differentially testable
-//! (`tests/differential_engines.rs`).
+//! exposed entry, preserving §4.3 CP-first semantics (see
+//! [`crate::engine::worksteal`] for the full argument).
+//!
+//! Three topology/phase refinements (PR 4) sit on top:
+//!
+//! * **NUMA-aware victim selection**: give the engine a
+//!   [`DomainMap`] (e.g. via [`ThreadedGraphi::with_numa`]) and idle
+//!   executors prefer same-domain victims, crossing the boundary only for
+//!   a strictly deeper critical path — §2's SNC modes make remote-slice
+//!   traffic expensive, and the simulator prices the crossing with
+//!   `Calibration::steal_cross_domain_us`.
+//! * **Adaptive idle backoff**: the idle loop is a spin→yield→park state
+//!   machine ([`crate::engine::backoff`]); producers bump an
+//!   [`EventCounter`] after every push, so parked executors wake without
+//!   polling and idle executors stop burning the cores busy executors'
+//!   op teams need (the §3 contention argument).
+//! * **Per-phase dispatch**: a [`PhasePlan`] runs each width phase of the
+//!   graph under its own mode with a barrier at phase boundaries
+//!   ([`ThreadedGraphi::run`] dispatches to `run_phased`); tuning
+//!   artifacts (format v3) carry the plan the autotuner found.
 //!
 //! On this repo's 1-core CI machine the fleet cannot show parallel
 //! *speedup*; what it demonstrates is that both dispatch paths are real
@@ -28,17 +41,24 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::engine::backoff::{Backoff, BackoffStage, EventCounter};
 use crate::engine::mpsc::MpscQueue;
 use crate::engine::policies::Policy;
 use crate::engine::ready::{entry_node, pack_entry, DepTracker, ReadySet};
 use crate::engine::ring::SpscRing;
 use crate::engine::scheduler::IdleBitmap;
 use crate::engine::trace::OpRecord;
-use crate::engine::worksteal::{self, WorkStealDeque};
-use crate::engine::DispatchMode;
-use crate::graph::{AtomicDepTracker, Graph, NodeId};
+use crate::engine::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
+use crate::engine::{DispatchMode, PhasePlan};
+use crate::graph::{phase_members, width_phases, AtomicDepTracker, Graph, NodeId};
+
+/// How long a parked executor sleeps before re-checking the world anyway.
+/// Purely a backstop — producers wake parked executors through the event
+/// counter; the timeout only bounds the damage of a hypothetical missed
+/// wakeup to a periodic poll instead of a hang.
+const PARK_TIMEOUT: Duration = Duration::from_millis(1);
 
 /// Real-threads Graphi configuration.
 #[derive(Debug, Clone)]
@@ -52,6 +72,11 @@ pub struct ThreadedGraphi {
     pub buffer_depth: usize,
     /// Completion-resolution architecture.
     pub dispatch: DispatchMode,
+    /// Executor→NUMA-domain map for victim ranking in decentralized mode.
+    /// `None` = flat (domain-blind ranking, the quadrant-mode behaviour).
+    pub numa: Option<DomainMap>,
+    /// Per-phase dispatch assignment; overrides `dispatch` when set.
+    pub phase_plan: Option<PhasePlan>,
 }
 
 impl ThreadedGraphi {
@@ -61,6 +86,8 @@ impl ThreadedGraphi {
             policy: Policy::CriticalPathFirst,
             buffer_depth: 1,
             dispatch: DispatchMode::Decentralized,
+            numa: None,
+            phase_plan: None,
         }
     }
 
@@ -69,10 +96,37 @@ impl ThreadedGraphi {
         self
     }
 
-    /// Fleet shape (and dispatch mode) from a persisted tuning artifact.
+    /// Topology-aware victim selection from an explicit executor→domain
+    /// map (see [`DomainMap`]).
+    pub fn with_numa(mut self, map: DomainMap) -> ThreadedGraphi {
+        assert_eq!(map.len(), self.executors, "one domain per executor");
+        self.numa = Some(map);
+        self
+    }
+
+    /// Derive the domain map from a machine description's fleet striping
+    /// ([`crate::cost::machine::Machine::executor_domain_map`]).
+    pub fn with_numa_machine(
+        self,
+        machine: &crate::cost::machine::Machine,
+        threads_per: usize,
+    ) -> ThreadedGraphi {
+        let map = DomainMap::of_fleet(machine, self.executors, threads_per);
+        self.with_numa(map)
+    }
+
+    /// Run each width phase under its own dispatch mode.
+    pub fn with_phase_plan(mut self, plan: PhasePlan) -> ThreadedGraphi {
+        self.phase_plan = Some(plan);
+        self
+    }
+
+    /// Fleet shape, dispatch mode and phase plan from a persisted tuning
+    /// artifact.
     pub fn from_tuning(tuning: &crate::runtime::artifacts::TuningArtifact) -> ThreadedGraphi {
         ThreadedGraphi {
             dispatch: tuning.best_dispatch,
+            phase_plan: tuning.phase_plan.clone(),
             ..ThreadedGraphi::new(tuning.best.0.max(1))
         }
     }
@@ -90,6 +144,14 @@ pub struct ThreadedRunResult {
     pub dispatches: u64,
     /// Decentralized mode: ops acquired by stealing (0 when centralized).
     pub steals: u64,
+    /// Of `steals`, how many crossed a NUMA-domain boundary (0 without a
+    /// multi-domain [`DomainMap`]).
+    pub cross_domain_steals: u64,
+    /// Times an idle executor reached the park stage of the backoff state
+    /// machine and actually slept on the event counter.
+    pub parks: u64,
+    /// Phased runs: phase boundaries where the dispatch mode changed.
+    pub mode_switches: u64,
 }
 
 impl ThreadedGraphi {
@@ -104,6 +166,9 @@ impl ThreadedGraphi {
         let levels: Arc<[f64]> = levels.into();
         assert_eq!(levels.len(), graph.len());
         assert!(self.executors >= 1);
+        if let Some(plan) = &self.phase_plan {
+            return self.run_phased(graph, &levels, plan, &work);
+        }
         match self.dispatch {
             DispatchMode::Centralized => self.run_centralized(graph, &levels, &work),
             DispatchMode::Decentralized => self.run_decentralized(graph, &levels, &work),
@@ -122,10 +187,13 @@ impl ThreadedGraphi {
         // graph so a push can never fail (each node completes exactly once)
         let done_q: MpscQueue<(u32, NodeId)> = MpscQueue::new(graph.len() + 1);
         let shutdown = AtomicBool::new(false);
+        // wakes executors whose op buffers the scheduler just filled
+        let events = EventCounter::new();
         let t0 = Instant::now();
 
         let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
         let mut dispatches = 0u64;
+        let mut parks = 0u64;
 
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(n_exec);
@@ -133,12 +201,26 @@ impl ThreadedGraphi {
                 let op_ring = &op_rings[e];
                 let done_q = &done_q;
                 let shutdown = &shutdown;
+                let events = &events;
                 let work = &work;
                 handles.push(scope.spawn(move || {
                     // Algorithm 2: poll own buffer, execute, report back.
+                    // Idle iterations walk the spin→yield→park backoff
+                    // machine instead of burning the core forever.
                     let mut records = Vec::new();
+                    let mut backoff = Backoff::new();
+                    let mut my_parks = 0u64;
                     loop {
+                        // once the backoff reaches the park stage, register
+                        // as a waiter BEFORE polling — the registered
+                        // re-scan is the eventcount's lost-wakeup guard
+                        let prepared = (backoff.stage() == BackoffStage::Park)
+                            .then(|| events.prepare());
                         if let Some(node) = op_ring.pop() {
+                            if prepared.is_some() {
+                                events.cancel();
+                            }
+                            backoff.reset();
                             let start = t0.elapsed().as_secs_f64() * 1e6;
                             work(node);
                             let end = t0.elapsed().as_secs_f64() * 1e6;
@@ -153,10 +235,22 @@ impl ThreadedGraphi {
                                 .push((e as u32, node))
                                 .expect("completion queue sized for whole graph");
                         } else if shutdown.load(Ordering::Acquire) {
-                            return records;
+                            if prepared.is_some() {
+                                events.cancel();
+                            }
+                            return (records, my_parks);
                         } else {
-                            std::hint::spin_loop();
-                            std::thread::yield_now();
+                            match backoff.next() {
+                                BackoffStage::Spin => std::hint::spin_loop(),
+                                BackoffStage::Yield => std::thread::yield_now(),
+                                BackoffStage::Park => {
+                                    let observed =
+                                        prepared.expect("park stage registers before polling");
+                                    if events.park(observed, PARK_TIMEOUT) {
+                                        my_parks += 1;
+                                    }
+                                }
+                            }
                         }
                     }
                 }));
@@ -206,6 +300,10 @@ impl ThreadedGraphi {
                         available.set_busy(e);
                     }
                 }
+                if progressed {
+                    // wake any executor parked on an empty buffer
+                    events.notify();
+                }
                 // On the paper's machine the scheduler owns a reserved core
                 // and busy-polls (§5.2). On an oversubscribed host (e.g. a
                 // 1-core CI box) pure spinning starves the executor threads
@@ -219,21 +317,33 @@ impl ThreadedGraphi {
                 }
             }
             shutdown.store(true, Ordering::Release);
+            events.notify();
             for h in handles {
-                all_records.push(h.join().expect("executor thread panicked"));
+                let (records, p) = h.join().expect("executor thread panicked");
+                all_records.push(records);
+                parks += p;
             }
         });
 
         let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        ThreadedRunResult { wall_us, records, dispatches, steals: 0 }
+        ThreadedRunResult {
+            wall_us,
+            records,
+            dispatches,
+            steals: 0,
+            cross_domain_steals: 0,
+            parks,
+            mode_switches: 0,
+        }
     }
 
-    /// PR-3 architecture: executor-side successor resolution + CP-aware
-    /// work stealing. No scheduler loop exists; the calling thread only
-    /// seeds the sources, parks until the quiescence flag (raised by the
-    /// executor that completes the final op), and merges the trace.
+    /// PR-3 architecture: executor-side successor resolution + CP-aware,
+    /// NUMA-aware work stealing. No scheduler loop exists; the calling
+    /// thread only seeds the sources, joins the fleet (whose exit is the
+    /// quiescence flag raised by the executor completing the final op),
+    /// and merges the trace.
     fn run_decentralized<F>(&self, graph: &Graph, levels: &[f64], work: &F) -> ThreadedRunResult
     where
         F: Fn(NodeId) + Send + Sync,
@@ -248,12 +358,24 @@ impl ThreadedGraphi {
             self.policy
         );
         let n_exec = self.executors;
+        let domains = match &self.numa {
+            Some(map) => {
+                assert_eq!(map.len(), n_exec, "one domain per executor");
+                map.clone()
+            }
+            None => DomainMap::flat(n_exec),
+        };
         let deps = AtomicDepTracker::new(graph);
         // each deque could in the worst case hold every op; sizing them so
         // guarantees pushes never fail (each op is enqueued exactly once)
         let deques: Vec<WorkStealDeque> =
             (0..n_exec).map(|_| WorkStealDeque::new(graph.len())).collect();
         let done = AtomicBool::new(false);
+        // producers notify this after every deque push (a fence + one
+        // load unless someone is preparing to park); parked executors
+        // sleep on it instead of spinning (§3: idle spin burns the cores
+        // busy executors' op teams need)
+        let events = EventCounter::new();
 
         // Startup (coordinator duty #1): seed sources round-robin, in
         // ascending key order so every deque's LIFO end starts at its
@@ -270,27 +392,47 @@ impl ThreadedGraphi {
         let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
         let mut dispatches = 0u64;
         let mut steals = 0u64;
+        let mut cross_domain_steals = 0u64;
+        let mut parks = 0u64;
 
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(n_exec);
             for e in 0..n_exec {
                 let deques = &deques[..];
+                let domains = &domains;
                 let deps = &deps;
                 let done = &done;
+                let events = &events;
                 let work = &work;
                 handles.push(scope.spawn(move || {
                     let mut records = Vec::new();
                     let mut my_dispatches = 0u64;
                     let mut my_steals = 0u64;
+                    let mut my_cross = 0u64;
+                    let mut my_parks = 0u64;
                     let mut batch: Vec<u64> = Vec::new();
-                    let mut spins = 0u32;
+                    let mut backoff = Backoff::new();
                     loop {
-                        match worksteal::acquire(deques, e) {
-                            Some((key, stolen)) => {
-                                spins = 0;
+                        // once the backoff reaches the park stage, register
+                        // as a waiter BEFORE the acquire sweep: the
+                        // registered re-scan either sees a concurrent push
+                        // or the pusher sees the registration and notifies
+                        // (the eventcount's lost-wakeup guard, see
+                        // crate::engine::backoff)
+                        let prepared = (backoff.stage() == BackoffStage::Park)
+                            .then(|| events.prepare());
+                        match worksteal::acquire_numa(deques, e, domains) {
+                            Some((key, kind)) => {
+                                if prepared.is_some() {
+                                    events.cancel();
+                                }
+                                backoff.reset();
                                 my_dispatches += 1;
-                                if stolen {
+                                if kind.is_steal() {
                                     my_steals += 1;
+                                    if kind == Acquire::StealCrossDomain {
+                                        my_cross += 1;
+                                    }
                                 }
                                 let node = entry_node(key);
                                 let start = t0.elapsed().as_secs_f64() * 1e6;
@@ -315,22 +457,35 @@ impl ThreadedGraphi {
                                 for &k in &batch {
                                     deques[e].push(k).expect("deque sized for the whole graph");
                                 }
+                                if !batch.is_empty() {
+                                    // new work is visible — wake parked
+                                    // executors to come steal it
+                                    events.notify();
+                                }
                                 if last {
                                     // quiescence: this completion was the
                                     // graph's final op
                                     done.store(true, Ordering::Release);
+                                    events.notify();
                                 }
                             }
                             None => {
                                 if done.load(Ordering::Acquire) {
-                                    return (records, my_dispatches, my_steals);
+                                    if prepared.is_some() {
+                                        events.cancel();
+                                    }
+                                    return (records, my_dispatches, my_steals, my_cross, my_parks);
                                 }
-                                spins += 1;
-                                if spins < 64 {
-                                    std::hint::spin_loop();
-                                } else {
-                                    spins = 0;
-                                    std::thread::yield_now();
+                                match backoff.next() {
+                                    BackoffStage::Spin => std::hint::spin_loop(),
+                                    BackoffStage::Yield => std::thread::yield_now(),
+                                    BackoffStage::Park => {
+                                        let observed = prepared
+                                            .expect("park stage registers before the sweep");
+                                        if events.park(observed, PARK_TIMEOUT) {
+                                            my_parks += 1;
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -340,10 +495,12 @@ impl ThreadedGraphi {
             // Parker/watchdog: joining *is* the quiescence wait — each
             // executor returns only after the done flag is raised.
             for h in handles {
-                let (records, d, s) = h.join().expect("executor thread panicked");
+                let (records, d, s, c, p) = h.join().expect("executor thread panicked");
                 all_records.push(records);
                 dispatches += d;
                 steals += s;
+                cross_domain_steals += c;
+                parks += p;
             }
         });
         debug_assert!(deps.is_done(), "threads exited with unexecuted ops");
@@ -351,7 +508,86 @@ impl ThreadedGraphi {
         let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        ThreadedRunResult { wall_us, records, dispatches, steals }
+        ThreadedRunResult {
+            wall_us,
+            records,
+            dispatches,
+            steals,
+            cross_domain_steals,
+            parks,
+            mode_switches: 0,
+        }
+    }
+
+    /// Execute a [`PhasePlan`]: each width phase runs as an induced
+    /// subgraph under its own dispatch mode, with a barrier (thread-fleet
+    /// quiescence + re-seed) at every phase boundary. Dependency-safe by
+    /// construction — a node's predecessors are never in a later phase.
+    fn run_phased<F>(
+        &self,
+        graph: &Graph,
+        levels: &Arc<[f64]>,
+        plan: &PhasePlan,
+        work: &F,
+    ) -> ThreadedRunResult
+    where
+        F: Fn(NodeId) + Send + Sync,
+    {
+        let phases = width_phases(graph, plan.threshold);
+        assert_eq!(
+            plan.modes.len(),
+            phases.len(),
+            "phase plan ({} modes) does not line up with the graph ({} phases at threshold {})",
+            plan.modes.len(),
+            phases.len(),
+            plan.threshold
+        );
+        let members = phase_members(graph, &phases);
+        let uniform = ThreadedGraphi { phase_plan: None, ..self.clone() };
+        let mut records: Vec<OpRecord> = Vec::with_capacity(graph.len());
+        let mut offset_us = 0.0f64;
+        let mut dispatches = 0u64;
+        let mut steals = 0u64;
+        let mut cross_domain_steals = 0u64;
+        let mut parks = 0u64;
+        let mut mode_switches = 0u64;
+        let mut prev_mode: Option<DispatchMode> = None;
+        for (mode, keep) in plan.modes.iter().zip(&members) {
+            if let Some(p) = prev_mode {
+                if p != *mode {
+                    mode_switches += 1;
+                }
+            }
+            prev_mode = Some(*mode);
+            let (sub, map) = graph.induced_subgraph(keep);
+            let sub_levels: Vec<f64> = map.iter().map(|&v| levels[v as usize]).collect();
+            let engine = ThreadedGraphi { dispatch: *mode, ..uniform.clone() };
+            let map_ref = &map;
+            let r = engine.run(&sub, sub_levels, move |n: NodeId| work(map_ref[n as usize]));
+            for rec in r.records {
+                records.push(OpRecord {
+                    node: map[rec.node as usize],
+                    executor: rec.executor,
+                    start_us: rec.start_us + offset_us,
+                    end_us: rec.end_us + offset_us,
+                });
+            }
+            offset_us += r.wall_us;
+            dispatches += r.dispatches;
+            steals += r.steals;
+            cross_domain_steals += r.cross_domain_steals;
+            parks += r.parks;
+        }
+        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        ThreadedRunResult {
+            wall_us: offset_us,
+            records,
+            dispatches,
+            steals,
+            cross_domain_steals,
+            parks,
+            mode_switches,
+        }
     }
 
     /// Execute `graph` with critical-path levels derived from a tuning
@@ -438,6 +674,71 @@ mod tests {
         });
         assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
         assert!(result.steals <= result.dispatches);
+        // no domain map ⇒ nothing can be accounted as cross-domain
+        assert_eq!(result.cross_domain_steals, 0);
+    }
+
+    #[test]
+    fn numa_map_accounts_cross_domain_steals_consistently() {
+        let g = models::build(ModelKind::PathNet, ModelSize::Small);
+        let engine = ThreadedGraphi::new(4).with_numa(DomainMap::new(vec![0, 0, 1, 1], 0));
+        let counter = AtomicU64::new(0);
+        let result = engine.run(&g, vec![1.0; g.len()], |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
+        assert_eq!(result.records.len(), g.len());
+        assert!(result.cross_domain_steals <= result.steals);
+    }
+
+    #[test]
+    fn with_numa_machine_builds_a_fleet_shaped_map() {
+        let snc = crate::cost::machine::Machine::knl7250_snc4();
+        let engine = ThreadedGraphi::new(8).with_numa_machine(&snc, 8);
+        let map = engine.numa.as_ref().unwrap();
+        assert_eq!(map.len(), 8);
+        assert!(map.is_multi_domain());
+        // and it still executes correctly
+        let g = mlp(&MlpConfig::default());
+        let r = engine.run(&g, vec![1.0; g.len()], |_| {});
+        assert_eq!(r.records.len(), g.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "one domain per executor")]
+    fn mismatched_numa_map_rejected() {
+        let _ = ThreadedGraphi::new(4).with_numa(DomainMap::new(vec![0, 1], 0));
+    }
+
+    #[test]
+    fn idle_fleet_parks_instead_of_spinning() {
+        // a pure chain on many executors: all but one executor is idle the
+        // whole run, long enough (per-op busy-wait) to walk spin → yield →
+        // park. The backoff must actually reach the park stage, and the
+        // run must still complete (wakeups not lost).
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("n0", OpKind::Scalar);
+        for i in 1..64 {
+            let n = b.add(format!("n{i}"), OpKind::Scalar);
+            b.depend(prev, n);
+            prev = n;
+        }
+        let g = b.build().unwrap();
+        let result = ThreadedGraphi::new(4).run(&g, vec![1.0; g.len()], |_| {
+            // ~hundreds of µs of busy work per op so idle executors have
+            // time to exhaust the spin and yield budgets
+            let t = Instant::now();
+            while t.elapsed() < Duration::from_micros(200) {
+                std::hint::spin_loop();
+            }
+        });
+        assert_eq!(result.records.len(), g.len());
+        assert!(
+            result.parks > 0,
+            "3 idle executors over a ~13 ms chain must park at least once"
+        );
     }
 
     #[test]
@@ -456,16 +757,45 @@ mod tests {
             best_makespan_us: 1.0,
             total_profile_iterations: 1,
             durations_us: vec![2.0; g.len()],
+            phase_plan: None,
             search_trace: Vec::new(),
         };
         let engine = ThreadedGraphi::from_tuning(&tuning);
         assert_eq!(engine.executors, 3);
         assert_eq!(engine.dispatch, DispatchMode::Decentralized);
+        assert_eq!(engine.phase_plan, None);
         let counter = AtomicU64::new(0);
         let result = engine.run_tuned(&g, &tuning, |_| {
             counter.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
+        assert_eq!(result.records.len(), g.len());
+    }
+
+    #[test]
+    fn from_tuning_adopts_the_artifact_phase_plan() {
+        use crate::runtime::artifacts::{MachineKey, TuningArtifact, TUNING_FORMAT_VERSION};
+        let g = mlp(&MlpConfig::default());
+        let phases = crate::graph::width_phases(&g, 1);
+        let plan = PhasePlan::uniform(1, DispatchMode::Decentralized, phases.len());
+        let tuning = TuningArtifact {
+            version: TUNING_FORMAT_VERSION,
+            tag: "mlp-test".to_string(),
+            worker_cores: 64,
+            seed: 0,
+            machine: MachineKey { cores: 68, numa_domains: 1 },
+            graph_nodes: g.len(),
+            best: (2, 32),
+            best_dispatch: DispatchMode::Decentralized,
+            best_makespan_us: 1.0,
+            total_profile_iterations: 1,
+            durations_us: vec![2.0; g.len()],
+            phase_plan: Some(plan.clone()),
+            search_trace: Vec::new(),
+        };
+        let engine = ThreadedGraphi::from_tuning(&tuning);
+        assert_eq!(engine.phase_plan, Some(plan));
+        let result = engine.run_tuned(&g, &tuning, |_| {});
         assert_eq!(result.records.len(), g.len());
     }
 
@@ -516,5 +846,65 @@ mod tests {
             let order = order.into_inner().unwrap();
             assert_eq!(order, vec![2, 0, 1], "{}", mode.name());
         }
+    }
+
+    #[test]
+    fn phased_run_executes_every_phase_under_its_mode() {
+        // 1 → {8 wide} → 1 fan: threshold 2 gives narrow|wide|narrow, and
+        // an alternating plan must transition at every boundary while
+        // keeping exactly-once + dependency order
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mids: Vec<NodeId> = (0..8)
+            .map(|i| {
+                let m = b.add(format!("m{i}"), OpKind::Scalar);
+                b.depend(src, m);
+                m
+            })
+            .collect();
+        let sink = b.add_after("sink", OpKind::Scalar, &mids);
+        let g = b.build().unwrap();
+        let phases = crate::graph::width_phases(&g, 2);
+        assert_eq!(phases.len(), 3);
+        let plan = PhasePlan {
+            threshold: 2,
+            modes: vec![
+                DispatchMode::Centralized,
+                DispatchMode::Decentralized,
+                DispatchMode::Centralized,
+            ],
+        };
+        let clock = AtomicU64::new(0);
+        let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
+        let result = ThreadedGraphi::new(3).with_phase_plan(plan).run(
+            &g,
+            vec![1.0; g.len()],
+            |n| {
+                let t = clock.fetch_add(1, Ordering::SeqCst);
+                stamp[n as usize].store(t, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(result.records.len(), g.len());
+        assert_eq!(result.dispatches, g.len() as u64);
+        assert_eq!(result.mode_switches, 2, "c|d|c transitions at both boundaries");
+        // dependency order across the barrier
+        for &m in &mids {
+            assert!(stamp[src as usize].load(Ordering::SeqCst) < stamp[m as usize].load(Ordering::SeqCst));
+            assert!(stamp[m as usize].load(Ordering::SeqCst) < stamp[sink as usize].load(Ordering::SeqCst));
+        }
+        // records merged onto one monotone timeline (no cross-phase overlap)
+        for w in result.records.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not line up")]
+    fn mismatched_phase_plan_panics() {
+        let g = mlp(&MlpConfig::default());
+        let plan = PhasePlan { threshold: 2, modes: vec![DispatchMode::Centralized; 99] };
+        let _ = ThreadedGraphi::new(2).with_phase_plan(plan).run(&g, vec![1.0; g.len()], |_| {});
     }
 }

@@ -22,7 +22,7 @@
 
 use graphi::engine::{
     DispatchMode, DynamicFleetEngine, Engine, GraphiEngine, HeterogeneousEngine, NaiveEngine,
-    RunResult, SequentialEngine, SimEnv, TensorFlowLikeEngine,
+    PhasePlan, RunResult, SequentialEngine, SimEnv, TensorFlowLikeEngine,
 };
 use graphi::graph::op::{EwKind, OpKind};
 use graphi::graph::{Graph, GraphBuilder};
@@ -165,6 +165,46 @@ fn prop_both_dispatch_modes_agree_on_random_dags() {
                     "{}: makespan {} exceeds own serialization bound {bound}",
                     engine.name(),
                     r.makespan_us
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_mode_schedules_agree_with_uniform_runs() {
+    // per-phase dispatch on random DAGs: every phased plan (both
+    // alternating parities) must agree with the pure-centralized and
+    // pure-decentralized runs on the semantics — exactly-once + dependency
+    // order — and its mode transitions must match the plan exactly
+    let gen = DagGen::default();
+    let env = SimEnv::knl_deterministic();
+    check("phased ≡ uniform semantics", &gen, 30, |case| {
+        let g = graph_of(case);
+        let threshold = 3;
+        let n_phases = graphi::graph::width_phases(&g, threshold).len();
+        // the two uniform baselines the phased runs must agree with
+        for mode in DispatchMode::ALL {
+            let r = GraphiEngine::new(4, 8).with_dispatch(mode).run(&g, &env);
+            exactly_once(&g, &r).map_err(|e| format!("uniform {}: {e}", mode.name()))?;
+            r.validate(&g).map_err(|e| format!("uniform {}: {e}", mode.name()))?;
+        }
+        for start in DispatchMode::ALL {
+            let modes: Vec<DispatchMode> = (0..n_phases)
+                .map(|i| if i % 2 == 0 { start } else { start.other() })
+                .collect();
+            let plan = PhasePlan { threshold, modes };
+            let expected_switches = plan.mode_switches();
+            let engine = GraphiEngine::new(4, 8).with_phase_plan(plan);
+            let r = engine.run(&g, &env);
+            exactly_once(&g, &r).map_err(|e| format!("phased[{}]: {e}", start.name()))?;
+            r.validate(&g).map_err(|e| format!("phased[{}]: {e}", start.name()))?;
+            if r.metrics.mode_switches != expected_switches {
+                return Err(format!(
+                    "phased[{}]: {} mode switches, plan promises {expected_switches}",
+                    start.name(),
+                    r.metrics.mode_switches
                 ));
             }
         }

@@ -4,10 +4,11 @@
 //! invocation must load the persisted tuning artifact without
 //! re-searching.
 
-use graphi::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv};
+use graphi::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, PhasePlan, Profiler, SimEnv};
 use graphi::models::{self, ModelKind, ModelSize};
 use graphi::runtime::artifacts::{
     autotune_or_load, tuning_path, ArtifactError, MachineKey, TuneOutcome, TuningArtifact,
+    TUNING_FORMAT_VERSION,
 };
 
 /// The §7.3 extras both search strategies seed in (9 fleet shapes).
@@ -171,6 +172,134 @@ fn foreign_machine_key_degrades_to_fresh_search() {
     let (_, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
     assert_eq!(outcome, TuneOutcome::LoadedFromDisk);
 
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A narrow|wide|narrow graph (chain head, 24-wide band of tiny ops,
+/// chain tail) — the shape whose phases genuinely want different dispatch
+/// architectures, so the per-phase axis has something to find.
+fn phased_shape_graph() -> graphi::graph::Graph {
+    use graphi::graph::op::{EwKind, OpKind};
+    use graphi::graph::GraphBuilder;
+    let mut b = GraphBuilder::new();
+    let big = |n| OpKind::Elementwise { n, arity: 1, kind: EwKind::Arith };
+    let mut prev = b.add("h0", big(50_000));
+    for i in 1..6 {
+        let n = b.add(format!("h{i}"), big(50_000));
+        b.depend(prev, n);
+        prev = n;
+    }
+    let mut band = vec![prev];
+    for layer in 0..12 {
+        let mut this = Vec::new();
+        for i in 0..24 {
+            let n = b.add(
+                format!("w{layer}_{i}"),
+                OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith },
+            );
+            b.depend(band[i % band.len()], n);
+            this.push(n);
+        }
+        band = this;
+    }
+    let mut last = b.add_after("t0", big(50_000), &band);
+    for i in 1..6 {
+        let n = b.add(format!("t{i}"), big(50_000));
+        b.depend(last, n);
+        last = n;
+    }
+    b.build().unwrap()
+}
+
+#[test]
+fn v3_artifact_roundtrips_v2_degrades_and_run_adopts_the_phase_plan() {
+    let g = models::build(ModelKind::Mlp, ModelSize::Small);
+    let env = SimEnv::knl_deterministic();
+    let dir = tmpdir("phase-plan");
+    let dir_s = dir.display().to_string();
+    let path = tuning_path(&dir, "mlp-small");
+
+    // fresh search persists a v3 file that round-trips exactly
+    let (artifact, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch);
+    assert_eq!(artifact.version, TUNING_FORMAT_VERSION);
+    assert_eq!(TuningArtifact::load(&path).unwrap(), artifact);
+
+    // a v2-stamped file (pre-phase-plan schema) degrades to a fresh search
+    let mut v2 = artifact.to_json();
+    v2.set("version", 2u64);
+    std::fs::write(&path, v2.to_string_pretty()).unwrap();
+    assert!(matches!(
+        TuningArtifact::load(&path).unwrap_err(),
+        ArtifactError::TuningVersion { found: 2, .. }
+    ));
+    let (_, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
+    assert_eq!(outcome, TuneOutcome::FreshSearch, "v2 artifact must re-search");
+
+    // `graphi run --tuning` adoption: an artifact carrying a phase plan
+    // flows into the run config (dispatch via the pinned precedence, plan
+    // unless an explicit flag pins a uniform mode) and the driver builds
+    // a phased engine from it
+    let plan = PhasePlan::uniform(
+        1,
+        DispatchMode::Decentralized,
+        graphi::graph::width_phases(&g, 1).len(),
+    );
+    let with_plan = TuningArtifact {
+        phase_plan: Some(plan.clone()),
+        ..TuningArtifact::load(&path).unwrap()
+    };
+    with_plan.save(&path).unwrap();
+    let mut cfg = graphi::coordinator::config::ExperimentConfig {
+        model: ModelKind::Mlp,
+        size: ModelSize::Small,
+        iterations: 1,
+        ..Default::default()
+    };
+    graphi::cli::apply_tuning(&mut cfg, &dir_s, None);
+    assert_eq!(cfg.phase_plan, Some(plan));
+    assert_eq!(cfg.dispatch, Some(with_plan.best_dispatch));
+    assert_eq!(cfg.executors, Some(with_plan.best.0));
+    let result = graphi::coordinator::driver::Driver::run(&cfg);
+    assert!(result.engine_name.ends_with("-phased"), "{}", result.engine_name);
+    // …while an explicit --dispatch flag drops the plan (uniform pin)
+    let mut pinned = graphi::coordinator::config::ExperimentConfig {
+        model: ModelKind::Mlp,
+        size: ModelSize::Small,
+        iterations: 1,
+        ..Default::default()
+    };
+    graphi::cli::apply_tuning(&mut pinned, &dir_s, Some(DispatchMode::Centralized));
+    assert_eq!(pinned.phase_plan, None);
+    assert_eq!(pinned.dispatch, Some(DispatchMode::Centralized));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn autotuner_searches_the_per_phase_axis_on_a_phased_graph() {
+    let g = phased_shape_graph();
+    let env = SimEnv::knl_deterministic();
+    // a 16-core worker pool keeps every candidate's executor count ≤ 16,
+    // below the band's width of 24 — so the winner's phase threshold is
+    // guaranteed to split the narrow chain ends from the wide band
+    let small_pool = Autotuner { worker_cores: 16, ..Default::default() };
+    let report = small_pool.search(&g, &env);
+    let phases = graphi::graph::width_phases(&g, report.best.0.max(2));
+    assert!(phases.len() >= 2, "narrow|wide|narrow shape must produce multiple phases");
+    // the refinement ran: one baseline + one flip per phase, exactly
+    assert_eq!(report.phase_refine_iterations, phases.len() + 1);
+    // whatever was adopted is persistable and re-loadable
+    let dir = tmpdir("phase-axis");
+    let path = tuning_path(&dir, "phased-shape");
+    let artifact =
+        TuningArtifact::from_report("phased-shape", g.len(), &env, &small_pool, &report);
+    artifact.save(&path).unwrap();
+    let back = TuningArtifact::load(&path).unwrap();
+    assert_eq!(back.phase_plan, report.phase_plan);
+    if let Some(plan) = &back.phase_plan {
+        assert!(plan.matches(&g));
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -505,6 +505,157 @@ fn prop_testkit_shrinker_sane() {
     });
 }
 
+/// Brute-force reference for NUMA-aware victim ranking: scan every
+/// victim's exposed top, pick the max-key victim **within the stealer's
+/// domain**, and go cross-domain only when the local domain is dry or a
+/// remote top's *level* (key high half) exceeds the local best's by more
+/// than the margin — first victim wins exact key ties. This restates the
+/// `steal_highest_numa` contract independently of its implementation.
+fn ref_numa_choice(
+    tops: &[Option<u64>],
+    me: usize,
+    map: &graphi::engine::DomainMap,
+) -> Option<(usize, graphi::engine::Acquire)> {
+    use graphi::engine::worksteal::entry_level;
+    use graphi::engine::Acquire;
+    let mut best_local: Option<(usize, u64)> = None;
+    let mut best_remote: Option<(usize, u64)> = None;
+    for (v, top) in tops.iter().enumerate() {
+        if v == me {
+            continue;
+        }
+        let Some(k) = *top else { continue };
+        let slot = if map.same_domain(me, v) { &mut best_local } else { &mut best_remote };
+        if slot.map_or(true, |(_, bk)| k > bk) {
+            *slot = Some((v, k));
+        }
+    }
+    match (best_local, best_remote) {
+        (None, None) => None,
+        (Some((v, _)), None) => Some((v, Acquire::StealLocalDomain)),
+        (None, Some((v, _))) => Some((v, Acquire::StealCrossDomain)),
+        (Some((lv, lk)), Some((rv, rk))) => {
+            if entry_level(rk) > entry_level(lk).saturating_add(map.cross_margin) {
+                Some((rv, Acquire::StealCrossDomain))
+            } else {
+                Some((lv, Acquire::StealLocalDomain))
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_numa_victim_ranking_matches_bruteforce_reference() {
+    // random deque states (random key piles per victim) × random domain
+    // maps × random margins: draining steal_highest_numa single-threaded
+    // must pick exactly the victim/kind the brute-force rule picks, every
+    // step until all deques are dry
+    use graphi::engine::worksteal::{steal_highest_numa, WorkStealDeque};
+    use graphi::engine::DomainMap;
+    use std::collections::VecDeque;
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9) + 7);
+        let n = rng.range(2, 7);
+        let me = rng.range(0, n);
+        let domains: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+        let margin = rng.below(3) as u32;
+        let map = DomainMap::new(domains, margin);
+        let deques: Vec<WorkStealDeque> = (0..n).map(|_| WorkStealDeque::new(32)).collect();
+        // mirror of each deque as a FIFO (steal end = front)
+        let mut mirror: Vec<VecDeque<u64>> = (0..n).map(|_| VecDeque::new()).collect();
+        for v in 0..n {
+            for _ in 0..rng.range(0, 6) {
+                // small level space so level ties (the interesting case
+                // for domain preference) are frequent
+                let key = (rng.below(4) << 32) | rng.below(1000);
+                deques[v].push(key).unwrap();
+                mirror[v].push_back(key);
+            }
+        }
+        loop {
+            let tops: Vec<Option<u64>> = mirror.iter().map(|m| m.front().copied()).collect();
+            let expected = ref_numa_choice(&tops, me, &map);
+            let got = steal_highest_numa(&deques, me, &map);
+            match (expected, got) {
+                (None, None) => break,
+                (Some((victim, kind)), Some((key, got_kind))) => {
+                    let want_key = mirror[victim].pop_front().unwrap();
+                    assert_eq!(
+                        (key, got_kind),
+                        (want_key, kind),
+                        "seed {seed}: me={me} domains/margin {map:?} tops {tops:?}"
+                    );
+                }
+                (e, g) => panic!("seed {seed}: reference {e:?} vs implementation {g:?}"),
+            }
+        }
+        assert!(deques.iter().all(|d| d.is_empty()), "seed {seed}: drained together");
+    }
+}
+
+#[test]
+fn prop_backoff_state_machine_walks_its_limits() {
+    // the spin→yield→park walk against a plain counter model, across
+    // random limits and random reset points
+    use graphi::engine::{Backoff, BackoffStage};
+    check("backoff stage walk", &UsizeRange(0, 500), 60, |&seed| {
+        let mut rng = Rng::new(seed as u64 ^ 0xBACC0FF);
+        let spin = rng.range(0, 10) as u32;
+        let yields = rng.range(0, 10) as u32;
+        let mut b = Backoff::with_limits(spin, yields);
+        let mut attempts = 0u32;
+        for step in 0..200 {
+            let expected = if attempts < spin {
+                BackoffStage::Spin
+            } else if attempts < spin + yields {
+                BackoffStage::Yield
+            } else {
+                BackoffStage::Park
+            };
+            if b.stage() != expected {
+                return Err(format!(
+                    "seed {seed} step {step}: stage {:?} vs model {expected:?} at {attempts}",
+                    b.stage()
+                ));
+            }
+            if b.next() != expected {
+                return Err(format!("seed {seed} step {step}: next() disagrees with stage()"));
+            }
+            if expected != BackoffStage::Park {
+                attempts += 1;
+            }
+            if rng.chance(0.1) {
+                b.reset();
+                attempts = 0;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_park_never_sleeps_through_a_post_prepare_notify() {
+    // the lost-wakeup race, swept across interleaving offsets: however
+    // many notifies land between the prepare (registration + epoch
+    // observation) and the park, the park must return immediately (the
+    // registered waiter forces each notify to bump the epoch, and the
+    // moved epoch refuses the sleep)
+    use graphi::engine::EventCounter;
+    use std::time::{Duration, Instant};
+    let ec = EventCounter::new();
+    for notifies in 1..20u64 {
+        let observed = ec.prepare();
+        for _ in 0..notifies {
+            ec.notify(); // the "push between re-scan and park"
+        }
+        let t0 = Instant::now();
+        let slept = ec.park(observed, Duration::from_secs(5));
+        assert!(!slept, "{notifies} post-prepare notifies must void the observation");
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert_eq!(ec.waiters(), 0);
+    }
+}
+
 /// Reference model for the work-stealing deque: a `VecDeque` where the
 /// owner pushes/pops at the back (LIFO) and thieves take from the front
 /// (the high-priority/FIFO end). Single-threaded, so the deque must agree

@@ -1,0 +1,251 @@
+//! Seeded concurrency stress harness for the threaded runtime.
+//!
+//! Wide fan-in/fan-out DAGs — diamond chains, a butterfly (FFT-style
+//! crossing fan-in), and 1→N→1 fans — run many times on 2/4/8 executors
+//! in both dispatch architectures, asserting the three invariants every
+//! run of the decentralized machinery must uphold:
+//!
+//! 1. **exactly-once**: every op's work closure fires once (no double
+//!    trigger from the `fetch_sub` resolution, no lost entry in a deque);
+//! 2. **dependency order**: an atomic-clock stamp taken inside the work
+//!    closure is strictly increasing along every edge;
+//! 3. **clean quiescence**: the run *returns* — the executor fleet parks
+//!    and exits instead of hanging on a lost wakeup or a missed done
+//!    flag. Each run is wrapped in a watchdog (detached worker + channel
+//!    `recv_timeout`), so a hang fails the test in bounded time instead
+//!    of stalling CI; the workflow additionally runs this suite under a
+//!    job-level hard timeout in release mode.
+//!
+//! Seeds (`GRAPHI_TEST_SEED` to override) vary the level values per
+//! iteration so dispatch order, steal targets and park/wake interleavings
+//! differ run to run.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use graphi::engine::{DispatchMode, DomainMap, PhasePlan};
+use graphi::graph::op::OpKind;
+use graphi::graph::{Graph, GraphBuilder, NodeId};
+use graphi::runtime::ThreadedGraphi;
+use graphi::util::rng::Rng;
+
+const ITERATIONS: usize = 100;
+const FLEETS: [usize; 3] = [2, 4, 8];
+/// Generous per-run watchdog: a healthy run of these ≤130-node graphs
+/// finishes in milliseconds even on a loaded 1-core host.
+const WATCHDOG: Duration = Duration::from_secs(60);
+
+fn base_seed() -> u64 {
+    std::env::var("GRAPHI_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x57E55)
+}
+
+/// A chain of diamonds: a → {b,c} → d, repeated `links` times in series.
+/// Fan-out then immediate fan-in, the classic double-trigger shape.
+fn diamond_chain(links: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut join = b.add("src", OpKind::Scalar);
+    for l in 0..links {
+        let left = b.add(format!("l{l}"), OpKind::Scalar);
+        let right = b.add(format!("r{l}"), OpKind::Scalar);
+        b.depend(join, left);
+        b.depend(join, right);
+        join = b.add_after(format!("j{l}"), OpKind::Scalar, &[left, right]);
+    }
+    b.build().unwrap()
+}
+
+/// An FFT-style butterfly: `layers` layers of `width` nodes; node (l+1, i)
+/// depends on (l, i) and its crossing partner (l, i ^ stride). Every op
+/// except the first layer is a 2-fan-in, every op except the last feeds 2.
+fn butterfly(layers: usize, width: usize) -> Graph {
+    assert!(width.is_power_of_two());
+    let mut b = GraphBuilder::new();
+    let mut prev: Vec<NodeId> =
+        (0..width).map(|i| b.add(format!("b0_{i}"), OpKind::Scalar)).collect();
+    for l in 1..layers {
+        let stride = 1 << ((l - 1) % width.trailing_zeros().max(1) as usize);
+        let this: Vec<NodeId> = (0..width)
+            .map(|i| {
+                b.add_after(
+                    format!("b{l}_{i}"),
+                    OpKind::Scalar,
+                    &[prev[i], prev[i ^ (stride % width)]],
+                )
+            })
+            .collect();
+        prev = this;
+    }
+    b.build().unwrap()
+}
+
+/// 1 → N → 1: one source fanning out to `n` parallel ops, all fanning
+/// back into one sink — maximum simultaneous ready width, then an
+/// n-way fan-in on the final counter.
+fn fan(n: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let src = b.add("src", OpKind::Scalar);
+    let mids: Vec<NodeId> = (0..n)
+        .map(|i| {
+            let m = b.add(format!("m{i}"), OpKind::Scalar);
+            b.depend(src, m);
+            m
+        })
+        .collect();
+    b.add_after("sink", OpKind::Scalar, &mids);
+    b.build().unwrap()
+}
+
+/// What one stressed run reports back through the watchdog channel.
+struct RunOutcome {
+    records: usize,
+    dispatches: u64,
+    mode_switches: u64,
+    counts: Vec<u32>,
+    stamps: Vec<u64>,
+}
+
+/// Execute one run on a detached worker thread and wait for it under the
+/// watchdog. A hang (lost wakeup, missed quiescence flag) trips the
+/// timeout instead of stalling the suite — the worker thread is
+/// deliberately *not* joined in that case; the panic fails the test and
+/// process teardown reaps it.
+fn run_with_watchdog(graph: &Arc<Graph>, engine: ThreadedGraphi, levels: Vec<f64>, tag: &str) -> RunOutcome {
+    let (tx, rx) = mpsc::channel();
+    let g = Arc::clone(graph);
+    std::thread::spawn(move || {
+        let n = g.len();
+        let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let clock = AtomicU64::new(1);
+        let stamps: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let result = engine.run(&g, levels, |v| {
+            counts[v as usize].fetch_add(1, Ordering::SeqCst);
+            let t = clock.fetch_add(1, Ordering::SeqCst);
+            stamps[v as usize].store(t, Ordering::SeqCst);
+        });
+        let _ = tx.send(RunOutcome {
+            records: result.records.len(),
+            dispatches: result.dispatches,
+            mode_switches: result.mode_switches,
+            counts: counts.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+            stamps: stamps.iter().map(|s| s.load(Ordering::SeqCst)).collect(),
+        });
+    });
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(outcome) => outcome,
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{tag}: no quiescence within {WATCHDOG:?} — dispatch hang")
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            panic!("{tag}: worker thread panicked inside the run")
+        }
+    }
+}
+
+/// The three invariants, checked against the graph.
+fn assert_invariants(graph: &Graph, outcome: &RunOutcome, tag: &str) {
+    assert_eq!(outcome.records, graph.len(), "{tag}: record count");
+    assert_eq!(outcome.dispatches, graph.len() as u64, "{tag}: dispatch count");
+    for (v, &c) in outcome.counts.iter().enumerate() {
+        assert_eq!(c, 1, "{tag}: node {v} executed {c} times");
+    }
+    for v in 0..graph.len() as NodeId {
+        let tv = outcome.stamps[v as usize];
+        assert!(tv > 0, "{tag}: node {v} never stamped");
+        for &p in graph.preds(v) {
+            let tp = outcome.stamps[p as usize];
+            assert!(tp < tv, "{tag}: dep violated {p}(t={tp}) vs {v}(t={tv})");
+        }
+    }
+}
+
+/// Per-iteration level values: seeded random priorities so the CP order,
+/// deque contents and steal targets differ every run.
+fn seeded_levels(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform(0.5, 1000.0)).collect()
+}
+
+fn stress(graph: Graph, name: &str) {
+    let graph = Arc::new(graph);
+    let mut rng = Rng::new(base_seed() ^ name.len() as u64);
+    for iter in 0..ITERATIONS {
+        for &execs in &FLEETS {
+            for mode in DispatchMode::ALL {
+                let tag = format!("{name}/iter{iter}/{execs}exec/{}", mode.name());
+                let engine = ThreadedGraphi::new(execs).with_dispatch(mode);
+                let levels = seeded_levels(graph.len(), &mut rng);
+                let outcome = run_with_watchdog(&graph, engine, levels, &tag);
+                assert_invariants(&graph, &outcome, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn stress_diamond_chain_both_modes_all_fleets() {
+    stress(diamond_chain(16), "diamond");
+}
+
+#[test]
+fn stress_butterfly_both_modes_all_fleets() {
+    stress(butterfly(8, 8), "butterfly");
+}
+
+#[test]
+fn stress_fan_out_fan_in_both_modes_all_fleets() {
+    stress(fan(32), "fan");
+}
+
+#[test]
+fn stress_numa_mapped_fleet() {
+    // the NUMA-ranked steal path under real concurrency: a 2-domain map
+    // on 4 executors, same invariants, cross-domain accounting consistent
+    let graph = Arc::new(fan(32));
+    let mut rng = Rng::new(base_seed() ^ 0xD0);
+    for iter in 0..ITERATIONS {
+        let tag = format!("numa-fan/iter{iter}");
+        let engine = ThreadedGraphi::new(4).with_numa(DomainMap::new(vec![0, 0, 1, 1], 0));
+        let levels = seeded_levels(graph.len(), &mut rng);
+        let outcome = run_with_watchdog(&graph, engine, levels, &tag);
+        assert_invariants(&graph, &outcome, &tag);
+    }
+}
+
+#[test]
+fn stress_forced_alternating_phase_plan_transitions_without_deadlock() {
+    // 1 → 32 → 1 at threshold 2 is narrow|wide|narrow: a forced c|d|c
+    // plan must transition at *every* phase boundary (barrier + engine
+    // switch) and still satisfy the invariants — the cross-phase barrier
+    // is where a missed quiescence flag would deadlock, which the
+    // watchdog converts into a bounded failure
+    let graph = Arc::new(fan(32));
+    let phases = graphi::graph::width_phases(&graph, 2);
+    assert_eq!(phases.len(), 3);
+    let mut rng = Rng::new(base_seed() ^ 0xA17);
+    for iter in 0..ITERATIONS {
+        for (first, second) in
+            [(DispatchMode::Centralized, DispatchMode::Decentralized),
+             (DispatchMode::Decentralized, DispatchMode::Centralized)]
+        {
+            let plan = PhasePlan { threshold: 2, modes: vec![first, second, first] };
+            for &execs in &FLEETS {
+                let tag = format!(
+                    "phased-fan/iter{iter}/{execs}exec/{}-{}",
+                    first.name(),
+                    second.name()
+                );
+                let engine = ThreadedGraphi::new(execs).with_phase_plan(plan.clone());
+                let levels = seeded_levels(graph.len(), &mut rng);
+                let outcome = run_with_watchdog(&graph, engine, levels, &tag);
+                assert_invariants(&graph, &outcome, &tag);
+                assert_eq!(
+                    outcome.mode_switches, 2,
+                    "{tag}: alternating plan must switch at both boundaries"
+                );
+            }
+        }
+    }
+}
