@@ -21,6 +21,14 @@ pub struct ExperimentResult {
     pub std_us: f64,
     pub iterations: usize,
     pub graph_stats: GraphStats,
+    /// §5.1 memory plan over the topological order: peak arena footprint
+    /// with buffer sharing — the number serve-mode admission budgets
+    /// against the 16 GB MCDRAM.
+    pub memory_arena_bytes: u64,
+    /// The no-sharing baseline (Σ of all output buffer sizes).
+    pub memory_total_bytes: u64,
+    /// `memory_total_bytes / memory_arena_bytes`.
+    pub memory_sharing_ratio: f64,
     /// Last iteration's full result (trace source).
     pub last: RunResult,
 }
@@ -60,6 +68,7 @@ impl Driver {
                 crate::log_warn!("failed to write trace {path}: {e}");
             }
         }
+        let memory = crate::graph::plan_memory(graph, &graph.topo_order());
         ExperimentResult {
             config: cfg.clone(),
             engine_name: engine.name(),
@@ -68,6 +77,9 @@ impl Driver {
             std_us: acc.std(),
             iterations: cfg.iterations.max(1),
             graph_stats,
+            memory_arena_bytes: memory.arena_bytes,
+            memory_total_bytes: memory.total_bytes,
+            memory_sharing_ratio: memory.sharing_ratio(),
             last,
         }
     }
@@ -176,6 +188,14 @@ impl ExperimentResult {
             self.last.metrics.dispatches,
             self.last.metrics.lightweight_ops,
         ));
+        out.push_str(&format!(
+            "memory plan (§5.1): {}\n",
+            crate::graph::memory::render_summary(
+                self.memory_arena_bytes,
+                self.memory_total_bytes,
+                self.memory_sharing_ratio,
+            ),
+        ));
         out
     }
 
@@ -193,7 +213,10 @@ impl ExperimentResult {
             .set("iterations", self.iterations)
             .set("nodes", self.graph_stats.nodes)
             .set("edges", self.graph_stats.edges)
-            .set("utilization", self.last.metrics.utilization(self.last.makespan_us));
+            .set("utilization", self.last.metrics.utilization(self.last.makespan_us))
+            .set("memory_arena_bytes", self.memory_arena_bytes)
+            .set("memory_total_bytes", self.memory_total_bytes)
+            .set("memory_sharing_ratio", self.memory_sharing_ratio);
         doc
     }
 }
@@ -259,8 +282,14 @@ mod tests {
         let r = Driver::run(&quick_cfg());
         let text = r.render();
         assert!(text.contains("mlp"));
+        assert!(text.contains("memory plan"), "§5.1 plan must be reported: {text}");
+        assert!(text.contains("sharing"));
         let json = r.to_json().to_string_compact();
         assert!(json.contains("\"engine\""));
+        assert!(json.contains("\"memory_arena_bytes\""));
+        assert!(r.memory_arena_bytes > 0);
+        assert!(r.memory_total_bytes >= r.memory_arena_bytes);
+        assert!(r.memory_sharing_ratio >= 1.0);
     }
 
     #[test]

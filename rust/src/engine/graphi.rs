@@ -627,6 +627,71 @@ impl GraphiEngine {
     }
 }
 
+/// One session's share of a multi-graph ([`GraphiEngine::run_concurrent`])
+/// simulation: its records in *local* node ids, and the virtual time at
+/// which its last op finished (= its session latency, since every session
+/// is admitted at t = 0 in the closed-loop mirror).
+#[derive(Debug, Clone)]
+pub struct SessionSimResult {
+    pub records: Vec<OpRecord>,
+    pub makespan_us: f64,
+}
+
+impl GraphiEngine {
+    /// Serve-mode mirror: execute `N` independent DAGs **concurrently on
+    /// one virtual fleet**, under the same pricing as [`Engine::run`].
+    ///
+    /// Implementation: the sessions' disjoint union
+    /// ([`Graph::disjoint_union`]) is one DAG whose components do not
+    /// interact, so running the ordinary engine on the union *is*
+    /// multi-session scheduling — every scheduler structure (ready heap or
+    /// deques, rings, LW lane, NUMA victim ranking, bandwidth arbiter) sees
+    /// the interleaved entries of all sessions, and critical-path levels
+    /// computed on the union equal each graph's own levels, which makes
+    /// cross-session CP-first ordering the ordinary level comparison —
+    /// the same approximation the threaded fleet's packed session keys
+    /// make ([`crate::runtime::fleet`]). This keeps serve-mode scheduling
+    /// differentially testable against real threads
+    /// (`tests/serve_sessions.rs`): both must produce, per session, the
+    /// full op set in a dependency-valid order.
+    ///
+    /// Returns the union-level result (fleet totals: makespan, steals,
+    /// dispatches…) plus the per-session split of the trace.
+    pub fn run_concurrent(
+        &self,
+        graphs: &[&Graph],
+        env: &SimEnv,
+    ) -> (RunResult, Vec<SessionSimResult>) {
+        assert!(!graphs.is_empty(), "run_concurrent needs at least one graph");
+        assert!(
+            self.phase_plan.is_none(),
+            "phase plans are derived per graph; a union of sessions has no single phase structure"
+        );
+        assert!(
+            self.duration_overrides.is_none(),
+            "duration overrides are per graph; profile the union instead"
+        );
+        let (union, origin) = Graph::disjoint_union(graphs);
+        let result = self.run(&union, env);
+        let mut sessions: Vec<SessionSimResult> = graphs
+            .iter()
+            .map(|_| SessionSimResult { records: Vec::new(), makespan_us: 0.0 })
+            .collect();
+        for rec in &result.records {
+            let (si, local) = origin[rec.node as usize];
+            let session = &mut sessions[si];
+            session.makespan_us = session.makespan_us.max(rec.end_us);
+            session.records.push(OpRecord {
+                node: local,
+                executor: rec.executor,
+                start_us: rec.start_us,
+                end_us: rec.end_us,
+            });
+        }
+        (result, sessions)
+    }
+}
+
 impl Engine for GraphiEngine {
     fn name(&self) -> String {
         format!(
@@ -1009,5 +1074,56 @@ mod tests {
         let g = models::build(ModelKind::Mlp, ModelSize::Small);
         let plan = PhasePlan { threshold: 2, modes: vec![DispatchMode::Centralized; 99] };
         let _ = GraphiEngine::new(4, 8).with_phase_plan(plan).run(&g, &SimEnv::knl_deterministic());
+    }
+
+    #[test]
+    fn run_concurrent_executes_every_session_exactly_once_in_both_modes() {
+        let a = models::build(ModelKind::Mlp, ModelSize::Small);
+        let b = models::build_inference(ModelKind::PathNet, ModelSize::Small);
+        let e = env();
+        for mode in DispatchMode::ALL {
+            let engine = GraphiEngine::new(4, 8).with_dispatch(mode);
+            let (union_result, sessions) = engine.run_concurrent(&[&a, &b], &e);
+            assert_eq!(sessions.len(), 2, "{}", mode.name());
+            assert_eq!(
+                union_result.records.len(),
+                a.len() + b.len(),
+                "{}",
+                mode.name()
+            );
+            for (graph, session) in [(&a, &sessions[0]), (&b, &sessions[1])] {
+                // per-session exactly-once + dependency-valid order
+                assert_eq!(session.records.len(), graph.len(), "{}", mode.name());
+                let mut recs = session.records.clone();
+                recs.sort_by(|x, y| x.start_us.total_cmp(&y.start_us));
+                let order: Vec<crate::graph::NodeId> = recs.iter().map(|r| r.node).collect();
+                graph.validate_order(&order).unwrap();
+                assert!(session.makespan_us > 0.0);
+                assert!(session.makespan_us <= union_result.makespan_us);
+            }
+        }
+    }
+
+    #[test]
+    fn run_concurrent_interleaves_sessions_on_the_shared_fleet() {
+        // two equal-shape graphs admitted together must overlap in virtual
+        // time — the fleet is shared, not serialized per session
+        let a = models::build(ModelKind::Mlp, ModelSize::Small);
+        let b = models::build(ModelKind::Mlp, ModelSize::Small);
+        let e = env();
+        let (_, sessions) =
+            GraphiEngine::new(4, 8).run_concurrent(&[&a, &b], &e);
+        let first_start = |s: &SessionSimResult| {
+            s.records.iter().map(|r| r.start_us).fold(f64::INFINITY, f64::min)
+        };
+        // both sessions start before either finishes ⇒ concurrent
+        assert!(first_start(&sessions[0]) < sessions[1].makespan_us);
+        assert!(first_start(&sessions[1]) < sessions[0].makespan_us);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one graph")]
+    fn run_concurrent_rejects_empty_session_list() {
+        let _ = GraphiEngine::new(4, 8).run_concurrent(&[], &env());
     }
 }

@@ -145,6 +145,47 @@ pub fn entry_node(key: u64) -> NodeId {
     key as u32
 }
 
+/// Bits of a serve-mode key's node field. Session graphs are capped at
+/// 2²⁴ nodes (far above every model in the zoo); the 8 bits above the
+/// node field carry the session slot.
+pub const SESSION_NODE_BITS: u32 = 24;
+
+/// Pack a `(priority, session slot, node)` triple into one `u64` for the
+/// multi-session executor fleet ([`crate::runtime::fleet`]):
+///
+/// ```text
+///   63              32 31     24 23               0
+///   +-----------------+---------+-----------------+
+///   | quantized level |  slot   |     node id     |
+///   +-----------------+---------+-----------------+
+/// ```
+///
+/// The level field is identical to [`pack_entry`]'s, so a plain integer
+/// max-compare still orders entries by critical-path priority — now
+/// *across sessions*: an op deep on graph A's critical path outranks a
+/// shallow op of graph B by the same rule that orders them within one
+/// graph. Priorities that quantize equal tie-break by (slot, node) —
+/// arbitrary but deterministic, same contract as [`pack_entry`]. The
+/// NUMA victim ranking's [`crate::engine::worksteal::entry_level`]
+/// reads only the high half and is layout-compatible with both packings.
+#[inline]
+pub fn pack_session_entry(priority: f64, slot: u8, node: NodeId) -> u64 {
+    debug_assert!(node < (1 << SESSION_NODE_BITS), "node {node} exceeds the session key's node field");
+    ((quantize(priority) as u64) << 32) | ((slot as u64) << SESSION_NODE_BITS) | node as u64
+}
+
+/// The session slot carried by a [`pack_session_entry`] key.
+#[inline]
+pub fn session_entry_slot(key: u64) -> u8 {
+    (key >> SESSION_NODE_BITS) as u8
+}
+
+/// The node id carried by a [`pack_session_entry`] key.
+#[inline]
+pub fn session_entry_node(key: u64) -> NodeId {
+    (key as u32) & ((1 << SESSION_NODE_BITS) - 1)
+}
+
 /// Arity of the flat heap. 4 keeps all children of a node within one
 /// 64-byte cache line of `Vec<u64>` storage.
 const D: usize = 4;
@@ -340,6 +381,27 @@ mod tests {
         assert!(pack_entry(7.0, 2) > pack_entry(7.0, 1), "equal priority: node id breaks ties");
         assert_eq!(entry_node(pack_entry(123.0, 77)), 77);
         assert_eq!(entry_node(pack_entry(-4.5, u32::MAX)), u32::MAX);
+    }
+
+    #[test]
+    fn session_entry_roundtrips_and_orders_across_sessions() {
+        let max_node = (1 << SESSION_NODE_BITS) - 1;
+        for (level, slot, node) in [(0.0, 0u8, 0u32), (123.5, 7, 42), (-4.5, 255, max_node)] {
+            let key = pack_session_entry(level, slot, node);
+            assert_eq!(session_entry_slot(key), slot);
+            assert_eq!(session_entry_node(key), node);
+        }
+        // CP priority dominates regardless of which session an entry
+        // belongs to — the cross-session CP-first rule
+        assert!(pack_session_entry(9.0, 0, 5) > pack_session_entry(5.0, 200, 1));
+        // level field is layout-compatible with the single-graph packing
+        assert_eq!(
+            pack_session_entry(42.0, 3, 9) >> 32,
+            pack_entry(42.0, 9) >> 32,
+        );
+        // quantize-equal levels tie-break by (slot, node), deterministically
+        assert!(pack_session_entry(7.0, 2, 0) > pack_session_entry(7.0, 1, 99));
+        assert!(pack_session_entry(7.0, 1, 9) > pack_session_entry(7.0, 1, 8));
     }
 
     #[test]

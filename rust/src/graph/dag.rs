@@ -269,6 +269,44 @@ impl Graph {
         (sub, keep.to_vec())
     }
 
+    /// The disjoint union of several graphs: every input graph's nodes,
+    /// renumbered consecutively in input order (names prefixed `s<i>/`),
+    /// with each graph's edges and **no** edges between graphs. Returns
+    /// the union plus the origin map `union id → (graph index, local id)`.
+    ///
+    /// This is the serve-mode simulator substrate
+    /// ([`crate::engine::GraphiEngine::run_concurrent`]): N independent
+    /// DAGs on one virtual fleet are exactly one union DAG, and because
+    /// the components are independent, critical-path levels computed on
+    /// the union equal each graph's own levels — so cross-session
+    /// CP-first ordering falls out of the ordinary level comparison.
+    pub fn disjoint_union(graphs: &[&Graph]) -> (Graph, Vec<(usize, NodeId)>) {
+        assert!(!graphs.is_empty(), "disjoint union of zero graphs");
+        let total: usize = graphs.iter().map(|g| g.len()).sum();
+        let mut nodes = Vec::with_capacity(total);
+        let mut edges = Vec::new();
+        let mut origin = Vec::with_capacity(total);
+        let mut offset: NodeId = 0;
+        for (gi, g) in graphs.iter().enumerate() {
+            for n in g.nodes() {
+                nodes.push(Node {
+                    id: offset + n.id,
+                    name: format!("s{gi}/{}", n.name),
+                    kind: n.kind.clone(),
+                });
+                origin.push((gi, n.id));
+            }
+            for v in 0..g.len() as NodeId {
+                for &s in g.succs(v) {
+                    edges.push((offset + v, offset + s));
+                }
+            }
+            offset += g.len() as NodeId;
+        }
+        let union = Graph::freeze(nodes, edges).expect("union of DAGs is a non-empty DAG");
+        (union, origin)
+    }
+
     /// Total flops over all nodes.
     pub fn total_flops(&self) -> f64 {
         self.nodes.iter().map(|n| n.kind.flops()).sum()
@@ -507,6 +545,35 @@ mod tests {
         let (whole, _) = g.induced_subgraph(&[0, 1, 2, 3]);
         assert_eq!(whole.num_edges(), g.num_edges());
         assert_eq!(whole.topo_order().len(), 4);
+    }
+
+    #[test]
+    fn disjoint_union_concatenates_without_cross_edges() {
+        let a = diamond();
+        let mut b = GraphBuilder::new();
+        let x = b.add("x", OpKind::Scalar);
+        let y = b.add("y", OpKind::Scalar);
+        b.depend(x, y);
+        let chain = b.build().unwrap();
+        let (union, origin) = Graph::disjoint_union(&[&a, &chain]);
+        assert_eq!(union.len(), 6);
+        assert_eq!(union.num_edges(), a.num_edges() + chain.num_edges());
+        assert_eq!(origin[0], (0, 0));
+        assert_eq!(origin[4], (1, 0));
+        assert_eq!(origin[5], (1, 1));
+        assert_eq!(union.node(4).name, "s1/x");
+        // component structure preserved, no cross edges
+        assert_eq!(union.succs(0), &[1, 2]);
+        assert_eq!(union.succs(4), &[5]);
+        assert_eq!(union.preds(4), &[] as &[NodeId]);
+        assert_eq!(union.sources(), vec![0, 4]);
+        union.validate_order(&union.topo_order()).unwrap();
+        // independent components ⇒ per-component levels survive the union
+        let union_levels = crate::graph::levels(&union, &vec![1.0; union.len()]);
+        let a_levels = crate::graph::levels(&a, &vec![1.0; a.len()]);
+        for v in 0..a.len() {
+            assert_eq!(union_levels[v], a_levels[v]);
+        }
     }
 
     #[test]

@@ -50,6 +50,12 @@ impl MemoryPlan {
         self.arena_bytes <= budget_bytes
     }
 
+    /// One-line human-readable summary, shared by `graphi run`, `graphi
+    /// stats` and `graphi memplan` so the three surfaces cannot drift.
+    pub fn summary_line(&self) -> String {
+        render_summary(self.arena_bytes, self.total_bytes, self.sharing_ratio())
+    }
+
     /// Verify the invariant: no two live-range-overlapping allocations
     /// overlap in address space. Used by tests and debug assertions.
     pub fn validate(&self) -> Result<(), String> {
@@ -67,6 +73,19 @@ impl MemoryPlan {
         }
         Ok(())
     }
+}
+
+/// Render a plan summary from its three headline numbers — the
+/// free-function form exists for callers (e.g. experiment results) that
+/// persist the numbers rather than the whole [`MemoryPlan`].
+pub fn render_summary(arena_bytes: u64, total_bytes: u64, sharing_ratio: f64) -> String {
+    format!(
+        "peak footprint {}  no-sharing {}  sharing {:.2}x  fits 16 GB MCDRAM: {}",
+        crate::util::fmt_si(arena_bytes as f64),
+        crate::util::fmt_si(total_bytes as f64),
+        sharing_ratio,
+        if arena_bytes <= (16u64 << 30) { "yes" } else { "NO" }
+    )
 }
 
 /// Simple first-fit free-list allocator over a growable arena.
@@ -253,6 +272,21 @@ mod tests {
         let order = vec![a0, c0, a1, c1];
         let plan = plan(&g, &order);
         plan.validate().unwrap();
+    }
+
+    #[test]
+    fn summary_line_is_shared_and_budget_aware() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", ew(1000));
+        b.add_after("b", ew(1000), &[a]);
+        let g = b.build().unwrap();
+        let p = plan(&g, &g.topo_order());
+        let line = p.summary_line();
+        assert!(line.contains("peak footprint"), "{line}");
+        assert!(line.contains("sharing"), "{line}");
+        assert!(line.ends_with("yes"), "{line}");
+        assert_eq!(line, render_summary(p.arena_bytes, p.total_bytes, p.sharing_ratio()));
+        assert!(render_summary(17 << 30, 17 << 30, 1.0).ends_with("NO"));
     }
 
     #[test]

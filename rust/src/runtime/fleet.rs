@@ -1,0 +1,1093 @@
+//! Persistent executor fleets and multi-graph serving **sessions**.
+//!
+//! Until PR 5 the threaded runtime spawned and joined a scoped thread
+//! fleet inside every [`crate::runtime::ThreadedGraphi::run`] and executed
+//! exactly one graph per fleet lifetime. That reproduces Fig. 5, but it is
+//! the wrong shape for serving: Opara (arXiv:2312.10351) shows concurrent
+//! inference streams are where operator-level scheduling pays off, and Liu
+//! et al. (arXiv:1810.08955) show a *shared* worker pool under admission
+//! control is what keeps many small concurrent graphs from strangling each
+//! other. This module splits the two lifetimes apart:
+//!
+//! * a [`Fleet`] spawns its executor threads **once** (plus one scheduler
+//!   thread in centralized mode), parks them on the
+//!   [`crate::engine::backoff`] eventcount when idle, and keeps them until
+//!   an explicit [`Fleet::shutdown`];
+//! * a graph execution is a [`SessionHandle`] returned by
+//!   [`Fleet::submit`] — per-session [`AtomicDepTracker`], per-session
+//!   quiescence (the completion that drains the session's remaining-op
+//!   count raises its done flag), per-session trace and steal/dispatch
+//!   counters. Many sessions run concurrently on one fleet;
+//!   `ThreadedGraphi::run` is now just submit-one-session-and-wait.
+//!
+//! # Session-id packing
+//!
+//! Work-stealing deque entries must say *which graph* a node id belongs to
+//! once sessions interleave. Entries are re-packed as
+//! `[quantized CP level : 32 | session slot : 8 | node : 24]`
+//! ([`crate::engine::ready::pack_session_entry`]): the level field is
+//! unchanged from the single-graph packing, so every PR-3/PR-4 property of
+//! [`crate::engine::worksteal`] carries over verbatim — owner LIFO pops
+//! stay batch-hottest-first, `steal_highest`/`steal_highest_numa` still
+//! rank victims by one integer compare, and `entry_level` still feeds the
+//! NUMA cross-margin rule. Slots are reused: at most
+//! [`FleetConfig::max_sessions`] (≤ 256) sessions are in flight, and a
+//! slot is recycled only after its session's final op completes — at which
+//! point no deque can still hold one of its entries (every entry is popped
+//! before the op it names executes, and quiescence requires every op).
+//!
+//! # CP-first across sessions (the approximation)
+//!
+//! Within one session the §4.3 guarantee is exactly PR-3's: level
+//! monotonicity along dependency chains plus ascending batch pushes keep
+//! the owner's LIFO end and the thieves' ranked steal end on the hottest
+//! work. *Across* sessions, packed keys compare raw quantized levels, so
+//! "CP-first" means "deepest remaining critical path anywhere on the
+//! fleet wins" — a session near its sink (small levels) yields to a
+//! freshly admitted session (large levels). That is global
+//! shortest-remaining-path-first, the approximation this module chooses
+//! deliberately: it drains stragglers' tails only when no deeper work
+//! exists, which minimizes the number of sessions whose critical path
+//! starves. Exact per-session fairness would need a shared priority
+//! structure — the serialized coordinator decentralized dispatch exists to
+//! remove. The differential suite (`tests/serve_sessions.rs`) pins the
+//! semantics: per-session exactly-once and dependency order, solo runs and
+//! concurrent runs producing the same per-session op sets.
+//!
+//! New sessions are seeded through a fleet-wide **injector** (a mutexed
+//! max-heap of packed keys): submitters are not deque owners, so they may
+//! not push into executor deques. Executors drain the injector after their
+//! own deque (and their overflow spill) and before stealing; the eventcount
+//! protocol covers it, so a submit either lands before an idle executor's
+//! registered re-scan or wakes a parked one.
+//!
+//! # Admission ([`SessionQueue`])
+//!
+//! §5.1's memory planner ([`crate::graph::memory::plan`]) finally meets
+//! the runtime: a [`SessionQueue`] holds a byte budget (16 GB MCDRAM by
+//! default in `graphi serve`) and [`SessionQueue::admit`] blocks a client
+//! until its session's planned peak arena footprint fits alongside the
+//! sessions already in flight. A session whose own footprint exceeds the
+//! whole budget is admitted only alone — the queue degrades to serial
+//! execution rather than deadlocking or lying about memory.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::engine::backoff::{Backoff, BackoffStage, EventCounter};
+use crate::engine::mpsc::MpscQueue;
+use crate::engine::ready::{
+    pack_session_entry, session_entry_node, session_entry_slot, SESSION_NODE_BITS,
+};
+use crate::engine::ring::SpscRing;
+use crate::engine::scheduler::IdleBitmap;
+use crate::engine::trace::OpRecord;
+use crate::engine::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
+use crate::engine::DispatchMode;
+use crate::graph::{AtomicDepTracker, Graph, NodeId};
+
+/// How long a parked thread sleeps before re-checking the world anyway —
+/// purely a backstop; producers wake parked threads through the
+/// eventcount (see [`crate::engine::backoff`]).
+const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+
+/// Hard cap on in-flight sessions: the packed key's slot field is 8 bits.
+pub const MAX_SESSIONS: usize = 256;
+
+/// Hard cap on a session graph's node count: the packed key's node field.
+pub const MAX_SESSION_NODES: usize = 1 << SESSION_NODE_BITS;
+
+/// Shape and policy of a persistent fleet.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Executor threads, spawned once at [`Fleet::new`].
+    pub executors: usize,
+    /// Completion-resolution architecture. Decentralized executors resolve
+    /// successors themselves; centralized mode spawns one extra scheduler
+    /// thread that owns every dispatch decision (the §4/§5 design).
+    pub dispatch: DispatchMode,
+    /// Per-executor operation buffer depth (centralized mode; §5.2 uses 1).
+    pub buffer_depth: usize,
+    /// Executor→NUMA-domain map for victim ranking in decentralized mode;
+    /// `None` = flat (domain-blind).
+    pub numa: Option<DomainMap>,
+    /// Session slots (bound on concurrently in-flight sessions, ≤
+    /// [`MAX_SESSIONS`]). [`Fleet::submit`] blocks when all are taken.
+    pub max_sessions: usize,
+    /// Per-executor deque capacity (decentralized mode). Overflow falls
+    /// back to an owner-local spill vector — correct, just not stealable —
+    /// so this is a performance knob, not a correctness bound.
+    pub deque_capacity: usize,
+}
+
+impl FleetConfig {
+    pub fn new(executors: usize) -> FleetConfig {
+        FleetConfig {
+            executors,
+            dispatch: DispatchMode::Decentralized,
+            buffer_depth: 1,
+            numa: None,
+            max_sessions: 32,
+            deque_capacity: 1 << 15,
+        }
+    }
+
+    pub fn with_dispatch(mut self, dispatch: DispatchMode) -> FleetConfig {
+        self.dispatch = dispatch;
+        self
+    }
+}
+
+/// Fleet-lifetime totals (monotone counters over all sessions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetTotals {
+    /// Ops handed to an executor (local pop / steal / ring push).
+    pub dispatches: u64,
+    /// Ops acquired by stealing (decentralized mode).
+    pub steals: u64,
+    /// Of `steals`, how many crossed a NUMA-domain boundary.
+    pub cross_domain_steals: u64,
+    /// Times an idle fleet thread actually slept on the eventcount.
+    /// Parks are a property of the *fleet* (an executor parks because no
+    /// session anywhere has work for it), so they are not attributed to
+    /// individual sessions.
+    pub parks: u64,
+    /// Sessions that ran to quiescence.
+    pub sessions_completed: u64,
+    /// Executor threads that ever started on this fleet — spawned once at
+    /// construction, so this never grows with submissions (the acceptance
+    /// test reads it from the post-join snapshot [`Fleet::shutdown`]
+    /// returns, where every started thread is guaranteed counted).
+    pub executor_threads: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    dispatches: AtomicU64,
+    steals: AtomicU64,
+    cross_domain_steals: AtomicU64,
+    parks: AtomicU64,
+    sessions_completed: AtomicU64,
+    /// Executor threads that ever started on this fleet — the
+    /// spawned-once proof the acceptance test reads.
+    executor_threads: AtomicUsize,
+}
+
+/// One in-flight (or just-finished) graph execution.
+///
+/// Owned behind an `Arc` by the submitting client and by any executor
+/// whose slot cache still references it; all runtime state is per-session
+/// so two sessions never contend on anything but the deques themselves.
+struct SessionState<'env> {
+    slot: u8,
+    graph: &'env Graph,
+    levels: Arc<[f64]>,
+    work: &'env (dyn Fn(NodeId) + Send + Sync),
+    deps: AtomicDepTracker,
+    /// Session epoch: records and the wall clock are relative to submit.
+    t0: Instant,
+    /// Per-executor record buckets (each executor locks only its own).
+    records: Vec<Mutex<Vec<OpRecord>>>,
+    dispatches: AtomicU64,
+    steals: AtomicU64,
+    cross_domain_steals: AtomicU64,
+    /// `Some(wall_us)` once the final op completed; guarded by `done_cv`.
+    done: Mutex<Option<f64>>,
+    done_cv: Condvar,
+}
+
+/// One session slot of the registry: a monotone install sequence number
+/// (for executor-local caching) plus the installed session.
+struct SlotCell<'env> {
+    seq: AtomicU64,
+    state: Mutex<Option<Arc<SessionState<'env>>>>,
+}
+
+/// Everything the fleet threads share.
+struct FleetShared<'env> {
+    executors: usize,
+    buffer_depth: usize,
+    domains: DomainMap,
+    // decentralized: per-executor deques + the submission injector
+    deques: Vec<WorkStealDeque>,
+    injector: Mutex<BinaryHeap<u64>>,
+    /// Racy emptiness hint so idle sweeps skip the injector lock.
+    injector_len: AtomicUsize,
+    // centralized: scheduler-owned rings + the shared completion queue
+    rings: Vec<SpscRing<u64>>,
+    done_q: MpscQueue<(u32, u64)>,
+    installs: Mutex<Vec<Arc<SessionState<'env>>>>,
+    installs_pending: AtomicBool,
+    /// Wakes the centralized scheduler (completions, installs, shutdown).
+    sched_events: EventCounter,
+    /// Wakes executors (new deque/injector/ring work, shutdown).
+    events: EventCounter,
+    shutdown: AtomicBool,
+    slots: Vec<SlotCell<'env>>,
+    free_slots: Mutex<Vec<u8>>,
+    slot_available: Condvar,
+    next_seq: AtomicU64,
+    active_sessions: AtomicUsize,
+    counters: Counters,
+}
+
+impl<'env> FleetShared<'env> {
+    fn new(config: &FleetConfig) -> FleetShared<'env> {
+        let n = config.executors;
+        FleetShared {
+            executors: n,
+            buffer_depth: config.buffer_depth,
+            domains: config.numa.clone().unwrap_or_else(|| DomainMap::flat(n)),
+            deques: (0..n).map(|_| WorkStealDeque::new(config.deque_capacity)).collect(),
+            injector: Mutex::new(BinaryHeap::new()),
+            injector_len: AtomicUsize::new(0),
+            rings: (0..n).map(|_| SpscRing::new(config.buffer_depth)).collect(),
+            // bound on un-drained completions: each executor holds at most
+            // `buffer_depth` ops it could have finished before the
+            // scheduler drains (push degrades to a bounded retry anyway)
+            done_q: MpscQueue::new(n * config.buffer_depth + n + 8),
+            installs: Mutex::new(Vec::new()),
+            installs_pending: AtomicBool::new(false),
+            sched_events: EventCounter::new(),
+            events: EventCounter::new(),
+            shutdown: AtomicBool::new(false),
+            slots: (0..config.max_sessions)
+                .map(|_| SlotCell { seq: AtomicU64::new(0), state: Mutex::new(None) })
+                .collect(),
+            // pop from the end ⇒ low slots are handed out first
+            free_slots: Mutex::new((0..config.max_sessions).rev().map(|s| s as u8).collect()),
+            slot_available: Condvar::new(),
+            next_seq: AtomicU64::new(0),
+            active_sessions: AtomicUsize::new(0),
+            counters: Counters::default(),
+        }
+    }
+
+    fn totals_snapshot(&self) -> FleetTotals {
+        FleetTotals {
+            dispatches: self.counters.dispatches.load(Ordering::SeqCst),
+            steals: self.counters.steals.load(Ordering::SeqCst),
+            cross_domain_steals: self.counters.cross_domain_steals.load(Ordering::SeqCst),
+            parks: self.counters.parks.load(Ordering::SeqCst),
+            sessions_completed: self.counters.sessions_completed.load(Ordering::SeqCst),
+            executor_threads: self.counters.executor_threads.load(Ordering::SeqCst) as u64,
+        }
+    }
+}
+
+/// Resolve a packed key's slot to its live session, through an
+/// executor-local cache keyed by the slot's install sequence number.
+///
+/// Why this is race-free: an entry for slot `s` can only exist between
+/// the session's install and its final completion (every entry is popped
+/// before its op runs, and quiescence needs every op), so whatever the
+/// slot currently holds *is* the entry's session; the cache only avoids
+/// re-locking while the sequence number is unchanged.
+fn lookup<'env>(
+    shared: &FleetShared<'env>,
+    cache: &mut [Option<(u64, Arc<SessionState<'env>>)>],
+    slot: u8,
+) -> Arc<SessionState<'env>> {
+    let cell = &shared.slots[slot as usize];
+    let seq = cell.seq.load(Ordering::Acquire);
+    if let Some((cached_seq, state)) = &cache[slot as usize] {
+        if *cached_seq == seq {
+            return Arc::clone(state);
+        }
+    }
+    let state = cell
+        .state
+        .lock()
+        .unwrap()
+        .clone()
+        .expect("live entry for a session that is not installed");
+    cache[slot as usize] = Some((seq, Arc::clone(&state)));
+    state
+}
+
+/// Final-completion bookkeeping: release the slot, flip the session's
+/// done flag, and wake everyone who might care (waiters, submitters
+/// blocked on a slot, parked fleet threads, the scheduler).
+fn finish_session<'env>(shared: &FleetShared<'env>, session: &Arc<SessionState<'env>>) {
+    let wall_us = session.t0.elapsed().as_secs_f64() * 1e6;
+    *shared.slots[session.slot as usize].state.lock().unwrap() = None;
+    shared.free_slots.lock().unwrap().push(session.slot);
+    shared.slot_available.notify_all();
+    shared.active_sessions.fetch_sub(1, Ordering::SeqCst);
+    shared.counters.sessions_completed.fetch_add(1, Ordering::Relaxed);
+    *session.done.lock().unwrap() = Some(wall_us);
+    session.done_cv.notify_all();
+    shared.events.notify();
+    shared.sched_events.notify();
+}
+
+/// Decentralized acquisition sweep for executor `e`: own deque's LIFO end,
+/// then the owner-local spill (deque-overflow fallback), then the
+/// session injector, then the NUMA-ranked highest-priority steal.
+fn acquire(shared: &FleetShared<'_>, e: usize, spill: &mut Vec<u64>) -> Option<(u64, Acquire)> {
+    if let Some(key) = shared.deques[e].pop() {
+        return Some((key, Acquire::LocalPop));
+    }
+    if let Some(key) = spill.pop() {
+        return Some((key, Acquire::LocalPop));
+    }
+    if shared.injector_len.load(Ordering::Acquire) > 0 {
+        let mut inj = shared.injector.lock().unwrap();
+        let got = inj.pop();
+        shared.injector_len.store(inj.len(), Ordering::Release);
+        drop(inj);
+        if let Some(key) = got {
+            return Some((key, Acquire::LocalPop));
+        }
+    }
+    worksteal::steal_highest_numa(&shared.deques, e, &shared.domains)
+}
+
+/// Decentralized executor body: PR-3's executor-side successor resolution,
+/// now multi-session (the key's slot routes every touch to the right
+/// session's tracker, records, and counters).
+fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
+    let mut cache: Vec<Option<(u64, Arc<SessionState<'env>>)>> =
+        (0..shared.slots.len()).map(|_| None).collect();
+    let mut spill: Vec<u64> = Vec::new();
+    let mut batch: Vec<u64> = Vec::new();
+    let mut backoff = Backoff::new();
+    loop {
+        // park-stage registration before the sweep — the eventcount's
+        // lost-wakeup guard (see crate::engine::backoff)
+        let prepared = (backoff.stage() == BackoffStage::Park).then(|| shared.events.prepare());
+        match acquire(shared, e, &mut spill) {
+            Some((key, kind)) => {
+                if prepared.is_some() {
+                    shared.events.cancel();
+                }
+                backoff.reset();
+                let slot = session_entry_slot(key);
+                let node = session_entry_node(key);
+                let session = lookup(shared, &mut cache, slot);
+                shared.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+                session.dispatches.fetch_add(1, Ordering::Relaxed);
+                if kind.is_steal() {
+                    shared.counters.steals.fetch_add(1, Ordering::Relaxed);
+                    session.steals.fetch_add(1, Ordering::Relaxed);
+                    if kind == Acquire::StealCrossDomain {
+                        shared.counters.cross_domain_steals.fetch_add(1, Ordering::Relaxed);
+                        session.cross_domain_steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let start = session.t0.elapsed().as_secs_f64() * 1e6;
+                (session.work)(node);
+                let end = session.t0.elapsed().as_secs_f64() * 1e6;
+                session.records[e]
+                    .lock()
+                    .unwrap()
+                    .push(OpRecord { node, executor: e as u32, start_us: start, end_us: end });
+                // resolve successors against the *session's* tracker and
+                // push them onto the own deque, ascending so the LIFO end
+                // is the batch's highest-level op
+                batch.clear();
+                {
+                    let levels = &session.levels;
+                    let last = session.deps.complete(session.graph, node, |s| {
+                        batch.push(pack_session_entry(levels[s as usize], slot, s));
+                    });
+                    batch.sort_unstable();
+                    let mut spilled = false;
+                    for &k in &batch {
+                        if shared.deques[e].push(k).is_err() {
+                            spill.push(k);
+                            spilled = true;
+                        }
+                    }
+                    if spilled {
+                        spill.sort_unstable();
+                    }
+                    if !batch.is_empty() {
+                        shared.events.notify();
+                    }
+                    if last {
+                        finish_session(shared, &session);
+                        cache[slot as usize] = None;
+                    }
+                }
+            }
+            None => {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    if prepared.is_some() {
+                        shared.events.cancel();
+                    }
+                    return;
+                }
+                match backoff.next() {
+                    BackoffStage::Spin => std::hint::spin_loop(),
+                    BackoffStage::Yield => std::thread::yield_now(),
+                    BackoffStage::Park => {
+                        // about to sleep: drop cached session Arcs so a
+                        // finished session's O(nodes) tracker/levels are
+                        // not pinned across an idle period (the cache
+                        // rebuilds with one registry lock per slot on the
+                        // next burst)
+                        cache.iter_mut().for_each(|c| *c = None);
+                        let observed = prepared.expect("park stage registers before the sweep");
+                        if shared.events.park(observed, PARK_TIMEOUT) {
+                            shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Centralized executor body (Algorithm 2): poll the own ring, execute,
+/// report the completion back to the scheduler thread.
+fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
+    let mut cache: Vec<Option<(u64, Arc<SessionState<'env>>)>> =
+        (0..shared.slots.len()).map(|_| None).collect();
+    let mut backoff = Backoff::new();
+    loop {
+        let prepared = (backoff.stage() == BackoffStage::Park).then(|| shared.events.prepare());
+        if let Some(key) = shared.rings[e].pop() {
+            if prepared.is_some() {
+                shared.events.cancel();
+            }
+            backoff.reset();
+            let slot = session_entry_slot(key);
+            let node = session_entry_node(key);
+            let session = lookup(shared, &mut cache, slot);
+            let start = session.t0.elapsed().as_secs_f64() * 1e6;
+            (session.work)(node);
+            let end = session.t0.elapsed().as_secs_f64() * 1e6;
+            session.records[e]
+                .lock()
+                .unwrap()
+                .push(OpRecord { node, executor: e as u32, start_us: start, end_us: end });
+            // the queue is sized for every in-flight op; degrade to a
+            // bounded retry rather than ever losing a completion
+            let mut item = (e as u32, key);
+            while let Err(back) = shared.done_q.push(item) {
+                item = back;
+                std::thread::yield_now();
+            }
+            shared.sched_events.notify();
+        } else if shared.shutdown.load(Ordering::Acquire) {
+            if prepared.is_some() {
+                shared.events.cancel();
+            }
+            return;
+        } else {
+            match backoff.next() {
+                BackoffStage::Spin => std::hint::spin_loop(),
+                BackoffStage::Yield => std::thread::yield_now(),
+                BackoffStage::Park => {
+                    // idle: drop cached session Arcs (see the
+                    // decentralized loop for the rationale)
+                    cache.iter_mut().for_each(|c| *c = None);
+                    let observed = prepared.expect("park stage registers before polling");
+                    if shared.events.park(observed, PARK_TIMEOUT) {
+                        shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Centralized scheduler body (Algorithm 1), multi-session: one max-heap
+/// of packed keys orders ready ops CP-first *across* sessions, installs
+/// seed new sessions' sources, completions resolve against the owning
+/// session's tracker.
+fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
+    let n_exec = shared.executors;
+    let depth = shared.buffer_depth;
+    let mut ready: BinaryHeap<u64> = BinaryHeap::new();
+    let mut cache: Vec<Option<(u64, Arc<SessionState<'env>>)>> =
+        (0..shared.slots.len()).map(|_| None).collect();
+    let mut inflight = vec![0usize; n_exec];
+    let mut available = IdleBitmap::new(n_exec);
+    let mut completions: Vec<(u32, u64)> = Vec::with_capacity(n_exec * 2 + 8);
+    let mut backoff = Backoff::new();
+    loop {
+        let prepared =
+            (backoff.stage() == BackoffStage::Park).then(|| shared.sched_events.prepare());
+        let mut progressed = false;
+        // newly submitted sessions: seed their sources into the heap
+        if shared.installs_pending.swap(false, Ordering::AcqRel) {
+            let pending: Vec<Arc<SessionState<'env>>> = {
+                let mut q = shared.installs.lock().unwrap();
+                q.drain(..).collect()
+            };
+            for session in &pending {
+                for s in session.graph.sources() {
+                    ready.push(pack_session_entry(session.levels[s as usize], session.slot, s));
+                }
+                progressed = true;
+            }
+        }
+        // drain the shared completion queue in one batch
+        completions.clear();
+        shared.done_q.pop_batch(&mut completions, usize::MAX);
+        for &(e, key) in completions.iter() {
+            let e = e as usize;
+            inflight[e] -= 1;
+            if inflight[e] == depth - 1 && !available.is_idle(e) {
+                available.set_idle(e);
+            }
+            let slot = session_entry_slot(key);
+            let node = session_entry_node(key);
+            let session = lookup(shared, &mut cache, slot);
+            let last = {
+                let levels = &session.levels;
+                session.deps.complete(session.graph, node, |s| {
+                    ready.push(pack_session_entry(levels[s as usize], slot, s));
+                })
+            };
+            if last {
+                finish_session(shared, &session);
+                cache[slot as usize] = None;
+            }
+            progressed = true;
+        }
+        // dispatch: max-key ops → first available executor (bit-scan)
+        let mut pushed_any = false;
+        while !ready.is_empty() && available.any_idle() {
+            let e = available.first_idle().expect("any_idle checked");
+            while inflight[e] < depth {
+                let Some(key) = ready.pop() else { break };
+                shared.rings[e].push(key).expect("availability bit ⇒ ring space");
+                inflight[e] += 1;
+                pushed_any = true;
+                shared.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+                let session = lookup(shared, &mut cache, session_entry_slot(key));
+                session.dispatches.fetch_add(1, Ordering::Relaxed);
+            }
+            if inflight[e] >= depth {
+                available.set_busy(e);
+            } else {
+                break; // heap drained with buffer room to spare
+            }
+        }
+        if pushed_any {
+            shared.events.notify();
+            progressed = true;
+        }
+        if progressed {
+            if prepared.is_some() {
+                shared.sched_events.cancel();
+            }
+            backoff.reset();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            if prepared.is_some() {
+                shared.sched_events.cancel();
+            }
+            // shutdown is contractually called only after every session
+            // quiesced; if that contract is broken (handle dropped
+            // without wait, panic unwinding a fleet), exit anyway —
+            // abandoning the sessions loudly beats deadlocking the
+            // join in `Fleet::halt` (executors are exiting too, so no
+            // completion could ever drain the remaining ops)
+            let abandoned = shared.active_sessions.load(Ordering::SeqCst);
+            if abandoned > 0 {
+                crate::log_warn!(
+                    "fleet scheduler stopping with {abandoned} session(s) still in flight \
+                     (shutdown before wait?)"
+                );
+            }
+            return;
+        }
+        match backoff.next() {
+            BackoffStage::Spin => std::hint::spin_loop(),
+            BackoffStage::Yield => std::thread::yield_now(),
+            BackoffStage::Park => {
+                let observed = prepared.expect("park stage registers before polling");
+                if shared.sched_events.park(observed, PARK_TIMEOUT) {
+                    shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// A long-lived executor fleet: threads spawned once, sessions submitted
+/// many times. Scoped to a [`std::thread::Scope`] so sessions may borrow
+/// anything that outlives the scope (graphs, work closures) with zero
+/// `unsafe` — the pattern `ThreadedGraphi::run` and `graphi serve` both
+/// build on.
+pub struct Fleet<'scope, 'env> {
+    shared: Arc<FleetShared<'env>>,
+    handles: Vec<ScopedJoinHandle<'scope, ()>>,
+    config: FleetConfig,
+}
+
+impl<'scope, 'env> Fleet<'scope, 'env> {
+    /// Spawn the fleet's threads (executors, plus one scheduler thread in
+    /// centralized mode). This is the only place threads are created.
+    pub fn new(scope: &'scope Scope<'scope, 'env>, config: FleetConfig) -> Fleet<'scope, 'env> {
+        assert!(config.executors >= 1, "a fleet needs at least one executor");
+        assert!(config.buffer_depth >= 1, "buffer depth must be at least 1");
+        assert!(
+            (1..=MAX_SESSIONS).contains(&config.max_sessions),
+            "max_sessions must be in 1..={MAX_SESSIONS} (8-bit slot field)"
+        );
+        if let Some(map) = &config.numa {
+            assert_eq!(map.len(), config.executors, "one domain per executor");
+        }
+        let shared = Arc::new(FleetShared::new(&config));
+        let mut handles = Vec::with_capacity(config.executors + 1);
+        for e in 0..config.executors {
+            let sh = Arc::clone(&shared);
+            let dispatch = config.dispatch;
+            handles.push(scope.spawn(move || {
+                sh.counters.executor_threads.fetch_add(1, Ordering::SeqCst);
+                match dispatch {
+                    DispatchMode::Decentralized => executor_decentralized(&sh, e),
+                    DispatchMode::Centralized => executor_centralized(&sh, e),
+                }
+            }));
+        }
+        if config.dispatch == DispatchMode::Centralized {
+            let sh = Arc::clone(&shared);
+            handles.push(scope.spawn(move || scheduler_loop(&sh)));
+        }
+        Fleet { shared, handles, config }
+    }
+
+    pub fn executors(&self) -> usize {
+        self.config.executors
+    }
+
+    pub fn dispatch(&self) -> DispatchMode {
+        self.config.dispatch
+    }
+
+    /// Executor threads that have ever started on this fleet. Spawned
+    /// once at construction: submitting more sessions never grows it.
+    pub fn executor_threads_started(&self) -> usize {
+        self.shared.counters.executor_threads.load(Ordering::SeqCst)
+    }
+
+    /// Sessions currently submitted but not yet quiesced.
+    pub fn active_sessions(&self) -> usize {
+        self.shared.active_sessions.load(Ordering::SeqCst)
+    }
+
+    /// Fleet-lifetime counter snapshot.
+    pub fn totals(&self) -> FleetTotals {
+        self.shared.totals_snapshot()
+    }
+
+    /// Submit a graph execution. Blocks only if every session slot is
+    /// taken (bound memory with a [`SessionQueue`] *before* submitting).
+    /// `work(node)` runs on some executor thread for each op,
+    /// dependencies respected; `levels` orders ops CP-first within and
+    /// across sessions (see the module docs).
+    pub fn submit(
+        &self,
+        graph: &'env Graph,
+        levels: impl Into<Arc<[f64]>>,
+        work: &'env (dyn Fn(NodeId) + Send + Sync),
+    ) -> SessionHandle<'env> {
+        let levels: Arc<[f64]> = levels.into();
+        assert_eq!(levels.len(), graph.len(), "one level per node");
+        assert!(
+            graph.len() < MAX_SESSION_NODES,
+            "session graphs are limited to {MAX_SESSION_NODES} nodes by the packed key's node field"
+        );
+        let shared = &self.shared;
+        let slot = {
+            let mut free = shared.free_slots.lock().unwrap();
+            loop {
+                if let Some(s) = free.pop() {
+                    break s;
+                }
+                free = shared.slot_available.wait(free).unwrap();
+            }
+        };
+        let seq = shared.next_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let state = Arc::new(SessionState {
+            slot,
+            graph,
+            levels,
+            work,
+            deps: AtomicDepTracker::new(graph),
+            t0: Instant::now(),
+            records: (0..self.config.executors).map(|_| Mutex::new(Vec::new())).collect(),
+            dispatches: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            cross_domain_steals: AtomicU64::new(0),
+            done: Mutex::new(None),
+            done_cv: Condvar::new(),
+        });
+        shared.active_sessions.fetch_add(1, Ordering::SeqCst);
+        *shared.slots[slot as usize].state.lock().unwrap() = Some(Arc::clone(&state));
+        shared.slots[slot as usize].seq.store(seq, Ordering::Release);
+        match self.config.dispatch {
+            DispatchMode::Decentralized => {
+                // submitters are not deque owners — seed through the
+                // injector, which executors drain before stealing
+                {
+                    let mut inj = shared.injector.lock().unwrap();
+                    for s in graph.sources() {
+                        inj.push(pack_session_entry(state.levels[s as usize], slot, s));
+                    }
+                    shared.injector_len.store(inj.len(), Ordering::Release);
+                }
+                shared.events.notify();
+            }
+            DispatchMode::Centralized => {
+                shared.installs.lock().unwrap().push(Arc::clone(&state));
+                shared.installs_pending.store(true, Ordering::Release);
+                shared.sched_events.notify();
+            }
+        }
+        SessionHandle { state }
+    }
+
+    fn halt(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        debug_assert_eq!(
+            self.shared.active_sessions.load(Ordering::SeqCst),
+            0,
+            "fleet shutdown with sessions still in flight"
+        );
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.events.notify();
+        self.shared.sched_events.notify();
+        for h in self.handles.drain(..) {
+            h.join().expect("fleet thread panicked");
+        }
+    }
+
+    /// Stop and join every fleet thread (all sessions must have completed
+    /// first); returns the final counter snapshot. A clean shutdown *is*
+    /// the no-leaked-threads proof: every handle is joined here. Calling
+    /// it with sessions still in flight is a contract violation: the
+    /// fleet still exits (threads abandon the remaining ops with a
+    /// warning rather than deadlocking the join), but those sessions
+    /// never quiesce and their waiters would block forever.
+    pub fn shutdown(mut self) -> FleetTotals {
+        self.halt();
+        self.shared.totals_snapshot()
+    }
+}
+
+impl Drop for Fleet<'_, '_> {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Handle to one submitted session.
+pub struct SessionHandle<'env> {
+    state: Arc<SessionState<'env>>,
+}
+
+/// What a finished session reports back.
+#[derive(Debug)]
+pub struct SessionReport {
+    /// Submit-to-quiescence wall time, µs.
+    pub wall_us: f64,
+    /// Per-op records (µs since submit), sorted by start time.
+    pub records: Vec<OpRecord>,
+    /// Ops dispatched for this session (= its node count).
+    pub dispatches: u64,
+    /// Of those, acquired by stealing (decentralized fleets).
+    pub steals: u64,
+    /// Of the steals, cross-NUMA-domain ones.
+    pub cross_domain_steals: u64,
+}
+
+impl<'env> SessionHandle<'env> {
+    /// Has the session's final op completed? (Non-blocking.)
+    pub fn is_done(&self) -> bool {
+        self.state.done.lock().unwrap().is_some()
+    }
+
+    /// Block until the session quiesces, then merge its trace and
+    /// counters. The final completion's release sequence orders every
+    /// executor's record writes before the done flag, so the merge is
+    /// complete by construction.
+    pub fn wait(self) -> SessionReport {
+        let wall_us = {
+            let mut done = self.state.done.lock().unwrap();
+            loop {
+                if let Some(w) = *done {
+                    break w;
+                }
+                done = self.state.done_cv.wait(done).unwrap();
+            }
+        };
+        let mut records: Vec<OpRecord> = Vec::with_capacity(self.state.graph.len());
+        for bucket in self.state.records.iter() {
+            records.extend(bucket.lock().unwrap().drain(..));
+        }
+        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        SessionReport {
+            wall_us,
+            records,
+            dispatches: self.state.dispatches.load(Ordering::SeqCst),
+            steals: self.state.steals.load(Ordering::SeqCst),
+            cross_domain_steals: self.state.cross_domain_steals.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// §5.1 admission control: a byte budget over the *planned peak arena
+/// footprints* of in-flight sessions ([`crate::graph::memory::plan`]).
+/// [`admit`](SessionQueue::admit) blocks until the session fits; a session
+/// larger than the whole budget is admitted only when nothing else is in
+/// flight (serial degradation instead of deadlock).
+///
+/// Admission is **FIFO-ticketed**: blocked requests are served strictly in
+/// arrival order, so a large-footprint session cannot be starved by a
+/// sustained stream of smaller sessions slipping into each freed gap —
+/// the head-of-line request always gets the next shot at the budget (the
+/// price is that requests behind a blocked head wait with it, the usual
+/// fairness/throughput trade; [`try_admit`](SessionQueue::try_admit)
+/// refuses to jump an existing queue).
+#[derive(Debug)]
+pub struct SessionQueue {
+    budget_bytes: u64,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    in_use: u64,
+    /// Next ticket to hand out to a blocking `admit`.
+    next_ticket: u64,
+    /// Ticket currently at the head of the line (== `next_ticket` when
+    /// nobody is waiting).
+    head: u64,
+}
+
+impl SessionQueue {
+    pub fn new(budget_bytes: u64) -> SessionQueue {
+        SessionQueue { budget_bytes, state: Mutex::new(QueueState::default()), cv: Condvar::new() }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes currently admitted.
+    pub fn in_use(&self) -> u64 {
+        self.state.lock().unwrap().in_use
+    }
+
+    /// Requests currently blocked in [`admit`](Self::admit).
+    pub fn waiting(&self) -> u64 {
+        let state = self.state.lock().unwrap();
+        state.next_ticket - state.head
+    }
+
+    fn fits(&self, used: u64, bytes: u64) -> bool {
+        used == 0 || used.saturating_add(bytes) <= self.budget_bytes
+    }
+
+    /// Block until `bytes` fit under the budget (FIFO among blocked
+    /// requests); the permit returns the bytes on drop.
+    pub fn admit(&self, bytes: u64) -> AdmissionPermit<'_> {
+        let mut state = self.state.lock().unwrap();
+        let ticket = state.next_ticket;
+        state.next_ticket += 1;
+        while !(state.head == ticket && self.fits(state.in_use, bytes)) {
+            state = self.cv.wait(state).unwrap();
+        }
+        state.head += 1;
+        state.in_use += bytes;
+        drop(state);
+        // the next ticket holder may already fit — let it re-check
+        self.cv.notify_all();
+        AdmissionPermit { queue: self, bytes }
+    }
+
+    /// Non-blocking [`admit`](Self::admit): succeeds only when the bytes
+    /// fit *and* no earlier request is queued (no queue jumping).
+    pub fn try_admit(&self, bytes: u64) -> Option<AdmissionPermit<'_>> {
+        let mut state = self.state.lock().unwrap();
+        if state.head == state.next_ticket && self.fits(state.in_use, bytes) {
+            state.in_use += bytes;
+            Some(AdmissionPermit { queue: self, bytes })
+        } else {
+            None
+        }
+    }
+}
+
+/// An admitted session's claim on the memory budget; released on drop.
+#[derive(Debug)]
+pub struct AdmissionPermit<'a> {
+    queue: &'a SessionQueue,
+    bytes: u64,
+}
+
+impl AdmissionPermit<'_> {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        let mut state = self.queue.state.lock().unwrap();
+        state.in_use -= self.bytes;
+        drop(state);
+        self.queue.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build as mlp, MlpConfig};
+    use std::sync::atomic::AtomicU32;
+
+    fn unit_levels(g: &Graph) -> Vec<f64> {
+        vec![1.0; g.len()]
+    }
+
+    #[test]
+    fn one_session_runs_to_quiescence_in_both_modes() {
+        let g = mlp(&MlpConfig::default());
+        for mode in DispatchMode::ALL {
+            let counts: Vec<AtomicU32> = (0..g.len()).map(|_| AtomicU32::new(0)).collect();
+            let work = |n: NodeId| {
+                counts[n as usize].fetch_add(1, Ordering::SeqCst);
+            };
+            let totals = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+                let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+                assert_eq!(report.records.len(), g.len(), "{}", mode.name());
+                assert_eq!(report.dispatches, g.len() as u64, "{}", mode.name());
+                fleet.shutdown()
+            });
+            for (v, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::SeqCst), 1, "{}: node {v}", mode.name());
+            }
+            assert_eq!(totals.dispatches, g.len() as u64, "{}", mode.name());
+            assert_eq!(totals.sessions_completed, 1, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn tiny_deques_spill_without_losing_ops() {
+        // a 1 → 32 → 1 fan through capacity-2 deques: nearly every
+        // successor push overflows into the owner-local spill, and the
+        // session must still run every op exactly once
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mids: Vec<NodeId> = (0..32)
+            .map(|i| {
+                let m = b.add(format!("m{i}"), OpKind::Scalar);
+                b.depend(src, m);
+                m
+            })
+            .collect();
+        b.add_after("sink", OpKind::Scalar, &mids);
+        let g = b.build().unwrap();
+        let counts: Vec<AtomicU32> = (0..g.len()).map(|_| AtomicU32::new(0)).collect();
+        let work = |n: NodeId| {
+            counts[n as usize].fetch_add(1, Ordering::SeqCst);
+        };
+        std::thread::scope(|scope| {
+            let config = FleetConfig { deque_capacity: 2, ..FleetConfig::new(4) };
+            let fleet = Fleet::new(scope, config);
+            let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+            assert_eq!(report.records.len(), g.len());
+            fleet.shutdown();
+        });
+        for c in &counts {
+            assert_eq!(c.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn session_queue_blocks_until_budget_frees() {
+        let q = SessionQueue::new(1000);
+        let a = q.admit(800);
+        assert_eq!(q.in_use(), 800);
+        assert!(q.try_admit(300).is_none(), "over budget must not admit");
+        let b = q.try_admit(200).expect("fits alongside");
+        drop(b);
+        std::thread::scope(|s| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            s.spawn(|| {
+                let permit = q.admit(300); // blocks until `a` drops
+                tx.send(q.in_use()).unwrap();
+                drop(permit);
+            });
+            // the admit above must still be blocked
+            assert!(
+                rx.recv_timeout(Duration::from_millis(100)).is_err(),
+                "over-budget session must wait for the budget to free"
+            );
+            drop(a);
+            let seen = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(seen, 300);
+        });
+        assert_eq!(q.in_use(), 0);
+    }
+
+    #[test]
+    fn admission_is_fifo_small_sessions_cannot_starve_a_large_one() {
+        let q = SessionQueue::new(100);
+        let small = q.admit(60);
+        std::thread::scope(|s| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let q = &q;
+            s.spawn(move || {
+                let big = q.admit(80); // blocks behind `small`
+                tx.send(q.in_use()).unwrap();
+                drop(big);
+            });
+            // wait until the large request holds the head ticket
+            while q.waiting() == 0 {
+                std::thread::yield_now();
+            }
+            // a newcomer that *would* fit must not jump the queue
+            assert!(
+                q.try_admit(10).is_none(),
+                "try_admit jumped ahead of a queued large request"
+            );
+            drop(small);
+            let seen = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(seen, 80, "the queued large request must be admitted next");
+        });
+        assert_eq!(q.in_use(), 0);
+        assert_eq!(q.waiting(), 0);
+    }
+
+    #[test]
+    fn oversized_session_admitted_only_alone() {
+        let q = SessionQueue::new(100);
+        let small = q.admit(60);
+        assert!(q.try_admit(5000).is_none(), "oversized must wait while others run");
+        drop(small);
+        let big = q.try_admit(5000).expect("oversized runs alone");
+        assert!(q.try_admit(1).is_none(), "nothing joins an oversized session");
+        drop(big);
+    }
+
+    #[test]
+    #[should_panic(expected = "one domain per executor")]
+    fn mismatched_numa_map_rejected_at_fleet_construction() {
+        std::thread::scope(|scope| {
+            let config = FleetConfig {
+                numa: Some(DomainMap::new(vec![0, 1], 0)),
+                ..FleetConfig::new(4)
+            };
+            let _ = Fleet::new(scope, config);
+        });
+    }
+}

@@ -11,12 +11,19 @@
 //! * [`artifacts`] — artifact discovery + JSON manifest parsing, plus the
 //!   persisted tuning artifacts the autotuner writes and later runs load
 //! * [`pjrt`]      — client/executable wrappers over the `xla` crate
-//! * [`threaded`]  — the Graphi scheduler driving *real* host threads
-//!   (scheduler thread + executor fleet + SPSC rings), used by the
+//! * [`fleet`]     — persistent executor fleets and per-graph serving
+//!   sessions (threads spawned once, many graphs in flight, §5.1
+//!   memory-budget admission)
+//! * [`threaded`]  — the Graphi scheduler driving *real* host threads,
+//!   now submit-one-session-and-wait on the fleet core; used by the
 //!   end-to-end training example and as proof the engine is not sim-only
+//! * [`serve`]     — the closed-loop multi-model serving driver behind
+//!   `graphi serve` (mixed request generator, throughput + latency report)
 
 pub mod artifacts;
+pub mod fleet;
 pub mod pjrt;
+pub mod serve;
 pub mod threaded;
 pub mod train;
 
@@ -24,6 +31,10 @@ pub use artifacts::{
     autotune_or_load, tuning_path, tuning_path_for, ArtifactSet, MachineKey, Manifest,
     TuneOutcome, TuningArtifact,
 };
+pub use fleet::{
+    AdmissionPermit, Fleet, FleetConfig, FleetTotals, SessionHandle, SessionQueue, SessionReport,
+};
 pub use pjrt::{LoadedModule, PjrtRuntime};
+pub use serve::{serve, ServeConfig, ServeReport};
 pub use threaded::ThreadedGraphi;
 pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

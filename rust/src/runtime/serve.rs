@@ -1,0 +1,364 @@
+//! Closed-loop multi-model serving on one persistent executor fleet — the
+//! engine behind `graphi serve`.
+//!
+//! A fixed pool of client threads replays a weighted model mix
+//! (lstm / mlp / googlenet / pathnet by default) against a single
+//! [`Fleet`]: each client picks a model, waits for §5.1 **memory
+//! admission** ([`SessionQueue`], budgeted on the model's planned peak
+//! arena footprint), submits the graph as a session, and blocks on the
+//! session's quiescence before issuing its next request — a classic
+//! closed-loop generator, so offered load ≈ `clients / mean latency` and
+//! the fleet is never swamped beyond the admission budget.
+//!
+//! The report carries throughput, p50/p99 session latency, the fleet's
+//! counter totals, and the per-session counter sums — the latter so the
+//! metric partition (Σ per-session ≤ fleet totals) stays observable from
+//! the CLI, not just from the differential tests.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::engine::DispatchMode;
+use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
+use crate::models::{self, ModelKind, ModelSize};
+use crate::runtime::fleet::{Fleet, FleetConfig, FleetTotals, SessionQueue};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One serve experiment.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Executor threads in the (single, shared) fleet.
+    pub executors: usize,
+    /// Fleet dispatch architecture for this run.
+    pub dispatch: DispatchMode,
+    /// Closed-loop client threads (concurrent sessions ≤ this).
+    pub clients: usize,
+    /// Total sessions to execute.
+    pub requests: usize,
+    /// Weighted model mix (weights need not sum to 1).
+    pub mix: Vec<(ModelKind, f64)>,
+    pub size: ModelSize,
+    /// Serve training graphs instead of forward-only inference graphs.
+    pub training: bool,
+    /// §5.1 admission budget over planned peak arena footprints.
+    pub budget_bytes: u64,
+    /// Fleet session-slot cap.
+    pub max_sessions: usize,
+    /// Busy-spin per op, µs (0 ⇒ scheduling-only, the dispatch-throughput
+    /// regime the paper's small-op argument is about).
+    pub op_spin_us: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            executors: 4,
+            dispatch: DispatchMode::Decentralized,
+            clients: 4,
+            requests: 200,
+            mix: vec![
+                (ModelKind::Lstm, 1.0),
+                (ModelKind::Mlp, 1.0),
+                (ModelKind::GoogleNet, 1.0),
+                (ModelKind::PathNet, 1.0),
+            ],
+            size: ModelSize::Small,
+            training: false,
+            // §7.1: the machine's 16 GB MCDRAM is the natural budget
+            budget_bytes: 16 << 30,
+            max_sessions: 32,
+            op_spin_us: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of one [`serve`] run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub dispatch: DispatchMode,
+    pub completed: usize,
+    pub wall_s: f64,
+    /// Sessions per second over the whole run.
+    pub throughput_rps: f64,
+    /// Session latency summary (admission wait + execution), µs.
+    pub latency_us: Summary,
+    /// `(model tag, sessions completed, planned peak bytes)` per mix entry.
+    pub per_model: Vec<(String, u64, u64)>,
+    /// Fleet-lifetime counter totals.
+    pub totals: FleetTotals,
+    /// Σ of per-session dispatch counters (must equal the fleet total).
+    pub session_dispatches: u64,
+    /// Σ of per-session steal counters (≤ the fleet total).
+    pub session_steals: u64,
+    /// Peak concurrently-in-flight sessions observed.
+    pub max_in_flight: usize,
+    /// Requests that blocked in admission before fitting the budget.
+    pub admission_blocked: u64,
+}
+
+impl ServeReport {
+    /// One-screen human-readable summary.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== serve ({} dispatch) ==", self.dispatch.name());
+        let _ = writeln!(
+            out,
+            "{} sessions in {:.2}s  →  {:.1} sessions/s",
+            self.completed, self.wall_s, self.throughput_rps
+        );
+        let _ = writeln!(
+            out,
+            "session latency: p50 {}  p99 {}  max {}",
+            crate::util::fmt_us(self.latency_us.p50),
+            crate::util::fmt_us(self.latency_us.p99),
+            crate::util::fmt_us(self.latency_us.max),
+        );
+        for (tag, n, bytes) in &self.per_model {
+            let _ = writeln!(
+                out,
+                "  {tag:12} {n:6} sessions  (planned peak {})",
+                crate::util::fmt_si(*bytes as f64)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "fleet: {} dispatches  {} steals ({} cross-domain)  {} parks  | per-session sums: {} dispatches, {} steals",
+            self.totals.dispatches,
+            self.totals.steals,
+            self.totals.cross_domain_steals,
+            self.totals.parks,
+            self.session_dispatches,
+            self.session_steals,
+        );
+        let _ = writeln!(
+            out,
+            "concurrency: ≤{} sessions in flight  |  admission: {} requests waited on the memory budget",
+            self.max_in_flight, self.admission_blocked
+        );
+        out
+    }
+}
+
+struct ZooEntry {
+    tag: String,
+    graph: Graph,
+    levels: Arc<[f64]>,
+    peak_bytes: u64,
+    weight: f64,
+}
+
+/// Run one closed-loop serve experiment; see the module docs.
+pub fn serve(cfg: &ServeConfig) -> ServeReport {
+    assert!(cfg.executors >= 1 && cfg.clients >= 1 && cfg.requests >= 1);
+    assert!(!cfg.mix.is_empty(), "empty model mix");
+    let total_weight: f64 = cfg.mix.iter().map(|(_, w)| w).sum();
+    assert!(total_weight > 0.0, "mix weights must sum to something positive");
+
+    // Pre-build the zoo once: graph, CP levels from the analytic cost
+    // model, and the §5.1 planned peak footprint that admission charges.
+    let cost = crate::cost::CostModel::knl();
+    let zoo: Vec<ZooEntry> = cfg
+        .mix
+        .iter()
+        .map(|&(kind, weight)| {
+            let graph = if cfg.training {
+                models::build(kind, cfg.size)
+            } else {
+                models::build_inference(kind, cfg.size)
+            };
+            let durations: Vec<f64> =
+                graph.nodes().iter().map(|n| cost.duration_us(&n.kind, 8)).collect();
+            let levels: Arc<[f64]> = cp_levels(&graph, &durations).into();
+            let peak_bytes = plan_memory(&graph, &graph.topo_order()).arena_bytes;
+            ZooEntry {
+                tag: format!(
+                    "{}-{}{}",
+                    kind.name(),
+                    cfg.size.name(),
+                    if cfg.training { "" } else { "-inf" }
+                ),
+                graph,
+                levels,
+                peak_bytes,
+                weight,
+            }
+        })
+        .collect();
+
+    let queue = SessionQueue::new(cfg.budget_bytes);
+    let next_request = AtomicUsize::new(0);
+    let completed_per_model: Vec<AtomicU64> = zoo.iter().map(|_| AtomicU64::new(0)).collect();
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let session_dispatches = AtomicU64::new(0);
+    let session_steals = AtomicU64::new(0);
+    let in_flight = AtomicUsize::new(0);
+    let max_in_flight = AtomicUsize::new(0);
+    let admission_blocked = AtomicU64::new(0);
+    let spin_us = cfg.op_spin_us;
+    let work = move |_n: NodeId| {
+        if spin_us > 0.0 {
+            let t0 = Instant::now();
+            while t0.elapsed().as_secs_f64() * 1e6 < spin_us {
+                std::hint::spin_loop();
+            }
+        }
+    };
+    let work_ref: &(dyn Fn(NodeId) + Send + Sync) = &work;
+
+    let t_start = Instant::now();
+    let totals = std::thread::scope(|scope| {
+        let fleet = Fleet::new(
+            scope,
+            FleetConfig {
+                dispatch: cfg.dispatch,
+                max_sessions: cfg.max_sessions,
+                ..FleetConfig::new(cfg.executors)
+            },
+        );
+        let fleet_ref = &fleet;
+        // clients live in a nested scope so they may borrow the fleet —
+        // and are all joined before the fleet shuts down
+        std::thread::scope(|clients| {
+            for c in 0..cfg.clients {
+                let mut rng = Rng::new(cfg.seed ^ ((c as u64 + 1) << 40));
+                let zoo = &zoo;
+                let queue = &queue;
+                let next_request = &next_request;
+                let completed_per_model = &completed_per_model;
+                let latencies = &latencies;
+                let session_dispatches = &session_dispatches;
+                let session_steals = &session_steals;
+                let in_flight = &in_flight;
+                let max_in_flight = &max_in_flight;
+                let admission_blocked = &admission_blocked;
+                clients.spawn(move || loop {
+                    let i = next_request.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg.requests {
+                        return;
+                    }
+                    // weighted model pick
+                    let mut draw = rng.f64() * total_weight;
+                    let mut pick = zoo.len() - 1;
+                    for (zi, z) in zoo.iter().enumerate() {
+                        if draw < z.weight {
+                            pick = zi;
+                            break;
+                        }
+                        draw -= z.weight;
+                    }
+                    let z = &zoo[pick];
+                    let t0 = Instant::now();
+                    // §5.1 admission: wait until the planned peak fits
+                    let permit = match queue.try_admit(z.peak_bytes) {
+                        Some(p) => p,
+                        None => {
+                            admission_blocked.fetch_add(1, Ordering::Relaxed);
+                            queue.admit(z.peak_bytes)
+                        }
+                    };
+                    let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_in_flight.fetch_max(now, Ordering::SeqCst);
+                    let handle = fleet_ref.submit(&z.graph, Arc::clone(&z.levels), work_ref);
+                    let report = handle.wait();
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    drop(permit);
+                    latencies.lock().unwrap().push(t0.elapsed().as_secs_f64() * 1e6);
+                    completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
+                    session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
+                    session_steals.fetch_add(report.steals, Ordering::Relaxed);
+                });
+            }
+        });
+        fleet.shutdown()
+    });
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let latencies = latencies.into_inner().unwrap();
+    let completed = latencies.len();
+    ServeReport {
+        dispatch: cfg.dispatch,
+        completed,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        latency_us: Summary::from_samples(&latencies),
+        per_model: zoo
+            .iter()
+            .zip(&completed_per_model)
+            .map(|(z, n)| (z.tag.clone(), n.load(Ordering::SeqCst), z.peak_bytes))
+            .collect(),
+        totals,
+        session_dispatches: session_dispatches.load(Ordering::SeqCst),
+        session_steals: session_steals.load(Ordering::SeqCst),
+        max_in_flight: max_in_flight.load(Ordering::SeqCst),
+        admission_blocked: admission_blocked.load(Ordering::SeqCst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(mode: DispatchMode) -> ServeConfig {
+        ServeConfig {
+            executors: 2,
+            dispatch: mode,
+            clients: 2,
+            requests: 12,
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn closed_loop_completes_every_request_in_both_modes() {
+        for mode in DispatchMode::ALL {
+            let report = serve(&quick(mode));
+            assert_eq!(report.completed, 12, "{}", mode.name());
+            assert_eq!(report.totals.sessions_completed, 12, "{}", mode.name());
+            assert_eq!(report.latency_us.n, 12, "{}", mode.name());
+            assert!(report.throughput_rps > 0.0, "{}", mode.name());
+            // per-session metric partition: sums match the fleet totals
+            assert_eq!(report.session_dispatches, report.totals.dispatches, "{}", mode.name());
+            assert!(report.session_steals <= report.totals.steals, "{}", mode.name());
+            let per_model_total: u64 = report.per_model.iter().map(|(_, n, _)| n).sum();
+            assert_eq!(per_model_total, 12, "{}", mode.name());
+            let text = report.render();
+            assert!(text.contains("sessions/s"), "{text}");
+        }
+    }
+
+    #[test]
+    fn tight_budget_serializes_but_still_completes() {
+        // a budget of one byte forces every session to run alone: the
+        // closed loop must degrade to serial admission, not deadlock
+        let cfg = ServeConfig { budget_bytes: 1, ..quick(DispatchMode::Decentralized) };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.max_in_flight, 1, "one-byte budget ⇒ strictly serial sessions");
+        // (whether a client ever *observed* the full budget is a scheduling
+        // race; the deterministic blocking proof lives in the SessionQueue
+        // unit tests and tests/serve_sessions.rs)
+    }
+
+    #[test]
+    fn mixed_zoo_spreads_requests_across_models() {
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 3,
+            requests: 24,
+            mix: vec![(ModelKind::Mlp, 1.0), (ModelKind::PathNet, 1.0)],
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 24);
+        // with an even weighting over 24 requests, both models must appear
+        let counts: Vec<u64> = report.per_model.iter().map(|(_, n, _)| *n).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 24);
+        assert!(counts.iter().all(|&n| n > 0), "both mix entries must be exercised: {counts:?}");
+    }
+}

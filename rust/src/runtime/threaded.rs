@@ -1,19 +1,29 @@
 //! The Graphi engine on *real* host threads, in two dispatch architectures.
 //!
-//! **Centralized** (§4/§5, PR 1): a scheduler thread (here: the calling
-//! thread), a fleet of executor threads, per-executor SPSC operation
-//! buffers, and a single bounded MPSC completion queue flowing completions
-//! back. Every completion round-trips executor → queue → `DepTracker` →
-//! ready-heap → SPSC ring → executor, serializing dispatch on one thread.
+//! Since PR 5 both architectures run on the **session core**
+//! ([`crate::runtime::fleet`]): a persistent [`Fleet`] of executor threads
+//! and per-graph [`Session`](crate::runtime::fleet::SessionHandle)s.
+//! `ThreadedGraphi::run` is submit-one-session-and-wait — it builds a
+//! fleet scoped to the call, submits the graph as the fleet's only
+//! session, waits for its quiescence, and shuts the fleet down — so every
+//! test and bench of this type exercises the same engine `graphi serve`
+//! keeps hot across thousands of sessions.
+//!
+//! **Centralized** (§4/§5, PR 1): a dedicated scheduler thread, a fleet of
+//! executor threads, per-executor SPSC operation buffers, and a single
+//! bounded MPSC completion queue flowing completions back. Every
+//! completion round-trips executor → queue → dep tracker → ready-heap →
+//! SPSC ring → executor, serializing dispatch on one thread.
 //!
 //! **Decentralized** (PR 3, the default): the common case never touches a
 //! coordinator. Executors share the graph's CSR successor layout through an
-//! [`AtomicDepTracker`]; the executor finishing op `n` `fetch_sub`s each
-//! successor's remaining-deps counter and pushes newly-ready ops onto its
-//! own [`WorkStealDeque`] (packed CP-level keys). Local pops take the LIFO
-//! end for cache affinity; idle executors steal the highest-priority
-//! exposed entry, preserving §4.3 CP-first semantics (see
-//! [`crate::engine::worksteal`] for the full argument).
+//! [`AtomicDepTracker`](crate::graph::AtomicDepTracker); the executor
+//! finishing op `n` `fetch_sub`s each successor's remaining-deps counter
+//! and pushes newly-ready ops onto its own work-stealing deque (packed
+//! CP-level keys). Local pops take the LIFO end for cache affinity; idle
+//! executors steal the highest-priority exposed entry, preserving §4.3
+//! CP-first semantics (see [`crate::engine::worksteal`] for the full
+//! argument).
 //!
 //! Three topology/phase refinements (PR 4) sit on top:
 //!
@@ -25,9 +35,10 @@
 //!   `Calibration::steal_cross_domain_us`.
 //! * **Adaptive idle backoff**: the idle loop is a spin→yield→park state
 //!   machine ([`crate::engine::backoff`]); producers bump an
-//!   [`EventCounter`] after every push, so parked executors wake without
-//!   polling and idle executors stop burning the cores busy executors'
-//!   op teams need (the §3 contention argument).
+//!   [`EventCounter`](crate::engine::backoff::EventCounter) after every
+//!   push, so parked executors wake without polling and idle executors
+//!   stop burning the cores busy executors' op teams need (the §3
+//!   contention argument).
 //! * **Per-phase dispatch**: a [`PhasePlan`] runs each width phase of the
 //!   graph under its own mode with a barrier at phase boundaries
 //!   ([`ThreadedGraphi::run`] dispatches to `run_phased`); tuning
@@ -39,34 +50,24 @@
 //! is the engine the paper's system would want once op rates outrun a
 //! single scheduler core.
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use crate::engine::backoff::{Backoff, BackoffStage, EventCounter};
-use crate::engine::mpsc::MpscQueue;
 use crate::engine::policies::Policy;
-use crate::engine::ready::{entry_node, pack_entry, DepTracker, ReadySet};
-use crate::engine::ring::SpscRing;
-use crate::engine::scheduler::IdleBitmap;
 use crate::engine::trace::OpRecord;
-use crate::engine::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
+use crate::engine::worksteal::DomainMap;
 use crate::engine::{DispatchMode, PhasePlan};
-use crate::graph::{phase_members, width_phases, AtomicDepTracker, Graph, NodeId};
-
-/// How long a parked executor sleeps before re-checking the world anyway.
-/// Purely a backstop — producers wake parked executors through the event
-/// counter; the timeout only bounds the damage of a hypothetical missed
-/// wakeup to a periodic poll instead of a hang.
-const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+use crate::graph::{phase_members, width_phases, Graph, NodeId};
+use crate::runtime::fleet::{Fleet, FleetConfig};
 
 /// Real-threads Graphi configuration.
 #[derive(Debug, Clone)]
 pub struct ThreadedGraphi {
     /// Executor threads to spawn.
     pub executors: usize,
-    /// Ready-op ordering (centralized mode; decentralized dispatch is
-    /// CP-first by construction).
+    /// Ready-op ordering. The session core is CP-first by construction
+    /// (packed level keys); `AntiCritical` is honored by negating the
+    /// levels, the other ready-set policies exist only on the simulated
+    /// engines.
     pub policy: Policy,
     /// Per-executor operation buffer depth (§5.2 uses 1; centralized mode).
     pub buffer_depth: usize,
@@ -147,7 +148,8 @@ pub struct ThreadedRunResult {
     /// Of `steals`, how many crossed a NUMA-domain boundary (0 without a
     /// multi-domain [`DomainMap`]).
     pub cross_domain_steals: u64,
-    /// Times an idle executor reached the park stage of the backoff state
+    /// Times an idle fleet thread (executor, or the centralized
+    /// scheduler thread) reached the park stage of the backoff state
     /// machine and actually slept on the event counter.
     pub parks: u64,
     /// Phased runs: phase boundaries where the dispatch mode changed.
@@ -159,6 +161,11 @@ impl ThreadedGraphi {
     /// thread, dependencies respected. `levels` orders ready ops (pass
     /// profiled level values, or unit levels); `Vec` callers move, `Arc`
     /// callers share — no per-run O(nodes) copy either way.
+    ///
+    /// Implemented as submit-one-session-and-wait on the session core
+    /// ([`crate::runtime::fleet`]): a fleet scoped to this call executes
+    /// the graph as its only session, so the engine under test here is the
+    /// same one `graphi serve` keeps persistent across many sessions.
     pub fn run<F>(&self, graph: &Graph, levels: impl Into<Arc<[f64]>>, work: F) -> ThreadedRunResult
     where
         F: Fn(NodeId) + Send + Sync,
@@ -169,354 +176,42 @@ impl ThreadedGraphi {
         if let Some(plan) = &self.phase_plan {
             return self.run_phased(graph, &levels, plan, &work);
         }
-        match self.dispatch {
-            DispatchMode::Centralized => self.run_centralized(graph, &levels, &work),
-            DispatchMode::Decentralized => self.run_decentralized(graph, &levels, &work),
-        }
-    }
-
-    /// The PR-1 architecture: central scheduler on the calling thread.
-    fn run_centralized<F>(&self, graph: &Graph, levels: &Arc<[f64]>, work: &F) -> ThreadedRunResult
-    where
-        F: Fn(NodeId) + Send + Sync,
-    {
-        let n_exec = self.executors;
-        let op_rings: Vec<SpscRing<NodeId>> =
-            (0..n_exec).map(|_| SpscRing::new(self.buffer_depth)).collect();
-        // one completion queue shared by all executors; sized for the whole
-        // graph so a push can never fail (each node completes exactly once)
-        let done_q: MpscQueue<(u32, NodeId)> = MpscQueue::new(graph.len() + 1);
-        let shutdown = AtomicBool::new(false);
-        // wakes executors whose op buffers the scheduler just filled
-        let events = EventCounter::new();
-        let t0 = Instant::now();
-
-        let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
-        let mut dispatches = 0u64;
-        let mut parks = 0u64;
-
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_exec);
-            for e in 0..n_exec {
-                let op_ring = &op_rings[e];
-                let done_q = &done_q;
-                let shutdown = &shutdown;
-                let events = &events;
-                let work = &work;
-                handles.push(scope.spawn(move || {
-                    // Algorithm 2: poll own buffer, execute, report back.
-                    // Idle iterations walk the spin→yield→park backoff
-                    // machine instead of burning the core forever.
-                    let mut records = Vec::new();
-                    let mut backoff = Backoff::new();
-                    let mut my_parks = 0u64;
-                    loop {
-                        // once the backoff reaches the park stage, register
-                        // as a waiter BEFORE polling — the registered
-                        // re-scan is the eventcount's lost-wakeup guard
-                        let prepared = (backoff.stage() == BackoffStage::Park)
-                            .then(|| events.prepare());
-                        if let Some(node) = op_ring.pop() {
-                            if prepared.is_some() {
-                                events.cancel();
-                            }
-                            backoff.reset();
-                            let start = t0.elapsed().as_secs_f64() * 1e6;
-                            work(node);
-                            let end = t0.elapsed().as_secs_f64() * 1e6;
-                            records.push(OpRecord {
-                                node,
-                                executor: e as u32,
-                                start_us: start,
-                                end_us: end,
-                            });
-                            // report completion to the shared queue (§4.4)
-                            done_q
-                                .push((e as u32, node))
-                                .expect("completion queue sized for whole graph");
-                        } else if shutdown.load(Ordering::Acquire) {
-                            if prepared.is_some() {
-                                events.cancel();
-                            }
-                            return (records, my_parks);
-                        } else {
-                            match backoff.next() {
-                                BackoffStage::Spin => std::hint::spin_loop(),
-                                BackoffStage::Yield => std::thread::yield_now(),
-                                BackoffStage::Park => {
-                                    let observed =
-                                        prepared.expect("park stage registers before polling");
-                                    if events.park(observed, PARK_TIMEOUT) {
-                                        my_parks += 1;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }));
-            }
-
-            // ---- scheduler (Algorithm 1) on the calling thread ----
-            // Executor availability is tracked as a bitmap (§5.2); a bit is
-            // set when the executor's depth-bounded operation buffer has
-            // room. With depth 1 this is the paper's "buffer at most one
-            // operation" behaviour: the scheduler can stage the next op
-            // while the current one runs, and no deeper (avoiding the load
-            // imbalance §5.2 observed with larger buffers).
-            let mut deps = DepTracker::new(graph);
-            let mut ready = ReadySet::new(self.policy, Arc::clone(levels), 0);
-            let mut available = IdleBitmap::new(n_exec);
-            let mut inflight = vec![0usize; n_exec];
-            let mut completions: Vec<(u32, NodeId)> = Vec::with_capacity(n_exec * 2 + 8);
-            for s in deps.sources() {
-                ready.push(s);
-            }
-            while !deps.is_done() {
-                // drain the shared completion queue in one batch — a single
-                // acquire load when idle, no per-executor scan
-                completions.clear();
-                done_q.pop_batch(&mut completions, usize::MAX);
-                for &(e, node) in completions.iter() {
-                    let e = e as usize;
-                    inflight[e] -= 1;
-                    if inflight[e] == self.buffer_depth - 1 && !available.is_idle(e) {
-                        available.set_idle(e);
-                    }
-                    deps.complete(graph, node, |n| ready.push(n));
-                }
-                // dispatch: max-level ops → first available executor
-                // (bit-scan), filling its buffer through one batched push
-                let mut progressed = false;
-                while !ready.is_empty() && available.any_idle() {
-                    let e = available.first_idle().unwrap();
-                    let room = self.buffer_depth - inflight[e];
-                    let mut feed = std::iter::from_fn(|| ready.pop()).take(room);
-                    let pushed = op_rings[e].push_batch(&mut feed);
-                    debug_assert!(pushed > 0, "availability bit ⇒ ring space");
-                    dispatches += pushed as u64;
-                    progressed = true;
-                    inflight[e] += pushed;
-                    if inflight[e] >= self.buffer_depth {
-                        available.set_busy(e);
-                    }
-                }
-                if progressed {
-                    // wake any executor parked on an empty buffer
-                    events.notify();
-                }
-                // On the paper's machine the scheduler owns a reserved core
-                // and busy-polls (§5.2). On an oversubscribed host (e.g. a
-                // 1-core CI box) pure spinning starves the executor threads
-                // of their timeslice — yield whenever no dispatch happened
-                // so completions can actually arrive (§Perf L3 iteration 1:
-                // 2.9 s → ~ms-scale for a ~1.5k-op graph).
-                if !progressed {
-                    std::thread::yield_now();
-                } else {
-                    std::hint::spin_loop();
-                }
-            }
-            shutdown.store(true, Ordering::Release);
-            events.notify();
-            for h in handles {
-                let (records, p) = h.join().expect("executor thread panicked");
-                all_records.push(records);
-                parks += p;
-            }
-        });
-
-        let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
-        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
-        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        ThreadedRunResult {
-            wall_us,
-            records,
-            dispatches,
-            steals: 0,
-            cross_domain_steals: 0,
-            parks,
-            mode_switches: 0,
-        }
-    }
-
-    /// PR-3 architecture: executor-side successor resolution + CP-aware,
-    /// NUMA-aware work stealing. No scheduler loop exists; the calling
-    /// thread only seeds the sources, joins the fleet (whose exit is the
-    /// quiescence flag raised by the executor completing the final op),
-    /// and merges the trace.
-    fn run_decentralized<F>(&self, graph: &Graph, levels: &[f64], work: &F) -> ThreadedRunResult
-    where
-        F: Fn(NodeId) + Send + Sync,
-    {
-        // decentralized dispatch is CP-first by construction and buffers
-        // through the deques, so `policy`/`buffer_depth` have no effect
-        // here — surface a misconfiguration instead of ignoring it
-        debug_assert!(
-            matches!(self.policy, Policy::CriticalPathFirst),
-            "policy {:?} is ignored by DispatchMode::Decentralized (CP-first by construction); \
-             use DispatchMode::Centralized for alternative policies",
-            self.policy
-        );
-        let n_exec = self.executors;
-        let domains = match &self.numa {
-            Some(map) => {
-                assert_eq!(map.len(), n_exec, "one domain per executor");
-                map.clone()
-            }
-            None => DomainMap::flat(n_exec),
+        // the session core is CP-first by construction (packed level
+        // keys): AntiCritical is expressible by negating the levels; the
+        // remaining policies only ever ordered the PR-1 centralized heap
+        // and have no session-core equivalent — fail loudly rather than
+        // silently scheduling under a different policy than requested
+        let levels: Arc<[f64]> = match self.policy {
+            Policy::CriticalPathFirst => levels,
+            Policy::AntiCritical => levels.iter().map(|&l| -l).collect::<Vec<f64>>().into(),
+            other => panic!(
+                "policy {other:?} is not supported by the threaded session core (CP-first by \
+                 construction); use the simulated engines for alternative ready-set policies"
+            ),
         };
-        let deps = AtomicDepTracker::new(graph);
-        // each deque could in the worst case hold every op; sizing them so
-        // guarantees pushes never fail (each op is enqueued exactly once)
-        let deques: Vec<WorkStealDeque> =
-            (0..n_exec).map(|_| WorkStealDeque::new(graph.len())).collect();
-        let done = AtomicBool::new(false);
-        // producers notify this after every deque push (a fence + one
-        // load unless someone is preparing to park); parked executors
-        // sleep on it instead of spinning (§3: idle spin burns the cores
-        // busy executors' op teams need)
-        let events = EventCounter::new();
-
-        // Startup (coordinator duty #1): seed sources round-robin, in
-        // ascending key order so every deque's LIFO end starts at its
-        // highest-priority seed.
-        let mut sources = graph.sources();
-        sources.sort_unstable_by_key(|&s| pack_entry(levels[s as usize], s));
-        for (i, &s) in sources.iter().enumerate() {
-            deques[i % n_exec]
-                .push(pack_entry(levels[s as usize], s))
-                .expect("deque sized for the whole graph");
-        }
-        let t0 = Instant::now();
-
-        let mut all_records: Vec<Vec<OpRecord>> = Vec::new();
-        let mut dispatches = 0u64;
-        let mut steals = 0u64;
-        let mut cross_domain_steals = 0u64;
-        let mut parks = 0u64;
-
+        let config = FleetConfig {
+            executors: self.executors,
+            dispatch: self.dispatch,
+            buffer_depth: self.buffer_depth,
+            numa: self.numa.clone(),
+            max_sessions: 1,
+            deque_capacity: graph.len().max(64),
+        };
         std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_exec);
-            for e in 0..n_exec {
-                let deques = &deques[..];
-                let domains = &domains;
-                let deps = &deps;
-                let done = &done;
-                let events = &events;
-                let work = &work;
-                handles.push(scope.spawn(move || {
-                    let mut records = Vec::new();
-                    let mut my_dispatches = 0u64;
-                    let mut my_steals = 0u64;
-                    let mut my_cross = 0u64;
-                    let mut my_parks = 0u64;
-                    let mut batch: Vec<u64> = Vec::new();
-                    let mut backoff = Backoff::new();
-                    loop {
-                        // once the backoff reaches the park stage, register
-                        // as a waiter BEFORE the acquire sweep: the
-                        // registered re-scan either sees a concurrent push
-                        // or the pusher sees the registration and notifies
-                        // (the eventcount's lost-wakeup guard, see
-                        // crate::engine::backoff)
-                        let prepared = (backoff.stage() == BackoffStage::Park)
-                            .then(|| events.prepare());
-                        match worksteal::acquire_numa(deques, e, domains) {
-                            Some((key, kind)) => {
-                                if prepared.is_some() {
-                                    events.cancel();
-                                }
-                                backoff.reset();
-                                my_dispatches += 1;
-                                if kind.is_steal() {
-                                    my_steals += 1;
-                                    if kind == Acquire::StealCrossDomain {
-                                        my_cross += 1;
-                                    }
-                                }
-                                let node = entry_node(key);
-                                let start = t0.elapsed().as_secs_f64() * 1e6;
-                                work(node);
-                                let end = t0.elapsed().as_secs_f64() * 1e6;
-                                records.push(OpRecord {
-                                    node,
-                                    executor: e as u32,
-                                    start_us: start,
-                                    end_us: end,
-                                });
-                                // The tentpole: resolve successors right
-                                // here — fetch_sub over the CSR slice, push
-                                // the newly-ready ops onto the own deque
-                                // (ascending, so the LIFO end is the
-                                // batch's highest-level op).
-                                batch.clear();
-                                let last = deps.complete(graph, node, |s| {
-                                    batch.push(pack_entry(levels[s as usize], s));
-                                });
-                                batch.sort_unstable();
-                                for &k in &batch {
-                                    deques[e].push(k).expect("deque sized for the whole graph");
-                                }
-                                if !batch.is_empty() {
-                                    // new work is visible — wake parked
-                                    // executors to come steal it
-                                    events.notify();
-                                }
-                                if last {
-                                    // quiescence: this completion was the
-                                    // graph's final op
-                                    done.store(true, Ordering::Release);
-                                    events.notify();
-                                }
-                            }
-                            None => {
-                                if done.load(Ordering::Acquire) {
-                                    if prepared.is_some() {
-                                        events.cancel();
-                                    }
-                                    return (records, my_dispatches, my_steals, my_cross, my_parks);
-                                }
-                                match backoff.next() {
-                                    BackoffStage::Spin => std::hint::spin_loop(),
-                                    BackoffStage::Yield => std::thread::yield_now(),
-                                    BackoffStage::Park => {
-                                        let observed = prepared
-                                            .expect("park stage registers before the sweep");
-                                        if events.park(observed, PARK_TIMEOUT) {
-                                            my_parks += 1;
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }));
+            let fleet = Fleet::new(scope, config);
+            let session = fleet.submit(graph, levels, &work);
+            let report = session.wait();
+            let totals = fleet.shutdown();
+            ThreadedRunResult {
+                wall_us: report.wall_us,
+                records: report.records,
+                dispatches: report.dispatches,
+                steals: report.steals,
+                cross_domain_steals: report.cross_domain_steals,
+                parks: totals.parks,
+                mode_switches: 0,
             }
-            // Parker/watchdog: joining *is* the quiescence wait — each
-            // executor returns only after the done flag is raised.
-            for h in handles {
-                let (records, d, s, c, p) = h.join().expect("executor thread panicked");
-                all_records.push(records);
-                dispatches += d;
-                steals += s;
-                cross_domain_steals += c;
-                parks += p;
-            }
-        });
-        debug_assert!(deps.is_done(), "threads exited with unexecuted ops");
-
-        let mut records: Vec<OpRecord> = all_records.into_iter().flatten().collect();
-        records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
-        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        ThreadedRunResult {
-            wall_us,
-            records,
-            dispatches,
-            steals,
-            cross_domain_steals,
-            parks,
-            mode_switches: 0,
-        }
+        })
     }
 
     /// Execute a [`PhasePlan`]: each width phase runs as an induced
@@ -618,7 +313,8 @@ mod tests {
     use super::*;
     use crate::models::mlp::{build as mlp, MlpConfig};
     use crate::models::{self, ModelKind, ModelSize};
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::{Duration, Instant};
 
     #[test]
     fn executes_every_op_exactly_once_in_both_modes() {
@@ -797,6 +493,42 @@ mod tests {
         assert_eq!(engine.phase_plan, Some(plan));
         let result = engine.run_tuned(&g, &tuning, |_| {});
         assert_eq!(result.records.len(), g.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported by the threaded session core")]
+    fn unsupported_policy_rejected_loudly() {
+        // Fifo/Lifo/Random only ever ordered the PR-1 centralized heap;
+        // the session core must refuse them instead of silently running
+        // CP-first
+        let g = mlp(&MlpConfig::default());
+        let engine = ThreadedGraphi { policy: Policy::Fifo, ..ThreadedGraphi::new(2) };
+        let _ = engine.run(&g, vec![1.0; g.len()], |_| {});
+    }
+
+    #[test]
+    fn anti_critical_policy_reverses_dispatch_order() {
+        // AntiCritical maps onto the session core by negating levels:
+        // a single executor must dispatch lowest-level-first
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        for name in ["a", "b", "c"] {
+            b.add(name, OpKind::Scalar);
+        }
+        let g = b.build().unwrap();
+        let levels = vec![5.0, 1.0, 9.0];
+        for mode in DispatchMode::ALL {
+            let order = std::sync::Mutex::new(Vec::new());
+            let engine = ThreadedGraphi {
+                policy: Policy::AntiCritical,
+                ..ThreadedGraphi::new(1).with_dispatch(mode)
+            };
+            engine.run(&g, levels.clone(), |n| {
+                order.lock().unwrap().push(n);
+            });
+            assert_eq!(order.into_inner().unwrap(), vec![1, 0, 2], "{}", mode.name());
+        }
     }
 
     #[test]

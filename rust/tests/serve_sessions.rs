@@ -1,0 +1,331 @@
+//! Differential + acceptance suite for persistent fleets and multi-graph
+//! serving sessions (PR 5):
+//!
+//! 1. **Spawned-once fleets**: ≥8 sequential sessions on one fleet never
+//!    grow the executor thread count past the fleet size, and
+//!    `ThreadedGraphi::run`'s public counters survive on top of the
+//!    session core.
+//! 2. **Concurrent-vs-solo differential**: one fleet running sessions A
+//!    and B concurrently produces, per session, the same op *set* and a
+//!    dependency-valid order as running each alone — in both dispatch
+//!    modes — and the per-session metric sums partition the fleet totals.
+//! 3. **Admission**: a session whose planned §5.1 footprint exceeds the
+//!    remaining budget waits until the budget frees.
+//! 4. **Sim mirror agreement**: `GraphiEngine::run_concurrent` (N DAGs on
+//!    one virtual fleet) and the threaded fleet agree on per-session op
+//!    sets and produce dependency-valid per-session orders on random DAG
+//!    pairs, both modes.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use graphi::engine::{DispatchMode, GraphiEngine, SimEnv};
+use graphi::graph::op::{EwKind, OpKind};
+use graphi::graph::{Graph, GraphBuilder, NodeId};
+use graphi::runtime::{Fleet, FleetConfig, SessionQueue, SessionReport, ThreadedGraphi};
+use graphi::util::testkit::{check, DagCase, DagGen};
+
+fn unit_levels(g: &Graph) -> Vec<f64> {
+    vec![1.0; g.len()]
+}
+
+/// A moderately wide mixed DAG for session tests.
+fn mixed_graph(seed: u64) -> Graph {
+    let mut b = GraphBuilder::new();
+    let src = b.add("src", OpKind::Scalar);
+    let mut prev: Vec<NodeId> = vec![src];
+    for layer in 0..6 {
+        let width = 2 + ((seed as usize + layer) % 3);
+        let mut this = Vec::new();
+        for i in 0..width {
+            let n = b.add(
+                format!("l{layer}n{i}"),
+                OpKind::Elementwise { n: 1000, arity: 1, kind: EwKind::Arith },
+            );
+            b.depend(prev[i % prev.len()], n);
+            this.push(n);
+        }
+        prev = this;
+    }
+    b.add_after("sink", OpKind::Scalar, &prev);
+    b.build().unwrap()
+}
+
+/// The execution order a session report implies (records are sorted by
+/// start time already; re-sort defensively).
+fn order_of(report: &SessionReport) -> Vec<NodeId> {
+    let mut recs = report.records.clone();
+    recs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+    recs.into_iter().map(|r| r.node).collect()
+}
+
+fn sorted_op_set(order: &[NodeId]) -> Vec<NodeId> {
+    let mut set = order.to_vec();
+    set.sort_unstable();
+    set
+}
+
+/// Acceptance: fleet threads are spawned once per `Fleet`, not per run —
+/// 8 sequential sessions on one fleet, executor thread count pinned, and
+/// observed work concurrency never exceeds the fleet size.
+#[test]
+fn eight_sequential_sessions_reuse_one_fleet_of_threads() {
+    let g = mixed_graph(1);
+    for mode in DispatchMode::ALL {
+        let in_work = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let work = |_n: NodeId| {
+            let now = in_work.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::yield_now(); // widen the overlap window
+            in_work.fetch_sub(1, Ordering::SeqCst);
+        };
+        let totals = std::thread::scope(|scope| {
+            let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+            for i in 0..8 {
+                let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+                assert_eq!(report.records.len(), g.len(), "{} session {i}", mode.name());
+                assert_eq!(report.dispatches, g.len() as u64, "{} session {i}", mode.name());
+                assert!(
+                    report.records.iter().all(|r| (r.executor as usize) < 3),
+                    "{} session {i}: executor id out of fleet range",
+                    mode.name()
+                );
+                // threads are NOT respawned per session
+                assert!(
+                    fleet.executor_threads_started() <= 3,
+                    "{} session {i}: more executor threads than the fleet size",
+                    mode.name()
+                );
+            }
+            fleet.shutdown()
+        });
+        assert_eq!(totals.executor_threads, 3, "{}", mode.name());
+        assert_eq!(totals.sessions_completed, 8, "{}", mode.name());
+        assert!(
+            peak.load(Ordering::SeqCst) <= 3,
+            "{}: {} ops ran concurrently on a 3-executor fleet",
+            mode.name(),
+            peak.load(Ordering::SeqCst)
+        );
+    }
+}
+
+/// `ThreadedGraphi::run` public behavior is preserved on top of the
+/// session core: same counters, across repeated runs of one engine value.
+#[test]
+fn threaded_run_counters_survive_the_session_core() {
+    let g = mixed_graph(2);
+    for mode in DispatchMode::ALL {
+        let engine = ThreadedGraphi::new(2).with_dispatch(mode);
+        for _ in 0..3 {
+            let counter = AtomicU64::new(0);
+            let r = engine.run(&g, unit_levels(&g), |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64, "{}", mode.name());
+            assert_eq!(r.records.len(), g.len(), "{}", mode.name());
+            assert_eq!(r.dispatches, g.len() as u64, "{}", mode.name());
+            assert!(r.steals <= r.dispatches, "{}", mode.name());
+            assert_eq!(r.cross_domain_steals, 0, "{}: flat fleet", mode.name());
+            assert_eq!(r.mode_switches, 0, "{}", mode.name());
+            assert!(r.wall_us > 0.0, "{}", mode.name());
+        }
+    }
+}
+
+/// Differential: sessions A and B concurrently on one fleet produce, per
+/// session, the same op set and a dependency-valid order as each alone;
+/// per-session metric sums partition the fleet totals.
+#[test]
+fn concurrent_sessions_match_solo_semantics_in_both_modes() {
+    let a = mixed_graph(3);
+    let b = mixed_graph(7);
+    for mode in DispatchMode::ALL {
+        let work = |_n: NodeId| {};
+        // solo baselines, one fleet each
+        let solo = |g: &Graph| {
+            std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
+                let report = fleet.submit(g, unit_levels(g), &work).wait();
+                fleet.shutdown();
+                report
+            })
+        };
+        let solo_a = solo(&a);
+        let solo_b = solo(&b);
+        g_validate(&a, &order_of(&solo_a), mode, "solo A");
+        g_validate(&b, &order_of(&solo_b), mode, "solo B");
+        // concurrent: both submitted before either wait
+        let (rep_a, rep_b, totals) = std::thread::scope(|scope| {
+            let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
+            let ha = fleet.submit(&a, unit_levels(&a), &work);
+            let hb = fleet.submit(&b, unit_levels(&b), &work);
+            let ra = ha.wait();
+            let rb = hb.wait();
+            let totals = fleet.shutdown();
+            (ra, rb, totals)
+        });
+        let order_a = order_of(&rep_a);
+        let order_b = order_of(&rep_b);
+        // same op set as solo, dependency-valid order per session
+        assert_eq!(sorted_op_set(&order_a), sorted_op_set(&order_of(&solo_a)), "{}", mode.name());
+        assert_eq!(sorted_op_set(&order_b), sorted_op_set(&order_of(&solo_b)), "{}", mode.name());
+        g_validate(&a, &order_a, mode, "concurrent A");
+        g_validate(&b, &order_b, mode, "concurrent B");
+        // metric partition: every dispatch/steal belongs to one session
+        assert_eq!(
+            rep_a.dispatches + rep_b.dispatches,
+            totals.dispatches,
+            "{}",
+            mode.name()
+        );
+        assert!(
+            rep_a.steals + rep_b.steals <= totals.steals,
+            "{}: session steals exceed the fleet total",
+            mode.name()
+        );
+        assert_eq!(totals.sessions_completed, 2, "{}", mode.name());
+    }
+}
+
+fn g_validate(g: &Graph, order: &[NodeId], mode: DispatchMode, tag: &str) {
+    g.validate_order(order)
+        .unwrap_or_else(|e| panic!("{} {tag}: {e}", mode.name()));
+}
+
+/// Admission: an over-budget session waits until the budget frees —
+/// end-to-end through a fleet, not just the queue unit tests.
+#[test]
+fn over_budget_session_waits_for_admission() {
+    let g = mixed_graph(5);
+    let queue = SessionQueue::new(1000);
+    let started_b = AtomicU32::new(0);
+    let work = |_n: NodeId| {};
+    std::thread::scope(|scope| {
+        let fleet = Fleet::new(scope, FleetConfig::new(2));
+        let fleet_ref = &fleet;
+        let permit_a = queue.admit(900);
+        let ha = fleet_ref.submit(&g, unit_levels(&g), &work);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::scope(|inner| {
+            let queue = &queue;
+            let started_b = &started_b;
+            let g = &g;
+            let work = &work;
+            inner.spawn(move || {
+                // B needs 400 of a 1000-byte budget with 900 in use: must
+                // block until A's permit drops
+                let permit_b = queue.admit(400);
+                started_b.store(1, Ordering::SeqCst);
+                let hb = fleet_ref.submit(g, unit_levels(g), work);
+                let rb = hb.wait();
+                drop(permit_b);
+                tx.send(rb.records.len()).unwrap();
+            });
+            assert!(
+                rx.recv_timeout(Duration::from_millis(100)).is_err(),
+                "over-budget session was admitted while the budget was full"
+            );
+            assert_eq!(started_b.load(Ordering::SeqCst), 0, "B must still be waiting");
+            let ra = ha.wait();
+            assert_eq!(ra.records.len(), g.len());
+            drop(permit_a);
+            let b_records = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(b_records, g.len());
+        });
+        fleet.shutdown();
+    });
+}
+
+fn graph_of(case: &DagCase) -> Graph {
+    let mut b = GraphBuilder::new();
+    for i in 0..case.n {
+        let kind = match i % 3 {
+            0 => OpKind::MatMul { m: 16, k: 32 + (case.weights[i] as u64 % 64), n: 32 },
+            1 => OpKind::Elementwise {
+                n: 1_000 + (case.weights[i] * 100.0) as u64,
+                arity: 2,
+                kind: EwKind::Arith,
+            },
+            _ => OpKind::Scalar,
+        };
+        b.add(format!("n{i}"), kind);
+    }
+    for &(src, dst) in &case.edges {
+        b.depend(src, dst);
+    }
+    b.build().expect("testkit DAGs are acyclic by construction")
+}
+
+/// A second graph derived from the same case: reversed weights and a
+/// shifted op-kind pattern, so the pair is genuinely heterogeneous.
+fn sibling_graph_of(case: &DagCase) -> Graph {
+    let mut b = GraphBuilder::new();
+    for i in 0..case.n {
+        let w = case.weights[case.n - 1 - i];
+        let kind = match i % 2 {
+            0 => OpKind::Elementwise { n: 500 + (w * 50.0) as u64, arity: 1, kind: EwKind::Arith },
+            _ => OpKind::Scalar,
+        };
+        b.add(format!("m{i}"), kind);
+    }
+    for &(src, dst) in &case.edges {
+        b.depend(src, dst);
+    }
+    b.build().expect("testkit DAGs are acyclic by construction")
+}
+
+/// The serve-mode acceptance differential: on random DAG pairs, the sim
+/// mirror's multi-graph mode and the threaded fleet agree on per-session
+/// op sets, and both produce dependency-valid per-session orders — in
+/// both dispatch modes.
+#[test]
+fn prop_sim_mirror_agrees_with_threaded_fleet_on_random_dag_pairs() {
+    let gen = DagGen { max_nodes: 24, edge_prob: 0.15, wmax: 50.0 };
+    let env = SimEnv::knl_deterministic();
+    check("serve-mode sim/threads agreement", &gen, 12, |case| {
+        let g1 = graph_of(case);
+        let g2 = sibling_graph_of(case);
+        for mode in DispatchMode::ALL {
+            // --- simulator: N DAGs on one virtual fleet ---
+            let engine = GraphiEngine::new(3, 8).with_dispatch(mode);
+            let (union_result, sim_sessions) = engine.run_concurrent(&[&g1, &g2], &env);
+            if union_result.records.len() != g1.len() + g2.len() {
+                return Err(format!("{}: union record count", mode.name()));
+            }
+            let mut sim_orders = Vec::new();
+            for (g, s) in [(&g1, &sim_sessions[0]), (&g2, &sim_sessions[1])] {
+                let mut recs = s.records.clone();
+                recs.sort_by(|x, y| x.start_us.total_cmp(&y.start_us));
+                let order: Vec<NodeId> = recs.iter().map(|r| r.node).collect();
+                g.validate_order(&order)
+                    .map_err(|e| format!("{} sim session: {e}", mode.name()))?;
+                sim_orders.push(order);
+            }
+            // --- threaded fleet: same two graphs as concurrent sessions ---
+            let work = |_n: NodeId| {};
+            let (r1, r2) = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+                let h1 = fleet.submit(&g1, unit_levels(&g1), &work);
+                let h2 = fleet.submit(&g2, unit_levels(&g2), &work);
+                let r1 = h1.wait();
+                let r2 = h2.wait();
+                fleet.shutdown();
+                (r1, r2)
+            });
+            for (g, rep, sim_order) in
+                [(&g1, &r1, &sim_orders[0]), (&g2, &r2, &sim_orders[1])]
+            {
+                let order = order_of(rep);
+                g.validate_order(&order)
+                    .map_err(|e| format!("{} threaded session: {e}", mode.name()))?;
+                // agreement: identical per-session op sets
+                if sorted_op_set(&order) != sorted_op_set(sim_order) {
+                    return Err(format!("{}: sim and threads disagree on the op set", mode.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -27,7 +27,7 @@ use std::time::Duration;
 use graphi::engine::{DispatchMode, DomainMap, PhasePlan};
 use graphi::graph::op::OpKind;
 use graphi::graph::{Graph, GraphBuilder, NodeId};
-use graphi::runtime::ThreadedGraphi;
+use graphi::runtime::{Fleet, FleetConfig, ThreadedGraphi};
 use graphi::util::rng::Rng;
 
 const ITERATIONS: usize = 100;
@@ -197,6 +197,141 @@ fn stress_butterfly_both_modes_all_fleets() {
 #[test]
 fn stress_fan_out_fan_in_both_modes_all_fleets() {
     stress(fan(32), "fan");
+}
+
+/// Per-session outcome of one multi-session fleet run.
+struct SessionOutcome {
+    records: usize,
+    dispatches: u64,
+    counts: Vec<u32>,
+    stamps: Vec<u64>,
+}
+
+/// Concurrent sessions on ONE shared persistent fleet: ≥4 graphs in
+/// flight at once, both dispatch modes, 2/4/8 executors, seeded levels,
+/// per-run watchdog. Asserts per-session exactly-once, per-session
+/// dependency order, the per-session/fleet metric partition, and a clean
+/// fleet shutdown (threads spawned once and all joined — `shutdown()`
+/// returning IS the no-leaked-parked-threads proof, since it joins every
+/// handle under the same watchdog).
+#[test]
+fn stress_concurrent_sessions_shared_fleet() {
+    let graphs: Vec<Arc<Graph>> = vec![
+        Arc::new(diamond_chain(12)),
+        Arc::new(butterfly(6, 8)),
+        Arc::new(fan(24)),
+        Arc::new(diamond_chain(4)),
+    ];
+    let mut rng = Rng::new(base_seed() ^ 0x5E55);
+    for iter in 0..25 {
+        for &execs in &FLEETS {
+            for mode in DispatchMode::ALL {
+                let tag = format!("sessions/iter{iter}/{execs}exec/{}", mode.name());
+                let level_sets: Vec<Vec<f64>> =
+                    graphs.iter().map(|g| seeded_levels(g.len(), &mut rng)).collect();
+                let (tx, rx) = mpsc::channel();
+                let worker_graphs = graphs.clone();
+                std::thread::spawn(move || {
+                    let graphs = worker_graphs;
+                    // per-session instrumentation, Arc'd so the boxed work
+                    // closures are 'static and still readable afterwards
+                    type SessionProbe = (Vec<AtomicU32>, AtomicU64, Vec<AtomicU64>);
+                    let per_graph: Vec<Arc<SessionProbe>> = graphs
+                        .iter()
+                        .map(|g| {
+                            Arc::new((
+                                (0..g.len()).map(|_| AtomicU32::new(0)).collect(),
+                                AtomicU64::new(1),
+                                (0..g.len()).map(|_| AtomicU64::new(0)).collect(),
+                            ))
+                        })
+                        .collect();
+                    let works: Vec<Box<dyn Fn(NodeId) + Send + Sync>> = per_graph
+                        .iter()
+                        .map(|probe| {
+                            let probe = Arc::clone(probe);
+                            Box::new(move |v: NodeId| {
+                                probe.0[v as usize].fetch_add(1, Ordering::SeqCst);
+                                let t = probe.1.fetch_add(1, Ordering::SeqCst);
+                                probe.2[v as usize].store(t, Ordering::SeqCst);
+                            }) as Box<dyn Fn(NodeId) + Send + Sync>
+                        })
+                        .collect();
+                    let (outcomes, totals) = std::thread::scope(|scope| {
+                        let fleet = Fleet::new(
+                            scope,
+                            FleetConfig::new(execs).with_dispatch(mode),
+                        );
+                        // all sessions submitted before any wait ⇒ they
+                        // are in flight concurrently on the one fleet
+                        let handles: Vec<_> = graphs
+                            .iter()
+                            .zip(&level_sets)
+                            .zip(&works)
+                            .map(|((g, levels), work)| {
+                                fleet.submit(g, levels.clone(), work.as_ref())
+                            })
+                            .collect();
+                        let reports: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+                        (reports, fleet.shutdown())
+                    });
+                    let sessions: Vec<SessionOutcome> = outcomes
+                        .iter()
+                        .zip(&per_graph)
+                        .map(|(r, probe)| SessionOutcome {
+                            records: r.records.len(),
+                            dispatches: r.dispatches,
+                            counts: probe.0.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+                            stamps: probe.2.iter().map(|s| s.load(Ordering::SeqCst)).collect(),
+                        })
+                        .collect();
+                    let session_steals: u64 = outcomes.iter().map(|r| r.steals).sum();
+                    let session_dispatches: u64 = outcomes.iter().map(|r| r.dispatches).sum();
+                    let _ = tx.send((sessions, session_steals, session_dispatches, totals));
+                });
+                let (sessions, session_steals, session_dispatches, totals) =
+                    match rx.recv_timeout(WATCHDOG) {
+                        Ok(out) => out,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            panic!("{tag}: no quiescence within {WATCHDOG:?} — dispatch hang")
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            panic!("{tag}: worker thread panicked inside the run")
+                        }
+                    };
+                // threads spawned once, never per session (post-join
+                // snapshot: every started thread is counted)
+                assert_eq!(totals.executor_threads, execs as u64, "{tag}: executor thread count");
+                for (si, (graph, s)) in graphs.iter().zip(&sessions).enumerate() {
+                    let stag = format!("{tag}/s{si}");
+                    assert_eq!(s.records, graph.len(), "{stag}: record count");
+                    assert_eq!(s.dispatches, graph.len() as u64, "{stag}: dispatches");
+                    for (v, &c) in s.counts.iter().enumerate() {
+                        assert_eq!(c, 1, "{stag}: node {v} executed {c} times");
+                    }
+                    for v in 0..graph.len() as NodeId {
+                        let tv = s.stamps[v as usize];
+                        assert!(tv > 0, "{stag}: node {v} never stamped");
+                        for &p in graph.preds(v) {
+                            let tp = s.stamps[p as usize];
+                            assert!(tp < tv, "{stag}: dep violated {p}(t={tp}) vs {v}(t={tv})");
+                        }
+                    }
+                }
+                // metric partition: per-session sums vs fleet totals
+                assert_eq!(
+                    session_dispatches, totals.dispatches,
+                    "{tag}: every dispatch belongs to exactly one session"
+                );
+                assert!(
+                    session_steals <= totals.steals,
+                    "{tag}: session steals {session_steals} exceed fleet total {}",
+                    totals.steals
+                );
+                assert_eq!(totals.sessions_completed, graphs.len() as u64, "{tag}");
+            }
+        }
+    }
 }
 
 #[test]
