@@ -340,7 +340,7 @@ fn main() {
                     ("executors", execs.to_string()),
                     ("dispatch", mode.name().to_string()),
                 ],
-                || engine.run(&graph, Arc::clone(&levels), |_| {}).dispatches,
+                || engine.run(&graph, Arc::clone(&levels), |_| {}).unwrap().dispatches,
             );
             let mean_us = runner.results.last().unwrap().summary.mean;
             runner.set_metric(graph.len() as f64 / mean_us, "dispatch/µs");
@@ -409,12 +409,14 @@ fn main() {
         let chain_levels: Arc<[f64]> = vec![1.0f64; chain.len()].into();
         for &execs in &[2usize, 4, 8] {
             let engine = ThreadedGraphi::new(execs);
-            let r = engine.run(&chain, Arc::clone(&chain_levels), |_| {
-                let t0 = std::time::Instant::now();
-                while t0.elapsed() < std::time::Duration::from_micros(100) {
-                    std::hint::spin_loop();
-                }
-            });
+            let r = engine
+                .run(&chain, Arc::clone(&chain_levels), |_| {
+                    let t0 = std::time::Instant::now();
+                    while t0.elapsed() < std::time::Duration::from_micros(100) {
+                        std::hint::spin_loop();
+                    }
+                })
+                .unwrap();
             backoff_parks.push((execs, r.parks as f64));
         }
     }

@@ -535,6 +535,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("budget-mb", Some("16384"), "§5.1 admission budget (MB of planned peak footprint)")
     .opt("max-sessions", Some("32"), "fleet session-slot cap")
     .opt("op-us", Some("0"), "busy-spin per op in µs (0 = scheduling-only)")
+    .opt(
+        "fault-rate",
+        Some("0"),
+        "probability a request draws a seeded fault plan (op panic / op delay / client cancel)",
+    )
+    .opt(
+        "deadline-us",
+        None,
+        "per-session deadline in µs; late sessions fail with DeadlineExceeded, admission timeouts are shed",
+    )
     .opt("seed", Some("42"), "request-mix seed")
     .flag("training", "serve training graphs instead of forward-only inference graphs")
     .flag("bench-json", "append serve_throughput_* headlines to BENCH_scheduler.json");
@@ -565,6 +575,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             crate::runtime::fleet::MAX_SESSIONS
         );
     }
+    let fault_rate = m.get_f64("fault-rate").map_err(Error::new)?.unwrap();
+    if !(0.0..=1.0).contains(&fault_rate) {
+        bail!("--fault-rate must be within [0, 1], got {fault_rate}");
+    }
+    let deadline_us = m.get_u64("deadline-us").map_err(Error::new)?;
+    if deadline_us == Some(0) {
+        bail!("--deadline-us must be at least 1");
+    }
     let base = crate::runtime::ServeConfig {
         executors: positive("executors")?,
         clients: positive("clients")?,
@@ -575,6 +593,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         budget_bytes: budget_mb.saturating_mul(1 << 20),
         max_sessions,
         op_spin_us: m.get_f64("op-us").map_err(Error::new)?.unwrap(),
+        fault_rate,
+        deadline_us,
         seed: m.get_u64("seed").map_err(Error::new)?.unwrap(),
         ..crate::runtime::ServeConfig::default()
     };
@@ -880,6 +900,23 @@ mod tests {
         assert_eq!(main(args(&["serve", "--requests", "2", "--executors", "0"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--clients", "0"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--max-sessions", "300"])), 1);
+        // fault-injection flags are validated up front too
+        assert_eq!(main(args(&["serve", "--requests", "2", "--fault-rate", "1.5"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--fault-rate", "-0.1"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--deadline-us", "0"])), 1);
+    }
+
+    #[test]
+    fn serve_fault_smoke_survives_injected_faults() {
+        // seeded faults + a generous deadline: the run must exit 0 (faults
+        // are reported, not fatal) in both dispatch modes
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "8", "--clients", "2", "--executors", "2", "--mix",
+                "mlp=1", "--size", "small", "--fault-rate", "0.5", "--deadline-us", "5000000",
+            ])),
+            0
+        );
     }
 
     #[test]

@@ -627,14 +627,42 @@ impl GraphiEngine {
     }
 }
 
+/// How a simulated session ended — the simulator twin of the threaded
+/// fleet's terminal states ([`crate::runtime::fleet`]'s
+/// `Done` / `Failed` / `Cancelled` / `DeadlineExceeded`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SimSessionOutcome {
+    Completed,
+    /// The op at `node` (session-local id) panicked when it started.
+    Failed { node: NodeId },
+    Cancelled,
+    DeadlineExceeded,
+}
+
+/// Fault model for one session of
+/// [`GraphiEngine::run_concurrent_faulty`]: the simulated analogue of a
+/// `FaultPlan` plus deadline — at most the *earliest* event fires, exactly
+/// like the fleet's first-terminal-transition-wins latch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimFault {
+    /// This node's op panics at its (virtual) start time.
+    pub panic_at: Option<NodeId>,
+    /// The client cancels the session at this virtual time, µs.
+    pub cancel_at_us: Option<f64>,
+    /// The session's deadline, µs past its t = 0 admission.
+    pub deadline_us: Option<f64>,
+}
+
 /// One session's share of a multi-graph ([`GraphiEngine::run_concurrent`])
-/// simulation: its records in *local* node ids, and the virtual time at
-/// which its last op finished (= its session latency, since every session
-/// is admitted at t = 0 in the closed-loop mirror).
+/// simulation: its records in *local* node ids, the virtual time at
+/// which it quiesced (last op end for completed sessions; fault
+/// observation joined with in-flight op drain for terminated ones), and
+/// how it ended.
 #[derive(Debug, Clone)]
 pub struct SessionSimResult {
     pub records: Vec<OpRecord>,
     pub makespan_us: f64,
+    pub outcome: SimSessionOutcome,
 }
 
 impl GraphiEngine {
@@ -662,7 +690,32 @@ impl GraphiEngine {
         graphs: &[&Graph],
         env: &SimEnv,
     ) -> (RunResult, Vec<SessionSimResult>) {
+        let faults = vec![SimFault::default(); graphs.len()];
+        self.run_concurrent_faulty(graphs, env, &faults)
+    }
+
+    /// [`run_concurrent`](Self::run_concurrent) with per-session fault
+    /// models — the simulator mirror of the threaded fleet's fault
+    /// domains, so serve-mode fault handling stays differentially
+    /// testable without real threads.
+    ///
+    /// The model matches the fleet's **lazy discard** semantics: the
+    /// healthy union schedule is computed first, then each faulty session
+    /// is truncated at its earliest fault event `t` — ops that started
+    /// before `t` run to completion (they had already been popped), every
+    /// later op is discarded, and the session's `makespan_us` becomes the
+    /// quiescence time `max(t, end of in-flight ops)`. The union-level
+    /// [`RunResult`] stays the counterfactual healthy run (fault-free
+    /// totals), mirroring how fleet counters keep counting through
+    /// faults.
+    pub fn run_concurrent_faulty(
+        &self,
+        graphs: &[&Graph],
+        env: &SimEnv,
+        faults: &[SimFault],
+    ) -> (RunResult, Vec<SessionSimResult>) {
         assert!(!graphs.is_empty(), "run_concurrent needs at least one graph");
+        assert_eq!(graphs.len(), faults.len(), "one fault model per session");
         assert!(
             self.phase_plan.is_none(),
             "phase plans are derived per graph; a union of sessions has no single phase structure"
@@ -675,7 +728,11 @@ impl GraphiEngine {
         let result = self.run(&union, env);
         let mut sessions: Vec<SessionSimResult> = graphs
             .iter()
-            .map(|_| SessionSimResult { records: Vec::new(), makespan_us: 0.0 })
+            .map(|_| SessionSimResult {
+                records: Vec::new(),
+                makespan_us: 0.0,
+                outcome: SimSessionOutcome::Completed,
+            })
             .collect();
         for rec in &result.records {
             let (si, local) = origin[rec.node as usize];
@@ -687,6 +744,33 @@ impl GraphiEngine {
                 start_us: rec.start_us,
                 end_us: rec.end_us,
             });
+        }
+        for (session, fault) in sessions.iter_mut().zip(faults) {
+            // earliest event wins, like the fleet's terminal CAS latch
+            let mut cut: Option<(f64, SimSessionOutcome)> = None;
+            if let Some(n) = fault.panic_at {
+                if let Some(rec) = session.records.iter().find(|r| r.node == n) {
+                    cut = Some((rec.start_us, SimSessionOutcome::Failed { node: n }));
+                }
+            }
+            if let Some(t) = fault.deadline_us {
+                if session.makespan_us > t && cut.map_or(true, |(c, _)| t < c) {
+                    cut = Some((t, SimSessionOutcome::DeadlineExceeded));
+                }
+            }
+            if let Some(t) = fault.cancel_at_us {
+                if session.makespan_us > t && cut.map_or(true, |(c, _)| t < c) {
+                    cut = Some((t, SimSessionOutcome::Cancelled));
+                }
+            }
+            if let Some((t, outcome)) = cut {
+                // lazy discard: in-flight ops (started before t) drain,
+                // nothing else is ever popped
+                session.records.retain(|r| r.start_us < t);
+                session.makespan_us =
+                    session.records.iter().fold(t, |m, r| m.max(r.end_us));
+                session.outcome = outcome;
+            }
         }
         (result, sessions)
     }
@@ -1125,5 +1209,69 @@ mod tests {
     #[should_panic(expected = "at least one graph")]
     fn run_concurrent_rejects_empty_session_list() {
         let _ = GraphiEngine::new(4, 8).run_concurrent(&[], &env());
+    }
+
+    #[test]
+    fn faulty_sim_sessions_truncate_while_healthy_peers_complete() {
+        let a = models::build(ModelKind::Mlp, ModelSize::Small);
+        let b = models::build(ModelKind::Mlp, ModelSize::Small);
+        let e = env();
+        for mode in DispatchMode::ALL {
+            let engine = GraphiEngine::new(4, 8).with_dispatch(mode);
+            // session 0 panics mid-graph; session 1 is healthy
+            let panic_node = (a.len() / 2) as NodeId;
+            let faults = [SimFault { panic_at: Some(panic_node), ..SimFault::default() }, SimFault::default()];
+            let (_, sessions) = engine.run_concurrent_faulty(&[&a, &b], &e, &faults);
+            let failed = &sessions[0];
+            assert_eq!(failed.outcome, SimSessionOutcome::Failed { node: panic_node }, "{}", mode.name());
+            assert!(failed.records.len() < a.len(), "{}", mode.name());
+            assert!(
+                failed.records.iter().all(|r| r.node != panic_node),
+                "{}: the panicked op must not appear in the trace",
+                mode.name()
+            );
+            // truncation preserves dependency validity of what did run
+            let mut recs = failed.records.clone();
+            recs.sort_by(|x, y| x.start_us.total_cmp(&y.start_us));
+            let executed: Vec<NodeId> = recs.iter().map(|r| r.node).collect();
+            a.validate_order_prefix(&executed).unwrap_or_else(|err| {
+                panic!("{}: truncated trace violates deps: {err}", mode.name())
+            });
+            // the healthy session is untouched by its peer's fault
+            let healthy = &sessions[1];
+            assert_eq!(healthy.outcome, SimSessionOutcome::Completed, "{}", mode.name());
+            assert_eq!(healthy.records.len(), b.len(), "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn sim_deadline_and_cancel_classify_by_earliest_event() {
+        let a = models::build(ModelKind::Mlp, ModelSize::Small);
+        let e = env();
+        let (_, full) = GraphiEngine::new(4, 8).run_concurrent(&[&a], &e);
+        let half = full[0].makespan_us / 2.0;
+        // deadline at half the healthy makespan ⇒ DeadlineExceeded
+        let (_, s) = GraphiEngine::new(4, 8).run_concurrent_faulty(
+            &[&a],
+            &e,
+            &[SimFault { deadline_us: Some(half), ..SimFault::default() }],
+        );
+        assert_eq!(s[0].outcome, SimSessionOutcome::DeadlineExceeded);
+        assert!(s[0].records.len() < a.len());
+        // an earlier cancel beats the deadline
+        let (_, s) = GraphiEngine::new(4, 8).run_concurrent_faulty(
+            &[&a],
+            &e,
+            &[SimFault { cancel_at_us: Some(half / 2.0), deadline_us: Some(half), ..SimFault::default() }],
+        );
+        assert_eq!(s[0].outcome, SimSessionOutcome::Cancelled);
+        // a deadline past the healthy makespan never fires
+        let (_, s) = GraphiEngine::new(4, 8).run_concurrent_faulty(
+            &[&a],
+            &e,
+            &[SimFault { deadline_us: Some(full[0].makespan_us * 2.0), ..SimFault::default() }],
+        );
+        assert_eq!(s[0].outcome, SimSessionOutcome::Completed);
+        assert_eq!(s[0].records.len(), a.len());
     }
 }

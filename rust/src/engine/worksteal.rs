@@ -50,6 +50,21 @@
 //! `AtomicU64`, which makes the classic Chase–Lev slot race benign safe
 //! Rust: a thief that loses the CAS merely read a stale value it never
 //! uses — no `unsafe` anywhere in this module.
+//!
+//! # Poisoned-entry skip (fault domains)
+//!
+//! Entries are opaque `u64`s to the deque: there is no way (and no need)
+//! to surgically remove a failed session's entries from the middle of a
+//! Chase–Lev ring. The fault-tolerance contract lives one layer up, in
+//! [`crate::runtime::fleet`]: when a session faults or is cancelled, its
+//! remaining entries are **lazily discarded at pop time** — every pop or
+//! steal resolves the packed key's session slot first and drops the entry
+//! (without executing) if that session is poisoned. The only obligation
+//! this module carries is the one it already has: every entry is handed
+//! to exactly one consumer, so every poisoned entry is discarded exactly
+//! once and the per-session live-entry accounting stays exact.
+//! [`WorkStealDeque::len`] doubles as the watchdog's per-executor depth
+//! probe when a no-progress dump is emitted.
 
 use std::sync::atomic::{fence, AtomicIsize, AtomicU64, Ordering};
 

@@ -5,7 +5,7 @@
 //! directions, so the scheduler's hot loop — "which ops did completing `p`
 //! trigger?" — is a contiguous slice walk with no allocation.
 
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 
 use super::op::OpKind;
 
@@ -242,6 +242,41 @@ impl Graph {
         Ok(())
     }
 
+    /// Like [`validate_order`](Self::validate_order) for a **partial**
+    /// execution: nodes must be distinct, each executed node must come
+    /// after all of its predecessors, and no executed node may depend on
+    /// a node that never ran. This is the shape a fault-truncated trace
+    /// must have — a dependency-closed prefix of some full valid order.
+    pub fn validate_order_prefix(&self, order: &[NodeId]) -> Result<(), String> {
+        let mut position = vec![usize::MAX; self.len()];
+        for (i, &v) in order.iter().enumerate() {
+            if (v as usize) >= self.len() {
+                return Err(format!("unknown node {v} in order"));
+            }
+            if position[v as usize] != usize::MAX {
+                return Err(format!("node {v} appears twice"));
+            }
+            position[v as usize] = i;
+        }
+        for &v in order {
+            for &p in self.preds(v) {
+                if position[p as usize] == usize::MAX {
+                    return Err(format!(
+                        "dependency violated: {} ran but its dependency {} never did",
+                        self.nodes[v as usize].name, self.nodes[p as usize].name
+                    ));
+                }
+                if position[p as usize] >= position[v as usize] {
+                    return Err(format!(
+                        "dependency violated: {} must precede {}",
+                        self.nodes[p as usize].name, self.nodes[v as usize].name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// The subgraph induced by `keep`: those nodes (re-numbered
     /// `0..keep.len()` in `keep` order) plus every edge whose endpoints
     /// are both kept. Returns the subgraph and the sub→orig id map (which
@@ -335,6 +370,11 @@ impl Graph {
 pub struct AtomicDepTracker {
     remaining_deps: Box<[AtomicU32]>,
     remaining_ops: AtomicUsize,
+    /// Cancellation latch: once set, [`complete`](Self::complete) stops
+    /// decrementing and never readies another successor, so a session that
+    /// faulted mid-flight can abandon its remaining ops without the
+    /// counters ever underflowing under a racing completion.
+    cancelled: AtomicBool,
 }
 
 impl AtomicDepTracker {
@@ -343,7 +383,11 @@ impl AtomicDepTracker {
             .map(|v| AtomicU32::new(graph.in_degree(v) as u32))
             .collect::<Vec<_>>()
             .into_boxed_slice();
-        AtomicDepTracker { remaining_deps, remaining_ops: AtomicUsize::new(graph.len()) }
+        AtomicDepTracker {
+            remaining_deps,
+            remaining_ops: AtomicUsize::new(graph.len()),
+            cancelled: AtomicBool::new(false),
+        }
     }
 
     /// Mark `node` executed; invoke `on_ready` for each successor this
@@ -360,6 +404,13 @@ impl AtomicDepTracker {
         node: NodeId,
         mut on_ready: impl FnMut(NodeId),
     ) -> bool {
+        if self.cancelled.load(Ordering::Acquire) {
+            // A racing completion may still land after cancel() (its op was
+            // already executing when the session faulted). Dropping it here
+            // keeps the counters exact for the ops that actually completed
+            // and guarantees no new successor ever becomes ready.
+            return false;
+        }
         for &s in graph.succs(node) {
             let prev = self.remaining_deps[s as usize].fetch_sub(1, Ordering::AcqRel);
             debug_assert!(prev > 0, "double trigger of node {s}");
@@ -372,13 +423,30 @@ impl AtomicDepTracker {
         prev_ops == 1
     }
 
+    /// Abandon the remaining ops: no further [`complete`](Self::complete)
+    /// call will decrement a counter or ready a successor. Returns the
+    /// number of ops that had not completed when the latch flipped (racy
+    /// by nature — completions in flight at the instant of cancellation
+    /// may or may not be counted). Idempotent.
+    pub fn cancel(&self) -> usize {
+        self.cancelled.store(true, Ordering::Release);
+        self.remaining_ops.load(Ordering::Acquire)
+    }
+
+    /// Has [`cancel`](Self::cancel) latched?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
     /// Ops not yet completed (racy under concurrency; exact once quiesced).
     pub fn remaining(&self) -> usize {
         self.remaining_ops.load(Ordering::Acquire)
     }
 
+    /// Quiesced (every op completed) *or* cancelled — either way, no
+    /// further completion will ever be the final one.
     pub fn is_done(&self) -> bool {
-        self.remaining() == 0
+        self.remaining() == 0 || self.is_cancelled()
     }
 }
 
@@ -489,6 +557,25 @@ mod tests {
         assert_eq!(fired, vec![3]);
         assert!(t.complete(&g, 3, |_| {}), "final op must report quiescence");
         assert!(t.is_done());
+    }
+
+    #[test]
+    fn atomic_dep_tracker_cancel_abandons_remaining_ops() {
+        let g = diamond();
+        let t = AtomicDepTracker::new(&g);
+        assert!(!t.complete(&g, 0, |_| {}));
+        let left = t.cancel();
+        assert_eq!(left, 3, "three ops were outstanding at cancellation");
+        assert!(t.is_cancelled());
+        assert!(t.is_done(), "cancelled counts as done for quiescence checks");
+        // a racing completion that was already executing lands harmlessly:
+        // no successor readies, no final-op signal, no counter underflow
+        let mut fired = Vec::new();
+        assert!(!t.complete(&g, 1, |n| fired.push(n)));
+        assert!(!t.complete(&g, 2, |n| fired.push(n)));
+        assert!(fired.is_empty(), "cancelled tracker must never ready a successor");
+        assert_eq!(t.remaining(), 3, "post-cancel completions do not decrement");
+        assert_eq!(t.cancel(), 3, "cancel is idempotent");
     }
 
     #[test]

@@ -70,8 +70,63 @@
 //! sessions already in flight. A session whose own footprint exceeds the
 //! whole budget is admitted only alone — the queue degrades to serial
 //! execution rather than deadlocking or lying about memory.
+//!
+//! # Failure semantics
+//!
+//! Each session is a **fault domain**: an op that panics, a client
+//! cancellation, or a missed deadline terminates *that session only* and
+//! leaves the fleet healthy for every concurrent and subsequent session.
+//! The per-session state machine (transition exactly-once via a CAS on
+//! the session's terminal latch):
+//!
+//! ```text
+//!            ┌──(final op completes)──────────► Done(wall_µs)
+//!            │
+//! Running ───┼──(op panics, catch_unwind)─────► Failed { node, payload }
+//!            │
+//!            ├──(cancel() observed at pop)────► Cancelled
+//!            │
+//!            ├──(deadline passed at pop)──────► DeadlineExceeded
+//!            │
+//!            └──(watchdog: no dispatch
+//!                progress while active)───────► Stalled
+//! ```
+//!
+//! Mechanics, in the order the tentpole invariants need them:
+//!
+//! * **Ops run under [`std::panic::catch_unwind`]** on every executor, in
+//!   both dispatch modes. A panic never unwinds an executor thread; it
+//!   transitions the session to `Failed { node, payload }`.
+//! * **Lazy discard.** A terminal-with-error session is *poisoned*; its
+//!   entries still sitting in deques / the injector / the scheduler heap /
+//!   the SPSC rings are dropped at pop time (no execution) — nothing ever
+//!   walks a Chase–Lev ring to excise entries in place
+//!   (see `crate::engine::worksteal`'s module docs).
+//! * **Count-gated slot recycling.** Every live entry (queued *or* being
+//!   processed) holds one unit of its session's live-entry count; whoever
+//!   retires the count to zero releases the slot. A slot therefore cannot
+//!   be recycled while any stale entry could still resolve to it — the
+//!   slot-reuse ABA guard that makes the registry lookup safe even for
+//!   faulted sessions whose entries outlive their terminal transition.
+//! * **Waiters get a structured [`SessionError`]**, not a makespan:
+//!   [`SessionHandle::wait`] returns `Result<SessionReport, SessionError>`
+//!   and wakes through the same condvar as the healthy path. The memory
+//!   permit is the caller's [`AdmissionPermit`] RAII guard, so a failed
+//!   session releases its budget the moment the waiter drops it.
+//! * **Watchdog.** An optional monitor thread ([`FleetConfig::watchdog`])
+//!   detects active sessions with no dispatch progress for the configured
+//!   window, emits a diagnostic dump (per-executor last entry, deque
+//!   depth, park/busy state, injector backlog) and fails the stuck
+//!   sessions with [`SessionError::Stalled`] so their waiters wake instead
+//!   of hanging. A truly hung op still pins its executor thread — the
+//!   watchdog unwedges *waiters*, it cannot kill threads.
+//! * **[`Fleet::shutdown`] aggregates faults** into a [`FleetError`]
+//!   (panicked fleet threads + failed-session count + final totals)
+//!   rather than aborting the process on `join()`.
 
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{Scope, ScopedJoinHandle};
@@ -100,6 +155,11 @@ pub const MAX_SESSIONS: usize = 256;
 /// Hard cap on a session graph's node count: the packed key's node field.
 pub const MAX_SESSION_NODES: usize = 1 << SESSION_NODE_BITS;
 
+/// High bit of a completion tag: the executor discarded (or failed on)
+/// this entry itself — the scheduler must rebalance `inflight` but must
+/// neither resolve successors nor retire the entry again.
+const DONE_DISCARDED: u32 = 1 << 31;
+
 /// Shape and policy of a persistent fleet.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -121,6 +181,12 @@ pub struct FleetConfig {
     /// back to an owner-local spill vector — correct, just not stealable —
     /// so this is a performance knob, not a correctness bound.
     pub deque_capacity: usize,
+    /// Spawn a watchdog thread that fails sessions making no dispatch
+    /// progress for this long (see the module docs' failure-semantics
+    /// section). `None` (the default) spawns no watchdog. The window must
+    /// comfortably exceed the longest single op: the watchdog cannot
+    /// distinguish a slow op from a hung one.
+    pub watchdog: Option<Duration>,
 }
 
 impl FleetConfig {
@@ -132,11 +198,17 @@ impl FleetConfig {
             numa: None,
             max_sessions: 32,
             deque_capacity: 1 << 15,
+            watchdog: None,
         }
     }
 
     pub fn with_dispatch(mut self, dispatch: DispatchMode) -> FleetConfig {
         self.dispatch = dispatch;
+        self
+    }
+
+    pub fn with_watchdog(mut self, stall_after: Duration) -> FleetConfig {
+        self.watchdog = Some(stall_after);
         self
     }
 }
@@ -157,6 +229,15 @@ pub struct FleetTotals {
     pub parks: u64,
     /// Sessions that ran to quiescence.
     pub sessions_completed: u64,
+    /// Sessions terminated by an op panic or the watchdog
+    /// ([`SessionError::OpPanicked`] / [`SessionError::Stalled`]).
+    pub sessions_failed: u64,
+    /// Sessions terminated by [`SessionHandle::cancel`].
+    pub sessions_cancelled: u64,
+    /// Sessions terminated by a [`Fleet::submit_with_deadline`] miss.
+    pub sessions_deadline_missed: u64,
+    /// Entries of poisoned sessions dropped at pop time (lazy discard).
+    pub entries_discarded: u64,
     /// Executor threads that ever started on this fleet — spawned once at
     /// construction, so this never grows with submissions (the acceptance
     /// test reads it from the post-join snapshot [`Fleet::shutdown`]
@@ -171,9 +252,111 @@ struct Counters {
     cross_domain_steals: AtomicU64,
     parks: AtomicU64,
     sessions_completed: AtomicU64,
+    sessions_failed: AtomicU64,
+    sessions_cancelled: AtomicU64,
+    sessions_deadline_missed: AtomicU64,
+    entries_discarded: AtomicU64,
     /// Executor threads that ever started on this fleet — the
     /// spawned-once proof the acceptance test reads.
     executor_threads: AtomicUsize,
+}
+
+/// Why a session ended without a makespan (the module docs' state
+/// machine; every variant is terminal and exactly-once).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// An op's work closure panicked; the payload is its panic message.
+    OpPanicked { node: NodeId, payload: String },
+    /// [`SessionHandle::cancel`] was observed at pop time.
+    Cancelled,
+    /// The [`Fleet::submit_with_deadline`] deadline passed before the
+    /// session quiesced (checked cooperatively at pop time).
+    DeadlineExceeded,
+    /// The fleet watchdog failed this session after observing no dispatch
+    /// progress anywhere on the fleet for its full stall window.
+    Stalled,
+}
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::OpPanicked { node, payload } => {
+                write!(f, "op {node} panicked: {payload}")
+            }
+            SessionError::Cancelled => write!(f, "session cancelled"),
+            SessionError::DeadlineExceeded => write!(f, "session deadline exceeded"),
+            SessionError::Stalled => {
+                write!(f, "session made no progress (failed by the fleet watchdog)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// What a faulted fleet reports from [`Fleet::shutdown`] instead of
+/// aborting: which fleet threads panicked outright (a runtime bug — op
+/// panics are caught and never unwind an executor) and how many sessions
+/// failed, plus the final totals so callers can still account for the
+/// work that did happen.
+#[derive(Debug, Clone)]
+pub struct FleetError {
+    /// Panic messages of fleet threads that did not join cleanly.
+    pub panicked_threads: Vec<String>,
+    /// Sessions that ended in [`SessionError::OpPanicked`] or
+    /// [`SessionError::Stalled`].
+    pub sessions_failed: u64,
+    /// Final counter snapshot (what [`Fleet::shutdown`] would have
+    /// returned on a healthy fleet).
+    pub totals: FleetTotals,
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fleet shut down after faults: {} session(s) failed, {} fleet thread(s) panicked",
+            self.sessions_failed,
+            self.panicked_threads.len()
+        )?;
+        for msg in &self.panicked_threads {
+            write!(f, "; thread panic: {msg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Render a panic payload the way `std` would print it.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A session's work closure: borrowed for the plain [`Fleet::submit`]
+/// path (zero allocation, the `ThreadedGraphi` hot path), owned for
+/// callers that build per-session closures inside the fleet scope
+/// ([`Fleet::submit_owned`], which `graphi serve` uses for per-request
+/// fault plans).
+enum SessionWork<'env> {
+    Borrowed(&'env (dyn Fn(NodeId) + Send + Sync)),
+    Owned(Arc<dyn Fn(NodeId) + Send + Sync + 'env>),
+}
+
+impl SessionWork<'_> {
+    #[inline]
+    fn call(&self, node: NodeId) {
+        match self {
+            SessionWork::Borrowed(f) => f(node),
+            SessionWork::Owned(f) => f(node),
+        }
+    }
 }
 
 /// One in-flight (or just-finished) graph execution.
@@ -185,17 +368,34 @@ struct SessionState<'env> {
     slot: u8,
     graph: &'env Graph,
     levels: Arc<[f64]>,
-    work: &'env (dyn Fn(NodeId) + Send + Sync),
+    work: SessionWork<'env>,
     deps: AtomicDepTracker,
     /// Session epoch: records and the wall clock are relative to submit.
     t0: Instant,
+    /// Cooperative deadline ([`Fleet::submit_with_deadline`]), checked at
+    /// pop time.
+    deadline: Option<Instant>,
     /// Per-executor record buckets (each executor locks only its own).
     records: Vec<Mutex<Vec<OpRecord>>>,
     dispatches: AtomicU64,
     steals: AtomicU64,
     cross_domain_steals: AtomicU64,
-    /// `Some(wall_us)` once the final op completed; guarded by `done_cv`.
-    done: Mutex<Option<f64>>,
+    /// Entries alive for this session: queued in a deque / the injector /
+    /// the scheduler heap / a ring, **or** currently being processed by a
+    /// thread that has not retired them yet. The retire that drains this
+    /// to zero releases the slot — the count-gated recycling that makes
+    /// slot reuse ABA-free (module docs).
+    live_entries: AtomicUsize,
+    /// Terminal latch: exactly one of [`finish_session`] / [`fail_session`]
+    /// wins the CAS and writes `outcome`.
+    terminal: AtomicBool,
+    /// Terminal-with-error: remaining entries are discarded at pop time.
+    poisoned: AtomicBool,
+    /// [`SessionHandle::cancel`] was requested (acted on at pop time).
+    cancel_requested: AtomicBool,
+    /// `Some(Ok(wall_us))` or `Some(Err(_))` once terminal; guarded by
+    /// `done_cv`.
+    outcome: Mutex<Option<Result<f64, SessionError>>>,
     done_cv: Condvar,
 }
 
@@ -232,6 +432,13 @@ struct FleetShared<'env> {
     next_seq: AtomicU64,
     active_sessions: AtomicUsize,
     counters: Counters,
+    // watchdog telemetry (one cell per executor)
+    /// Last packed key each executor acquired (`u64::MAX` = none yet).
+    last_key: Vec<AtomicU64>,
+    /// Executor is inside a work closure right now.
+    busy: Vec<AtomicBool>,
+    /// Executor is parked on the eventcount right now.
+    parked: Vec<AtomicBool>,
 }
 
 impl<'env> FleetShared<'env> {
@@ -263,6 +470,9 @@ impl<'env> FleetShared<'env> {
             next_seq: AtomicU64::new(0),
             active_sessions: AtomicUsize::new(0),
             counters: Counters::default(),
+            last_key: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            busy: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            parked: (0..n).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -273,55 +483,154 @@ impl<'env> FleetShared<'env> {
             cross_domain_steals: self.counters.cross_domain_steals.load(Ordering::SeqCst),
             parks: self.counters.parks.load(Ordering::SeqCst),
             sessions_completed: self.counters.sessions_completed.load(Ordering::SeqCst),
+            sessions_failed: self.counters.sessions_failed.load(Ordering::SeqCst),
+            sessions_cancelled: self.counters.sessions_cancelled.load(Ordering::SeqCst),
+            sessions_deadline_missed: self
+                .counters
+                .sessions_deadline_missed
+                .load(Ordering::SeqCst),
+            entries_discarded: self.counters.entries_discarded.load(Ordering::SeqCst),
             executor_threads: self.counters.executor_threads.load(Ordering::SeqCst) as u64,
         }
+    }
+
+    /// Monotone progress stamp for the watchdog: any dispatch, discard,
+    /// or terminal transition anywhere on the fleet bumps it.
+    fn progress_stamp(&self) -> u64 {
+        self.counters.dispatches.load(Ordering::Relaxed)
+            + self.counters.entries_discarded.load(Ordering::Relaxed)
+            + self.counters.sessions_completed.load(Ordering::Relaxed)
+            + self.counters.sessions_failed.load(Ordering::Relaxed)
+            + self.counters.sessions_cancelled.load(Ordering::Relaxed)
+            + self.counters.sessions_deadline_missed.load(Ordering::Relaxed)
     }
 }
 
 /// Resolve a packed key's slot to its live session, through an
 /// executor-local cache keyed by the slot's install sequence number.
 ///
-/// Why this is race-free: an entry for slot `s` can only exist between
-/// the session's install and its final completion (every entry is popped
-/// before its op runs, and quiescence needs every op), so whatever the
-/// slot currently holds *is* the entry's session; the cache only avoids
-/// re-locking while the sequence number is unchanged.
+/// Why this is race-free: every live entry holds a unit of its session's
+/// live-entry count, and a slot is recycled only once that count drains
+/// to zero — so whatever the slot currently holds *is* the entry's
+/// session; the cache only avoids re-locking while the sequence number is
+/// unchanged. `None` (an entry whose slot is empty) is unreachable by
+/// that argument; callers treat it as a stale entry and drop it rather
+/// than execute against the wrong session.
 fn lookup<'env>(
     shared: &FleetShared<'env>,
     cache: &mut [Option<(u64, Arc<SessionState<'env>>)>],
     slot: u8,
-) -> Arc<SessionState<'env>> {
+) -> Option<Arc<SessionState<'env>>> {
     let cell = &shared.slots[slot as usize];
     let seq = cell.seq.load(Ordering::Acquire);
     if let Some((cached_seq, state)) = &cache[slot as usize] {
         if *cached_seq == seq {
-            return Arc::clone(state);
+            return Some(Arc::clone(state));
         }
     }
-    let state = cell
-        .state
-        .lock()
-        .unwrap()
-        .clone()
-        .expect("live entry for a session that is not installed");
+    let state = cell.state.lock().unwrap().clone()?;
     cache[slot as usize] = Some((seq, Arc::clone(&state)));
-    state
+    Some(state)
 }
 
-/// Final-completion bookkeeping: release the slot, flip the session's
-/// done flag, and wake everyone who might care (waiters, submitters
-/// blocked on a slot, parked fleet threads, the scheduler).
+/// Final-completion bookkeeping: win the terminal latch, flip the
+/// session's outcome to `Ok(wall_µs)`, and wake everyone who might care
+/// (waiters, parked fleet threads, the scheduler). The slot itself is
+/// released by the retire that drains the live-entry count
+/// ([`retire_entry`]), which happens-after this on the healthy path.
 fn finish_session<'env>(shared: &FleetShared<'env>, session: &Arc<SessionState<'env>>) {
+    if session.terminal.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_err()
+    {
+        // a fault/cancel/watchdog transition won the race; its bookkeeping
+        // stands and this completion is just a late arrival
+        return;
+    }
     let wall_us = session.t0.elapsed().as_secs_f64() * 1e6;
-    *shared.slots[session.slot as usize].state.lock().unwrap() = None;
-    shared.free_slots.lock().unwrap().push(session.slot);
-    shared.slot_available.notify_all();
     shared.active_sessions.fetch_sub(1, Ordering::SeqCst);
     shared.counters.sessions_completed.fetch_add(1, Ordering::Relaxed);
-    *session.done.lock().unwrap() = Some(wall_us);
+    *session.outcome.lock().unwrap() = Some(Ok(wall_us));
     session.done_cv.notify_all();
     shared.events.notify();
     shared.sched_events.notify();
+}
+
+/// Terminal-with-error transition (op panic, cancel, deadline, watchdog):
+/// win the terminal latch, poison the session so its remaining entries
+/// are discarded at pop time, cancel its dep tracker so racing
+/// completions become no-ops, and wake waiters with the structured error.
+/// Returns whether this call won the transition.
+fn fail_session<'env>(
+    shared: &FleetShared<'env>,
+    session: &Arc<SessionState<'env>>,
+    err: SessionError,
+) -> bool {
+    if session.terminal.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_err()
+    {
+        return false;
+    }
+    session.poisoned.store(true, Ordering::Release);
+    session.deps.cancel();
+    shared.active_sessions.fetch_sub(1, Ordering::SeqCst);
+    match err {
+        SessionError::OpPanicked { .. } | SessionError::Stalled => {
+            shared.counters.sessions_failed.fetch_add(1, Ordering::Relaxed)
+        }
+        SessionError::Cancelled => shared.counters.sessions_cancelled.fetch_add(1, Ordering::Relaxed),
+        SessionError::DeadlineExceeded => {
+            shared.counters.sessions_deadline_missed.fetch_add(1, Ordering::Relaxed)
+        }
+    };
+    *session.outcome.lock().unwrap() = Some(Err(err));
+    session.done_cv.notify_all();
+    // wake parked executors and the scheduler so the poisoned entries
+    // drain (each drain retires the count toward the slot release)
+    shared.events.notify();
+    shared.sched_events.notify();
+    true
+}
+
+/// Release a terminal session's slot back to the free list. Called
+/// exactly once per session, by whoever drains its live-entry count.
+fn release_slot<'env>(shared: &FleetShared<'env>, session: &Arc<SessionState<'env>>) {
+    *shared.slots[session.slot as usize].state.lock().unwrap() = None;
+    shared.free_slots.lock().unwrap().push(session.slot);
+    shared.slot_available.notify_all();
+}
+
+/// Retire one processed (executed or discarded) entry of `session`. The
+/// retire that drains the count to zero observes a terminal session by
+/// construction — every non-terminal session has at least one live entry
+/// — and releases the slot.
+fn retire_entry<'env>(shared: &FleetShared<'env>, session: &Arc<SessionState<'env>>) {
+    if session.live_entries.fetch_sub(1, Ordering::AcqRel) == 1 {
+        debug_assert!(
+            session.terminal.load(Ordering::Acquire),
+            "live-entry count drained before a terminal transition"
+        );
+        release_slot(shared, session);
+    }
+}
+
+/// Pop-time interception, shared by both dispatch modes: discard the
+/// entry if its session is poisoned, and turn a pending cancel or an
+/// expired deadline into the terminal transition. Returns `true` when the
+/// entry was consumed (discarded and retired) and must not execute.
+fn intercept_at_pop<'env>(
+    shared: &FleetShared<'env>,
+    session: &Arc<SessionState<'env>>,
+) -> bool {
+    if !session.poisoned.load(Ordering::Acquire) {
+        if session.cancel_requested.load(Ordering::Acquire) {
+            fail_session(shared, session, SessionError::Cancelled);
+        } else if session.deadline.is_some_and(|d| Instant::now() >= d) {
+            fail_session(shared, session, SessionError::DeadlineExceeded);
+        } else {
+            return false;
+        }
+    }
+    shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+    retire_entry(shared, session);
+    true
 }
 
 /// Decentralized acquisition sweep for executor `e`: own deque's LIFO end,
@@ -367,7 +676,18 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                 backoff.reset();
                 let slot = session_entry_slot(key);
                 let node = session_entry_node(key);
-                let session = lookup(shared, &mut cache, slot);
+                shared.last_key[e].store(key, Ordering::Relaxed);
+                let Some(session) = lookup(shared, &mut cache, slot) else {
+                    // unreachable by the count-gated recycling argument,
+                    // but a stale entry must be dropped, never executed
+                    // against whatever session owns the slot now
+                    shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                };
+                if intercept_at_pop(shared, &session) {
+                    cache[slot as usize] = None;
+                    continue;
+                }
                 shared.counters.dispatches.fetch_add(1, Ordering::Relaxed);
                 session.dispatches.fetch_add(1, Ordering::Relaxed);
                 if kind.is_steal() {
@@ -379,21 +699,41 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                     }
                 }
                 let start = session.t0.elapsed().as_secs_f64() * 1e6;
-                (session.work)(node);
+                shared.busy[e].store(true, Ordering::Relaxed);
+                let result = catch_unwind(AssertUnwindSafe(|| session.work.call(node)));
+                shared.busy[e].store(false, Ordering::Relaxed);
                 let end = session.t0.elapsed().as_secs_f64() * 1e6;
+                if let Err(payload) = result {
+                    fail_session(
+                        shared,
+                        &session,
+                        SessionError::OpPanicked { node, payload: panic_message(payload) },
+                    );
+                    retire_entry(shared, &session);
+                    cache[slot as usize] = None;
+                    continue;
+                }
                 session.records[e]
                     .lock()
                     .unwrap()
                     .push(OpRecord { node, executor: e as u32, start_us: start, end_us: end });
                 // resolve successors against the *session's* tracker and
                 // push them onto the own deque, ascending so the LIFO end
-                // is the batch's highest-level op
+                // is the batch's highest-level op; a session poisoned
+                // while this op ran propagates nothing further
                 batch.clear();
-                {
+                let mut last = false;
+                if !session.poisoned.load(Ordering::Acquire) {
                     let levels = &session.levels;
-                    let last = session.deps.complete(session.graph, node, |s| {
+                    last = session.deps.complete(session.graph, node, |s| {
                         batch.push(pack_session_entry(levels[s as usize], slot, s));
                     });
+                }
+                if !batch.is_empty() {
+                    // count the successors live *before* exposing them:
+                    // our own un-retired entry keeps the count nonzero
+                    // throughout, so the slot cannot recycle under us
+                    session.live_entries.fetch_add(batch.len(), Ordering::AcqRel);
                     batch.sort_unstable();
                     let mut spilled = false;
                     for &k in &batch {
@@ -405,13 +745,14 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                     if spilled {
                         spill.sort_unstable();
                     }
-                    if !batch.is_empty() {
-                        shared.events.notify();
-                    }
-                    if last {
-                        finish_session(shared, &session);
-                        cache[slot as usize] = None;
-                    }
+                    shared.events.notify();
+                }
+                if last {
+                    finish_session(shared, &session);
+                }
+                retire_entry(shared, &session);
+                if last {
+                    cache[slot as usize] = None;
                 }
             }
             None => {
@@ -432,9 +773,11 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                         // next burst)
                         cache.iter_mut().for_each(|c| *c = None);
                         let observed = prepared.expect("park stage registers before the sweep");
+                        shared.parked[e].store(true, Ordering::Relaxed);
                         if shared.events.park(observed, PARK_TIMEOUT) {
                             shared.counters.parks.fetch_add(1, Ordering::Relaxed);
                         }
+                        shared.parked[e].store(false, Ordering::Relaxed);
                     }
                 }
             }
@@ -443,7 +786,11 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
 }
 
 /// Centralized executor body (Algorithm 2): poll the own ring, execute,
-/// report the completion back to the scheduler thread.
+/// report the completion back to the scheduler thread. Entries the
+/// executor consumes without a real completion (poisoned discards, the
+/// panicking op itself) still report back, tagged [`DONE_DISCARDED`], so
+/// the scheduler's inflight/availability bookkeeping never leaks a ring
+/// slot — but the executor retires those entries itself.
 fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
     let mut cache: Vec<Option<(u64, Arc<SessionState<'env>>)>> =
         (0..shared.slots.len()).map(|_| None).collect();
@@ -457,20 +804,42 @@ fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
             backoff.reset();
             let slot = session_entry_slot(key);
             let node = session_entry_node(key);
-            let session = lookup(shared, &mut cache, slot);
+            shared.last_key[e].store(key, Ordering::Relaxed);
+            let Some(session) = lookup(shared, &mut cache, slot) else {
+                shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                push_done(shared, e as u32 | DONE_DISCARDED, key);
+                shared.sched_events.notify();
+                continue;
+            };
+            if intercept_at_pop(shared, &session) {
+                cache[slot as usize] = None;
+                push_done(shared, e as u32 | DONE_DISCARDED, key);
+                shared.sched_events.notify();
+                continue;
+            }
             let start = session.t0.elapsed().as_secs_f64() * 1e6;
-            (session.work)(node);
+            shared.busy[e].store(true, Ordering::Relaxed);
+            let result = catch_unwind(AssertUnwindSafe(|| session.work.call(node)));
+            shared.busy[e].store(false, Ordering::Relaxed);
             let end = session.t0.elapsed().as_secs_f64() * 1e6;
-            session.records[e]
-                .lock()
-                .unwrap()
-                .push(OpRecord { node, executor: e as u32, start_us: start, end_us: end });
-            // the queue is sized for every in-flight op; degrade to a
-            // bounded retry rather than ever losing a completion
-            let mut item = (e as u32, key);
-            while let Err(back) = shared.done_q.push(item) {
-                item = back;
-                std::thread::yield_now();
+            match result {
+                Err(payload) => {
+                    fail_session(
+                        shared,
+                        &session,
+                        SessionError::OpPanicked { node, payload: panic_message(payload) },
+                    );
+                    retire_entry(shared, &session);
+                    cache[slot as usize] = None;
+                    push_done(shared, e as u32 | DONE_DISCARDED, key);
+                }
+                Ok(()) => {
+                    session.records[e]
+                        .lock()
+                        .unwrap()
+                        .push(OpRecord { node, executor: e as u32, start_us: start, end_us: end });
+                    push_done(shared, e as u32, key);
+                }
             }
             shared.sched_events.notify();
         } else if shared.shutdown.load(Ordering::Acquire) {
@@ -487,12 +856,25 @@ fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
                     // decentralized loop for the rationale)
                     cache.iter_mut().for_each(|c| *c = None);
                     let observed = prepared.expect("park stage registers before polling");
+                    shared.parked[e].store(true, Ordering::Relaxed);
                     if shared.events.park(observed, PARK_TIMEOUT) {
                         shared.counters.parks.fetch_add(1, Ordering::Relaxed);
                     }
+                    shared.parked[e].store(false, Ordering::Relaxed);
                 }
             }
         }
+    }
+}
+
+/// Report a completion (or a discard) to the scheduler; the queue is
+/// sized for every in-flight op, so degrade to a bounded retry rather
+/// than ever losing one.
+fn push_done(shared: &FleetShared<'_>, tag: u32, key: u64) {
+    let mut item = (tag, key);
+    while let Err(back) = shared.done_q.push(item) {
+        item = back;
+        std::thread::yield_now();
     }
 }
 
@@ -530,38 +912,80 @@ fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
         // drain the shared completion queue in one batch
         completions.clear();
         shared.done_q.pop_batch(&mut completions, usize::MAX);
-        for &(e, key) in completions.iter() {
-            let e = e as usize;
+        for &(tag, key) in completions.iter() {
+            let discarded = tag & DONE_DISCARDED != 0;
+            let e = (tag & !DONE_DISCARDED) as usize;
             inflight[e] -= 1;
             if inflight[e] == depth - 1 && !available.is_idle(e) {
                 available.set_idle(e);
             }
+            progressed = true;
+            if discarded {
+                // the executor consumed and retired this entry itself
+                // (poisoned discard or the panicking op); only the
+                // inflight/availability bookkeeping above was owed
+                continue;
+            }
             let slot = session_entry_slot(key);
             let node = session_entry_node(key);
-            let session = lookup(shared, &mut cache, slot);
+            let Some(session) = lookup(shared, &mut cache, slot) else {
+                shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            if session.poisoned.load(Ordering::Acquire) {
+                // the op executed, but its session faulted meanwhile —
+                // drop the completion instead of resolving successors
+                shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                retire_entry(shared, &session);
+                cache[slot as usize] = None;
+                continue;
+            }
+            let mut readied = 0usize;
             let last = {
                 let levels = &session.levels;
                 session.deps.complete(session.graph, node, |s| {
                     ready.push(pack_session_entry(levels[s as usize], slot, s));
+                    readied += 1;
                 })
             };
+            if readied > 0 {
+                // counted before this entry retires: the count stays
+                // nonzero, so the slot cannot recycle mid-resolution
+                session.live_entries.fetch_add(readied, Ordering::AcqRel);
+            }
             if last {
                 finish_session(shared, &session);
+            }
+            retire_entry(shared, &session);
+            if last {
                 cache[slot as usize] = None;
             }
-            progressed = true;
         }
-        // dispatch: max-key ops → first available executor (bit-scan)
+        // dispatch: max-key ops → first available executor (bit-scan);
+        // poisoned entries are discarded here instead of burning a ring
+        // slot on a dead session
         let mut pushed_any = false;
         while !ready.is_empty() && available.any_idle() {
             let e = available.first_idle().expect("any_idle checked");
             while inflight[e] < depth {
                 let Some(key) = ready.pop() else { break };
+                let slot = session_entry_slot(key);
+                let Some(session) = lookup(shared, &mut cache, slot) else {
+                    shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                    progressed = true;
+                    continue;
+                };
+                if session.poisoned.load(Ordering::Acquire) {
+                    shared.counters.entries_discarded.fetch_add(1, Ordering::Relaxed);
+                    retire_entry(shared, &session);
+                    cache[slot as usize] = None;
+                    progressed = true;
+                    continue;
+                }
                 shared.rings[e].push(key).expect("availability bit ⇒ ring space");
                 inflight[e] += 1;
                 pushed_any = true;
                 shared.counters.dispatches.fetch_add(1, Ordering::Relaxed);
-                let session = lookup(shared, &mut cache, session_entry_slot(key));
                 session.dispatches.fetch_add(1, Ordering::Relaxed);
             }
             if inflight[e] >= depth {
@@ -613,6 +1037,83 @@ fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
     }
 }
 
+/// Emit the watchdog's diagnostic dump: per-executor last acquired entry,
+/// deque depth, busy/parked state, plus the injector backlog — enough to
+/// tell a hung op (one executor busy forever on one key) from a runtime
+/// livelock (everyone parked with work queued).
+fn dump_stall_diagnostics(shared: &FleetShared<'_>) {
+    let active = shared.active_sessions.load(Ordering::SeqCst);
+    crate::log_warn!(
+        "fleet watchdog: no dispatch progress with {active} active session(s); executor state:"
+    );
+    for e in 0..shared.executors {
+        let key = shared.last_key[e].load(Ordering::Relaxed);
+        let last = if key == u64::MAX {
+            "-".to_string()
+        } else {
+            format!("s{}/n{}", session_entry_slot(key), session_entry_node(key))
+        };
+        crate::log_warn!(
+            "  executor {e}: last={last} deque_depth={} busy={} parked={}",
+            shared.deques[e].len(),
+            shared.busy[e].load(Ordering::Relaxed),
+            shared.parked[e].load(Ordering::Relaxed),
+        );
+    }
+    crate::log_warn!(
+        "  injector backlog: {}",
+        shared.injector_len.load(Ordering::Acquire)
+    );
+}
+
+/// Watchdog body ([`FleetConfig::watchdog`]): sample the fleet's progress
+/// stamp a few times per stall window; when sessions are active but the
+/// stamp has not moved for a full window, dump diagnostics and fail every
+/// installed session with [`SessionError::Stalled`] so waiters wake.
+///
+/// An executor mid-op is deliberately *not* treated as progress — a hung
+/// op is exactly the stall this exists to catch. The window must
+/// therefore exceed the longest legitimate op. A false positive degrades
+/// gracefully: the failed sessions' remaining entries drain as discards
+/// and the fleet keeps serving new submissions.
+fn watchdog_loop(shared: &FleetShared<'_>, stall_after: Duration) {
+    let tick = (stall_after / 4).clamp(Duration::from_millis(5), Duration::from_millis(200));
+    // sleep in short slices so `halt()` never waits a whole tick to join
+    // the watchdog (stress suites tear fleets down thousands of times)
+    let slice = tick.min(Duration::from_millis(5));
+    let mut last_stamp = shared.progress_stamp();
+    let mut stalled_for = Duration::ZERO;
+    loop {
+        let mut slept = Duration::ZERO;
+        while slept < tick {
+            std::thread::sleep(slice);
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            slept += slice;
+        }
+        let stamp = shared.progress_stamp();
+        if stamp != last_stamp || shared.active_sessions.load(Ordering::SeqCst) == 0 {
+            last_stamp = stamp;
+            stalled_for = Duration::ZERO;
+            continue;
+        }
+        stalled_for += tick;
+        if stalled_for < stall_after {
+            continue;
+        }
+        dump_stall_diagnostics(shared);
+        for cell in &shared.slots {
+            let installed = cell.state.lock().unwrap().clone();
+            if let Some(session) = installed {
+                fail_session(shared, &session, SessionError::Stalled);
+            }
+        }
+        stalled_for = Duration::ZERO;
+        last_stamp = shared.progress_stamp();
+    }
+}
+
 /// A long-lived executor fleet: threads spawned once, sessions submitted
 /// many times. Scoped to a [`std::thread::Scope`] so sessions may borrow
 /// anything that outlives the scope (graphs, work closures) with zero
@@ -654,6 +1155,10 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
             let sh = Arc::clone(&shared);
             handles.push(scope.spawn(move || scheduler_loop(&sh)));
         }
+        if let Some(stall_after) = config.watchdog {
+            let sh = Arc::clone(&shared);
+            handles.push(scope.spawn(move || watchdog_loop(&sh, stall_after)));
+        }
         Fleet { shared, handles, config }
     }
 
@@ -692,7 +1197,46 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         levels: impl Into<Arc<[f64]>>,
         work: &'env (dyn Fn(NodeId) + Send + Sync),
     ) -> SessionHandle<'env> {
-        let levels: Arc<[f64]> = levels.into();
+        self.submit_inner(graph, levels.into(), SessionWork::Borrowed(work), None)
+    }
+
+    /// [`submit`](Self::submit) with a cooperative deadline: once
+    /// `deadline` has elapsed (measured from submission), the session's
+    /// remaining entries are discarded at pop time and the waiter gets
+    /// [`SessionError::DeadlineExceeded`]. An op already running when the
+    /// deadline passes still finishes — cancellation never interrupts a
+    /// work closure mid-flight.
+    pub fn submit_with_deadline(
+        &self,
+        graph: &'env Graph,
+        levels: impl Into<Arc<[f64]>>,
+        work: &'env (dyn Fn(NodeId) + Send + Sync),
+        deadline: Duration,
+    ) -> SessionHandle<'env> {
+        self.submit_inner(graph, levels.into(), SessionWork::Borrowed(work), Some(deadline))
+    }
+
+    /// [`submit`](Self::submit) with an owned work closure, for callers
+    /// that build a distinct closure per session *inside* the fleet's
+    /// scope (e.g. per-request fault plans in `graphi serve`) and so
+    /// cannot hand out an `'env` borrow of it.
+    pub fn submit_owned(
+        &self,
+        graph: &'env Graph,
+        levels: impl Into<Arc<[f64]>>,
+        work: Arc<dyn Fn(NodeId) + Send + Sync + 'env>,
+        deadline: Option<Duration>,
+    ) -> SessionHandle<'env> {
+        self.submit_inner(graph, levels.into(), SessionWork::Owned(work), deadline)
+    }
+
+    fn submit_inner(
+        &self,
+        graph: &'env Graph,
+        levels: Arc<[f64]>,
+        work: SessionWork<'env>,
+        deadline: Option<Duration>,
+    ) -> SessionHandle<'env> {
         assert_eq!(levels.len(), graph.len(), "one level per node");
         assert!(
             graph.len() < MAX_SESSION_NODES,
@@ -709,18 +1253,27 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
             }
         };
         let seq = shared.next_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let sources = graph.sources();
+        let t0 = Instant::now();
         let state = Arc::new(SessionState {
             slot,
             graph,
             levels,
             work,
             deps: AtomicDepTracker::new(graph),
-            t0: Instant::now(),
+            t0,
+            deadline: deadline.map(|d| t0 + d),
             records: (0..self.config.executors).map(|_| Mutex::new(Vec::new())).collect(),
             dispatches: AtomicU64::new(0),
             steals: AtomicU64::new(0),
             cross_domain_steals: AtomicU64::new(0),
-            done: Mutex::new(None),
+            // the seeded sources are the session's first live entries; the
+            // count must be up before any of them becomes poppable
+            live_entries: AtomicUsize::new(sources.len()),
+            terminal: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+            cancel_requested: AtomicBool::new(false),
+            outcome: Mutex::new(None),
             done_cv: Condvar::new(),
         });
         shared.active_sessions.fetch_add(1, Ordering::SeqCst);
@@ -732,7 +1285,7 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
                 // injector, which executors drain before stealing
                 {
                     let mut inj = shared.injector.lock().unwrap();
-                    for s in graph.sources() {
+                    for &s in &sources {
                         inj.push(pack_session_entry(state.levels[s as usize], slot, s));
                     }
                     shared.injector_len.store(inj.len(), Ordering::Release);
@@ -740,17 +1293,23 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
                 shared.events.notify();
             }
             DispatchMode::Centralized => {
+                // the scheduler re-derives the same source list when it
+                // drains the install queue, matching the count above
                 shared.installs.lock().unwrap().push(Arc::clone(&state));
                 shared.installs_pending.store(true, Ordering::Release);
                 shared.sched_events.notify();
             }
         }
-        SessionHandle { state }
+        SessionHandle { state, shared: Arc::clone(&self.shared) }
     }
 
-    fn halt(&mut self) {
+    /// Stop and join every fleet thread; returns the panic messages of
+    /// any that did not join cleanly. Op panics are caught on the
+    /// executors, so a non-empty return means a fleet-runtime bug, not a
+    /// workload fault.
+    fn halt(&mut self) -> Vec<String> {
         if self.handles.is_empty() {
-            return;
+            return Vec::new();
         }
         debug_assert_eq!(
             self.shared.active_sessions.load(Ordering::SeqCst),
@@ -760,33 +1319,60 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.events.notify();
         self.shared.sched_events.notify();
+        let mut panicked = Vec::new();
         for h in self.handles.drain(..) {
-            h.join().expect("fleet thread panicked");
+            if let Err(payload) = h.join() {
+                panicked.push(panic_message(payload));
+            }
         }
+        panicked
     }
 
-    /// Stop and join every fleet thread (all sessions must have completed
-    /// first); returns the final counter snapshot. A clean shutdown *is*
-    /// the no-leaked-threads proof: every handle is joined here. Calling
-    /// it with sessions still in flight is a contract violation: the
-    /// fleet still exits (threads abandon the remaining ops with a
-    /// warning rather than deadlocking the join), but those sessions
-    /// never quiesce and their waiters would block forever.
-    pub fn shutdown(mut self) -> FleetTotals {
-        self.halt();
-        self.shared.totals_snapshot()
+    /// Stop and join every fleet thread (all sessions must have reached a
+    /// terminal state first). `Ok` carries the final counter snapshot; a
+    /// fleet that saw failed sessions ([`SessionError::OpPanicked`] /
+    /// [`SessionError::Stalled`]) or — a runtime bug — a panicked fleet
+    /// thread reports a [`FleetError`] instead of aborting the process,
+    /// with the same snapshot inside. Client-initiated terminations
+    /// (cancel, deadline) are not faults and do not turn shutdown into an
+    /// error. A clean join *is* the no-leaked-threads proof: every handle
+    /// is joined here. Calling this with sessions still in flight is a
+    /// contract violation: the fleet still exits (threads abandon the
+    /// remaining ops with a warning rather than deadlocking the join),
+    /// but those sessions never quiesce and their waiters would block
+    /// forever.
+    pub fn shutdown(mut self) -> Result<FleetTotals, FleetError> {
+        let panicked = self.halt();
+        let totals = self.shared.totals_snapshot();
+        if panicked.is_empty() && totals.sessions_failed == 0 {
+            Ok(totals)
+        } else {
+            Err(FleetError {
+                panicked_threads: panicked,
+                sessions_failed: totals.sessions_failed,
+                totals,
+            })
+        }
     }
 }
 
 impl Drop for Fleet<'_, '_> {
     fn drop(&mut self) {
-        self.halt();
+        let panicked = self.halt();
+        if !panicked.is_empty() {
+            crate::log_warn!(
+                "fleet dropped with {} panicked fleet thread(s): {}",
+                panicked.len(),
+                panicked.join("; ")
+            );
+        }
     }
 }
 
 /// Handle to one submitted session.
 pub struct SessionHandle<'env> {
     state: Arc<SessionState<'env>>,
+    shared: Arc<FleetShared<'env>>,
 }
 
 /// What a finished session reports back.
@@ -805,37 +1391,54 @@ pub struct SessionReport {
 }
 
 impl<'env> SessionHandle<'env> {
-    /// Has the session's final op completed? (Non-blocking.)
+    /// Has the session reached a terminal state — quiesced, failed,
+    /// cancelled, or deadline-missed? (Non-blocking.)
     pub fn is_done(&self) -> bool {
-        self.state.done.lock().unwrap().is_some()
+        self.state.outcome.lock().unwrap().is_some()
     }
 
-    /// Block until the session quiesces, then merge its trace and
-    /// counters. The final completion's release sequence orders every
-    /// executor's record writes before the done flag, so the merge is
-    /// complete by construction.
-    pub fn wait(self) -> SessionReport {
-        let wall_us = {
-            let mut done = self.state.done.lock().unwrap();
+    /// Request cooperative cancellation. The next of this session's
+    /// entries popped anywhere on the fleet performs the terminal
+    /// `Cancelled` transition and the rest are discarded; the waiter gets
+    /// [`SessionError::Cancelled`]. An op already running is never
+    /// interrupted, and a session whose final op completes before any pop
+    /// observes the request still reports `Ok` — cancellation races
+    /// completion, exactly-once either way.
+    pub fn cancel(&self) {
+        self.state.cancel_requested.store(true, Ordering::Release);
+        // wake parked fleet threads so the pop-side check runs promptly
+        self.shared.events.notify();
+        self.shared.sched_events.notify();
+    }
+
+    /// Block until the session reaches a terminal state. `Ok` merges the
+    /// trace and counters (the final completion's release sequence orders
+    /// every executor's record writes before the outcome, so the merge is
+    /// complete by construction); `Err` is the structured failure — the
+    /// records of ops that did run are dropped with the session.
+    pub fn wait(self) -> Result<SessionReport, SessionError> {
+        let outcome = {
+            let mut outcome = self.state.outcome.lock().unwrap();
             loop {
-                if let Some(w) = *done {
-                    break w;
+                if let Some(o) = outcome.take() {
+                    break o;
                 }
-                done = self.state.done_cv.wait(done).unwrap();
+                outcome = self.state.done_cv.wait(outcome).unwrap();
             }
         };
+        let wall_us = outcome?;
         let mut records: Vec<OpRecord> = Vec::with_capacity(self.state.graph.len());
         for bucket in self.state.records.iter() {
             records.extend(bucket.lock().unwrap().drain(..));
         }
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
-        SessionReport {
+        Ok(SessionReport {
             wall_us,
             records,
             dispatches: self.state.dispatches.load(Ordering::SeqCst),
             steals: self.state.steals.load(Ordering::SeqCst),
             cross_domain_steals: self.state.cross_domain_steals.load(Ordering::SeqCst),
-        }
+        })
     }
 }
 
@@ -867,6 +1470,18 @@ struct QueueState {
     /// Ticket currently at the head of the line (== `next_ticket` when
     /// nobody is waiting).
     head: u64,
+    /// Tickets whose holder gave up ([`SessionQueue::admit_timeout`])
+    /// before reaching the head; [`bump_head`] skips over them so an
+    /// abandoned place in line never wedges the queue.
+    abandoned: BTreeSet<u64>,
+}
+
+/// Advance the head ticket past any abandoned ones.
+fn bump_head(state: &mut QueueState) {
+    state.head += 1;
+    while state.abandoned.remove(&state.head) {
+        state.head += 1;
+    }
 }
 
 impl SessionQueue {
@@ -883,10 +1498,11 @@ impl SessionQueue {
         self.state.lock().unwrap().in_use
     }
 
-    /// Requests currently blocked in [`admit`](Self::admit).
+    /// Requests currently blocked in [`admit`](Self::admit) /
+    /// [`admit_timeout`](Self::admit_timeout).
     pub fn waiting(&self) -> u64 {
         let state = self.state.lock().unwrap();
-        state.next_ticket - state.head
+        state.next_ticket - state.head - state.abandoned.len() as u64
     }
 
     fn fits(&self, used: u64, bytes: u64) -> bool {
@@ -894,20 +1510,55 @@ impl SessionQueue {
     }
 
     /// Block until `bytes` fit under the budget (FIFO among blocked
-    /// requests); the permit returns the bytes on drop.
+    /// requests); the permit returns the bytes on drop ([`AdmissionPermit`]
+    /// is RAII, so a caller that errors between admission and run cannot
+    /// leak budget).
     pub fn admit(&self, bytes: u64) -> AdmissionPermit<'_> {
+        self.admit_deadline(bytes, None).expect("untimed admit cannot time out")
+    }
+
+    /// [`admit`](Self::admit) with a patience bound: returns `None` —
+    /// abandoning the place in line without stranding the tickets behind
+    /// it — if the budget has not freed within `patience`. This is the
+    /// shedding primitive: a server that would rather drop a request than
+    /// queue it past its deadline calls this instead of `admit`.
+    pub fn admit_timeout(&self, bytes: u64, patience: Duration) -> Option<AdmissionPermit<'_>> {
+        self.admit_deadline(bytes, Some(Instant::now() + patience))
+    }
+
+    fn admit_deadline(&self, bytes: u64, deadline: Option<Instant>) -> Option<AdmissionPermit<'_>> {
         let mut state = self.state.lock().unwrap();
         let ticket = state.next_ticket;
         state.next_ticket += 1;
-        while !(state.head == ticket && self.fits(state.in_use, bytes)) {
-            state = self.cv.wait(state).unwrap();
+        loop {
+            if state.head == ticket && self.fits(state.in_use, bytes) {
+                bump_head(&mut state);
+                state.in_use += bytes;
+                drop(state);
+                // the next ticket holder may already fit — let it re-check
+                self.cv.notify_all();
+                return Some(AdmissionPermit { queue: self, bytes });
+            }
+            match deadline {
+                None => state = self.cv.wait(state).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        if state.head == ticket {
+                            bump_head(&mut state);
+                        } else {
+                            state.abandoned.insert(ticket);
+                        }
+                        drop(state);
+                        // whoever is behind the abandoned ticket may now
+                        // hold the head — let it re-check
+                        self.cv.notify_all();
+                        return None;
+                    }
+                    state = self.cv.wait_timeout(state, d - now).unwrap().0;
+                }
+            }
         }
-        state.head += 1;
-        state.in_use += bytes;
-        drop(state);
-        // the next ticket holder may already fit — let it re-check
-        self.cv.notify_all();
-        AdmissionPermit { queue: self, bytes }
     }
 
     /// Non-blocking [`admit`](Self::admit): succeeds only when the bytes
@@ -965,10 +1616,11 @@ mod tests {
             };
             let totals = std::thread::scope(|scope| {
                 let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
-                let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+                let report =
+                    fleet.submit(&g, unit_levels(&g), &work).wait().expect("healthy session");
                 assert_eq!(report.records.len(), g.len(), "{}", mode.name());
                 assert_eq!(report.dispatches, g.len() as u64, "{}", mode.name());
-                fleet.shutdown()
+                fleet.shutdown().expect("clean fleet")
             });
             for (v, c) in counts.iter().enumerate() {
                 assert_eq!(c.load(Ordering::SeqCst), 1, "{}: node {v}", mode.name());
@@ -1003,9 +1655,9 @@ mod tests {
         std::thread::scope(|scope| {
             let config = FleetConfig { deque_capacity: 2, ..FleetConfig::new(4) };
             let fleet = Fleet::new(scope, config);
-            let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+            let report = fleet.submit(&g, unit_levels(&g), &work).wait().expect("healthy session");
             assert_eq!(report.records.len(), g.len());
-            fleet.shutdown();
+            fleet.shutdown().expect("clean fleet");
         });
         for c in &counts {
             assert_eq!(c.load(Ordering::SeqCst), 1);
@@ -1089,5 +1741,260 @@ mod tests {
             };
             let _ = Fleet::new(scope, config);
         });
+    }
+
+    fn chain(n: usize) -> Graph {
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("n0", OpKind::Scalar);
+        for i in 1..n {
+            let cur = b.add(format!("n{i}"), OpKind::Scalar);
+            b.depend(prev, cur);
+            prev = cur;
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn op_panic_confined_to_its_session_in_both_modes() {
+        let healthy_g = mlp(&MlpConfig::default());
+        let faulty_g = chain(6);
+        for mode in DispatchMode::ALL {
+            let counts: Vec<AtomicU32> =
+                (0..healthy_g.len()).map(|_| AtomicU32::new(0)).collect();
+            let healthy_work = |n: NodeId| {
+                counts[n as usize].fetch_add(1, Ordering::SeqCst);
+            };
+            let faulty_work = |n: NodeId| {
+                if n == 3 {
+                    panic!("injected fault at node 3");
+                }
+            };
+            let err = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+                let faulty = fleet.submit(&faulty_g, unit_levels(&faulty_g), &faulty_work);
+                let healthy = fleet.submit(&healthy_g, unit_levels(&healthy_g), &healthy_work);
+                let err = faulty.wait().expect_err("node 3 panics");
+                assert_eq!(
+                    err,
+                    SessionError::OpPanicked {
+                        node: 3,
+                        payload: "injected fault at node 3".into()
+                    },
+                    "{}",
+                    mode.name()
+                );
+                let report = healthy.wait().expect("healthy session unaffected by the fault");
+                assert_eq!(report.records.len(), healthy_g.len(), "{}", mode.name());
+                // the fleet keeps serving after the fault
+                fleet
+                    .submit(&healthy_g, unit_levels(&healthy_g), &healthy_work)
+                    .wait()
+                    .expect("post-fault session completes");
+                fleet.shutdown().expect_err("a failed session must surface at shutdown")
+            });
+            assert_eq!(err.sessions_failed, 1, "{}", mode.name());
+            assert!(err.panicked_threads.is_empty(), "{}: op panics are caught", mode.name());
+            assert_eq!(err.totals.sessions_completed, 2, "{}", mode.name());
+            for (v, c) in counts.iter().enumerate() {
+                assert_eq!(
+                    c.load(Ordering::SeqCst),
+                    2,
+                    "{}: node {v} exactly once per healthy session",
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_terminates_session_with_structured_error() {
+        let g = chain(8);
+        for mode in DispatchMode::ALL {
+            let release = AtomicBool::new(false);
+            let executed = AtomicU32::new(0);
+            let work = |n: NodeId| {
+                if n == 0 {
+                    while !release.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                }
+                executed.fetch_add(1, Ordering::SeqCst);
+            };
+            std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(2).with_dispatch(mode));
+                let handle = fleet.submit(&g, unit_levels(&g), &work);
+                // the request lands while node 0 blocks (or before any
+                // pop at all), so some later pop must observe it
+                handle.cancel();
+                release.store(true, Ordering::Release);
+                let err = handle.wait().expect_err("cancelled session");
+                assert_eq!(err, SessionError::Cancelled, "{}", mode.name());
+                assert!(executed.load(Ordering::SeqCst) <= 1, "{}", mode.name());
+                fleet.shutdown().expect("cancel is not a fleet fault");
+            });
+        }
+    }
+
+    #[test]
+    fn deadline_miss_reports_deadline_exceeded() {
+        let g = chain(4);
+        for mode in DispatchMode::ALL {
+            let work = |n: NodeId| {
+                if n == 0 {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            };
+            std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(2).with_dispatch(mode));
+                let handle =
+                    fleet.submit_with_deadline(&g, unit_levels(&g), &work, Duration::from_millis(1));
+                let err = handle.wait().expect_err("deadline passes during node 0");
+                assert_eq!(err, SessionError::DeadlineExceeded, "{}", mode.name());
+                fleet.shutdown().expect("a deadline miss is not a fleet fault");
+            });
+        }
+    }
+
+    #[test]
+    fn watchdog_fails_stalled_session_instead_of_hanging() {
+        let g = chain(2);
+        for mode in DispatchMode::ALL {
+            let release = AtomicBool::new(false);
+            let work = |n: NodeId| {
+                if n == 0 {
+                    while !release.load(Ordering::Acquire) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            };
+            std::thread::scope(|scope| {
+                let fleet = Fleet::new(
+                    scope,
+                    FleetConfig::new(2)
+                        .with_dispatch(mode)
+                        .with_watchdog(Duration::from_millis(50)),
+                );
+                let handle = fleet.submit(&g, unit_levels(&g), &work);
+                let err = handle.wait().expect_err("watchdog unwedges the waiter");
+                assert_eq!(err, SessionError::Stalled, "{}", mode.name());
+                // unpin the executor so the fleet can join
+                release.store(true, Ordering::Release);
+                let err = fleet.shutdown().expect_err("a stalled session is a fault");
+                assert_eq!(err.sessions_failed, 1, "{}", mode.name());
+                assert!(err.panicked_threads.is_empty(), "{}", mode.name());
+            });
+        }
+    }
+
+    #[test]
+    fn slot_reuse_after_fault_never_leaks_entries_across_sessions() {
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        // wide fan: one source readies 32 mids at once; mid `1` panics,
+        // stranding up to 31 queued entries of the dying session
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mids: Vec<NodeId> = (0..32)
+            .map(|i| {
+                let m = b.add(format!("m{i}"), OpKind::Scalar);
+                b.depend(src, m);
+                m
+            })
+            .collect();
+        b.add_after("sink", OpKind::Scalar, &mids);
+        let big = b.build().unwrap();
+        let small = chain(2);
+        for mode in DispatchMode::ALL {
+            let faulty_work = |n: NodeId| {
+                if n == 1 {
+                    panic!("fault in the fan");
+                }
+            };
+            let small_hits = AtomicU32::new(0);
+            let small_work = |n: NodeId| {
+                assert!((n as usize) < small.len(), "entry leaked across sessions");
+                small_hits.fetch_add(1, Ordering::SeqCst);
+            };
+            std::thread::scope(|scope| {
+                let config =
+                    FleetConfig { max_sessions: 1, ..FleetConfig::new(4) }.with_dispatch(mode);
+                let fleet = Fleet::new(scope, config);
+                for round in 0..4 {
+                    let err = fleet
+                        .submit(&big, unit_levels(&big), &faulty_work)
+                        .wait()
+                        .expect_err("mid 1 panics");
+                    assert!(
+                        matches!(err, SessionError::OpPanicked { node: 1, .. }),
+                        "{}: {err:?}",
+                        mode.name()
+                    );
+                    // with one slot, this submit reuses slot 0 — which the
+                    // count-gated release hands out only after every stale
+                    // entry of the faulted session drained; a leaked entry
+                    // would run small_work with a node ≥ small.len()
+                    let report = fleet
+                        .submit(&small, unit_levels(&small), &small_work)
+                        .wait()
+                        .expect("reused slot runs the right session");
+                    assert_eq!(report.records.len(), small.len(), "{} round {round}", mode.name());
+                }
+                let err = fleet.shutdown().expect_err("faults recorded");
+                assert_eq!(err.sessions_failed, 4, "{}", mode.name());
+            });
+            assert_eq!(small_hits.load(Ordering::SeqCst), 8, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn admission_permit_released_on_drop_even_across_a_panic() {
+        let q = SessionQueue::new(100);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _permit = q.admit(60);
+            panic!("client errors between admit and run");
+        }));
+        assert!(result.is_err());
+        assert_eq!(q.in_use(), 0, "the RAII permit must release on unwind");
+        assert!(q.try_admit(100).is_some(), "full budget available again");
+    }
+
+    #[test]
+    fn abandoned_ticket_does_not_wedge_the_queue() {
+        let q = SessionQueue::new(100);
+        let holder = q.admit(80);
+        // times out behind the holder, abandoning its ticket
+        assert!(q.admit_timeout(50, Duration::from_millis(20)).is_none());
+        assert_eq!(q.waiting(), 0, "an abandoned ticket is not waiting");
+        drop(holder);
+        assert!(q.try_admit(100).is_some(), "abandoned ticket must not block the head");
+        assert_eq!(q.in_use(), 0);
+    }
+
+    #[test]
+    fn ticket_abandoned_behind_a_blocked_head_is_skipped() {
+        let q = SessionQueue::new(100);
+        let holder = q.admit(90);
+        std::thread::scope(|s| {
+            let q = &q;
+            let (tx, rx) = std::sync::mpsc::channel();
+            s.spawn(move || {
+                let head = q.admit(70); // blocks behind `holder` at the head
+                tx.send(q.in_use()).unwrap();
+                drop(head);
+            });
+            while q.waiting() == 0 {
+                std::thread::yield_now();
+            }
+            // this ticket gives up while the 70-byte request heads the line
+            assert!(q.admit_timeout(10, Duration::from_millis(20)).is_none());
+            drop(holder);
+            let seen = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(seen, 70);
+        });
+        // the abandoned ticket was skipped over, not left wedging the head
+        assert_eq!(q.waiting(), 0);
+        assert!(q.try_admit(100).is_some());
     }
 }

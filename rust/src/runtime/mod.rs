@@ -32,9 +32,10 @@ pub use artifacts::{
     TuneOutcome, TuningArtifact,
 };
 pub use fleet::{
-    AdmissionPermit, Fleet, FleetConfig, FleetTotals, SessionHandle, SessionQueue, SessionReport,
+    AdmissionPermit, Fleet, FleetConfig, FleetError, FleetTotals, SessionError, SessionHandle,
+    SessionQueue, SessionReport,
 };
 pub use pjrt::{LoadedModule, PjrtRuntime};
 pub use serve::{serve, ServeConfig, ServeReport};
-pub use threaded::ThreadedGraphi;
+pub use threaded::{ThreadedGraphi, UnsupportedPolicy};
 pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

@@ -17,14 +17,15 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::engine::DispatchMode;
 use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
 use crate::models::{self, ModelKind, ModelSize};
-use crate::runtime::fleet::{Fleet, FleetConfig, FleetTotals, SessionQueue};
+use crate::runtime::fleet::{Fleet, FleetConfig, FleetTotals, SessionError, SessionQueue};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
+use crate::util::testkit::FaultPlan;
 
 /// One serve experiment.
 #[derive(Debug, Clone)]
@@ -49,6 +50,15 @@ pub struct ServeConfig {
     /// Busy-spin per op, µs (0 ⇒ scheduling-only, the dispatch-throughput
     /// regime the paper's small-op argument is about).
     pub op_spin_us: f64,
+    /// Probability a request draws a fault plan (op panic / op delay /
+    /// client cancel), split evenly between the three kinds; seeded, so a
+    /// given `(seed, fault_rate)` replays the same fault schedule per
+    /// client. 0 keeps the zero-allocation borrowed-closure hot path.
+    pub fault_rate: f64,
+    /// Per-session deadline, µs. Sessions past it terminate with
+    /// [`SessionError::DeadlineExceeded`]; admission waits are bounded by
+    /// the same patience and time-outs are **shed** (counted, not run).
+    pub deadline_us: Option<u64>,
     pub seed: u64,
 }
 
@@ -71,6 +81,8 @@ impl Default for ServeConfig {
             budget_bytes: 16 << 30,
             max_sessions: 32,
             op_spin_us: 0.0,
+            fault_rate: 0.0,
+            deadline_us: None,
             seed: 42,
         }
     }
@@ -98,6 +110,19 @@ pub struct ServeReport {
     pub max_in_flight: usize,
     /// Requests that blocked in admission before fitting the budget.
     pub admission_blocked: u64,
+    /// Sessions terminated by an op panic ([`SessionError::OpPanicked`]).
+    pub failed: u64,
+    /// Sessions terminated by client cancel ([`SessionError::Cancelled`]).
+    pub cancelled: u64,
+    /// Sessions terminated past their deadline
+    /// ([`SessionError::DeadlineExceeded`]).
+    pub deadline_missed: u64,
+    /// Requests shed at admission: the memory budget did not free up
+    /// within the deadline patience, so the session was never submitted.
+    pub shed: u64,
+    /// Latency summaries split by outcome class (`ok` / `failed` /
+    /// `cancelled` / `deadline`); only classes with ≥1 sample appear.
+    pub latency_by_class: Vec<(String, Summary)>,
 }
 
 impl ServeReport {
@@ -140,6 +165,20 @@ impl ServeReport {
             "concurrency: ≤{} sessions in flight  |  admission: {} requests waited on the memory budget",
             self.max_in_flight, self.admission_blocked
         );
+        let _ = writeln!(
+            out,
+            "faults: {} failed  {} cancelled  {} deadline_missed  {} shed",
+            self.failed, self.cancelled, self.deadline_missed, self.shed
+        );
+        for (class, s) in &self.latency_by_class {
+            let _ = writeln!(
+                out,
+                "  class {class:9} n={:<6} p50 {}  p99 {}",
+                s.n,
+                crate::util::fmt_us(s.p50),
+                crate::util::fmt_us(s.p99),
+            );
+        }
         out
     }
 }
@@ -190,15 +229,24 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         })
         .collect();
 
+    const CLASSES: [&str; 4] = ["ok", "failed", "cancelled", "deadline"];
     let queue = SessionQueue::new(cfg.budget_bytes);
     let next_request = AtomicUsize::new(0);
     let completed_per_model: Vec<AtomicU64> = zoo.iter().map(|_| AtomicU64::new(0)).collect();
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let by_class: [Mutex<Vec<f64>>; 4] =
+        [Mutex::new(Vec::new()), Mutex::new(Vec::new()), Mutex::new(Vec::new()), Mutex::new(Vec::new())];
     let session_dispatches = AtomicU64::new(0);
     let session_steals = AtomicU64::new(0);
     let in_flight = AtomicUsize::new(0);
     let max_in_flight = AtomicUsize::new(0);
     let admission_blocked = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let deadline = cfg.deadline_us.map(Duration::from_micros);
+    // delay faults sleep long enough to trip a tight deadline (2×, capped
+    // at 50ms so generous deadlines don't stall the run); without a
+    // deadline they just stretch the session's tail latency
+    let fault_delay_us = cfg.deadline_us.map(|d| (d as f64 * 2.0).min(50_000.0)).unwrap_or(200.0);
     let spin_us = cfg.op_spin_us;
     let work = move |_n: NodeId| {
         if spin_us > 0.0 {
@@ -236,6 +284,8 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 let in_flight = &in_flight;
                 let max_in_flight = &max_in_flight;
                 let admission_blocked = &admission_blocked;
+                let shed = &shed;
+                let by_class = &by_class;
                 clients.spawn(move || loop {
                     let i = next_request.fetch_add(1, Ordering::Relaxed);
                     if i >= cfg.requests {
@@ -252,40 +302,93 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                         draw -= z.weight;
                     }
                     let z = &zoo[pick];
+                    let plan = if cfg.fault_rate > 0.0 {
+                        FaultPlan::draw(&mut rng, z.graph.len(), cfg.fault_rate, fault_delay_us)
+                    } else {
+                        FaultPlan::default()
+                    };
                     let t0 = Instant::now();
-                    // §5.1 admission: wait until the planned peak fits
+                    // §5.1 admission: wait until the planned peak fits — for
+                    // at most the deadline patience when one is configured
                     let permit = match queue.try_admit(z.peak_bytes) {
                         Some(p) => p,
                         None => {
                             admission_blocked.fetch_add(1, Ordering::Relaxed);
-                            queue.admit(z.peak_bytes)
+                            match deadline {
+                                Some(d) => match queue.admit_timeout(z.peak_bytes, d) {
+                                    Some(p) => p,
+                                    None => {
+                                        shed.fetch_add(1, Ordering::Relaxed);
+                                        continue;
+                                    }
+                                },
+                                None => queue.admit(z.peak_bytes),
+                            }
                         }
                     };
                     let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
                     max_in_flight.fetch_max(now, Ordering::SeqCst);
-                    let handle = fleet_ref.submit(&z.graph, Arc::clone(&z.levels), work_ref);
-                    let report = handle.wait();
+                    let handle = if plan.is_faulty() {
+                        // faulty sessions own a wrapped closure; healthy
+                        // ones keep the borrowed zero-allocation path
+                        fleet_ref.submit_owned(
+                            &z.graph,
+                            Arc::clone(&z.levels),
+                            Arc::new(plan.clone().wrap(work)),
+                            deadline,
+                        )
+                    } else if let Some(d) = deadline {
+                        fleet_ref.submit_with_deadline(&z.graph, Arc::clone(&z.levels), work_ref, d)
+                    } else {
+                        fleet_ref.submit(&z.graph, Arc::clone(&z.levels), work_ref)
+                    };
+                    if let Some(after_us) = plan.cancel_after_us {
+                        std::thread::sleep(Duration::from_micros(after_us as u64));
+                        handle.cancel();
+                    }
+                    let outcome = handle.wait();
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     drop(permit);
-                    latencies.lock().unwrap().push(t0.elapsed().as_secs_f64() * 1e6);
-                    completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
-                    session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
-                    session_steals.fetch_add(report.steals, Ordering::Relaxed);
+                    let lat = t0.elapsed().as_secs_f64() * 1e6;
+                    latencies.lock().unwrap().push(lat);
+                    let class = match &outcome {
+                        Ok(_) => 0,
+                        Err(SessionError::Cancelled) => 2,
+                        Err(SessionError::DeadlineExceeded) => 3,
+                        Err(_) => 1,
+                    };
+                    by_class[class].lock().unwrap().push(lat);
+                    if let Ok(report) = outcome {
+                        completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
+                        session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
+                        session_steals.fetch_add(report.steals, Ordering::Relaxed);
+                    }
                 });
             }
         });
-        fleet.shutdown()
+        // a faulty run reports its failures through the per-class counts;
+        // the shutdown error carries the same totals snapshot
+        match fleet.shutdown() {
+            Ok(t) => t,
+            Err(e) => e.totals,
+        }
     });
     let wall_s = t_start.elapsed().as_secs_f64();
 
     let latencies = latencies.into_inner().unwrap();
-    let completed = latencies.len();
+    let class_samples: Vec<Vec<f64>> =
+        by_class.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let completed = class_samples[0].len();
     ServeReport {
         dispatch: cfg.dispatch,
         completed,
         wall_s,
         throughput_rps: completed as f64 / wall_s.max(1e-9),
-        latency_us: Summary::from_samples(&latencies),
+        latency_us: if latencies.is_empty() {
+            Summary::from_samples(&[0.0])
+        } else {
+            Summary::from_samples(&latencies)
+        },
         per_model: zoo
             .iter()
             .zip(&completed_per_model)
@@ -296,6 +399,16 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         session_steals: session_steals.load(Ordering::SeqCst),
         max_in_flight: max_in_flight.load(Ordering::SeqCst),
         admission_blocked: admission_blocked.load(Ordering::SeqCst),
+        failed: totals.sessions_failed,
+        cancelled: totals.sessions_cancelled,
+        deadline_missed: totals.sessions_deadline_missed,
+        shed: shed.load(Ordering::SeqCst),
+        latency_by_class: CLASSES
+            .iter()
+            .zip(&class_samples)
+            .filter(|(_, s)| !s.is_empty())
+            .map(|(c, s)| (c.to_string(), Summary::from_samples(s)))
+            .collect(),
     }
 }
 
@@ -343,6 +456,62 @@ mod tests {
         // (whether a client ever *observed* the full budget is a scheduling
         // race; the deterministic blocking proof lives in the SessionQueue
         // unit tests and tests/serve_sessions.rs)
+    }
+
+    #[test]
+    fn seeded_faults_are_reported_and_conserved() {
+        for mode in DispatchMode::ALL {
+            let cfg = ServeConfig {
+                executors: 2,
+                dispatch: mode,
+                clients: 2,
+                requests: 40,
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                fault_rate: 1.0,
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            // every request is accounted for exactly once
+            assert_eq!(
+                report.completed as u64
+                    + report.failed
+                    + report.cancelled
+                    + report.deadline_missed
+                    + report.shed,
+                40,
+                "{}: {report:?}",
+                mode.name()
+            );
+            // rate 1.0 over 40 draws: a panic plan is (overwhelmingly,
+            // and for seed 42 deterministically) among them, and every
+            // panic plan fails its session
+            assert!(report.failed > 0, "{}", mode.name());
+            // the fleet survived every fault: completions the counters
+            // agree on, plus a latency sample for every non-shed request
+            assert_eq!(report.totals.sessions_completed, report.completed as u64, "{}", mode.name());
+            let class_n: u64 = report.latency_by_class.iter().map(|(_, s)| s.n as u64).sum();
+            assert_eq!(class_n + report.shed, 40, "{}", mode.name());
+            let text = report.render();
+            assert!(text.contains("failed"), "{text}");
+        }
+    }
+
+    #[test]
+    fn tight_deadline_misses_are_counted() {
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 2,
+            requests: 8,
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            op_spin_us: 50.0,
+            deadline_us: Some(1),
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        // a 1µs deadline over 50µs ops: no mlp session can finish in time,
+        // and a request that cannot even get admitted in time is shed
+        assert_eq!(report.deadline_missed + report.shed, 8, "{report:?}");
+        assert_eq!(report.completed, 0, "{report:?}");
     }
 
     #[test]

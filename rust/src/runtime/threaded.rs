@@ -50,6 +50,7 @@
 //! is the engine the paper's system would want once op rates outrun a
 //! single scheduler core.
 
+use std::fmt;
 use std::sync::Arc;
 
 use crate::engine::policies::Policy;
@@ -133,6 +134,34 @@ impl ThreadedGraphi {
     }
 }
 
+/// A ready-set policy the threaded session core cannot honor.
+///
+/// The session core is CP-first by construction (packed level keys):
+/// `AntiCritical` is expressible by negating the levels, but
+/// `Fifo`/`Lifo`/`Random` only ever ordered the PR-1 centralized heap and
+/// have no session-core equivalent. [`ThreadedGraphi::run`] refuses them
+/// with this structured error — surfaced through the CLI's error chain —
+/// rather than silently scheduling under a different policy than
+/// requested (or, as before, panicking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnsupportedPolicy {
+    /// The refused policy.
+    pub policy: Policy,
+}
+
+impl fmt::Display for UnsupportedPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "policy {:?} is not supported by the threaded session core (CP-first by \
+             construction); use the simulated engines for alternative ready-set policies",
+            self.policy
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedPolicy {}
+
 /// Result of a threaded run.
 #[derive(Debug)]
 pub struct ThreadedRunResult {
@@ -166,7 +195,18 @@ impl ThreadedGraphi {
     /// ([`crate::runtime::fleet`]): a fleet scoped to this call executes
     /// the graph as its only session, so the engine under test here is the
     /// same one `graphi serve` keeps persistent across many sessions.
-    pub fn run<F>(&self, graph: &Graph, levels: impl Into<Arc<[f64]>>, work: F) -> ThreadedRunResult
+    ///
+    /// `Err` only for a policy the session core cannot honor
+    /// ([`UnsupportedPolicy`]). A `work` closure that panics propagates
+    /// the panic to this caller (the session core catches it, confines it
+    /// to the session, and this single-session wrapper re-raises it —
+    /// run-one-graph semantics are unchanged from the pre-fleet era).
+    pub fn run<F>(
+        &self,
+        graph: &Graph,
+        levels: impl Into<Arc<[f64]>>,
+        work: F,
+    ) -> Result<ThreadedRunResult, UnsupportedPolicy>
     where
         F: Fn(NodeId) + Send + Sync,
     {
@@ -179,15 +219,12 @@ impl ThreadedGraphi {
         // the session core is CP-first by construction (packed level
         // keys): AntiCritical is expressible by negating the levels; the
         // remaining policies only ever ordered the PR-1 centralized heap
-        // and have no session-core equivalent — fail loudly rather than
-        // silently scheduling under a different policy than requested
+        // and have no session-core equivalent — refuse with a structured
+        // error rather than silently scheduling under a different policy
         let levels: Arc<[f64]> = match self.policy {
             Policy::CriticalPathFirst => levels,
             Policy::AntiCritical => levels.iter().map(|&l| -l).collect::<Vec<f64>>().into(),
-            other => panic!(
-                "policy {other:?} is not supported by the threaded session core (CP-first by \
-                 construction); use the simulated engines for alternative ready-set policies"
-            ),
+            other => return Err(UnsupportedPolicy { policy: other }),
         };
         let config = FleetConfig {
             executors: self.executors,
@@ -196,12 +233,15 @@ impl ThreadedGraphi {
             numa: self.numa.clone(),
             max_sessions: 1,
             deque_capacity: graph.len().max(64),
+            watchdog: None,
         };
-        std::thread::scope(|scope| {
+        Ok(std::thread::scope(|scope| {
             let fleet = Fleet::new(scope, config);
             let session = fleet.submit(graph, levels, &work);
-            let report = session.wait();
-            let totals = fleet.shutdown();
+            let report = session
+                .wait()
+                .unwrap_or_else(|e| panic!("threaded single-session run failed: {e}"));
+            let totals = fleet.shutdown().expect("no faults after a clean session");
             ThreadedRunResult {
                 wall_us: report.wall_us,
                 records: report.records,
@@ -211,7 +251,7 @@ impl ThreadedGraphi {
                 parks: totals.parks,
                 mode_switches: 0,
             }
-        })
+        }))
     }
 
     /// Execute a [`PhasePlan`]: each width phase runs as an induced
@@ -224,7 +264,7 @@ impl ThreadedGraphi {
         levels: &Arc<[f64]>,
         plan: &PhasePlan,
         work: &F,
-    ) -> ThreadedRunResult
+    ) -> Result<ThreadedRunResult, UnsupportedPolicy>
     where
         F: Fn(NodeId) + Send + Sync,
     {
@@ -258,7 +298,7 @@ impl ThreadedGraphi {
             let sub_levels: Vec<f64> = map.iter().map(|&v| levels[v as usize]).collect();
             let engine = ThreadedGraphi { dispatch: *mode, ..uniform.clone() };
             let map_ref = &map;
-            let r = engine.run(&sub, sub_levels, move |n: NodeId| work(map_ref[n as usize]));
+            let r = engine.run(&sub, sub_levels, move |n: NodeId| work(map_ref[n as usize]))?;
             for rec in r.records {
                 records.push(OpRecord {
                     node: map[rec.node as usize],
@@ -274,7 +314,7 @@ impl ThreadedGraphi {
             parks += r.parks;
         }
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
-        ThreadedRunResult {
+        Ok(ThreadedRunResult {
             wall_us: offset_us,
             records,
             dispatches,
@@ -282,7 +322,7 @@ impl ThreadedGraphi {
             cross_domain_steals,
             parks,
             mode_switches,
-        }
+        })
     }
 
     /// Execute `graph` with critical-path levels derived from a tuning
@@ -293,7 +333,7 @@ impl ThreadedGraphi {
         graph: &Graph,
         tuning: &crate::runtime::artifacts::TuningArtifact,
         work: F,
-    ) -> ThreadedRunResult
+    ) -> Result<ThreadedRunResult, UnsupportedPolicy>
     where
         F: Fn(NodeId) + Send + Sync,
     {
@@ -322,9 +362,11 @@ mod tests {
         for mode in DispatchMode::ALL {
             let counter = AtomicU64::new(0);
             let engine = ThreadedGraphi::new(3).with_dispatch(mode);
-            let result = engine.run(&g, vec![1.0; g.len()], |_n| {
-                counter.fetch_add(1, Ordering::Relaxed);
-            });
+            let result = engine
+                .run(&g, vec![1.0; g.len()], |_n| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
             assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64, "{}", mode.name());
             assert_eq!(result.records.len(), g.len(), "{}", mode.name());
             assert_eq!(result.dispatches, g.len() as u64, "{}", mode.name());
@@ -341,14 +383,16 @@ mod tests {
             let clock = AtomicU64::new(0);
             let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
             let engine = ThreadedGraphi::new(4).with_dispatch(mode);
-            engine.run(&g, vec![1.0; g.len()], |n| {
-                // simulate a little work to widen race windows
-                for _ in 0..100 {
-                    std::hint::spin_loop();
-                }
-                let t = clock.fetch_add(1, Ordering::SeqCst);
-                stamp[n as usize].store(t, Ordering::SeqCst);
-            });
+            engine
+                .run(&g, vec![1.0; g.len()], |n| {
+                    // simulate a little work to widen race windows
+                    for _ in 0..100 {
+                        std::hint::spin_loop();
+                    }
+                    let t = clock.fetch_add(1, Ordering::SeqCst);
+                    stamp[n as usize].store(t, Ordering::SeqCst);
+                })
+                .unwrap();
             for v in 0..g.len() as NodeId {
                 for &p in g.preds(v) {
                     let tp = stamp[p as usize].load(Ordering::SeqCst);
@@ -365,9 +409,11 @@ mod tests {
         // consistent (≤ dispatches) and every op still runs exactly once
         let g = models::build(ModelKind::PathNet, ModelSize::Small);
         let counter = AtomicU64::new(0);
-        let result = ThreadedGraphi::new(4).run(&g, vec![1.0; g.len()], |_| {
-            counter.fetch_add(1, Ordering::Relaxed);
-        });
+        let result = ThreadedGraphi::new(4)
+            .run(&g, vec![1.0; g.len()], |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
         assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
         assert!(result.steals <= result.dispatches);
         // no domain map ⇒ nothing can be accounted as cross-domain
@@ -379,9 +425,11 @@ mod tests {
         let g = models::build(ModelKind::PathNet, ModelSize::Small);
         let engine = ThreadedGraphi::new(4).with_numa(DomainMap::new(vec![0, 0, 1, 1], 0));
         let counter = AtomicU64::new(0);
-        let result = engine.run(&g, vec![1.0; g.len()], |_| {
-            counter.fetch_add(1, Ordering::Relaxed);
-        });
+        let result = engine
+            .run(&g, vec![1.0; g.len()], |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
         assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
         assert_eq!(result.records.len(), g.len());
         assert!(result.cross_domain_steals <= result.steals);
@@ -396,7 +444,7 @@ mod tests {
         assert!(map.is_multi_domain());
         // and it still executes correctly
         let g = mlp(&MlpConfig::default());
-        let r = engine.run(&g, vec![1.0; g.len()], |_| {});
+        let r = engine.run(&g, vec![1.0; g.len()], |_| {}).unwrap();
         assert_eq!(r.records.len(), g.len());
     }
 
@@ -422,14 +470,16 @@ mod tests {
             prev = n;
         }
         let g = b.build().unwrap();
-        let result = ThreadedGraphi::new(4).run(&g, vec![1.0; g.len()], |_| {
-            // ~hundreds of µs of busy work per op so idle executors have
-            // time to exhaust the spin and yield budgets
-            let t = Instant::now();
-            while t.elapsed() < Duration::from_micros(200) {
-                std::hint::spin_loop();
-            }
-        });
+        let result = ThreadedGraphi::new(4)
+            .run(&g, vec![1.0; g.len()], |_| {
+                // ~hundreds of µs of busy work per op so idle executors
+                // have time to exhaust the spin and yield budgets
+                let t = Instant::now();
+                while t.elapsed() < Duration::from_micros(200) {
+                    std::hint::spin_loop();
+                }
+            })
+            .unwrap();
         assert_eq!(result.records.len(), g.len());
         assert!(
             result.parks > 0,
@@ -461,9 +511,11 @@ mod tests {
         assert_eq!(engine.dispatch, DispatchMode::Decentralized);
         assert_eq!(engine.phase_plan, None);
         let counter = AtomicU64::new(0);
-        let result = engine.run_tuned(&g, &tuning, |_| {
-            counter.fetch_add(1, Ordering::Relaxed);
-        });
+        let result = engine
+            .run_tuned(&g, &tuning, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
         assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64);
         assert_eq!(result.records.len(), g.len());
     }
@@ -491,19 +543,28 @@ mod tests {
         };
         let engine = ThreadedGraphi::from_tuning(&tuning);
         assert_eq!(engine.phase_plan, Some(plan));
-        let result = engine.run_tuned(&g, &tuning, |_| {});
+        let result = engine.run_tuned(&g, &tuning, |_| {}).unwrap();
         assert_eq!(result.records.len(), g.len());
     }
 
     #[test]
-    #[should_panic(expected = "not supported by the threaded session core")]
-    fn unsupported_policy_rejected_loudly() {
+    fn unsupported_policy_rejected_with_structured_error() {
         // Fifo/Lifo/Random only ever ordered the PR-1 centralized heap;
-        // the session core must refuse them instead of silently running
-        // CP-first
+        // the session core must refuse them with a typed error (not a
+        // panic, not silently running CP-first) that the CLI's error
+        // chain can print
         let g = mlp(&MlpConfig::default());
-        let engine = ThreadedGraphi { policy: Policy::Fifo, ..ThreadedGraphi::new(2) };
-        let _ = engine.run(&g, vec![1.0; g.len()], |_| {});
+        for policy in [Policy::Fifo, Policy::Lifo, Policy::Random] {
+            let engine = ThreadedGraphi { policy, ..ThreadedGraphi::new(2) };
+            let err = engine
+                .run(&g, vec![1.0; g.len()], |_| {})
+                .expect_err("non-CP policy must be refused");
+            assert_eq!(err, UnsupportedPolicy { policy });
+            assert!(
+                err.to_string().contains("not supported by the threaded session core"),
+                "{err}"
+            );
+        }
     }
 
     #[test]
@@ -524,9 +585,11 @@ mod tests {
                 policy: Policy::AntiCritical,
                 ..ThreadedGraphi::new(1).with_dispatch(mode)
             };
-            engine.run(&g, levels.clone(), |n| {
-                order.lock().unwrap().push(n);
-            });
+            engine
+                .run(&g, levels.clone(), |n| {
+                    order.lock().unwrap().push(n);
+                })
+                .unwrap();
             assert_eq!(order.into_inner().unwrap(), vec![1, 0, 2], "{}", mode.name());
         }
     }
@@ -536,7 +599,7 @@ mod tests {
         let g = mlp(&MlpConfig::default());
         for mode in DispatchMode::ALL {
             let engine = ThreadedGraphi::new(1).with_dispatch(mode);
-            let result = engine.run(&g, vec![1.0; g.len()], |_| {});
+            let result = engine.run(&g, vec![1.0; g.len()], |_| {}).unwrap();
             assert_eq!(result.records.len(), g.len(), "{}", mode.name());
         }
     }
@@ -548,11 +611,11 @@ mod tests {
         let levels: Arc<[f64]> = vec![1.0; g.len()].into();
         let engine = ThreadedGraphi::new(2);
         for _ in 0..3 {
-            let r = engine.run(&g, Arc::clone(&levels), |_| {});
+            let r = engine.run(&g, Arc::clone(&levels), |_| {}).unwrap();
             assert_eq!(r.records.len(), g.len());
         }
         // borrowed slices still accepted (one copy, at the caller's choice)
-        let r = engine.run(&g, &levels[..], |_| {});
+        let r = engine.run(&g, &levels[..], |_| {}).unwrap();
         assert_eq!(r.records.len(), g.len());
     }
 
@@ -572,9 +635,12 @@ mod tests {
         let levels = vec![5.0, 1.0, 9.0];
         for mode in DispatchMode::ALL {
             let order = std::sync::Mutex::new(Vec::new());
-            ThreadedGraphi::new(1).with_dispatch(mode).run(&g, levels.clone(), |n| {
-                order.lock().unwrap().push(n);
-            });
+            ThreadedGraphi::new(1)
+                .with_dispatch(mode)
+                .run(&g, levels.clone(), |n| {
+                    order.lock().unwrap().push(n);
+                })
+                .unwrap();
             let order = order.into_inner().unwrap();
             assert_eq!(order, vec![2, 0, 1], "{}", mode.name());
         }
@@ -610,14 +676,13 @@ mod tests {
         };
         let clock = AtomicU64::new(0);
         let stamp: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(u64::MAX)).collect();
-        let result = ThreadedGraphi::new(3).with_phase_plan(plan).run(
-            &g,
-            vec![1.0; g.len()],
-            |n| {
+        let result = ThreadedGraphi::new(3)
+            .with_phase_plan(plan)
+            .run(&g, vec![1.0; g.len()], |n| {
                 let t = clock.fetch_add(1, Ordering::SeqCst);
                 stamp[n as usize].store(t, Ordering::SeqCst);
-            },
-        );
+            })
+            .unwrap();
         assert_eq!(result.records.len(), g.len());
         assert_eq!(result.dispatches, g.len() as u64);
         assert_eq!(result.mode_switches, 2, "c|d|c transitions at both boundaries");

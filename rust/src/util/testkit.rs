@@ -216,6 +216,74 @@ impl Gen for DagGen {
     }
 }
 
+/// Deterministic per-session fault injection for the fault-tolerance
+/// suites and `graphi serve --fault-rate`.
+///
+/// A plan names at most one fault for a session: an op that panics, an op
+/// that dawdles (sleeps before completing — the watchdog/deadline
+/// stressor), or a client-side cancel delay. Plans are drawn from a
+/// seeded [`Rng`], so every fault schedule is replayable; [`wrap`]
+/// applies the op-level faults around an inner work closure, while the
+/// cancel component is the *client's* job (call
+/// `SessionHandle::cancel` after [`FaultPlan::cancel_after_us`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// This node's op panics (message tagged [`FaultPlan::PANIC_TAG`]).
+    pub panic_at: Option<u32>,
+    /// This node's op sleeps for `(node, µs)` before completing.
+    pub delay_at: Option<(u32, f64)>,
+    /// The submitting client should cancel the session after this many µs.
+    pub cancel_after_us: Option<f64>,
+}
+
+impl FaultPlan {
+    /// Marker in every injected panic message, so harnesses can tell an
+    /// injected fault from a real bug when asserting on payloads.
+    pub const PANIC_TAG: &'static str = "injected fault";
+
+    /// Draw a plan: with probability `rate` the session gets exactly one
+    /// fault, split evenly between an op panic, an op delay of
+    /// `delay_us`, and a client cancel after `delay_us`.
+    pub fn draw(rng: &mut Rng, nodes: usize, rate: f64, delay_us: f64) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if nodes == 0 || !rng.chance(rate) {
+            return plan;
+        }
+        let node = rng.below(nodes as u64) as u32;
+        match rng.below(3) {
+            0 => plan.panic_at = Some(node),
+            1 => plan.delay_at = Some((node, delay_us)),
+            _ => plan.cancel_after_us = Some(delay_us),
+        }
+        plan
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_faulty(&self) -> bool {
+        self.panic_at.is_some() || self.delay_at.is_some() || self.cancel_after_us.is_some()
+    }
+
+    /// Wrap `inner` with this plan's op-level faults: the delay node
+    /// sleeps, the panic node panics (after any delay), every other node
+    /// just runs `inner`.
+    pub fn wrap<F>(self, inner: F) -> impl Fn(u32) + Send + Sync
+    where
+        F: Fn(u32) + Send + Sync,
+    {
+        move |n: u32| {
+            if let Some((d, us)) = self.delay_at {
+                if n == d {
+                    std::thread::sleep(std::time::Duration::from_micros(us as u64));
+                }
+            }
+            if self.panic_at == Some(n) {
+                panic!("{} at node {n}", FaultPlan::PANIC_TAG);
+            }
+            inner(n);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,6 +15,10 @@
 //!    one virtual fleet) and the threaded fleet agree on per-session op
 //!    sets and produce dependency-valid per-session orders on random DAG
 //!    pairs, both modes.
+//! 5. **Fault domains (PR 6)**: an op panic is confined to its session —
+//!    concurrent and subsequent sessions on the same fleet complete with
+//!    exactly-once semantics, and `Fleet::shutdown` reports the fault as
+//!    an error value instead of aborting.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
@@ -22,7 +26,9 @@ use std::time::Duration;
 use graphi::engine::{DispatchMode, GraphiEngine, SimEnv};
 use graphi::graph::op::{EwKind, OpKind};
 use graphi::graph::{Graph, GraphBuilder, NodeId};
-use graphi::runtime::{Fleet, FleetConfig, SessionQueue, SessionReport, ThreadedGraphi};
+use graphi::runtime::{
+    Fleet, FleetConfig, SessionError, SessionQueue, SessionReport, ThreadedGraphi,
+};
 use graphi::util::testkit::{check, DagCase, DagGen};
 
 fn unit_levels(g: &Graph) -> Vec<f64> {
@@ -83,7 +89,10 @@ fn eight_sequential_sessions_reuse_one_fleet_of_threads() {
         let totals = std::thread::scope(|scope| {
             let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
             for i in 0..8 {
-                let report = fleet.submit(&g, unit_levels(&g), &work).wait();
+                let report = fleet
+                    .submit(&g, unit_levels(&g), &work)
+                    .wait()
+                    .expect("healthy session");
                 assert_eq!(report.records.len(), g.len(), "{} session {i}", mode.name());
                 assert_eq!(report.dispatches, g.len() as u64, "{} session {i}", mode.name());
                 assert!(
@@ -98,7 +107,7 @@ fn eight_sequential_sessions_reuse_one_fleet_of_threads() {
                     mode.name()
                 );
             }
-            fleet.shutdown()
+            fleet.shutdown().expect("clean fleet")
         });
         assert_eq!(totals.executor_threads, 3, "{}", mode.name());
         assert_eq!(totals.sessions_completed, 8, "{}", mode.name());
@@ -120,9 +129,11 @@ fn threaded_run_counters_survive_the_session_core() {
         let engine = ThreadedGraphi::new(2).with_dispatch(mode);
         for _ in 0..3 {
             let counter = AtomicU64::new(0);
-            let r = engine.run(&g, unit_levels(&g), |_| {
-                counter.fetch_add(1, Ordering::Relaxed);
-            });
+            let r = engine
+                .run(&g, unit_levels(&g), |_| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
             assert_eq!(counter.load(Ordering::Relaxed), g.len() as u64, "{}", mode.name());
             assert_eq!(r.records.len(), g.len(), "{}", mode.name());
             assert_eq!(r.dispatches, g.len() as u64, "{}", mode.name());
@@ -147,8 +158,9 @@ fn concurrent_sessions_match_solo_semantics_in_both_modes() {
         let solo = |g: &Graph| {
             std::thread::scope(|scope| {
                 let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
-                let report = fleet.submit(g, unit_levels(g), &work).wait();
-                fleet.shutdown();
+                let report =
+                    fleet.submit(g, unit_levels(g), &work).wait().expect("healthy session");
+                fleet.shutdown().expect("clean fleet");
                 report
             })
         };
@@ -161,9 +173,9 @@ fn concurrent_sessions_match_solo_semantics_in_both_modes() {
             let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
             let ha = fleet.submit(&a, unit_levels(&a), &work);
             let hb = fleet.submit(&b, unit_levels(&b), &work);
-            let ra = ha.wait();
-            let rb = hb.wait();
-            let totals = fleet.shutdown();
+            let ra = ha.wait().expect("healthy session A");
+            let rb = hb.wait().expect("healthy session B");
+            let totals = fleet.shutdown().expect("clean fleet");
             (ra, rb, totals)
         });
         let order_a = order_of(&rep_a);
@@ -219,7 +231,7 @@ fn over_budget_session_waits_for_admission() {
                 let permit_b = queue.admit(400);
                 started_b.store(1, Ordering::SeqCst);
                 let hb = fleet_ref.submit(g, unit_levels(g), work);
-                let rb = hb.wait();
+                let rb = hb.wait().expect("healthy session B");
                 drop(permit_b);
                 tx.send(rb.records.len()).unwrap();
             });
@@ -228,14 +240,74 @@ fn over_budget_session_waits_for_admission() {
                 "over-budget session was admitted while the budget was full"
             );
             assert_eq!(started_b.load(Ordering::SeqCst), 0, "B must still be waiting");
-            let ra = ha.wait();
+            let ra = ha.wait().expect("healthy session A");
             assert_eq!(ra.records.len(), g.len());
             drop(permit_a);
             let b_records = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             assert_eq!(b_records, g.len());
         });
-        fleet.shutdown();
+        fleet.shutdown().expect("clean fleet");
     });
+}
+
+/// PR 6 acceptance: a session whose op panics reports
+/// `SessionError::OpPanicked`; a concurrent healthy session on the same
+/// fleet still completes with exactly-once, dependency-valid semantics;
+/// the fleet keeps serving afterwards; and `Fleet::shutdown` after the
+/// fault returns an error value instead of aborting. Both dispatch modes.
+#[test]
+fn faulty_session_is_confined_while_concurrent_session_completes() {
+    let faulty_graph = mixed_graph(4);
+    let healthy_graph = mixed_graph(9);
+    let boom = (faulty_graph.len() / 2) as NodeId;
+    for mode in DispatchMode::ALL {
+        let healthy_runs = AtomicU64::new(0);
+        let faulty_work = move |n: NodeId| {
+            if n == boom {
+                panic!("injected fault at node {n}");
+            }
+        };
+        let healthy_work = |_n: NodeId| {
+            healthy_runs.fetch_add(1, Ordering::Relaxed);
+        };
+        let err = std::thread::scope(|scope| {
+            let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+            let hf = fleet.submit(&faulty_graph, unit_levels(&faulty_graph), &faulty_work);
+            let hh = fleet.submit(&healthy_graph, unit_levels(&healthy_graph), &healthy_work);
+            let fault = hf.wait().expect_err("panicking session must not report a makespan");
+            match &fault {
+                SessionError::OpPanicked { node, payload } => {
+                    assert_eq!(*node, boom, "{}", mode.name());
+                    assert!(payload.contains("injected fault"), "{}: {payload}", mode.name());
+                }
+                other => panic!("{}: expected OpPanicked, got {other:?}", mode.name()),
+            }
+            let healthy = hh.wait().expect("concurrent healthy session must complete");
+            g_validate(&healthy_graph, &order_of(&healthy), mode, "healthy-during-fault");
+            assert_eq!(healthy.records.len(), healthy_graph.len(), "{}", mode.name());
+            // the fleet keeps serving after the fault
+            let after = fleet
+                .submit(&healthy_graph, unit_levels(&healthy_graph), &healthy_work)
+                .wait()
+                .expect("post-fault session must complete");
+            assert_eq!(after.records.len(), healthy_graph.len(), "{}", mode.name());
+            fleet.shutdown().expect_err("shutdown after a session fault must report it")
+        });
+        assert_eq!(err.sessions_failed, 1, "{}", mode.name());
+        assert!(
+            err.panicked_threads.is_empty(),
+            "{}: executors must survive op panics",
+            mode.name()
+        );
+        assert_eq!(err.totals.sessions_completed, 2, "{}", mode.name());
+        // exactly-once across both healthy sessions
+        assert_eq!(
+            healthy_runs.load(Ordering::Relaxed),
+            2 * healthy_graph.len() as u64,
+            "{}",
+            mode.name()
+        );
+    }
 }
 
 fn graph_of(case: &DagCase) -> Graph {
@@ -309,9 +381,9 @@ fn prop_sim_mirror_agrees_with_threaded_fleet_on_random_dag_pairs() {
                 let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
                 let h1 = fleet.submit(&g1, unit_levels(&g1), &work);
                 let h2 = fleet.submit(&g2, unit_levels(&g2), &work);
-                let r1 = h1.wait();
-                let r2 = h2.wait();
-                fleet.shutdown();
+                let r1 = h1.wait().expect("healthy session 1");
+                let r2 = h2.wait().expect("healthy session 2");
+                fleet.shutdown().expect("clean fleet");
                 (r1, r2)
             });
             for (g, rep, sim_order) in

@@ -121,11 +121,13 @@ fn run_with_watchdog(graph: &Arc<Graph>, engine: ThreadedGraphi, levels: Vec<f64
         let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
         let clock = AtomicU64::new(1);
         let stamps: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        let result = engine.run(&g, levels, |v| {
-            counts[v as usize].fetch_add(1, Ordering::SeqCst);
-            let t = clock.fetch_add(1, Ordering::SeqCst);
-            stamps[v as usize].store(t, Ordering::SeqCst);
-        });
+        let result = engine
+            .run(&g, levels, |v| {
+                counts[v as usize].fetch_add(1, Ordering::SeqCst);
+                let t = clock.fetch_add(1, Ordering::SeqCst);
+                stamps[v as usize].store(t, Ordering::SeqCst);
+            })
+            .expect("cp-first runs are always supported");
         let _ = tx.send(RunOutcome {
             records: result.records.len(),
             dispatches: result.dispatches,
@@ -272,8 +274,11 @@ fn stress_concurrent_sessions_shared_fleet() {
                                 fleet.submit(g, levels.clone(), work.as_ref())
                             })
                             .collect();
-                        let reports: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
-                        (reports, fleet.shutdown())
+                        let reports: Vec<_> = handles
+                            .into_iter()
+                            .map(|h| h.wait().expect("healthy session"))
+                            .collect();
+                        (reports, fleet.shutdown().expect("clean fleet"))
                     });
                     let sessions: Vec<SessionOutcome> = outcomes
                         .iter()
@@ -329,6 +334,229 @@ fn stress_concurrent_sessions_shared_fleet() {
                     totals.steals
                 );
                 assert_eq!(totals.sessions_completed, graphs.len() as u64, "{tag}");
+            }
+        }
+    }
+}
+
+/// PR 6 chaos: the same 4-graph concurrent mix, but every iteration
+/// injects seeded faults — op panics, client cancels, and op delays
+/// under a deadline tighter than the delay — across both dispatch modes
+/// and 2/4/8 executors, [`ITERATIONS`] iterations per config. Asserts:
+///
+/// * **confinement**: healthy sessions keep exactly-once + dep order;
+/// * **no zombie ops**: terminated sessions never run an op twice, and
+///   whatever prefix they did run is dependency-closed;
+/// * **structured outcomes**: every terminal matches its injected fault
+///   (a panic plan can never end `Ok`, a cancel can never be blamed on a
+///   deadline, …), and outcome counts conserve across the fleet totals;
+/// * **no leaks**: admission budget returns to zero (RAII permits across
+///   panics), executor threads are joined (thread count exact, no
+///   executor killed by an op panic), and the channel watchdog bounds
+///   every run — a hang is a failure, not a stall.
+#[test]
+fn stress_fault_injection_shared_fleet() {
+    use graphi::runtime::{SessionError, SessionQueue};
+    use graphi::util::testkit::FaultPlan;
+
+    let graphs: Vec<Arc<Graph>> = vec![
+        Arc::new(diamond_chain(12)),
+        Arc::new(butterfly(6, 8)),
+        Arc::new(fan(24)),
+        Arc::new(diamond_chain(4)),
+    ];
+    let mut rng = Rng::new(base_seed() ^ 0xFA17);
+    for iter in 0..ITERATIONS {
+        for &execs in &FLEETS {
+            for mode in DispatchMode::ALL {
+                let tag = format!("faults/iter{iter}/{execs}exec/{}", mode.name());
+                let level_sets: Vec<Vec<f64>> =
+                    graphs.iter().map(|g| seeded_levels(g.len(), &mut rng)).collect();
+                let plans: Vec<FaultPlan> = graphs
+                    .iter()
+                    .map(|g| FaultPlan::draw(&mut rng, g.len(), 0.7, 200.0))
+                    .collect();
+                let (tx, rx) = mpsc::channel();
+                let worker_graphs = graphs.clone();
+                let worker_plans = plans.clone();
+                std::thread::spawn(move || {
+                    let graphs = worker_graphs;
+                    let plans = worker_plans;
+                    type SessionProbe = (Vec<AtomicU32>, AtomicU64, Vec<AtomicU64>);
+                    let per_graph: Vec<Arc<SessionProbe>> = graphs
+                        .iter()
+                        .map(|g| {
+                            Arc::new((
+                                (0..g.len()).map(|_| AtomicU32::new(0)).collect(),
+                                AtomicU64::new(1),
+                                (0..g.len()).map(|_| AtomicU64::new(0)).collect(),
+                            ))
+                        })
+                        .collect();
+                    let works: Vec<Box<dyn Fn(NodeId) + Send + Sync>> = per_graph
+                        .iter()
+                        .zip(&plans)
+                        .map(|(probe, plan)| {
+                            let probe = Arc::clone(probe);
+                            Box::new(plan.clone().wrap(move |v: NodeId| {
+                                probe.0[v as usize].fetch_add(1, Ordering::SeqCst);
+                                let t = probe.1.fetch_add(1, Ordering::SeqCst);
+                                probe.2[v as usize].store(t, Ordering::SeqCst);
+                            })) as Box<dyn Fn(NodeId) + Send + Sync>
+                        })
+                        .collect();
+                    // one admission unit per session: permits must all come
+                    // back even when their session panics
+                    let queue = SessionQueue::new(graphs.len() as u64);
+                    let (outcomes, shutdown) = std::thread::scope(|scope| {
+                        let fleet = Fleet::new(
+                            scope,
+                            FleetConfig::new(execs)
+                                .with_dispatch(mode)
+                                .with_watchdog(Duration::from_secs(10)),
+                        );
+                        let permits: Vec<_> = graphs.iter().map(|_| queue.admit(1)).collect();
+                        let handles: Vec<_> = graphs
+                            .iter()
+                            .zip(&level_sets)
+                            .zip(&works)
+                            .zip(&plans)
+                            .map(|(((g, levels), work), plan)| {
+                                // delay-fault sessions carry a deadline
+                                // tighter than their injected delay
+                                if plan.delay_at.is_some() {
+                                    fleet.submit_with_deadline(
+                                        g,
+                                        levels.clone(),
+                                        work.as_ref(),
+                                        Duration::from_micros(100),
+                                    )
+                                } else {
+                                    fleet.submit(g, levels.clone(), work.as_ref())
+                                }
+                            })
+                            .collect();
+                        // client-side cancels after the drawn delay
+                        if plans.iter().any(|p| p.cancel_after_us.is_some()) {
+                            std::thread::sleep(Duration::from_micros(200));
+                            for (h, plan) in handles.iter().zip(&plans) {
+                                if plan.cancel_after_us.is_some() {
+                                    h.cancel();
+                                }
+                            }
+                        }
+                        let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+                        drop(permits);
+                        assert_eq!(queue.in_use(), 0, "leaked admission budget");
+                        assert_eq!(queue.waiting(), 0, "phantom admission waiters");
+                        (outcomes, fleet.shutdown())
+                    });
+                    let counts: Vec<Vec<u32>> = per_graph
+                        .iter()
+                        .map(|p| p.0.iter().map(|c| c.load(Ordering::SeqCst)).collect())
+                        .collect();
+                    let stamps: Vec<Vec<u64>> = per_graph
+                        .iter()
+                        .map(|p| p.2.iter().map(|s| s.load(Ordering::SeqCst)).collect())
+                        .collect();
+                    let _ = tx.send((outcomes, counts, stamps, shutdown));
+                });
+                let (outcomes, counts, stamps, shutdown) = match rx.recv_timeout(WATCHDOG) {
+                    Ok(out) => out,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        panic!("{tag}: no quiescence within {WATCHDOG:?} — dispatch hang")
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        panic!("{tag}: worker thread panicked inside the run")
+                    }
+                };
+                let mut expected_failed = 0u64;
+                for (si, ((graph, plan), outcome)) in
+                    graphs.iter().zip(&plans).zip(&outcomes).enumerate()
+                {
+                    let stag = format!("{tag}/s{si}");
+                    let c = &counts[si];
+                    let st = &stamps[si];
+                    // never-twice, and the executed set is a
+                    // dependency-closed prefix regardless of outcome
+                    for (v, &n) in c.iter().enumerate() {
+                        assert!(n <= 1, "{stag}: node {v} executed {n} times");
+                        if n == 1 {
+                            for &p in graph.preds(v as NodeId) {
+                                assert_eq!(
+                                    c[p as usize], 1,
+                                    "{stag}: node {v} ran but its dep {p} never did"
+                                );
+                                assert!(
+                                    st[p as usize] < st[v],
+                                    "{stag}: dep violated {p} vs {v}"
+                                );
+                            }
+                        }
+                    }
+                    match outcome {
+                        Ok(r) => {
+                            assert!(
+                                plan.panic_at.is_none(),
+                                "{stag}: panic plan completed: {plan:?}"
+                            );
+                            assert_eq!(r.records.len(), graph.len(), "{stag}: record count");
+                            assert!(
+                                c.iter().all(|&n| n == 1),
+                                "{stag}: Ok session with missing ops"
+                            );
+                        }
+                        Err(SessionError::OpPanicked { node, payload }) => {
+                            expected_failed += 1;
+                            assert_eq!(Some(*node), plan.panic_at, "{stag}: wrong blamed node");
+                            assert!(
+                                payload.contains(FaultPlan::PANIC_TAG),
+                                "{stag}: foreign panic payload: {payload}"
+                            );
+                            assert_eq!(
+                                c[*node as usize], 0,
+                                "{stag}: panicked op counted as executed"
+                            );
+                        }
+                        Err(SessionError::Cancelled) => {
+                            assert!(plan.cancel_after_us.is_some(), "{stag}: spurious cancel");
+                        }
+                        Err(SessionError::DeadlineExceeded) => {
+                            assert!(plan.delay_at.is_some(), "{stag}: spurious deadline miss");
+                        }
+                        Err(other) => panic!("{stag}: unexpected terminal {other:?}"),
+                    }
+                }
+                let totals = match shutdown {
+                    Ok(t) => {
+                        assert_eq!(
+                            expected_failed, 0,
+                            "{tag}: sessions failed but shutdown reported clean"
+                        );
+                        t
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.panicked_threads.is_empty(),
+                            "{tag}: fleet thread died: {:?}",
+                            e.panicked_threads
+                        );
+                        assert_eq!(e.sessions_failed, expected_failed, "{tag}: failure count");
+                        e.totals
+                    }
+                };
+                assert_eq!(
+                    totals.executor_threads, execs as u64,
+                    "{tag}: executor threads leaked or respawned"
+                );
+                assert_eq!(
+                    totals.sessions_completed
+                        + totals.sessions_failed
+                        + totals.sessions_cancelled
+                        + totals.sessions_deadline_missed,
+                    graphs.len() as u64,
+                    "{tag}: session outcomes must conserve"
+                );
             }
         }
     }
