@@ -5,9 +5,10 @@
 //! graphi profile  --model lstm --size medium
 //! graphi autotune --model lstm --size medium [--force] [--compare]
 //! graphi stats    --model pathnet --size large [--dot out.dot]
-//! graphi trace    --model lstm --size small --executors 8 --threads 8
+//! graphi trace    --model lstm --size small --executors 8 --threads 8 [--check FILE]
 //! graphi bench    <fig2|fig3|fig5|fig6|table2|ablations|all> [--fast]
 //! graphi serve    [--requests 200 --clients 4 --dispatch both --mix lstm=1,mlp=1,...]
+//!                 [--trace-chrome t.json --telemetry-every-ms 500]
 //! graphi train    [--steps 200] [--artifacts DIR]
 //! ```
 
@@ -110,6 +111,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("iters", Some("5"), "iterations to average")
         .opt("tuning", None, "artifact dir with a persisted autotune result to reuse")
         .opt("trace", None, "write Chrome trace JSON here")
+        .opt("trace-chrome", None, "alias for --trace (session-aware Chrome/Perfetto trace)")
         .opt("json", None, "write result JSON here");
     let m = spec.parse(args).map_err(Error::new)?;
     let has_config = m.get("config").is_some();
@@ -154,7 +156,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if flag_wins("seed") {
         cfg.seed = m.get_u64("seed").map_err(Error::new)?.unwrap_or(42);
     }
-    if let Some(trace) = m.get("trace") {
+    if let Some(trace) = m.get("trace").or_else(|| m.get("trace-chrome")) {
         cfg.trace_path = Some(trace.to_string());
     }
     // --tuning DIR: reuse a persisted autotune result; otherwise just
@@ -402,8 +404,27 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         .opt("executors", Some("8"), "executor count")
         .opt("threads", Some("8"), "threads per executor")
         .opt("out", Some("reports/trace.json"), "Chrome trace path")
-        .opt("width", Some("100"), "ASCII timeline width");
+        .opt("width", Some("100"), "ASCII timeline width")
+        .opt("check", None, "validate an existing Chrome trace file instead of running");
     let m = spec.parse(args).map_err(Error::new)?;
+    // --check FILE: parse + well-formedness validation of any exported
+    // trace (CI runs this against the serve exporter's output)
+    if let Some(path) = m.get("check") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+        let stats = match crate::engine::validate_chrome_trace(&text) {
+            Ok(s) => s,
+            Err(e) => bail!("invalid trace {path}: {e}"),
+        };
+        println!(
+            "{path}: OK — {} processes, {} spans, {} instants [{}]",
+            stats.processes,
+            stats.spans,
+            stats.instants,
+            stats.instant_names.iter().cloned().collect::<Vec<_>>().join(", "),
+        );
+        return Ok(());
+    }
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
     let executors = m.get_usize("executors").map_err(Error::new)?.unwrap();
@@ -492,6 +513,18 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
 }
 
+/// Insert a tag before the file extension: `t.json` + `centralized` →
+/// `t.centralized.json` (appended when there is no extension).
+fn suffix_path(path: &str, tag: &str) -> String {
+    match std::path::Path::new(path).extension().and_then(|e| e.to_str()) {
+        Some(ext) => {
+            let stem = &path[..path.len() - ext.len() - 1];
+            format!("{stem}.{tag}.{ext}")
+        }
+        None => format!("{path}.{tag}"),
+    }
+}
+
 /// Parse a `model=weight,model=weight` mix (weight defaults to 1).
 fn parse_mix(text: &str) -> Result<Vec<(ModelKind, f64)>> {
     let mut mix = Vec::new();
@@ -545,6 +578,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         None,
         "per-session deadline in µs; late sessions fail with DeadlineExceeded, admission timeouts are shed",
     )
+    .opt(
+        "trace-chrome",
+        None,
+        "write a per-session Chrome/Perfetto trace here (suffixed per mode when --dispatch both)",
+    )
+    .opt("telemetry-every-ms", None, "print an aggregate telemetry line every N ms while serving")
+    .opt("telemetry-ring", Some("1024"), "capacity of the bounded ring of recent session samples")
     .opt("seed", Some("42"), "request-mix seed")
     .flag("training", "serve training graphs instead of forward-only inference graphs")
     .flag("bench-json", "append serve_throughput_* headlines to BENCH_scheduler.json");
@@ -583,6 +623,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if deadline_us == Some(0) {
         bail!("--deadline-us must be at least 1");
     }
+    let telemetry_every_ms = m.get_u64("telemetry-every-ms").map_err(Error::new)?;
+    if telemetry_every_ms == Some(0) {
+        bail!("--telemetry-every-ms must be at least 1");
+    }
+    let telemetry_ring = positive("telemetry-ring")?;
+    let trace_chrome = m.get("trace-chrome").map(|s| s.to_string());
     let base = crate::runtime::ServeConfig {
         executors: positive("executors")?,
         clients: positive("clients")?,
@@ -595,6 +641,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         op_spin_us: m.get_f64("op-us").map_err(Error::new)?.unwrap(),
         fault_rate,
         deadline_us,
+        telemetry_every_ms,
+        telemetry_ring,
         seed: m.get_u64("seed").map_err(Error::new)?.unwrap(),
         ..crate::runtime::ServeConfig::default()
     };
@@ -602,10 +650,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("bench-json")
         .then(|| BenchRunner::with_config("serve_throughput", BenchConfig::default()));
     let mut headlines: Vec<(String, f64)> = Vec::new();
+    let multi_mode = modes.len() > 1;
     for mode in modes {
-        let cfg = crate::runtime::ServeConfig { dispatch: mode, ..base.clone() };
+        // one trace file per dispatch mode when --dispatch both runs two
+        let trace_path = trace_chrome.as_ref().map(|p| {
+            if multi_mode { suffix_path(p, mode.name()) } else { p.clone() }
+        });
+        let cfg =
+            crate::runtime::ServeConfig { dispatch: mode, trace_path, ..base.clone() };
         let report = crate::runtime::serve(&cfg);
         print!("{}", report.render());
+        if let Some(path) = &cfg.trace_path {
+            println!("chrome trace written to {path} (open in ui.perfetto.dev)");
+        }
         if let Some(runner) = runner.as_mut() {
             let labels = [
                 ("dispatch", mode.name().to_string()),
@@ -917,6 +974,57 @@ mod tests {
             ])),
             0
         );
+    }
+
+    #[test]
+    fn run_trace_chrome_then_check_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-cli-run-trace-{}.json", std::process::id()));
+        let path_s = path.display().to_string();
+        assert_eq!(
+            main(args(&[
+                "run", "--model", "mlp", "--size", "small", "--executors", "4", "--threads",
+                "8", "--iters", "1", "--trace-chrome", &path_s,
+            ])),
+            0
+        );
+        assert_eq!(main(args(&["trace", "--check", &path_s])), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn serve_trace_chrome_then_check_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-cli-serve-trace-{}.json", std::process::id()));
+        let path_s = path.display().to_string();
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "6", "--clients", "2", "--executors", "2", "--mix",
+                "mlp=1", "--size", "small", "--dispatch", "decentralized", "--trace-chrome",
+                &path_s, "--telemetry-every-ms", "50",
+            ])),
+            0
+        );
+        assert_eq!(main(args(&["trace", "--check", &path_s])), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trace_check_rejects_missing_and_garbage_files() {
+        assert_eq!(main(args(&["trace", "--check", "/nonexistent/trace.json"])), 1);
+        let path = std::env::temp_dir()
+            .join(format!("graphi-cli-garbage-{}.json", std::process::id()));
+        std::fs::write(&path, "{\"traceEvents\": \"nope\"}").unwrap();
+        let path_s = path.display().to_string();
+        assert_eq!(main(args(&["trace", "--check", &path_s])), 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn suffix_path_inserts_before_the_extension() {
+        assert_eq!(suffix_path("t.json", "centralized"), "t.centralized.json");
+        assert_eq!(suffix_path("reports/trace", "decentralized"), "reports/trace.decentralized");
+        assert_eq!(suffix_path("a.b/t.json", "x"), "a.b/t.x.json");
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! The experiment driver: config → model → (profile) → engine → results.
 
 use crate::engine::{
-    DispatchMode, Engine, GraphiEngine, NaiveEngine, Profiler, RunResult, SequentialEngine,
-    SimEnv, TensorFlowLikeEngine, Trace,
+    export_chrome_trace, DispatchMode, Engine, GraphiEngine, NaiveEngine, Profiler, RunResult,
+    SequentialEngine, SessionTraceExport, SimEnv, TensorFlowLikeEngine,
 };
 use crate::graph::{Graph, GraphStats};
 use crate::models;
@@ -60,11 +60,30 @@ impl Driver {
         }
         let last = last.expect("at least one iteration");
         if let Some(path) = &cfg.trace_path {
-            let trace = Trace { records: last.records.clone() };
+            // same session-aware writer the serve exporter uses, so a
+            // single-run trace diffs cleanly against a serve-mode one
+            let durations: Vec<f64> =
+                graph.nodes().iter().map(|n| env.cost.duration_us(&n.kind, fleet.1)).collect();
+            let levels = crate::graph::levels(graph, &durations);
+            let session = SessionTraceExport {
+                label: format!(
+                    "{}-{} ({})",
+                    cfg.model.name(),
+                    cfg.size.name(),
+                    engine.name()
+                ),
+                graph,
+                levels: Some(&levels),
+                records: &last.records,
+                start_us: 0.0,
+                end_us: last.makespan_us,
+                outcome: "done".to_string(),
+            };
+            let text = export_chrome_trace(std::slice::from_ref(&session), &[], fleet.0);
             if let Some(parent) = std::path::Path::new(path).parent() {
                 let _ = std::fs::create_dir_all(parent);
             }
-            if let Err(e) = std::fs::write(path, trace.to_chrome_json(graph)) {
+            if let Err(e) = std::fs::write(path, text) {
                 crate::log_warn!("failed to write trace {path}: {e}");
             }
         }
@@ -301,8 +320,13 @@ mod tests {
         };
         let _ = Driver::run(&cfg);
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.contains("traceEvents"));
         std::fs::remove_file(&path).unwrap();
+        // must pass the exporter's own well-formedness validator: named
+        // process, named lanes, finite non-overlapping spans
+        let stats = crate::engine::validate_chrome_trace(&text).unwrap();
+        assert_eq!(stats.processes, 1);
+        assert!(stats.spans > 0);
+        assert!(stats.instant_names.contains("done"), "{:?}", stats.instant_names);
     }
 
     #[test]

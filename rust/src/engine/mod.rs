@@ -56,7 +56,10 @@ pub use policies::Policy;
 pub use profiler::{ProfileReport, Profiler};
 pub use sequential::SequentialEngine;
 pub use tensorflow_like::TensorFlowLikeEngine;
-pub use trace::{OpRecord, Trace};
+pub use trace::{
+    export_chrome_trace, validate_chrome_trace, ChromeTraceBuilder, ChromeTraceStats, FleetEvent,
+    FleetEventKind, OpRecord, SessionTraceExport, Trace,
+};
 pub use worksteal::{Acquire, DomainMap, Steal, WorkStealDeque};
 
 use crate::cost::{Calibration, CostModel, Interference};

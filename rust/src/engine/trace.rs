@@ -1,16 +1,41 @@
-//! Execution traces.
+//! Execution traces and the Chrome-trace/Perfetto exporter.
 //!
 //! §5.2: "we use the profiling results to visualize the execution process,
 //! i.e. placing the operations to their running executors' timelines. This
 //! has been immensely helpful in analysis and debugging." Traces also back
 //! the §7.4 observation that critical-path-first scheduling recovers the
 //! cuDNN-style diagonal wavefront on LSTM automatically.
+//!
+//! Beyond the in-terminal ASCII rendering, everything exports to the Chrome
+//! trace-event JSON format (viewable in `chrome://tracing` or
+//! <https://ui.perfetto.dev>) through one writer, [`ChromeTraceBuilder`]:
+//!
+//! - [`export_chrome_trace`] lays out a multi-session run — one `pid` per
+//!   session (named via `process_name` metadata), one `tid` per executor,
+//!   ops as `ph:"X"` spans whose args carry node id, op kind and CP level,
+//!   and fleet/lifecycle transitions (steals, parks, mode switches,
+//!   admitted/started/terminal) as `ph:"i"` instants. Both the threaded
+//!   runtime (`graphi run/serve --trace-chrome`) and the simulator's
+//!   per-session record splits export through this same function, which is
+//!   what makes the exporter differentially testable.
+//! - [`validate_chrome_trace`] re-parses an exported document and checks
+//!   the well-formedness invariants (metadata present for every span's
+//!   pid/tid, finite non-negative durations, per-tid span non-overlap).
 
+use crate::engine::DispatchMode;
 use crate::graph::{Graph, NodeId};
 use crate::util::json::Json;
 
 /// Executor id used for ops run on the light-weight executor (§5.2).
 pub const LIGHTWEIGHT_EXECUTOR: u32 = u32::MAX;
+
+/// Executor-lane id for fleet events not tied to a single executor
+/// (scheduler-thread parks, phase-plan mode switches).
+pub const FLEET_LANE: u32 = u32::MAX;
+
+/// The `pid` of the synthetic "fleet" process in exported traces; session
+/// pids are allocated above it.
+pub const FLEET_PID: u64 = 1;
 
 /// One executed operation.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,6 +52,40 @@ impl OpRecord {
     }
 }
 
+/// A scheduling event observed by the fleet's per-executor event sinks
+/// (`runtime/fleet.rs`), timestamped on the fleet's shared clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    /// Microseconds since the owning fleet's epoch. Single-session runs
+    /// re-base this onto the session's own clock before reporting.
+    pub t_us: f64,
+    /// Executor index, or [`FLEET_LANE`] for fleet-level events.
+    pub executor: u32,
+    pub kind: FleetEventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetEventKind {
+    /// An executor stole work belonging to session `session` from another
+    /// executor's deque (or the NUMA-remote half of the victim ranking).
+    Steal { session: u64, cross_domain: bool },
+    /// An idle executor (or the centralized scheduler thread) exhausted its
+    /// spin→yield budget and parked on the event counter.
+    Park,
+    /// A phased run switched dispatch mode at this instant.
+    ModeSwitch { from: DispatchMode, to: DispatchMode },
+}
+
+impl FleetEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetEventKind::Steal { .. } => "steal",
+            FleetEventKind::Park => "park",
+            FleetEventKind::ModeSwitch { .. } => "mode_switch",
+        }
+    }
+}
+
 /// A full execution trace.
 #[derive(Debug, Clone)]
 pub struct Trace {
@@ -34,28 +93,38 @@ pub struct Trace {
 }
 
 impl Trace {
-    /// Export in Chrome `about:tracing` / Perfetto JSON format.
+    /// Export in Chrome `about:tracing` / Perfetto JSON format: a single
+    /// process with one named lane per executor. Session-aware exports go
+    /// through [`export_chrome_trace`] instead.
     pub fn to_chrome_json(&self, graph: &Graph) -> String {
-        let mut events = Vec::with_capacity(self.records.len());
+        let mut b = ChromeTraceBuilder::new();
+        b.process_name(FLEET_PID, "graphi");
+        let mut execs: Vec<u32> = self
+            .records
+            .iter()
+            .map(|r| r.executor)
+            .filter(|&e| e != LIGHTWEIGHT_EXECUTOR)
+            .collect();
+        execs.sort_unstable();
+        execs.dedup();
+        for &e in &execs {
+            b.thread_name(FLEET_PID, e as u64, &format!("executor {e}"));
+        }
+        // The lightweight executor's lane sits just above the largest real
+        // executor id. (It used to be a hardcoded 9999, which collided with
+        // real executor ids on large fleets.)
+        let lw_tid = execs.last().map_or(0, |&m| m as u64 + 1);
+        if self.records.iter().any(|r| r.executor == LIGHTWEIGHT_EXECUTOR) {
+            b.thread_name(FLEET_PID, lw_tid, "lightweight");
+        }
         for r in &self.records {
             let node = graph.node(r.node);
-            let mut e = Json::obj();
-            e.set("name", node.name.as_str())
-                .set("cat", node.kind.mnemonic())
-                .set("ph", "X")
-                .set("ts", r.start_us)
-                .set("dur", r.duration_us())
-                .set("pid", 1u64)
-                .set(
-                    "tid",
-                    if r.executor == LIGHTWEIGHT_EXECUTOR { 9999u64 } else { r.executor as u64 },
-                );
-            events.push(e);
+            let tid = if r.executor == LIGHTWEIGHT_EXECUTOR { lw_tid } else { r.executor as u64 };
+            let mut args = Json::obj();
+            args.set("node", r.node as u64).set("kind", node.kind.mnemonic());
+            b.span(FLEET_PID, tid, r.start_us, r.duration_us(), &node.name, node.kind.mnemonic(), args);
         }
-        let mut doc = Json::obj();
-        doc.set("traceEvents", Json::Arr(events));
-        doc.set("displayTimeUnit", "ms");
-        doc.to_string_pretty()
+        b.finish()
     }
 
     /// Pearson correlation between a node's graph depth and its start
@@ -74,6 +143,9 @@ impl Trace {
             return String::from("(empty trace)\n");
         }
         let makespan = self.records.iter().map(|r| r.end_us).fold(0.0, f64::max);
+        // A zero makespan (all zero-duration ops at t=0) would make the
+        // time→column projection NaN; collapse everything to column 0.
+        let scale = if makespan > 0.0 { width as f64 / makespan } else { 0.0 };
         let mut executors: Vec<u32> = self.records.iter().map(|r| r.executor).collect();
         executors.sort_unstable();
         executors.dedup();
@@ -81,10 +153,10 @@ impl Trace {
         for &e in &executors {
             let mut line = vec![b'.'; width];
             for r in self.records.iter().filter(|r| r.executor == e) {
-                let a = ((r.start_us / makespan) * width as f64) as usize;
-                let b = (((r.end_us / makespan) * width as f64) as usize).min(width);
+                let a = ((r.start_us * scale) as usize).min(width.saturating_sub(1));
+                let b = ((r.end_us * scale) as usize).min(width);
                 let c = graph.node(r.node).kind.mnemonic().as_bytes()[0];
-                for cell in line.iter_mut().take(b.max(a + 1).min(width)).skip(a.min(width - 1)) {
+                for cell in line.iter_mut().take(b.max(a + 1).min(width)).skip(a) {
                     *cell = c;
                 }
             }
@@ -94,6 +166,288 @@ impl Trace {
         out.push_str(&format!("makespan: {}\n", crate::util::fmt_us(makespan)));
         out
     }
+}
+
+/// Low-level Chrome trace-event writer: collects `ph:"M"/"X"/"i"` events
+/// and serializes the `traceEvents` document. All timestamps are in µs
+/// (the format's native unit).
+#[derive(Default)]
+pub struct ChromeTraceBuilder {
+    events: Vec<Json>,
+}
+
+impl ChromeTraceBuilder {
+    pub fn new() -> ChromeTraceBuilder {
+        ChromeTraceBuilder { events: Vec::new() }
+    }
+
+    /// `process_name` metadata: names `pid`'s row in the viewer.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.metadata("process_name", pid, 0, name);
+    }
+
+    /// `thread_name` metadata: names the `(pid, tid)` lane in the viewer.
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        self.metadata("thread_name", pid, tid, name);
+    }
+
+    fn metadata(&mut self, kind: &str, pid: u64, tid: u64, name: &str) {
+        let mut args = Json::obj();
+        args.set("name", name);
+        let mut e = Json::obj();
+        e.set("name", kind).set("ph", "M").set("pid", pid).set("tid", tid).set("args", args);
+        self.events.push(e);
+    }
+
+    /// A complete `ph:"X"` span.
+    pub fn span(&mut self, pid: u64, tid: u64, ts_us: f64, dur_us: f64, name: &str, cat: &str, args: Json) {
+        let mut e = Json::obj();
+        e.set("name", name)
+            .set("cat", cat)
+            .set("ph", "X")
+            .set("ts", ts_us)
+            .set("dur", dur_us)
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("args", args);
+        self.events.push(e);
+    }
+
+    /// A thread-scoped `ph:"i"` instant event.
+    pub fn instant(&mut self, pid: u64, tid: u64, ts_us: f64, name: &str, args: Json) {
+        let mut e = Json::obj();
+        e.set("name", name)
+            .set("ph", "i")
+            .set("s", "t")
+            .set("ts", ts_us)
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("args", args);
+        self.events.push(e);
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn finish(self) -> String {
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(self.events));
+        doc.set("displayTimeUnit", "ms");
+        doc.to_string_pretty()
+    }
+}
+
+/// One session's contribution to a multi-session Chrome trace.
+pub struct SessionTraceExport<'a> {
+    /// `process_name` for the session's pid, e.g. `"session 3 (mlp-small-inf)"`.
+    pub label: String,
+    pub graph: &'a Graph,
+    /// Optional CP levels, exported into each span's args when present.
+    pub levels: Option<&'a [f64]>,
+    /// Op records on the session's own clock (µs since submit).
+    pub records: &'a [OpRecord],
+    /// Submit instant on the shared fleet timeline, in µs.
+    pub start_us: f64,
+    /// Terminal instant on the shared fleet timeline, in µs.
+    pub end_us: f64,
+    /// Terminal cause: `"done"`, `"failed"`, `"cancelled"`, `"deadline"`, `"stalled"`.
+    pub outcome: String,
+}
+
+fn tid_of(executor: u32, lw_tid: u64) -> u64 {
+    if executor == LIGHTWEIGHT_EXECUTOR { lw_tid } else { executor as u64 }
+}
+
+/// Export a multi-session run as one Chrome trace document.
+///
+/// Layout: pid [`FLEET_PID`] is the fleet itself — one lane per executor
+/// carrying steal/park instants plus a `"fleet"` lane for scheduler parks
+/// and mode switches. Each session gets its own pid (in input order) with
+/// op spans on per-executor lanes, a `"lightweight"` lane above every real
+/// executor id, and a `"lifecycle"` lane with admitted/started/terminal
+/// instants. Both the threaded runtime and the simulator's record splits
+/// export through here, so the two can be diffed span-for-span.
+pub fn export_chrome_trace(
+    sessions: &[SessionTraceExport<'_>],
+    fleet_events: &[FleetEvent],
+    executors: usize,
+) -> String {
+    let mut b = ChromeTraceBuilder::new();
+
+    b.process_name(FLEET_PID, "fleet");
+    for e in 0..executors {
+        b.thread_name(FLEET_PID, e as u64, &format!("executor {e}"));
+    }
+    let fleet_lane_tid = executors as u64;
+    b.thread_name(FLEET_PID, fleet_lane_tid, "fleet");
+    for ev in fleet_events {
+        let tid = if ev.executor == FLEET_LANE {
+            fleet_lane_tid
+        } else {
+            (ev.executor as u64).min(fleet_lane_tid)
+        };
+        let mut args = Json::obj();
+        match ev.kind {
+            FleetEventKind::Steal { session, cross_domain } => {
+                args.set("session", session).set("cross_domain", cross_domain);
+            }
+            FleetEventKind::Park => {}
+            FleetEventKind::ModeSwitch { from, to } => {
+                args.set("from", from.name()).set("to", to.name());
+            }
+        }
+        b.instant(FLEET_PID, tid, ev.t_us, ev.kind.name(), args);
+    }
+
+    // One lightweight lane id shared by all sessions, above both the fleet
+    // width and the largest executor id appearing in any record.
+    let max_real = sessions
+        .iter()
+        .flat_map(|s| s.records.iter())
+        .map(|r| r.executor)
+        .filter(|&e| e != LIGHTWEIGHT_EXECUTOR)
+        .max();
+    let lw_tid = (executors as u64).max(max_real.map_or(0, |m| m as u64 + 1));
+
+    for (i, s) in sessions.iter().enumerate() {
+        let pid = FLEET_PID + 1 + i as u64;
+        b.process_name(pid, &s.label);
+        let mut tids: Vec<u64> = s.records.iter().map(|r| tid_of(r.executor, lw_tid)).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        for &t in &tids {
+            let name = if t == lw_tid { "lightweight".to_string() } else { format!("executor {t}") };
+            b.thread_name(pid, t, &name);
+        }
+
+        let lifecycle_tid = lw_tid + 1;
+        b.thread_name(pid, lifecycle_tid, "lifecycle");
+        b.instant(pid, lifecycle_tid, s.start_us, "admitted", Json::obj());
+        if let Some(first) = s.records.iter().map(|r| r.start_us).min_by(|a, b| a.total_cmp(b)) {
+            b.instant(pid, lifecycle_tid, s.start_us + first, "started", Json::obj());
+        }
+        let mut targs = Json::obj();
+        targs.set("cause", s.outcome.as_str());
+        b.instant(pid, lifecycle_tid, s.end_us, &s.outcome, targs);
+
+        for r in s.records {
+            let node = s.graph.node(r.node);
+            let mut args = Json::obj();
+            args.set("node", r.node as u64).set("kind", node.kind.mnemonic());
+            if let Some(levels) = s.levels {
+                if let Some(&lv) = levels.get(r.node as usize) {
+                    args.set("level", lv);
+                }
+            }
+            b.span(
+                pid,
+                tid_of(r.executor, lw_tid),
+                s.start_us + r.start_us,
+                r.duration_us(),
+                &node.name,
+                node.kind.mnemonic(),
+                args,
+            );
+        }
+    }
+    b.finish()
+}
+
+/// Counts extracted by [`validate_chrome_trace`], for test assertions.
+#[derive(Debug, Clone)]
+pub struct ChromeTraceStats {
+    /// Distinct pids carrying `process_name` metadata.
+    pub processes: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub instant_names: std::collections::BTreeSet<String>,
+}
+
+/// Parse an exported Chrome trace document and check its well-formedness
+/// invariants: every `X` span sits on a pid with `process_name` metadata
+/// and a `(pid, tid)` with `thread_name` metadata, all timestamps are
+/// finite, durations are non-negative, and spans on one `(pid, tid)` lane
+/// never overlap.
+pub fn validate_chrome_trace(text: &str) -> Result<ChromeTraceStats, String> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let doc = crate::util::json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+
+    let num = |e: &Json, k: &str| -> Result<f64, String> {
+        e.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("event missing numeric {k:?}"))
+    };
+
+    let mut named_procs: BTreeSet<u64> = BTreeSet::new();
+    let mut named_threads: BTreeSet<(u64, u64)> = BTreeSet::new();
+    let mut spans: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut instants = 0usize;
+    let mut instant_names: BTreeSet<String> = BTreeSet::new();
+
+    for e in events {
+        let ph = e.get("ph").and_then(|v| v.as_str()).ok_or_else(|| "event missing ph".to_string())?;
+        let pid = num(e, "pid")? as u64;
+        match ph {
+            "M" => {
+                match e.get("name").and_then(|v| v.as_str()).unwrap_or("") {
+                    "process_name" => {
+                        named_procs.insert(pid);
+                    }
+                    "thread_name" => {
+                        named_threads.insert((pid, num(e, "tid")? as u64));
+                    }
+                    _ => {}
+                }
+            }
+            "X" => {
+                let tid = num(e, "tid")? as u64;
+                let ts = num(e, "ts")?;
+                let dur = num(e, "dur")?;
+                if !ts.is_finite() || !dur.is_finite() {
+                    return Err(format!("span has non-finite ts/dur ({ts}, {dur})"));
+                }
+                if dur < 0.0 {
+                    return Err(format!("span has negative duration {dur}"));
+                }
+                spans.entry((pid, tid)).or_default().push((ts, ts + dur));
+            }
+            "i" | "I" => {
+                let ts = num(e, "ts")?;
+                if !ts.is_finite() {
+                    return Err("instant has non-finite ts".to_string());
+                }
+                instants += 1;
+                if let Some(n) = e.get("name").and_then(|v| v.as_str()) {
+                    instant_names.insert(n.to_string());
+                }
+            }
+            other => return Err(format!("unexpected event phase {other:?}")),
+        }
+    }
+
+    let mut span_count = 0usize;
+    for ((pid, tid), mut sp) in spans {
+        if !named_procs.contains(&pid) {
+            return Err(format!("spans on pid {pid} but no process_name metadata"));
+        }
+        if !named_threads.contains(&(pid, tid)) {
+            return Err(format!("spans on pid {pid} tid {tid} but no thread_name metadata"));
+        }
+        sp.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in sp.windows(2) {
+            if w[0].1 > w[1].0 + 1e-6 {
+                return Err(format!(
+                    "pid {pid} tid {tid}: spans overlap ([{:.3},{:.3}] vs [{:.3},{:.3}])",
+                    w[0].0, w[0].1, w[1].0, w[1].1
+                ));
+            }
+        }
+        span_count += sp.len();
+    }
+    Ok(ChromeTraceStats { processes: named_procs.len(), spans: span_count, instants, instant_names })
 }
 
 fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
@@ -129,6 +483,14 @@ pub fn validate_records(graph: &Graph, records: &[OpRecord], makespan_us: f64) -
     for r in records {
         if (r.node as usize) >= graph.len() {
             return Err(format!("record for unknown node {}", r.node));
+        }
+        // Non-finite timestamps must be rejected up front: a NaN start
+        // would sail through every later comparison (all false).
+        if !r.start_us.is_finite() || !r.end_us.is_finite() {
+            return Err(format!(
+                "node {} has non-finite times [{}, {}]",
+                r.node, r.start_us, r.end_us
+            ));
         }
         if !end_of[r.node as usize].is_nan() {
             return Err(format!("node {} executed twice", r.node));
@@ -241,14 +603,180 @@ mod tests {
     }
 
     #[test]
-    fn chrome_json_parses() {
+    fn non_finite_records_rejected() {
+        // A NaN start used to slip through the dependency check because
+        // every NaN comparison is false.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut rs = good_records();
+            rs[1].start_us = bad;
+            let err = validate_records(&chain(), &rs, 3.0).unwrap_err();
+            assert!(err.contains("non-finite"), "{bad}: {err}");
+            let mut rs = good_records();
+            rs[0].end_us = bad;
+            let err = validate_records(&chain(), &rs, 3.0).unwrap_err();
+            assert!(err.contains("non-finite"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn chrome_json_parses_and_validates() {
         let g = chain();
         let t = Trace { records: good_records() };
         let text = t.to_chrome_json(&g);
         let doc = crate::util::json::parse(&text).unwrap();
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
-        assert_eq!(events.len(), 2);
-        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+        let xs: Vec<_> =
+            events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")).collect();
+        assert_eq!(xs.len(), 2);
+        let stats = validate_chrome_trace(&text).unwrap();
+        assert_eq!(stats.processes, 1);
+        assert_eq!(stats.spans, 2);
+    }
+
+    #[test]
+    fn lightweight_tid_sits_above_real_executors() {
+        // Executor id 9999 is real here; the lightweight lane must not
+        // collide with it (it used to be hardcoded to 9999).
+        let g = chain();
+        let t = Trace {
+            records: vec![
+                OpRecord { node: 0, executor: 9999, start_us: 0.0, end_us: 1.0 },
+                OpRecord { node: 1, executor: LIGHTWEIGHT_EXECUTOR, start_us: 1.0, end_us: 2.0 },
+            ],
+        };
+        let text = t.to_chrome_json(&g);
+        let doc = crate::util::json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let tid_of_span = |name: &str| -> u64 {
+            events
+                .iter()
+                .find(|e| {
+                    e.get("ph").unwrap().as_str() == Some("X")
+                        && e.get("name").unwrap().as_str() == Some(name)
+                })
+                .and_then(|e| e.get("tid").unwrap().as_f64())
+                .unwrap() as u64
+        };
+        assert_eq!(tid_of_span("a"), 9999);
+        assert_eq!(tid_of_span("c"), 10000);
+        let lw_meta = events.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("name").unwrap().as_str() == Some("thread_name")
+                && e.get("tid").unwrap().as_f64() == Some(10000.0)
+                && e.get("args").unwrap().get("name").unwrap().as_str() == Some("lightweight")
+        });
+        assert!(lw_meta, "lightweight lane must carry thread_name metadata");
+        validate_chrome_trace(&text).unwrap();
+    }
+
+    #[test]
+    fn ascii_render_handles_tiny_widths() {
+        let g = chain();
+        let t = Trace { records: good_records() };
+        // width 0 used to underflow-panic on `width - 1`
+        let art = t.render_ascii(&g, 0);
+        assert!(art.contains("makespan"));
+        let art = t.render_ascii(&g, 1);
+        assert!(art.contains("e00") && art.contains("e01"));
+    }
+
+    #[test]
+    fn ascii_render_handles_zero_makespan() {
+        // A single zero-duration op: makespan 0 used to produce NaN
+        // column indices.
+        let g = chain();
+        let t = Trace {
+            records: vec![
+                OpRecord { node: 0, executor: 0, start_us: 0.0, end_us: 0.0 },
+                OpRecord { node: 1, executor: 0, start_us: 0.0, end_us: 0.0 },
+            ],
+        };
+        let art = t.render_ascii(&g, 10);
+        assert!(art.contains("e00"));
+        assert!(art.contains("makespan"));
+    }
+
+    #[test]
+    fn session_export_validates_with_metadata_and_instants() {
+        let g = chain();
+        let levels = [2.0, 1.0];
+        let recs = good_records();
+        let sessions = [
+            SessionTraceExport {
+                label: "session 1 (chain)".to_string(),
+                graph: &g,
+                levels: Some(&levels),
+                records: &recs,
+                start_us: 0.0,
+                end_us: 3.0,
+                outcome: "done".to_string(),
+            },
+            SessionTraceExport {
+                label: "session 2 (chain)".to_string(),
+                graph: &g,
+                levels: None,
+                records: &recs,
+                start_us: 5.0,
+                end_us: 8.0,
+                outcome: "failed".to_string(),
+            },
+        ];
+        let fleet_events = [
+            FleetEvent {
+                t_us: 0.5,
+                executor: 0,
+                kind: FleetEventKind::Steal { session: 2, cross_domain: true },
+            },
+            FleetEvent { t_us: 1.5, executor: 1, kind: FleetEventKind::Park },
+            FleetEvent {
+                t_us: 2.0,
+                executor: FLEET_LANE,
+                kind: FleetEventKind::ModeSwitch {
+                    from: DispatchMode::Centralized,
+                    to: DispatchMode::Decentralized,
+                },
+            },
+        ];
+        let text = export_chrome_trace(&sessions, &fleet_events, 2);
+        let stats = validate_chrome_trace(&text).unwrap();
+        assert_eq!(stats.processes, 3, "fleet + two sessions");
+        assert_eq!(stats.spans, 4);
+        for name in ["steal", "park", "mode_switch", "admitted", "started", "done", "failed"] {
+            assert!(stats.instant_names.contains(name), "missing instant {name:?}");
+        }
+        // level rides along in span args when levels are provided
+        let doc = crate::util::json::parse(&text).unwrap();
+        let has_level = doc.get("traceEvents").unwrap().as_arr().unwrap().iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("X")
+                && e.get("args").and_then(|a| a.get("level")).is_some()
+        });
+        assert!(has_level);
+    }
+
+    #[test]
+    fn validator_rejects_overlap_and_missing_metadata() {
+        let mut b = ChromeTraceBuilder::new();
+        b.process_name(1, "p");
+        b.thread_name(1, 0, "t");
+        b.span(1, 0, 0.0, 2.0, "a", "k", Json::obj());
+        b.span(1, 0, 1.0, 2.0, "b", "k", Json::obj());
+        assert!(validate_chrome_trace(&b.finish()).unwrap_err().contains("overlap"));
+
+        let mut b = ChromeTraceBuilder::new();
+        b.span(1, 0, 0.0, 1.0, "a", "k", Json::obj());
+        assert!(validate_chrome_trace(&b.finish()).unwrap_err().contains("process_name"));
+
+        let mut b = ChromeTraceBuilder::new();
+        b.process_name(1, "p");
+        b.span(1, 0, 0.0, 1.0, "a", "k", Json::obj());
+        assert!(validate_chrome_trace(&b.finish()).unwrap_err().contains("thread_name"));
+
+        let mut b = ChromeTraceBuilder::new();
+        b.process_name(1, "p");
+        b.thread_name(1, 0, "t");
+        b.span(1, 0, 0.0, f64::NAN, "a", "k", Json::obj());
+        // NaN serializes as null, which fails the numeric-field check
+        assert!(validate_chrome_trace(&b.finish()).is_err());
     }
 
     #[test]

@@ -139,7 +139,7 @@ use crate::engine::ready::{
 };
 use crate::engine::ring::SpscRing;
 use crate::engine::scheduler::IdleBitmap;
-use crate::engine::trace::OpRecord;
+use crate::engine::trace::{FleetEvent, FleetEventKind, OpRecord, FLEET_LANE};
 use crate::engine::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
 use crate::engine::DispatchMode;
 use crate::graph::{AtomicDepTracker, Graph, NodeId};
@@ -148,6 +148,11 @@ use crate::graph::{AtomicDepTracker, Graph, NodeId};
 /// purely a backstop; producers wake parked threads through the
 /// eventcount (see [`crate::engine::backoff`]).
 const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+
+/// Per-lane bound on recorded scheduling events: a long serve run keeps
+/// its most recent telemetry in the ring instead, so the trace sink can
+/// stay bounded (overflow is counted and warned about at drain time).
+const EVENT_SINK_CAP: usize = 1 << 16;
 
 /// Hard cap on in-flight sessions: the packed key's slot field is 8 bits.
 pub const MAX_SESSIONS: usize = 256;
@@ -187,6 +192,11 @@ pub struct FleetConfig {
     /// comfortably exceed the longest single op: the watchdog cannot
     /// distinguish a slow op from a hung one.
     pub watchdog: Option<Duration>,
+    /// Record scheduling events (steals, parks) into per-executor sinks
+    /// for the Chrome-trace exporter ([`Fleet::drain_events`]). Off by
+    /// default: when disabled the sinks are not even allocated and the
+    /// hot paths only test an empty-`Vec` flag.
+    pub record_events: bool,
 }
 
 impl FleetConfig {
@@ -199,6 +209,7 @@ impl FleetConfig {
             max_sessions: 32,
             deque_capacity: 1 << 15,
             watchdog: None,
+            record_events: false,
         }
     }
 
@@ -209,6 +220,11 @@ impl FleetConfig {
 
     pub fn with_watchdog(mut self, stall_after: Duration) -> FleetConfig {
         self.watchdog = Some(stall_after);
+        self
+    }
+
+    pub fn with_event_recording(mut self, on: bool) -> FleetConfig {
+        self.record_events = on;
         self
     }
 }
@@ -366,6 +382,12 @@ impl SessionWork<'_> {
 /// so two sessions never contend on anything but the deques themselves.
 struct SessionState<'env> {
     slot: u8,
+    /// Monotone fleet-wide submission sequence number (1-based); names
+    /// the session in exported traces and steal events.
+    seq: u64,
+    /// Submit instant as µs since the fleet epoch ([`FleetShared::t0`]),
+    /// re-basing this session's records onto the shared timeline.
+    submitted_at_us: f64,
     graph: &'env Graph,
     levels: Arc<[f64]>,
     work: SessionWork<'env>,
@@ -432,6 +454,16 @@ struct FleetShared<'env> {
     next_seq: AtomicU64,
     active_sessions: AtomicUsize,
     counters: Counters,
+    /// Fleet epoch: [`FleetEvent`] timestamps and session submit offsets
+    /// share this clock, so one exported timeline lines everything up.
+    t0: Instant,
+    /// Per-lane event sinks for the Chrome-trace exporter: one per
+    /// executor plus one scheduler/fleet lane, each locked only by its
+    /// owning thread until [`Fleet::drain_events`] collects them. Empty
+    /// (never allocated) unless [`FleetConfig::record_events`] is set.
+    event_sinks: Vec<Mutex<Vec<FleetEvent>>>,
+    /// Events dropped because a sink hit [`EVENT_SINK_CAP`].
+    events_dropped: AtomicU64,
     // watchdog telemetry (one cell per executor)
     /// Last packed key each executor acquired (`u64::MAX` = none yet).
     last_key: Vec<AtomicU64>,
@@ -470,6 +502,13 @@ impl<'env> FleetShared<'env> {
             next_seq: AtomicU64::new(0),
             active_sessions: AtomicUsize::new(0),
             counters: Counters::default(),
+            t0: Instant::now(),
+            event_sinks: if config.record_events {
+                (0..=n).map(|_| Mutex::new(Vec::new())).collect()
+            } else {
+                Vec::new()
+            },
+            events_dropped: AtomicU64::new(0),
             last_key: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
             busy: (0..n).map(|_| AtomicBool::new(false)).collect(),
             parked: (0..n).map(|_| AtomicBool::new(false)).collect(),
@@ -492,6 +531,30 @@ impl<'env> FleetShared<'env> {
             entries_discarded: self.counters.entries_discarded.load(Ordering::SeqCst),
             executor_threads: self.counters.executor_threads.load(Ordering::SeqCst) as u64,
         }
+    }
+
+    /// Microseconds since the fleet epoch.
+    fn now_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record a scheduling event into lane `lane` (executor index, or
+    /// `self.executors` for the scheduler/fleet lane). Lock-light: each
+    /// lane's mutex is uncontended — only its owning thread pushes, and
+    /// the one cross-thread toucher is the final [`Fleet::drain_events`].
+    /// No-op (one branch on an empty `Vec`) when recording is off.
+    fn record_event(&self, lane: usize, kind: FleetEventKind) {
+        if self.event_sinks.is_empty() {
+            return;
+        }
+        let t_us = self.now_us();
+        let mut sink = self.event_sinks[lane].lock().unwrap();
+        if sink.len() >= EVENT_SINK_CAP {
+            self.events_dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let executor = if lane == self.executors { FLEET_LANE } else { lane as u32 };
+        sink.push(FleetEvent { t_us, executor, kind });
     }
 
     /// Monotone progress stamp for the watchdog: any dispatch, discard,
@@ -697,6 +760,13 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                         shared.counters.cross_domain_steals.fetch_add(1, Ordering::Relaxed);
                         session.cross_domain_steals.fetch_add(1, Ordering::Relaxed);
                     }
+                    shared.record_event(
+                        e,
+                        FleetEventKind::Steal {
+                            session: session.seq,
+                            cross_domain: kind == Acquire::StealCrossDomain,
+                        },
+                    );
                 }
                 let start = session.t0.elapsed().as_secs_f64() * 1e6;
                 shared.busy[e].store(true, Ordering::Relaxed);
@@ -776,6 +846,7 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                         shared.parked[e].store(true, Ordering::Relaxed);
                         if shared.events.park(observed, PARK_TIMEOUT) {
                             shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                            shared.record_event(e, FleetEventKind::Park);
                         }
                         shared.parked[e].store(false, Ordering::Relaxed);
                     }
@@ -859,6 +930,7 @@ fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
                     shared.parked[e].store(true, Ordering::Relaxed);
                     if shared.events.park(observed, PARK_TIMEOUT) {
                         shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                        shared.record_event(e, FleetEventKind::Park);
                     }
                     shared.parked[e].store(false, Ordering::Relaxed);
                 }
@@ -1031,6 +1103,7 @@ fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
                 let observed = prepared.expect("park stage registers before polling");
                 if shared.sched_events.park(observed, PARK_TIMEOUT) {
                     shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+                    shared.record_event(shared.executors, FleetEventKind::Park);
                 }
             }
         }
@@ -1186,6 +1259,28 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         self.shared.totals_snapshot()
     }
 
+    /// Microseconds since the fleet epoch — the clock [`FleetEvent`]
+    /// timestamps and [`SessionReport::submitted_at_us`] are measured on.
+    pub fn now_us(&self) -> f64 {
+        self.shared.now_us()
+    }
+
+    /// Collect every recorded scheduling event, sorted by time. Empty
+    /// unless [`FleetConfig::record_events`] was set. Call after the last
+    /// session of interest has quiesced; events recorded later are lost.
+    pub fn drain_events(&self) -> Vec<FleetEvent> {
+        let dropped = self.shared.events_dropped.swap(0, Ordering::Relaxed);
+        if dropped > 0 {
+            crate::log_warn!("fleet event sink overflowed: {dropped} event(s) dropped");
+        }
+        let mut out = Vec::new();
+        for sink in &self.shared.event_sinks {
+            out.append(&mut sink.lock().unwrap());
+        }
+        out.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
+        out
+    }
+
     /// Submit a graph execution. Blocks only if every session slot is
     /// taken (bound memory with a [`SessionQueue`] *before* submitting).
     /// `work(node)` runs on some executor thread for each op,
@@ -1254,9 +1349,12 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         };
         let seq = shared.next_seq.fetch_add(1, Ordering::Relaxed) + 1;
         let sources = graph.sources();
+        let submitted_at_us = shared.now_us();
         let t0 = Instant::now();
         let state = Arc::new(SessionState {
             slot,
+            seq,
+            submitted_at_us,
             graph,
             levels,
             work,
@@ -1378,6 +1476,11 @@ pub struct SessionHandle<'env> {
 /// What a finished session reports back.
 #[derive(Debug)]
 pub struct SessionReport {
+    /// Fleet-wide submission sequence number (1-based).
+    pub seq: u64,
+    /// Submit instant as µs since the fleet epoch, placing this session's
+    /// (submit-relative) records on the fleet's shared timeline.
+    pub submitted_at_us: f64,
     /// Submit-to-quiescence wall time, µs.
     pub wall_us: f64,
     /// Per-op records (µs since submit), sorted by start time.
@@ -1395,6 +1498,18 @@ impl<'env> SessionHandle<'env> {
     /// cancelled, or deadline-missed? (Non-blocking.)
     pub fn is_done(&self) -> bool {
         self.state.outcome.lock().unwrap().is_some()
+    }
+
+    /// Fleet-wide submission sequence number (1-based).
+    pub fn seq(&self) -> u64 {
+        self.state.seq
+    }
+
+    /// Submit instant as µs since the fleet epoch (available before
+    /// [`wait`](Self::wait), e.g. to timestamp a failed session's
+    /// lifecycle in an exported trace).
+    pub fn submitted_at_us(&self) -> f64 {
+        self.state.submitted_at_us
     }
 
     /// Request cooperative cancellation. The next of this session's
@@ -1433,6 +1548,8 @@ impl<'env> SessionHandle<'env> {
         }
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         Ok(SessionReport {
+            seq: self.state.seq,
+            submitted_at_us: self.state.submitted_at_us,
             wall_us,
             records,
             dispatches: self.state.dispatches.load(Ordering::SeqCst),

@@ -19,11 +19,15 @@
 //!   end-to-end training example and as proof the engine is not sim-only
 //! * [`serve`]     — the closed-loop multi-model serving driver behind
 //!   `graphi serve` (mixed request generator, throughput + latency report)
+//! * [`telemetry`] — serve-mode observability: the bounded ring of recent
+//!   session samples and the periodic aggregate snapshots printed by
+//!   `graphi serve --telemetry-every-ms`
 
 pub mod artifacts;
 pub mod fleet;
 pub mod pjrt;
 pub mod serve;
+pub mod telemetry;
 pub mod threaded;
 pub mod train;
 
@@ -37,5 +41,6 @@ pub use fleet::{
 };
 pub use pjrt::{LoadedModule, PjrtRuntime};
 pub use serve::{serve, ServeConfig, ServeReport};
+pub use telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 pub use threaded::{ThreadedGraphi, UnsupportedPolicy};
 pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

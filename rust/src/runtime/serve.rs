@@ -14,15 +14,23 @@
 //! counter totals, and the per-session counter sums — the latter so the
 //! metric partition (Σ per-session ≤ fleet totals) stays observable from
 //! the CLI, not just from the differential tests.
+//!
+//! Two observability taps ride on the loop (both off by default):
+//! [`ServeConfig::trace_path`] collects every session's op records plus
+//! the fleet's steal/park events and writes one Chrome/Perfetto trace
+//! with a pid per session, and [`ServeConfig::telemetry_every_ms`] prints
+//! periodic aggregate snapshots from a bounded [`TelemetryRing`].
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::engine::trace::{export_chrome_trace, OpRecord, SessionTraceExport};
 use crate::engine::DispatchMode;
 use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
 use crate::models::{self, ModelKind, ModelSize};
 use crate::runtime::fleet::{Fleet, FleetConfig, FleetTotals, SessionError, SessionQueue};
+use crate::runtime::telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::testkit::FaultPlan;
@@ -59,6 +67,15 @@ pub struct ServeConfig {
     /// [`SessionError::DeadlineExceeded`]; admission waits are bounded by
     /// the same patience and time-outs are **shed** (counted, not run).
     pub deadline_us: Option<u64>,
+    /// Write a per-session Chrome/Perfetto trace of the whole run here
+    /// (turns on fleet event recording and session record collection).
+    pub trace_path: Option<String>,
+    /// Print one aggregate telemetry line every this-many milliseconds
+    /// while the run is live. The final snapshot is collected either way.
+    pub telemetry_every_ms: Option<u64>,
+    /// Capacity of the bounded ring of recent session samples that
+    /// telemetry snapshots aggregate over.
+    pub telemetry_ring: usize,
     pub seed: u64,
 }
 
@@ -83,6 +100,9 @@ impl Default for ServeConfig {
             op_spin_us: 0.0,
             fault_rate: 0.0,
             deadline_us: None,
+            trace_path: None,
+            telemetry_every_ms: None,
+            telemetry_ring: 1024,
             seed: 42,
         }
     }
@@ -123,6 +143,10 @@ pub struct ServeReport {
     /// Latency summaries split by outcome class (`ok` / `failed` /
     /// `cancelled` / `deadline`); only classes with ≥1 sample appear.
     pub latency_by_class: Vec<(String, Summary)>,
+    /// Telemetry snapshots collected over the run: one per
+    /// [`ServeConfig::telemetry_every_ms`] interval plus always one final
+    /// snapshot, so this is never empty.
+    pub snapshots: Vec<TelemetrySnapshot>,
 }
 
 impl ServeReport {
@@ -179,6 +203,9 @@ impl ServeReport {
                 crate::util::fmt_us(s.p99),
             );
         }
+        if let Some(snap) = self.snapshots.last() {
+            let _ = writeln!(out, "{}", snap.render_line());
+        }
         out
     }
 }
@@ -189,6 +216,18 @@ struct ZooEntry {
     levels: Arc<[f64]>,
     peak_bytes: u64,
     weight: f64,
+}
+
+/// Everything the Chrome-trace exporter needs about one finished session.
+/// Failed/cancelled sessions appear with empty records (the fleet drops
+/// their partial trace) but keep their lifecycle instants.
+struct CollectedSession {
+    zoo: usize,
+    seq: u64,
+    submit_us: f64,
+    end_us: f64,
+    outcome: String,
+    records: Vec<OpRecord>,
 }
 
 /// Run one closed-loop serve experiment; see the module docs.
@@ -242,6 +281,15 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     let max_in_flight = AtomicUsize::new(0);
     let admission_blocked = AtomicU64::new(0);
     let shed = AtomicU64::new(0);
+    let ring = TelemetryRing::new(cfg.telemetry_ring);
+    let snapshots: Mutex<Vec<TelemetrySnapshot>> = Mutex::new(Vec::new());
+    let collect_trace = cfg.trace_path.is_some();
+    let collected: Mutex<Vec<CollectedSession>> = Mutex::new(Vec::new());
+    // clients still running; the telemetry monitor exits when this hits 0
+    let active_clients = AtomicUsize::new(cfg.clients);
+    // ring sample class per by_class index (the report's CLASSES order)
+    const CLASS_OUTCOMES: [OutcomeClass; 4] =
+        [OutcomeClass::Ok, OutcomeClass::Failed, OutcomeClass::Cancelled, OutcomeClass::Deadline];
     let deadline = cfg.deadline_us.map(Duration::from_micros);
     // delay faults sleep long enough to trip a tight deadline (2×, capped
     // at 50ms so generous deadlines don't stall the run); without a
@@ -259,12 +307,13 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     let work_ref: &(dyn Fn(NodeId) + Send + Sync) = &work;
 
     let t_start = Instant::now();
-    let totals = std::thread::scope(|scope| {
+    let (totals, fleet_events) = std::thread::scope(|scope| {
         let fleet = Fleet::new(
             scope,
             FleetConfig {
                 dispatch: cfg.dispatch,
                 max_sessions: cfg.max_sessions,
+                record_events: collect_trace,
                 ..FleetConfig::new(cfg.executors)
             },
         );
@@ -286,9 +335,13 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 let admission_blocked = &admission_blocked;
                 let shed = &shed;
                 let by_class = &by_class;
+                let ring = &ring;
+                let collected = &collected;
+                let active_clients = &active_clients;
                 clients.spawn(move || loop {
                     let i = next_request.fetch_add(1, Ordering::Relaxed);
                     if i >= cfg.requests {
+                        active_clients.fetch_sub(1, Ordering::SeqCst);
                         return;
                     }
                     // weighted model pick
@@ -319,6 +372,12 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                                     Some(p) => p,
                                     None => {
                                         shed.fetch_add(1, Ordering::Relaxed);
+                                        ring.push(SessionSample {
+                                            t_us: fleet_ref.now_us(),
+                                            latency_us: t0.elapsed().as_secs_f64() * 1e6,
+                                            class: OutcomeClass::Shed,
+                                            model: pick as u8,
+                                        });
                                         continue;
                                     }
                                 },
@@ -346,6 +405,9 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                         std::thread::sleep(Duration::from_micros(after_us as u64));
                         handle.cancel();
                     }
+                    // wait() consumes the handle — grab the trace identity first
+                    let seq = handle.seq();
+                    let submit_us = handle.submitted_at_us();
                     let outcome = handle.wait();
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     drop(permit);
@@ -358,6 +420,35 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                         Err(_) => 1,
                     };
                     by_class[class].lock().unwrap().push(lat);
+                    ring.push(SessionSample {
+                        t_us: fleet_ref.now_us(),
+                        latency_us: lat,
+                        class: CLASS_OUTCOMES[class],
+                        model: pick as u8,
+                    });
+                    if collect_trace {
+                        let (cause, end_us, records) = match &outcome {
+                            Ok(r) => ("done", submit_us + r.wall_us, r.records.clone()),
+                            Err(SessionError::Cancelled) => {
+                                ("cancelled", fleet_ref.now_us(), Vec::new())
+                            }
+                            Err(SessionError::DeadlineExceeded) => {
+                                ("deadline", fleet_ref.now_us(), Vec::new())
+                            }
+                            Err(SessionError::Stalled) => ("stalled", fleet_ref.now_us(), Vec::new()),
+                            Err(SessionError::OpPanicked { .. }) => {
+                                ("failed", fleet_ref.now_us(), Vec::new())
+                            }
+                        };
+                        collected.lock().unwrap().push(CollectedSession {
+                            zoo: pick,
+                            seq,
+                            submit_us,
+                            end_us,
+                            outcome: cause.to_string(),
+                            records,
+                        });
+                    }
                     if let Ok(report) = outcome {
                         completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
                         session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
@@ -365,15 +456,82 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                     }
                 });
             }
+            if let Some(every_ms) = cfg.telemetry_every_ms {
+                let ring = &ring;
+                let snapshots = &snapshots;
+                let active_clients = &active_clients;
+                let queue = &queue;
+                let in_flight = &in_flight;
+                clients.spawn(move || {
+                    let mut prev: Option<TelemetrySnapshot> = None;
+                    loop {
+                        // sleep in short slices so the monitor notices the
+                        // run ending instead of overshooting by an interval
+                        let mut slept_ms = 0u64;
+                        while slept_ms < every_ms && active_clients.load(Ordering::SeqCst) > 0 {
+                            let slice = (every_ms - slept_ms).min(20);
+                            std::thread::sleep(Duration::from_millis(slice));
+                            slept_ms += slice;
+                        }
+                        if active_clients.load(Ordering::SeqCst) == 0 {
+                            return;
+                        }
+                        let snap = ring.snapshot(
+                            fleet_ref.now_us(),
+                            fleet_ref.totals(),
+                            queue.waiting(),
+                            in_flight.load(Ordering::SeqCst),
+                            prev.as_ref(),
+                        );
+                        println!("{}", snap.render_line());
+                        snapshots.lock().unwrap().push(snap.clone());
+                        prev = Some(snap);
+                    }
+                });
+            }
         });
+        // final snapshot: every run reports at least one, interval or not
+        {
+            let prev = snapshots.lock().unwrap().last().cloned();
+            let snap =
+                ring.snapshot(fleet.now_us(), fleet.totals(), queue.waiting(), 0, prev.as_ref());
+            snapshots.lock().unwrap().push(snap);
+        }
+        let fleet_events = fleet.drain_events();
         // a faulty run reports its failures through the per-class counts;
         // the shutdown error carries the same totals snapshot
-        match fleet.shutdown() {
+        let totals = match fleet.shutdown() {
             Ok(t) => t,
             Err(e) => e.totals,
-        }
+        };
+        (totals, fleet_events)
     });
     let wall_s = t_start.elapsed().as_secs_f64();
+
+    if let Some(path) = &cfg.trace_path {
+        let mut sessions = collected.into_inner().unwrap();
+        sessions.sort_by_key(|s| s.seq);
+        let exports: Vec<SessionTraceExport<'_>> = sessions
+            .iter()
+            .map(|c| SessionTraceExport {
+                label: format!("session {} ({})", c.seq, zoo[c.zoo].tag),
+                graph: &zoo[c.zoo].graph,
+                levels: Some(&zoo[c.zoo].levels[..]),
+                records: &c.records,
+                start_us: c.submit_us,
+                end_us: c.end_us,
+                outcome: c.outcome.clone(),
+            })
+            .collect();
+        let text = export_chrome_trace(&exports, &fleet_events, cfg.executors);
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        std::fs::write(path, text)
+            .unwrap_or_else(|e| panic!("failed to write serve trace to {path}: {e}"));
+    }
 
     let latencies = latencies.into_inner().unwrap();
     let class_samples: Vec<Vec<f64>> =
@@ -406,9 +564,9 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         latency_by_class: CLASSES
             .iter()
             .zip(&class_samples)
-            .filter(|(_, s)| !s.is_empty())
-            .map(|(c, s)| (c.to_string(), Summary::from_samples(s)))
+            .filter_map(|(c, s)| Summary::from_samples_opt(s).map(|sum| (c.to_string(), sum)))
             .collect(),
+        snapshots: snapshots.into_inner().unwrap(),
     }
 }
 
@@ -529,5 +687,59 @@ mod tests {
         let counts: Vec<u64> = report.per_model.iter().map(|(_, n, _)| *n).collect();
         assert_eq!(counts.iter().sum::<u64>(), 24);
         assert!(counts.iter().all(|&n| n > 0), "both mix entries must be exercised: {counts:?}");
+    }
+
+    #[test]
+    fn degenerate_runs_keep_latency_summaries_finite() {
+        // a single request: one sample per summary, every percentile finite
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 1,
+            requests: 1,
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            telemetry_ring: 4,
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 1);
+        assert!(report.latency_us.p50.is_finite() && report.latency_us.p99.is_finite());
+        assert_eq!(report.latency_by_class.len(), 1, "only the ok class has samples");
+        for (class, s) in &report.latency_by_class {
+            assert_eq!(s.n, 1, "{class}");
+            assert!(s.p50.is_finite() && s.p99.is_finite(), "{class}");
+            assert_eq!(s.p50, s.p99, "single sample: every percentile is it");
+        }
+        // the final telemetry snapshot is always present and finite
+        let snap = report.snapshots.last().expect("final snapshot");
+        assert_eq!(snap.total_sessions, 1);
+        assert!(snap.rps.is_finite() && snap.steal_rate.is_finite());
+        for (class, s) in &snap.per_class {
+            assert!(s.p50.is_finite() && s.p99.is_finite(), "{}", class.name());
+        }
+        let text = report.render();
+        assert!(text.contains("telemetry"), "{text}");
+    }
+
+    #[test]
+    fn trace_export_covers_every_session_and_validates() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-serve-trace-{}.json", std::process::id()));
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 2,
+            requests: 8,
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            trace_path: Some(path.to_string_lossy().into_owned()),
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 8);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let stats = crate::engine::validate_chrome_trace(&text).unwrap();
+        assert_eq!(stats.processes, 1 + 8, "the fleet plus one process per session");
+        assert!(stats.spans > 0);
+        assert!(stats.instant_names.contains("admitted"), "{:?}", stats.instant_names);
+        assert!(stats.instant_names.contains("done"), "{:?}", stats.instant_names);
     }
 }

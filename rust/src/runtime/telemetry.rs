@@ -1,0 +1,356 @@
+//! Serve-mode continuous telemetry: a bounded ring of recent session
+//! records plus periodic aggregate snapshots.
+//!
+//! Long serve runs cannot keep every session record (a full Chrome trace
+//! of a million-request run would grow without bound), so observability
+//! splits in two:
+//!
+//! - **The ring** ([`TelemetryRing`]) keeps the most recent
+//!   [`SessionSample`]s — one small fixed-size struct per finished request
+//!   (completion time, latency, outcome class, model index) — in a
+//!   fixed-capacity circular buffer. New samples overwrite the oldest once
+//!   the ring is full; a lifetime counter keeps totals exact even after
+//!   overwrites. Memory is `capacity × sizeof(SessionSample)`, independent
+//!   of run length.
+//! - **Snapshots** ([`TelemetrySnapshot`]) are cheap aggregates computed
+//!   from the ring plus the fleet's monotone counters at a sampling
+//!   instant: requests/s, p50/p99 latency per outcome class (over the ring
+//!   window), queue depth, in-flight count, and steal/park rates (from
+//!   counter deltas against the previous snapshot). `graphi serve
+//!   --telemetry-every-ms N` prints one line per interval and the final
+//!   report carries the collected snapshots (dumpable as JSON).
+//!
+//! The ring is a single mutex over a flat `Vec` — pushes happen once per
+//! *session* (not per op), so at serving rates where lock contention here
+//! would matter, the fleet's admission queue saturates first.
+
+use std::sync::Mutex;
+
+use crate::runtime::fleet::FleetTotals;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Terminal class of a served request, including admission sheds (which
+/// never become fleet sessions but still burn client-visible latency).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutcomeClass {
+    Ok,
+    Failed,
+    Cancelled,
+    Deadline,
+    Shed,
+}
+
+impl OutcomeClass {
+    pub const ALL: [OutcomeClass; 5] = [
+        OutcomeClass::Ok,
+        OutcomeClass::Failed,
+        OutcomeClass::Cancelled,
+        OutcomeClass::Deadline,
+        OutcomeClass::Shed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OutcomeClass::Ok => "ok",
+            OutcomeClass::Failed => "failed",
+            OutcomeClass::Cancelled => "cancelled",
+            OutcomeClass::Deadline => "deadline",
+            OutcomeClass::Shed => "shed",
+        }
+    }
+}
+
+/// One finished request, as the ring remembers it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionSample {
+    /// Completion instant, µs on the serve run's clock (the fleet epoch).
+    pub t_us: f64,
+    /// Client-observed latency (admission wait + execution), µs.
+    pub latency_us: f64,
+    pub class: OutcomeClass,
+    /// Index into the serve run's model zoo.
+    pub model: u8,
+}
+
+#[derive(Debug, Default)]
+struct RingState {
+    buf: Vec<SessionSample>,
+    /// Next overwrite position once `buf` is at capacity.
+    next: usize,
+    /// Lifetime samples pushed (≥ `buf.len()`).
+    total: u64,
+}
+
+/// Bounded in-memory ring of recent session samples. See the module docs
+/// for the design.
+#[derive(Debug)]
+pub struct TelemetryRing {
+    cap: usize,
+    state: Mutex<RingState>,
+}
+
+impl TelemetryRing {
+    pub fn new(capacity: usize) -> TelemetryRing {
+        let cap = capacity.max(1);
+        TelemetryRing {
+            cap,
+            state: Mutex::new(RingState { buf: Vec::with_capacity(cap), next: 0, total: 0 }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one finished request, overwriting the oldest sample when
+    /// the ring is full.
+    pub fn push(&self, sample: SessionSample) {
+        let mut s = self.state.lock().unwrap();
+        if s.buf.len() < self.cap {
+            s.buf.push(sample);
+        } else {
+            let at = s.next;
+            s.buf[at] = sample;
+            s.next = (at + 1) % self.cap;
+        }
+        s.total += 1;
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime samples pushed, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.state.lock().unwrap().total
+    }
+
+    /// Copy of the ring's current contents (unordered).
+    pub fn samples(&self) -> Vec<SessionSample> {
+        self.state.lock().unwrap().buf.clone()
+    }
+
+    /// Aggregate the ring and the fleet counters into a snapshot at
+    /// `now_us`. `prev` (the previous snapshot, if any) turns monotone
+    /// counters into interval rates; without it, rates are lifetime
+    /// averages over `[0, now_us]`.
+    pub fn snapshot(
+        &self,
+        now_us: f64,
+        totals: FleetTotals,
+        queue_waiting: u64,
+        in_flight: usize,
+        prev: Option<&TelemetrySnapshot>,
+    ) -> TelemetrySnapshot {
+        let (samples, total) = {
+            let s = self.state.lock().unwrap();
+            (s.buf.clone(), s.total)
+        };
+        // interval basis: since the previous snapshot, or since t=0
+        let (t_base, total_base, steals_base, parks_base) = match prev {
+            Some(p) => (p.t_us, p.total_sessions, p.totals.steals, p.totals.parks),
+            None => (0.0, 0, 0, 0),
+        };
+        let dt_s = ((now_us - t_base) / 1e6).max(1e-9);
+        let rps = (total.saturating_sub(total_base)) as f64 / dt_s;
+        let steal_rate = (totals.steals.saturating_sub(steals_base)) as f64 / dt_s;
+        let park_rate = (totals.parks.saturating_sub(parks_base)) as f64 / dt_s;
+        let mut per_class = Vec::new();
+        for class in OutcomeClass::ALL {
+            let lat: Vec<f64> =
+                samples.iter().filter(|s| s.class == class).map(|s| s.latency_us).collect();
+            if let Some(summary) = Summary::from_samples_opt(&lat) {
+                per_class.push((class, summary));
+            }
+        }
+        TelemetrySnapshot {
+            t_us: now_us,
+            window_n: samples.len(),
+            total_sessions: total,
+            rps,
+            per_class,
+            queue_waiting,
+            in_flight,
+            steal_rate,
+            park_rate,
+            totals,
+        }
+    }
+}
+
+/// Aggregate view of the serve run at one instant. Latency percentiles
+/// cover the ring's window (recent sessions); rates cover the interval
+/// since the previous snapshot.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    /// Snapshot instant, µs on the serve run's clock.
+    pub t_us: f64,
+    /// Samples in the ring window.
+    pub window_n: usize,
+    /// Lifetime finished requests.
+    pub total_sessions: u64,
+    /// Finished requests per second over the interval.
+    pub rps: f64,
+    /// Ring-window latency summary per outcome class (classes with ≥ 1
+    /// sample only, so every percentile is finite by construction).
+    pub per_class: Vec<(OutcomeClass, Summary)>,
+    /// Requests waiting in the admission queue right now.
+    pub queue_waiting: u64,
+    /// Requests admitted but not yet finished.
+    pub in_flight: usize,
+    /// Steals per second over the interval.
+    pub steal_rate: f64,
+    /// Parks per second over the interval.
+    pub park_rate: f64,
+    /// Raw fleet counter snapshot (the next snapshot's delta basis).
+    pub totals: FleetTotals,
+}
+
+impl TelemetrySnapshot {
+    /// One compact human line, the `--telemetry-every-ms` output format.
+    pub fn render_line(&self) -> String {
+        let mut line = format!(
+            "telemetry t={:7.2}s done={} rps={:7.1} q={} inflight={} steal/s={:.0} park/s={:.0}",
+            self.t_us / 1e6,
+            self.total_sessions,
+            self.rps,
+            self.queue_waiting,
+            self.in_flight,
+            self.steal_rate,
+            self.park_rate,
+        );
+        for (class, s) in &self.per_class {
+            line.push_str(&format!(
+                " {}[n={} p50={} p99={}]",
+                class.name(),
+                s.n,
+                crate::util::fmt_us(s.p50),
+                crate::util::fmt_us(s.p99),
+            ));
+        }
+        line
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("t_s", self.t_us / 1e6)
+            .set("window_n", self.window_n)
+            .set("total_sessions", self.total_sessions)
+            .set("rps", self.rps)
+            .set("queue_waiting", self.queue_waiting)
+            .set("in_flight", self.in_flight)
+            .set("steal_rate", self.steal_rate)
+            .set("park_rate", self.park_rate);
+        let mut classes = Json::obj();
+        for (class, s) in &self.per_class {
+            let mut c = Json::obj();
+            c.set("n", s.n)
+                .set("mean_us", s.mean)
+                .set("p50_us", s.p50)
+                .set("p90_us", s.p90)
+                .set("p99_us", s.p99)
+                .set("max_us", s.max);
+            classes.set(class.name(), c);
+        }
+        doc.set("latency_by_class", classes);
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_us: f64, latency_us: f64, class: OutcomeClass) -> SessionSample {
+        SessionSample { t_us, latency_us, class, model: 0 }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_lifetime_total() {
+        let ring = TelemetryRing::new(4);
+        for i in 0..10 {
+            ring.push(sample(i as f64, 100.0 + i as f64, OutcomeClass::Ok));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.total(), 10);
+        // the survivors are the last 4 pushed
+        let mut latencies: Vec<f64> = ring.samples().iter().map(|s| s.latency_us).collect();
+        latencies.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(latencies, vec![106.0, 107.0, 108.0, 109.0]);
+    }
+
+    #[test]
+    fn snapshot_of_empty_ring_is_finite() {
+        let ring = TelemetryRing::new(8);
+        let snap = ring.snapshot(1_000_000.0, FleetTotals::default(), 0, 0, None);
+        assert_eq!(snap.window_n, 0);
+        assert_eq!(snap.total_sessions, 0);
+        assert_eq!(snap.rps, 0.0);
+        assert!(snap.per_class.is_empty(), "no class summaries without samples");
+        assert!(snap.steal_rate.is_finite() && snap.park_rate.is_finite());
+        let line = snap.render_line();
+        assert!(line.contains("rps"));
+    }
+
+    #[test]
+    fn snapshot_aggregates_per_class_with_finite_percentiles() {
+        let ring = TelemetryRing::new(64);
+        // one class with a single sample, one with identical samples
+        ring.push(sample(10.0, 500.0, OutcomeClass::Failed));
+        for i in 0..10 {
+            ring.push(sample(20.0 + i as f64, 250.0, OutcomeClass::Ok));
+        }
+        let snap = ring.snapshot(2_000_000.0, FleetTotals::default(), 3, 2, None);
+        assert_eq!(snap.window_n, 11);
+        assert_eq!(snap.queue_waiting, 3);
+        assert_eq!(snap.in_flight, 2);
+        let ok = snap.per_class.iter().find(|(c, _)| *c == OutcomeClass::Ok).unwrap();
+        assert_eq!(ok.1.n, 10);
+        assert_eq!(ok.1.p50, 250.0);
+        assert_eq!(ok.1.p99, 250.0);
+        let failed = snap.per_class.iter().find(|(c, _)| *c == OutcomeClass::Failed).unwrap();
+        assert_eq!(failed.1.n, 1);
+        assert!(failed.1.p50.is_finite() && failed.1.p99.is_finite());
+        assert_eq!(failed.1.p99, 500.0);
+        // no samples in the remaining classes → absent, not NaN
+        assert!(!snap.per_class.iter().any(|(c, _)| *c == OutcomeClass::Cancelled));
+    }
+
+    #[test]
+    fn interval_rates_use_the_previous_snapshot_as_basis() {
+        let ring = TelemetryRing::new(64);
+        for i in 0..10 {
+            ring.push(sample(i as f64 * 1000.0, 100.0, OutcomeClass::Ok));
+        }
+        let t1 = FleetTotals { steals: 100, parks: 50, ..FleetTotals::default() };
+        let first = ring.snapshot(1_000_000.0, t1, 0, 0, None);
+        assert!((first.rps - 10.0).abs() < 1e-9, "10 sessions over 1s");
+        assert!((first.steal_rate - 100.0).abs() < 1e-9);
+        for i in 0..20 {
+            ring.push(sample(1_000_000.0 + i as f64, 100.0, OutcomeClass::Ok));
+        }
+        let t2 = FleetTotals { steals: 160, parks: 80, ..FleetTotals::default() };
+        let second = ring.snapshot(3_000_000.0, t2, 0, 0, Some(&first));
+        assert!((second.rps - 10.0).abs() < 1e-9, "20 more sessions over 2s");
+        assert!((second.steal_rate - 30.0).abs() < 1e-9, "60 more steals over 2s");
+        assert!((second.park_rate - 15.0).abs() < 1e-9, "30 more parks over 2s");
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let ring = TelemetryRing::new(8);
+        ring.push(sample(10.0, 123.0, OutcomeClass::Ok));
+        let snap = ring.snapshot(1_000_000.0, FleetTotals::default(), 1, 1, None);
+        let text = snap.to_json().to_string_pretty();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("total_sessions").unwrap().as_f64().unwrap(), 1.0);
+        let ok = doc.get("latency_by_class").unwrap().get("ok").unwrap();
+        assert_eq!(ok.get("p99_us").unwrap().as_f64().unwrap(), 123.0);
+    }
+}

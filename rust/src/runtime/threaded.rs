@@ -54,7 +54,7 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::engine::policies::Policy;
-use crate::engine::trace::OpRecord;
+use crate::engine::trace::{FleetEvent, FleetEventKind, OpRecord, FLEET_LANE};
 use crate::engine::worksteal::DomainMap;
 use crate::engine::{DispatchMode, PhasePlan};
 use crate::graph::{phase_members, width_phases, Graph, NodeId};
@@ -79,6 +79,10 @@ pub struct ThreadedGraphi {
     pub numa: Option<DomainMap>,
     /// Per-phase dispatch assignment; overrides `dispatch` when set.
     pub phase_plan: Option<PhasePlan>,
+    /// Record steal/park/mode-switch events into
+    /// [`ThreadedRunResult::events`] for the Chrome-trace exporter. Off by
+    /// default (zero hot-path cost when off).
+    pub record_events: bool,
 }
 
 impl ThreadedGraphi {
@@ -90,6 +94,7 @@ impl ThreadedGraphi {
             dispatch: DispatchMode::Decentralized,
             numa: None,
             phase_plan: None,
+            record_events: false,
         }
     }
 
@@ -120,6 +125,12 @@ impl ThreadedGraphi {
     /// Run each width phase under its own dispatch mode.
     pub fn with_phase_plan(mut self, plan: PhasePlan) -> ThreadedGraphi {
         self.phase_plan = Some(plan);
+        self
+    }
+
+    /// Record steal/park/mode-switch events for trace export.
+    pub fn with_event_recording(mut self, on: bool) -> ThreadedGraphi {
+        self.record_events = on;
         self
     }
 
@@ -183,6 +194,10 @@ pub struct ThreadedRunResult {
     pub parks: u64,
     /// Phased runs: phase boundaries where the dispatch mode changed.
     pub mode_switches: u64,
+    /// Steal/park/mode-switch events on the run's own clock (µs since
+    /// submit, like `records`). Empty unless
+    /// [`ThreadedGraphi::with_event_recording`] was set.
+    pub events: Vec<FleetEvent>,
 }
 
 impl ThreadedGraphi {
@@ -234,6 +249,7 @@ impl ThreadedGraphi {
             max_sessions: 1,
             deque_capacity: graph.len().max(64),
             watchdog: None,
+            record_events: self.record_events,
         };
         Ok(std::thread::scope(|scope| {
             let fleet = Fleet::new(scope, config);
@@ -241,6 +257,12 @@ impl ThreadedGraphi {
             let report = session
                 .wait()
                 .unwrap_or_else(|e| panic!("threaded single-session run failed: {e}"));
+            // re-base fleet events onto the session clock so they share a
+            // timeline with the (submit-relative) records
+            let mut events = fleet.drain_events();
+            for ev in &mut events {
+                ev.t_us -= report.submitted_at_us;
+            }
             let totals = fleet.shutdown().expect("no faults after a clean session");
             ThreadedRunResult {
                 wall_us: report.wall_us,
@@ -250,6 +272,7 @@ impl ThreadedGraphi {
                 cross_domain_steals: report.cross_domain_steals,
                 parks: totals.parks,
                 mode_switches: 0,
+                events,
             }
         }))
     }
@@ -286,11 +309,19 @@ impl ThreadedGraphi {
         let mut cross_domain_steals = 0u64;
         let mut parks = 0u64;
         let mut mode_switches = 0u64;
+        let mut events: Vec<FleetEvent> = Vec::new();
         let mut prev_mode: Option<DispatchMode> = None;
         for (mode, keep) in plan.modes.iter().zip(&members) {
             if let Some(p) = prev_mode {
                 if p != *mode {
                     mode_switches += 1;
+                    if self.record_events {
+                        events.push(FleetEvent {
+                            t_us: offset_us,
+                            executor: FLEET_LANE,
+                            kind: FleetEventKind::ModeSwitch { from: p, to: *mode },
+                        });
+                    }
                 }
             }
             prev_mode = Some(*mode);
@@ -307,6 +338,10 @@ impl ThreadedGraphi {
                     end_us: rec.end_us + offset_us,
                 });
             }
+            for mut ev in r.events {
+                ev.t_us += offset_us;
+                events.push(ev);
+            }
             offset_us += r.wall_us;
             dispatches += r.dispatches;
             steals += r.steals;
@@ -314,6 +349,7 @@ impl ThreadedGraphi {
             parks += r.parks;
         }
         records.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        events.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
         Ok(ThreadedRunResult {
             wall_us: offset_us,
             records,
@@ -322,6 +358,7 @@ impl ThreadedGraphi {
             cross_domain_steals,
             parks,
             mode_switches,
+            events,
         })
     }
 
@@ -485,6 +522,77 @@ mod tests {
             result.parks > 0,
             "3 idle executors over a ~13 ms chain must park at least once"
         );
+    }
+
+    #[test]
+    fn event_recording_captures_parks_and_is_off_by_default() {
+        // same chain shape as idle_fleet_parks_instead_of_spinning: the
+        // idle executors' parks must show up as events when recording is
+        // on, and the sink must not even exist when it is off
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("n0", OpKind::Scalar);
+        for i in 1..64 {
+            let n = b.add(format!("n{i}"), OpKind::Scalar);
+            b.depend(prev, n);
+            prev = n;
+        }
+        let g = b.build().unwrap();
+        let spin = |_: NodeId| {
+            let t = Instant::now();
+            while t.elapsed() < Duration::from_micros(200) {
+                std::hint::spin_loop();
+            }
+        };
+        let result =
+            ThreadedGraphi::new(4).with_event_recording(true).run(&g, vec![1.0; g.len()], spin).unwrap();
+        let parks =
+            result.events.iter().filter(|e| e.kind == FleetEventKind::Park).count();
+        assert!(parks > 0, "recorded events must include the idle executors' parks");
+        // sorted by time (single session: session clock)
+        for w in result.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us);
+        }
+        let result = ThreadedGraphi::new(4).run(&g, vec![1.0; g.len()], spin).unwrap();
+        assert!(result.events.is_empty(), "recording is opt-in");
+    }
+
+    #[test]
+    fn phased_run_records_mode_switch_events() {
+        use crate::graph::op::OpKind;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let src = b.add("src", OpKind::Scalar);
+        let mids: Vec<NodeId> = (0..8)
+            .map(|i| {
+                let m = b.add(format!("m{i}"), OpKind::Scalar);
+                b.depend(src, m);
+                m
+            })
+            .collect();
+        let _sink = b.add_after("sink", OpKind::Scalar, &mids);
+        let g = b.build().unwrap();
+        let plan = PhasePlan {
+            threshold: 2,
+            modes: vec![
+                DispatchMode::Centralized,
+                DispatchMode::Decentralized,
+                DispatchMode::Centralized,
+            ],
+        };
+        let result = ThreadedGraphi::new(3)
+            .with_phase_plan(plan)
+            .with_event_recording(true)
+            .run(&g, vec![1.0; g.len()], |_| {})
+            .unwrap();
+        let switches: Vec<_> = result
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FleetEventKind::ModeSwitch { .. }))
+            .collect();
+        assert_eq!(switches.len(), 2, "c|d|c boundaries emit two switch events");
+        assert!(switches.iter().all(|e| e.executor == FLEET_LANE));
     }
 
     #[test]

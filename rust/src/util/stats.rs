@@ -89,6 +89,13 @@ impl Summary {
             max: *sorted.last().unwrap(),
         }
     }
+
+    /// [`from_samples`](Self::from_samples) for possibly-empty input:
+    /// `None` instead of a panic. Telemetry snapshots and per-outcome-class
+    /// latency reports use this for classes that saw no sessions.
+    pub fn from_samples_opt(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() { None } else { Some(Summary::from_samples(samples)) }
+    }
 }
 
 /// Linear-interpolated percentile of an ascending-sorted slice.
@@ -151,6 +158,24 @@ mod tests {
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p50, 3.0);
         assert_eq!(s.p99, 3.0);
+    }
+
+    #[test]
+    fn summary_opt_handles_degenerate_inputs() {
+        // empty class → no summary, no panic
+        assert!(Summary::from_samples_opt(&[]).is_none());
+        // single sample → every percentile is that sample, all finite
+        let s = Summary::from_samples_opt(&[42.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.p50, 42.0);
+        assert_eq!(s.p99, 42.0);
+        assert!(s.mean.is_finite() && s.std.is_finite());
+        // all-identical samples → zero spread, finite percentiles
+        let s = Summary::from_samples_opt(&[7.0; 100]).unwrap();
+        assert_eq!(s.p50, 7.0);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.std, 0.0);
+        assert!(s.p50.is_finite() && s.p99.is_finite());
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! End-to-end exercise of the session-aware Chrome-trace exporter.
+//!
+//! Two properties matter beyond the unit tests:
+//!
+//! 1. a serve run's trace is well-formed observability — one process per
+//!    session with named lanes, plus fleet steal/park instants from the
+//!    per-executor event sinks;
+//! 2. the simulator and the threaded runtime export through the **same
+//!    writer** and agree on the op-span sets for the same graphs, so a
+//!    sim trace and a real trace of one workload are diffable.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use graphi::cost::CostModel;
+use graphi::engine::{
+    export_chrome_trace, validate_chrome_trace, DispatchMode, GraphiEngine, SessionTraceExport,
+    SimEnv,
+};
+use graphi::graph::{levels as cp_levels, Graph, NodeId};
+use graphi::models::{self, ModelKind, ModelSize};
+use graphi::runtime::fleet::{Fleet, FleetConfig};
+use graphi::runtime::{serve, ServeConfig};
+
+#[test]
+fn serve_trace_exports_sessions_and_fleet_instants() {
+    let path = std::env::temp_dir()
+        .join(format!("graphi-trace-export-serve-{}.json", std::process::id()));
+    let cfg = ServeConfig {
+        executors: 4,
+        dispatch: DispatchMode::Decentralized,
+        clients: 2,
+        requests: 20,
+        mix: vec![(ModelKind::Mlp, 1.0), (ModelKind::PathNet, 1.0)],
+        op_spin_us: 200.0,
+        trace_path: Some(path.to_string_lossy().into_owned()),
+        ..ServeConfig::default()
+    };
+    let report = serve(&cfg);
+    assert_eq!(report.completed, 20);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let stats = validate_chrome_trace(&text).unwrap();
+    assert_eq!(stats.processes, 1 + 20, "the fleet plus one process per session");
+    assert!(stats.spans > 0);
+    assert!(stats.instant_names.contains("admitted"), "{:?}", stats.instant_names);
+    assert!(stats.instant_names.contains("done"), "{:?}", stats.instant_names);
+    // 2 clients on 4 executors with 200µs ops: idle executors must park
+    // or steal at least once, and those fleet events reach the trace
+    assert!(
+        stats.instant_names.contains("park") || stats.instant_names.contains("steal"),
+        "expected at least one fleet instant class: {:?}",
+        stats.instant_names
+    );
+}
+
+/// `process_name → {(node id, span name)}` for every `X` span in a trace.
+fn span_sets(text: &str) -> BTreeMap<String, BTreeSet<(u64, String)>> {
+    let doc = graphi::util::json::parse(text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut names: BTreeMap<u64, String> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) == Some("M")
+            && ev.get("name").and_then(|n| n.as_str()) == Some("process_name")
+        {
+            let pid = ev.get("pid").unwrap().as_f64().unwrap() as u64;
+            let name =
+                ev.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string();
+            names.insert(pid, name);
+        }
+    }
+    let mut sets: BTreeMap<String, BTreeSet<(u64, String)>> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) == Some("X") {
+            let pid = ev.get("pid").unwrap().as_f64().unwrap() as u64;
+            let node = ev.get("args").unwrap().get("node").unwrap().as_f64().unwrap() as u64;
+            let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+            sets.entry(names[&pid].clone()).or_default().insert((node, name));
+        }
+    }
+    sets
+}
+
+#[test]
+fn simulator_and_threaded_runtime_export_identical_op_span_sets() {
+    let g1 = models::build_inference(ModelKind::Mlp, ModelSize::Small);
+    let g2 = models::build_inference(ModelKind::PathNet, ModelSize::Small);
+    let labels = ["session 1 (mlp)", "session 2 (pathnet)"];
+
+    // simulator: both graphs concurrently on one virtual 2-executor fleet
+    let env = SimEnv::knl(42);
+    let (_, sessions) = GraphiEngine::new(2, 8).run_concurrent(&[&g1, &g2], &env);
+    let sim_exports: Vec<SessionTraceExport<'_>> = sessions
+        .iter()
+        .zip([&g1, &g2])
+        .zip(labels)
+        .map(|((s, g), label)| SessionTraceExport {
+            label: label.to_string(),
+            graph: g,
+            levels: None,
+            records: &s.records,
+            start_us: 0.0,
+            end_us: s.makespan_us,
+            outcome: "done".to_string(),
+        })
+        .collect();
+    let sim_text = export_chrome_trace(&sim_exports, &[], 2);
+    validate_chrome_trace(&sim_text).unwrap();
+
+    // threaded runtime: the same graphs as real fleet sessions
+    let cost = CostModel::knl();
+    let mk_levels = |g: &Graph| -> Arc<[f64]> {
+        let d: Vec<f64> = g.nodes().iter().map(|n| cost.duration_us(&n.kind, 8)).collect();
+        cp_levels(g, &d).into()
+    };
+    let (l1, l2) = (mk_levels(&g1), mk_levels(&g2));
+    let work: &(dyn Fn(NodeId) + Send + Sync) = &|_| {};
+    let (r1, r2, events) = std::thread::scope(|scope| {
+        let fleet = Fleet::new(scope, FleetConfig::new(2).with_event_recording(true));
+        let r1 = fleet.submit(&g1, Arc::clone(&l1), work).wait().unwrap();
+        let r2 = fleet.submit(&g2, Arc::clone(&l2), work).wait().unwrap();
+        let events = fleet.drain_events();
+        fleet.shutdown().unwrap();
+        (r1, r2, events)
+    });
+    let thr_exports: Vec<SessionTraceExport<'_>> = [(&r1, &g1), (&r2, &g2)]
+        .into_iter()
+        .zip(labels)
+        .map(|((r, g), label)| SessionTraceExport {
+            label: label.to_string(),
+            graph: g,
+            levels: None,
+            records: &r.records,
+            start_us: r.submitted_at_us,
+            end_us: r.submitted_at_us + r.wall_us,
+            outcome: "done".to_string(),
+        })
+        .collect();
+    let thr_text = export_chrome_trace(&thr_exports, &events, 2);
+    validate_chrome_trace(&thr_text).unwrap();
+
+    // same writer, same graphs → identical op-span sets per session
+    let sim_spans = span_sets(&sim_text);
+    let thr_spans = span_sets(&thr_text);
+    assert_eq!(sim_spans, thr_spans);
+    assert_eq!(sim_spans["session 1 (mlp)"].len(), g1.len());
+    assert_eq!(sim_spans["session 2 (pathnet)"].len(), g2.len());
+}
