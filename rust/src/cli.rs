@@ -578,6 +578,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         None,
         "per-session deadline in µs; late sessions fail with DeadlineExceeded, admission timeouts are shed",
     )
+    .opt("arrival", Some("closed"), "arrival process: closed|poisson|bursty (open loop needs --rps)")
+    .opt(
+        "rps",
+        None,
+        "offered load for open-loop arrivals; a comma list sweeps the points and reports the \
+         latency-vs-throughput knee (put ≈2× capacity last for the shed headline)",
+    )
+    .opt("admission", Some("fifo"), "admission order: fifo|priority|edf")
+    .opt("queue-depth", None, "bounded admission queue depth; overflow is shed as queue_full")
+    .opt(
+        "trace-sample",
+        Some("1"),
+        "record op spans for 1-in-N sessions in the chrome trace (lifecycle always recorded)",
+    )
     .opt(
         "trace-chrome",
         None,
@@ -629,6 +643,50 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let telemetry_ring = positive("telemetry-ring")?;
     let trace_chrome = m.get("trace-chrome").map(|s| s.to_string());
+    let admission = {
+        let s = m.get("admission").unwrap();
+        crate::runtime::AdmissionPolicy::parse(s)
+            .with_context(|| format!("bad --admission {s} (fifo|priority|edf)"))?
+    };
+    let rps_points: Option<Vec<f64>> = match m.get("rps") {
+        None => None,
+        Some(text) => {
+            let mut pts = Vec::new();
+            for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let v: f64 = part
+                    .parse()
+                    .ok()
+                    .filter(|v: &f64| v.is_finite() && *v > 0.0)
+                    .with_context(|| format!("bad --rps point `{part}`"))?;
+                pts.push(v);
+            }
+            if pts.is_empty() {
+                bail!("empty --rps");
+            }
+            Some(pts)
+        }
+    };
+    let arrival_name = m.get("arrival").unwrap();
+    let arrival = match (arrival_name, &rps_points) {
+        ("closed", None) => crate::runtime::Arrival::Closed,
+        ("closed", Some(_)) => bail!("--rps needs an open-loop --arrival (poisson|bursty)"),
+        ("poisson", Some(p)) => crate::runtime::Arrival::Poisson { rps: p[0] },
+        ("bursty", Some(p)) => crate::runtime::Arrival::Bursty { rps: p[0] },
+        ("poisson" | "bursty", None) => bail!("--arrival {arrival_name} needs --rps"),
+        (other, _) => bail!("bad --arrival {other} (closed|poisson|bursty)"),
+    };
+    let sweep_points = rps_points.as_ref().filter(|p| p.len() > 1);
+    if sweep_points.is_some() && trace_chrome.is_some() {
+        bail!("--trace-chrome with a multi-point --rps sweep would overwrite itself per point");
+    }
+    let queue_depth = m.get_u64("queue-depth").map_err(Error::new)?;
+    if queue_depth == Some(0) {
+        bail!("--queue-depth must be at least 1");
+    }
+    let trace_sample = m.get_u64("trace-sample").map_err(Error::new)?.unwrap();
+    if trace_sample == 0 {
+        bail!("--trace-sample must be at least 1");
+    }
     let base = crate::runtime::ServeConfig {
         executors: positive("executors")?,
         clients: positive("clients")?,
@@ -644,6 +702,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         telemetry_every_ms,
         telemetry_ring,
         seed: m.get_u64("seed").map_err(Error::new)?.unwrap(),
+        arrival,
+        admission,
+        queue_depth,
+        trace_sample,
         ..crate::runtime::ServeConfig::default()
     };
     let mut runner = m
@@ -658,6 +720,46 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         });
         let cfg =
             crate::runtime::ServeConfig { dispatch: mode, trace_path, ..base.clone() };
+        if let Some(points) = sweep_points {
+            // offered-load sweep: one fresh fleet per point, knee reported
+            let sweep = crate::runtime::serve_sweep(&cfg, points);
+            print!("{}", sweep.render());
+            if let Some(runner) = runner.as_mut() {
+                let labels = [
+                    ("dispatch", mode.name().to_string()),
+                    ("executors", cfg.executors.to_string()),
+                    ("arrival", cfg.arrival.name().to_string()),
+                    ("admission", cfg.admission.name().to_string()),
+                    ("rps_points", points.len().to_string()),
+                ];
+                let wall_us: f64 =
+                    sweep.points.iter().map(|p| p.report.wall_s * 1e6).sum();
+                if let Some(knee) = sweep.knee_rps {
+                    runner.record_with_metric(
+                        &format!("serve_knee_rps_{}", mode.name()),
+                        &labels,
+                        wall_us,
+                        Some((knee, "rps")),
+                    );
+                    headlines.push((format!("serve_knee_rps_{}", mode.name()), knee));
+                }
+                // by convention the sweep's last point sits at ≈2× the
+                // analytic capacity, so its shed fraction is the overload
+                // headline (see --rps help)
+                if let Some(last) = sweep.points.last() {
+                    let frac = last.report.shed_fraction();
+                    runner.record_with_metric(
+                        &format!("serve_shed_fraction_at_2x_{}", mode.name()),
+                        &labels,
+                        last.report.wall_s * 1e6,
+                        Some((frac, "fraction")),
+                    );
+                    headlines
+                        .push((format!("serve_shed_fraction_at_2x_{}", mode.name()), frac));
+                }
+            }
+            continue;
+        }
         let report = crate::runtime::serve(&cfg);
         print!("{}", report.render());
         if let Some(path) = &cfg.trace_path {
@@ -961,6 +1063,77 @@ mod tests {
         assert_eq!(main(args(&["serve", "--requests", "2", "--fault-rate", "1.5"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--fault-rate", "-0.1"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--deadline-us", "0"])), 1);
+    }
+
+    #[test]
+    fn serve_open_loop_smoke_and_sweep() {
+        // single-point open loop with a deadline, admission policy and a
+        // bounded queue: must exit 0 in one mode
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "8", "--executors", "2", "--mix", "mlp=1", "--size",
+                "small", "--dispatch", "decentralized", "--arrival", "poisson", "--rps",
+                "500", "--admission", "edf", "--queue-depth", "4", "--deadline-us",
+                "5000000",
+            ])),
+            0
+        );
+        // a comma list sweeps: two points, bursty shape, priority order
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "6", "--executors", "2", "--mix", "mlp=1", "--size",
+                "small", "--dispatch", "decentralized", "--arrival", "bursty", "--rps",
+                "400,800", "--admission", "priority",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_rejects_bad_open_loop_flags() {
+        // open-loop shapes need a load; closed must not get one
+        assert_eq!(main(args(&["serve", "--requests", "2", "--arrival", "poisson"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--rps", "100"])), 1);
+        assert_eq!(
+            main(args(&["serve", "--requests", "2", "--arrival", "sideways", "--rps", "10"])),
+            1
+        );
+        assert_eq!(
+            main(args(&["serve", "--requests", "2", "--arrival", "poisson", "--rps", "-5"])),
+            1
+        );
+        assert_eq!(
+            main(args(&["serve", "--requests", "2", "--arrival", "poisson", "--rps", ","])),
+            1
+        );
+        assert_eq!(main(args(&["serve", "--requests", "2", "--admission", "lifo"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--queue-depth", "0"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--trace-sample", "0"])), 1);
+        // a multi-point sweep would overwrite a single trace file
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "2", "--arrival", "poisson", "--rps", "10,20",
+                "--trace-chrome", "/tmp/never-written.json",
+            ])),
+            1
+        );
+    }
+
+    #[test]
+    fn serve_trace_sampling_smoke_keeps_the_trace_valid() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-cli-serve-sampled-{}.json", std::process::id()));
+        let path_s = path.display().to_string();
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "6", "--clients", "2", "--executors", "2", "--mix",
+                "mlp=1", "--size", "small", "--dispatch", "decentralized", "--trace-chrome",
+                &path_s, "--trace-sample", "3",
+            ])),
+            0
+        );
+        assert_eq!(main(args(&["trace", "--check", &path_s])), 0);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

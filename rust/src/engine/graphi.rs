@@ -637,6 +637,10 @@ pub enum SimSessionOutcome {
     Failed { node: NodeId },
     Cancelled,
     DeadlineExceeded,
+    /// The request was rejected at (virtual) admission and never ran —
+    /// the simulated twin of `SessionError::Shed`
+    /// ([`GraphiEngine::run_open_loop`]).
+    Shed,
 }
 
 /// Fault model for one session of
@@ -773,6 +777,243 @@ impl GraphiEngine {
             }
         }
         (result, sessions)
+    }
+}
+
+/// One request of an open-loop simulated arrival trace
+/// ([`GraphiEngine::run_open_loop`]): when it arrives, what it charges
+/// against the admission budget, and how it is keyed by the non-FIFO
+/// admission policies.
+#[derive(Debug, Clone, Copy)]
+pub struct SimArrival {
+    /// Virtual arrival time, µs. Traces must be in nondecreasing `at_us`
+    /// order — arrival order *is* the FIFO ticket order.
+    pub at_us: f64,
+    /// §5.1 bytes charged against the budget from admission to quiescence.
+    pub bytes: u64,
+    /// Priority class, 0 = most urgent (`AdmissionPolicy::Priority`).
+    pub class: u8,
+    /// Max admission wait before the request is shed; doubles as the EDF
+    /// deadline key. `None` waits indefinitely (and sorts last under EDF).
+    pub patience_us: Option<f64>,
+    /// Execution deadline from admission, mirroring the threaded
+    /// `Fleet::submit_with_deadline` (patience bounds the *wait*, this
+    /// bounds the *run*).
+    pub deadline_us: Option<f64>,
+    /// Service-time override, µs. `None` prices the session at its
+    /// graph's solo makespan under this engine.
+    pub service_us: Option<f64>,
+}
+
+impl Default for SimArrival {
+    fn default() -> SimArrival {
+        SimArrival {
+            at_us: 0.0,
+            bytes: 0,
+            class: 1,
+            patience_us: None,
+            deadline_us: None,
+            service_us: None,
+        }
+    }
+}
+
+/// Aging quantum of the simulated priority policy, mirroring
+/// `SessionQueue`'s default (5ms per class step).
+const SIM_AGE_QUANTUM_US: f64 = 5_000.0;
+
+impl GraphiEngine {
+    /// Open-loop serving mirror: replay a virtual-time **arrival trace**
+    /// through §5.1 budget admission under a pluggable
+    /// [`AdmissionPolicy`](crate::runtime::fleet::AdmissionPolicy) — the
+    /// simulator twin of the threaded serving frontier (`runtime/serve.rs`
+    /// + `SessionQueue`), so overload outcome classes stay differentially
+    /// testable without real threads (`tests/serve_sessions.rs`).
+    ///
+    /// Discrete-event model, deliberately simple where the threads are
+    /// rich: admission replays the queue's exact rules — head-of-line
+    /// blocking per policy (FIFO ticket order / aged priority classes /
+    /// EDF over `at_us + patience_us`), the oversized-runs-alone budget
+    /// rule, patience expiry shedding ([`SimSessionOutcome::Shed`]) — but
+    /// **admitted sessions run at solo speed** (their makespan alone on
+    /// the fleet, or the `service_us` override), ignoring co-running
+    /// contention. That keeps the mirror analytic; the contention story
+    /// lives in [`run_concurrent`](Self::run_concurrent).
+    ///
+    /// A session whose service time outlives its `deadline_us` ends
+    /// [`SimSessionOutcome::DeadlineExceeded`] with the lazy-discard
+    /// truncation of [`run_concurrent_faulty`](Self::run_concurrent_faulty).
+    /// Returned records and `makespan_us` (quiescence) are on the
+    /// absolute virtual timeline; budget bytes are held from grant to
+    /// quiescence, exactly like an [`crate::runtime::fleet::AdmissionPermit`].
+    pub fn run_open_loop(
+        &self,
+        graphs: &[&Graph],
+        env: &SimEnv,
+        arrivals: &[SimArrival],
+        budget_bytes: u64,
+        policy: crate::runtime::fleet::AdmissionPolicy,
+    ) -> Vec<SessionSimResult> {
+        use crate::runtime::fleet::AdmissionPolicy;
+        assert!(!graphs.is_empty(), "run_open_loop needs at least one arrival");
+        assert_eq!(graphs.len(), arrivals.len(), "one graph per arrival");
+        assert!(
+            arrivals.windows(2).all(|w| w[0].at_us <= w[1].at_us),
+            "arrival traces must be in time order (arrival order is the ticket order)"
+        );
+        assert!(budget_bytes > 0, "a zero budget admits nothing");
+        assert!(
+            self.phase_plan.is_none() && self.duration_overrides.is_none(),
+            "phase plans and duration overrides are per graph; price sessions individually"
+        );
+
+        // price each session solo (independent noise per session, like
+        // run_phased's per-phase draws); overridden sessions skip the run
+        // and carry no records
+        let solo: Vec<Option<RunResult>> = graphs
+            .iter()
+            .zip(arrivals)
+            .enumerate()
+            .map(|(i, (g, a))| {
+                if a.service_us.is_some() {
+                    None
+                } else {
+                    let env_i =
+                        SimEnv { cost: env.cost.clone(), seed: env.seed ^ ((i as u64 + 1) << 32) };
+                    Some(self.run(g, &env_i))
+                }
+            })
+            .collect();
+        let service: Vec<f64> = solo
+            .iter()
+            .zip(arrivals)
+            .map(|(r, a)| a.service_us.unwrap_or_else(|| r.as_ref().unwrap().makespan_us))
+            .collect();
+
+        #[derive(Clone, Copy)]
+        enum Ev {
+            // ranked: at equal times completions free budget first, then
+            // expiries shed, then new arrivals queue
+            Complete(usize),
+            Expire(usize),
+            Arrive(usize),
+        }
+        fn ev_key(t: f64, ev: Ev) -> (f64, u8, usize) {
+            match ev {
+                Ev::Complete(i) => (t, 0, i),
+                Ev::Expire(i) => (t, 1, i),
+                Ev::Arrive(i) => (t, 2, i),
+            }
+        }
+        let mut events: Vec<(f64, Ev)> =
+            arrivals.iter().enumerate().map(|(i, a)| (a.at_us, Ev::Arrive(i))).collect();
+        let mut waiting: Vec<usize> = Vec::new();
+        let mut in_use = 0u64;
+        // the queue's exact budget rule: oversized sessions run alone
+        let fits = |used: u64, bytes: u64| used == 0 || used.saturating_add(bytes) <= budget_bytes;
+        let mut results: Vec<SessionSimResult> = arrivals
+            .iter()
+            .map(|_| SessionSimResult {
+                records: Vec::new(),
+                makespan_us: 0.0,
+                outcome: SimSessionOutcome::Shed,
+            })
+            .collect();
+
+        while !events.is_empty() {
+            let mut best = 0;
+            for k in 1..events.len() {
+                let (ta, ea) = events[k];
+                let (tb, eb) = events[best];
+                let (ka, kb) = (ev_key(ta, ea), ev_key(tb, eb));
+                if ka.0.total_cmp(&kb.0).then(ka.1.cmp(&kb.1)).then(ka.2.cmp(&kb.2)).is_lt() {
+                    best = k;
+                }
+            }
+            let (t, ev) = events.swap_remove(best);
+            match ev {
+                Ev::Arrive(i) => {
+                    waiting.push(i);
+                    if let Some(p) = arrivals[i].patience_us {
+                        events.push((arrivals[i].at_us + p, Ev::Expire(i)));
+                    }
+                }
+                Ev::Expire(i) => {
+                    // still in line at patience expiry ⇒ shed (granted
+                    // sessions are out of `waiting`, so this no-ops)
+                    if let Some(pos) = waiting.iter().position(|&w| w == i) {
+                        waiting.swap_remove(pos);
+                        results[i] = SessionSimResult {
+                            records: Vec::new(),
+                            makespan_us: t,
+                            outcome: SimSessionOutcome::Shed,
+                        };
+                    }
+                }
+                Ev::Complete(i) => in_use -= arrivals[i].bytes,
+            }
+            // grant loop: the head of line per policy admits while it
+            // fits; a blocked head blocks everyone (the anti-starvation
+            // discipline the threaded queue spec-tests)
+            loop {
+                let policy_key = |i: usize| -> f64 {
+                    let a = &arrivals[i];
+                    match policy {
+                        AdmissionPolicy::Fifo => i as f64,
+                        AdmissionPolicy::Priority => {
+                            let aged = ((t - a.at_us) / SIM_AGE_QUANTUM_US).floor();
+                            (a.class as f64 - aged).max(0.0)
+                        }
+                        AdmissionPolicy::Edf => {
+                            a.patience_us.map_or(f64::INFINITY, |p| a.at_us + p)
+                        }
+                    }
+                };
+                let head = waiting.iter().copied().min_by(|&x, &y| {
+                    policy_key(x).total_cmp(&policy_key(y)).then(x.cmp(&y))
+                });
+                let Some(i) = head else { break };
+                if !fits(in_use, arrivals[i].bytes) {
+                    break;
+                }
+                waiting.retain(|&w| w != i);
+                in_use += arrivals[i].bytes;
+                let a = &arrivals[i];
+                let (outcome, quiesce_rel, records) = match a.deadline_us {
+                    Some(d) if service[i] > d => {
+                        // lazy discard at the deadline cut, as in
+                        // run_concurrent_faulty
+                        let recs: Vec<OpRecord> = solo[i]
+                            .as_ref()
+                            .map(|r| {
+                                r.records.iter().filter(|r| r.start_us < d).cloned().collect()
+                            })
+                            .unwrap_or_default();
+                        let q = recs.iter().fold(d, |m, r| m.max(r.end_us));
+                        (SimSessionOutcome::DeadlineExceeded, q, recs)
+                    }
+                    _ => (
+                        SimSessionOutcome::Completed,
+                        service[i],
+                        solo[i].as_ref().map(|r| r.records.clone()).unwrap_or_default(),
+                    ),
+                };
+                events.push((t + quiesce_rel, Ev::Complete(i)));
+                results[i] = SessionSimResult {
+                    records: records
+                        .into_iter()
+                        .map(|r| OpRecord {
+                            start_us: r.start_us + t,
+                            end_us: r.end_us + t,
+                            ..r
+                        })
+                        .collect(),
+                    makespan_us: t + quiesce_rel,
+                    outcome,
+                };
+            }
+        }
+        results
     }
 }
 
@@ -1273,5 +1514,137 @@ mod tests {
         );
         assert_eq!(s[0].outcome, SimSessionOutcome::Completed);
         assert_eq!(s[0].records.len(), a.len());
+    }
+
+    #[test]
+    fn open_loop_with_ample_budget_admits_everything_on_arrival() {
+        use crate::runtime::fleet::AdmissionPolicy;
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let arrivals: Vec<SimArrival> = (0..3)
+            .map(|i| SimArrival { at_us: i as f64 * 1e5, bytes: 1, ..SimArrival::default() })
+            .collect();
+        let s = GraphiEngine::new(4, 8).run_open_loop(
+            &[&g, &g, &g],
+            &env(),
+            &arrivals,
+            1 << 30,
+            AdmissionPolicy::Fifo,
+        );
+        for (i, r) in s.iter().enumerate() {
+            assert_eq!(r.outcome, SimSessionOutcome::Completed, "session {i}");
+            assert_eq!(r.records.len(), g.len(), "session {i}");
+            // admitted at arrival, runs at solo speed from there
+            assert!(r.makespan_us > arrivals[i].at_us, "session {i}");
+            assert!(r.records.iter().all(|rec| rec.start_us >= arrivals[i].at_us), "session {i}");
+        }
+    }
+
+    #[test]
+    fn open_loop_sheds_the_impatient_and_serves_the_patient() {
+        use crate::runtime::fleet::AdmissionPolicy;
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        // a budget-holding head (service 1000µs), one impatient waiter
+        // (patience 100µs ⇒ shed at t=150), one patient waiter (granted
+        // at the holder's completion)
+        let arrivals = [
+            SimArrival { at_us: 0.0, bytes: 100, service_us: Some(1000.0), ..SimArrival::default() },
+            SimArrival {
+                at_us: 50.0,
+                bytes: 10,
+                patience_us: Some(100.0),
+                service_us: Some(10.0),
+                ..SimArrival::default()
+            },
+            SimArrival { at_us: 60.0, bytes: 10, service_us: Some(10.0), ..SimArrival::default() },
+        ];
+        let s = GraphiEngine::new(4, 8).run_open_loop(
+            &[&g, &g, &g],
+            &env(),
+            &arrivals,
+            100,
+            AdmissionPolicy::Fifo,
+        );
+        assert_eq!(s[0].outcome, SimSessionOutcome::Completed);
+        assert_eq!(s[0].makespan_us, 1000.0);
+        assert_eq!(s[1].outcome, SimSessionOutcome::Shed);
+        assert_eq!(s[1].makespan_us, 150.0, "shed exactly at patience expiry");
+        assert_eq!(s[2].outcome, SimSessionOutcome::Completed);
+        assert_eq!(s[2].makespan_us, 1010.0, "granted when the holder quiesced");
+    }
+
+    #[test]
+    fn open_loop_policies_reorder_the_same_backlog() {
+        use crate::runtime::fleet::AdmissionPolicy;
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        // a holder pins the budget while three waiters with opposing
+        // FIFO / priority / EDF orders pile up behind it; service times
+        // are distinct so the grant order is readable off makespans
+        let arrivals = [
+            SimArrival { at_us: 0.0, bytes: 100, service_us: Some(1000.0), ..SimArrival::default() },
+            // FIFO first; lowest priority urgency; loosest EDF deadline
+            SimArrival {
+                at_us: 10.0,
+                bytes: 100,
+                class: 2,
+                patience_us: Some(1e6),
+                service_us: Some(10.0),
+                ..SimArrival::default()
+            },
+            // middle everywhere
+            SimArrival {
+                at_us: 20.0,
+                bytes: 100,
+                class: 1,
+                patience_us: Some(8e5),
+                service_us: Some(10.0),
+                ..SimArrival::default()
+            },
+            // FIFO last; most urgent class; tightest EDF deadline
+            SimArrival {
+                at_us: 30.0,
+                bytes: 100,
+                class: 0,
+                patience_us: Some(6e5),
+                service_us: Some(10.0),
+                ..SimArrival::default()
+            },
+        ];
+        let graphs = [&g, &g, &g, &g];
+        let order_of = |policy: AdmissionPolicy| -> Vec<usize> {
+            let s =
+                GraphiEngine::new(4, 8).run_open_loop(&graphs, &env(), &arrivals, 100, policy);
+            assert!(s.iter().all(|r| r.outcome == SimSessionOutcome::Completed), "{policy:?}");
+            let mut idx: Vec<usize> = (1..4).collect();
+            idx.sort_by(|&x, &y| s[x].makespan_us.total_cmp(&s[y].makespan_us));
+            idx
+        };
+        assert_eq!(order_of(AdmissionPolicy::Fifo), vec![1, 2, 3]);
+        // waits are ≪ the 5ms aging quantum, so raw classes order grants
+        assert_eq!(order_of(AdmissionPolicy::Priority), vec![3, 2, 1]);
+        assert_eq!(order_of(AdmissionPolicy::Edf), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn open_loop_deadline_cuts_a_session_whose_service_outlives_it() {
+        use crate::runtime::fleet::AdmissionPolicy;
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let e = env();
+        let solo = GraphiEngine::new(4, 8).run(&g, &SimEnv {
+            cost: e.cost.clone(),
+            seed: e.seed ^ (1 << 32),
+        });
+        let half = solo.makespan_us / 2.0;
+        let arrivals =
+            [SimArrival { at_us: 0.0, bytes: 1, deadline_us: Some(half), ..SimArrival::default() }];
+        let s = GraphiEngine::new(4, 8).run_open_loop(
+            &[&g],
+            &e,
+            &arrivals,
+            1 << 30,
+            AdmissionPolicy::Fifo,
+        );
+        assert_eq!(s[0].outcome, SimSessionOutcome::DeadlineExceeded);
+        assert!(s[0].records.len() < g.len(), "lazy discard drops post-cut ops");
+        assert!(s[0].makespan_us >= half, "quiescence joins the in-flight drain");
     }
 }

@@ -49,7 +49,7 @@ pub mod worksteal;
 pub use autotune::{AutotuneReport, AutotuneRound, Autotuner};
 pub use backoff::{Backoff, BackoffStage, EventCounter};
 pub use dynamic::DynamicFleetEngine;
-pub use graphi::{GraphiEngine, SessionSimResult, SimFault, SimSessionOutcome};
+pub use graphi::{GraphiEngine, SessionSimResult, SimArrival, SimFault, SimSessionOutcome};
 pub use heterogeneous::HeterogeneousEngine;
 pub use naive::NaiveEngine;
 pub use policies::Policy;

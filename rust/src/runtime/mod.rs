@@ -17,8 +17,9 @@
 //! * [`threaded`]  — the Graphi scheduler driving *real* host threads,
 //!   now submit-one-session-and-wait on the fleet core; used by the
 //!   end-to-end training example and as proof the engine is not sim-only
-//! * [`serve`]     — the closed-loop multi-model serving driver behind
-//!   `graphi serve` (mixed request generator, throughput + latency report)
+//! * [`serve`]     — the multi-model serving driver behind `graphi serve`:
+//!   closed-loop clients or open-loop Poisson/bursty arrivals, pluggable
+//!   admission order, SLO-aware shedding, and offered-load knee sweeps
 //! * [`telemetry`] — serve-mode observability: the bounded ring of recent
 //!   session samples and the periodic aggregate snapshots printed by
 //!   `graphi serve --telemetry-every-ms`
@@ -36,11 +37,11 @@ pub use artifacts::{
     TuneOutcome, TuningArtifact,
 };
 pub use fleet::{
-    AdmissionPermit, Fleet, FleetConfig, FleetError, FleetTotals, SessionError, SessionHandle,
-    SessionQueue, SessionReport,
+    AdmissionPermit, AdmissionPolicy, AdmitRequest, Fleet, FleetConfig, FleetError, FleetTotals,
+    SessionError, SessionHandle, SessionQueue, SessionReport, ShedReason,
 };
 pub use pjrt::{LoadedModule, PjrtRuntime};
-pub use serve::{serve, ServeConfig, ServeReport};
+pub use serve::{serve, serve_sweep, Arrival, ServeConfig, ServeReport, SweepPoint, SweepReport};
 pub use telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 pub use threaded::{ThreadedGraphi, UnsupportedPolicy};
 pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

@@ -1,25 +1,51 @@
-//! Closed-loop multi-model serving on one persistent executor fleet — the
-//! engine behind `graphi serve`.
+//! Multi-model serving on one persistent executor fleet — the engine
+//! behind `graphi serve` — under two load models:
 //!
-//! A fixed pool of client threads replays a weighted model mix
-//! (lstm / mlp / googlenet / pathnet by default) against a single
-//! [`Fleet`]: each client picks a model, waits for §5.1 **memory
-//! admission** ([`SessionQueue`], budgeted on the model's planned peak
-//! arena footprint), submits the graph as a session, and blocks on the
-//! session's quiescence before issuing its next request — a classic
-//! closed-loop generator, so offered load ≈ `clients / mean latency` and
-//! the fleet is never swamped beyond the admission budget.
+//! * **Closed loop** (default, [`Arrival::Closed`]): a fixed pool of
+//!   client threads replays a weighted model mix against a single
+//!   [`Fleet`], each client blocking on its session before issuing the
+//!   next request. Offered load ≈ `clients / mean latency`, so the
+//!   generator self-throttles and structurally cannot expose queueing
+//!   collapse — useful for capacity measurement, blind to overload.
+//! * **Open loop** ([`Arrival::Poisson`] / [`Arrival::Bursty`]): a
+//!   deterministic seeded arrival schedule (drawn once from
+//!   [`crate::util::rng::Rng`]) is replayed by a dispatcher thread that
+//!   spawns one request thread per arrival *regardless of how the fleet
+//!   is doing* — offered load is fixed at `rps`, and overload has to go
+//!   somewhere. Bursty arrivals are an on/off process (exponential on
+//!   windows, 4× the target rate inside a burst) averaging the same
+//!   `rps`, for tail behaviour under clustered arrivals.
 //!
-//! The report carries throughput, p50/p99 session latency, the fleet's
-//! counter totals, and the per-session counter sums — the latter so the
-//! metric partition (Σ per-session ≤ fleet totals) stays observable from
-//! the CLI, not just from the differential tests.
+//! Where overload goes is the **admission frontier** ([`SessionQueue`]):
+//! every request still pays §5.1 memory admission (budgeted on the
+//! model's planned peak arena footprint), ordered by a pluggable
+//! [`AdmissionPolicy`] — FIFO, priority classes (with aging), or EDF
+//! over per-request deadlines. Under pressure the queue **sheds**
+//! structurally instead of queueing forever: a depth cap bounds the
+//! line ([`ShedReason::QueueFull`]), the deadline bounds the wait
+//! ([`ShedReason::AdmissionTimeout`]), and — in open-loop runs with a
+//! deadline — a grant-pace estimator rejects requests whose predicted
+//! wait already exceeds their patience ([`ShedReason::PredictedLate`]).
+//! Shed requests are never submitted; they are counted per reason, flow
+//! into [`FleetTotals::sessions_shed`] and the telemetry snapshots, and
+//! appear in the report's outcome accounting so that
+//! `completed + failed + cancelled + deadline_missed + shed == requests`
+//! exactly.
+//!
+//! [`serve_sweep`] replays the same configuration across a list of
+//! offered loads and reports the **latency-vs-throughput knee**: the
+//! highest offered rps that still completes ≥90 % of its offered load
+//! with <5 % shed — the operating point a load balancer should steer to.
 //!
 //! Two observability taps ride on the loop (both off by default):
-//! [`ServeConfig::trace_path`] collects every session's op records plus
-//! the fleet's steal/park events and writes one Chrome/Perfetto trace
-//! with a pid per session, and [`ServeConfig::telemetry_every_ms`] prints
-//! periodic aggregate snapshots from a bounded [`TelemetryRing`].
+//! [`ServeConfig::trace_path`] writes one Chrome/Perfetto trace with a
+//! pid per session — op spans are collected for `1-in-N` sessions
+//! ([`ServeConfig::trace_sample`]) so the trace stays bounded on long
+//! runs, while session lifecycle instants (admitted / done / failed /
+//! deadline / …) are always recorded for **every** session — and
+//! [`ServeConfig::telemetry_every_ms`] prints periodic aggregate
+//! snapshots (now including the shed rate) from a bounded
+//! [`TelemetryRing`].
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -29,11 +55,90 @@ use crate::engine::trace::{export_chrome_trace, OpRecord, SessionTraceExport};
 use crate::engine::DispatchMode;
 use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
 use crate::models::{self, ModelKind, ModelSize};
-use crate::runtime::fleet::{Fleet, FleetConfig, FleetTotals, SessionError, SessionQueue};
+use crate::runtime::fleet::{
+    AdmissionPolicy, AdmitRequest, Fleet, FleetConfig, FleetTotals, SessionError, SessionQueue,
+    ShedReason,
+};
 use crate::runtime::telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::testkit::FaultPlan;
+
+/// How requests arrive at the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// `clients` threads, zero think time: offered load tracks capacity.
+    Closed,
+    /// Open loop: seeded Poisson arrivals at `rps` offered load.
+    Poisson { rps: f64 },
+    /// Open loop: seeded on/off arrivals averaging `rps` — inside an
+    /// exponential on-window arrivals run at 4× the target rate, between
+    /// windows nothing arrives.
+    Bursty { rps: f64 },
+}
+
+impl Arrival {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arrival::Closed => "closed",
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// The offered load, `None` for the closed loop (where it is an
+    /// outcome, not a parameter).
+    pub fn offered_rps(self) -> Option<f64> {
+        match self {
+            Arrival::Closed => None,
+            Arrival::Poisson { rps } | Arrival::Bursty { rps } => Some(rps),
+        }
+    }
+}
+
+/// Burst intensity of [`Arrival::Bursty`]: arrival rate inside an
+/// on-window, as a multiple of the long-run average.
+const BURST_FACTOR: f64 = 4.0;
+/// Mean on-window length of [`Arrival::Bursty`], µs.
+const BURST_ON_US: f64 = 10_000.0;
+
+/// Draw the whole arrival schedule up front (offsets from run start,
+/// µs): replaying it is what makes an open-loop run deterministic per
+/// seed regardless of how the fleet schedules.
+fn arrival_offsets_us(arrival: Arrival, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed ^ 0xA881_7A1E);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    match arrival {
+        Arrival::Closed => unreachable!("closed-loop runs have no arrival schedule"),
+        Arrival::Poisson { rps } => {
+            assert!(rps.is_finite() && rps > 0.0, "poisson arrivals need rps > 0");
+            for _ in 0..n {
+                t += rng.exponential(1e6 / rps);
+                out.push(t as u64);
+            }
+        }
+        Arrival::Bursty { rps } => {
+            assert!(rps.is_finite() && rps > 0.0, "bursty arrivals need rps > 0");
+            // on-time budget left in the current burst window; crossing it
+            // inserts an off window sized so the long-run average is `rps`
+            // (1/BURST_FACTOR of the time on, at BURST_FACTOR × the rate)
+            let mut on_left = rng.exponential(BURST_ON_US);
+            for _ in 0..n {
+                let mut gap = rng.exponential(1e6 / (BURST_FACTOR * rps));
+                while gap > on_left {
+                    gap -= on_left;
+                    t += on_left + rng.exponential((BURST_FACTOR - 1.0) * BURST_ON_US);
+                    on_left = rng.exponential(BURST_ON_US);
+                }
+                on_left -= gap;
+                t += gap;
+                out.push(t as u64);
+            }
+        }
+    }
+    out
+}
 
 /// One serve experiment.
 #[derive(Debug, Clone)]
@@ -42,10 +147,19 @@ pub struct ServeConfig {
     pub executors: usize,
     /// Fleet dispatch architecture for this run.
     pub dispatch: DispatchMode,
-    /// Closed-loop client threads (concurrent sessions ≤ this).
+    /// Closed-loop client threads (ignored by open-loop arrivals, where
+    /// concurrency is whatever the arrival process piles up).
     pub clients: usize,
-    /// Total sessions to execute.
+    /// Total requests to offer.
     pub requests: usize,
+    /// Arrival process; open-loop kinds carry their offered load.
+    pub arrival: Arrival,
+    /// Admission order of the §5.1 queue (FIFO / priority / EDF). With
+    /// `Priority`, request classes are drawn 0–2 seeded (0 most urgent).
+    pub admission: AdmissionPolicy,
+    /// Bounded admission line: arrivals beyond this many waiters are
+    /// shed immediately ([`ShedReason::QueueFull`]).
+    pub queue_depth: Option<u64>,
     /// Weighted model mix (weights need not sum to 1).
     pub mix: Vec<(ModelKind, f64)>,
     pub size: ModelSize,
@@ -66,10 +180,16 @@ pub struct ServeConfig {
     /// Per-session deadline, µs. Sessions past it terminate with
     /// [`SessionError::DeadlineExceeded`]; admission waits are bounded by
     /// the same patience and time-outs are **shed** (counted, not run).
+    /// Open-loop runs with a deadline also enable predictive shedding
+    /// ([`SessionQueue::with_wait_prediction`]).
     pub deadline_us: Option<u64>,
     /// Write a per-session Chrome/Perfetto trace of the whole run here
     /// (turns on fleet event recording and session record collection).
     pub trace_path: Option<String>,
+    /// Op-span sampling for the trace: spans are kept for one session in
+    /// every `trace_sample` (request indices `0, N, 2N, …`); lifecycle
+    /// instants are always kept for every session. 1 ⇒ sample everything.
+    pub trace_sample: u64,
     /// Print one aggregate telemetry line every this-many milliseconds
     /// while the run is live. The final snapshot is collected either way.
     pub telemetry_every_ms: Option<u64>,
@@ -86,6 +206,9 @@ impl Default for ServeConfig {
             dispatch: DispatchMode::Decentralized,
             clients: 4,
             requests: 200,
+            arrival: Arrival::Closed,
+            admission: AdmissionPolicy::Fifo,
+            queue_depth: None,
             mix: vec![
                 (ModelKind::Lstm, 1.0),
                 (ModelKind::Mlp, 1.0),
@@ -101,6 +224,7 @@ impl Default for ServeConfig {
             fault_rate: 0.0,
             deadline_us: None,
             trace_path: None,
+            trace_sample: 1,
             telemetry_every_ms: None,
             telemetry_ring: 1024,
             seed: 42,
@@ -112,9 +236,11 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub dispatch: DispatchMode,
+    /// Offered load for open-loop runs (`None` for the closed loop).
+    pub offered_rps: Option<f64>,
     pub completed: usize,
     pub wall_s: f64,
-    /// Sessions per second over the whole run.
+    /// Completed sessions per second over the whole run.
     pub throughput_rps: f64,
     /// Session latency summary (admission wait + execution), µs.
     pub latency_us: Summary,
@@ -137,9 +263,11 @@ pub struct ServeReport {
     /// Sessions terminated past their deadline
     /// ([`SessionError::DeadlineExceeded`]).
     pub deadline_missed: u64,
-    /// Requests shed at admission: the memory budget did not free up
-    /// within the deadline patience, so the session was never submitted.
+    /// Requests shed at admission (never submitted): timed out, bounced
+    /// off the depth cap, or predicted hopeless.
     pub shed: u64,
+    /// Shed counts split by [`ShedReason`] (nonzero reasons only).
+    pub shed_reasons: Vec<(String, u64)>,
     /// Latency summaries split by outcome class (`ok` / `failed` /
     /// `cancelled` / `deadline`); only classes with ≥1 sample appear.
     pub latency_by_class: Vec<(String, Summary)>,
@@ -150,6 +278,23 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Every request the run accounted for — the conservation total.
+    pub fn accounted(&self) -> u64 {
+        self.completed as u64 + self.failed + self.cancelled + self.deadline_missed + self.shed
+    }
+
+    /// Fraction of offered requests shed at admission.
+    pub fn shed_fraction(&self) -> f64 {
+        self.shed as f64 / (self.accounted().max(1)) as f64
+    }
+
+    /// Fraction of offered requests that completed — the goodput ratio
+    /// the knee criterion uses (robust to wall-clock noise, unlike an
+    /// achieved-vs-offered rps ratio on short runs).
+    pub fn completed_fraction(&self) -> f64 {
+        self.completed as f64 / (self.accounted().max(1)) as f64
+    }
+
     /// One-screen human-readable summary.
     pub fn render(&self) -> String {
         use std::fmt::Write;
@@ -160,6 +305,15 @@ impl ServeReport {
             "{} sessions in {:.2}s  →  {:.1} sessions/s",
             self.completed, self.wall_s, self.throughput_rps
         );
+        if let Some(offered) = self.offered_rps {
+            let _ = writeln!(
+                out,
+                "open loop: offered {:.1} rps → achieved {:.1} rps  ({:.1}% shed)",
+                offered,
+                self.throughput_rps,
+                self.shed_fraction() * 100.0
+            );
+        }
         let _ = writeln!(
             out,
             "session latency: p50 {}  p99 {}  max {}",
@@ -194,6 +348,13 @@ impl ServeReport {
             "faults: {} failed  {} cancelled  {} deadline_missed  {} shed",
             self.failed, self.cancelled, self.deadline_missed, self.shed
         );
+        if !self.shed_reasons.is_empty() {
+            let _ = write!(out, "  shed by reason:");
+            for (reason, n) in &self.shed_reasons {
+                let _ = write!(out, "  {reason}={n}");
+            }
+            let _ = writeln!(out);
+        }
         for (class, s) in &self.latency_by_class {
             let _ = writeln!(
                 out,
@@ -220,7 +381,9 @@ struct ZooEntry {
 
 /// Everything the Chrome-trace exporter needs about one finished session.
 /// Failed/cancelled sessions appear with empty records (the fleet drops
-/// their partial trace) but keep their lifecycle instants.
+/// their partial trace), and so do completed-but-unsampled ones
+/// ([`ServeConfig::trace_sample`]); both keep their lifecycle instants
+/// and terminal cause.
 struct CollectedSession {
     zoo: usize,
     seq: u64,
@@ -230,10 +393,28 @@ struct CollectedSession {
     records: Vec<OpRecord>,
 }
 
-/// Run one closed-loop serve experiment; see the module docs.
+fn reason_idx(reason: ShedReason) -> usize {
+    match reason {
+        ShedReason::AdmissionTimeout => 0,
+        ShedReason::QueueFull => 1,
+        ShedReason::PredictedLate => 2,
+    }
+}
+
+const REASON_NAMES: [&str; 3] = ["admission_timeout", "queue_full", "predicted_late"];
+
+/// Open-loop backpressure of last resort: the dispatcher stops spawning
+/// request threads (and sheds instead) once this many are live, so a
+/// pathological offered load cannot exhaust OS threads.
+fn live_request_cap(max_sessions: usize) -> usize {
+    4 * max_sessions + 64
+}
+
+/// Run one serve experiment; see the module docs.
 pub fn serve(cfg: &ServeConfig) -> ServeReport {
     assert!(cfg.executors >= 1 && cfg.clients >= 1 && cfg.requests >= 1);
     assert!(!cfg.mix.is_empty(), "empty model mix");
+    assert!(cfg.trace_sample >= 1, "trace_sample is 1-in-N with N >= 1");
     let total_weight: f64 = cfg.mix.iter().map(|(_, w)| w).sum();
     assert!(total_weight > 0.0, "mix weights must sum to something positive");
 
@@ -269,7 +450,22 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         .collect();
 
     const CLASSES: [&str; 4] = ["ok", "failed", "cancelled", "deadline"];
-    let queue = SessionQueue::new(cfg.budget_bytes);
+    let open_loop = cfg.arrival != Arrival::Closed;
+    let schedule: Vec<u64> = if open_loop {
+        arrival_offsets_us(cfg.arrival, cfg.requests, cfg.seed)
+    } else {
+        Vec::new()
+    };
+    let mut queue = SessionQueue::new(cfg.budget_bytes).with_policy(cfg.admission);
+    if let Some(depth) = cfg.queue_depth {
+        queue = queue.with_depth_cap(depth);
+    }
+    if open_loop && cfg.deadline_us.is_some() {
+        // closed-loop runs keep the pre-prediction admission behaviour
+        // bit-for-bit; open-loop SLO runs get the estimator
+        queue = queue.with_wait_prediction();
+    }
+    let queue = queue;
     let next_request = AtomicUsize::new(0);
     let completed_per_model: Vec<AtomicU64> = zoo.iter().map(|_| AtomicU64::new(0)).collect();
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
@@ -280,13 +476,16 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     let in_flight = AtomicUsize::new(0);
     let max_in_flight = AtomicUsize::new(0);
     let admission_blocked = AtomicU64::new(0);
-    let shed = AtomicU64::new(0);
+    let shed_by_reason: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
     let ring = TelemetryRing::new(cfg.telemetry_ring);
     let snapshots: Mutex<Vec<TelemetrySnapshot>> = Mutex::new(Vec::new());
     let collect_trace = cfg.trace_path.is_some();
     let collected: Mutex<Vec<CollectedSession>> = Mutex::new(Vec::new());
-    // clients still running; the telemetry monitor exits when this hits 0
-    let active_clients = AtomicUsize::new(cfg.clients);
+    // requests not yet resolved to an outcome; the telemetry monitor (and
+    // nothing else) watches this hit 0
+    let outstanding = AtomicUsize::new(cfg.requests);
+    // request threads currently live in an open-loop run (soft cap)
+    let live_requests = AtomicUsize::new(0);
     // ring sample class per by_class index (the report's CLASSES order)
     const CLASS_OUTCOMES: [OutcomeClass; 4] =
         [OutcomeClass::Ok, OutcomeClass::Failed, OutcomeClass::Cancelled, OutcomeClass::Deadline];
@@ -318,162 +517,170 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
             },
         );
         let fleet_ref = &fleet;
-        // clients live in a nested scope so they may borrow the fleet —
-        // and are all joined before the fleet shuts down
-        std::thread::scope(|clients| {
-            for c in 0..cfg.clients {
-                let mut rng = Rng::new(cfg.seed ^ ((c as u64 + 1) << 40));
-                let zoo = &zoo;
-                let queue = &queue;
-                let next_request = &next_request;
-                let completed_per_model = &completed_per_model;
-                let latencies = &latencies;
-                let session_dispatches = &session_dispatches;
-                let session_steals = &session_steals;
-                let in_flight = &in_flight;
-                let max_in_flight = &max_in_flight;
-                let admission_blocked = &admission_blocked;
-                let shed = &shed;
-                let by_class = &by_class;
-                let ring = &ring;
-                let collected = &collected;
-                let active_clients = &active_clients;
-                clients.spawn(move || loop {
-                    let i = next_request.fetch_add(1, Ordering::Relaxed);
-                    if i >= cfg.requests {
-                        active_clients.fetch_sub(1, Ordering::SeqCst);
-                        return;
+
+        // shared shed bookkeeping: counted per reason, into the fleet
+        // totals (→ telemetry), and as a ring sample
+        let note_shed = |reason: ShedReason, latency_us: f64, model: usize| {
+            shed_by_reason[reason_idx(reason)].fetch_add(1, Ordering::Relaxed);
+            fleet_ref.record_shed();
+            ring.push(SessionSample {
+                t_us: fleet_ref.now_us(),
+                latency_us,
+                class: OutcomeClass::Shed,
+                model: model as u8,
+            });
+        };
+        let note_shed = &note_shed;
+
+        // the whole lifecycle of request `i`, shared by closed-loop
+        // clients (which loop it) and open-loop request threads (one
+        // call each); every call resolves `outstanding` exactly once
+        let run_request = |i: usize, rng: &mut Rng| {
+            // weighted model pick
+            let mut draw = rng.f64() * total_weight;
+            let mut pick = zoo.len() - 1;
+            for (zi, z) in zoo.iter().enumerate() {
+                if draw < z.weight {
+                    pick = zi;
+                    break;
+                }
+                draw -= z.weight;
+            }
+            let z = &zoo[pick];
+            let plan = if cfg.fault_rate > 0.0 {
+                FaultPlan::draw(rng, z.graph.len(), cfg.fault_rate, fault_delay_us)
+            } else {
+                FaultPlan::default()
+            };
+            // classes only exist (and only consume a draw) under the
+            // priority policy, keeping FIFO/EDF rng streams unchanged
+            let class = if cfg.admission == AdmissionPolicy::Priority {
+                rng.below(3) as u8
+            } else {
+                1
+            };
+            let t0 = Instant::now();
+            // §5.1 admission: wait until the planned peak fits — for at
+            // most the deadline patience when one is configured, bounced
+            // early by the depth cap / wait predictor when those are on
+            let permit = match queue.try_admit(z.peak_bytes) {
+                Some(p) => p,
+                None => {
+                    admission_blocked.fetch_add(1, Ordering::Relaxed);
+                    let mut req = AdmitRequest::new(z.peak_bytes).with_class(class);
+                    if let Some(d) = deadline {
+                        req = req.with_patience(d);
                     }
-                    // weighted model pick
-                    let mut draw = rng.f64() * total_weight;
-                    let mut pick = zoo.len() - 1;
-                    for (zi, z) in zoo.iter().enumerate() {
-                        if draw < z.weight {
-                            pick = zi;
-                            break;
+                    match queue.admit_request(req) {
+                        Ok(p) => p,
+                        Err(reason) => {
+                            note_shed(reason, t0.elapsed().as_secs_f64() * 1e6, pick);
+                            outstanding.fetch_sub(1, Ordering::SeqCst);
+                            return;
                         }
-                        draw -= z.weight;
                     }
-                    let z = &zoo[pick];
-                    let plan = if cfg.fault_rate > 0.0 {
-                        FaultPlan::draw(&mut rng, z.graph.len(), cfg.fault_rate, fault_delay_us)
-                    } else {
-                        FaultPlan::default()
-                    };
-                    let t0 = Instant::now();
-                    // §5.1 admission: wait until the planned peak fits — for
-                    // at most the deadline patience when one is configured
-                    let permit = match queue.try_admit(z.peak_bytes) {
-                        Some(p) => p,
-                        None => {
-                            admission_blocked.fetch_add(1, Ordering::Relaxed);
-                            match deadline {
-                                Some(d) => match queue.admit_timeout(z.peak_bytes, d) {
-                                    Some(p) => p,
-                                    None => {
-                                        shed.fetch_add(1, Ordering::Relaxed);
-                                        ring.push(SessionSample {
-                                            t_us: fleet_ref.now_us(),
-                                            latency_us: t0.elapsed().as_secs_f64() * 1e6,
-                                            class: OutcomeClass::Shed,
-                                            model: pick as u8,
-                                        });
-                                        continue;
-                                    }
-                                },
-                                None => queue.admit(z.peak_bytes),
-                            }
-                        }
-                    };
-                    let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
-                    max_in_flight.fetch_max(now, Ordering::SeqCst);
-                    let handle = if plan.is_faulty() {
-                        // faulty sessions own a wrapped closure; healthy
-                        // ones keep the borrowed zero-allocation path
-                        fleet_ref.submit_owned(
-                            &z.graph,
-                            Arc::clone(&z.levels),
-                            Arc::new(plan.clone().wrap(work)),
-                            deadline,
-                        )
-                    } else if let Some(d) = deadline {
-                        fleet_ref.submit_with_deadline(&z.graph, Arc::clone(&z.levels), work_ref, d)
-                    } else {
-                        fleet_ref.submit(&z.graph, Arc::clone(&z.levels), work_ref)
-                    };
-                    if let Some(after_us) = plan.cancel_after_us {
-                        std::thread::sleep(Duration::from_micros(after_us as u64));
-                        handle.cancel();
+                }
+            };
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            max_in_flight.fetch_max(now, Ordering::SeqCst);
+            let handle = if plan.is_faulty() {
+                // faulty sessions own a wrapped closure; healthy
+                // ones keep the borrowed zero-allocation path
+                fleet_ref.submit_owned(
+                    &z.graph,
+                    Arc::clone(&z.levels),
+                    Arc::new(plan.clone().wrap(work)),
+                    deadline,
+                )
+            } else if let Some(d) = deadline {
+                fleet_ref.submit_with_deadline(&z.graph, Arc::clone(&z.levels), work_ref, d)
+            } else {
+                fleet_ref.submit(&z.graph, Arc::clone(&z.levels), work_ref)
+            };
+            if let Some(after_us) = plan.cancel_after_us {
+                std::thread::sleep(Duration::from_micros(after_us as u64));
+                handle.cancel();
+            }
+            // wait() consumes the handle — grab the trace identity first
+            let seq = handle.seq();
+            let submit_us = handle.submitted_at_us();
+            let outcome = handle.wait();
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            drop(permit);
+            let lat = t0.elapsed().as_secs_f64() * 1e6;
+            latencies.lock().unwrap().push(lat);
+            let lat_class = match &outcome {
+                Ok(_) => 0,
+                Err(SessionError::Cancelled) => 2,
+                Err(SessionError::DeadlineExceeded) => 3,
+                Err(_) => 1,
+            };
+            by_class[lat_class].lock().unwrap().push(lat);
+            ring.push(SessionSample {
+                t_us: fleet_ref.now_us(),
+                latency_us: lat,
+                class: CLASS_OUTCOMES[lat_class],
+                model: pick as u8,
+            });
+            if collect_trace {
+                let sampled = (i as u64) % cfg.trace_sample == 0;
+                let (cause, end_us, records) = match &outcome {
+                    Ok(r) => (
+                        "done",
+                        submit_us + r.wall_us,
+                        if sampled { r.records.clone() } else { Vec::new() },
+                    ),
+                    Err(SessionError::Cancelled) => ("cancelled", fleet_ref.now_us(), Vec::new()),
+                    Err(SessionError::DeadlineExceeded) => {
+                        ("deadline", fleet_ref.now_us(), Vec::new())
                     }
-                    // wait() consumes the handle — grab the trace identity first
-                    let seq = handle.seq();
-                    let submit_us = handle.submitted_at_us();
-                    let outcome = handle.wait();
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
-                    drop(permit);
-                    let lat = t0.elapsed().as_secs_f64() * 1e6;
-                    latencies.lock().unwrap().push(lat);
-                    let class = match &outcome {
-                        Ok(_) => 0,
-                        Err(SessionError::Cancelled) => 2,
-                        Err(SessionError::DeadlineExceeded) => 3,
-                        Err(_) => 1,
-                    };
-                    by_class[class].lock().unwrap().push(lat);
-                    ring.push(SessionSample {
-                        t_us: fleet_ref.now_us(),
-                        latency_us: lat,
-                        class: CLASS_OUTCOMES[class],
-                        model: pick as u8,
-                    });
-                    if collect_trace {
-                        let (cause, end_us, records) = match &outcome {
-                            Ok(r) => ("done", submit_us + r.wall_us, r.records.clone()),
-                            Err(SessionError::Cancelled) => {
-                                ("cancelled", fleet_ref.now_us(), Vec::new())
-                            }
-                            Err(SessionError::DeadlineExceeded) => {
-                                ("deadline", fleet_ref.now_us(), Vec::new())
-                            }
-                            Err(SessionError::Stalled) => ("stalled", fleet_ref.now_us(), Vec::new()),
-                            Err(SessionError::OpPanicked { .. }) => {
-                                ("failed", fleet_ref.now_us(), Vec::new())
-                            }
-                        };
-                        collected.lock().unwrap().push(CollectedSession {
-                            zoo: pick,
-                            seq,
-                            submit_us,
-                            end_us,
-                            outcome: cause.to_string(),
-                            records,
-                        });
+                    Err(SessionError::Stalled) => ("stalled", fleet_ref.now_us(), Vec::new()),
+                    Err(SessionError::OpPanicked { .. }) => {
+                        ("failed", fleet_ref.now_us(), Vec::new())
                     }
-                    if let Ok(report) = outcome {
-                        completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
-                        session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
-                        session_steals.fetch_add(report.steals, Ordering::Relaxed);
-                    }
+                    // sheds return before submission; a Shed terminal on a
+                    // submitted session cannot happen, but stay total
+                    Err(SessionError::Shed { .. }) => ("shed", fleet_ref.now_us(), Vec::new()),
+                };
+                collected.lock().unwrap().push(CollectedSession {
+                    zoo: pick,
+                    seq,
+                    submit_us,
+                    end_us,
+                    outcome: cause.to_string(),
+                    records,
                 });
             }
+            if let Ok(report) = outcome {
+                completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
+                session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
+                session_steals.fetch_add(report.steals, Ordering::Relaxed);
+            }
+            outstanding.fetch_sub(1, Ordering::SeqCst);
+        };
+        let run_request = &run_request;
+
+        // request threads live in a nested scope so they may borrow the
+        // fleet — and are all joined before the fleet shuts down
+        std::thread::scope(|reqs| {
             if let Some(every_ms) = cfg.telemetry_every_ms {
                 let ring = &ring;
                 let snapshots = &snapshots;
-                let active_clients = &active_clients;
+                let outstanding = &outstanding;
                 let queue = &queue;
                 let in_flight = &in_flight;
-                clients.spawn(move || {
+                reqs.spawn(move || {
                     let mut prev: Option<TelemetrySnapshot> = None;
                     loop {
                         // sleep in short slices so the monitor notices the
                         // run ending instead of overshooting by an interval
                         let mut slept_ms = 0u64;
-                        while slept_ms < every_ms && active_clients.load(Ordering::SeqCst) > 0 {
+                        while slept_ms < every_ms && outstanding.load(Ordering::SeqCst) > 0 {
                             let slice = (every_ms - slept_ms).min(20);
                             std::thread::sleep(Duration::from_millis(slice));
                             slept_ms += slice;
                         }
-                        if active_clients.load(Ordering::SeqCst) == 0 {
+                        if outstanding.load(Ordering::SeqCst) == 0 {
                             return;
                         }
                         let snap = ring.snapshot(
@@ -488,6 +695,47 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                         prev = Some(snap);
                     }
                 });
+            }
+            if open_loop {
+                // the dispatcher: replay the precomputed schedule on this
+                // thread, one request thread per arrival — never waiting
+                // for the fleet, that is the point of the open loop
+                let cap = live_request_cap(cfg.max_sessions);
+                for (i, &at_us) in schedule.iter().enumerate() {
+                    let target = Duration::from_micros(at_us);
+                    let elapsed = t_start.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                    if live_requests.load(Ordering::SeqCst) >= cap {
+                        // thread-pressure backstop: reject instantly rather
+                        // than spawning unboundedly many OS threads
+                        note_shed(ShedReason::QueueFull, 0.0, 0);
+                        outstanding.fetch_sub(1, Ordering::SeqCst);
+                        continue;
+                    }
+                    live_requests.fetch_add(1, Ordering::SeqCst);
+                    let live_requests = &live_requests;
+                    reqs.spawn(move || {
+                        // per-request rng: deterministic per (seed, i),
+                        // independent of dispatch interleaving
+                        let mut rng = Rng::new(cfg.seed ^ ((i as u64 + 1) << 17) ^ 0x0A77_1B07);
+                        run_request(i, &mut rng);
+                        live_requests.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+            } else {
+                for c in 0..cfg.clients {
+                    let next_request = &next_request;
+                    let mut rng = Rng::new(cfg.seed ^ ((c as u64 + 1) << 40));
+                    reqs.spawn(move || loop {
+                        let i = next_request.fetch_add(1, Ordering::Relaxed);
+                        if i >= cfg.requests {
+                            return;
+                        }
+                        run_request(i, &mut rng);
+                    });
+                }
             }
         });
         // final snapshot: every run reports at least one, interval or not
@@ -537,8 +785,11 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     let class_samples: Vec<Vec<f64>> =
         by_class.into_iter().map(|m| m.into_inner().unwrap()).collect();
     let completed = class_samples[0].len();
+    let shed: u64 = shed_by_reason.iter().map(|n| n.load(Ordering::SeqCst)).sum();
+    debug_assert_eq!(shed, totals.sessions_shed, "every shed is recorded on the fleet");
     ServeReport {
         dispatch: cfg.dispatch,
+        offered_rps: cfg.arrival.offered_rps(),
         completed,
         wall_s,
         throughput_rps: completed as f64 / wall_s.max(1e-9),
@@ -560,7 +811,15 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         failed: totals.sessions_failed,
         cancelled: totals.sessions_cancelled,
         deadline_missed: totals.sessions_deadline_missed,
-        shed: shed.load(Ordering::SeqCst),
+        shed,
+        shed_reasons: REASON_NAMES
+            .iter()
+            .zip(&shed_by_reason)
+            .filter_map(|(name, n)| {
+                let n = n.load(Ordering::SeqCst);
+                (n > 0).then(|| (name.to_string(), n))
+            })
+            .collect(),
         latency_by_class: CLASSES
             .iter()
             .zip(&class_samples)
@@ -568,6 +827,81 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
             .collect(),
         snapshots: snapshots.into_inner().unwrap(),
     }
+}
+
+/// One load point of an offered-load sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub offered_rps: f64,
+    pub report: ServeReport,
+}
+
+/// Outcome of [`serve_sweep`]: per-point reports plus the knee.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+    /// Highest offered load that still completed ≥90 % of its offered
+    /// requests with <5 % shed — `None` when every point in the sweep
+    /// was saturated.
+    pub knee_rps: Option<f64>,
+}
+
+impl SweepReport {
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== offered-load sweep ({} points) ==", self.points.len());
+        for p in &self.points {
+            let r = &p.report;
+            let _ = writeln!(
+                out,
+                "rps {:9.1} → achieved {:9.1}  p50 {}  p99 {}  shed {:5.1}%",
+                p.offered_rps,
+                r.throughput_rps,
+                crate::util::fmt_us(r.latency_us.p50),
+                crate::util::fmt_us(r.latency_us.p99),
+                r.shed_fraction() * 100.0,
+            );
+        }
+        match self.knee_rps {
+            Some(rps) => {
+                let _ = writeln!(
+                    out,
+                    "knee ≈ {rps:.1} rps (highest offered load completing ≥90% with <5% shed)"
+                );
+            }
+            None => {
+                let _ = writeln!(out, "no knee within the sweep: every load point saturated");
+            }
+        }
+        out
+    }
+}
+
+/// Replay `cfg` at each offered load in `rps_points` (a fresh fleet per
+/// point) and locate the latency-vs-throughput knee. Closed-loop configs
+/// are promoted to Poisson arrivals; bursty configs keep their burst
+/// shape at each swept rate.
+pub fn serve_sweep(cfg: &ServeConfig, rps_points: &[f64]) -> SweepReport {
+    assert!(!rps_points.is_empty(), "sweep needs at least one load point");
+    let points: Vec<SweepPoint> = rps_points
+        .iter()
+        .map(|&rps| {
+            assert!(rps.is_finite() && rps > 0.0, "offered load must be positive");
+            let mut point_cfg = cfg.clone();
+            point_cfg.arrival = match cfg.arrival {
+                Arrival::Bursty { .. } => Arrival::Bursty { rps },
+                _ => Arrival::Poisson { rps },
+            };
+            SweepPoint { offered_rps: rps, report: serve(&point_cfg) }
+        })
+        .collect();
+    let knee_rps = points
+        .iter()
+        .filter(|p| p.report.shed_fraction() < 0.05 && p.report.completed_fraction() >= 0.9)
+        .map(|p| p.offered_rps)
+        .fold(None, |best: Option<f64>, rps| Some(best.map_or(rps, |b| b.max(rps))));
+    SweepReport { points, knee_rps }
 }
 
 #[cfg(test)]
@@ -593,6 +927,7 @@ mod tests {
             assert_eq!(report.totals.sessions_completed, 12, "{}", mode.name());
             assert_eq!(report.latency_us.n, 12, "{}", mode.name());
             assert!(report.throughput_rps > 0.0, "{}", mode.name());
+            assert_eq!(report.offered_rps, None, "{}", mode.name());
             // per-session metric partition: sums match the fleet totals
             assert_eq!(report.session_dispatches, report.totals.dispatches, "{}", mode.name());
             assert!(report.session_steals <= report.totals.steals, "{}", mode.name());
@@ -630,16 +965,7 @@ mod tests {
             };
             let report = serve(&cfg);
             // every request is accounted for exactly once
-            assert_eq!(
-                report.completed as u64
-                    + report.failed
-                    + report.cancelled
-                    + report.deadline_missed
-                    + report.shed,
-                40,
-                "{}: {report:?}",
-                mode.name()
-            );
+            assert_eq!(report.accounted(), 40, "{}: {report:?}", mode.name());
             // rate 1.0 over 40 draws: a panic plan is (overwhelmingly,
             // and for seed 42 deterministically) among them, and every
             // panic plan fails its session
@@ -741,5 +1067,189 @@ mod tests {
         assert!(stats.spans > 0);
         assert!(stats.instant_names.contains("admitted"), "{:?}", stats.instant_names);
         assert!(stats.instant_names.contains("done"), "{:?}", stats.instant_names);
+    }
+
+    #[test]
+    fn arrival_schedules_are_deterministic_sorted_and_load_scaled() {
+        let a = arrival_offsets_us(Arrival::Poisson { rps: 1000.0 }, 200, 7);
+        let b = arrival_offsets_us(Arrival::Poisson { rps: 1000.0 }, 200, 7);
+        assert_eq!(a, b, "same seed ⇒ same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrival offsets are nondecreasing");
+        // 200 arrivals at 1000/s: the span concentrates near 200ms
+        let span_us = *a.last().unwrap() as f64;
+        assert!((100_000.0..400_000.0).contains(&span_us), "span {span_us}µs");
+        // doubling the offered load roughly halves the span
+        let c = arrival_offsets_us(Arrival::Poisson { rps: 2000.0 }, 200, 7);
+        let ratio = span_us / (*c.last().unwrap() as f64);
+        assert!((1.3..3.0).contains(&ratio), "load scaling off: ratio {ratio}");
+        // bursty averages the same long-run rate but clusters: the
+        // minimum gap is (much) smaller than the mean gap
+        let d = arrival_offsets_us(Arrival::Bursty { rps: 1000.0 }, 200, 7);
+        assert!(d.windows(2).all(|w| w[0] <= w[1]));
+        let span_d = *d.last().unwrap() as f64;
+        assert!((100_000.0..600_000.0).contains(&span_d), "bursty span {span_d}µs");
+        let gaps: Vec<u64> = d.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean_gap = gaps.iter().sum::<u64>() as f64 / gaps.len() as f64;
+        let min_gap = *gaps.iter().min().unwrap() as f64;
+        assert!(min_gap < mean_gap / 2.0, "bursty arrivals must cluster");
+    }
+
+    #[test]
+    fn open_loop_overload_sheds_and_conserves_in_both_modes() {
+        // ≥2× overload: a one-byte budget serializes sessions and the
+        // offered load is far past the serial service rate, with a 2ms
+        // deadline as admission patience — the run must terminate with
+        // every request in exactly one class and nonzero sheds
+        for mode in DispatchMode::ALL {
+            let cfg = ServeConfig {
+                executors: 2,
+                dispatch: mode,
+                clients: 1,
+                requests: 60,
+                arrival: Arrival::Poisson { rps: 4000.0 },
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                budget_bytes: 1,
+                op_spin_us: 20.0,
+                deadline_us: Some(2_000),
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.accounted(), 60, "{}: {report:?}", mode.name());
+            assert!(report.shed > 0, "{}: overload must shed: {report:?}", mode.name());
+            assert!(!report.shed_reasons.is_empty(), "{}", mode.name());
+            assert_eq!(report.offered_rps, Some(4000.0), "{}", mode.name());
+            let text = report.render();
+            assert!(text.contains("open loop"), "{text}");
+            assert!(text.contains("shed by reason"), "{text}");
+        }
+    }
+
+    #[test]
+    fn open_loop_bursty_and_policies_account_every_request() {
+        // a comfortable load point: bursty arrivals under each admission
+        // policy complete cleanly and conserve the outcome classes
+        for policy in AdmissionPolicy::ALL {
+            let cfg = ServeConfig {
+                executors: 2,
+                clients: 1,
+                requests: 24,
+                arrival: Arrival::Bursty { rps: 2000.0 },
+                admission: policy,
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                deadline_us: Some(2_000_000),
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.accounted(), 24, "{}: {report:?}", policy.name());
+            assert!(report.completed > 0, "{}: {report:?}", policy.name());
+        }
+    }
+
+    #[test]
+    fn depth_cap_sheds_queue_full_under_a_flood() {
+        // everything arrives at once against a serial budget with a
+        // 2-deep line: most requests must bounce as queue_full
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 1,
+            requests: 20,
+            arrival: Arrival::Poisson { rps: 1e9 },
+            queue_depth: Some(2),
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            budget_bytes: 1,
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.accounted(), 20, "{report:?}");
+        assert!(report.shed > 0, "{report:?}");
+        assert!(
+            report.shed_reasons.iter().any(|(r, n)| r == "queue_full" && *n > 0),
+            "{report:?}"
+        );
+        // nobody waits forever: whoever got in line (≤ depth) ran
+        assert_eq!(report.completed as u64 + report.shed, 20, "{report:?}");
+    }
+
+    #[test]
+    fn sweep_locates_the_knee_between_a_comfortable_and_a_saturated_point() {
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 1,
+            requests: 20,
+            queue_depth: Some(2),
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            budget_bytes: 1,
+            ..ServeConfig::default()
+        };
+        // 200 rps leaves ~5ms between serial sub-ms sessions: no queue,
+        // no shed. 1e8 rps floods the 2-deep line instantly.
+        let sweep = serve_sweep(&cfg, &[200.0, 1e8]);
+        assert_eq!(sweep.points.len(), 2);
+        let low = &sweep.points[0].report;
+        let high = &sweep.points[1].report;
+        assert_eq!(low.accounted(), 20, "{low:?}");
+        assert_eq!(high.accounted(), 20, "{high:?}");
+        assert!(high.shed_fraction() > 0.05, "flood must saturate: {high:?}");
+        assert_eq!(sweep.knee_rps, Some(200.0), "low {low:?} high {high:?}");
+        let text = sweep.render();
+        assert!(text.contains("knee"), "{text}");
+    }
+
+    #[test]
+    fn trace_sampling_bounds_op_spans_but_keeps_every_lifecycle() {
+        let span_count = |sample: u64, tag: &str| {
+            let path = std::env::temp_dir()
+                .join(format!("graphi-serve-sample-{}-{tag}.json", std::process::id()));
+            let cfg = ServeConfig {
+                executors: 2,
+                clients: 2,
+                requests: 8,
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                trace_path: Some(path.to_string_lossy().into_owned()),
+                trace_sample: sample,
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.completed, 8);
+            let text = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            let stats = crate::engine::validate_chrome_trace(&text).unwrap();
+            // sampling never hides a session: every lifecycle is present
+            assert_eq!(stats.processes, 1 + 8, "sample={sample}");
+            assert!(stats.instant_names.contains("admitted"), "sample={sample}");
+            assert!(stats.instant_names.contains("done"), "sample={sample}");
+            stats.spans
+        };
+        let full = span_count(1, "full");
+        let quarter = span_count(4, "quarter");
+        // 8 identical mlp sessions: sampling 1-in-4 keeps exactly 2
+        // sessions' worth of op spans
+        assert!(full > 0 && quarter > 0);
+        assert_eq!(quarter * 4, full, "full {full} quarter {quarter}");
+    }
+
+    #[test]
+    fn unsampled_sessions_keep_their_terminal_causes() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-serve-causes-{}.json", std::process::id()));
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 2,
+            requests: 20,
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            fault_rate: 1.0,
+            trace_path: Some(path.to_string_lossy().into_owned()),
+            // only request 0 is sampled: every fault cause below comes
+            // from an unsampled session's lifecycle record
+            trace_sample: 1000,
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert!(report.failed > 0, "{report:?}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let stats = crate::engine::validate_chrome_trace(&text).unwrap();
+        assert_eq!(stats.processes as u64, 1 + report.accounted() - report.shed);
+        assert!(stats.instant_names.contains("failed"), "{:?}", stats.instant_names);
     }
 }

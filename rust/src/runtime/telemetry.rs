@@ -153,14 +153,17 @@ impl TelemetryRing {
             (s.buf.clone(), s.total)
         };
         // interval basis: since the previous snapshot, or since t=0
-        let (t_base, total_base, steals_base, parks_base) = match prev {
-            Some(p) => (p.t_us, p.total_sessions, p.totals.steals, p.totals.parks),
-            None => (0.0, 0, 0, 0),
+        let (t_base, total_base, steals_base, parks_base, sheds_base) = match prev {
+            Some(p) => {
+                (p.t_us, p.total_sessions, p.totals.steals, p.totals.parks, p.totals.sessions_shed)
+            }
+            None => (0.0, 0, 0, 0, 0),
         };
         let dt_s = ((now_us - t_base) / 1e6).max(1e-9);
         let rps = (total.saturating_sub(total_base)) as f64 / dt_s;
         let steal_rate = (totals.steals.saturating_sub(steals_base)) as f64 / dt_s;
         let park_rate = (totals.parks.saturating_sub(parks_base)) as f64 / dt_s;
+        let shed_rate = (totals.sessions_shed.saturating_sub(sheds_base)) as f64 / dt_s;
         let mut per_class = Vec::new();
         for class in OutcomeClass::ALL {
             let lat: Vec<f64> =
@@ -179,6 +182,7 @@ impl TelemetryRing {
             in_flight,
             steal_rate,
             park_rate,
+            shed_rate,
             totals,
         }
     }
@@ -208,6 +212,9 @@ pub struct TelemetrySnapshot {
     pub steal_rate: f64,
     /// Parks per second over the interval.
     pub park_rate: f64,
+    /// Requests shed at admission per second over the interval — the
+    /// overload signal ([`FleetTotals::sessions_shed`] delta).
+    pub shed_rate: f64,
     /// Raw fleet counter snapshot (the next snapshot's delta basis).
     pub totals: FleetTotals,
 }
@@ -225,6 +232,9 @@ impl TelemetrySnapshot {
             self.steal_rate,
             self.park_rate,
         );
+        if self.shed_rate > 0.0 || self.totals.sessions_shed > 0 {
+            line.push_str(&format!(" shed/s={:.0}", self.shed_rate));
+        }
         for (class, s) in &self.per_class {
             line.push_str(&format!(
                 " {}[n={} p50={} p99={}]",
@@ -246,7 +256,9 @@ impl TelemetrySnapshot {
             .set("queue_waiting", self.queue_waiting)
             .set("in_flight", self.in_flight)
             .set("steal_rate", self.steal_rate)
-            .set("park_rate", self.park_rate);
+            .set("park_rate", self.park_rate)
+            .set("shed_rate", self.shed_rate)
+            .set("sessions_shed", self.totals.sessions_shed);
         let mut classes = Json::obj();
         for (class, s) in &self.per_class {
             let mut c = Json::obj();
@@ -335,11 +347,14 @@ mod tests {
         for i in 0..20 {
             ring.push(sample(1_000_000.0 + i as f64, 100.0, OutcomeClass::Ok));
         }
-        let t2 = FleetTotals { steals: 160, parks: 80, ..FleetTotals::default() };
+        let t2 =
+            FleetTotals { steals: 160, parks: 80, sessions_shed: 40, ..FleetTotals::default() };
         let second = ring.snapshot(3_000_000.0, t2, 0, 0, Some(&first));
         assert!((second.rps - 10.0).abs() < 1e-9, "20 more sessions over 2s");
         assert!((second.steal_rate - 30.0).abs() < 1e-9, "60 more steals over 2s");
         assert!((second.park_rate - 15.0).abs() < 1e-9, "30 more parks over 2s");
+        assert!((second.shed_rate - 20.0).abs() < 1e-9, "40 sheds over 2s");
+        assert!(second.render_line().contains("shed/s=20"), "{}", second.render_line());
     }
 
     #[test]

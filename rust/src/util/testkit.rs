@@ -284,6 +284,56 @@ impl FaultPlan {
     }
 }
 
+/// A seeded overload scenario for the stress/chaos suites: an **arrival
+/// burst × tight deadlines × one op panic**. Half the sessions arrive at
+/// t = 0 (the burst), the rest trail in at `gap_us` spacing; every
+/// session shares one tight deadline (used as both admission patience
+/// and execution deadline); exactly one session's op panics and a
+/// sprinkle of clients cancel — so a single scenario can populate all
+/// five outcome classes (completed / failed / cancelled /
+/// deadline_missed / shed) that the conservation assertions sum.
+#[derive(Debug, Clone)]
+pub struct OverloadPlan {
+    /// Per-session arrival offset, µs from the scenario start.
+    pub arrive_us: Vec<u64>,
+    /// Deadline shared by every session, µs.
+    pub deadline_us: u64,
+    /// Per-session op-level faults (exactly one panic plan among them).
+    pub plans: Vec<FaultPlan>,
+}
+
+impl OverloadPlan {
+    /// Draw a scenario: `sessions` requests over graphs of `nodes` ops,
+    /// trailing arrivals spaced ~`gap_us`, everyone under `deadline_us`.
+    pub fn draw(
+        rng: &mut Rng,
+        sessions: usize,
+        nodes: usize,
+        gap_us: u64,
+        deadline_us: u64,
+    ) -> OverloadPlan {
+        assert!(sessions >= 1 && nodes >= 1 && deadline_us >= 1);
+        let burst = (sessions / 2).max(1);
+        let mut arrive_us = Vec::with_capacity(sessions);
+        for i in 0..sessions {
+            if i < burst {
+                arrive_us.push(0);
+            } else {
+                arrive_us.push((i - burst + 1) as u64 * gap_us + rng.below(gap_us.max(1)));
+            }
+        }
+        let panicker = rng.below(sessions as u64) as usize;
+        let mut plans = vec![FaultPlan::default(); sessions];
+        plans[panicker].panic_at = Some(rng.below(nodes as u64) as u32);
+        for (i, plan) in plans.iter_mut().enumerate() {
+            if i != panicker && rng.chance(0.2) {
+                plan.cancel_after_us = Some(rng.uniform(0.0, deadline_us as f64));
+            }
+        }
+        OverloadPlan { arrive_us, deadline_us, plans }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +401,27 @@ mod tests {
                 assert!(a < b && (b as usize) < c.n);
             }
             assert_eq!(c.weights.len(), c.n);
+        }
+    }
+
+    #[test]
+    fn overload_plan_is_a_burst_with_one_panic() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let plan = OverloadPlan::draw(&mut rng, 12, 20, 500, 2_000);
+            assert_eq!(plan.arrive_us.len(), 12);
+            assert_eq!(plan.plans.len(), 12);
+            assert_eq!(plan.deadline_us, 2_000);
+            // half the sessions arrive as a burst at t = 0
+            assert_eq!(plan.arrive_us.iter().filter(|&&t| t == 0).count(), 6);
+            // trailing arrivals are strictly increasing past the burst
+            assert!(plan.arrive_us[6..].windows(2).all(|w| w[0] < w[1]));
+            assert!(plan.arrive_us[6..].iter().all(|&t| t >= 500));
+            // exactly one panic plan; cancels never co-located with it
+            let panics: Vec<_> = plan.plans.iter().filter(|p| p.panic_at.is_some()).collect();
+            assert_eq!(panics.len(), 1);
+            assert!(panics[0].cancel_after_us.is_none());
+            assert!(plan.plans.iter().all(|p| p.delay_at.is_none()));
         }
     }
 

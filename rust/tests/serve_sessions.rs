@@ -23,7 +23,7 @@
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
-use graphi::engine::{DispatchMode, GraphiEngine, SimEnv};
+use graphi::engine::{DispatchMode, GraphiEngine, SimArrival, SimEnv, SimSessionOutcome};
 use graphi::graph::op::{EwKind, OpKind};
 use graphi::graph::{Graph, GraphBuilder, NodeId};
 use graphi::runtime::{
@@ -346,6 +346,177 @@ fn sibling_graph_of(case: &DagCase) -> Graph {
         b.depend(src, dst);
     }
     b.build().expect("testkit DAGs are acyclic by construction")
+}
+
+/// PR 8 tentpole acceptance: the threaded serving frontier
+/// (`Fleet` + `SessionQueue`) and the simulator's open-loop mirror
+/// (`GraphiEngine::run_open_loop`) put every request of a seeded arrival
+/// trace into the **same outcome class** — Completed / Shed /
+/// DeadlineExceeded — under every admission policy and both dispatch
+/// modes.
+///
+/// The trace is engineered with tens-of-milliseconds margins around every
+/// decision point so real-thread scheduling jitter cannot flip a class:
+///
+/// * request 0 takes the whole budget and holds it ~300 ms  → Completed
+/// * request 1 arrives under the holder with zero patience  → Shed
+/// * requests 2–3 fit together once the holder quiesces     → Completed
+/// * request 4 needs the whole budget again but carries a
+///   1 ms deadline against a 50 ms service time             → DeadlineExceeded
+///
+/// Threaded service times are work-closure sleeps; the sim replays the
+/// identical trace through `service_us` overrides, so the two sides share
+/// one ground truth rather than a fitted cost model.
+#[test]
+fn open_loop_outcome_classes_agree_between_threads_and_sim() {
+    use graphi::runtime::{AdmissionPolicy, AdmitRequest};
+    use graphi::util::rng::Rng;
+    use std::sync::Mutex;
+
+    let g = {
+        let mut b = GraphBuilder::new();
+        b.add("op", OpKind::Scalar);
+        b.build().unwrap()
+    };
+    // the deadline request runs a 2-op chain: the fleet checks deadlines
+    // cooperatively at pop time, so op 0's sleep must push op 1's pop past
+    // the deadline for the threads to observe the miss
+    let g_chain = {
+        let mut b = GraphBuilder::new();
+        let a = b.add("op0", OpKind::Scalar);
+        let z = b.add("op1", OpKind::Scalar);
+        b.depend(a, z);
+        b.build().unwrap()
+    };
+
+    // seeded arrivals: fixed 40 ms spacing plus < 8 ms of seeded jitter
+    // (gaps stay positive, so the trace stays in ticket order)
+    let mut rng = Rng::new(0xA881_0008);
+    let at: Vec<f64> =
+        [0.0, 40_000.0, 80_000.0, 120_000.0, 160_000.0]
+            .iter()
+            .map(|base| base + rng.below(8_000) as f64)
+            .collect();
+    let trace = vec![
+        SimArrival { at_us: at[0], bytes: 100, service_us: Some(300_000.0), ..Default::default() },
+        SimArrival {
+            at_us: at[1],
+            bytes: 100,
+            patience_us: Some(0.0),
+            service_us: Some(10_000.0),
+            ..Default::default()
+        },
+        SimArrival { at_us: at[2], bytes: 50, service_us: Some(20_000.0), ..Default::default() },
+        SimArrival { at_us: at[3], bytes: 50, service_us: Some(20_000.0), ..Default::default() },
+        SimArrival {
+            at_us: at[4],
+            bytes: 100,
+            deadline_us: Some(1_000.0),
+            service_us: Some(50_000.0),
+            ..Default::default()
+        },
+    ];
+    let graphs: Vec<&Graph> = (0..trace.len()).map(|i| if i == 4 { &g_chain } else { &g }).collect();
+    // per-request work closures built before the fleet scope so their
+    // borrows outlive every session; each spreads the trace's service time
+    // evenly over its graph's ops, so threads and sim price identically
+    let works: Vec<Box<dyn Fn(NodeId) + Send + Sync>> = trace
+        .iter()
+        .zip(&graphs)
+        .map(|(a, g)| {
+            let service_us = a.service_us.expect("every trace entry is service-priced");
+            let sleep_us = (service_us / g.len() as f64) as u64;
+            Box::new(move |_n: NodeId| std::thread::sleep(Duration::from_micros(sleep_us)))
+                as Box<dyn Fn(NodeId) + Send + Sync>
+        })
+        .collect();
+    let env = SimEnv::knl_deterministic();
+
+    for mode in DispatchMode::ALL {
+        for policy in AdmissionPolicy::ALL {
+            let tag = format!("{} {}", mode.name(), policy.name());
+            // --- simulator replay ---
+            let engine = GraphiEngine::new(2, 8).with_dispatch(mode);
+            let sim = engine.run_open_loop(&graphs, &env, &trace, 100, policy);
+            let expected: Vec<&str> = sim
+                .iter()
+                .map(|r| match r.outcome {
+                    SimSessionOutcome::Completed => "completed",
+                    SimSessionOutcome::Shed => "shed",
+                    SimSessionOutcome::DeadlineExceeded => "deadline_missed",
+                    ref other => panic!("{tag}: sim produced {other:?} without a fault model"),
+                })
+                .collect();
+            // the engineered margins pin the sim classes exactly
+            assert_eq!(
+                expected,
+                ["completed", "shed", "completed", "completed", "deadline_missed"],
+                "{tag}: sim mirror"
+            );
+
+            // --- threaded replay of the same trace ---
+            let slots: Vec<Mutex<&'static str>> =
+                trace.iter().map(|_| Mutex::new("unresolved")).collect();
+            let totals = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(2).with_dispatch(mode));
+                let fleet_ref = &fleet;
+                let queue = SessionQueue::new(100).with_policy(policy);
+                let queue_ref = &queue;
+                std::thread::scope(|reqs| {
+                    for (i, a) in trace.iter().enumerate() {
+                        let slot = &slots[i];
+                        let g: &Graph = graphs[i];
+                        let work = works[i].as_ref();
+                        reqs.spawn(move || {
+                            std::thread::sleep(Duration::from_micros(a.at_us as u64));
+                            let mut req = AdmitRequest::new(a.bytes).with_class(a.class);
+                            if let Some(p) = a.patience_us {
+                                req = req.with_patience(Duration::from_micros(p as u64));
+                            }
+                            let permit = match queue_ref.admit_request(req) {
+                                Ok(p) => p,
+                                Err(_) => {
+                                    fleet_ref.record_shed();
+                                    *slot.lock().unwrap() = "shed";
+                                    return;
+                                }
+                            };
+                            let handle = match a.deadline_us {
+                                Some(d) => fleet_ref.submit_with_deadline(
+                                    g,
+                                    unit_levels(g),
+                                    work,
+                                    Duration::from_micros(d as u64),
+                                ),
+                                None => fleet_ref.submit(g, unit_levels(g), work),
+                            };
+                            let out = match handle.wait() {
+                                Ok(_) => "completed",
+                                Err(SessionError::DeadlineExceeded) => "deadline_missed",
+                                Err(other) => panic!("unexpected terminal {other:?}"),
+                            };
+                            drop(permit);
+                            *slot.lock().unwrap() = out;
+                        });
+                    }
+                });
+                // deadline misses surface through the shutdown error; the
+                // totals snapshot is the same either way
+                match fleet.shutdown() {
+                    Ok(t) => t,
+                    Err(e) => e.totals,
+                }
+            });
+            let observed: Vec<&str> =
+                slots.iter().map(|s| *s.lock().unwrap()).collect();
+            assert_eq!(observed, expected, "{tag}: threads vs sim outcome classes");
+            // and the fleet's own 5-class ledger tells the same story
+            assert_eq!(totals.sessions_completed, 3, "{tag}");
+            assert_eq!(totals.sessions_deadline_missed, 1, "{tag}");
+            assert_eq!(totals.sessions_shed, 1, "{tag}");
+            assert_eq!(totals.sessions_failed + totals.sessions_cancelled, 0, "{tag}");
+        }
+    }
 }
 
 /// The serve-mode acceptance differential: on random DAG pairs, the sim

@@ -562,6 +562,206 @@ fn stress_fault_injection_shared_fleet() {
     }
 }
 
+/// PR 8 overload chaos: a seeded [`OverloadPlan`] — an arrival **burst**
+/// at t = 0 plus trailing arrivals, every session under one tight
+/// deadline (doubling as admission patience), one op panic and a
+/// sprinkle of cancels — replayed against a shared fleet behind a
+/// 3-unit admission budget, across both dispatch modes, 2/4 executors
+/// and all three admission policies. Asserts, under the channel
+/// watchdog:
+///
+/// * **exact 5-class conservation**: completed + failed + cancelled +
+///   deadline_missed + shed equals the offered request count, and each
+///   client-observed class matches the fleet's own totals counter;
+/// * **structured outcomes**: a panic terminal only on the panic plan
+///   (with the testkit payload tag), a cancel terminal only on a cancel
+///   plan — and no session ever runs an op twice;
+/// * **no leaks**: the admission budget returns to zero with no phantom
+///   waiters (RAII permits across panics, sheds and misses), and the
+///   executor thread count is exact after shutdown.
+#[test]
+fn stress_overload_shared_fleet() {
+    use graphi::runtime::{AdmissionPolicy, AdmitRequest, SessionError, SessionQueue};
+    use graphi::util::testkit::{FaultPlan, OverloadPlan};
+
+    // overload runs sleep through real arrival gaps and deadlines, so
+    // fewer, bigger iterations than the microsecond-scale suites
+    const OVERLOAD_ITERS: usize = 20;
+    const SESSIONS: usize = 12;
+    const GAP_US: u64 = 2_000;
+    const DEADLINE_US: u64 = 3_000;
+    const OP_SLEEP_US: u64 = 100;
+    const BUDGET: u64 = 3;
+
+    let graph = Arc::new(diamond_chain(6));
+    let mut rng = Rng::new(base_seed() ^ 0x0E21);
+    for iter in 0..OVERLOAD_ITERS {
+        let policy = AdmissionPolicy::ALL[iter % AdmissionPolicy::ALL.len()];
+        for &execs in &FLEETS[..2] {
+            for mode in DispatchMode::ALL {
+                let tag =
+                    format!("overload/iter{iter}/{execs}exec/{}/{}", mode.name(), policy.name());
+                let plan = OverloadPlan::draw(&mut rng, SESSIONS, graph.len(), GAP_US, DEADLINE_US);
+                let level_sets: Vec<Vec<f64>> =
+                    (0..SESSIONS).map(|_| seeded_levels(graph.len(), &mut rng)).collect();
+                let (tx, rx) = mpsc::channel();
+                let worker_graph = Arc::clone(&graph);
+                let worker_plan = plan.clone();
+                std::thread::spawn(move || {
+                    let graph = worker_graph;
+                    let plan = worker_plan;
+                    let deadline = Duration::from_micros(DEADLINE_US);
+                    let probes: Vec<Arc<Vec<AtomicU32>>> = (0..SESSIONS)
+                        .map(|_| Arc::new((0..graph.len()).map(|_| AtomicU32::new(0)).collect()))
+                        .collect();
+                    let works: Vec<Box<dyn Fn(NodeId) + Send + Sync>> = plan
+                        .plans
+                        .iter()
+                        .zip(&probes)
+                        .map(|(p, probe)| {
+                            let probe = Arc::clone(probe);
+                            Box::new(p.clone().wrap(move |v: NodeId| {
+                                probe[v as usize].fetch_add(1, Ordering::SeqCst);
+                                std::thread::sleep(Duration::from_micros(OP_SLEEP_US));
+                            })) as Box<dyn Fn(NodeId) + Send + Sync>
+                        })
+                        .collect();
+                    let queue = SessionQueue::new(BUDGET).with_policy(policy);
+                    // completed / failed / cancelled / deadline_missed / shed
+                    let classes: [AtomicU64; 5] = std::array::from_fn(|_| AtomicU64::new(0));
+                    let shutdown = std::thread::scope(|scope| {
+                        let fleet = Fleet::new(
+                            scope,
+                            FleetConfig::new(execs)
+                                .with_dispatch(mode)
+                                .with_watchdog(Duration::from_secs(10)),
+                        );
+                        let fleet_ref = &fleet;
+                        let queue_ref = &queue;
+                        let classes = &classes;
+                        let g: &Graph = &graph;
+                        std::thread::scope(|clients| {
+                            for i in 0..SESSIONS {
+                                let arrive = plan.arrive_us[i];
+                                let session_plan = plan.plans[i].clone();
+                                let levels = level_sets[i].clone();
+                                let work = works[i].as_ref();
+                                clients.spawn(move || {
+                                    std::thread::sleep(Duration::from_micros(arrive));
+                                    let req = AdmitRequest::new(1)
+                                        .with_class((i % 3) as u8)
+                                        .with_patience(deadline);
+                                    let permit = match queue_ref.admit_request(req) {
+                                        Ok(p) => p,
+                                        Err(_) => {
+                                            fleet_ref.record_shed();
+                                            classes[4].fetch_add(1, Ordering::SeqCst);
+                                            return;
+                                        }
+                                    };
+                                    let handle =
+                                        fleet_ref.submit_with_deadline(g, levels, work, deadline);
+                                    if let Some(after_us) = session_plan.cancel_after_us {
+                                        std::thread::sleep(Duration::from_micros(after_us as u64));
+                                        handle.cancel();
+                                    }
+                                    let class = match handle.wait() {
+                                        Ok(_) => {
+                                            assert!(
+                                                session_plan.panic_at.is_none(),
+                                                "s{i}: panic plan completed"
+                                            );
+                                            0
+                                        }
+                                        Err(SessionError::OpPanicked { node, payload }) => {
+                                            assert_eq!(
+                                                Some(node),
+                                                session_plan.panic_at,
+                                                "s{i}: wrong blamed node"
+                                            );
+                                            assert!(
+                                                payload.contains(FaultPlan::PANIC_TAG),
+                                                "s{i}: foreign panic payload: {payload}"
+                                            );
+                                            1
+                                        }
+                                        Err(SessionError::Cancelled) => {
+                                            assert!(
+                                                session_plan.cancel_after_us.is_some(),
+                                                "s{i}: spurious cancel"
+                                            );
+                                            2
+                                        }
+                                        Err(SessionError::DeadlineExceeded) => 3,
+                                        Err(other) => panic!("s{i}: unexpected terminal {other:?}"),
+                                    };
+                                    drop(permit);
+                                    classes[class].fetch_add(1, Ordering::SeqCst);
+                                });
+                            }
+                        });
+                        assert_eq!(queue.in_use(), 0, "leaked admission budget");
+                        assert_eq!(queue.waiting(), 0, "phantom admission waiters");
+                        fleet.shutdown()
+                    });
+                    let classes: Vec<u64> =
+                        classes.iter().map(|c| c.load(Ordering::SeqCst)).collect();
+                    let probe_counts: Vec<Vec<u32>> = probes
+                        .iter()
+                        .map(|p| p.iter().map(|c| c.load(Ordering::SeqCst)).collect())
+                        .collect();
+                    let _ = tx.send((classes, probe_counts, shutdown));
+                });
+                let (classes, probe_counts, shutdown) = match rx.recv_timeout(WATCHDOG) {
+                    Ok(out) => out,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        panic!("{tag}: no quiescence within {WATCHDOG:?} — overload hang")
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        panic!("{tag}: worker thread panicked inside the run")
+                    }
+                };
+                for (si, counts) in probe_counts.iter().enumerate() {
+                    for (v, &n) in counts.iter().enumerate() {
+                        assert!(n <= 1, "{tag}/s{si}: node {v} executed {n} times");
+                    }
+                }
+                let totals = match shutdown {
+                    Ok(t) => {
+                        assert_eq!(classes[1], 0, "{tag}: failures but shutdown reported clean");
+                        t
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.panicked_threads.is_empty(),
+                            "{tag}: fleet thread died: {:?}",
+                            e.panicked_threads
+                        );
+                        e.totals
+                    }
+                };
+                assert_eq!(
+                    totals.executor_threads, execs as u64,
+                    "{tag}: executor threads leaked or respawned"
+                );
+                // the fleet ledger and the client-observed classes must be
+                // the same story, class by class…
+                assert_eq!(totals.sessions_completed, classes[0], "{tag}: completed");
+                assert_eq!(totals.sessions_failed, classes[1], "{tag}: failed");
+                assert_eq!(totals.sessions_cancelled, classes[2], "{tag}: cancelled");
+                assert_eq!(totals.sessions_deadline_missed, classes[3], "{tag}: deadline_missed");
+                assert_eq!(totals.sessions_shed, classes[4], "{tag}: shed");
+                // …and the five classes must conserve the offered load
+                assert_eq!(
+                    classes.iter().sum::<u64>(),
+                    SESSIONS as u64,
+                    "{tag}: 5-class conservation: {classes:?}"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn stress_numa_mapped_fleet() {
     // the NUMA-ranked steal path under real concurrency: a 2-domain map
