@@ -586,6 +586,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
          latency-vs-throughput knee (put ≈2× capacity last for the shed headline)",
     )
     .opt("admission", Some("fifo"), "admission order: fifo|priority|edf")
+    .opt(
+        "max-batch",
+        Some("1"),
+        "merge up to N compatible waiting requests into one batched session (open loop only)",
+    )
+    .opt(
+        "batch-window-us",
+        Some("200"),
+        "how long a batch leader waits for compatible requests before admitting",
+    )
     .opt("queue-depth", None, "bounded admission queue depth; overflow is shed as queue_full")
     .opt(
         "trace-sample",
@@ -675,6 +685,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ("poisson" | "bursty", None) => bail!("--arrival {arrival_name} needs --rps"),
         (other, _) => bail!("bad --arrival {other} (closed|poisson|bursty)"),
     };
+    let max_batch = positive("max-batch")?;
+    if max_batch > 256 {
+        bail!("--max-batch {max_batch} exceeds the 256-way batching cap");
+    }
+    if max_batch > 1 && matches!(arrival, crate::runtime::Arrival::Closed) {
+        bail!(
+            "--max-batch > 1 needs an open-loop --arrival (poisson|bursty): closed-loop \
+             clients self-throttle, so there is nothing waiting to merge"
+        );
+    }
+    let batch_window_us = m.get_u64("batch-window-us").map_err(Error::new)?.unwrap();
     let sweep_points = rps_points.as_ref().filter(|p| p.len() > 1);
     if sweep_points.is_some() && trace_chrome.is_some() {
         bail!("--trace-chrome with a multi-point --rps sweep would overwrite itself per point");
@@ -706,6 +727,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         admission,
         queue_depth,
         trace_sample,
+        batch_window_us,
+        max_batch,
         ..crate::runtime::ServeConfig::default()
     };
     let mut runner = m
@@ -798,6 +821,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 format!("serve_p99_latency_us_{}", mode.name()),
                 report.latency_us.p99,
             ));
+            if cfg.max_batch > 1 {
+                runner.record_with_metric(
+                    &format!("serve_batched_fraction_{}", mode.name()),
+                    &labels,
+                    report.wall_s * 1e6,
+                    Some((report.batched_fraction, "fraction")),
+                );
+                headlines.push((
+                    format!("serve_batched_fraction_{}", mode.name()),
+                    report.batched_fraction,
+                ));
+            }
         }
     }
     if let Some(runner) = &runner {
@@ -1074,7 +1109,7 @@ mod tests {
                 "serve", "--requests", "8", "--executors", "2", "--mix", "mlp=1", "--size",
                 "small", "--dispatch", "decentralized", "--arrival", "poisson", "--rps",
                 "500", "--admission", "edf", "--queue-depth", "4", "--deadline-us",
-                "5000000",
+                "5000000", "--max-batch", "3", "--batch-window-us", "2000",
             ])),
             0
         );
@@ -1109,6 +1144,16 @@ mod tests {
         assert_eq!(main(args(&["serve", "--requests", "2", "--admission", "lifo"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--queue-depth", "0"])), 1);
         assert_eq!(main(args(&["serve", "--requests", "2", "--trace-sample", "0"])), 1);
+        // batching needs an open-loop arrival process and a sane cap
+        assert_eq!(main(args(&["serve", "--requests", "2", "--max-batch", "4"])), 1);
+        assert_eq!(main(args(&["serve", "--requests", "2", "--max-batch", "0"])), 1);
+        assert_eq!(
+            main(args(&[
+                "serve", "--requests", "2", "--arrival", "poisson", "--rps", "100",
+                "--max-batch", "300",
+            ])),
+            1
+        );
         // a multi-point sweep would overwrite a single trace file
         assert_eq!(
             main(args(&[

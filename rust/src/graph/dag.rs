@@ -663,6 +663,33 @@ mod tests {
         }
     }
 
+    /// Serve-mode batching unions the *same* model graph k times, and
+    /// user-authored node names may themselves look like `s0/...` — the
+    /// `s<gi>/` prefix must still keep every union name unique and the
+    /// origin map must round-trip exactly (trace splitting relies on it).
+    #[test]
+    fn disjoint_union_names_stay_unique_under_adversarial_inputs() {
+        use std::collections::HashSet;
+        // adversarial: nodes pre-named with union-style prefixes
+        let mut b = GraphBuilder::new();
+        let n0 = b.add("s0/op", OpKind::Scalar);
+        let n1 = b.add("s1/op", OpKind::Scalar);
+        b.depend(n0, n1);
+        let tricky = b.build().unwrap();
+        // homogeneous 3-way batch of one graph — the serve batcher's shape
+        let (union, origin) = Graph::disjoint_union(&[&tricky, &tricky, &tricky]);
+        assert_eq!(union.len(), 3 * tricky.len());
+        let names: HashSet<&str> = union.nodes().iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names.len(), union.len(), "duplicate node names in the union");
+        // origin round-trip: every union name is exactly s<gi>/<local name>
+        for u in 0..union.len() {
+            let (gi, local) = origin[u];
+            assert_eq!(union.node(u as NodeId).name, format!("s{gi}/{}", tricky.node(local).name));
+            // component slices are contiguous: union id ↔ (gi, local)
+            assert_eq!(u, gi * tricky.len() + local as usize);
+        }
+    }
+
     #[test]
     fn disconnected_components_ok() {
         let mut b = GraphBuilder::new();

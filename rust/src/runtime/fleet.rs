@@ -71,6 +71,16 @@
 //! whole budget is admitted only alone — the queue degrades to serial
 //! execution rather than deadlocking or lying about memory.
 //!
+//! The serve loop can also merge compatible waiting requests *before*
+//! they reach this queue: cross-session dynamic batching
+//! ([`crate::runtime::serve::Batcher`]) unions up to `--max-batch`
+//! same-model requests into **one** session and one admission entry
+//! (bytes are the member sum, the class/patience/deadline are the member
+//! minima), so under a small-session overload the queue grants fewer,
+//! larger footprints instead of thrashing the budget on tiny ones. The
+//! fleet itself is batching-agnostic — a batched session is an ordinary
+//! [`crate::graph::Graph::disjoint_union`] submission.
+//!
 //! # Failure semantics
 //!
 //! Each session is a **fault domain**: an op that panics, a client
@@ -1708,6 +1718,17 @@ pub const DEFAULT_PRIORITY_CLASS: u8 = 1;
 /// trusts its pace estimate.
 const PREDICT_MIN_GRANTS: u64 = 4;
 
+/// Effective priority class of a waiter that has waited `waited_us` under
+/// an aging quantum of `quantum_us`: the class improves one step per full
+/// quantum waited and **saturates at 0** — a class-0 (or long-aged)
+/// request stays at 0 forever instead of wrapping, which a plain `-`
+/// would do (panic in debug builds, a giant key in release, starving the
+/// oldest waiter). Pinned by `aged_class_saturates_at_zero` below.
+fn effective_class(class: u8, waited_us: u64, quantum_us: u64) -> u64 {
+    let aged = waited_us / quantum_us.max(1);
+    (class as u64).saturating_sub(aged)
+}
+
 /// §5.1 admission control: a byte budget over the *planned peak arena
 /// footprints* of in-flight sessions ([`crate::graph::memory::plan`]).
 /// [`admit`](SessionQueue::admit) blocks until the session fits; a session
@@ -1969,7 +1990,16 @@ impl SessionQueue {
             if self.predict && state.blocked_grants >= PREDICT_MIN_GRANTS {
                 if let Some(p) = patience {
                     let depth = self.waiting_locked(&state) + 1;
-                    let est_wait_us = depth as f64 * state.grant_gap_ewma_us;
+                    // the EWMA only updates when grants happen, so during a
+                    // no-grant stall it goes stale (low) exactly when the
+                    // line is most hopeless — floor the per-grant pace with
+                    // the observed time since the last grant, which is a
+                    // lower bound on the *next* gap
+                    let stall_us = state
+                        .last_grant_us
+                        .map_or(0.0, |g| enqueued_us.saturating_sub(g) as f64);
+                    let est_gap_us = state.grant_gap_ewma_us.max(stall_us);
+                    let est_wait_us = depth as f64 * est_gap_us;
                     if est_wait_us > p.as_micros() as f64 {
                         drop(state);
                         self.sheds.fetch_add(1, Ordering::Relaxed);
@@ -2056,8 +2086,7 @@ impl SessionQueue {
             .min_by_key(|(ticket, w)| {
                 let key = match self.policy {
                     AdmissionPolicy::Priority => {
-                        let aged = now_us.saturating_sub(w.enqueued_us) / quantum_us;
-                        (w.class as u64).saturating_sub(aged)
+                        effective_class(w.class, now_us.saturating_sub(w.enqueued_us), quantum_us)
                     }
                     AdmissionPolicy::Edf => w.deadline_us,
                     AdmissionPolicy::Fifo => unreachable!("FIFO orders by head ticket"),
@@ -2656,6 +2685,100 @@ mod tests {
         });
         assert_eq!(q.waiting(), 0);
         assert_eq!(q.in_use(), 0);
+    }
+
+    /// Satellite regression (fails before the stall floor): the grant-gap
+    /// EWMA only updates when grants happen, so after a long no-grant
+    /// stall the stale low estimate made `PredictedLate` under-shed
+    /// exactly when the queue was most hopeless — the arrival below would
+    /// wait out its whole patience and time out instead of being rejected
+    /// at arrival. The fix floors the per-grant pace estimate with the
+    /// observed elapsed time since the last grant.
+    #[test]
+    fn wait_prediction_survives_a_grant_stall() {
+        let q = SessionQueue::new(100).with_wait_prediction();
+        // history: five blocked grants paced ~1ms apart → EWMA ≈ 1ms
+        for _ in 0..5 {
+            let holder = q.admit(100);
+            std::thread::scope(|s| {
+                let q = &q;
+                s.spawn(move || {
+                    let p = q.admit_request(
+                        AdmitRequest::new(100).with_patience(Duration::from_secs(30)),
+                    );
+                    drop(p.expect("history waiters are patient"));
+                });
+                while q.waiting() == 0 {
+                    std::thread::yield_now();
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                drop(holder);
+            });
+        }
+        // stall: the holder stops granting for 60ms, far past the EWMA
+        let holder = q.admit(100);
+        std::thread::scope(|s| {
+            let q = &q;
+            s.spawn(move || {
+                let p = q.admit_request(
+                    AdmitRequest::new(100).with_patience(Duration::from_secs(30)),
+                );
+                drop(p.expect("patient waiter"));
+            });
+            while q.waiting() == 0 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(Duration::from_millis(60));
+            // depth 2 × floored gap (≥60ms stall) ≫ 30ms patience: shed at
+            // arrival. Pre-fix the estimate stayed ≈ 2 × 1ms EWMA < 30ms,
+            // so this request waited its patience out (AdmissionTimeout).
+            let t0 = Instant::now();
+            let err = q
+                .admit_request(AdmitRequest::new(10).with_patience(Duration::from_millis(30)))
+                .expect_err("a stalled queue must shed predictably-late arrivals");
+            assert_eq!(err, ShedReason::PredictedLate);
+            assert!(
+                t0.elapsed() < Duration::from_millis(25),
+                "predicted-late is an at-arrival rejection, not a timeout"
+            );
+            drop(holder);
+        });
+        assert_eq!(q.waiting(), 0);
+        assert_eq!(q.in_use(), 0);
+    }
+
+    /// Satellite pin: the effective-class computation saturates at class
+    /// 0 however long the wait — a class-0 waiter aged for many quanta
+    /// must not wrap (debug-build panic / giant release key).
+    #[test]
+    fn aged_class_saturates_at_zero() {
+        // class 0 aged 1000 quanta: a plain `-` would underflow here
+        assert_eq!(effective_class(0, 1_000_000, 1_000), 0);
+        assert_eq!(effective_class(2, 0, 1_000), 2);
+        assert_eq!(effective_class(2, 2_000, 1_000), 0);
+        assert_eq!(effective_class(2, u64::MAX, 1_000), 0);
+        // a zero quantum is floored, never a divide-by-zero
+        assert_eq!(effective_class(3, 10, 0), 0);
+    }
+
+    /// Satellite pin, end-to-end: a class-0 waiter aged ~50 quanta keeps
+    /// the head against a fresh class-0 arrival (both saturate to
+    /// effective class 0; the older ticket breaks the tie) — long waits
+    /// neither wrap nor demote the oldest waiter.
+    #[test]
+    fn long_aged_class0_waiter_keeps_the_head() {
+        let q = SessionQueue::new(100)
+            .with_policy(AdmissionPolicy::Priority)
+            .with_priority_aging(Duration::from_millis(1));
+        let reqs = [
+            ("old-urgent", AdmitRequest::new(100).with_class(0)),
+            ("fresh-urgent", AdmitRequest::new(100).with_class(0)),
+        ];
+        assert_eq!(
+            grant_order(&q, &reqs, Duration::from_millis(50)),
+            vec!["old-urgent", "fresh-urgent"]
+        );
+        assert_eq!(q.waiting(), 0);
     }
 
     #[test]

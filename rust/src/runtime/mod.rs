@@ -41,7 +41,10 @@ pub use fleet::{
     SessionError, SessionHandle, SessionQueue, SessionReport, ShedReason,
 };
 pub use pjrt::{LoadedModule, PjrtRuntime};
-pub use serve::{serve, serve_sweep, Arrival, ServeConfig, ServeReport, SweepPoint, SweepReport};
+pub use serve::{
+    serve, serve_sweep, Arrival, BatchGroup, BatchJoin, BatchMember, Batcher, ServeConfig,
+    ServeReport, SweepPoint, SweepReport,
+};
 pub use telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 pub use threaded::{ThreadedGraphi, UnsupportedPolicy};
 pub use train::{load_parallel_setting, LstmTrainer, SyntheticCorpus, TrainReport};

@@ -32,6 +32,32 @@
 //! `completed + failed + cancelled + deadline_missed + shed == requests`
 //! exactly.
 //!
+//! Riding on that frontier is **cross-session dynamic batching**
+//! ([`Batcher`], ROADMAP item 1): with [`ServeConfig::max_batch`] > 1,
+//! open-loop requests for the *same* zoo entry (one `(ModelKind,
+//! ModelSize, training)` combination) that arrive within
+//! [`ServeConfig::batch_window_us`] of the first waiter merge into **one
+//! fleet session** over [`Graph::disjoint_union`], so the fleet pays
+//! per-session dispatch and admission cost once instead of `k` times.
+//! The batching rules:
+//!
+//! * The first request of a group is the **leader**: it waits out the
+//!   window (cut short the instant the group fills to `max_batch`),
+//!   then admits and submits for everyone. The window wait counts
+//!   against every member's latency.
+//! * A batch is **one admission-queue entry**: it charges the *sum* of
+//!   its members' planned peaks (the components execute concurrently,
+//!   so their arenas coexist), carries the most urgent member class,
+//!   and — on shed — sheds every member, one counted shed each.
+//! * The one `SessionReport` fans back out per member: each logical
+//!   request gets its own latency sample, outcome class, telemetry ring
+//!   sample, and Chrome-trace lifecycle lane, so request-level
+//!   conservation stays exact whether or not requests were merged.
+//! * Requests that drew a fault plan (panic / delay / cancel) never
+//!   batch — a fault must stay confined to its own request — and a zoo
+//!   entry whose union would exceed the fleet's packed-key node limit
+//!   caps its own batch size.
+//!
 //! [`serve_sweep`] replays the same configuration across a list of
 //! offered loads and reports the **latency-vs-throughput knee**: the
 //! highest offered rps that still completes ≥90 % of its offered load
@@ -48,7 +74,7 @@
 //! [`TelemetryRing`].
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::trace::{export_chrome_trace, OpRecord, SessionTraceExport};
@@ -57,7 +83,7 @@ use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
 use crate::models::{self, ModelKind, ModelSize};
 use crate::runtime::fleet::{
     AdmissionPolicy, AdmitRequest, Fleet, FleetConfig, FleetTotals, SessionError, SessionQueue,
-    ShedReason,
+    ShedReason, MAX_SESSION_NODES,
 };
 use crate::runtime::telemetry::{OutcomeClass, SessionSample, TelemetryRing, TelemetrySnapshot};
 use crate::util::rng::Rng;
@@ -115,7 +141,10 @@ fn arrival_offsets_us(arrival: Arrival, n: usize, seed: u64) -> Vec<u64> {
             assert!(rps.is_finite() && rps > 0.0, "poisson arrivals need rps > 0");
             for _ in 0..n {
                 t += rng.exponential(1e6 / rps);
-                out.push(t as u64);
+                // round to the nearest µs: `as u64` truncates toward zero,
+                // which at high rps systematically drags offsets early and
+                // collapses sub-µs gaps worse than rounding does
+                out.push(t.round() as u64);
             }
         }
         Arrival::Bursty { rps } => {
@@ -133,7 +162,7 @@ fn arrival_offsets_us(arrival: Arrival, n: usize, seed: u64) -> Vec<u64> {
                 }
                 on_left -= gap;
                 t += gap;
-                out.push(t as u64);
+                out.push(t.round() as u64);
             }
         }
     }
@@ -196,6 +225,15 @@ pub struct ServeConfig {
     /// Capacity of the bounded ring of recent session samples that
     /// telemetry snapshots aggregate over.
     pub telemetry_ring: usize,
+    /// Cross-session dynamic batching: open-loop requests for the same
+    /// zoo entry arriving within this window of the first waiter merge
+    /// into one fleet session (see the module docs). Only consulted when
+    /// `max_batch > 1`.
+    pub batch_window_us: u64,
+    /// Max logical requests per merged session. 1 (the default) disables
+    /// batching entirely and keeps the pre-batching serve path
+    /// bit-for-bit. Values > 1 require an open-loop arrival process.
+    pub max_batch: usize,
     pub seed: u64,
 }
 
@@ -227,6 +265,8 @@ impl Default for ServeConfig {
             trace_sample: 1,
             telemetry_every_ms: None,
             telemetry_ring: 1024,
+            batch_window_us: 200,
+            max_batch: 1,
             seed: 42,
         }
     }
@@ -238,6 +278,10 @@ pub struct ServeReport {
     pub dispatch: DispatchMode,
     /// Offered load for open-loop runs (`None` for the closed loop).
     pub offered_rps: Option<f64>,
+    /// Total requests offered to the run ([`ServeConfig::requests`]) —
+    /// the right-hand side of the conservation identity
+    /// [`accounted`](Self::accounted)` == offered`.
+    pub offered: usize,
     pub completed: usize,
     pub wall_s: f64,
     /// Completed sessions per second over the whole run.
@@ -256,12 +300,15 @@ pub struct ServeReport {
     pub max_in_flight: usize,
     /// Requests that blocked in admission before fitting the budget.
     pub admission_blocked: u64,
-    /// Sessions terminated by an op panic ([`SessionError::OpPanicked`]).
+    /// Requests whose session terminated with an op panic
+    /// ([`SessionError::OpPanicked`]). Counted per *logical request*: a
+    /// batched session's terminal counts once per member.
     pub failed: u64,
-    /// Sessions terminated by client cancel ([`SessionError::Cancelled`]).
+    /// Requests whose session was cancelled ([`SessionError::Cancelled`]),
+    /// per logical request.
     pub cancelled: u64,
-    /// Sessions terminated past their deadline
-    /// ([`SessionError::DeadlineExceeded`]).
+    /// Requests whose session ran past its deadline
+    /// ([`SessionError::DeadlineExceeded`]), per logical request.
     pub deadline_missed: u64,
     /// Requests shed at admission (never submitted): timed out, bounced
     /// off the depth cap, or predicted hopeless.
@@ -275,6 +322,13 @@ pub struct ServeReport {
     /// [`ServeConfig::telemetry_every_ms`] interval plus always one final
     /// snapshot, so this is never empty.
     pub snapshots: Vec<TelemetrySnapshot>,
+    /// Fraction of offered requests that ran inside a multi-request
+    /// batch (groups of ≥2). 0.0 whenever batching is off.
+    pub batched_fraction: f64,
+    /// Batch-size histogram: `(group size, groups formed)` for every
+    /// size that occurred, including size-1 groups whose window expired
+    /// with no joiner. Empty when batching is off.
+    pub batch_sizes: Vec<(usize, u64)>,
 }
 
 impl ServeReport {
@@ -348,6 +402,27 @@ impl ServeReport {
             "faults: {} failed  {} cancelled  {} deadline_missed  {} shed",
             self.failed, self.cancelled, self.deadline_missed, self.shed
         );
+        let _ = writeln!(
+            out,
+            "accounted: {}/{} requests (completed+failed+cancelled+deadline_missed+shed)",
+            self.accounted(),
+            self.offered
+        );
+        if !self.batch_sizes.is_empty() {
+            let batched: u64 =
+                self.batch_sizes.iter().filter(|(k, _)| *k >= 2).map(|(k, n)| *k as u64 * n).sum();
+            let _ = write!(
+                out,
+                "batching: {}/{} requests in multi-request batches ({:.1}%)  groups:",
+                batched,
+                self.offered,
+                self.batched_fraction * 100.0
+            );
+            for (k, n) in &self.batch_sizes {
+                let _ = write!(out, " {k}×{n}");
+            }
+            let _ = writeln!(out);
+        }
         if !self.shed_reasons.is_empty() {
             let _ = write!(out, "  shed by reason:");
             for (reason, n) in &self.shed_reasons {
@@ -371,12 +446,140 @@ impl ServeReport {
     }
 }
 
+/// A pre-built `k`-way disjoint union of one zoo entry's graph, with CP
+/// levels recomputed on the union (equal to the per-component levels —
+/// the [`Graph::disjoint_union`] property — but computed once here so a
+/// batch submit is as allocation-free as a solo submit).
+struct BatchedGraph {
+    graph: Graph,
+    levels: Arc<[f64]>,
+}
+
 struct ZooEntry {
     tag: String,
     graph: Graph,
     levels: Arc<[f64]>,
     peak_bytes: u64,
     weight: f64,
+    /// Union graphs for batch sizes `2..`, index `k-2`; truncated where
+    /// `k·len` would hit the fleet's packed-key node limit. Empty when
+    /// batching is off.
+    batched: Vec<BatchedGraph>,
+}
+
+/// One logical request waiting in a batch group: everything the group
+/// leader needs to admit, account, and trace on the member's behalf.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMember {
+    /// Request index within the run (trace-sampling identity).
+    pub index: usize,
+    /// Admission priority class (0 most urgent).
+    pub class: u8,
+    /// The member's own arrival instant — per-member latency is measured
+    /// from here, so the batch-window wait is charged to every member.
+    pub t0: Instant,
+}
+
+struct BatchState {
+    members: Vec<BatchMember>,
+    closed: bool,
+}
+
+/// One forming batch. Opaque: obtained from [`Batcher::join`] and handed
+/// back to [`Batcher::close`] by the group's leader.
+pub struct BatchGroup {
+    state: Mutex<BatchState>,
+    /// Signalled by the joiner that fills the group, so the leader's
+    /// window wait ends the moment the batch is full.
+    full: Condvar,
+}
+
+/// How [`Batcher::join`] placed a request.
+pub enum BatchJoin {
+    /// First in line: wait out the window via [`Batcher::close`], then
+    /// admit/submit/account for every member.
+    Leader(Arc<BatchGroup>),
+    /// Joined an open group; the leader resolves this request end to
+    /// end — the follower is done the moment it joins.
+    Follower,
+}
+
+/// Cross-session dynamic batching at the admission frontier (ROADMAP
+/// item 1): one open group slot per compatibility key (the serve loop
+/// keys by zoo entry, i.e. `(ModelKind, ModelSize, training)`). See the
+/// module docs for the batching rules.
+///
+/// Lock order: a slot's lock is always taken **before** its group's
+/// state lock; [`close`](Self::close) re-acquires in that order after
+/// its window wait, which is what makes leader close and joiner fill
+/// race-free.
+pub struct Batcher {
+    open: Vec<Mutex<Option<Arc<BatchGroup>>>>,
+    window: Duration,
+}
+
+impl Batcher {
+    /// `slots` compatibility keys, one bounded window for all of them.
+    pub fn new(slots: usize, window: Duration) -> Batcher {
+        Batcher { open: (0..slots).map(|_| Mutex::new(None)).collect(), window }
+    }
+
+    /// Join `slot`'s open group (capped at `cap` members), or open a new
+    /// group and become its leader. `cap` must be ≥2 — callers that
+    /// cannot batch a key at all should bypass the batcher entirely.
+    pub fn join(&self, slot: usize, member: BatchMember, cap: usize) -> BatchJoin {
+        debug_assert!(cap >= 2, "a batch cap of {cap} cannot merge anything");
+        let mut open = self.open[slot].lock().unwrap();
+        if let Some(group) = open.as_ref() {
+            let group = Arc::clone(group);
+            let mut st = group.state.lock().unwrap();
+            if !st.closed && st.members.len() < cap {
+                st.members.push(member);
+                if st.members.len() == cap {
+                    // the filler closes the group: retire the slot (still
+                    // held) and wake the leader out of its window wait
+                    st.closed = true;
+                    group.full.notify_one();
+                    drop(st);
+                    *open = None;
+                }
+                return BatchJoin::Follower;
+            }
+        }
+        let group = Arc::new(BatchGroup {
+            state: Mutex::new(BatchState { members: vec![member], closed: false }),
+            full: Condvar::new(),
+        });
+        *open = Some(Arc::clone(&group));
+        BatchJoin::Leader(group)
+    }
+
+    /// Leader only: wait out the batch window (cut short if a joiner
+    /// fills the group), retire the slot, and take the members. The
+    /// leader is always `members[0]`.
+    pub fn close(&self, slot: usize, group: &Arc<BatchGroup>) -> Vec<BatchMember> {
+        let deadline = Instant::now() + self.window;
+        let mut st = group.state.lock().unwrap();
+        while !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = group.full.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        drop(st);
+        // slot before state — the same order join() takes
+        let mut open = self.open[slot].lock().unwrap();
+        if let Some(g) = open.as_ref() {
+            if Arc::ptr_eq(g, group) {
+                *open = None;
+            }
+        }
+        let mut st = group.state.lock().unwrap();
+        st.closed = true;
+        std::mem::take(&mut st.members)
+    }
 }
 
 /// Everything the Chrome-trace exporter needs about one finished session.
@@ -387,6 +590,11 @@ struct ZooEntry {
 struct CollectedSession {
     zoo: usize,
     seq: u64,
+    /// Position within the fleet session's batch (0 for solo requests):
+    /// every member of a merged session keeps its own lifecycle lane.
+    member: usize,
+    /// Batch size of the fleet session this request rode in (1 = solo).
+    of: usize,
     submit_us: f64,
     end_us: f64,
     outcome: String,
@@ -415,11 +623,14 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     assert!(cfg.executors >= 1 && cfg.clients >= 1 && cfg.requests >= 1);
     assert!(!cfg.mix.is_empty(), "empty model mix");
     assert!(cfg.trace_sample >= 1, "trace_sample is 1-in-N with N >= 1");
+    assert!((1..=256).contains(&cfg.max_batch), "max_batch must be in 1..=256");
     let total_weight: f64 = cfg.mix.iter().map(|(_, w)| w).sum();
     assert!(total_weight > 0.0, "mix weights must sum to something positive");
 
     // Pre-build the zoo once: graph, CP levels from the analytic cost
-    // model, and the §5.1 planned peak footprint that admission charges.
+    // model, the §5.1 planned peak footprint that admission charges, and
+    // — with batching on — the k-way disjoint unions batches submit, so
+    // the serve hot path never builds a graph.
     let cost = crate::cost::CostModel::knl();
     let zoo: Vec<ZooEntry> = cfg
         .mix
@@ -434,6 +645,17 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 graph.nodes().iter().map(|n| cost.duration_us(&n.kind, 8)).collect();
             let levels: Arc<[f64]> = cp_levels(&graph, &durations).into();
             let peak_bytes = plan_memory(&graph, &graph.topo_order()).arena_bytes;
+            let batched: Vec<BatchedGraph> = (2..=cfg.max_batch)
+                .take_while(|&k| k * graph.len() < MAX_SESSION_NODES)
+                .map(|k| {
+                    let copies: Vec<&Graph> = vec![&graph; k];
+                    let (union, _) = Graph::disjoint_union(&copies);
+                    let durs: Vec<f64> =
+                        union.nodes().iter().map(|n| cost.duration_us(&n.kind, 8)).collect();
+                    let levels: Arc<[f64]> = cp_levels(&union, &durs).into();
+                    BatchedGraph { graph: union, levels }
+                })
+                .collect();
             ZooEntry {
                 tag: format!(
                     "{}-{}{}",
@@ -445,12 +667,25 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 levels,
                 peak_bytes,
                 weight,
+                batched,
             }
         })
         .collect();
 
     const CLASSES: [&str; 4] = ["ok", "failed", "cancelled", "deadline"];
     let open_loop = cfg.arrival != Arrival::Closed;
+    assert!(
+        cfg.max_batch == 1 || open_loop,
+        "cross-session batching (max_batch > 1) requires an open-loop arrival process: \
+         the closed loop self-throttles, so there is nothing waiting to merge"
+    );
+    // per-zoo batch cap: the configured cap, clamped where the union
+    // table was truncated by the session node limit
+    let batch_cap: Vec<usize> =
+        zoo.iter().map(|z| cfg.max_batch.min(z.batched.len() + 1)).collect();
+    let batcher = Batcher::new(zoo.len(), Duration::from_micros(cfg.batch_window_us));
+    let batched_requests = AtomicU64::new(0);
+    let batch_groups: Vec<AtomicU64> = (0..cfg.max_batch).map(|_| AtomicU64::new(0)).collect();
     let schedule: Vec<u64> = if open_loop {
         arrival_offsets_us(cfg.arrival, cfg.requests, cfg.seed)
     } else {
@@ -532,9 +767,138 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         };
         let note_shed = &note_shed;
 
+        // one merged fleet session for `members` (≥2) of zoo entry
+        // `pick`: the group leader runs this on behalf of everyone — one
+        // admission-queue entry, one submit over the pre-built union, one
+        // SessionReport fanned back out into per-member latencies,
+        // outcome classes, ring samples, and trace lanes. Resolves
+        // `outstanding` once per member.
+        let run_batch = |pick: usize, members: &[BatchMember]| {
+            let z = &zoo[pick];
+            let k = members.len();
+            let bz = &z.batched[k - 2];
+            debug_assert_eq!(bz.graph.len(), z.graph.len() * k);
+            // the union's components run concurrently, so the batch
+            // charges the sum of the members' planned peaks
+            let bytes = z.peak_bytes * k as u64;
+            // the most urgent member sets the batch's place in line
+            let class = members.iter().map(|m| m.class).min().unwrap_or(1);
+            let permit = match queue.try_admit(bytes) {
+                Some(p) => p,
+                None => {
+                    admission_blocked.fetch_add(k as u64, Ordering::Relaxed);
+                    let mut req = AdmitRequest::new(bytes).with_class(class);
+                    if let Some(d) = deadline {
+                        req = req.with_patience(d);
+                    }
+                    match queue.admit_request(req) {
+                        Ok(p) => p,
+                        Err(reason) => {
+                            // the whole batch sheds: one counted shed per
+                            // member, so conservation stays per-request
+                            for m in members {
+                                note_shed(reason, m.t0.elapsed().as_secs_f64() * 1e6, pick);
+                            }
+                            outstanding.fetch_sub(k, Ordering::SeqCst);
+                            return;
+                        }
+                    }
+                }
+            };
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            max_in_flight.fetch_max(now, Ordering::SeqCst);
+            let handle = if let Some(d) = deadline {
+                fleet_ref.submit_with_deadline(&bz.graph, Arc::clone(&bz.levels), work_ref, d)
+            } else {
+                fleet_ref.submit(&bz.graph, Arc::clone(&bz.levels), work_ref)
+            };
+            let seq = handle.seq();
+            let submit_us = handle.submitted_at_us();
+            let outcome = handle.wait();
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            drop(permit);
+            let lat_class = match &outcome {
+                Ok(_) => 0,
+                Err(SessionError::Cancelled) => 2,
+                Err(SessionError::DeadlineExceeded) => 3,
+                Err(_) => 1,
+            };
+            let glen = z.graph.len() as NodeId;
+            for (mi, m) in members.iter().enumerate() {
+                let lat = m.t0.elapsed().as_secs_f64() * 1e6;
+                latencies.lock().unwrap().push(lat);
+                by_class[lat_class].lock().unwrap().push(lat);
+                ring.push(SessionSample {
+                    t_us: fleet_ref.now_us(),
+                    latency_us: lat,
+                    class: CLASS_OUTCOMES[lat_class],
+                    model: pick as u8,
+                });
+                if collect_trace {
+                    let sampled = (m.index as u64) % cfg.trace_sample == 0;
+                    let (cause, end_us, records) = match &outcome {
+                        Ok(r) => (
+                            "done",
+                            submit_us + r.wall_us,
+                            if sampled {
+                                // the member's slice of the union: its
+                                // component's contiguous id range, mapped
+                                // back to model-local node ids
+                                r.records
+                                    .iter()
+                                    .filter(|rec| rec.node / glen == mi as NodeId)
+                                    .map(|rec| OpRecord {
+                                        node: rec.node % glen,
+                                        executor: rec.executor,
+                                        start_us: rec.start_us,
+                                        end_us: rec.end_us,
+                                    })
+                                    .collect()
+                            } else {
+                                Vec::new()
+                            },
+                        ),
+                        Err(SessionError::Cancelled) => {
+                            ("cancelled", fleet_ref.now_us(), Vec::new())
+                        }
+                        Err(SessionError::DeadlineExceeded) => {
+                            ("deadline", fleet_ref.now_us(), Vec::new())
+                        }
+                        Err(SessionError::Stalled) => ("stalled", fleet_ref.now_us(), Vec::new()),
+                        Err(SessionError::OpPanicked { .. }) => {
+                            ("failed", fleet_ref.now_us(), Vec::new())
+                        }
+                        Err(SessionError::Shed { .. }) => ("shed", fleet_ref.now_us(), Vec::new()),
+                    };
+                    collected.lock().unwrap().push(CollectedSession {
+                        zoo: pick,
+                        seq,
+                        member: mi,
+                        of: k,
+                        submit_us,
+                        end_us,
+                        outcome: cause.to_string(),
+                        records,
+                    });
+                }
+                if outcome.is_ok() {
+                    completed_per_model[pick].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            if let Ok(report) = &outcome {
+                // fleet-level counters stay per fleet session, so the
+                // per-session-sum == fleet-total partition stays exact
+                session_dispatches.fetch_add(report.dispatches, Ordering::Relaxed);
+                session_steals.fetch_add(report.steals, Ordering::Relaxed);
+            }
+            outstanding.fetch_sub(k, Ordering::SeqCst);
+        };
+        let run_batch = &run_batch;
+
         // the whole lifecycle of request `i`, shared by closed-loop
         // clients (which loop it) and open-loop request threads (one
-        // call each); every call resolves `outstanding` exactly once
+        // call each); every request resolves `outstanding` exactly once
+        // — here, or in run_batch when a batch leader resolves it
         let run_request = |i: usize, rng: &mut Rng| {
             // weighted model pick
             let mut draw = rng.f64() * total_weight;
@@ -560,6 +924,28 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 1
             };
             let t0 = Instant::now();
+            // batching gate: compatible waiting requests merge at the
+            // admission frontier. Faulty requests never batch (a panic or
+            // cancel must stay confined to its own request), and a zoo
+            // entry whose union table was truncated by the session node
+            // limit caps its own batch size.
+            if batch_cap[pick] > 1 && !plan.is_faulty() {
+                match batcher.join(pick, BatchMember { index: i, class, t0 }, batch_cap[pick]) {
+                    BatchJoin::Follower => return, // the leader resolves us
+                    BatchJoin::Leader(group) => {
+                        let members = batcher.close(pick, &group);
+                        batch_groups[members.len() - 1].fetch_add(1, Ordering::Relaxed);
+                        if members.len() >= 2 {
+                            batched_requests.fetch_add(members.len() as u64, Ordering::Relaxed);
+                            run_batch(pick, &members);
+                            return;
+                        }
+                        // the window expired with no joiner: fall through
+                        // to the solo path (the wait already counts
+                        // against t0, like any admission wait)
+                    }
+                }
+            }
             // §5.1 admission: wait until the planned peak fits — for at
             // most the deadline patience when one is configured, bounced
             // early by the depth cap / wait predictor when those are on
@@ -645,6 +1031,8 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 collected.lock().unwrap().push(CollectedSession {
                     zoo: pick,
                     seq,
+                    member: 0,
+                    of: 1,
                     submit_us,
                     end_us,
                     outcome: cause.to_string(),
@@ -758,11 +1146,17 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
 
     if let Some(path) = &cfg.trace_path {
         let mut sessions = collected.into_inner().unwrap();
-        sessions.sort_by_key(|s| s.seq);
+        sessions.sort_by_key(|s| (s.seq, s.member));
         let exports: Vec<SessionTraceExport<'_>> = sessions
             .iter()
             .map(|c| SessionTraceExport {
-                label: format!("session {} ({})", c.seq, zoo[c.zoo].tag),
+                // one lifecycle lane per *logical request*: members of a
+                // merged session share a seq but get their own lane
+                label: if c.of > 1 {
+                    format!("session {}.{} ({})", c.seq, c.member, zoo[c.zoo].tag)
+                } else {
+                    format!("session {} ({})", c.seq, zoo[c.zoo].tag)
+                },
                 graph: &zoo[c.zoo].graph,
                 levels: Some(&zoo[c.zoo].levels[..]),
                 records: &c.records,
@@ -787,9 +1181,11 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
     let completed = class_samples[0].len();
     let shed: u64 = shed_by_reason.iter().map(|n| n.load(Ordering::SeqCst)).sum();
     debug_assert_eq!(shed, totals.sessions_shed, "every shed is recorded on the fleet");
+    let batched = batched_requests.load(Ordering::SeqCst);
     ServeReport {
         dispatch: cfg.dispatch,
         offered_rps: cfg.arrival.offered_rps(),
+        offered: cfg.requests,
         completed,
         wall_s,
         throughput_rps: completed as f64 / wall_s.max(1e-9),
@@ -808,9 +1204,13 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         session_steals: session_steals.load(Ordering::SeqCst),
         max_in_flight: max_in_flight.load(Ordering::SeqCst),
         admission_blocked: admission_blocked.load(Ordering::SeqCst),
-        failed: totals.sessions_failed,
-        cancelled: totals.sessions_cancelled,
-        deadline_missed: totals.sessions_deadline_missed,
+        // request-level counts from the per-request class samples, NOT
+        // the fleet's per-session counters: one batched session's
+        // terminal must count once per member. Without batching the two
+        // are identical (one request per session).
+        failed: class_samples[1].len() as u64,
+        cancelled: class_samples[2].len() as u64,
+        deadline_missed: class_samples[3].len() as u64,
         shed,
         shed_reasons: REASON_NAMES
             .iter()
@@ -826,6 +1226,15 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
             .filter_map(|(c, s)| Summary::from_samples_opt(s).map(|sum| (c.to_string(), sum)))
             .collect(),
         snapshots: snapshots.into_inner().unwrap(),
+        batched_fraction: batched as f64 / cfg.requests as f64,
+        batch_sizes: batch_groups
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| {
+                let n = n.load(Ordering::SeqCst);
+                (n > 0).then_some((i + 1, n))
+            })
+            .collect(),
     }
 }
 
@@ -1095,6 +1504,70 @@ mod tests {
     }
 
     #[test]
+    fn arrival_offsets_round_to_the_nearest_microsecond() {
+        // reconstruct the exact f64 schedule in lockstep with the same
+        // rng stream and check every integer offset is the *nearest* µs:
+        // truncation (`as u64`) drags each offset toward zero by up to a
+        // full µs, which at high rps collapses sub-µs gaps and skews the
+        // realized inter-arrival spacing
+        let check = |arrival: Arrival, seed: u64, rel_tol: f64| {
+            let n = 2_000usize;
+            let offsets = arrival_offsets_us(arrival, n, seed);
+            assert!(
+                offsets.windows(2).all(|w| w[0] <= w[1]),
+                "{arrival:?}: offsets must be non-decreasing"
+            );
+            let mut rng = Rng::new(seed ^ 0xA881_7A1E);
+            let mut t = 0.0f64;
+            let exact: Vec<f64> = match arrival {
+                Arrival::Closed => unreachable!(),
+                Arrival::Poisson { rps } => (0..n)
+                    .map(|_| {
+                        t += rng.exponential(1e6 / rps);
+                        t
+                    })
+                    .collect(),
+                Arrival::Bursty { rps } => {
+                    let mut on_left = rng.exponential(BURST_ON_US);
+                    (0..n)
+                        .map(|_| {
+                            let mut gap = rng.exponential(1e6 / (BURST_FACTOR * rps));
+                            while gap > on_left {
+                                gap -= on_left;
+                                t += on_left + rng.exponential((BURST_FACTOR - 1.0) * BURST_ON_US);
+                                on_left = rng.exponential(BURST_ON_US);
+                            }
+                            on_left -= gap;
+                            t += gap;
+                            t
+                        })
+                        .collect()
+                }
+            };
+            for (i, (&o, &e)) in offsets.iter().zip(&exact).enumerate() {
+                assert!(
+                    (o as f64 - e).abs() <= 0.5,
+                    "{arrival:?} offset {i}: got {o}, exact {e:.3} — truncated, not rounded"
+                );
+            }
+            // the realized mean gap tracks the offered load
+            let rps = arrival.offered_rps().unwrap();
+            let mean_gap = *offsets.last().unwrap() as f64 / n as f64;
+            let want = 1e6 / rps;
+            assert!(
+                (mean_gap - want).abs() < want * rel_tol,
+                "{arrival:?}: mean gap {mean_gap:.3}µs, want ≈{want:.3}µs"
+            );
+        };
+        // 250k rps ⇒ 4µs mean gaps: sub-µs rounding error is material here
+        check(Arrival::Poisson { rps: 250_000.0 }, 7, 0.15);
+        // bursty needs a lower rate so 2k arrivals span many on/off
+        // windows (≈80 arrivals per window here) — the long-run average
+        // is noisier, hence the wider tolerance
+        check(Arrival::Bursty { rps: 2_000.0 }, 7, 0.40);
+    }
+
+    #[test]
     fn open_loop_overload_sheds_and_conserves_in_both_modes() {
         // ≥2× overload: a one-byte budget serializes sessions and the
         // offered load is far past the serial service rate, with a 2ms
@@ -1226,6 +1699,110 @@ mod tests {
         // sessions' worth of op spans
         assert!(full > 0 && quarter > 0);
         assert_eq!(quarter * 4, full, "full {full} quarter {quarter}");
+    }
+
+    #[test]
+    fn open_loop_batching_merges_conserves_and_reports() {
+        // 40 arrivals 20µs apart against a 5ms batch window: groups must
+        // form, and the request-level ledger must stay exact even though
+        // the fleet ran fewer sessions than requests
+        for mode in DispatchMode::ALL {
+            let cfg = ServeConfig {
+                executors: 2,
+                dispatch: mode,
+                clients: 1,
+                requests: 40,
+                arrival: Arrival::Poisson { rps: 50_000.0 },
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                max_batch: 4,
+                batch_window_us: 5_000,
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.accounted(), 40, "{}: {report:?}", mode.name());
+            assert_eq!(report.offered, 40, "{}", mode.name());
+            assert_eq!(report.completed, 40, "{}: comfortable load", mode.name());
+            assert_eq!(report.latency_us.n, 40, "{}: one latency per request", mode.name());
+            assert!(report.batched_fraction > 0.0, "{}: {report:?}", mode.name());
+            assert!(!report.batch_sizes.is_empty(), "{}", mode.name());
+            // the histogram never accounts for more requests than offered
+            let grouped: u64 = report.batch_sizes.iter().map(|(k, n)| *k as u64 * n).sum();
+            assert!(grouped <= 40, "{}: {report:?}", mode.name());
+            // merging happened: strictly fewer fleet sessions than requests
+            assert!(
+                report.totals.sessions_completed < report.completed as u64,
+                "{}: {report:?}",
+                mode.name()
+            );
+            let per_model_total: u64 = report.per_model.iter().map(|(_, n, _)| n).sum();
+            assert_eq!(per_model_total, 40, "{}", mode.name());
+            let text = report.render();
+            assert!(text.contains("batching: "), "{text}");
+            assert!(text.contains("accounted: 40/40"), "{text}");
+        }
+    }
+
+    #[test]
+    fn batched_overload_sheds_whole_groups_and_conserves() {
+        // overload against a serial budget with batching on: sheds now
+        // happen per *batch* inside the queue but must still be counted
+        // per member, keeping the 5-class request ledger exact
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 1,
+            requests: 60,
+            arrival: Arrival::Poisson { rps: 4000.0 },
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            budget_bytes: 1,
+            op_spin_us: 20.0,
+            deadline_us: Some(2_000),
+            max_batch: 4,
+            batch_window_us: 500,
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.accounted(), 60, "{report:?}");
+        assert!(report.shed > 0, "{report:?}");
+        let text = report.render();
+        assert!(text.contains("accounted: 60/60"), "{text}");
+    }
+
+    #[test]
+    #[should_panic(expected = "open-loop arrival")]
+    fn batching_rejects_closed_loop_arrivals() {
+        let cfg = ServeConfig { max_batch: 2, ..quick(DispatchMode::Decentralized) };
+        serve(&cfg);
+    }
+
+    #[test]
+    fn batched_trace_keeps_one_lane_per_logical_request() {
+        let path = std::env::temp_dir()
+            .join(format!("graphi-serve-batch-trace-{}.json", std::process::id()));
+        let cfg = ServeConfig {
+            executors: 2,
+            clients: 1,
+            requests: 12,
+            arrival: Arrival::Poisson { rps: 50_000.0 },
+            mix: vec![(ModelKind::Mlp, 1.0)],
+            max_batch: 3,
+            batch_window_us: 5_000,
+            trace_path: Some(path.to_string_lossy().into_owned()),
+            ..ServeConfig::default()
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 12);
+        assert!(report.batched_fraction > 0.0, "{report:?}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let stats = crate::engine::validate_chrome_trace(&text).unwrap();
+        // one lifecycle lane per *logical request*, merged or not
+        assert_eq!(stats.processes, 1 + 12, "{stats:?}");
+        assert!(stats.instant_names.contains("done"), "{:?}", stats.instant_names);
+        // every request is sampled and a member's lane carries exactly
+        // its own component slice of the union, so op spans divide
+        // evenly across the 12 identical mlp requests
+        assert!(stats.spans > 0);
+        assert_eq!(stats.spans % 12, 0, "{stats:?}");
     }
 
     #[test]

@@ -159,11 +159,17 @@ impl TelemetryRing {
             }
             None => (0.0, 0, 0, 0, 0),
         };
-        let dt_s = ((now_us - t_base) / 1e6).max(1e-9);
-        let rps = (total.saturating_sub(total_base)) as f64 / dt_s;
-        let steal_rate = (totals.steals.saturating_sub(steals_base)) as f64 / dt_s;
-        let park_rate = (totals.parks.saturating_sub(parks_base)) as f64 / dt_s;
-        let shed_rate = (totals.sessions_shed.saturating_sub(sheds_base)) as f64 / dt_s;
+        // a degenerate interval — ≤ 1 µs (one clock tick), zero (the
+        // always-emitted final snapshot of an instant drain lands on the
+        // previous snapshot's timestamp), negative, or NaN — carries no
+        // rate information: report 0.0 instead of dividing into Inf/NaN
+        // or an absurd ~1e9× spike (the old `.max(1e-9)` clamp)
+        let dt_us = now_us - t_base;
+        let rate = |delta: u64| if dt_us > 1.0 { delta as f64 / (dt_us / 1e6) } else { 0.0 };
+        let rps = rate(total.saturating_sub(total_base));
+        let steal_rate = rate(totals.steals.saturating_sub(steals_base));
+        let park_rate = rate(totals.parks.saturating_sub(parks_base));
+        let shed_rate = rate(totals.sessions_shed.saturating_sub(sheds_base));
         let mut per_class = Vec::new();
         for class in OutcomeClass::ALL {
             let lat: Vec<f64> =
@@ -355,6 +361,45 @@ mod tests {
         assert!((second.park_rate - 15.0).abs() < 1e-9, "30 more parks over 2s");
         assert!((second.shed_rate - 20.0).abs() < 1e-9, "40 sheds over 2s");
         assert!(second.render_line().contains("shed/s=20"), "{}", second.render_line());
+    }
+
+    /// Satellite regression (fails before the degenerate-interval guard):
+    /// a snapshot taken ≤ 1 clock tick after its basis — or the final
+    /// snapshot of an instant drain, which lands on the same timestamp —
+    /// must report zero rates, not Inf/NaN and not the ~1e9× spike the
+    /// old `dt.max(1e-9)` clamp produced from nonzero counter deltas.
+    #[test]
+    fn degenerate_intervals_report_zero_rates() {
+        let ring = TelemetryRing::new(8);
+        for i in 0..5 {
+            ring.push(sample(i as f64, 100.0, OutcomeClass::Ok));
+        }
+        let t1 = FleetTotals { steals: 10, parks: 5, ..FleetTotals::default() };
+        let first = ring.snapshot(1_000_000.0, t1, 0, 0, None);
+        // zero-width interval with fresh counter deltas
+        let t2 = FleetTotals { steals: 50, parks: 25, sessions_shed: 7, ..FleetTotals::default() };
+        ring.push(sample(1_000_000.0, 100.0, OutcomeClass::Ok));
+        let same_instant = ring.snapshot(1_000_000.0, t2, 0, 0, Some(&first));
+        for (name, rate) in [
+            ("rps", same_instant.rps),
+            ("steal_rate", same_instant.steal_rate),
+            ("park_rate", same_instant.park_rate),
+            ("shed_rate", same_instant.shed_rate),
+        ] {
+            assert!(rate.is_finite(), "{name} must be finite on a zero interval");
+            assert_eq!(rate, 0.0, "{name} must be 0 on a zero interval, got {rate}");
+        }
+        // one-tick interval: still degenerate
+        let one_tick = ring.snapshot(1_000_001.0, t2, 0, 0, Some(&first));
+        assert_eq!(one_tick.rps, 0.0, "≤1µs interval has no rate information");
+        // a clock that stepped backwards must not produce negative rates
+        let backwards = ring.snapshot(999_000.0, t2, 0, 0, Some(&first));
+        assert_eq!(backwards.steal_rate, 0.0);
+        // totals still flow through untouched for the next delta basis
+        assert_eq!(same_instant.totals.steals, 50);
+        // and a healthy interval still reports real rates
+        let healthy = ring.snapshot(3_000_000.0, t2, 0, 0, Some(&first));
+        assert!((healthy.steal_rate - 20.0).abs() < 1e-9, "40 steals over 2s");
     }
 
     #[test]

@@ -519,6 +519,214 @@ fn open_loop_outcome_classes_agree_between_threads_and_sim() {
     }
 }
 
+/// PR 9 tentpole acceptance: with **cross-session dynamic batching** in
+/// the loop, the threaded admission frontier (`Batcher` + `SessionQueue`
+/// + `Fleet`, replaying the serve loop's leader/follower bookkeeping) and
+/// the simulator's `run_open_loop_batched` put every *logical request* of
+/// a seeded arrival trace into the same outcome class — under every
+/// admission policy and both dispatch modes.
+///
+/// The trace is engineered with tens-of-milliseconds margins around every
+/// batching and admission decision (window 50 ms, services 30–300 ms):
+///
+/// * requests 0+1 (model G) fill a cap-2 batch on arrival; the union is
+///   over budget but admits alone and holds the budget ~300 ms
+///                                                  → both Completed
+/// * request 2 (model H) cannot join G's group (incompatible), waits out
+///   its own window, then sheds on 50 ms patience under the G holder
+///                                                  → Shed
+/// * request 3 (model H) arrives after request 2's window closed, so it
+///   leads a fresh group and is granted when G quiesces
+///                                                  → Completed
+/// * request 4 (a 2-op chain model) is a singleton leader that pays the
+///   full window, then carries a 1 ms deadline against a 50 ms service
+///                                                  → DeadlineExceeded
+#[test]
+fn batched_outcome_classes_agree_between_threads_and_sim() {
+    use graphi::runtime::{AdmissionPolicy, AdmitRequest, BatchJoin, BatchMember, Batcher};
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    let one_op = |name: &str| {
+        let mut b = GraphBuilder::new();
+        b.add(name, OpKind::Scalar);
+        b.build().unwrap()
+    };
+    let g = one_op("g");
+    let h = one_op("h");
+    // deadline model: 2-op chain so the threaded fleet's pop-time deadline
+    // check observes the miss after op 0's sleep
+    let chain = {
+        let mut b = GraphBuilder::new();
+        let a = b.add("op0", OpKind::Scalar);
+        let z = b.add("op1", OpKind::Scalar);
+        b.depend(a, z);
+        b.build().unwrap()
+    };
+    let (g_union, _) = Graph::disjoint_union(&[&g, &g]);
+
+    const WINDOW_US: f64 = 50_000.0;
+    const MAX_BATCH: usize = 2;
+    let trace = vec![
+        SimArrival { at_us: 0.0, bytes: 100, service_us: Some(300_000.0), ..Default::default() },
+        SimArrival { at_us: 10_000.0, bytes: 100, service_us: Some(300_000.0), ..Default::default() },
+        SimArrival {
+            at_us: 60_000.0,
+            bytes: 100,
+            patience_us: Some(50_000.0),
+            service_us: Some(30_000.0),
+            ..Default::default()
+        },
+        SimArrival { at_us: 170_000.0, bytes: 100, service_us: Some(30_000.0), ..Default::default() },
+        SimArrival {
+            at_us: 250_000.0,
+            bytes: 100,
+            deadline_us: Some(1_000.0),
+            service_us: Some(50_000.0),
+            ..Default::default()
+        },
+    ];
+    // model table: request → (batcher slot, graph); sim compatibility is
+    // graph pointer identity, threads compatibility is the slot index
+    let model: Vec<usize> = vec![0, 0, 1, 1, 2];
+    let graphs: Vec<&Graph> =
+        model.iter().map(|&m| [&g, &h, &chain][m] as &Graph).collect();
+    // per-model work: spread the model's service time over its ops so the
+    // threaded fleet and the sim's overrides price identically; union
+    // components are copies, so the per-node sleep carries over
+    let works: Vec<Box<dyn Fn(NodeId) + Send + Sync>> = [300_000u64, 30_000, 25_000]
+        .iter()
+        .map(|&sleep_us| {
+            Box::new(move |_n: NodeId| std::thread::sleep(Duration::from_micros(sleep_us)))
+                as Box<dyn Fn(NodeId) + Send + Sync>
+        })
+        .collect();
+    let env = SimEnv::knl_deterministic();
+
+    for mode in DispatchMode::ALL {
+        for policy in AdmissionPolicy::ALL {
+            let tag = format!("{} {}", mode.name(), policy.name());
+            // --- simulator replay with batching ---
+            let engine = GraphiEngine::new(3, 8).with_dispatch(mode);
+            let sim = engine.run_open_loop_batched(
+                &graphs, &env, &trace, 100, policy, WINDOW_US, MAX_BATCH,
+            );
+            let expected: Vec<&str> = sim
+                .iter()
+                .map(|r| match r.outcome {
+                    SimSessionOutcome::Completed => "completed",
+                    SimSessionOutcome::Shed => "shed",
+                    SimSessionOutcome::DeadlineExceeded => "deadline_missed",
+                    ref other => panic!("{tag}: sim produced {other:?} without a fault model"),
+                })
+                .collect();
+            assert_eq!(
+                expected,
+                ["completed", "completed", "shed", "completed", "deadline_missed"],
+                "{tag}: sim mirror"
+            );
+            // batch members resolve together, like a threaded handle.wait()
+            assert_eq!(sim[0].makespan_us, sim[1].makespan_us, "{tag}: joint quiescence");
+
+            // --- threaded replay: the real Batcher + queue + fleet ---
+            let slots: Vec<Mutex<&'static str>> =
+                trace.iter().map(|_| Mutex::new("unresolved")).collect();
+            let totals = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+                let fleet_ref = &fleet;
+                let queue = SessionQueue::new(100).with_policy(policy);
+                let queue_ref = &queue;
+                let batcher = Batcher::new(3, Duration::from_micros(WINDOW_US as u64));
+                let batcher_ref = &batcher;
+                std::thread::scope(|reqs| {
+                    for (i, a) in trace.iter().enumerate() {
+                        let slots = &slots;
+                        let trace = &trace;
+                        let m = model[i];
+                        let graph: &Graph = graphs[i];
+                        let union: &Graph = &g_union;
+                        let work = works[m].as_ref();
+                        reqs.spawn(move || {
+                            std::thread::sleep(Duration::from_micros(a.at_us as u64));
+                            let member =
+                                BatchMember { index: i, class: a.class, t0: Instant::now() };
+                            let group = match batcher_ref.join(m, member, MAX_BATCH) {
+                                // the leader resolves every member's slot
+                                BatchJoin::Follower => return,
+                                BatchJoin::Leader(group) => group,
+                            };
+                            let members = batcher_ref.close(m, &group);
+                            // batch = one admission entry: sum bytes, min
+                            // class, min patience/deadline — serve's rules
+                            let arr = |mm: &BatchMember| &trace[mm.index];
+                            let bytes: u64 = members.iter().map(|mm| arr(mm).bytes).sum();
+                            let class = members.iter().map(|mm| arr(mm).class).min().unwrap();
+                            let patience = members
+                                .iter()
+                                .filter_map(|mm| arr(mm).patience_us)
+                                .fold(None, |acc: Option<f64>, v| {
+                                    Some(acc.map_or(v, |a: f64| a.min(v)))
+                                });
+                            let deadline = members
+                                .iter()
+                                .filter_map(|mm| arr(mm).deadline_us)
+                                .fold(None, |acc: Option<f64>, v| {
+                                    Some(acc.map_or(v, |a: f64| a.min(v)))
+                                });
+                            let mut req = AdmitRequest::new(bytes).with_class(class);
+                            if let Some(p) = patience {
+                                req = req.with_patience(Duration::from_micros(p as u64));
+                            }
+                            let permit = match queue_ref.admit_request(req) {
+                                Ok(p) => p,
+                                Err(_) => {
+                                    // a shed fans out to every member
+                                    for mm in &members {
+                                        fleet_ref.record_shed();
+                                        *slots[mm.index].lock().unwrap() = "shed";
+                                    }
+                                    return;
+                                }
+                            };
+                            let run: &Graph = if members.len() == 2 { union } else { graph };
+                            let handle = match deadline {
+                                Some(d) => fleet_ref.submit_with_deadline(
+                                    run,
+                                    unit_levels(run),
+                                    work,
+                                    Duration::from_micros(d as u64),
+                                ),
+                                None => fleet_ref.submit(run, unit_levels(run), work),
+                            };
+                            let out = match handle.wait() {
+                                Ok(_) => "completed",
+                                Err(SessionError::DeadlineExceeded) => "deadline_missed",
+                                Err(other) => panic!("unexpected terminal {other:?}"),
+                            };
+                            drop(permit);
+                            for mm in &members {
+                                *slots[mm.index].lock().unwrap() = out;
+                            }
+                        });
+                    }
+                });
+                match fleet.shutdown() {
+                    Ok(t) => t,
+                    Err(e) => e.totals,
+                }
+            });
+            let observed: Vec<&str> = slots.iter().map(|s| *s.lock().unwrap()).collect();
+            assert_eq!(observed, expected, "{tag}: threads vs sim outcome classes");
+            // fleet-session ledger: the 2-way batch is ONE fleet session,
+            // so sessions_completed counts 2 (G batch + request 3)
+            assert_eq!(totals.sessions_completed, 2, "{tag}");
+            assert_eq!(totals.sessions_deadline_missed, 1, "{tag}");
+            assert_eq!(totals.sessions_shed, 1, "{tag}");
+            assert_eq!(totals.sessions_failed + totals.sessions_cancelled, 0, "{tag}");
+        }
+    }
+}
+
 /// The serve-mode acceptance differential: on random DAG pairs, the sim
 /// mirror's multi-graph mode and the threaded fleet agree on per-session
 /// op sets, and both produce dependency-valid per-session orders — in
