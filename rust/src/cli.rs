@@ -19,7 +19,9 @@ use crate::coordinator::config::{EngineChoice, ExperimentConfig};
 use crate::coordinator::driver::Driver;
 use crate::coordinator::figures;
 use crate::engine::policies::Policy;
-use crate::engine::{Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv, Trace};
+use crate::engine::{
+    Autotuner, DispatchMode, Engine, GraphiEngine, Profiler, SimEnv, Trace, WidthPlan,
+};
 use crate::graph::GraphStats;
 use crate::models::{self, ModelKind, ModelSize};
 use crate::runtime::artifacts::{tuning_path, tuning_path_for, MachineKey, TuningArtifact};
@@ -110,6 +112,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         )
         .opt("iters", Some("5"), "iterations to average")
         .opt("tuning", None, "artifact dir with a persisted autotune result to reuse")
+        .flag("widths", "adopt the artifact's gang-width plan (moldable ops; needs --tuning)")
         .opt("trace", None, "write Chrome trace JSON here")
         .opt("trace-chrome", None, "alias for --trace (session-aware Chrome/Perfetto trace)")
         .opt("json", None, "write result JSON here");
@@ -162,8 +165,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
     // --tuning DIR: reuse a persisted autotune result; otherwise just
     // settle the flag-vs-config dispatch precedence
     match m.get("tuning") {
-        Some(dir) => apply_tuning(&mut cfg, dir, dispatch_flag),
-        None => cfg.dispatch = DispatchMode::resolve(dispatch_flag, None, cfg.dispatch),
+        Some(dir) => apply_tuning(&mut cfg, dir, dispatch_flag, m.flag("widths")),
+        None => {
+            if m.flag("widths") {
+                crate::log_warn!("--widths does nothing without --tuning (no artifact to adopt a width plan from)");
+            }
+            cfg.dispatch = DispatchMode::resolve(dispatch_flag, None, cfg.dispatch);
+        }
     }
     let result = Driver::run(&cfg);
     print!("{}", result.render());
@@ -181,10 +189,18 @@ fn cmd_run(args: &[String]) -> Result<()> {
 /// artifact winner > config-file value > engine default`
 /// ([`DispatchMode::resolve`] — before PR 4 a config-file value silently
 /// beat the artifact); its phase plan is adopted unless an explicit flag
-/// pins a uniform mode. Artifacts tuned on different hardware or graphs
+/// pins a uniform mode; its gang-width plan (moldable ops) is adopted
+/// only when `adopt_widths` (the `--widths` flag) asks for it **and**
+/// the artifact's fleet shape was adopted — the widths were tuned
+/// against that shape. Artifacts tuned on different hardware or graphs
 /// are skipped with a warning — one tuning directory can serve a
 /// heterogeneous fleet. Public so the precedence is integration-testable.
-pub fn apply_tuning(cfg: &mut ExperimentConfig, dir: &str, dispatch_flag: Option<DispatchMode>) {
+pub fn apply_tuning(
+    cfg: &mut ExperimentConfig,
+    dir: &str,
+    dispatch_flag: Option<DispatchMode>,
+    adopt_widths: bool,
+) {
     let tag = format!("{}-{}", cfg.model.name(), cfg.size.name());
     let machine = crate::cost::machine::Machine::knl7250();
     let key = MachineKey::of(&machine);
@@ -237,6 +253,31 @@ pub fn apply_tuning(cfg: &mut ExperimentConfig, dir: &str, dispatch_flag: Option
                     );
                 }
                 (None, _) => {}
+            }
+            match (&t.width_plan, adopt_widths) {
+                (Some(plan), true) if fleet_adopted => {
+                    println!("tuning artifact gang-width plan adopted: {}", plan.render());
+                    cfg.width_plan = Some(plan.clone());
+                }
+                (Some(_), true) => {
+                    println!(
+                        "ignoring the artifact's gang-width plan: it was tuned against the \
+                         artifact's fleet, which flags/config overrode"
+                    );
+                }
+                (Some(plan), false) => {
+                    println!(
+                        "tuning artifact has a gang-width plan ({}); pass --widths to adopt it",
+                        plan.render()
+                    );
+                }
+                (None, true) => {
+                    println!(
+                        "--widths: the artifact has no gang-width plan (re-run \
+                         `graphi autotune --widths --force` to search for one)"
+                    );
+                }
+                (None, false) => {}
             }
             cfg.profiled_durations = Some(t.durations_us);
         }
@@ -294,6 +335,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     .opt("dir", None, "artifact directory (default: $GRAPHI_ARTIFACTS or ./artifacts)")
     .opt("max-iters", Some("8"), "per-candidate iteration cap for late rounds")
     .opt("dispatch", Some("both"), "dispatch axis to search: both|centralized|decentralized")
+    .flag("widths", "also search per-op-class gang widths (moldable ops)")
     .flag("force", "re-run the search even if a tuning artifact exists")
     .flag("compare", "also run the exhaustive sweep and report the savings");
     let m = spec.parse(args).map_err(Error::new)?;
@@ -313,6 +355,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
         extra_configs: crate::sim::topology::model_extras(stats.max_width),
         dispatch_modes,
         max_iterations: m.get_usize("max-iters").map_err(Error::new)?.unwrap_or(8),
+        width_search: m.flag("widths"),
         ..Default::default()
     };
     let dir = m
@@ -337,6 +380,14 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
                 );
                 if let Some(plan) = &t.phase_plan {
                     println!("per-phase plan: {}", plan.render());
+                }
+                if let Some(plan) = &t.width_plan {
+                    println!("gang-width plan: {}", plan.render());
+                } else if m.flag("widths") {
+                    crate::log_warn!(
+                        "artifact {} has no gang-width plan; pass --force to re-search with widths",
+                        path.display()
+                    );
                 }
                 return Ok(());
             }
@@ -382,7 +433,9 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
 }
 
 fn cmd_stats(args: &[String]) -> Result<()> {
-    let spec = model_opts(Spec::new("stats", "graph census")).opt("dot", None, "write DOT file here");
+    let spec = model_opts(Spec::new("stats", "graph census"))
+        .opt("dot", None, "write DOT file here")
+        .opt("tuning", None, "artifact dir: also print the gang-width histogram for this graph");
     let m = spec.parse(args).map_err(Error::new)?;
     let (kind, size) = parse_model(&m)?;
     let graph = models::build(kind, size);
@@ -392,6 +445,48 @@ fn cmd_stats(args: &[String]) -> Result<()> {
     // what serve-mode admission charges against the MCDRAM budget
     let plan = crate::graph::plan_memory(&graph, &graph.topo_order());
     println!("memory plan (§5.1): {}", plan.summary_line());
+    // --tuning DIR: per-op-class width histogram — how many ops of each
+    // class the artifact's gang-width plan molds, and to what width
+    if let Some(dir) = m.get("tuning") {
+        use crate::graph::op::OpClass;
+        let tag = format!("{}-{}", kind.name(), size.name());
+        let machine = crate::cost::machine::Machine::knl7250();
+        let keyed = tuning_path_for(dir, &tag, &MachineKey::of(&machine));
+        let path = if keyed.is_file() { keyed } else { tuning_path(dir, &tag) };
+        match TuningArtifact::load(&path) {
+            Ok(t) if !t.matches_graph(graph.len()) => crate::log_warn!(
+                "tuning artifact {} covers {} ops but this graph has {}; skipping widths",
+                path.display(),
+                t.graph_nodes,
+                graph.len()
+            ),
+            Ok(t) => match &t.width_plan {
+                Some(wplan) => {
+                    let mut counts = [0usize; OpClass::COUNT];
+                    for n in graph.nodes() {
+                        counts[n.kind.class().index()] += 1;
+                    }
+                    println!("gang widths ({}):", path.display());
+                    for class in OpClass::ALL {
+                        if counts[class.index()] == 0 {
+                            continue;
+                        }
+                        println!(
+                            "  {:12} {:5} ops  × width {}",
+                            class.name(),
+                            counts[class.index()],
+                            wplan.width_for(class)
+                        );
+                    }
+                }
+                None => println!(
+                    "tuning artifact {} has no gang-width plan (run `graphi autotune --widths`)",
+                    path.display()
+                ),
+            },
+            Err(e) => crate::log_warn!("no usable tuning artifact ({e}); skipping widths"),
+        }
+    }
     if let Some(path) = m.get("dot") {
         std::fs::write(path, crate::graph::dot::to_dot(&graph))?;
         println!("dot written to {path}");
@@ -609,6 +704,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     )
     .opt("telemetry-every-ms", None, "print an aggregate telemetry line every N ms while serving")
     .opt("telemetry-ring", Some("1024"), "capacity of the bounded ring of recent session samples")
+    .opt(
+        "widths",
+        None,
+        "per-op-class gang-width plan for moldable ops, e.g. gemm=4,conv=2 (unlisted classes run at width 1)",
+    )
     .opt("seed", Some("42"), "request-mix seed")
     .flag("training", "serve training graphs instead of forward-only inference graphs")
     .flag("bench-json", "append serve_throughput_* headlines to BENCH_scheduler.json");
@@ -708,6 +808,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if trace_sample == 0 {
         bail!("--trace-sample must be at least 1");
     }
+    let width_plan = match m.get("widths") {
+        None => None,
+        Some(text) => match WidthPlan::parse(text) {
+            Ok(plan) => Some(plan),
+            Err(e) => bail!("bad --widths: {e}"),
+        },
+    };
     let base = crate::runtime::ServeConfig {
         executors: positive("executors")?,
         clients: positive("clients")?,
@@ -729,6 +836,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         trace_sample,
         batch_window_us,
         max_batch,
+        width_plan,
         ..crate::runtime::ServeConfig::default()
     };
     let mut runner = m
@@ -987,6 +1095,11 @@ mod tests {
         let nodes = models::build(ModelKind::Mlp, ModelSize::Small).len();
         let machine = crate::cost::machine::Machine::knl7250();
         let plan = PhasePlan::uniform(1, DispatchMode::Decentralized, 1);
+        let wplan = {
+            let mut p = WidthPlan::uniform(1);
+            p.set(crate::graph::op::OpClass::Gemm, 4);
+            p
+        };
         let artifact = TuningArtifact {
             version: TUNING_FORMAT_VERSION,
             tag: "mlp-small".to_string(),
@@ -997,6 +1110,7 @@ mod tests {
             best: (4, 8),
             best_dispatch: DispatchMode::Decentralized,
             phase_plan: Some(plan.clone()),
+            width_plan: Some(wplan.clone()),
             best_makespan_us: 1.0,
             total_profile_iterations: 1,
             durations_us: vec![1.0; nodes],
@@ -1015,28 +1129,36 @@ mod tests {
         // previously `engine.dispatch` in the TOML silently won)
         let mut cfg = base();
         cfg.dispatch = Some(DispatchMode::Centralized); // "from the config file"
-        apply_tuning(&mut cfg, &dir_s, None);
+        apply_tuning(&mut cfg, &dir_s, None, false);
         assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized));
         assert_eq!(cfg.phase_plan, Some(plan.clone()));
         assert_eq!(cfg.executors, Some(4));
+        // widths are opt-in: without the flag the artifact's plan stays put
+        assert_eq!(cfg.width_plan, None, "widths need --widths");
+
+        // --widths + adopted fleet: the gang-width plan comes along
+        let mut cfg = base();
+        apply_tuning(&mut cfg, &dir_s, None, true);
+        assert_eq!(cfg.width_plan, Some(wplan.clone()));
 
         // an explicit flag beats the artifact and pins a uniform mode
         // (phase plan dropped)
         let mut cfg = base();
         cfg.dispatch = Some(DispatchMode::Decentralized);
-        apply_tuning(&mut cfg, &dir_s, Some(DispatchMode::Centralized));
+        apply_tuning(&mut cfg, &dir_s, Some(DispatchMode::Centralized), false);
         assert_eq!(cfg.dispatch, Some(DispatchMode::Centralized));
         assert_eq!(cfg.phase_plan, None);
 
         // a pinned fleet keeps the artifact's levels and dispatch winner,
-        // but NOT its phase plan (the plan was searched at the artifact's
-        // own fleet shape)
+        // but NOT its phase plan or width plan (both were searched at the
+        // artifact's own fleet shape)
         let mut cfg = base();
         cfg.executors = Some(2);
         cfg.threads_per = Some(4);
-        apply_tuning(&mut cfg, &dir_s, None);
+        apply_tuning(&mut cfg, &dir_s, None, true);
         assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized));
         assert_eq!(cfg.phase_plan, None, "plan tuned for another fleet must not apply");
+        assert_eq!(cfg.width_plan, None, "widths tuned for another fleet must not apply");
         assert_eq!(cfg.executors, Some(2));
         assert!(cfg.profiled_durations.is_some());
 
@@ -1048,16 +1170,17 @@ mod tests {
         let empty_s = empty.display().to_string();
         let mut cfg = base();
         cfg.dispatch = Some(DispatchMode::Decentralized);
-        apply_tuning(&mut cfg, &empty_s, None);
+        apply_tuning(&mut cfg, &empty_s, None, false);
         assert_eq!(cfg.dispatch, Some(DispatchMode::Decentralized), "config survives");
         let mut cfg = base();
         cfg.dispatch = Some(DispatchMode::Decentralized);
-        apply_tuning(&mut cfg, &empty_s, Some(DispatchMode::Centralized));
+        apply_tuning(&mut cfg, &empty_s, Some(DispatchMode::Centralized), false);
         assert_eq!(cfg.dispatch, Some(DispatchMode::Centralized), "flag wins");
         // nothing anywhere ⇒ stays unpinned (engine default later)
         let mut cfg = base();
-        apply_tuning(&mut cfg, &empty_s, None);
+        apply_tuning(&mut cfg, &empty_s, None, true);
         assert_eq!(cfg.dispatch, None);
+        assert_eq!(cfg.width_plan, None, "no artifact, no widths");
 
         std::fs::remove_dir_all(&dir).unwrap();
         std::fs::remove_dir_all(&empty).unwrap();

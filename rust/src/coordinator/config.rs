@@ -6,7 +6,7 @@
 //! minimal.
 
 use crate::engine::policies::Policy;
-use crate::engine::{DispatchMode, PhasePlan};
+use crate::engine::{DispatchMode, PhasePlan, WidthPlan};
 use crate::models::{ModelKind, ModelSize};
 use crate::sim::topology::PlacementKind;
 use crate::util::toml;
@@ -64,6 +64,10 @@ pub struct ExperimentConfig {
     /// mode and drops it). Ignored with a warning when it does not line up
     /// with the graph's phase structure.
     pub phase_plan: Option<PhasePlan>,
+    /// Per-op-class gang-width plan (moldable ops), adopted from a tuning
+    /// artifact by `graphi run --tuning --widths`. `None` = every op runs
+    /// at width 1.
+    pub width_plan: Option<WidthPlan>,
     /// Batch-training iterations to simulate.
     pub iterations: usize,
     pub seed: u64,
@@ -91,6 +95,7 @@ impl Default for ExperimentConfig {
             placement: PlacementKind::PinnedDisjoint,
             dispatch: None,
             phase_plan: None,
+            width_plan: None,
             iterations: 5,
             seed: 42,
             profile_iterations: 3,

@@ -166,6 +166,9 @@ impl Driver {
                         );
                     }
                 }
+                if let Some(plan) = &cfg.width_plan {
+                    engine.width_plan = Some(plan.clone());
+                }
                 Box::new(engine)
             }
             EngineChoice::Sequential => Box::new(SequentialEngine::new(threads.max(executors))),
@@ -366,6 +369,26 @@ mod tests {
         let r = Driver::run(&cfg);
         assert!(!r.engine_name.ends_with("-phased"));
         assert!(r.mean_makespan_us > 0.0);
+    }
+
+    #[test]
+    fn width_plan_flows_into_the_engine() {
+        use crate::engine::WidthPlan;
+        use crate::graph::op::OpClass;
+        let mut plan = WidthPlan::uniform(1);
+        plan.set(OpClass::Gemm, 2);
+        let cfg = ExperimentConfig { width_plan: Some(plan), iterations: 1, ..quick_cfg() };
+        let r = Driver::run(&cfg);
+        assert!(r.engine_name.ends_with("-moldable"), "{}", r.engine_name);
+        assert!(r.mean_makespan_us > 0.0);
+        // the identity plan is a no-op, not a moldable run
+        let cfg = ExperimentConfig {
+            width_plan: Some(WidthPlan::uniform(1)),
+            iterations: 1,
+            ..quick_cfg()
+        };
+        let r = Driver::run(&cfg);
+        assert!(!r.engine_name.contains("moldable"), "{}", r.engine_name);
     }
 
     #[test]

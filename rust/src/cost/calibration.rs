@@ -17,6 +17,12 @@ pub struct Calibration {
     pub fork_base_us: f64,
     /// Additional fork/join cost per log2(team size), µs.
     pub fork_log_us: f64,
+    /// Cost for a moldable-gang leader to recruit one parked/idle peer
+    /// executor, µs: an eventcount notify plus the recruit's wake-up and
+    /// gang-post handshake. Charged `(w−1)×` per formed gang into
+    /// scheduler-busy time, which is what makes narrow small-op graphs
+    /// prefer `w = 1` in the autotuner's width search.
+    pub gang_recruit_us: f64,
 
     // -- single-thread efficiency (roofline ceilings) ----------------------
     /// MKL GEMM fraction-of-peak on one core at the paper's medium sizes.
@@ -125,6 +131,7 @@ impl Default for Calibration {
             dispatch_us: 1.5,
             fork_base_us: 0.4,
             fork_log_us: 0.5,
+            gang_recruit_us: 0.7,
 
             eff_gemm: 0.62,
             eff_conv_libxsmm: 0.55,
@@ -193,5 +200,9 @@ mod tests {
         assert!(c.sat_ew_ref > c.sat_gemm_ref, "Fig 2: ew saturates later than this GEMM");
         assert!((0.0..1.0).contains(&c.stream_store_saving));
         assert!(c.team_resize_ms >= 10.0 && c.team_resize_ms <= 30.0, "paper §6 range");
+        assert!(
+            c.gang_recruit_us > 0.0 && c.gang_recruit_us < c.dispatch_us,
+            "recruiting one peer must cost less than a full dispatch"
+        );
     }
 }

@@ -123,6 +123,20 @@ impl CostModel {
         self.cal.dispatch_us + self.fork_us(k) + self.serial_body_us(op) / self.speedup(op, k)
     }
 
+    /// Duration of `op` on a **gang** of `width` executors, each a pinned
+    /// `threads_per`-thread team, µs. The gang behaves as one fused
+    /// `width × threads_per`-thread team, so the profiled scalar duration
+    /// becomes a `f(width)` curve through the same USL speedup shape
+    /// ([`Self::speedup`]): sublinear by default, with the Fig-2
+    /// oversaturation tail once the fused team passes the op's saturation
+    /// point — exactly why small ops should stay at width 1 and wide GEMMs
+    /// should not. Gang *formation* latency (recruiting `width − 1` idle
+    /// peers) is scheduler time, not op time; the simulator charges it to
+    /// `scheduler_busy_us` via [`Calibration::gang_recruit_us`].
+    pub fn gang_duration_us(&self, op: &OpKind, width: usize, threads_per: usize) -> f64 {
+        self.duration_us(op, width.max(1) * threads_per.max(1))
+    }
+
     /// Duration under the TensorFlow primitive set (MKL conv) — same
     /// formula, lower conv efficiency.
     pub fn duration_us_mkl(&self, op: &OpKind, k: usize) -> f64 {
@@ -283,6 +297,27 @@ mod tests {
         let m = model();
         let d = m.duration_us(&OpKind::Scalar, 32);
         assert!(d <= 3.0, "tiny op {d}µs");
+    }
+
+    #[test]
+    fn gang_width_curves_are_sublinear_and_class_dependent() {
+        let m = model();
+        // width 1 is exactly the scalar pricing
+        assert_eq!(m.gang_duration_us(&ref_gemm(), 1, 4), m.duration_us(&ref_gemm(), 4));
+        // a wide GEMM (large work, late saturation) gains from width…
+        let big = OpKind::MatMul { m: 512, k: 2048, n: 2048 };
+        let d1 = m.gang_duration_us(&big, 1, 4);
+        let d4 = m.gang_duration_us(&big, 4, 4);
+        assert!(d4 < d1, "wide GEMM should gain from a width-4 gang: {d4} !< {d1}");
+        // …but sublinearly (never the full 4×)
+        assert!(d4 > d1 / 4.0, "gang speedup must be sublinear");
+        // the small reference GEMM saturates near 8 threads, so width 4 of
+        // 4-thread executors (16 fused) is already past the knee and loses
+        let small1 = m.gang_duration_us(&ref_gemm(), 1, 8);
+        let small4 = m.gang_duration_us(&ref_gemm(), 4, 8);
+        assert!(small4 > small1, "oversaturated gang must not beat width 1");
+        // tiny ops are width-oblivious
+        assert_eq!(m.gang_duration_us(&OpKind::Scalar, 8, 4), m.duration_us(&OpKind::Scalar, 4));
     }
 
     #[test]

@@ -31,12 +31,14 @@
 //! artifact ([`crate::runtime::artifacts::TuningArtifact`]) that later
 //! runs load instead of re-searching.
 
+use crate::graph::op::OpClass;
 use crate::graph::{width_phases, Graph};
 use crate::sim::topology::candidate_configs;
 use crate::util::stats::Welford;
 
 use super::profiler::{ConfigMeasurement, Profiler};
-use super::{DispatchMode, Engine, GraphiEngine, PhasePlan, SimEnv};
+use super::ready::MAX_WIDTH;
+use super::{DispatchMode, Engine, GraphiEngine, PhasePlan, SimEnv, WidthPlan};
 
 /// Successive-halving search configuration.
 #[derive(Debug, Clone)]
@@ -59,6 +61,14 @@ pub struct Autotuner {
     /// modes are in the candidate space — a single-axis search was
     /// explicitly restricted by the caller.
     pub phase_search: bool,
+    /// Search **per-op-class gang widths** after the uniform winner is
+    /// found (the moldable-ops axis): greedily raise one class's width at
+    /// a time through the powers of two, adopting a plan only when its
+    /// measured makespan beats the width-1 baseline at the same eval
+    /// seed. Off by default — widths only pay on graphs whose per-op work
+    /// scales past one executor's team (wide GEMMs), and every evaluation
+    /// is a full simulated run.
+    pub width_search: bool,
     /// Per-candidate iterations in round 0 (doubles every round).
     pub initial_iterations: usize,
     /// Cap on the per-candidate iterations of any single round.
@@ -75,6 +85,7 @@ impl Default for Autotuner {
             extra_configs: Vec::new(),
             dispatch_modes: DispatchMode::ALL.to_vec(),
             phase_search: true,
+            width_search: false,
             initial_iterations: 1,
             max_iterations: 8,
             duration_iterations: 3,
@@ -125,6 +136,14 @@ pub struct AutotuneReport {
     pub phase_makespan_us: Option<f64>,
     /// Simulator runs the per-phase refinement spent (0 when skipped).
     pub phase_refine_iterations: usize,
+    /// Per-op-class gang-width plan, `Some` only when the width search
+    /// ([`Autotuner::width_search`]) found a non-uniform plan whose
+    /// measured makespan beats the width-1 baseline.
+    pub width_plan: Option<WidthPlan>,
+    /// Makespan of the adopted width plan (paired with `width_plan`).
+    pub width_makespan_us: Option<f64>,
+    /// Simulator runs the width refinement spent (0 when skipped).
+    pub width_refine_iterations: usize,
 }
 
 impl AutotuneReport {
@@ -227,6 +246,11 @@ impl Autotuner {
             } else {
                 (None, None, 0)
             };
+        let (width_plan, width_makespan_us, width_refine_iterations) = if self.width_search {
+            self.refine_widths(graph, env, best, best_dispatch, best_makespan_us)
+        } else {
+            (None, None, 0)
+        };
         AutotuneReport {
             best,
             best_dispatch,
@@ -239,6 +263,9 @@ impl Autotuner {
             phase_plan,
             phase_makespan_us,
             phase_refine_iterations,
+            width_plan,
+            width_makespan_us,
+            width_refine_iterations,
         }
     }
 
@@ -299,6 +326,75 @@ impl Autotuner {
         }
     }
 
+    /// The moldable-width axis: starting from the identity plan, greedily
+    /// raise each op class's gang width through the powers of two (capped
+    /// at the winning executor count and [`MAX_WIDTH`]), keeping a step
+    /// only when its phased-free, same-seed evaluation strictly improves.
+    /// Classes absent from the graph — and Tiny, which the runtime forces
+    /// to width 1 — are skipped. The plan is adopted only when it is
+    /// non-uniform, strictly beats the width-1 baseline at the eval seed
+    /// (the paired comparison), *and* beats the uniform winner's
+    /// halving-search mean (the same cross-seed sanity gate the phase
+    /// search applies). Otherwise width 1 stands and no plan is persisted.
+    fn refine_widths(
+        &self,
+        graph: &Graph,
+        env: &SimEnv,
+        fleet: (usize, usize),
+        dispatch: DispatchMode,
+        uniform_makespan_us: f64,
+    ) -> (Option<WidthPlan>, Option<f64>, usize) {
+        let max_w = (fleet.0 as u32).min(MAX_WIDTH);
+        if max_w < 2 {
+            return (None, None, 0);
+        }
+        let eval_env = SimEnv { cost: env.cost.clone(), seed: env.seed ^ 0x71D7 };
+        let mut iterations = 0usize;
+        let mut run = |plan: &WidthPlan| -> f64 {
+            iterations += 1;
+            GraphiEngine::new(fleet.0, fleet.1)
+                .with_dispatch(dispatch)
+                .with_width_plan(plan.clone())
+                .run(graph, &eval_env)
+                .makespan_us
+        };
+        // classes with at least one non-tiny op: a width for an absent
+        // class changes nothing and would waste full simulated runs
+        let mut present = [false; OpClass::COUNT];
+        for node in graph.nodes() {
+            if !node.kind.is_tiny() {
+                present[node.kind.class().index()] = true;
+            }
+        }
+        let mut plan = WidthPlan::uniform(1);
+        // the uniform(1) evaluation runs the width-free paths byte-for-
+        // byte, so this baseline is exactly "the winner without molding"
+        let baseline_span = run(&plan);
+        let mut best_span = baseline_span;
+        for class in OpClass::ALL {
+            if class == OpClass::Tiny || !present[class.index()] {
+                continue;
+            }
+            let mut w = 2u32;
+            while w <= max_w {
+                let mut candidate = plan.clone();
+                candidate.set(class, w);
+                let span = run(&candidate);
+                if span < best_span {
+                    best_span = span;
+                    plan = candidate;
+                }
+                w *= 2;
+            }
+        }
+        if !plan.is_uniform_one() && best_span < baseline_span && best_span < uniform_makespan_us
+        {
+            (Some(plan), Some(best_span), iterations)
+        } else {
+            (None, None, iterations)
+        }
+    }
+
     /// Render the search trace as a table.
     pub fn render(report: &AutotuneReport) -> String {
         let mode_tag = |m: DispatchMode| match m {
@@ -341,6 +437,20 @@ impl Autotuner {
             _ if report.phase_refine_iterations > 0 => out.push_str(&format!(
                 "per-phase search kept the uniform winner ({} refinement runs)\n",
                 report.phase_refine_iterations
+            )),
+            _ => {}
+        }
+        match (&report.width_plan, report.width_makespan_us) {
+            (Some(plan), Some(span)) => out.push_str(&format!(
+                "gang-width plan [{}] beats width 1: {} vs {} ({} refinement runs)\n",
+                plan.render(),
+                crate::util::fmt_us(span),
+                crate::util::fmt_us(report.best_makespan_us),
+                report.width_refine_iterations,
+            )),
+            _ if report.width_refine_iterations > 0 => out.push_str(&format!(
+                "gang-width search kept width 1 ({} refinement runs)\n",
+                report.width_refine_iterations
             )),
             _ => {}
         }
@@ -557,6 +667,120 @@ mod tests {
                 .makespan_us;
             assert_eq!(replay, span);
         }
+    }
+
+    /// A wide band of small element-wise ops: `layers × 16` independent
+    /// columns (the 640-node small-op shape at `layers = 40`).
+    fn small_op_band(layers: usize) -> Graph {
+        use crate::graph::op::{EwKind, OpKind};
+        use crate::graph::GraphBuilder;
+        let ew = OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith };
+        let mut b = GraphBuilder::new();
+        let mut prev: Vec<_> = (0..16).map(|i| b.add(format!("l0_{i}"), ew.clone())).collect();
+        for layer in 1..layers {
+            let this: Vec<_> = (0..16)
+                .map(|i| {
+                    let n = b.add(format!("l{layer}_{i}"), ew.clone());
+                    b.depend(prev[i], n);
+                    n
+                })
+                .collect();
+            prev = this;
+        }
+        b.build().unwrap()
+    }
+
+    /// The moldable-ops acceptance shape: a narrow chain of
+    /// saturation-8 GEMMs (the critical path) next to an independent
+    /// wide small-op band. The band dominates the op count and pushes
+    /// the uniform winner toward many small-team executors — which
+    /// starves the GEMM chain; molding the GEMM class is the fix.
+    fn gemm_chain_plus_band() -> Graph {
+        use crate::graph::op::{EwKind, OpKind};
+        use crate::graph::GraphBuilder;
+        let gemm = OpKind::MatMul { m: 64, k: 512, n: 512 };
+        let ew = OpKind::Elementwise { n: 2_000, arity: 2, kind: EwKind::Arith };
+        let mut b = GraphBuilder::new();
+        let mut prev = b.add("g0", gemm.clone());
+        for i in 1..8 {
+            let n = b.add(format!("g{i}"), gemm.clone());
+            b.depend(prev, n);
+            prev = n;
+        }
+        let mut band: Vec<_> = (0..16).map(|i| b.add(format!("b0_{i}"), ew.clone())).collect();
+        for layer in 1..40 {
+            let this: Vec<_> = (0..16)
+                .map(|i| {
+                    let n = b.add(format!("b{layer}_{i}"), ew.clone());
+                    b.depend(band[i], n);
+                    n
+                })
+                .collect();
+            band = this;
+        }
+        b.build().unwrap()
+    }
+
+    /// Width-axis tuner: a 16-core space keeps the evaluations cheap and
+    /// the compromise fleet shapes (2×8, 4×4, 8×2) in play.
+    fn width_tuner() -> Autotuner {
+        Autotuner { worker_cores: 16, width_search: true, ..Default::default() }
+    }
+
+    #[test]
+    fn width_search_is_off_by_default_and_costs_nothing() {
+        let g = models::build(ModelKind::Mlp, ModelSize::Small);
+        let report = tuner().search(&g, &SimEnv::knl_deterministic());
+        assert_eq!(report.width_plan, None);
+        assert_eq!(report.width_makespan_us, None);
+        assert_eq!(report.width_refine_iterations, 0);
+    }
+
+    #[test]
+    fn width_search_molds_starved_wide_gemms() {
+        let g = gemm_chain_plus_band();
+        let env = SimEnv::knl_deterministic();
+        let report = width_tuner().search(&g, &env);
+        assert!(report.width_refine_iterations > 0, "the width axis must have been searched");
+        let plan = report
+            .width_plan
+            .clone()
+            .expect("molding the starved GEMM chain must beat the uniform compromise");
+        assert!(
+            plan.width_for(OpClass::Gemm) > 1,
+            "the chain's GEMMs want a gang: {}",
+            plan.render()
+        );
+        assert_eq!(
+            plan.width_for(OpClass::Elementwise),
+            1,
+            "small band ops must stay width 1: {}",
+            plan.render()
+        );
+        let span = report.width_makespan_us.expect("paired with the plan");
+        assert!(span < report.best_makespan_us, "adoption gate: strictly better than uniform");
+        // replaying the plan at the eval seed reproduces the recorded
+        // number — the artifact consumer relies on this determinism
+        let eval_env = SimEnv { cost: env.cost.clone(), seed: env.seed ^ 0x71D7 };
+        let replay = GraphiEngine::new(report.best.0, report.best.1)
+            .with_dispatch(report.best_dispatch)
+            .with_width_plan(plan)
+            .run(&g, &eval_env)
+            .makespan_us;
+        assert_eq!(replay, span);
+    }
+
+    #[test]
+    fn width_search_keeps_width_one_for_small_op_graphs() {
+        // the 640-node small-op graph: halved inter-op concurrency plus
+        // per-gang recruit cost always lose on µs-scale ops, so the
+        // paired search must keep the identity plan
+        let g = small_op_band(40);
+        assert_eq!(g.len(), 640);
+        let report = width_tuner().search(&g, &SimEnv::knl_deterministic());
+        assert!(report.width_refine_iterations > 0, "the width axis must have been searched");
+        assert_eq!(report.width_plan, None, "small ops must not be molded");
+        assert_eq!(report.width_makespan_us, None);
     }
 
     #[test]

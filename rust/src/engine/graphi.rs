@@ -6,6 +6,34 @@
 //! max-heap, idle bitmap with bit-scan, SPSC rings) against virtual time
 //! from [`crate::sim`]: the only simulated quantity is how long each op
 //! body takes on its thread team, priced by [`crate::cost::CostModel`].
+//!
+//! # Width-curve pricing (moldable ops)
+//!
+//! Under a [`WidthPlan`] an op may run as a **gang** of `w` executors —
+//! the virtual-time mirror of the threaded fleet's gang formation
+//! ([`crate::runtime::fleet`]). Three rules, both dispatch modes:
+//!
+//! * **Occupancy** — a width-`w` op holds `w` executors for its whole
+//!   duration: the leader plus `w − 1` recruits, all marked busy and all
+//!   freed by the op's single `Done` event. When fewer than `w` peers are
+//!   idle the gang *shrinks* to whoever is available instead of waiting —
+//!   exactly the threaded leader's no-deadlock fallback — so a width plan
+//!   can reduce effective parallelism (fewer concurrent ops) but never
+//!   stall the fleet.
+//! * **Duration becomes `f(width)`** — the op body is priced as one fused
+//!   `w × threads_per`-thread team through the same USL curve as scalar
+//!   pricing ([`crate::cost::CostModel::gang_duration_us`]): sublinear
+//!   gains up to the op's saturation point, the Fig-2 oversaturation tail
+//!   past it. Wide GEMMs gain; small element-wise ops lose — which is the
+//!   whole point of searching widths per op class.
+//! * **Formation latency is scheduler time** — recruiting each peer costs
+//!   [`crate::cost::Calibration::gang_recruit_us`], charged `(w − 1)×`
+//!   per formed gang into `scheduler_busy_us` (it is dispatch work, not
+//!   op work).
+//!
+//! Every width-plan branch is guarded behind `w > 1`: a `None` plan or a
+//! uniform width-1 plan takes the exact pre-moldable code paths, RNG draw
+//! order included, so width-free runs stay byte-identical.
 
 use std::sync::Arc;
 
@@ -17,12 +45,12 @@ use crate::sim::{BandwidthArbiter, EventQueue, Placement};
 use crate::util::rng::Rng;
 
 use super::policies::Policy;
-use super::ready::{entry_node, pack_entry, DepTracker, ReadySet};
+use super::ready::{entry_node, entry_width, pack_entry_wide, DepTracker, ReadySet, MAX_WIDTH};
 use super::ring::SpscRing;
 use super::scheduler::IdleBitmap;
 use super::trace::{OpRecord, LIGHTWEIGHT_EXECUTOR};
 use super::worksteal::{self, Acquire, DomainMap, WorkStealDeque};
-use super::{DispatchMode, Engine, EngineMetrics, PhasePlan, RunResult, SimEnv};
+use super::{DispatchMode, Engine, EngineMetrics, PhasePlan, RunResult, SimEnv, WidthPlan};
 
 /// Configuration of the Graphi engine.
 #[derive(Debug, Clone)]
@@ -65,6 +93,10 @@ pub struct GraphiEngine {
     /// barrier at every boundary. `None` = the uniform `dispatch` mode
     /// for the whole graph.
     pub phase_plan: Option<PhasePlan>,
+    /// Moldable widths: per-op-class gang sizes (see the module docs'
+    /// width-curve pricing section). `None` — and the uniform width-1
+    /// plan — run the exact width-free code paths, byte for byte.
+    pub width_plan: Option<WidthPlan>,
 }
 
 impl GraphiEngine {
@@ -82,6 +114,7 @@ impl GraphiEngine {
             straggler: None,
             dispatch: DispatchMode::Centralized,
             phase_plan: None,
+            width_plan: None,
         }
     }
 
@@ -100,6 +133,12 @@ impl GraphiEngine {
         self
     }
 
+    /// Schedule with per-op-class moldable widths (gang scheduling).
+    pub fn with_width_plan(mut self, plan: WidthPlan) -> GraphiEngine {
+        self.width_plan = Some(plan);
+        self
+    }
+
     /// Schedule with levels derived from profiled per-op durations (the
     /// autotuner's duration table) instead of the analytic cost model.
     pub fn with_profiled_durations(
@@ -112,8 +151,11 @@ impl GraphiEngine {
 }
 
 enum Ev {
-    /// Op finished on a worker executor.
-    Done { node: NodeId, exec: u32, bw_token: u64 },
+    /// Op finished on a worker executor. `gang` is the op's recruited
+    /// peer executors (empty for width-1 ops): they were busy for the
+    /// op's whole duration and are freed by this one event, mirroring the
+    /// threaded gang members' done-handshake with their leader.
+    Done { node: NodeId, exec: u32, bw_token: u64, gang: Vec<u32> },
     /// Op finished on the light-weight executor.
     DoneLightweight { node: NodeId },
 }
@@ -145,6 +187,11 @@ struct Sim<'a> {
     /// levels, dispatch, bandwidth demand; caching once gives ~2× sim
     /// throughput).
     base_dur_us: Vec<f64>,
+    /// Per-node gang-width *target* under the engine's width plan: the
+    /// plan's class width clamped to the fleet, Tiny forced to 1. All-ones
+    /// when there is no plan (or the identity plan), which disables every
+    /// gang branch.
+    width_of: Vec<u32>,
     /// §6 locality: preferred executor per node (the producer of its input).
     preferred: Vec<Option<u8>>,
     sched_free_us: f64,
@@ -224,6 +271,20 @@ impl<'a> Sim<'a> {
             .iter()
             .map(|n| cost.memory_bound(&n.kind, cfg.threads_per))
             .collect();
+        let width_of: Vec<u32> = match &cfg.width_plan {
+            Some(plan) if !plan.is_uniform_one() => graph
+                .nodes()
+                .iter()
+                .map(|n| {
+                    if n.kind.is_tiny() {
+                        1
+                    } else {
+                        plan.width_for(n.kind.class()).min(cfg.executors as u32).min(MAX_WIDTH)
+                    }
+                })
+                .collect(),
+            _ => vec![1; graph.len()],
+        };
         Sim {
             graph,
             env,
@@ -241,6 +302,7 @@ impl<'a> Sim<'a> {
             numa_factor,
             mem_bound,
             base_dur_us,
+            width_of,
             preferred: vec![None; graph.len()],
             sched_free_us: 0.0,
             lw_free_us: 0.0,
@@ -283,6 +345,22 @@ impl<'a> Sim<'a> {
             }
         }
         dur * self.interference.noise(&mut self.rng)
+    }
+
+    /// Duration multiplier when `node` runs as one fused gang of `w > 1`
+    /// executors: the USL curve at `w × threads_per` threads relative to
+    /// the solo team ([`crate::cost::CostModel::gang_duration_us`]).
+    /// Multiplicative so the static per-node folds in `base_dur_us`
+    /// (stream stores, shared-L2) are preserved.
+    fn gang_stretch(&self, node: NodeId, w: u32) -> f64 {
+        debug_assert!(w > 1);
+        let cost = &self.env.cost;
+        let kind = &self.graph.node(node).kind;
+        let solo = cost.duration_us(kind, self.cfg.threads_per);
+        if solo <= 0.0 {
+            return 1.0;
+        }
+        cost.gang_duration_us(kind, w as usize, self.cfg.threads_per) / solo
     }
 
     /// Dispatch loop (§4.3, Algorithm 1): pop max-level ready ops and push
@@ -331,10 +409,33 @@ impl<'a> Sim<'a> {
                 _ => (self.idle.first_idle().expect("checked any_idle"), false),
             };
             self.idle.set_busy(e);
+            // moldable gang: the leader recruits up to `w − 1` idle peers,
+            // shrinking to whoever is available rather than waiting (the
+            // threaded leader's no-deadlock fallback)
+            let mut gang: Vec<u32> = Vec::new();
+            let w_target = self.width_of[node as usize];
+            if w_target > 1 {
+                while (gang.len() as u32) < w_target - 1 {
+                    match self.idle.first_idle() {
+                        Some(m) => {
+                            self.idle.set_busy(m);
+                            gang.push(m as u32);
+                        }
+                        None => break,
+                    }
+                }
+            }
             // scheduler decision cost: heap pop + bitmap scan + ring push,
             // serialized on the scheduler thread; evaluated once so the
             // busy-time metric and the timeline can never disagree
-            let dispatch_cost_us = self.interference.graphi_dispatch_us();
+            let mut dispatch_cost_us = self.interference.graphi_dispatch_us();
+            if !gang.is_empty() {
+                // gang-formation latency is scheduler time: one recruit
+                // handshake per peer
+                dispatch_cost_us += self.env.cost.cal.gang_recruit_us * gang.len() as f64;
+                self.metrics.gangs_formed += 1;
+                self.metrics.gang_recruits += gang.len() as u64;
+            }
             self.sched_free_us = self.sched_free_us.max(now) + dispatch_cost_us;
             self.metrics.scheduler_busy_us += dispatch_cost_us;
             self.metrics.dispatches += 1;
@@ -346,6 +447,9 @@ impl<'a> Sim<'a> {
             let fetched = self.rings[e].pop().expect("just pushed");
             debug_assert_eq!(fetched, node);
             let mut dur = self.op_duration(node, e, locality_hit);
+            if !gang.is_empty() {
+                dur *= self.gang_stretch(node, 1 + gang.len() as u32);
+            }
             let demand = {
                 let base = self.base_dur_us[node as usize];
                 if base > 0.0 { self.graph.node(node).kind.bytes() / (base * 1e-6) } else { 0.0 }
@@ -354,8 +458,11 @@ impl<'a> Sim<'a> {
             dur *= stretch;
             self.metrics.queue_wait_us += start - self.ready_at[node as usize];
             self.metrics.executor_busy_us[e] += dur;
+            for &m in &gang {
+                self.metrics.executor_busy_us[m as usize] += dur;
+            }
             self.records.push(OpRecord { node, executor: e as u32, start_us: start, end_us: start + dur });
-            self.q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token });
+            self.q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token, gang });
         }
     }
 
@@ -369,8 +476,11 @@ impl<'a> Sim<'a> {
         while let Some((t, ev)) = self.q.pop() {
             makespan = makespan.max(t);
             match ev {
-                Ev::Done { node, exec, bw_token } => {
+                Ev::Done { node, exec, bw_token, gang } => {
                     self.idle.set_idle(exec as usize);
+                    for &m in &gang {
+                        self.idle.set_idle(m as usize);
+                    }
                     self.bw.release(bw_token);
                     let ready_at = &mut self.ready_at;
                     let ready = &mut self.ready;
@@ -443,11 +553,15 @@ impl<'a> Sim<'a> {
         let mut exec_idle = vec![true; n_exec];
         let shared_levels = Arc::clone(&self.levels);
         let mut sources = self.deps.sources();
-        sources.sort_unstable_by_key(|&s| pack_entry(shared_levels[s as usize], s));
+        // deque keys carry the op's gang width, like the threaded fleet's
+        // packed entries; width 1 packs bit-identically to the plain key
+        sources.sort_unstable_by_key(|&s| {
+            pack_entry_wide(shared_levels[s as usize], s, self.width_of[s as usize])
+        });
         for (i, &s) in sources.iter().enumerate() {
             self.ready_at[s as usize] = 0.0;
             deques[i % n_exec]
-                .push(pack_entry(shared_levels[s as usize], s))
+                .push(pack_entry_wide(shared_levels[s as usize], s, self.width_of[s as usize]))
                 .expect("deque sized for the whole graph");
         }
         self.acquire_sweep(&deques, &domains, &mut exec_idle, 0, 0.0, [pop_us, steal_us, cross_us]);
@@ -457,11 +571,15 @@ impl<'a> Sim<'a> {
         let mut batch: Vec<u64> = Vec::new();
         while let Some((t, ev)) = self.q.pop() {
             makespan = makespan.max(t);
-            let Ev::Done { node, exec, bw_token } = ev else {
+            let Ev::Done { node, exec, bw_token, gang } = ev else {
                 unreachable!("decentralized mode schedules only worker completions")
             };
             self.bw.release(bw_token);
             let e = exec as usize;
+            // released gang members go idle and rejoin the sweep below
+            for &m in &gang {
+                exec_idle[m as usize] = true;
+            }
             // the tentpole, in virtual time: the completing executor
             // resolves successors itself and pushes them onto its own
             // deque, ascending so the LIFO end is the batch's hottest op
@@ -470,9 +588,10 @@ impl<'a> Sim<'a> {
                 let graph = self.graph;
                 let ready_at = &mut self.ready_at;
                 let levels = &shared_levels;
+                let width_of = &self.width_of;
                 self.deps.complete(graph, node, |s| {
                     ready_at[s as usize] = t;
-                    batch.push(pack_entry(levels[s as usize], s));
+                    batch.push(pack_entry_wide(levels[s as usize], s, width_of[s as usize]));
                 });
             }
             let resolve_us = pop_us * batch.len() as f64;
@@ -531,8 +650,25 @@ impl<'a> Sim<'a> {
                             self.metrics.steals_cross_domain += 1;
                         }
                     }
-                    self.launch_decentral(e, entry_node(key), now, overhead);
                     exec_idle[e] = false;
+                    // moldable gang: the acquiring executor leads; idle
+                    // peers fuse into its team instead of sweeping for
+                    // their own work (shrink-don't-wait on a shortfall)
+                    let w_target = entry_width(key);
+                    let mut gang: Vec<u32> = Vec::new();
+                    if w_target > 1 {
+                        for off in 1..n {
+                            if gang.len() as u32 >= w_target - 1 {
+                                break;
+                            }
+                            let cand = (e + off) % n;
+                            if exec_idle[cand] {
+                                exec_idle[cand] = false;
+                                gang.push(cand as u32);
+                            }
+                        }
+                    }
+                    self.launch_decentral(e, entry_node(key), now, overhead, gang);
                     progressed = true;
                 }
             }
@@ -543,12 +679,24 @@ impl<'a> Sim<'a> {
     }
 
     /// Start `node` on executor `e` at `now + overhead_us` (decentralized
-    /// mode; no LW lane — every op runs on a worker executor).
-    fn launch_decentral(&mut self, e: usize, node: NodeId, now: f64, overhead_us: f64) {
+    /// mode; no LW lane — every op runs on a worker executor). A non-empty
+    /// `gang` fuses those peers into the op's team: recruit handshakes are
+    /// extra acquisition overhead, the body runs on the wider team's USL
+    /// curve, and every member stays busy until the op's single Done.
+    fn launch_decentral(&mut self, e: usize, node: NodeId, now: f64, overhead_us: f64, gang: Vec<u32>) {
+        let mut overhead_us = overhead_us;
+        if !gang.is_empty() {
+            overhead_us += self.env.cost.cal.gang_recruit_us * gang.len() as f64;
+            self.metrics.gangs_formed += 1;
+            self.metrics.gang_recruits += gang.len() as u64;
+        }
         let start = now + overhead_us;
         self.metrics.scheduler_busy_us += overhead_us;
         self.metrics.dispatches += 1;
         let mut dur = self.op_duration(node, e, false);
+        if !gang.is_empty() {
+            dur *= self.gang_stretch(node, 1 + gang.len() as u32);
+        }
         let demand = {
             let base = self.base_dur_us[node as usize];
             if base > 0.0 { self.graph.node(node).kind.bytes() / (base * 1e-6) } else { 0.0 }
@@ -557,8 +705,11 @@ impl<'a> Sim<'a> {
         dur *= stretch;
         self.metrics.queue_wait_us += start - self.ready_at[node as usize];
         self.metrics.executor_busy_us[e] += dur;
+        for &m in &gang {
+            self.metrics.executor_busy_us[m as usize] += dur;
+        }
         self.records.push(OpRecord { node, executor: e as u32, start_us: start, end_us: start + dur });
-        self.q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token });
+        self.q.schedule(start + dur, Ev::Done { node, exec: e as u32, bw_token: token, gang });
     }
 }
 
@@ -618,6 +769,8 @@ impl GraphiEngine {
             metrics.lightweight_ops += r.metrics.lightweight_ops;
             metrics.steals += r.metrics.steals;
             metrics.steals_cross_domain += r.metrics.steals_cross_domain;
+            metrics.gangs_formed += r.metrics.gangs_formed;
+            metrics.gang_recruits += r.metrics.gang_recruits;
             for (acc, busy) in metrics.executor_busy_us.iter_mut().zip(&r.metrics.executor_busy_us)
             {
                 *acc += busy;
@@ -727,6 +880,10 @@ impl GraphiEngine {
         assert!(
             self.duration_overrides.is_none(),
             "duration overrides are per graph; profile the union instead"
+        );
+        assert!(
+            self.width_plan.is_none(),
+            "width plans are tuned per graph; the threaded fleet applies them in serve mode"
         );
         let (union, origin) = Graph::disjoint_union(graphs);
         let result = self.run(&union, env);
@@ -906,8 +1063,8 @@ impl GraphiEngine {
             "batch windows are finite and non-negative"
         );
         assert!(
-            self.phase_plan.is_none() && self.duration_overrides.is_none(),
-            "phase plans and duration overrides are per graph; price sessions individually"
+            self.phase_plan.is_none() && self.duration_overrides.is_none() && self.width_plan.is_none(),
+            "phase/width plans and duration overrides are per graph; price sessions individually"
         );
 
         // ---- batch formation: replay the Batcher's window/size rules on
@@ -1165,7 +1322,7 @@ impl GraphiEngine {
 impl Engine for GraphiEngine {
     fn name(&self) -> String {
         format!(
-            "graphi-{}x{}-{}{}{}",
+            "graphi-{}x{}-{}{}{}{}",
             self.executors,
             self.threads_per,
             self.policy.name(),
@@ -1181,6 +1338,10 @@ impl Engine for GraphiEngine {
                     DispatchMode::Centralized => "",
                     DispatchMode::Decentralized => "-decentral",
                 }
+            },
+            match &self.width_plan {
+                Some(p) if !p.is_uniform_one() => "-moldable",
+                _ => "",
             }
         )
     }
@@ -1431,6 +1592,101 @@ mod tests {
         let p = GraphiEngine::new(4, 8)
             .with_phase_plan(PhasePlan::uniform(2, DispatchMode::Centralized, 1));
         assert!(p.name().ends_with("-phased"), "{}", p.name());
+        let m = GraphiEngine::new(4, 8).with_width_plan(WidthPlan::uniform(2));
+        assert!(m.name().ends_with("-moldable"), "{}", m.name());
+        let id = GraphiEngine::new(4, 8).with_width_plan(WidthPlan::uniform(1));
+        assert!(!id.name().contains("moldable"), "identity plan is not moldable: {}", id.name());
+    }
+
+    /// Two independent chains of large GEMMs: parallelism 2 on an
+    /// 8-executor fleet leaves six peers idle — the shape where molding
+    /// each GEMM onto a gang pays.
+    fn wide_gemm_graph() -> crate::graph::Graph {
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        for chain in 0..2 {
+            let mut prev = None;
+            for i in 0..6 {
+                let n = b.add(
+                    format!("c{chain}g{i}"),
+                    OpKind::MatMul { m: 512, k: 1024, n: 1024 },
+                );
+                if let Some(p) = prev {
+                    b.depend(p, n);
+                }
+                prev = Some(n);
+            }
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn width_one_plan_is_byte_identical_to_no_plan() {
+        // acceptance: `w = 1` everywhere must be bit-compatible with
+        // today's behavior — same records, same makespan, and (because the
+        // env is noisy) the same RNG draw order
+        let g = models::build(ModelKind::Lstm, ModelSize::Small);
+        let e = SimEnv::knl(42);
+        for mode in DispatchMode::ALL {
+            let base = GraphiEngine::new(8, 8).with_dispatch(mode).run(&g, &e);
+            let planned = GraphiEngine::new(8, 8)
+                .with_dispatch(mode)
+                .with_width_plan(WidthPlan::uniform(1))
+                .run(&g, &e);
+            assert_eq!(base.makespan_us, planned.makespan_us, "{mode:?}");
+            assert_eq!(base.records, planned.records, "{mode:?}");
+            assert_eq!(planned.metrics.gangs_formed, 0);
+            assert_eq!(planned.metrics.gang_recruits, 0);
+        }
+    }
+
+    #[test]
+    fn moldable_runs_are_valid_and_form_gangs_in_both_modes() {
+        use crate::graph::op::OpClass;
+        let g = wide_gemm_graph();
+        let mut plan = WidthPlan::uniform(1);
+        plan.set(OpClass::Gemm, 4);
+        for mode in DispatchMode::ALL {
+            let r = GraphiEngine::new(8, 2)
+                .with_dispatch(mode)
+                .with_width_plan(plan.clone())
+                .run(&g, &env());
+            r.validate(&g).unwrap();
+            assert_eq!(r.records.len(), g.len());
+            assert!(r.metrics.gangs_formed > 0, "{mode:?} formed no gangs");
+            assert!(r.metrics.gang_recruits >= r.metrics.gangs_formed);
+        }
+    }
+
+    #[test]
+    fn wide_gemms_gain_from_width_while_small_ops_prefer_width_one() {
+        // the tentpole's differential: the same width knob that speeds up
+        // narrow chains of wide GEMMs slows down the 640-node small-op
+        // graph (oversaturated curves + lost inter-op parallelism + paid
+        // recruit handshakes), so the autotuner must find opposite winners
+        use crate::graph::op::OpClass;
+        let e = env();
+        let mut gemm4 = WidthPlan::uniform(1);
+        gemm4.set(OpClass::Gemm, 4);
+        let g = wide_gemm_graph();
+        let solo = GraphiEngine::new(8, 2).run(&g, &e).makespan_us;
+        let molded =
+            GraphiEngine::new(8, 2).with_width_plan(gemm4).run(&g, &e).makespan_us;
+        assert!(
+            molded < solo * 0.8,
+            "narrow wide-GEMM chains should gain from gangs: {molded} vs {solo}"
+        );
+
+        let small = wide_small_op_graph();
+        let mut ew4 = WidthPlan::uniform(1);
+        ew4.set(OpClass::Elementwise, 4);
+        let solo = GraphiEngine::new(8, 2).run(&small, &e).makespan_us;
+        let molded =
+            GraphiEngine::new(8, 2).with_width_plan(ew4).run(&small, &e).makespan_us;
+        assert!(
+            molded > solo,
+            "the 640-node small-op graph should prefer w = 1: {molded} vs {solo}"
+        );
     }
 
     /// A 2-domain KNL variant (SNC-2-like): domains of 34 cores.

@@ -63,6 +63,7 @@ pub use trace::{
 pub use worksteal::{Acquire, DomainMap, Steal, WorkStealDeque};
 
 use crate::cost::{Calibration, CostModel, Interference};
+use crate::graph::op::OpClass;
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
@@ -171,6 +172,104 @@ impl PhasePlan {
     }
 }
 
+/// A per-op-class **moldable width** assignment: ops of class `c` request
+/// a gang of `width_for(c)` executors (the popping executor plus
+/// `width − 1` recruited peers), partitioning the op body across the gang.
+/// Widths are chosen per *class*, not per node — the classes are exactly
+/// the Fig-2 saturation curves, so one width per curve is the natural
+/// search granularity (Wang et al., arXiv:1908.04705, tune per-op-type
+/// intra-op parallelism the same way). `uniform(1)` is the identity plan:
+/// every packed entry stays bit-compatible with the width-free runtime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WidthPlan {
+    /// Width per [`OpClass`], indexed by [`OpClass::index`]. Each in
+    /// `1..=`[`ready::MAX_WIDTH`]; the runtime additionally clamps to the
+    /// fleet's executor count and forces Tiny ops to 1.
+    widths: [u32; OpClass::COUNT],
+}
+
+impl WidthPlan {
+    /// The identity plan: every class at width `w` (usually 1).
+    pub fn uniform(w: u32) -> WidthPlan {
+        debug_assert!(w >= 1 && w <= ready::MAX_WIDTH);
+        WidthPlan { widths: [w; OpClass::COUNT] }
+    }
+
+    /// The gang width requested for ops of `class`.
+    pub fn width_for(&self, class: OpClass) -> u32 {
+        self.widths[class.index()]
+    }
+
+    /// Set the width for one class (clamped to `1..=MAX_WIDTH`).
+    pub fn set(&mut self, class: OpClass, w: u32) {
+        self.widths[class.index()] = w.clamp(1, ready::MAX_WIDTH);
+    }
+
+    /// Is this the identity (`w = 1` everywhere) plan?
+    pub fn is_uniform_one(&self) -> bool {
+        self.widths.iter().all(|&w| w == 1)
+    }
+
+    /// The largest width any class requests.
+    pub fn max_width(&self) -> u32 {
+        self.widths.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Compact human-readable form, e.g. `gemm:4 conv:2 elementwise:1
+    /// memory:1 tiny:1`.
+    pub fn render(&self) -> String {
+        OpClass::ALL
+            .iter()
+            .map(|c| format!("{}:{}", c.name(), self.width_for(*c)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Parse a CLI-style spec like `gemm=4,conv=2` (unlisted classes stay
+    /// at width 1). Accepts `:` or `=` as the separator. Rejects unknown
+    /// class names and widths outside `1..=MAX_WIDTH`.
+    pub fn parse(text: &str) -> Result<WidthPlan, String> {
+        let mut plan = WidthPlan::uniform(1);
+        for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, value) = part
+                .split_once('=')
+                .or_else(|| part.split_once(':'))
+                .ok_or_else(|| format!("bad width entry `{part}` (want class=width)"))?;
+            let class = OpClass::ALL
+                .into_iter()
+                .find(|c| c.name() == name.trim())
+                .ok_or_else(|| {
+                    format!(
+                        "unknown op class `{}` (have: {})",
+                        name.trim(),
+                        OpClass::ALL.map(|c| c.name()).join(", ")
+                    )
+                })?;
+            let w: u32 = value
+                .trim()
+                .parse()
+                .ok()
+                .filter(|&w| (1..=ready::MAX_WIDTH).contains(&w))
+                .ok_or_else(|| {
+                    format!(
+                        "width `{}` for `{}` outside 1..={}",
+                        value.trim(),
+                        class.name(),
+                        ready::MAX_WIDTH
+                    )
+                })?;
+            plan.set(class, w);
+        }
+        Ok(plan)
+    }
+}
+
+impl Default for WidthPlan {
+    fn default() -> WidthPlan {
+        WidthPlan::uniform(1)
+    }
+}
+
 /// Shared environment for a simulated run.
 #[derive(Debug, Clone)]
 pub struct SimEnv {
@@ -223,6 +322,11 @@ pub struct EngineMetrics {
     pub steals_cross_domain: u64,
     /// Phased runs: phase boundaries where the dispatch mode changed.
     pub mode_switches: u64,
+    /// Moldable gangs formed: ops that ran at effective width > 1.
+    pub gangs_formed: u64,
+    /// Executors recruited into gangs (sum of `width − 1` over formed
+    /// gangs) — each recruit cost `gang_recruit_us` of scheduler time.
+    pub gang_recruits: u64,
 }
 
 impl EngineMetrics {
@@ -299,6 +403,40 @@ mod tests {
         assert_eq!(PhasePlan::uniform(4, C, 3).mode_switches(), 0);
         assert!(plan.render().starts_with("c|d|d|c"));
         assert!(plan.render().contains("threshold 4"));
+    }
+
+    #[test]
+    fn width_plan_helpers() {
+        let mut plan = WidthPlan::uniform(1);
+        assert!(plan.is_uniform_one());
+        assert_eq!(plan.max_width(), 1);
+        plan.set(OpClass::Gemm, 4);
+        plan.set(OpClass::Conv, 2);
+        assert!(!plan.is_uniform_one());
+        assert_eq!(plan.width_for(OpClass::Gemm), 4);
+        assert_eq!(plan.width_for(OpClass::Elementwise), 1);
+        assert_eq!(plan.max_width(), 4);
+        assert_eq!(plan.render(), "gemm:4 conv:2 elementwise:1 memory:1 tiny:1");
+        // out-of-range widths clamp instead of corrupting the entry field
+        plan.set(OpClass::Memory, 99);
+        assert_eq!(plan.width_for(OpClass::Memory), ready::MAX_WIDTH);
+        plan.set(OpClass::Memory, 0);
+        assert_eq!(plan.width_for(OpClass::Memory), 1);
+        assert_eq!(WidthPlan::default(), WidthPlan::uniform(1));
+    }
+
+    #[test]
+    fn width_plan_parse_accepts_specs_and_rejects_garbage() {
+        let plan = WidthPlan::parse("gemm=4, conv:2").unwrap();
+        assert_eq!(plan.width_for(OpClass::Gemm), 4);
+        assert_eq!(plan.width_for(OpClass::Conv), 2);
+        assert_eq!(plan.width_for(OpClass::Elementwise), 1);
+        // the empty spec is the identity plan
+        assert_eq!(WidthPlan::parse("").unwrap(), WidthPlan::uniform(1));
+        assert!(WidthPlan::parse("warp=2").unwrap_err().contains("unknown op class"));
+        assert!(WidthPlan::parse("gemm=0").unwrap_err().contains("outside"));
+        assert!(WidthPlan::parse(&format!("gemm={}", ready::MAX_WIDTH + 1)).is_err());
+        assert!(WidthPlan::parse("gemm").unwrap_err().contains("class=width"));
     }
 
     #[test]

@@ -105,7 +105,14 @@ impl Profiler {
                 acc[r.node as usize].push(r.duration_us());
             }
         }
-        acc.into_iter().map(|w| w.mean()).collect()
+        let mut durations: Vec<f64> = acc.into_iter().map(|w| w.mean()).collect();
+        let clamped = sanitize_durations(&mut durations);
+        if clamped > 0 {
+            crate::log_warn!(
+                "profiler: clamped {clamped} non-finite/negative op duration estimate(s) to 0"
+            );
+        }
+        durations
     }
 
     /// Render the search as a table.
@@ -121,6 +128,24 @@ impl Profiler {
         }
         t.render()
     }
+}
+
+/// Clamp non-finite or negative duration estimates to 0 in place,
+/// returning how many were touched. A NaN level value would poison every
+/// downstream critical-path comparison (`quantize` in
+/// [`super::ready`] orders keys by the raw float), and a negative one
+/// would invert CP ordering — an op a profiling run never produced a
+/// record for (e.g. a faulted iteration) must degrade to "no estimated
+/// weight", not to garbage keys.
+pub fn sanitize_durations(durations: &mut [f64]) -> usize {
+    let mut clamped = 0usize;
+    for d in durations.iter_mut() {
+        if !d.is_finite() || *d < 0.0 {
+            *d = 0.0;
+            clamped += 1;
+        }
+    }
+    clamped
 }
 
 #[cfg(test)]
@@ -153,6 +178,15 @@ mod tests {
         let p = Profiler { iterations: 2, ..Default::default() };
         let d = p.estimate_durations(&g, &SimEnv::knl(2), 8);
         assert!(d.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn sanitize_clamps_only_the_broken_estimates() {
+        let mut d = vec![1.5, f64::NAN, -0.25, f64::INFINITY, 0.0, f64::NEG_INFINITY, 3.0];
+        assert_eq!(sanitize_durations(&mut d), 4);
+        assert_eq!(d, vec![1.5, 0.0, 0.0, 0.0, 0.0, 0.0, 3.0]);
+        // a clean slice is untouched and reports zero
+        assert_eq!(sanitize_durations(&mut d), 0);
     }
 
     #[test]

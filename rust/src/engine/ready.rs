@@ -127,57 +127,141 @@ fn pack(priority: f64, seq: u32) -> u64 {
     ((quantize(priority) as u64) << 32) | ((!seq) as u64)
 }
 
+/// Bits of the quantized CP level in every packed deque key (high half).
+pub const ENTRY_LEVEL_BITS: u32 = 32;
+
+/// Bits of the moldable gang-width field. The field stores `width - 1`,
+/// so `w = 1` entries carry all-zero width bits and stay **bit-identical**
+/// to the pre-moldable packings.
+pub const ENTRY_WIDTH_BITS: u32 = 4;
+
+/// Largest gang width a packed entry can carry.
+pub const MAX_WIDTH: u32 = 1 << ENTRY_WIDTH_BITS;
+
+/// Bits of the session-slot field in a serve-mode key.
+pub const SESSION_SLOT_BITS: u32 = 8;
+
+/// Bits of a serve-mode key's node field. Session graphs are capped at
+/// 2²⁰ nodes (far above every model in the zoo); above the node field sit
+/// the gang width ([`ENTRY_WIDTH_BITS`]) and the session slot
+/// ([`SESSION_SLOT_BITS`]).
+pub const SESSION_NODE_BITS: u32 = 20;
+
+/// Bits of the single-graph key's node field ([`pack_entry`]); the
+/// [`ENTRY_WIDTH_BITS`] above it carry the gang width.
+pub const PLAIN_NODE_BITS: u32 = 28;
+
+// Compile-time layout checks: the fields of each packing must tile
+// exactly 64 bits, the slot field must still address all 256 fleet
+// session slots, and the width field must hold `MAX_WIDTH - 1`. A
+// mis-sized width field would silently shift into the level half and
+// corrupt CP ranking — fail the build instead.
+const _: () = assert!(
+    ENTRY_LEVEL_BITS + SESSION_SLOT_BITS + ENTRY_WIDTH_BITS + SESSION_NODE_BITS == 64,
+    "session key fields must tile 64 bits exactly"
+);
+const _: () = assert!(
+    ENTRY_LEVEL_BITS + ENTRY_WIDTH_BITS + PLAIN_NODE_BITS == 64,
+    "single-graph key fields must tile 64 bits exactly"
+);
+const _: () =
+    assert!(1usize << SESSION_SLOT_BITS == 256, "slot field must address exactly 256 slots");
+const _: () = assert!(MAX_WIDTH >= 1 && MAX_WIDTH <= 1 << ENTRY_WIDTH_BITS);
+
 /// Pack a `(priority, node)` pair into one `u64` for the work-stealing
 /// deques ([`crate::engine::worksteal`]): quantized priority in the high
 /// half (same order-preserving map as the ready-heap keys), the node id in
 /// the low half. A plain integer max-compare orders entries by priority;
 /// priorities that quantize equal tie-break by node id — arbitrary but
 /// deterministic, which is all the decentralized path needs (cross-thread
-/// FIFO seniority is not observable anyway).
+/// FIFO seniority is not observable anyway). Equivalent to
+/// [`pack_entry_wide`] at width 1 (the width bits stay zero).
 #[inline]
 pub fn pack_entry(priority: f64, node: NodeId) -> u64 {
-    ((quantize(priority) as u64) << 32) | node as u64
+    debug_assert!(node < (1 << PLAIN_NODE_BITS), "node {node} exceeds the key's node field");
+    ((quantize(priority) as u64) << ENTRY_LEVEL_BITS) | node as u64
 }
 
-/// The node id carried by a [`pack_entry`] key.
+/// [`pack_entry`] with an explicit gang width `w` in `1..=MAX_WIDTH`:
+///
+/// ```text
+///   63              32 31   28 27               0
+///   +-----------------+-------+-----------------+
+///   | quantized level | w - 1 |     node id     |
+///   +-----------------+-------+-----------------+
+/// ```
+///
+/// The width field stores `w - 1`, so `w = 1` produces exactly
+/// [`pack_entry`]'s key and width-free runs stay bit-compatible. The
+/// level half is untouched, so CP ranking and the NUMA cross-domain
+/// margin ([`crate::engine::worksteal::entry_level`]) order wide entries
+/// identically to narrow ones.
+#[inline]
+pub fn pack_entry_wide(priority: f64, node: NodeId, width: u32) -> u64 {
+    debug_assert!(width >= 1 && width <= MAX_WIDTH, "gang width {width} out of range");
+    pack_entry(priority, node) | (((width - 1) as u64) << PLAIN_NODE_BITS)
+}
+
+/// The node id carried by a [`pack_entry`]/[`pack_entry_wide`] key.
 #[inline]
 pub fn entry_node(key: u64) -> NodeId {
-    key as u32
+    (key as u32) & ((1 << PLAIN_NODE_BITS) - 1)
 }
 
-/// Bits of a serve-mode key's node field. Session graphs are capped at
-/// 2²⁴ nodes (far above every model in the zoo); the 8 bits above the
-/// node field carry the session slot.
-pub const SESSION_NODE_BITS: u32 = 24;
+/// The gang width carried by a [`pack_entry_wide`] key (1 for plain keys).
+#[inline]
+pub fn entry_width(key: u64) -> u32 {
+    (((key >> PLAIN_NODE_BITS) as u32) & (MAX_WIDTH - 1)) + 1
+}
 
 /// Pack a `(priority, session slot, node)` triple into one `u64` for the
 /// multi-session executor fleet ([`crate::runtime::fleet`]):
 ///
 /// ```text
-///   63              32 31     24 23               0
-///   +-----------------+---------+-----------------+
-///   | quantized level |  slot   |     node id     |
-///   +-----------------+---------+-----------------+
+///   63              32 31     24 23   20 19           0
+///   +-----------------+---------+-------+-------------+
+///   | quantized level |  slot   | w - 1 |   node id   |
+///   +-----------------+---------+-------+-------------+
 /// ```
 ///
 /// The level field is identical to [`pack_entry`]'s, so a plain integer
 /// max-compare still orders entries by critical-path priority — now
 /// *across sessions*: an op deep on graph A's critical path outranks a
 /// shallow op of graph B by the same rule that orders them within one
-/// graph. Priorities that quantize equal tie-break by (slot, node) —
-/// arbitrary but deterministic, same contract as [`pack_entry`]. The
+/// graph. Priorities that quantize equal tie-break by (slot, width, node)
+/// — arbitrary but deterministic, same contract as [`pack_entry`]. The
 /// NUMA victim ranking's [`crate::engine::worksteal::entry_level`]
 /// reads only the high half and is layout-compatible with both packings.
+/// The width field stores `w - 1` (here always 0), so width-1 keys are
+/// bit-identical to the pre-moldable 24-bit-node packing for every graph
+/// below 2²⁰ nodes. [`pack_session_entry_wide`] sets a real width.
 #[inline]
 pub fn pack_session_entry(priority: f64, slot: u8, node: NodeId) -> u64 {
+    pack_session_entry_wide(priority, slot, node, 1)
+}
+
+/// [`pack_session_entry`] with an explicit gang width in `1..=MAX_WIDTH`.
+#[inline]
+pub fn pack_session_entry_wide(priority: f64, slot: u8, node: NodeId, width: u32) -> u64 {
     debug_assert!(node < (1 << SESSION_NODE_BITS), "node {node} exceeds the session key's node field");
-    ((quantize(priority) as u64) << 32) | ((slot as u64) << SESSION_NODE_BITS) | node as u64
+    debug_assert!(width >= 1 && width <= MAX_WIDTH, "gang width {width} out of range");
+    ((quantize(priority) as u64) << ENTRY_LEVEL_BITS)
+        | ((slot as u64) << (SESSION_NODE_BITS + ENTRY_WIDTH_BITS))
+        | (((width - 1) as u64) << SESSION_NODE_BITS)
+        | node as u64
 }
 
 /// The session slot carried by a [`pack_session_entry`] key.
 #[inline]
 pub fn session_entry_slot(key: u64) -> u8 {
-    (key >> SESSION_NODE_BITS) as u8
+    (key >> (SESSION_NODE_BITS + ENTRY_WIDTH_BITS)) as u8
+}
+
+/// The gang width carried by a [`pack_session_entry_wide`] key (1 for
+/// plain session keys).
+#[inline]
+pub fn session_entry_width(key: u64) -> u32 {
+    (((key >> SESSION_NODE_BITS) as u32) & (MAX_WIDTH - 1)) + 1
 }
 
 /// The node id carried by a [`pack_session_entry`] key.
@@ -377,10 +461,28 @@ mod tests {
 
     #[test]
     fn pack_entry_orders_by_priority_then_node() {
+        let max_node = (1 << PLAIN_NODE_BITS) - 1;
         assert!(pack_entry(9.0, 0) > pack_entry(5.0, 1000), "priority dominates");
         assert!(pack_entry(7.0, 2) > pack_entry(7.0, 1), "equal priority: node id breaks ties");
         assert_eq!(entry_node(pack_entry(123.0, 77)), 77);
-        assert_eq!(entry_node(pack_entry(-4.5, u32::MAX)), u32::MAX);
+        assert_eq!(entry_node(pack_entry(-4.5, max_node)), max_node);
+    }
+
+    #[test]
+    fn wide_entry_roundtrips_and_width_one_is_bit_identical() {
+        let max_node = (1 << PLAIN_NODE_BITS) - 1;
+        for (level, node) in [(0.0, 0u32), (123.5, 42), (-4.5, max_node)] {
+            for width in [1u32, 2, 3, MAX_WIDTH] {
+                let key = pack_entry_wide(level, node, width);
+                assert_eq!(entry_node(key), node);
+                assert_eq!(entry_width(key), width);
+                // the level half is never disturbed by the width field
+                assert_eq!(key >> ENTRY_LEVEL_BITS, pack_entry(level, node) >> ENTRY_LEVEL_BITS);
+            }
+            // w = 1 is the pre-moldable packing, bit for bit
+            assert_eq!(pack_entry_wide(level, node, 1), pack_entry(level, node));
+        }
+        assert_eq!(entry_width(pack_entry(3.0, 17)), 1, "plain keys decode as width 1");
     }
 
     #[test]
@@ -390,6 +492,7 @@ mod tests {
             let key = pack_session_entry(level, slot, node);
             assert_eq!(session_entry_slot(key), slot);
             assert_eq!(session_entry_node(key), node);
+            assert_eq!(session_entry_width(key), 1);
         }
         // CP priority dominates regardless of which session an entry
         // belongs to — the cross-session CP-first rule
@@ -402,6 +505,29 @@ mod tests {
         // quantize-equal levels tie-break by (slot, node), deterministically
         assert!(pack_session_entry(7.0, 2, 0) > pack_session_entry(7.0, 1, 99));
         assert!(pack_session_entry(7.0, 1, 9) > pack_session_entry(7.0, 1, 8));
+    }
+
+    #[test]
+    fn wide_session_entry_roundtrips_and_width_one_matches_legacy_layout() {
+        let max_node = (1 << SESSION_NODE_BITS) - 1;
+        for (level, slot, node) in [(0.0, 0u8, 0u32), (123.5, 7, 42), (-4.5, 255, max_node)] {
+            for width in [1u32, 2, 5, MAX_WIDTH] {
+                let key = pack_session_entry_wide(level, slot, node, width);
+                assert_eq!(session_entry_slot(key), slot);
+                assert_eq!(session_entry_node(key), node);
+                assert_eq!(session_entry_width(key), width);
+                assert_eq!(
+                    key >> ENTRY_LEVEL_BITS,
+                    pack_session_entry(level, slot, node) >> ENTRY_LEVEL_BITS,
+                    "width field must never disturb the CP-level half"
+                );
+            }
+            // w = 1 reproduces the pre-moldable [level:32|slot:8|node:24]
+            // layout bit for bit (the slot shift is unchanged at 24 and
+            // the width bits are zero) for every node below 2^20
+            let legacy = ((quantize(level) as u64) << 32) | ((slot as u64) << 24) | node as u64;
+            assert_eq!(pack_session_entry(level, slot, node), legacy);
+        }
     }
 
     #[test]

@@ -214,11 +214,31 @@ impl WorkStealDeque {
 /// half ([`super::ready::pack_entry`] layout). Victim ranking compares
 /// *levels*, not whole keys: two entries on the same CP level differ only
 /// by node id, and preferring a same-domain victim among level-ties is
-/// exactly the topology-awareness §2/§9 asks for.
+/// exactly the topology-awareness §2/§9 asks for. The moldable gang-width
+/// field ([`super::ready::ENTRY_WIDTH_BITS`]) lives strictly *below* the
+/// level half in both packings, so CP ranking and the NUMA cross-domain
+/// margin are width-oblivious by construction — the const-assert below
+/// fails the build if the layouts ever drift.
 #[inline]
 pub fn entry_level(key: u64) -> u32 {
-    (key >> 32) as u32
+    (key >> super::ready::ENTRY_LEVEL_BITS) as u32
 }
+
+// The level shift above must agree with the packers' layouts: the level
+// half starts right after slot+width+node (session keys) and width+node
+// (single-graph keys).
+const _: () = assert!(
+    super::ready::ENTRY_LEVEL_BITS
+        == super::ready::SESSION_SLOT_BITS
+            + super::ready::ENTRY_WIDTH_BITS
+            + super::ready::SESSION_NODE_BITS,
+    "entry_level's shift no longer matches the session-key layout"
+);
+const _: () = assert!(
+    super::ready::ENTRY_LEVEL_BITS
+        == super::ready::ENTRY_WIDTH_BITS + super::ready::PLAIN_NODE_BITS,
+    "entry_level's shift no longer matches the single-graph key layout"
+);
 
 /// Executor→NUMA-domain map plus the cross-domain steal policy, for
 /// topology-aware victim ranking (§2's SNC modes; quadrant machines use
@@ -497,6 +517,30 @@ mod tests {
         assert_eq!(entry_level(key(7, 3)), 7);
         assert_eq!(entry_level(key(u32::MAX, 0)), u32::MAX);
         assert_eq!(entry_level(0), 0);
+    }
+
+    #[test]
+    fn gang_width_bits_never_disturb_level_ranking() {
+        use crate::engine::ready::{
+            pack_entry, pack_entry_wide, pack_session_entry, pack_session_entry_wide, MAX_WIDTH,
+        };
+        for level in [0.0f64, 1.5, 123.0, 1e9] {
+            for w in 1..=MAX_WIDTH {
+                assert_eq!(
+                    entry_level(pack_entry_wide(level, 7, w)),
+                    entry_level(pack_entry(level, 7)),
+                );
+                assert_eq!(
+                    entry_level(pack_session_entry_wide(level, 3, 7, w)),
+                    entry_level(pack_session_entry(level, 3, 7)),
+                );
+            }
+        }
+        // a strictly higher level still dominates any width difference,
+        // so NUMA margin decisions are unchanged by widths
+        assert!(
+            entry_level(pack_entry_wide(9.0, 0, MAX_WIDTH)) > entry_level(pack_entry(5.0, 0))
+        );
     }
 
     #[test]

@@ -90,6 +90,14 @@ pub enum OpClass {
 }
 
 impl OpClass {
+    /// Every class, in the canonical order used by per-class tables
+    /// (width plans, histograms). [`Self::index`] is the position here.
+    pub const ALL: [OpClass; 5] =
+        [OpClass::Gemm, OpClass::Conv, OpClass::Elementwise, OpClass::Memory, OpClass::Tiny];
+
+    /// Number of classes (`ALL.len()`), for fixed-size per-class arrays.
+    pub const COUNT: usize = OpClass::ALL.len();
+
     pub fn name(self) -> &'static str {
         match self {
             OpClass::Gemm => "gemm",
@@ -98,6 +106,22 @@ impl OpClass {
             OpClass::Memory => "memory",
             OpClass::Tiny => "tiny",
         }
+    }
+
+    /// Position of this class in [`Self::ALL`].
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Gemm => 0,
+            OpClass::Conv => 1,
+            OpClass::Elementwise => 2,
+            OpClass::Memory => 3,
+            OpClass::Tiny => 4,
+        }
+    }
+
+    /// Inverse of [`Self::name`] (tuning-artifact deserialization).
+    pub fn parse(s: &str) -> Option<OpClass> {
+        OpClass::ALL.iter().copied().find(|c| c.name() == s)
     }
 }
 
@@ -306,6 +330,16 @@ mod tests {
             OpKind::Concat { n: 1 }.mnemonic(),
         ];
         assert_eq!(ops, ["gemm", "scalar", "concat"]);
+    }
+
+    #[test]
+    fn op_class_table_is_consistent() {
+        assert_eq!(OpClass::COUNT, OpClass::ALL.len());
+        for (i, c) in OpClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "index must match ALL position");
+            assert_eq!(OpClass::parse(c.name()), Some(*c), "parse inverts name");
+        }
+        assert_eq!(OpClass::parse("no-such-class"), None);
     }
 
     #[test]

@@ -16,7 +16,9 @@ use std::path::{Path, PathBuf};
 
 use crate::cost::machine::Machine;
 use crate::engine::autotune::{AutotuneReport, Autotuner};
-use crate::engine::{DispatchMode, PhasePlan, SimEnv};
+use crate::engine::ready::MAX_WIDTH;
+use crate::engine::{DispatchMode, PhasePlan, SimEnv, WidthPlan};
+use crate::graph::op::OpClass;
 use crate::graph::Graph;
 use crate::util::json::{self, Json};
 
@@ -183,9 +185,10 @@ fn parse_manifest(doc: &Json) -> Result<Vec<Manifest>, ArtifactError> {
 /// v2 (PR 3): added the per-machine key (`machine_cores`,
 /// `machine_numa_domains`) and the dispatch-mode axis (`best_dispatch`,
 /// per-measurement `dispatch`). v3 (PR 4): added the optional per-phase
-/// dispatch plan (`phase_threshold` + `phase_modes`). v1/v2 artifacts
+/// dispatch plan (`phase_threshold` + `phase_modes`). v4 (PR 10): added
+/// the optional per-op-class gang-width plan (`widths`). v1–v3 artifacts
 /// degrade to a fresh search.
-pub const TUNING_FORMAT_VERSION: u64 = 3;
+pub const TUNING_FORMAT_VERSION: u64 = 4;
 
 /// The hardware identity a tuning result is valid for: physical core count
 /// and sub-NUMA clustering mode (quadrant = 1 domain, SNC-4 = 4). One
@@ -245,6 +248,10 @@ pub struct TuningArtifact {
     /// that beats the uniform winner (v3). `None` = run uniformly under
     /// `best_dispatch`.
     pub phase_plan: Option<PhasePlan>,
+    /// Per-op-class gang-width plan, when the autotuner's width search was
+    /// enabled and found one that beats uniform width 1 (v4). `None` = run
+    /// every op at width 1 (no gangs).
+    pub width_plan: Option<WidthPlan>,
     pub best_makespan_us: f64,
     /// Profiling iterations the search spent.
     pub total_profile_iterations: usize,
@@ -295,6 +302,7 @@ impl TuningArtifact {
             best: report.best,
             best_dispatch: report.best_dispatch,
             phase_plan: report.phase_plan.clone(),
+            width_plan: report.width_plan.clone(),
             best_makespan_us: report.best_makespan_us,
             total_profile_iterations: report.total_profile_iterations,
             durations_us: report.durations_us.clone(),
@@ -359,6 +367,13 @@ impl TuningArtifact {
                 Json::Arr(plan.modes.iter().map(|m| Json::from(m.name())).collect()),
             );
         }
+        if let Some(plan) = &self.width_plan {
+            let mut widths = Json::obj();
+            for class in OpClass::ALL {
+                widths.set(class.name(), plan.width_for(class) as u64);
+            }
+            doc.set("widths", widths);
+        }
         let trace: Vec<Json> = self
             .search_trace
             .iter()
@@ -411,6 +426,13 @@ impl TuningArtifact {
             .iter()
             .map(|d| d.as_f64().ok_or_else(|| bad("non-numeric duration")))
             .collect::<Result<_, _>>()?;
+        // A NaN duration would poison every critical-path level computed
+        // from the table; a negative one would invert CP ordering. Both
+        // mean the file is damaged — reject rather than clamp (unlike the
+        // live profiler, which degrades its own noisy estimates in place).
+        if durations_us.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err(bad("non-finite or negative duration"));
+        }
         let dispatch_of = |v: Option<&Json>| -> Result<DispatchMode, ArtifactError> {
             v.and_then(|d| d.as_str())
                 .and_then(DispatchMode::parse)
@@ -469,6 +491,29 @@ impl TuningArtifact {
             }
             _ => return Err(bad("phase_threshold and phase_modes must appear together")),
         };
+        let width_plan = match doc.get("widths") {
+            None => None,
+            Some(Json::Obj(entries)) => {
+                let mut plan = WidthPlan::uniform(1);
+                for (name, v) in entries {
+                    let class = OpClass::ALL
+                        .into_iter()
+                        .find(|c| c.name() == name.as_str())
+                        .ok_or_else(|| bad(&format!("unknown op class `{name}` in `widths`")))?;
+                    let w = v
+                        .as_f64()
+                        .ok_or_else(|| bad(&format!("non-numeric width for `{name}`")))?;
+                    if !w.is_finite() || w.fract() != 0.0 || w < 1.0 || w > MAX_WIDTH as f64 {
+                        return Err(bad(&format!(
+                            "width {w} for `{name}` outside 1..={MAX_WIDTH}"
+                        )));
+                    }
+                    plan.set(class, w as u32);
+                }
+                Some(plan)
+            }
+            Some(_) => return Err(bad("`widths` must be an object")),
+        };
         let artifact = TuningArtifact {
             version,
             tag,
@@ -482,6 +527,7 @@ impl TuningArtifact {
             best: (num("best_executors")? as usize, num("best_threads_per")? as usize),
             best_dispatch: dispatch_of(doc.get("best_dispatch"))?,
             phase_plan,
+            width_plan,
             best_makespan_us: num("best_makespan_us")?,
             total_profile_iterations: num("total_profile_iterations")? as usize,
             durations_us,
@@ -646,6 +692,12 @@ mod tests {
                 threshold: 8,
                 modes: vec![DispatchMode::Centralized, DispatchMode::Decentralized],
             }),
+            width_plan: Some({
+                let mut plan = WidthPlan::uniform(1);
+                plan.set(OpClass::Gemm, 4);
+                plan.set(OpClass::Conv, 2);
+                plan
+            }),
             best_makespan_us: 1234.5,
             total_profile_iterations: 25,
             durations_us: vec![1.5, 2.25, 0.125, 7.0],
@@ -750,12 +802,81 @@ mod tests {
     #[test]
     fn v2_artifact_without_phase_fields_degrades() {
         // a v2 document (pre-phase-plan schema) must be rejected by the
-        // version gate so callers re-search and re-stamp a v3 file — the
+        // version gate so callers re-search and re-stamp a v4 file — the
         // same degrade path as v1 and corrupt artifacts
         let mut doc = sample_tuning().to_json();
         doc.set("version", 2u64);
         let err = TuningArtifact::from_json(&doc).unwrap_err();
-        assert!(matches!(err, ArtifactError::TuningVersion { found: 2, expected: 3 }));
+        assert!(matches!(err, ArtifactError::TuningVersion { found: 2, expected: 4 }));
+    }
+
+    #[test]
+    fn v3_artifact_without_width_fields_degrades() {
+        // a v3 document (pre-width-plan schema) degrades identically: the
+        // version gate fires before any payload parsing
+        let mut doc = sample_tuning().to_json();
+        doc.set("version", 3u64);
+        let err = TuningArtifact::from_json(&doc).unwrap_err();
+        assert!(matches!(err, ArtifactError::TuningVersion { found: 3, expected: 4 }));
+    }
+
+    #[test]
+    fn artifact_without_width_plan_roundtrips_with_absent_key() {
+        // None serializes as an *absent* `widths` key (not null or an
+        // all-ones object), and parses back to None
+        let a = TuningArtifact { width_plan: None, ..sample_tuning() };
+        let text = a.to_json().to_string_pretty();
+        assert!(!text.contains("\"widths\""));
+        let back = TuningArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn corrupt_width_plans_are_bad_tuning() {
+        let widths = |entries: &[(&str, f64)]| {
+            Json::Obj(entries.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect())
+        };
+        // unknown class name
+        let mut doc = sample_tuning().to_json();
+        doc.set("widths", widths(&[("warp", 2.0)]));
+        assert!(matches!(
+            TuningArtifact::from_json(&doc).unwrap_err(),
+            ArtifactError::BadTuning(_)
+        ));
+        // zero, oversized, and fractional widths — a hand-edited file must
+        // never smuggle an out-of-range gang width into the fleet
+        for w in [0.0, (MAX_WIDTH + 1) as f64, 2.5, f64::NAN] {
+            let mut doc = sample_tuning().to_json();
+            doc.set("widths", widths(&[("gemm", w)]));
+            assert!(
+                matches!(TuningArtifact::from_json(&doc).unwrap_err(), ArtifactError::BadTuning(_)),
+                "width {w} must be rejected"
+            );
+        }
+        // widths must be an object, not an array
+        let mut doc = sample_tuning().to_json();
+        doc.set("widths", Json::Arr(vec![Json::Num(2.0)]));
+        assert!(matches!(
+            TuningArtifact::from_json(&doc).unwrap_err(),
+            ArtifactError::BadTuning(_)
+        ));
+    }
+
+    #[test]
+    fn non_finite_or_negative_durations_are_bad_tuning() {
+        // the duration table feeds critical-path levels; a damaged file
+        // must be rejected, not clamped like live profiler noise
+        for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.5] {
+            let mut doc = sample_tuning().to_json();
+            doc.set(
+                "durations_us",
+                Json::Arr(vec![Json::Num(1.0), Json::Num(poison), Json::Num(3.0), Json::Num(4.0)]),
+            );
+            assert!(
+                matches!(TuningArtifact::from_json(&doc).unwrap_err(), ArtifactError::BadTuning(_)),
+                "duration {poison} must be rejected"
+            );
+        }
     }
 
     #[test]

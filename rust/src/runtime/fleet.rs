@@ -24,17 +24,51 @@
 //!
 //! Work-stealing deque entries must say *which graph* a node id belongs to
 //! once sessions interleave. Entries are re-packed as
-//! `[quantized CP level : 32 | session slot : 8 | node : 24]`
-//! ([`crate::engine::ready::pack_session_entry`]): the level field is
+//! `[quantized CP level : 32 | session slot : 8 | gang width − 1 : 4 | node : 20]`
+//! ([`crate::engine::ready::pack_session_entry_wide`]): the level field is
 //! unchanged from the single-graph packing, so every PR-3/PR-4 property of
 //! [`crate::engine::worksteal`] carries over verbatim — owner LIFO pops
 //! stay batch-hottest-first, `steal_highest`/`steal_highest_numa` still
 //! rank victims by one integer compare, and `entry_level` still feeds the
-//! NUMA cross-margin rule. Slots are reused: at most
+//! NUMA cross-margin rule. A width-1 entry packs bit-identically to the
+//! pre-moldable layout. Slots are reused: at most
 //! [`FleetConfig::max_sessions`] (≤ 256) sessions are in flight, and a
 //! slot is recycled only after its session's final op completes — at which
 //! point no deque can still hold one of its entries (every entry is popped
 //! before the op it names executes, and quiescence requires every op).
+//!
+//! # Gang formation (moldable ops)
+//!
+//! A [`Fleet::submit_moldable`] session carries a per-node gang width
+//! `w`; popping a `w > 1` entry makes that executor the **gang leader**.
+//! Leaders never push work at peers — recruitment is a bounded handshake
+//! on the leader's [`GangPost`] (one post per executor in
+//! [`FleetShared`]):
+//!
+//! 1. the leader *opens* its post (stores the popped key, bumps the
+//!    post's formation epoch, flips the post state to open) and notifies
+//!    the executor eventcount so parked peers wake;
+//! 2. idle peers — executors whose acquisition sweep found nothing —
+//!    scan the other posts before backing off and *join* an open one by
+//!    CAS-incrementing the epoch-tagged join word (the epoch makes a
+//!    stale CAS fail, the ABA guard across post reuses);
+//! 3. after a bounded spin the leader *closes* the formation at
+//!    `width = min(joined + 1, w)` — a gang **shrinks to whoever showed
+//!    up** rather than ever waiting for a full house, so saturated
+//!    fleets degrade to `width = 1` instead of deadlocking;
+//! 4. every seated member runs `work(node, rank, width)` under its own
+//!    `catch_unwind`; the leader is rank 0, writes the gang's one
+//!    [`OpRecord`], resolves successors, and retires the entry. Members
+//!    that joined after the close observe `rank ≥ width` and leave
+//!    silently. The leader holds the post until every seated member
+//!    reported done — even if the leader's own closure panicked — so a
+//!    post is never reused while a member still runs against it, and the
+//!    leader's un-retired entry pins the session slot for the members'
+//!    registry lookups.
+//!
+//! A member panic poisons the session exactly like a solo op panic
+//! (members call [`fail_session`] from their own thread); the fleet and
+//! every other session stay healthy.
 //!
 //! # CP-first across sessions (the approximation)
 //!
@@ -137,7 +171,7 @@
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{Scope, ScopedJoinHandle};
 use std::time::{Duration, Instant};
@@ -145,7 +179,8 @@ use std::time::{Duration, Instant};
 use crate::engine::backoff::{Backoff, BackoffStage, EventCounter};
 use crate::engine::mpsc::MpscQueue;
 use crate::engine::ready::{
-    pack_session_entry, session_entry_node, session_entry_slot, SESSION_NODE_BITS,
+    pack_session_entry_wide, session_entry_node, session_entry_slot, session_entry_width,
+    MAX_WIDTH, SESSION_NODE_BITS,
 };
 use crate::engine::ring::SpscRing;
 use crate::engine::scheduler::IdleBitmap;
@@ -174,6 +209,62 @@ pub const MAX_SESSION_NODES: usize = 1 << SESSION_NODE_BITS;
 /// this entry itself — the scheduler must rebalance `inflight` but must
 /// neither resolve successors nor retire the entry again.
 const DONE_DISCARDED: u32 = 1 << 31;
+
+// -- gang formation (see the module docs) -----------------------------------
+
+/// Gang-post states: no formation in progress / leader recruiting /
+/// formation closed and running.
+const GANG_IDLE: u32 = 0;
+const GANG_OPEN: u32 = 1;
+const GANG_RUNNING: u32 = 2;
+
+/// Low bits of the epoch-tagged `joined`/`closed` words that carry a
+/// member count (resp. a closed width); the rest is the formation epoch.
+const GANG_COUNT_BITS: u32 = 16;
+const GANG_COUNT_MASK: u64 = (1 << GANG_COUNT_BITS) - 1;
+
+/// Bound on the leader's recruitment spin: long enough for a parked
+/// peer's eventcount wake (tens of µs) to land, short enough that a
+/// saturated fleet — where nobody will ever join — degrades each wide op
+/// to `width = 1` after a sub-millisecond wait instead of stalling.
+const GANG_SPIN: u32 = 1 << 15;
+
+/// One executor's gang-recruitment mailbox. All transitions are described
+/// in the module docs' gang-formation section; the epoch tags on `joined`
+/// and `closed` are what make post reuse safe (a member acting on a stale
+/// read either fails its join CAS or observes a newer epoch and leaves).
+struct GangPost {
+    /// `GANG_IDLE` / `GANG_OPEN` / `GANG_RUNNING`; written by the leader.
+    state: AtomicU32,
+    /// `[formation epoch : 48 | joined members : 16]`; members join by
+    /// CAS-incrementing the count half, so a CAS against a retired
+    /// formation's value fails on the epoch half.
+    joined: AtomicU64,
+    /// `[formation epoch : 48 | closed gang width : 16]`, written once
+    /// per formation when the leader stops recruiting. A seated member
+    /// spins until its own epoch appears here; a later epoch means the
+    /// member joined too late for a seat.
+    closed: AtomicU64,
+    /// The packed session entry the gang executes. Stable while any
+    /// member holds a seat: the leader's un-retired entry pins the
+    /// session slot, and the post is not reused until every seated
+    /// member reported `done`.
+    key: AtomicU64,
+    /// Seated members finished (or unwound from) their work closure.
+    done: AtomicU32,
+}
+
+impl GangPost {
+    fn new() -> GangPost {
+        GangPost {
+            state: AtomicU32::new(GANG_IDLE),
+            joined: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            key: AtomicU64::new(0),
+            done: AtomicU32::new(0),
+        }
+    }
+}
 
 /// Shape and policy of a persistent fleet.
 #[derive(Debug, Clone)]
@@ -269,6 +360,13 @@ pub struct FleetTotals {
     pub sessions_shed: u64,
     /// Entries of poisoned sessions dropped at pop time (lazy discard).
     pub entries_discarded: u64,
+    /// Moldable gangs formed: wide ops whose formation closed with an
+    /// effective width > 1 (a wide op nobody joined runs solo and is not
+    /// counted).
+    pub gangs_formed: u64,
+    /// Peer executors seated into gangs (the sum of `width − 1` over
+    /// formed gangs).
+    pub gang_recruits: u64,
     /// Executor threads that ever started on this fleet — spawned once at
     /// construction, so this never grows with submissions (the acceptance
     /// test reads it from the post-join snapshot [`Fleet::shutdown`]
@@ -288,6 +386,8 @@ struct Counters {
     sessions_deadline_missed: AtomicU64,
     sessions_shed: AtomicU64,
     entries_discarded: AtomicU64,
+    gangs_formed: AtomicU64,
+    gang_recruits: AtomicU64,
     /// Executor threads that ever started on this fleet — the
     /// spawned-once proof the acceptance test reads.
     executor_threads: AtomicUsize,
@@ -422,14 +522,20 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 enum SessionWork<'env> {
     Borrowed(&'env (dyn Fn(NodeId) + Send + Sync)),
     Owned(Arc<dyn Fn(NodeId) + Send + Sync + 'env>),
+    /// Width-aware closure for moldable sessions
+    /// ([`Fleet::submit_moldable`]): called as `work(node, rank, width)`
+    /// once per seated gang member, the leader being rank 0. A width-1
+    /// formation calls it exactly once, as `work(node, 0, 1)`.
+    Moldable(Arc<dyn Fn(NodeId, u32, u32) + Send + Sync + 'env>),
 }
 
 impl SessionWork<'_> {
     #[inline]
-    fn call(&self, node: NodeId) {
+    fn call(&self, node: NodeId, rank: u32, width: u32) {
         match self {
             SessionWork::Borrowed(f) => f(node),
             SessionWork::Owned(f) => f(node),
+            SessionWork::Moldable(f) => f(node, rank, width),
         }
     }
 }
@@ -449,6 +555,10 @@ struct SessionState<'env> {
     submitted_at_us: f64,
     graph: &'env Graph,
     levels: Arc<[f64]>,
+    /// Per-node gang widths ([`Fleet::submit_moldable`]); `None` — the
+    /// plain submit paths — packs every entry at width 1, bit-identical
+    /// to the pre-moldable key layout.
+    widths: Option<Arc<[u8]>>,
     work: SessionWork<'env>,
     deps: AtomicDepTracker,
     /// Session epoch: records and the wall clock are relative to submit.
@@ -480,6 +590,21 @@ struct SessionState<'env> {
     done_cv: Condvar,
 }
 
+impl SessionState<'_> {
+    /// Pack the deque key for one of this session's nodes, folding in the
+    /// node's requested gang width (1 for plain sessions). Every seeding
+    /// and successor-resolution site goes through this, so a session's
+    /// widths apply uniformly in both dispatch modes.
+    #[inline]
+    fn pack_key(&self, node: NodeId) -> u64 {
+        let w = match &self.widths {
+            Some(w) => w[node as usize] as u32,
+            None => 1,
+        };
+        pack_session_entry_wide(self.levels[node as usize], self.slot, node, w)
+    }
+}
+
 /// One session slot of the registry: a monotone install sequence number
 /// (for executor-local caching) plus the installed session.
 struct SlotCell<'env> {
@@ -507,6 +632,9 @@ struct FleetShared<'env> {
     /// Wakes executors (new deque/injector/ring work, shutdown).
     events: EventCounter,
     shutdown: AtomicBool,
+    /// One gang-recruitment post per executor (module docs); only the
+    /// owning executor opens its post, any idle peer may join.
+    gangs: Vec<GangPost>,
     slots: Vec<SlotCell<'env>>,
     free_slots: Mutex<Vec<u8>>,
     slot_available: Condvar,
@@ -552,6 +680,7 @@ impl<'env> FleetShared<'env> {
             sched_events: EventCounter::new(),
             events: EventCounter::new(),
             shutdown: AtomicBool::new(false),
+            gangs: (0..n).map(|_| GangPost::new()).collect(),
             slots: (0..config.max_sessions)
                 .map(|_| SlotCell { seq: AtomicU64::new(0), state: Mutex::new(None) })
                 .collect(),
@@ -589,6 +718,8 @@ impl<'env> FleetShared<'env> {
                 .load(Ordering::SeqCst),
             sessions_shed: self.counters.sessions_shed.load(Ordering::SeqCst),
             entries_discarded: self.counters.entries_discarded.load(Ordering::SeqCst),
+            gangs_formed: self.counters.gangs_formed.load(Ordering::SeqCst),
+            gang_recruits: self.counters.gang_recruits.load(Ordering::SeqCst),
             executor_threads: self.counters.executor_threads.load(Ordering::SeqCst) as u64,
         }
     }
@@ -781,6 +912,142 @@ fn acquire(shared: &FleetShared<'_>, e: usize, spill: &mut Vec<u64>) -> Option<(
     worksteal::steal_highest_numa(&shared.deques, e, &shared.domains)
 }
 
+/// Run `node` as a gang leader on executor `e` — its popped entry asked
+/// for `target > 1` executors. Opens the executor's post, recruits for a
+/// bounded spin, closes at whatever width materialized (possibly 1), runs
+/// rank 0, and holds the post until every seated member reported done.
+/// Returns the leader closure's own result; a member panic fails the
+/// session directly from the member's thread.
+fn run_as_gang_leader<'env>(
+    shared: &FleetShared<'env>,
+    e: usize,
+    session: &Arc<SessionState<'env>>,
+    key: u64,
+    node: NodeId,
+    target: u32,
+) -> std::thread::Result<()> {
+    let post = &shared.gangs[e];
+    debug_assert_eq!(post.state.load(Ordering::Relaxed), GANG_IDLE);
+    let epoch = (post.joined.load(Ordering::Relaxed) >> GANG_COUNT_BITS).wrapping_add(1);
+    post.done.store(0, Ordering::Relaxed);
+    post.key.store(key, Ordering::Relaxed);
+    post.joined.store(epoch << GANG_COUNT_BITS, Ordering::Relaxed);
+    post.state.store(GANG_OPEN, Ordering::Release);
+    // parked peers must hear about the opening; idle-spinning peers see
+    // the open state on their next scan anyway
+    shared.events.notify();
+    let want = target - 1;
+    for i in 0..GANG_SPIN {
+        if (post.joined.load(Ordering::Acquire) & GANG_COUNT_MASK) as u32 >= want {
+            break;
+        }
+        // occasional yields so would-be members on an oversubscribed
+        // machine actually get scheduled inside the recruitment window
+        if i & 1023 == 1023 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+    // close with whoever made it: a gang shrinks rather than waits. A
+    // member whose join lands after this load observes the epoch-tagged
+    // close below with `rank ≥ width` and leaves silently.
+    let joined = (post.joined.load(Ordering::Acquire) & GANG_COUNT_MASK) as u32;
+    let width = joined.min(want) + 1;
+    post.closed.store((epoch << GANG_COUNT_BITS) | width as u64, Ordering::Release);
+    post.state.store(GANG_RUNNING, Ordering::Release);
+    if width > 1 {
+        shared.counters.gangs_formed.fetch_add(1, Ordering::Relaxed);
+        shared.counters.gang_recruits.fetch_add((width - 1) as u64, Ordering::Relaxed);
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| session.work.call(node, 0, width)));
+    // wait for every seated member even if rank 0 panicked: the post (and
+    // the entry members resolve their session through) must not be
+    // reusable while a member still runs against it
+    let mut spins = 0u32;
+    while post.done.load(Ordering::Acquire) < width - 1 {
+        spins += 1;
+        if spins < 1 << 8 {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+    post.state.store(GANG_IDLE, Ordering::Release);
+    result
+}
+
+/// Idle-executor side of gang formation: scan the other executors' posts
+/// and serve at most one open recruitment. Returns `true` when this
+/// executor joined a formation (seated or turned away) — the caller
+/// should reset its backoff and rescan for work, exactly as if it had
+/// found an entry.
+fn try_join_gang<'env>(
+    shared: &FleetShared<'env>,
+    e: usize,
+    cache: &mut [Option<(u64, Arc<SessionState<'env>>)>],
+) -> bool {
+    let n = shared.executors;
+    for off in 1..n {
+        let p = (e + off) % n;
+        let post = &shared.gangs[p];
+        if post.state.load(Ordering::Acquire) != GANG_OPEN {
+            continue;
+        }
+        let w0 = post.joined.load(Ordering::Acquire);
+        if post.joined.compare_exchange(w0, w0 + 1, Ordering::AcqRel, Ordering::Acquire).is_err() {
+            // a peer's join won the word, or the formation retired and
+            // the epoch half moved (the ABA guard) — scan on
+            continue;
+        }
+        let epoch = w0 >> GANG_COUNT_BITS;
+        let rank = ((w0 & GANG_COUNT_MASK) as u32) + 1;
+        // wait for the close of *our* formation (epoch-tagged); a seated
+        // member never waits long — the leader's recruitment spin is
+        // bounded — and an unseated one exits on the first newer epoch
+        let width = loop {
+            let c = post.closed.load(Ordering::Acquire);
+            match (c >> GANG_COUNT_BITS).cmp(&epoch) {
+                std::cmp::Ordering::Less => std::hint::spin_loop(),
+                std::cmp::Ordering::Equal => break (c & GANG_COUNT_MASK) as u32,
+                // the formation closed and fully retired before our join
+                // landed: we never had a seat and owe no `done`
+                std::cmp::Ordering::Greater => return true,
+            }
+        };
+        if rank >= width {
+            // joined after the close-read: turned away (`done` counts
+            // seated members only)
+            return true;
+        }
+        // seat secured: the leader blocks on our `done`, so the post and
+        // the key's slot (pinned by the leader's un-retired entry) are
+        // stable until we report
+        let key = post.key.load(Ordering::Acquire);
+        let slot = session_entry_slot(key);
+        let node = session_entry_node(key);
+        if let Some(session) = lookup(shared, cache, slot) {
+            shared.busy[e].store(true, Ordering::Relaxed);
+            let result =
+                catch_unwind(AssertUnwindSafe(|| session.work.call(node, rank, width)));
+            shared.busy[e].store(false, Ordering::Relaxed);
+            if let Err(payload) = result {
+                // a member panic poisons the session like any op panic;
+                // the leader still writes the gang's one OpRecord and
+                // retires the entry
+                fail_session(
+                    shared,
+                    &session,
+                    SessionError::OpPanicked { node, payload: panic_message(payload) },
+                );
+            }
+        }
+        post.done.fetch_add(1, Ordering::Release);
+        return true;
+    }
+    false
+}
+
 /// Decentralized executor body: PR-3's executor-side successor resolution,
 /// now multi-session (the key's slot routes every touch to the right
 /// session's tracker, records, and counters).
@@ -831,9 +1098,14 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                         },
                     );
                 }
+                let w_target = session_entry_width(key);
                 let start = session.t0.elapsed().as_secs_f64() * 1e6;
                 shared.busy[e].store(true, Ordering::Relaxed);
-                let result = catch_unwind(AssertUnwindSafe(|| session.work.call(node)));
+                let result = if w_target > 1 {
+                    run_as_gang_leader(shared, e, &session, key, node, w_target)
+                } else {
+                    catch_unwind(AssertUnwindSafe(|| session.work.call(node, 0, 1)))
+                };
                 shared.busy[e].store(false, Ordering::Relaxed);
                 let end = session.t0.elapsed().as_secs_f64() * 1e6;
                 if let Err(payload) = result {
@@ -857,9 +1129,8 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                 batch.clear();
                 let mut last = false;
                 if !session.poisoned.load(Ordering::Acquire) {
-                    let levels = &session.levels;
                     last = session.deps.complete(session.graph, node, |s| {
-                        batch.push(pack_session_entry(levels[s as usize], slot, s));
+                        batch.push(session.pack_key(s));
                     });
                 }
                 if !batch.is_empty() {
@@ -894,6 +1165,15 @@ fn executor_decentralized<'env>(shared: &FleetShared<'env>, e: usize) {
                         shared.events.cancel();
                     }
                     return;
+                }
+                // no entries anywhere: serve an open gang recruitment
+                // before backing off (joining counts as finding work)
+                if try_join_gang(shared, e, &mut cache) {
+                    if prepared.is_some() {
+                        shared.events.cancel();
+                    }
+                    backoff.reset();
+                    continue;
                 }
                 match backoff.next() {
                     BackoffStage::Spin => std::hint::spin_loop(),
@@ -951,9 +1231,14 @@ fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
                 shared.sched_events.notify();
                 continue;
             }
+            let w_target = session_entry_width(key);
             let start = session.t0.elapsed().as_secs_f64() * 1e6;
             shared.busy[e].store(true, Ordering::Relaxed);
-            let result = catch_unwind(AssertUnwindSafe(|| session.work.call(node)));
+            let result = if w_target > 1 {
+                run_as_gang_leader(shared, e, &session, key, node, w_target)
+            } else {
+                catch_unwind(AssertUnwindSafe(|| session.work.call(node, 0, 1)))
+            };
             shared.busy[e].store(false, Ordering::Relaxed);
             let end = session.t0.elapsed().as_secs_f64() * 1e6;
             match result {
@@ -981,6 +1266,14 @@ fn executor_centralized<'env>(shared: &FleetShared<'env>, e: usize) {
                 shared.events.cancel();
             }
             return;
+        } else if try_join_gang(shared, e, &mut cache) {
+            // an empty ring + an open peer post: recruitment is how the
+            // centralized fleet lends idle executors to wide ops without
+            // the scheduler's involvement
+            if prepared.is_some() {
+                shared.events.cancel();
+            }
+            backoff.reset();
         } else {
             match backoff.next() {
                 BackoffStage::Spin => std::hint::spin_loop(),
@@ -1039,7 +1332,7 @@ fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
             };
             for session in &pending {
                 for s in session.graph.sources() {
-                    ready.push(pack_session_entry(session.levels[s as usize], session.slot, s));
+                    ready.push(session.pack_key(s));
                 }
                 progressed = true;
             }
@@ -1076,13 +1369,10 @@ fn scheduler_loop<'env>(shared: &FleetShared<'env>) {
                 continue;
             }
             let mut readied = 0usize;
-            let last = {
-                let levels = &session.levels;
-                session.deps.complete(session.graph, node, |s| {
-                    ready.push(pack_session_entry(levels[s as usize], slot, s));
-                    readied += 1;
-                })
-            };
+            let last = session.deps.complete(session.graph, node, |s| {
+                ready.push(session.pack_key(s));
+                readied += 1;
+            });
             if readied > 0 {
                 // counted before this entry retires: the count stays
                 // nonzero, so the slot cannot recycle mid-resolution
@@ -1365,7 +1655,7 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         levels: impl Into<Arc<[f64]>>,
         work: &'env (dyn Fn(NodeId) + Send + Sync),
     ) -> SessionHandle<'env> {
-        self.submit_inner(graph, levels.into(), SessionWork::Borrowed(work), None)
+        self.submit_inner(graph, levels.into(), None, SessionWork::Borrowed(work), None)
     }
 
     /// [`submit`](Self::submit) with a cooperative deadline: once
@@ -1381,7 +1671,7 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         work: &'env (dyn Fn(NodeId) + Send + Sync),
         deadline: Duration,
     ) -> SessionHandle<'env> {
-        self.submit_inner(graph, levels.into(), SessionWork::Borrowed(work), Some(deadline))
+        self.submit_inner(graph, levels.into(), None, SessionWork::Borrowed(work), Some(deadline))
     }
 
     /// [`submit`](Self::submit) with an owned work closure, for callers
@@ -1395,13 +1685,45 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
         work: Arc<dyn Fn(NodeId) + Send + Sync + 'env>,
         deadline: Option<Duration>,
     ) -> SessionHandle<'env> {
-        self.submit_inner(graph, levels.into(), SessionWork::Owned(work), deadline)
+        self.submit_inner(graph, levels.into(), None, SessionWork::Owned(work), deadline)
+    }
+
+    /// Submit a **moldable** session: `widths[node]` is the gang width
+    /// each op requests (`1..=MAX_WIDTH`, see the module docs' gang
+    /// section), and `work(node, rank, width)` runs once per seated gang
+    /// member — the popping executor at rank 0, recruits at `1..width`.
+    /// The *effective* width is `min(requested, 1 + idle peers at pop)`:
+    /// a gang shrinks rather than waits, so any width assignment is safe
+    /// on any fleet size. Width-1 nodes take exactly the plain
+    /// [`Fleet::submit`] path.
+    pub fn submit_moldable(
+        &self,
+        graph: &'env Graph,
+        levels: impl Into<Arc<[f64]>>,
+        widths: impl Into<Arc<[u8]>>,
+        work: Arc<dyn Fn(NodeId, u32, u32) + Send + Sync + 'env>,
+        deadline: Option<Duration>,
+    ) -> SessionHandle<'env> {
+        let widths = widths.into();
+        assert_eq!(widths.len(), graph.len(), "one gang width per node");
+        assert!(
+            widths.iter().all(|&w| w >= 1 && (w as u32) <= MAX_WIDTH),
+            "gang widths must be in 1..={MAX_WIDTH}"
+        );
+        self.submit_inner(
+            graph,
+            levels.into(),
+            Some(widths),
+            SessionWork::Moldable(work),
+            deadline,
+        )
     }
 
     fn submit_inner(
         &self,
         graph: &'env Graph,
         levels: Arc<[f64]>,
+        widths: Option<Arc<[u8]>>,
         work: SessionWork<'env>,
         deadline: Option<Duration>,
     ) -> SessionHandle<'env> {
@@ -1430,6 +1752,7 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
             submitted_at_us,
             graph,
             levels,
+            widths,
             work,
             deps: AtomicDepTracker::new(graph),
             t0,
@@ -1457,7 +1780,7 @@ impl<'scope, 'env> Fleet<'scope, 'env> {
                 {
                     let mut inj = shared.injector.lock().unwrap();
                     for &s in &sources {
-                        inj.push(pack_session_entry(state.levels[s as usize], slot, s));
+                        inj.push(state.pack_key(s));
                     }
                     shared.injector_len.store(inj.len(), Ordering::Release);
                 }
@@ -2345,6 +2668,139 @@ mod tests {
                     mode.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn moldable_session_runs_exactly_once_and_forms_gangs_in_both_modes() {
+        let g = chain(16);
+        let widths: Vec<u8> = vec![3; g.len()];
+        for mode in DispatchMode::ALL {
+            let rank0_hits: Vec<AtomicU32> = (0..g.len()).map(|_| AtomicU32::new(0)).collect();
+            let max_width = AtomicU32::new(0);
+            let totals = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
+                let rank0_hits = &rank0_hits;
+                let max_width = &max_width;
+                let report = fleet
+                    .submit_moldable(
+                        &g,
+                        unit_levels(&g),
+                        widths.clone(),
+                        Arc::new(move |n: NodeId, rank: u32, width: u32| {
+                            assert!(rank < width, "rank {rank} outside a width-{width} gang");
+                            if rank == 0 {
+                                rank0_hits[n as usize].fetch_add(1, Ordering::SeqCst);
+                            }
+                            max_width.fetch_max(width, Ordering::SeqCst);
+                            // a small op body still leaves recruits time
+                            // to cycle back before the next formation
+                            std::thread::sleep(Duration::from_micros(200));
+                        }),
+                        None,
+                    )
+                    .wait()
+                    .expect("moldable session quiesces");
+                assert_eq!(report.records.len(), g.len(), "{}: one record per op", mode.name());
+                fleet.shutdown().expect("clean shutdown")
+            });
+            for (v, c) in rank0_hits.iter().enumerate() {
+                assert_eq!(
+                    c.load(Ordering::SeqCst),
+                    1,
+                    "{}: node {v} led exactly one gang",
+                    mode.name()
+                );
+            }
+            // 16 wide ops on an otherwise idle 4-executor fleet: some
+            // formation must have closed above width 1
+            assert!(totals.gangs_formed > 0, "{}: no gang ever formed", mode.name());
+            assert!(totals.gang_recruits >= totals.gangs_formed, "{}", mode.name());
+            assert!(max_width.load(Ordering::SeqCst) > 1, "{}", mode.name());
+            assert!(max_width.load(Ordering::SeqCst) <= 3, "{}: width is a cap", mode.name());
+        }
+    }
+
+    #[test]
+    fn gang_member_panic_confined_to_its_session_in_both_modes() {
+        let faulty_g = chain(8);
+        let healthy_g = mlp(&MlpConfig::default());
+        let widths: Vec<u8> = vec![4; faulty_g.len()];
+        for mode in DispatchMode::ALL {
+            let widest = AtomicU32::new(0);
+            let healthy_work = |_n: NodeId| {};
+            let err = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(4).with_dispatch(mode));
+                let widest = &widest;
+                // the highest-ranked seat panics: a recruited member when
+                // a gang formed, the leader itself when it stayed solo
+                let faulty = fleet.submit_moldable(
+                    &faulty_g,
+                    unit_levels(&faulty_g),
+                    widths.clone(),
+                    Arc::new(move |n: NodeId, rank: u32, width: u32| {
+                        widest.fetch_max(width, Ordering::SeqCst);
+                        if n == 5 && rank == width - 1 {
+                            panic!("injected gang fault at node 5");
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }),
+                    None,
+                );
+                let err = faulty.wait().expect_err("the widest seat at node 5 panics");
+                assert_eq!(
+                    err,
+                    SessionError::OpPanicked {
+                        node: 5,
+                        payload: "injected gang fault at node 5".into()
+                    },
+                    "{}",
+                    mode.name()
+                );
+                // gang members released and the fleet keeps serving
+                fleet
+                    .submit(&healthy_g, unit_levels(&healthy_g), &healthy_work)
+                    .wait()
+                    .expect("post-fault session completes");
+                fleet.shutdown().expect_err("the gang fault must surface at shutdown")
+            });
+            assert_eq!(err.sessions_failed, 1, "{}", mode.name());
+            assert!(err.panicked_threads.is_empty(), "{}: gang panics are caught", mode.name());
+            assert!(
+                err.totals.gangs_formed > 0,
+                "{}: the fault run must actually have ganged",
+                mode.name()
+            );
+        }
+    }
+
+    #[test]
+    fn width_one_moldable_session_never_forms_gangs() {
+        let g = chain(6);
+        for mode in DispatchMode::ALL {
+            let hits = AtomicU32::new(0);
+            let totals = std::thread::scope(|scope| {
+                let fleet = Fleet::new(scope, FleetConfig::new(3).with_dispatch(mode));
+                let hits = &hits;
+                let report = fleet
+                    .submit_moldable(
+                        &g,
+                        unit_levels(&g),
+                        vec![1u8; g.len()],
+                        Arc::new(move |_n: NodeId, rank: u32, width: u32| {
+                            assert_eq!((rank, width), (0, 1), "width-1 ops never gang");
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }),
+                        None,
+                    )
+                    .wait()
+                    .expect("width-1 moldable session quiesces");
+                assert_eq!(report.records.len(), g.len(), "{}", mode.name());
+                fleet.shutdown().expect("clean shutdown")
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), g.len() as u32, "{}", mode.name());
+            assert_eq!(totals.gangs_formed, 0, "{}", mode.name());
+            assert_eq!(totals.gang_recruits, 0, "{}", mode.name());
         }
     }
 

@@ -77,8 +77,9 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::engine::ready::MAX_WIDTH;
 use crate::engine::trace::{export_chrome_trace, OpRecord, SessionTraceExport};
-use crate::engine::DispatchMode;
+use crate::engine::{DispatchMode, WidthPlan};
 use crate::graph::{levels as cp_levels, plan_memory, Graph, NodeId};
 use crate::models::{self, ModelKind, ModelSize};
 use crate::runtime::fleet::{
@@ -234,6 +235,13 @@ pub struct ServeConfig {
     /// batching entirely and keeps the pre-batching serve path
     /// bit-for-bit. Values > 1 require an open-loop arrival process.
     pub max_batch: usize,
+    /// Per-op-class gang-width plan (moldable ops): ops of a molded
+    /// class are submitted as width-`w` gangs via
+    /// [`Fleet::submit_moldable`], with tiny ops pinned to width 1 and
+    /// widths clamped to the fleet size. `None` (the default) keeps
+    /// every pre-moldable submit path — including its zero-allocation
+    /// borrowed closures — bit-for-bit.
+    pub width_plan: Option<WidthPlan>,
     pub seed: u64,
 }
 
@@ -267,6 +275,7 @@ impl Default for ServeConfig {
             telemetry_ring: 1024,
             batch_window_us: 200,
             max_batch: 1,
+            width_plan: None,
             seed: 42,
         }
     }
@@ -392,6 +401,13 @@ impl ServeReport {
             self.session_dispatches,
             self.session_steals,
         );
+        if self.totals.gangs_formed > 0 {
+            let _ = writeln!(
+                out,
+                "moldable: {} gangs formed  {} members recruited",
+                self.totals.gangs_formed, self.totals.gang_recruits
+            );
+        }
         let _ = writeln!(
             out,
             "concurrency: ≤{} sessions in flight  |  admission: {} requests waited on the memory budget",
@@ -453,6 +469,8 @@ impl ServeReport {
 struct BatchedGraph {
     graph: Graph,
     levels: Arc<[f64]>,
+    /// Per-node gang widths for the union (see [`derive_widths`]).
+    widths: Option<Arc<[u8]>>,
 }
 
 struct ZooEntry {
@@ -465,6 +483,33 @@ struct ZooEntry {
     /// `k·len` would hit the fleet's packed-key node limit. Empty when
     /// batching is off.
     batched: Vec<BatchedGraph>,
+    /// Per-node gang widths resolved from [`ServeConfig::width_plan`];
+    /// `None` routes this entry through the pre-moldable submit paths.
+    widths: Option<Arc<[u8]>>,
+}
+
+/// Resolve a [`WidthPlan`] against one zoo graph: per-node requested
+/// gang widths by op class, with tiny ops pinned to width 1 (a gang
+/// barrier costs more than the op) and everything clamped to the fleet
+/// size. Returns `None` when every node resolves to width 1, so a
+/// uniform-1 plan keeps the pre-moldable submit paths bit-for-bit.
+fn derive_widths(graph: &Graph, plan: &WidthPlan, executors: usize) -> Option<Arc<[u8]>> {
+    let cap = executors.clamp(1, MAX_WIDTH as usize) as u32;
+    let widths: Vec<u8> = graph
+        .nodes()
+        .iter()
+        .map(|n| {
+            if n.kind.is_tiny() {
+                1
+            } else {
+                plan.width_for(n.kind.class()).min(cap) as u8
+            }
+        })
+        .collect();
+    if widths.iter().all(|&w| w == 1) {
+        return None;
+    }
+    Some(widths.into())
 }
 
 /// One logical request waiting in a batch group: everything the group
@@ -653,9 +698,15 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                     let durs: Vec<f64> =
                         union.nodes().iter().map(|n| cost.duration_us(&n.kind, 8)).collect();
                     let levels: Arc<[f64]> = cp_levels(&union, &durs).into();
-                    BatchedGraph { graph: union, levels }
+                    let widths = cfg
+                        .width_plan
+                        .as_ref()
+                        .and_then(|p| derive_widths(&union, p, cfg.executors));
+                    BatchedGraph { graph: union, levels, widths }
                 })
                 .collect();
+            let widths =
+                cfg.width_plan.as_ref().and_then(|p| derive_widths(&graph, p, cfg.executors));
             ZooEntry {
                 tag: format!(
                     "{}-{}{}",
@@ -668,6 +719,7 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
                 peak_bytes,
                 weight,
                 batched,
+                widths,
             }
         })
         .collect();
@@ -739,6 +791,18 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
         }
     };
     let work_ref: &(dyn Fn(NodeId) + Send + Sync) = &work;
+    // moldable variant: a width-`w` gang splits the op's spin across its
+    // seats, the USL-ish ideal the gang-formation overhead competes with
+    let wide_work: Arc<dyn Fn(NodeId, u32, u32) + Send + Sync> =
+        Arc::new(move |_n: NodeId, _rank: u32, width: u32| {
+            let spin = spin_us / width.max(1) as f64;
+            if spin > 0.0 {
+                let t0 = Instant::now();
+                while t0.elapsed().as_secs_f64() * 1e6 < spin {
+                    std::hint::spin_loop();
+                }
+            }
+        });
 
     let t_start = Instant::now();
     let (totals, fleet_events) = std::thread::scope(|scope| {
@@ -807,7 +871,15 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
             };
             let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
             max_in_flight.fetch_max(now, Ordering::SeqCst);
-            let handle = if let Some(d) = deadline {
+            let handle = if let Some(ws) = &bz.widths {
+                fleet_ref.submit_moldable(
+                    &bz.graph,
+                    Arc::clone(&bz.levels),
+                    Arc::clone(ws),
+                    Arc::clone(&wide_work),
+                    deadline,
+                )
+            } else if let Some(d) = deadline {
                 fleet_ref.submit_with_deadline(&bz.graph, Arc::clone(&bz.levels), work_ref, d)
             } else {
                 fleet_ref.submit(&bz.graph, Arc::clone(&bz.levels), work_ref)
@@ -969,7 +1041,17 @@ pub fn serve(cfg: &ServeConfig) -> ServeReport {
             };
             let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
             max_in_flight.fetch_max(now, Ordering::SeqCst);
-            let handle = if plan.is_faulty() {
+            let handle = if let Some(ws) = &z.widths {
+                // moldable entry: gangs on the healthy path; faults wrap
+                // the wide closure so the panic lands on a gang member
+                let ww: Arc<dyn Fn(NodeId, u32, u32) + Send + Sync> = if plan.is_faulty() {
+                    let inner = Arc::clone(&wide_work);
+                    Arc::new(plan.clone().wrap_wide(move |n, rank, w| inner(n, rank, w)))
+                } else {
+                    Arc::clone(&wide_work)
+                };
+                fleet_ref.submit_moldable(&z.graph, Arc::clone(&z.levels), Arc::clone(ws), ww, deadline)
+            } else if plan.is_faulty() {
                 // faulty sessions own a wrapped closure; healthy
                 // ones keep the borrowed zero-allocation path
                 fleet_ref.submit_owned(
@@ -1387,6 +1469,85 @@ mod tests {
             let text = report.render();
             assert!(text.contains("failed"), "{text}");
         }
+    }
+
+    #[test]
+    fn moldable_serve_forms_gangs_and_conserves() {
+        // one client against four executors leaves three peers idle at
+        // every pop — plenty of recruits for the molded gemm gangs
+        let mut plan = WidthPlan::uniform(1);
+        plan.set(crate::graph::op::OpClass::Gemm, 2);
+        for mode in DispatchMode::ALL {
+            let cfg = ServeConfig {
+                executors: 4,
+                dispatch: mode,
+                clients: 1,
+                requests: 12,
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                op_spin_us: 20.0,
+                width_plan: Some(plan.clone()),
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.completed, 12, "{}", mode.name());
+            assert_eq!(report.accounted(), 12, "{}", mode.name());
+            assert!(
+                report.totals.gangs_formed > 0,
+                "{}: molded mlp gemms never formed a gang: {:?}",
+                mode.name(),
+                report.totals
+            );
+            assert!(report.totals.gang_recruits >= report.totals.gangs_formed, "{}", mode.name());
+            let text = report.render();
+            assert!(text.contains("gangs formed"), "{text}");
+        }
+    }
+
+    #[test]
+    fn moldable_serve_survives_gang_member_faults() {
+        // every request draws a fault plan; panics land on the gang's
+        // highest rank (FaultPlan::wrap_wide), exercising the member →
+        // fail_session confinement path under real serve traffic
+        let mut plan = WidthPlan::uniform(1);
+        plan.set(crate::graph::op::OpClass::Gemm, 2);
+        for mode in DispatchMode::ALL {
+            let cfg = ServeConfig {
+                executors: 4,
+                dispatch: mode,
+                clients: 2,
+                requests: 24,
+                mix: vec![(ModelKind::Mlp, 1.0)],
+                op_spin_us: 10.0,
+                fault_rate: 1.0,
+                width_plan: Some(plan.clone()),
+                ..ServeConfig::default()
+            };
+            let report = serve(&cfg);
+            assert_eq!(report.accounted(), 24, "{}: {report:?}", mode.name());
+            assert!(report.failed > 0, "{}: seed 42 must draw a panic plan", mode.name());
+            assert!(report.completed > 0, "{}: the fleet must outlive the faults", mode.name());
+            assert_eq!(
+                report.totals.sessions_completed,
+                report.completed as u64,
+                "{}",
+                mode.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_one_width_plan_is_invisible() {
+        // a plan that resolves every node to width 1 must leave the run
+        // on the pre-moldable paths: no gangs, same counters as None
+        let cfg = ServeConfig {
+            width_plan: Some(WidthPlan::uniform(1)),
+            ..quick(DispatchMode::Decentralized)
+        };
+        let report = serve(&cfg);
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.totals.gangs_formed, 0, "{:?}", report.totals);
+        assert_eq!(report.totals.gang_recruits, 0);
+        assert!(!report.render().contains("gangs formed"));
     }
 
     #[test]

@@ -612,6 +612,7 @@ mod tests {
             total_profile_iterations: 1,
             durations_us: vec![2.0; g.len()],
             phase_plan: None,
+            width_plan: None,
             search_trace: Vec::new(),
         };
         let engine = ThreadedGraphi::from_tuning(&tuning);
@@ -647,6 +648,7 @@ mod tests {
             total_profile_iterations: 1,
             durations_us: vec![2.0; g.len()],
             phase_plan: Some(plan.clone()),
+            width_plan: None,
             search_trace: Vec::new(),
         };
         let engine = ThreadedGraphi::from_tuning(&tuning);

@@ -293,6 +293,7 @@ mod tests {
             best: (8, 8),
             best_dispatch: DispatchMode::Centralized,
             phase_plan: None,
+            width_plan: None,
             best_makespan_us: 10.0,
             total_profile_iterations: 5,
             durations_us: vec![1.0, 2.0],

@@ -282,6 +282,30 @@ impl FaultPlan {
             inner(n);
         }
     }
+
+    /// [`wrap`](FaultPlan::wrap) for moldable `(node, rank, width)` work
+    /// closures. The panic fires on the gang's **highest rank**
+    /// (`width − 1`, i.e. the last recruit — rank 0 when the gang shrank
+    /// to the leader alone), because a member panic exercises the
+    /// member→`fail_session` confinement path that a leader panic does
+    /// not. The delay sleeps on rank 0 only, so a gang dawdles once, not
+    /// `width` times.
+    pub fn wrap_wide<F>(self, inner: F) -> impl Fn(u32, u32, u32) + Send + Sync
+    where
+        F: Fn(u32, u32, u32) + Send + Sync,
+    {
+        move |n: u32, rank: u32, width: u32| {
+            if let Some((d, us)) = self.delay_at {
+                if n == d && rank == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(us as u64));
+                }
+            }
+            if self.panic_at == Some(n) && rank + 1 == width.max(1) {
+                panic!("{} at node {n} (rank {rank} of {width})", FaultPlan::PANIC_TAG);
+            }
+            inner(n, rank, width);
+        }
+    }
 }
 
 /// A seeded overload scenario for the stress/chaos suites: an **arrival
@@ -423,6 +447,34 @@ mod tests {
             assert!(panics[0].cancel_after_us.is_none());
             assert!(plan.plans.iter().all(|p| p.delay_at.is_none()));
         }
+    }
+
+    #[test]
+    fn wrap_wide_faults_the_highest_rank_only() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let plan = FaultPlan { panic_at: Some(3), ..Default::default() };
+        let work = plan.wrap_wide(|_n, _rank, _w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        // Healthy node: every seat of the gang runs the inner closure.
+        for rank in 0..4 {
+            work(1, rank, 4);
+        }
+        // Fault node: ranks below width − 1 still run...
+        for rank in 0..3 {
+            work(3, rank, 4);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 7);
+        // ...and the last recruit panics with the tagged message.
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(3, 3, 4)))
+            .expect_err("rank width-1 at the fault node must panic");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains(FaultPlan::PANIC_TAG), "{msg}");
+        // Width-1 gangs degenerate to rank 0 panicking, matching `wrap`.
+        let solo = FaultPlan { panic_at: Some(0), ..Default::default() }
+            .wrap_wide(|_, _, _| {});
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| solo(0, 0, 1))).is_err());
     }
 
     #[test]

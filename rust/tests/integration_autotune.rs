@@ -212,14 +212,14 @@ fn phased_shape_graph() -> graphi::graph::Graph {
 }
 
 #[test]
-fn v3_artifact_roundtrips_v2_degrades_and_run_adopts_the_phase_plan() {
+fn v4_artifact_roundtrips_v2_degrades_and_run_adopts_the_phase_plan() {
     let g = models::build(ModelKind::Mlp, ModelSize::Small);
     let env = SimEnv::knl_deterministic();
     let dir = tmpdir("phase-plan");
     let dir_s = dir.display().to_string();
     let path = tuning_path(&dir, "mlp-small");
 
-    // fresh search persists a v3 file that round-trips exactly
+    // fresh search persists a v4 file that round-trips exactly
     let (artifact, outcome) = autotune_or_load(&path, "mlp-small", &tuner(), &g, &env);
     assert_eq!(outcome, TuneOutcome::FreshSearch);
     assert_eq!(artifact.version, TUNING_FORMAT_VERSION);
@@ -256,8 +256,11 @@ fn v3_artifact_roundtrips_v2_degrades_and_run_adopts_the_phase_plan() {
         iterations: 1,
         ..Default::default()
     };
-    graphi::cli::apply_tuning(&mut cfg, &dir_s, None);
+    graphi::cli::apply_tuning(&mut cfg, &dir_s, None, true);
     assert_eq!(cfg.phase_plan, Some(plan));
+    // this artifact was tuned without the width axis, so even --widths
+    // has nothing to adopt
+    assert_eq!(cfg.width_plan, None);
     assert_eq!(cfg.dispatch, Some(with_plan.best_dispatch));
     assert_eq!(cfg.executors, Some(with_plan.best.0));
     let result = graphi::coordinator::driver::Driver::run(&cfg);
@@ -269,7 +272,7 @@ fn v3_artifact_roundtrips_v2_degrades_and_run_adopts_the_phase_plan() {
         iterations: 1,
         ..Default::default()
     };
-    graphi::cli::apply_tuning(&mut pinned, &dir_s, Some(DispatchMode::Centralized));
+    graphi::cli::apply_tuning(&mut pinned, &dir_s, Some(DispatchMode::Centralized), false);
     assert_eq!(pinned.phase_plan, None);
     assert_eq!(pinned.dispatch, Some(DispatchMode::Centralized));
 

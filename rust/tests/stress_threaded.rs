@@ -762,6 +762,231 @@ fn stress_overload_shared_fleet() {
     }
 }
 
+/// PR 10 moldable chaos: the same shared-fleet graph mix submitted as
+/// **moldable sessions** — per-node gang widths drawn seeded in 1..=4,
+/// so pops form gangs (a leader plus recruited peers) that shrink when
+/// the fleet is busy — with seeded faults whose panics land on the
+/// gang's **highest rank** ([`FaultPlan::wrap_wide`]), exercising the
+/// member → `fail_session` confinement path. Asserts under the channel
+/// watchdog, across both dispatch modes and 2/4/8 executors:
+///
+/// * **gang exactly-once**: rank 0 fires exactly once per node, and
+///   every call observes `rank < width ≤ requested width`;
+/// * **dependency order**: rank-0 stamps are increasing along every
+///   edge of the executed (dependency-closed) prefix — a gang resolves
+///   its successors only after every seated member returned;
+/// * **confinement**: a member panic fails only its own session, blamed
+///   on the right node with the testkit payload tag, while sibling
+///   sessions stay healthy;
+/// * **no leaks**: executor thread count exact after shutdown, and the
+///   4-class session outcomes conserve.
+#[test]
+fn stress_moldable_gang_faults_shared_fleet() {
+    use graphi::runtime::SessionError;
+    use graphi::util::testkit::FaultPlan;
+
+    let graphs: Vec<Arc<Graph>> = vec![
+        Arc::new(diamond_chain(12)),
+        Arc::new(fan(24)),
+        Arc::new(butterfly(6, 8)),
+    ];
+    let mut rng = Rng::new(base_seed() ^ 0x6A96);
+    for iter in 0..ITERATIONS {
+        for &execs in &FLEETS {
+            for mode in DispatchMode::ALL {
+                let tag = format!("moldable/iter{iter}/{execs}exec/{}", mode.name());
+                let level_sets: Vec<Vec<f64>> =
+                    graphs.iter().map(|g| seeded_levels(g.len(), &mut rng)).collect();
+                let width_sets: Vec<Vec<u8>> = graphs
+                    .iter()
+                    .map(|g| (0..g.len()).map(|_| rng.below(4) as u8 + 1).collect())
+                    .collect();
+                let plans: Vec<FaultPlan> = graphs
+                    .iter()
+                    .map(|g| FaultPlan::draw(&mut rng, g.len(), 0.4, 50.0))
+                    .collect();
+                let (tx, rx) = mpsc::channel();
+                let worker_graphs = graphs.clone();
+                let worker_plans = plans.clone();
+                let worker_widths = width_sets.clone();
+                std::thread::spawn(move || {
+                    let graphs = worker_graphs;
+                    let plans = worker_plans;
+                    let width_sets = worker_widths;
+                    // per session: (rank-0 counts, clock, rank-0 stamps,
+                    // seat-contract violations)
+                    type GangProbe = (Vec<AtomicU32>, AtomicU64, Vec<AtomicU64>, AtomicU32);
+                    let per_graph: Vec<Arc<GangProbe>> = graphs
+                        .iter()
+                        .map(|g| {
+                            Arc::new((
+                                (0..g.len()).map(|_| AtomicU32::new(0)).collect(),
+                                AtomicU64::new(1),
+                                (0..g.len()).map(|_| AtomicU64::new(0)).collect(),
+                                AtomicU32::new(0),
+                            ))
+                        })
+                        .collect();
+                    let works: Vec<Arc<dyn Fn(NodeId, u32, u32) + Send + Sync>> = per_graph
+                        .iter()
+                        .zip(&plans)
+                        .zip(&width_sets)
+                        .map(|((probe, plan), widths)| {
+                            let probe = Arc::clone(probe);
+                            let widths = widths.clone();
+                            Arc::new(plan.clone().wrap_wide(
+                                move |v: NodeId, rank: u32, width: u32| {
+                                    if rank >= width || width > widths[v as usize] as u32 {
+                                        probe.3.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                    if rank == 0 {
+                                        probe.0[v as usize].fetch_add(1, Ordering::SeqCst);
+                                        let t = probe.1.fetch_add(1, Ordering::SeqCst);
+                                        probe.2[v as usize].store(t, Ordering::SeqCst);
+                                    }
+                                },
+                            )) as Arc<dyn Fn(NodeId, u32, u32) + Send + Sync>
+                        })
+                        .collect();
+                    let (outcomes, shutdown) = std::thread::scope(|scope| {
+                        let fleet = Fleet::new(
+                            scope,
+                            FleetConfig::new(execs)
+                                .with_dispatch(mode)
+                                .with_watchdog(Duration::from_secs(10)),
+                        );
+                        let handles: Vec<_> = graphs
+                            .iter()
+                            .zip(&level_sets)
+                            .zip(&width_sets)
+                            .zip(&works)
+                            .map(|(((g, levels), widths), work)| {
+                                fleet.submit_moldable(
+                                    g,
+                                    levels.clone(),
+                                    widths.clone(),
+                                    Arc::clone(work),
+                                    None,
+                                )
+                            })
+                            .collect();
+                        if plans.iter().any(|p| p.cancel_after_us.is_some()) {
+                            std::thread::sleep(Duration::from_micros(200));
+                            for (h, plan) in handles.iter().zip(&plans) {
+                                if plan.cancel_after_us.is_some() {
+                                    h.cancel();
+                                }
+                            }
+                        }
+                        let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+                        (outcomes, fleet.shutdown())
+                    });
+                    let counts: Vec<Vec<u32>> = per_graph
+                        .iter()
+                        .map(|p| p.0.iter().map(|c| c.load(Ordering::SeqCst)).collect())
+                        .collect();
+                    let stamps: Vec<Vec<u64>> = per_graph
+                        .iter()
+                        .map(|p| p.2.iter().map(|s| s.load(Ordering::SeqCst)).collect())
+                        .collect();
+                    let violations: Vec<u32> =
+                        per_graph.iter().map(|p| p.3.load(Ordering::SeqCst)).collect();
+                    let _ = tx.send((outcomes, counts, stamps, violations, shutdown));
+                });
+                let (outcomes, counts, stamps, violations, shutdown) =
+                    match rx.recv_timeout(WATCHDOG) {
+                        Ok(out) => out,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            panic!("{tag}: no quiescence within {WATCHDOG:?} — gang hang")
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            panic!("{tag}: worker thread panicked inside the run")
+                        }
+                    };
+                let mut expected_failed = 0u64;
+                for (si, ((graph, plan), outcome)) in
+                    graphs.iter().zip(&plans).zip(&outcomes).enumerate()
+                {
+                    let stag = format!("{tag}/s{si}");
+                    assert_eq!(violations[si], 0, "{stag}: seat contract violated");
+                    let c = &counts[si];
+                    let st = &stamps[si];
+                    for (v, &n) in c.iter().enumerate() {
+                        assert!(n <= 1, "{stag}: node {v} led {n} gangs");
+                        if n == 1 {
+                            for &p in graph.preds(v as NodeId) {
+                                assert_eq!(
+                                    c[p as usize], 1,
+                                    "{stag}: node {v} ran but its dep {p} never did"
+                                );
+                                assert!(
+                                    st[p as usize] < st[v],
+                                    "{stag}: dep violated {p} vs {v}"
+                                );
+                            }
+                        }
+                    }
+                    match outcome {
+                        Ok(r) => {
+                            assert!(
+                                plan.panic_at.is_none(),
+                                "{stag}: panic plan completed: {plan:?}"
+                            );
+                            assert_eq!(r.records.len(), graph.len(), "{stag}: record count");
+                            assert!(
+                                c.iter().all(|&n| n == 1),
+                                "{stag}: Ok session with missing ops"
+                            );
+                        }
+                        Err(SessionError::OpPanicked { node, payload }) => {
+                            expected_failed += 1;
+                            assert_eq!(Some(*node), plan.panic_at, "{stag}: wrong blamed node");
+                            assert!(
+                                payload.contains(FaultPlan::PANIC_TAG),
+                                "{stag}: foreign panic payload: {payload}"
+                            );
+                        }
+                        Err(SessionError::Cancelled) => {
+                            assert!(plan.cancel_after_us.is_some(), "{stag}: spurious cancel");
+                        }
+                        Err(other) => panic!("{stag}: unexpected terminal {other:?}"),
+                    }
+                }
+                let totals = match shutdown {
+                    Ok(t) => {
+                        assert_eq!(
+                            expected_failed, 0,
+                            "{tag}: sessions failed but shutdown reported clean"
+                        );
+                        t
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.panicked_threads.is_empty(),
+                            "{tag}: fleet thread died: {:?}",
+                            e.panicked_threads
+                        );
+                        assert_eq!(e.sessions_failed, expected_failed, "{tag}: failure count");
+                        e.totals
+                    }
+                };
+                assert_eq!(
+                    totals.executor_threads, execs as u64,
+                    "{tag}: executor threads leaked or respawned"
+                );
+                assert_eq!(
+                    totals.sessions_completed
+                        + totals.sessions_failed
+                        + totals.sessions_cancelled
+                        + totals.sessions_deadline_missed,
+                    graphs.len() as u64,
+                    "{tag}: session outcomes must conserve"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn stress_numa_mapped_fleet() {
     // the NUMA-ranked steal path under real concurrency: a 2-domain map
